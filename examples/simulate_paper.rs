@@ -1,0 +1,126 @@
+//! One-command mini-reproduction of the paper's key claims.
+//!
+//! ```bash
+//! cargo run --release --example simulate_paper
+//! ```
+//!
+//! Runs a reduced sweep of the headline experiments on the contention
+//! simulator and prints a claim-by-claim report:
+//!
+//! * C1 (Fig. 4a): Aggregating Funnels overtake hardware F&A around
+//!   ~30 threads and win by ≥3× at the high end.
+//! * C2 (Fig. 3b): average batch size grows with contention and is
+//!   larger with fewer Aggregators.
+//! * C3 (Fig. 4a): Aggregating Funnels beat Combining Funnels
+//!   everywhere.
+//! * C4 (Fig. 5b): high-priority Direct threads gain per-thread
+//!   throughput without reducing the total.
+//! * C5 (Fig. 6): LCRQ+AggFunnels ≥2× LCRQ at high thread counts.
+//!
+//! The full sweeps live behind `aggfunnels figures all` / `cargo bench`.
+
+use aggfunnels::sim::algos::AlgoSpec;
+use aggfunnels::sim::queues::QueueSpec;
+use aggfunnels::sim::workloads::{
+    run_faa_point, run_queue_point, FaaWorkload, QueueScenario,
+};
+use aggfunnels::sim::SimConfig;
+
+fn cfg(threads: usize) -> SimConfig {
+    let mut c = SimConfig::c3_standard_176(threads);
+    c.horizon_cycles = 1_500_000;
+    c
+}
+
+fn check(name: &str, ok: bool, detail: String) -> bool {
+    println!("{} {name}: {detail}", if ok { "PASS" } else { "FAIL" });
+    ok
+}
+
+fn main() {
+    let wl = FaaWorkload::update_heavy();
+    let mut all_ok = true;
+
+    // C1: crossover + high-end factor.
+    let grid = [1usize, 8, 16, 32, 64, 128, 176];
+    let mut crossover = None;
+    let mut hw_last = 0.0;
+    let mut agg_last = 0.0;
+    println!("threads   hw(Mops/s)  aggfunnel-6(Mops/s)");
+    for &p in &grid {
+        let hw = run_faa_point(&cfg(p), &AlgoSpec::Hw, &wl);
+        let agg = run_faa_point(&cfg(p), &AlgoSpec::Agg { m: 6, direct: 0 }, &wl);
+        println!("{p:>7}   {:>10.2}  {:>19.2}", hw.mops, agg.mops);
+        if agg.mops > hw.mops && crossover.is_none() {
+            crossover = Some(p);
+        }
+        hw_last = hw.mops;
+        agg_last = agg.mops;
+    }
+    all_ok &= check(
+        "C1 crossover",
+        crossover.map(|c| c <= 32).unwrap_or(false),
+        format!("aggfunnel overtakes hw at {crossover:?} threads (paper: ~30)"),
+    );
+    all_ok &= check(
+        "C1 high-end",
+        agg_last >= 3.0 * hw_last,
+        format!("{:.1}x at 176 threads (paper: up to 4x)", agg_last / hw_last),
+    );
+
+    // C2: batch sizes grow; fewer aggregators → bigger batches.
+    let b2 = run_faa_point(&cfg(128), &AlgoSpec::Agg { m: 2, direct: 0 }, &wl);
+    let b8 = run_faa_point(&cfg(128), &AlgoSpec::Agg { m: 8, direct: 0 }, &wl);
+    let b2small = run_faa_point(&cfg(8), &AlgoSpec::Agg { m: 2, direct: 0 }, &wl);
+    all_ok &= check(
+        "C2 batch growth",
+        b2.avg_batch > b2small.avg_batch && b2.avg_batch > b8.avg_batch,
+        format!(
+            "m=2: {:.1} ops/batch at p=128 vs {:.1} at p=8; m=8: {:.1}",
+            b2.avg_batch, b2small.avg_batch, b8.avg_batch
+        ),
+    );
+
+    // C3: beats combining funnels.
+    let comb = run_faa_point(&cfg(128), &AlgoSpec::Comb, &wl);
+    let agg128 = run_faa_point(&cfg(128), &AlgoSpec::Agg { m: 6, direct: 0 }, &wl);
+    all_ok &= check(
+        "C3 vs combfunnel",
+        agg128.mops > comb.mops,
+        format!("aggfunnel {:.1} vs combfunnel {:.1} Mops/s at p=128", agg128.mops, comb.mops),
+    );
+
+    // C4: priority threads.
+    let wl32 = FaaWorkload::update_heavy().with_work_mean(32.0);
+    let base = run_faa_point(&cfg(64), &AlgoSpec::Agg { m: 2, direct: 0 }, &wl32);
+    let prio = run_faa_point(&cfg(64), &AlgoSpec::Agg { m: 2, direct: 2 }, &wl32);
+    all_ok &= check(
+        "C4 priority",
+        prio.direct_mops_per_thread > 2.0 * prio.funnel_mops_per_thread
+            && prio.mops > 0.8 * base.mops,
+        format!(
+            "direct {:.2} vs funnel {:.2} Mops/s/thread; total {:.1} (baseline {:.1})",
+            prio.direct_mops_per_thread, prio.funnel_mops_per_thread, prio.mops, base.mops
+        ),
+    );
+
+    // C5: LCRQ speedup.
+    let qhw = run_queue_point(&cfg(128), &QueueSpec::LcrqHw, QueueScenario::Pairs, 512.0);
+    let qagg =
+        run_queue_point(&cfg(128), &QueueSpec::LcrqAgg { m: 6 }, QueueScenario::Pairs, 512.0);
+    all_ok &= check(
+        "C5 queue",
+        qagg.mops >= 1.5 * qhw.mops,
+        format!(
+            "lcrq+aggfunnel {:.1} vs lcrq {:.1} Mops/s at p=128 ({:.1}x; paper: up to 2.5x)",
+            qagg.mops,
+            qhw.mops,
+            qagg.mops / qhw.mops
+        ),
+    );
+
+    println!("\nsimulate_paper {}", if all_ok { "OK — all claims reproduced" } else { "had FAILURES" });
+    if !all_ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,103 @@
+"""AOT compile path: lower the L2/L1 computations to HLO **text**.
+
+Python runs exactly once, at ``make artifacts``; the Rust runtime
+(`rust/src/runtime/`) loads these files via
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU
+client. HLO *text* — not ``.serialize()`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts:
+
+* ``oracle_<N>.hlo.txt``  — linearization oracle (model.oracle_fn) for
+  N ∈ {1024, 4096, 16384}; the Rust verifier pads histories to the
+  smallest fitting size.
+* ``model.hlo.txt``       — alias of the N=4096 oracle (the Makefile's
+  canonical artifact).
+* ``contention_64.hlo.txt`` — the analytic throughput model at K=64
+  sweep points.
+* ``manifest.json``       — shapes/dtypes per artifact, for the loader.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 histories require x64
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import contention, model  # noqa: E402
+
+ORACLE_SIZES = (1024, 4096, 16384)
+PREDICT_POINTS = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(path: pathlib.Path, text: str) -> None:
+    path.write_text(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    parser.add_argument(
+        "--out", default=None, help="also write the canonical model.hlo.txt here"
+    )
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {}
+
+    canonical = None
+    for n in ORACLE_SIZES:
+        lowered = jax.jit(model.oracle_fn).lower(*model.oracle_spec(n))
+        text = to_hlo_text(lowered)
+        name = f"oracle_{n}.hlo.txt"
+        emit(out_dir / name, text)
+        manifest[name] = {
+            "kind": "oracle",
+            "n": n,
+            "inputs": ["u64[n] deltas", "s32[n] seg_ids", "u64[n] seg_base", "s32[n] seg_sign"],
+            "outputs": ["u64[n] expected returns"],
+        }
+        if n == 4096:
+            canonical = text
+
+    assert canonical is not None
+    emit(out_dir / "model.hlo.txt", canonical)
+    manifest["model.hlo.txt"] = dict(manifest["oracle_4096.hlo.txt"])
+
+    lowered = jax.jit(contention.predict_fn).lower(*contention.predict_spec(PREDICT_POINTS))
+    text = to_hlo_text(lowered)
+    emit(out_dir / f"contention_{PREDICT_POINTS}.hlo.txt", text)
+    manifest[f"contention_{PREDICT_POINTS}.hlo.txt"] = {
+        "kind": "contention",
+        "k": PREDICT_POINTS,
+        "inputs": ["f64[k] thread counts", "f64 work_mean", "f64 faa_ratio", "f64 m"],
+        "outputs": ["f64[k] hw Mops/s", "f64[k] aggfunnel Mops/s"],
+    }
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+    if args.out:
+        emit(pathlib.Path(args.out), canonical)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Pure-jnp (and pure-numpy) oracles for kernel and model correctness.
+
+The Pallas kernel and the L2 model are validated against these
+straight-line definitions by ``python/tests``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def exclusive_scan_ref(x):
+    """Reference exclusive scan: cumsum shifted right (wrapping)."""
+    x = jnp.asarray(x)
+    return jnp.cumsum(x) - x
+
+
+def exclusive_scan_np(x: np.ndarray) -> np.ndarray:
+    """Numpy variant (wrap-around on unsigned dtypes is native)."""
+    return np.cumsum(x) - x
+
+
+def batch_returns_ref(deltas, seg_ids, seg_base, seg_sign):
+    """Straight-line interpreter for the linearization oracle.
+
+    For each operation i (grouped by batch, in linearization order):
+    ``result[i] = seg_base[seg] ± (sum of deltas of earlier ops in the
+    same batch)`` — paper Lemma 3.4, computed with a plain loop.
+    """
+    deltas = np.asarray(deltas, dtype=np.uint64)
+    seg_ids = np.asarray(seg_ids)
+    seg_base = np.asarray(seg_base, dtype=np.uint64)
+    seg_sign = np.asarray(seg_sign)
+    out = np.zeros_like(deltas)
+    running = np.uint64(0)
+    prev_seg = None
+    for i in range(len(deltas)):
+        seg = int(seg_ids[i])
+        if seg != prev_seg:
+            running = np.uint64(0)
+            prev_seg = seg
+        base = seg_base[seg]
+        if seg_sign[seg] >= 0:
+            out[i] = base + running
+        else:
+            out[i] = base - running
+        running = running + deltas[i]
+    return out

@@ -1,0 +1,65 @@
+"""L2: the linearization oracle as a JAX computation.
+
+Validating an Aggregating Funnels run means checking Lemma 3.4 over a
+recorded history: every operation's return value must equal its batch's
+``mainBefore`` plus the signed sum of deltas of earlier operations in
+the same batch. Grouped by batch and laid out in linearization order,
+that is a *segmented exclusive scan* — embarrassingly parallel and the
+natural L2 workload on top of the L1 kernel.
+
+Inputs (padded to a fixed N so one AOT artifact serves all runs):
+
+* ``deltas  : u64[N]`` — |delta| per operation, batches contiguous, in
+  within-batch linearization order (the order of F&As on the
+  Aggregator's ``value``). Padding entries carry delta 0.
+* ``seg_ids : i32[N]`` — batch index per operation, nondecreasing.
+  Padding entries point at a dummy batch with base 0.
+* ``seg_base: u64[N]`` — ``mainBefore`` per batch (indexed by seg id).
+* ``seg_sign: i32[N]`` — +1 for positive-Aggregator batches, −1 for
+  negative ones (per batch).
+
+Output: ``u64[N]`` of expected return values; the Rust verifier
+compares them to the recorded ones. All arithmetic wraps mod 2⁶⁴
+exactly like the paper's line 37.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import aggscan
+
+
+def batch_returns(deltas, seg_ids, seg_base, seg_sign):
+    """Expected return value of every operation in a batch history."""
+    n = deltas.shape[0]
+    # Exclusive global scan — the L1 Pallas kernel.
+    total = aggscan.exclusive_scan(deltas)
+    # Segment heads: first op of each batch.
+    head = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), seg_ids[1:] != seg_ids[:-1]]
+    )
+    # Index of each op's segment head, by forward-propagating head
+    # positions (running max of head indices).
+    idx = jnp.arange(n, dtype=jnp.int32)
+    first = lax.cummax(jnp.where(head, idx, 0))
+    # Within-batch exclusive prefix = global prefix − prefix at head.
+    within = total - total[first]
+    base = seg_base[seg_ids]
+    sign = seg_sign[seg_ids]
+    return jnp.where(sign >= 0, base + within, base - within)
+
+
+def oracle_spec(n: int):
+    """ShapeDtypeStructs for an N-sized oracle artifact."""
+    return (
+        jax.ShapeDtypeStruct((n,), jnp.uint64),  # deltas
+        jax.ShapeDtypeStruct((n,), jnp.int32),  # seg_ids
+        jax.ShapeDtypeStruct((n,), jnp.uint64),  # seg_base
+        jax.ShapeDtypeStruct((n,), jnp.int32),  # seg_sign
+    )
+
+
+def oracle_fn(deltas, seg_ids, seg_base, seg_sign):
+    """The jitted entry point lowered by aot.py (tuple output)."""
+    return (batch_returns(deltas, seg_ids, seg_base, seg_sign),)

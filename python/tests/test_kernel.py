@@ -1,0 +1,106 @@
+"""L1 kernel correctness: Pallas blocked scan vs. the pure references.
+
+This is the core build-time correctness signal for the AOT pipeline —
+hypothesis sweeps shapes, dtypes and value distributions.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import aggscan, ref
+
+
+def test_block_constant_reasonable():
+    assert aggscan.BLOCK >= 8
+    assert aggscan.BLOCK & (aggscan.BLOCK - 1) == 0, "block must be a power of two"
+
+
+def test_vmem_estimate_within_budget():
+    # DESIGN §9: per-block working set must stay well under 2 MiB.
+    assert aggscan.vmem_bytes_per_block() <= 2 * 1024 * 1024
+
+
+@pytest.mark.parametrize("n_blocks", [1, 2, 3, 8])
+def test_scan_matches_ref_uniform(n_blocks):
+    n = n_blocks * aggscan.BLOCK
+    rng = np.random.default_rng(n_blocks)
+    x = rng.integers(1, 101, size=n, dtype=np.uint64)
+    got = np.asarray(aggscan.exclusive_scan(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, ref.exclusive_scan_np(x))
+
+
+def test_scan_matches_jnp_ref():
+    n = 4 * aggscan.BLOCK
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint64))
+    got = aggscan.exclusive_scan(x)
+    want = ref.exclusive_scan_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_scan_wraps_mod_2_64():
+    n = aggscan.BLOCK
+    x = np.full(n, np.uint64(2**63), dtype=np.uint64)
+    got = np.asarray(aggscan.exclusive_scan(jnp.asarray(x)))
+    want = ref.exclusive_scan_np(x)  # wraps natively
+    np.testing.assert_array_equal(got, want)
+    assert got[2] == 0  # 2 * 2^63 mod 2^64
+
+
+def test_scan_first_element_zero():
+    x = jnp.asarray(np.arange(1, aggscan.BLOCK + 1, dtype=np.uint64))
+    got = aggscan.exclusive_scan(x)
+    assert int(got[0]) == 0
+
+
+def test_scan_pads_non_multiple_lengths():
+    for n in [1, 7, aggscan.BLOCK + 1, 3 * aggscan.BLOCK - 5]:
+        x = np.arange(1, n + 1, dtype=np.uint64)
+        got = np.asarray(aggscan.exclusive_scan(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, ref.exclusive_scan_np(x))
+
+
+def test_scan_rejects_empty():
+    with pytest.raises(ValueError):
+        aggscan.exclusive_scan(jnp.zeros(0, dtype=jnp.uint64))
+
+
+@pytest.mark.parametrize("block", [8, 64, 512])
+def test_scan_block_size_invariance(block):
+    # The result must not depend on the tiling.
+    n = 1024
+    rng = np.random.default_rng(block)
+    x = rng.integers(0, 1000, size=n, dtype=np.uint64)
+    got = np.asarray(aggscan.exclusive_scan(jnp.asarray(x), block=block))
+    np.testing.assert_array_equal(got, ref.exclusive_scan_np(x))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+    hi=st.sampled_from([2, 100, 2**20, 2**63]),
+)
+def test_scan_hypothesis_sweep(n_blocks, seed, hi):
+    block = 64
+    n = n_blocks * block
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, hi, size=n, dtype=np.uint64)
+    got = np.asarray(aggscan.exclusive_scan(jnp.asarray(x), block=block))
+    np.testing.assert_array_equal(got, ref.exclusive_scan_np(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(dtype=st.sampled_from([np.uint32, np.uint64, np.int64]))
+def test_scan_dtypes(dtype):
+    block = 64
+    x = np.arange(2 * block, dtype=dtype)
+    got = np.asarray(aggscan.exclusive_scan(jnp.asarray(x), block=block))
+    np.testing.assert_array_equal(got, ref.exclusive_scan_np(x))

@@ -1,0 +1,114 @@
+"""AOT lowering checks (the L2 §Perf criteria): artifacts exist after
+`make artifacts`, the HLO text parses structurally, shapes match the
+manifest, and the lowered oracle contains no obviously redundant
+recomputation (one cumulative-sum family per input, fused elementwise
+tail)."""
+
+import json
+import pathlib
+import re
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, contention, model
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def lower_text(n=1024):
+    lowered = jax.jit(model.oracle_fn).lower(*model.oracle_spec(n))
+    return aot.to_hlo_text(lowered)
+
+
+def test_hlo_text_structure():
+    text = lower_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Input layout: u64/s32 vectors as documented in model.py.
+    assert "u64[1024]" in text
+    assert "s32[1024]" in text
+
+
+def test_no_redundant_scans():
+    """The oracle needs one additive scan of the deltas per grid block
+    (the Pallas kernel's blocked cumsum), one cummax for segment heads
+    and the grid loop — a bounded set of scan structures. A regression
+    that recomputed prefixes per-segment or per-op would blow this up.
+
+    Measured baseline: 6 reduce-windows + 1 while at N=1024 (2 blocks).
+    """
+    text = lower_text()
+    scans = len(re.findall(r"reduce-window|call\(.*cumsum", text))
+    whiles = text.count("while(")
+    assert scans + whiles <= 10, f"suspiciously many scan structures: {scans}+{whiles}"
+
+
+def test_entry_returns_single_u64_vector():
+    # The first line carries the entry computation layout:
+    # ...->(u64[1024]{0})} — a 1-tuple of the expected-returns vector.
+    first = lower_text().splitlines()[0]
+    assert re.search(r"->\(u64\[1024\]", first), first
+
+
+def test_oracle_sizes_constant():
+    assert aot.ORACLE_SIZES == (1024, 4096, 16384)
+    for n in aot.ORACLE_SIZES:
+        assert n % 512 == 0, "sizes must be BLOCK multiples for the kernel fast path"
+
+
+def test_contention_lowering():
+    lowered = jax.jit(contention.predict_fn).lower(*contention.predict_spec(8))
+    text = aot.to_hlo_text(lowered)
+    assert "f64[8]" in text
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_artifacts_match_manifest():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    for name, meta in manifest.items():
+        path = ART / name
+        assert path.exists(), f"missing artifact {name}"
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        if meta.get("kind") == "oracle":
+            assert f"u64[{meta['n']}]" in text
+
+
+@pytest.mark.skipif(not (ART / "model.hlo.txt").exists(), reason="run `make artifacts` first")
+def test_canonical_model_is_4096_oracle():
+    canonical = (ART / "model.hlo.txt").read_text()
+    oracle = (ART / "oracle_4096.hlo.txt").read_text()
+    assert canonical == oracle
+
+
+def test_execution_matches_model_via_jax_runtime():
+    """Round-trip the lowered computation through jax's own executor:
+    the lowered artifact semantics must equal the eager model."""
+    n = 1024
+    rng = np.random.default_rng(0)
+    deltas = np.zeros(n, dtype=np.uint64)
+    seg_ids = np.zeros(n, dtype=np.int32)
+    deltas[:10] = rng.integers(1, 100, size=10)
+    seg_ids[:5] = 0
+    seg_ids[5:] = 1
+    seg_base = np.zeros(n, dtype=np.uint64)
+    seg_base[:2] = [7, 100]
+    seg_sign = np.ones(n, dtype=np.int32)
+    compiled = jax.jit(model.oracle_fn).lower(*model.oracle_spec(n)).compile()
+    got = np.asarray(
+        compiled(
+            jnp.asarray(deltas), jnp.asarray(seg_ids), jnp.asarray(seg_base), jnp.asarray(seg_sign)
+        )[0]
+    )
+    want = np.asarray(
+        model.oracle_fn(
+            jnp.asarray(deltas), jnp.asarray(seg_ids), jnp.asarray(seg_base), jnp.asarray(seg_sign)
+        )[0]
+    )
+    np.testing.assert_array_equal(got, want)

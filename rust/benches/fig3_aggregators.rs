@@ -1,0 +1,36 @@
+//! `cargo bench --bench fig3_aggregators` — regenerates the paper's
+//! Figure 3 (choosing the number of Aggregators): 3a throughput at
+//! 90% F&A, 3b average batch size, 3c throughput at 50% F&A.
+//!
+//! Flags: `--quick` (small grid), `--grid 1,8,64`, `--horizon N`,
+//! `--out results/`.
+
+use aggfunnels::bench::figures::{fig3, SweepOpts};
+use aggfunnels::bench::{rows_to_table, rows_to_tsv};
+use aggfunnels::util::cli::Cli;
+use aggfunnels::util::parse_int_list;
+
+fn main() {
+    let cli = Cli::new("fig3_aggregators", "Figure 3 sweep")
+        .opt("grid", None, "thread counts")
+        .opt("horizon", None, "virtual cycles per point")
+        .opt("out", Some("results"), "output dir")
+        .flag("quick", "reduced sweep")
+        .flag("bench", "(ignored; passed by cargo bench)");
+    let p = cli.parse_env();
+    let mut opts = if p.has_flag("quick") { SweepOpts::quick() } else { SweepOpts::default() };
+    if let Some(g) = p.get("grid") {
+        opts.grid = parse_int_list(g).expect("bad grid");
+    }
+    if let Some(h) = p.parse_as::<u64>("horizon") {
+        opts.horizon = h;
+    }
+    let rows = fig3(&opts);
+    let out = std::path::PathBuf::from(p.get_or("out", "results"));
+    std::fs::create_dir_all(&out).unwrap();
+    std::fs::write(out.join("fig3.tsv"), rows_to_tsv(&rows)).unwrap();
+    for fig in ["3a", "3b", "3c"] {
+        let sub: Vec<_> = rows.iter().filter(|r| r.figure == fig).cloned().collect();
+        println!("-- Figure {fig} ({}) --\n{}", sub[0].metric, rows_to_table(&sub, sub[0].metric));
+    }
+}

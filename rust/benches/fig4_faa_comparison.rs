@@ -1,0 +1,41 @@
+//! `cargo bench --bench fig4_faa_comparison` — regenerates the paper's
+//! Figure 4 (Aggregating vs Combining Funnels vs hardware F&A):
+//! 4a throughput + 4b fairness (90% F&A, 512 cycles), then the
+//! workload variants 4c (32 cycles), 4d (100% F&A), 4e (50%), 4f (10%).
+
+use aggfunnels::bench::figures::{fig4_headline, fig4_variants, SweepOpts};
+use aggfunnels::bench::{rows_to_table, rows_to_tsv};
+use aggfunnels::util::cli::Cli;
+use aggfunnels::util::parse_int_list;
+
+fn main() {
+    let cli = Cli::new("fig4_faa_comparison", "Figure 4 sweep")
+        .opt("grid", None, "thread counts")
+        .opt("horizon", None, "virtual cycles per point")
+        .opt("out", Some("results"), "output dir")
+        .flag("quick", "reduced sweep")
+        .flag("headline-only", "only 4a/4b")
+        .flag("bench", "(ignored; passed by cargo bench)");
+    let p = cli.parse_env();
+    let mut opts = if p.has_flag("quick") { SweepOpts::quick() } else { SweepOpts::default() };
+    if let Some(g) = p.get("grid") {
+        opts.grid = parse_int_list(g).expect("bad grid");
+    }
+    if let Some(h) = p.parse_as::<u64>("horizon") {
+        opts.horizon = h;
+    }
+    let mut rows = fig4_headline(&opts);
+    if !p.has_flag("headline-only") {
+        rows.extend(fig4_variants(&opts));
+    }
+    let out = std::path::PathBuf::from(p.get_or("out", "results"));
+    std::fs::create_dir_all(&out).unwrap();
+    std::fs::write(out.join("fig4.tsv"), rows_to_tsv(&rows)).unwrap();
+    let mut figs: Vec<&str> = rows.iter().map(|r| r.figure).collect();
+    figs.sort_unstable();
+    figs.dedup();
+    for fig in figs {
+        let sub: Vec<_> = rows.iter().filter(|r| r.figure == fig).cloned().collect();
+        println!("-- Figure {fig} ({}) --\n{}", sub[0].metric, rows_to_table(&sub, sub[0].metric));
+    }
+}

@@ -1,0 +1,38 @@
+//! `cargo bench --bench fig5_priority` — regenerates the paper's
+//! Figure 5 (Fetch&AddDirect for high-priority threads):
+//! AGGFUNNEL-(m,d) with m ∈ {2,6}, d ∈ {0,1,2} at 90% F&A and 32
+//! cycles of work — 5a total throughput, 5b per-class per-thread
+//! throughput, 5c average batch size.
+
+use aggfunnels::bench::figures::{fig5, SweepOpts};
+use aggfunnels::bench::{rows_to_table, rows_to_tsv};
+use aggfunnels::util::cli::Cli;
+use aggfunnels::util::parse_int_list;
+
+fn main() {
+    let cli = Cli::new("fig5_priority", "Figure 5 sweep")
+        .opt("grid", None, "thread counts")
+        .opt("horizon", None, "virtual cycles per point")
+        .opt("out", Some("results"), "output dir")
+        .flag("quick", "reduced sweep")
+        .flag("bench", "(ignored; passed by cargo bench)");
+    let p = cli.parse_env();
+    let mut opts = if p.has_flag("quick") { SweepOpts::quick() } else { SweepOpts::default() };
+    if let Some(g) = p.get("grid") {
+        opts.grid = parse_int_list(g).expect("bad grid");
+    }
+    if let Some(h) = p.parse_as::<u64>("horizon") {
+        opts.horizon = h;
+    }
+    let rows = fig5(&opts);
+    let out = std::path::PathBuf::from(p.get_or("out", "results"));
+    std::fs::create_dir_all(&out).unwrap();
+    std::fs::write(out.join("fig5.tsv"), rows_to_tsv(&rows)).unwrap();
+    for fig in ["5a", "5b", "5c"] {
+        let sub: Vec<_> = rows.iter().filter(|r| r.figure == fig).cloned().collect();
+        if sub.is_empty() {
+            continue;
+        }
+        println!("-- Figure {fig} ({}) --\n{}", sub[0].metric, rows_to_table(&sub, sub[0].metric));
+    }
+}

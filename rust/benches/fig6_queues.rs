@@ -1,0 +1,34 @@
+//! `cargo bench --bench fig6_queues` — regenerates the paper's
+//! Figure 6 (queue benchmark): LCRQ / LCRQ+AggFunnels /
+//! LCRQ+CombFunnels / MSQ under three scenarios — 6a enq-deq pairs,
+//! 6b producer-consumer, 6c 50/50 random — with 512 cycles of work.
+
+use aggfunnels::bench::figures::{fig6, SweepOpts};
+use aggfunnels::bench::{rows_to_table, rows_to_tsv};
+use aggfunnels::util::cli::Cli;
+use aggfunnels::util::parse_int_list;
+
+fn main() {
+    let cli = Cli::new("fig6_queues", "Figure 6 sweep")
+        .opt("grid", None, "thread counts")
+        .opt("horizon", None, "virtual cycles per point")
+        .opt("out", Some("results"), "output dir")
+        .flag("quick", "reduced sweep")
+        .flag("bench", "(ignored; passed by cargo bench)");
+    let p = cli.parse_env();
+    let mut opts = if p.has_flag("quick") { SweepOpts::quick() } else { SweepOpts::default() };
+    if let Some(g) = p.get("grid") {
+        opts.grid = parse_int_list(g).expect("bad grid");
+    }
+    if let Some(h) = p.parse_as::<u64>("horizon") {
+        opts.horizon = h;
+    }
+    let rows = fig6(&opts);
+    let out = std::path::PathBuf::from(p.get_or("out", "results"));
+    std::fs::create_dir_all(&out).unwrap();
+    std::fs::write(out.join("fig6.tsv"), rows_to_tsv(&rows)).unwrap();
+    for fig in ["6a", "6b", "6c"] {
+        let sub: Vec<_> = rows.iter().filter(|r| r.figure == fig).cloned().collect();
+        println!("-- Figure {fig} (mops) --\n{}", rows_to_table(&sub, "mops"));
+    }
+}

@@ -1,0 +1,109 @@
+//! `cargo bench --bench hotpath` — native hot-path micro-benchmarks
+//! (the §Perf L3 targets): per-op cost of every Fetch&Add
+//! implementation and queue at low thread counts, plus the simulator's
+//! events/second and the PJRT oracle's throughput.
+//!
+//! These are this-host latency numbers (contention scaling lives in
+//! the figure benches); EXPERIMENTS.md §Perf tracks them before/after
+//! optimization.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use aggfunnels::bench::native::{make_faa, make_queue, run_native_faa, run_native_queue};
+use aggfunnels::runtime::{BatchHistory, OracleRuntime};
+use aggfunnels::sim::algos::AlgoSpec;
+use aggfunnels::sim::workloads::{run_faa_point, FaaWorkload};
+use aggfunnels::sim::SimConfig;
+use aggfunnels::util::cli::Cli;
+use aggfunnels::util::harness::{black_box, Bencher};
+
+fn main() {
+    let cli = Cli::new("hotpath", "native hot-path micro-benchmarks")
+        .flag("quick", "shorter measurements")
+        .flag("bench", "(ignored; passed by cargo bench)");
+    let p = cli.parse_env();
+    let b = if p.has_flag("quick") { Bencher::quick() } else { Bencher::default() };
+
+    println!("== single-thread per-op cost ==");
+    for algo in ["hw", "aggfunnel", "rec-aggfunnel", "combfunnel", "flatcomb"] {
+        let faa = make_faa(algo, 1, 6).unwrap();
+        let r = b.bench(&format!("faa/{algo}/fetch_add"), || {
+            black_box(faa.fetch_add(0, 1));
+        });
+        println!("{}", r.report());
+    }
+    {
+        let faa = make_faa("aggfunnel", 1, 6).unwrap();
+        let r = b.bench("faa/aggfunnel/read", || {
+            black_box(faa.read(0));
+        });
+        println!("{}", r.report());
+        let r = b.bench("faa/aggfunnel/direct", || {
+            black_box(faa.fetch_add_direct(0, 1));
+        });
+        println!("{}", r.report());
+    }
+
+    println!("\n== single-thread queue enq+deq ==");
+    for algo in ["lcrq", "lcrq+aggfunnel", "lprq", "msq"] {
+        let q = make_queue(algo, 1).unwrap();
+        let r = b.bench(&format!("queue/{algo}/pair"), || {
+            q.enqueue(0, 7);
+            black_box(q.dequeue(0));
+        });
+        println!("{}", r.report());
+    }
+
+    println!("\n== simulator event rate ==");
+    {
+        let mut cfg = SimConfig::c3_standard_176(64);
+        cfg.horizon_cycles = 500_000;
+        let t0 = std::time::Instant::now();
+        let pt = run_faa_point(&cfg, &AlgoSpec::Agg { m: 6, direct: 0 }, &FaaWorkload::update_heavy());
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "sim/aggfunnel-6/64t: {} events in {:.3}s = {:.2}M events/s",
+            pt.sim_events,
+            secs,
+            pt.sim_events as f64 / secs / 1e6
+        );
+    }
+
+    println!("\n== PJRT oracle throughput ==");
+    match OracleRuntime::load_default() {
+        Ok(rt) => {
+            let mut h = BatchHistory::default();
+            let mut base = 0u64;
+            for i in 0..512 {
+                let deltas = [1 + (i % 5) as u64, 2, 3];
+                h.push_batch(base, 1, &deltas);
+                base += 6 + (i % 5) as u64;
+            }
+            let r = b.bench("runtime/oracle/1536-op-history", || {
+                black_box(rt.batch_returns(&h).unwrap());
+            });
+            println!("{}", r.report());
+            println!(
+                "  = {:.2}M op-checks/s",
+                1536.0 * r.ops_per_sec() / 1e6
+            );
+        }
+        Err(e) => println!("(oracle artifacts unavailable: {e})"),
+    }
+
+    println!("\n== contended native (this host, oversubscribed ok) ==");
+    for algo in ["hw", "aggfunnel"] {
+        let faa = make_faa(algo, 4, 2).unwrap();
+        let pt = run_native_faa(Arc::clone(&faa), algo, 4, 1.0, 0.0, Duration::from_millis(200));
+        println!(
+            "faa/{algo}/4threads: {:.2} Mops/s (fairness {:.3}, avg batch {:.2})",
+            pt.mops, pt.fairness, pt.avg_batch
+        );
+    }
+    {
+        let q = make_queue("lcrq+aggfunnel", 4).unwrap();
+        let pt = run_native_queue(q, "lcrq+aggfunnel", 4, 0.0, Duration::from_millis(200));
+        println!("queue/lcrq+aggfunnel/4threads: {:.2} Mops/s", pt.mops);
+    }
+}

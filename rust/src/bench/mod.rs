@@ -1,0 +1,96 @@
+//! Benchmark harness: regenerates every figure in the paper's
+//! evaluation (§4) and measures the native hot paths on this host.
+//!
+//! * [`figures`] — the per-figure sweep drivers (Figs. 3a–c, 4a–f,
+//!   5a–c, 6a–c) over the contention simulator, emitting paper-style
+//!   series as TSV + stdout tables.
+//! * [`native`] — real-thread throughput runs of the native library
+//!   (this-testbed numbers; on a 1-core container these measure hot
+//!   path cost, not contention scaling — the simulator covers that).
+
+pub mod figures;
+pub mod native;
+
+/// One emitted data point, long-form (figure, series, x, metric, value).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Row {
+    pub figure: &'static str,
+    pub series: String,
+    pub threads: usize,
+    pub metric: &'static str,
+    pub value: f64,
+}
+
+/// Render rows as TSV (one header + data lines).
+pub fn rows_to_tsv(rows: &[Row]) -> String {
+    let mut out = String::from("figure\tseries\tthreads\tmetric\tvalue\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{:.6}\n",
+            r.figure, r.series, r.threads, r.metric, r.value
+        ));
+    }
+    out
+}
+
+/// Render a compact stdout table: one line per (series, threads) with
+/// the figure's primary metric.
+pub fn rows_to_table(rows: &[Row], metric: &'static str) -> String {
+    use std::collections::BTreeMap;
+    // series -> (threads -> value)
+    let mut by_series: BTreeMap<&str, BTreeMap<usize, f64>> = BTreeMap::new();
+    let mut threads: Vec<usize> = Vec::new();
+    for r in rows.iter().filter(|r| r.metric == metric) {
+        by_series.entry(&r.series).or_default().insert(r.threads, r.value);
+        if !threads.contains(&r.threads) {
+            threads.push(r.threads);
+        }
+    }
+    threads.sort_unstable();
+    let mut out = format!("{:<24}", "series \\ threads");
+    for t in &threads {
+        out.push_str(&format!("{t:>10}"));
+    }
+    out.push('\n');
+    for (series, vals) in by_series {
+        out.push_str(&format!("{series:<24}"));
+        for t in &threads {
+            match vals.get(t) {
+                Some(v) => out.push_str(&format!("{v:>10.2}")),
+                None => out.push_str(&format!("{:>10}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_rows() -> Vec<Row> {
+        vec![
+            Row { figure: "3a", series: "hw".into(), threads: 1, metric: "mops", value: 10.0 },
+            Row { figure: "3a", series: "hw".into(), threads: 2, metric: "mops", value: 12.0 },
+            Row { figure: "3a", series: "agg-6".into(), threads: 1, metric: "mops", value: 8.0 },
+            Row { figure: "3a", series: "agg-6".into(), threads: 2, metric: "fair", value: 0.9 },
+        ]
+    }
+
+    #[test]
+    fn tsv_shape() {
+        let tsv = rows_to_tsv(&sample_rows());
+        assert_eq!(tsv.lines().count(), 5);
+        assert!(tsv.starts_with("figure\tseries"));
+        assert!(tsv.contains("3a\thw\t2\tmops\t12.000000"));
+    }
+
+    #[test]
+    fn table_filters_by_metric() {
+        let table = rows_to_table(&sample_rows(), "mops");
+        assert!(table.contains("hw"));
+        assert!(table.contains("10.00"));
+        assert!(!table.contains("0.90"), "fairness row must be filtered out");
+    }
+}

@@ -1,0 +1,225 @@
+//! Native-thread benchmarks of the real library on this host.
+//!
+//! These measure the *hot-path cost* of each implementation with real
+//! atomics and real threads. On a machine with many cores they show
+//! the same contention behaviour as the paper; on a small CI host they
+//! still provide per-op latency and allocation behaviour (the
+//! contention *scaling* figures come from [`crate::sim`]).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::faa::{
+    AggFunnel, AggFunnelConfig, CombiningFunnel, CombiningTree, FetchAddObject, HardwareFaa,
+    RecursiveAggFunnel,
+};
+use crate::queue::{AggIndexFactory, CombIndexFactory, ConcurrentQueue, HwIndexFactory, Lcrq, MsQueue, Prq};
+use crate::util::rng::Rng;
+use crate::util::stats::{fairness, mops};
+
+/// Native fetch-and-add algorithms by name.
+pub const FAA_ALGOS: [&str; 6] =
+    ["hw", "aggfunnel", "rec-aggfunnel", "combfunnel", "flatcomb", "aggfunnel-rand"];
+
+/// Build a native FAA object by CLI name.
+pub fn make_faa(name: &str, threads: usize, m: usize) -> Option<Arc<dyn FetchAddObject>> {
+    Some(match name {
+        "hw" => Arc::new(HardwareFaa::new(threads)),
+        "aggfunnel" => Arc::new(AggFunnel::with_config(
+            AggFunnelConfig::new(threads).with_aggregators(m),
+        )),
+        "aggfunnel-rand" => Arc::new(AggFunnel::with_config(
+            AggFunnelConfig::new(threads)
+                .with_aggregators(m)
+                .with_choose(crate::faa::Choose::Random),
+        )),
+        "rec-aggfunnel" => Arc::new(RecursiveAggFunnel::paper_config(threads)),
+        "combfunnel" => Arc::new(CombiningFunnel::new(threads)),
+        "flatcomb" => Arc::new(CombiningTree::new(threads)),
+        _ => return None,
+    })
+}
+
+/// Native queue variants by name.
+pub const QUEUE_ALGOS: [&str; 5] = ["lcrq", "lcrq+aggfunnel", "lcrq+combfunnel", "lprq", "msq"];
+
+/// Build a native queue by CLI name.
+pub fn make_queue(name: &str, threads: usize) -> Option<Arc<dyn ConcurrentQueue>> {
+    Some(match name {
+        "lcrq" => Arc::new(Lcrq::new(threads, HwIndexFactory)),
+        "lcrq+aggfunnel" => Arc::new(Lcrq::new(threads, AggIndexFactory::new(threads))),
+        "lcrq+combfunnel" => {
+            Arc::new(Lcrq::new(threads, CombIndexFactory { max_threads: threads }))
+        }
+        "lprq" => Arc::new(Prq::new(threads, HwIndexFactory)),
+        "msq" => Arc::new(MsQueue::new(threads)),
+        _ => return None,
+    })
+}
+
+/// Result of a native throughput run.
+#[derive(Clone, Debug)]
+pub struct NativePoint {
+    pub algo: String,
+    pub threads: usize,
+    pub mops: f64,
+    pub fairness: f64,
+    pub avg_batch: f64,
+    pub duration: Duration,
+}
+
+/// Local-work spinner: approximate `cycles` of CPU work without memory
+/// traffic (the native analogue of the paper's geometric pause).
+#[inline]
+pub fn local_work(cycles: u64) {
+    // ~1 cycle per iteration on modern x86 (dependency chain).
+    let mut x = cycles;
+    for _ in 0..cycles {
+        x = std::hint::black_box(x ^ (x >> 7)).wrapping_add(1);
+    }
+}
+
+/// Run a native Fetch&Add throughput measurement (paper §4.1 workload:
+/// `faa_ratio` F&As with deltas 1..=100, rest Reads, geometric work).
+pub fn run_native_faa(
+    faa: Arc<dyn FetchAddObject>,
+    algo: &str,
+    threads: usize,
+    faa_ratio: f64,
+    work_mean: f64,
+    duration: Duration,
+) -> NativePoint {
+    let stop = Arc::new(AtomicBool::new(false));
+    let start_stats = faa.batch_stats();
+    let handles: Vec<_> = (0..threads)
+        .map(|tid| {
+            let faa = Arc::clone(&faa);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xBE4C_0000 ^ tid as u64);
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if rng.chance(faa_ratio) {
+                        faa.fetch_add(tid, rng.range_inclusive(1, 100) as i64);
+                    } else {
+                        faa.read(tid);
+                    }
+                    ops += 1;
+                    local_work(rng.geometric(work_mean));
+                }
+                ops
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    let per_thread: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let elapsed = t0.elapsed();
+    let total: u64 = per_thread.iter().sum();
+    let end_stats = faa.batch_stats();
+    let batches = end_stats.main_faas.saturating_sub(start_stats.main_faas);
+    let batched_ops = end_stats.ops.saturating_sub(start_stats.ops);
+    NativePoint {
+        algo: algo.to_string(),
+        threads,
+        mops: mops(total, elapsed.as_secs_f64()),
+        fairness: fairness(&per_thread),
+        avg_batch: if batches == 0 { 1.0 } else { batched_ops as f64 / batches as f64 },
+        duration: elapsed,
+    }
+}
+
+/// Run a native queue throughput measurement (enqueue/dequeue pairs).
+pub fn run_native_queue(
+    q: Arc<dyn ConcurrentQueue>,
+    algo: &str,
+    threads: usize,
+    work_mean: f64,
+    duration: Duration,
+) -> NativePoint {
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..threads)
+        .map(|tid| {
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0x9_0E0E ^ tid as u64);
+                let mut ops = 0u64;
+                let mut seq = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    q.enqueue(tid, ((tid as u64) << 32) | (seq & 0xFFFF_FFFF));
+                    seq += 1;
+                    ops += 1;
+                    local_work(rng.geometric(work_mean));
+                    q.dequeue(tid);
+                    ops += 1;
+                    local_work(rng.geometric(work_mean));
+                }
+                ops
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    let per_thread: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let elapsed = t0.elapsed();
+    let total: u64 = per_thread.iter().sum();
+    NativePoint {
+        algo: algo.to_string(),
+        threads,
+        mops: mops(total, elapsed.as_secs_f64()),
+        fairness: fairness(&per_thread),
+        avg_batch: 1.0,
+        duration: elapsed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_faa_all_names() {
+        for name in FAA_ALGOS {
+            assert!(make_faa(name, 4, 2).is_some(), "{name}");
+        }
+        assert!(make_faa("nope", 4, 2).is_none());
+    }
+
+    #[test]
+    fn make_queue_all_names() {
+        for name in QUEUE_ALGOS {
+            assert!(make_queue(name, 4).is_some(), "{name}");
+        }
+        assert!(make_queue("nope", 4).is_none());
+    }
+
+    #[test]
+    fn native_faa_point_runs() {
+        let f = make_faa("aggfunnel", 2, 2).unwrap();
+        let pt = run_native_faa(f, "aggfunnel", 2, 0.9, 16.0, Duration::from_millis(60));
+        assert!(pt.mops > 0.0);
+        assert!(pt.fairness > 0.0);
+    }
+
+    #[test]
+    fn native_queue_point_runs() {
+        let q = make_queue("lcrq", 2).unwrap();
+        let pt = run_native_queue(q, "lcrq", 2, 16.0, Duration::from_millis(60));
+        assert!(pt.mops > 0.0);
+    }
+
+    #[test]
+    fn local_work_scales() {
+        let t0 = Instant::now();
+        local_work(10);
+        let short = t0.elapsed();
+        let t1 = Instant::now();
+        local_work(1_000_000);
+        let long = t1.elapsed();
+        assert!(long > short);
+    }
+}

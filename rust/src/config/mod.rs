@@ -1,0 +1,223 @@
+//! Application configuration: TOML-subset files merged with CLI
+//! overrides.
+//!
+//! Resolution order (later wins): built-in defaults → `--config
+//! <file>` → individual CLI flags. `configs/default.toml` documents
+//! every key.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::sim::{CacheCosts, SimConfig};
+use crate::util::tomlmini::TomlDoc;
+
+/// Simulator settings (maps onto [`SimConfig`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSettings {
+    pub sockets: usize,
+    pub cpus_per_socket: usize,
+    pub freq_ghz: f64,
+    pub local: u64,
+    pub same_socket: u64,
+    pub cross_socket: u64,
+    pub wake: u64,
+    pub owner_sticky: bool,
+    pub horizon_cycles: u64,
+    pub seed: u64,
+}
+
+impl Default for SimSettings {
+    fn default() -> Self {
+        let c = SimConfig::c3_standard_176(1);
+        Self {
+            sockets: c.sockets,
+            cpus_per_socket: c.cpus_per_socket,
+            freq_ghz: c.freq_ghz,
+            local: c.costs.local,
+            same_socket: c.costs.same_socket,
+            cross_socket: c.costs.cross_socket,
+            wake: c.costs.wake,
+            owner_sticky: c.costs.owner_sticky,
+            horizon_cycles: 3_000_000,
+            seed: 0xF16_5EED,
+        }
+    }
+}
+
+impl SimSettings {
+    pub fn to_sim_config(&self, threads: usize) -> SimConfig {
+        SimConfig {
+            threads,
+            sockets: self.sockets,
+            cpus_per_socket: self.cpus_per_socket,
+            freq_ghz: self.freq_ghz,
+            costs: CacheCosts {
+                local: self.local,
+                same_socket: self.same_socket,
+                cross_socket: self.cross_socket,
+                wake: self.wake,
+                owner_sticky: self.owner_sticky,
+            },
+            horizon_cycles: self.horizon_cycles,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Benchmark settings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchSettings {
+    /// Thread grid for sweeps.
+    pub grid: Vec<usize>,
+    /// Output directory for TSV results.
+    pub out_dir: String,
+    /// Native measurement duration per point, milliseconds.
+    pub native_ms: u64,
+    /// Default Aggregator count (the paper's m = 6).
+    pub aggregators: usize,
+}
+
+impl Default for BenchSettings {
+    fn default() -> Self {
+        Self {
+            grid: vec![1, 2, 4, 8, 16, 32, 48, 64, 96, 128, 176],
+            out_dir: "results".into(),
+            native_ms: 500,
+            aggregators: 6,
+        }
+    }
+}
+
+/// Ticket-service settings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceSettings {
+    pub addr: String,
+    pub workers: usize,
+    pub aggregators: usize,
+    /// Worker slots reserved for priority requests (Fetch&AddDirect).
+    pub priority_workers: usize,
+}
+
+impl Default for ServiceSettings {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7471".into(), workers: 8, aggregators: 6, priority_workers: 1 }
+    }
+}
+
+/// Root application configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AppConfig {
+    pub sim: SimSettings,
+    pub bench: BenchSettings,
+    pub service: ServiceSettings,
+}
+
+impl AppConfig {
+    /// Apply a parsed TOML document on top of `self`.
+    pub fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        let s = &mut self.sim;
+        s.sockets = doc.int_or("sim.sockets", s.sockets as i64) as usize;
+        s.cpus_per_socket = doc.int_or("sim.cpus_per_socket", s.cpus_per_socket as i64) as usize;
+        s.freq_ghz = doc.float_or("sim.freq_ghz", s.freq_ghz);
+        s.local = doc.int_or("sim.costs.local", s.local as i64) as u64;
+        s.same_socket = doc.int_or("sim.costs.same_socket", s.same_socket as i64) as u64;
+        s.cross_socket = doc.int_or("sim.costs.cross_socket", s.cross_socket as i64) as u64;
+        s.wake = doc.int_or("sim.costs.wake", s.wake as i64) as u64;
+        s.owner_sticky = doc.bool_or("sim.costs.owner_sticky", s.owner_sticky);
+        s.horizon_cycles = doc.int_or("sim.horizon_cycles", s.horizon_cycles as i64) as u64;
+        s.seed = doc.int_or("sim.seed", s.seed as i64) as u64;
+
+        let b = &mut self.bench;
+        if let Some(v) = doc.get("bench.grid") {
+            let arr = v
+                .as_array()
+                .ok_or_else(|| anyhow!("bench.grid must be an array of integers"))?;
+            b.grid = arr
+                .iter()
+                .map(|x| x.as_int().map(|i| i as usize))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| anyhow!("bench.grid must contain integers"))?;
+        }
+        b.out_dir = doc.str_or("bench.out_dir", &b.out_dir);
+        b.native_ms = doc.int_or("bench.native_ms", b.native_ms as i64) as u64;
+        b.aggregators = doc.int_or("bench.aggregators", b.aggregators as i64) as usize;
+
+        let sv = &mut self.service;
+        sv.addr = doc.str_or("service.addr", &sv.addr);
+        sv.workers = doc.int_or("service.workers", sv.workers as i64) as usize;
+        sv.aggregators = doc.int_or("service.aggregators", sv.aggregators as i64) as usize;
+        sv.priority_workers =
+            doc.int_or("service.priority_workers", sv.priority_workers as i64) as usize;
+        Ok(())
+    }
+
+    /// Defaults, then optional file.
+    pub fn load(path: Option<&Path>) -> Result<AppConfig> {
+        let mut cfg = AppConfig::default();
+        if let Some(p) = path {
+            let doc = TomlDoc::parse_file(p).map_err(|e| anyhow!(e))?;
+            cfg.apply_doc(&doc)?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_testbed() {
+        let c = AppConfig::default();
+        assert_eq!(c.sim.sockets, 4);
+        assert_eq!(c.sim.cpus_per_socket, 44);
+        assert_eq!(c.bench.aggregators, 6);
+    }
+
+    #[test]
+    fn apply_doc_overrides() {
+        let mut c = AppConfig::default();
+        let doc = TomlDoc::parse(
+            r#"
+            [sim]
+            sockets = 2
+            [sim.costs]
+            cross_socket = 300
+            [bench]
+            grid = [1, 8, 64]
+            aggregators = 4
+            [service]
+            addr = "0.0.0.0:9000"
+            "#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.sim.sockets, 2);
+        assert_eq!(c.sim.cross_socket, 300);
+        assert_eq!(c.bench.grid, vec![1, 8, 64]);
+        assert_eq!(c.bench.aggregators, 4);
+        assert_eq!(c.service.addr, "0.0.0.0:9000");
+        // untouched keys keep defaults
+        assert_eq!(c.sim.cpus_per_socket, 44);
+        assert!(!c.sim.owner_sticky);
+        let doc = TomlDoc::parse("sim.costs.owner_sticky = true").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.sim.owner_sticky);
+    }
+
+    #[test]
+    fn bad_grid_rejected() {
+        let mut c = AppConfig::default();
+        let doc = TomlDoc::parse("bench.grid = [\"x\"]").unwrap();
+        assert!(c.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn to_sim_config_roundtrip() {
+        let c = AppConfig::default();
+        let sc = c.sim.to_sim_config(32);
+        assert_eq!(sc.threads, 32);
+        assert_eq!(sc.costs.cross_socket, 200);
+    }
+}

@@ -1,0 +1,359 @@
+//! Epoch-based memory reclamation (EBR), Fraser-style.
+//!
+//! This is the paper's §3.1.2 memory-management substrate: Aggregating
+//! Funnels retire `Batch` objects when they are unlinked from their
+//! Aggregator and `Aggregator` objects when replaced in the `Agg`
+//! array; the LCRQ family retires closed rings. A retired object is
+//! freed only after every thread that might still hold a reference has
+//! passed through a quiescent point.
+//!
+//! Scheme: a global epoch counter plus one announcement slot per
+//! registered thread. A thread *pins* before touching shared objects
+//! (announcing the global epoch) and *unpins* after. Retired garbage
+//! goes into one of three per-thread bags keyed by retirement epoch;
+//! a bag is dropped once the global epoch has advanced ≥ 2 beyond the
+//! bag's epoch, which guarantees no pinned thread can still observe
+//! its contents. The global epoch advances when every pinned thread
+//! has announced the current epoch.
+//!
+//! The domain is sized at construction for a maximum number of
+//! threads; slots are cache-padded so pin/unpin never contend.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sync::CachePadded;
+
+/// Announcement value meaning "not currently pinned".
+const INACTIVE: u64 = u64::MAX;
+
+/// How many pins between attempts to advance the global epoch.
+const ADVANCE_PERIOD: u64 = 64;
+
+/// A deferred destruction: a type-erased owned pointer plus its dropper.
+struct Garbage {
+    ptr: *mut u8,
+    dropper: unsafe fn(*mut u8),
+}
+
+// Garbage is only created from `Box<T>` where `T: Send`.
+unsafe impl Send for Garbage {}
+
+impl Garbage {
+    fn from_box<T: Send>(b: Box<T>) -> Self {
+        unsafe fn drop_box<T>(p: *mut u8) {
+            drop(unsafe { Box::from_raw(p as *mut T) });
+        }
+        Garbage { ptr: Box::into_raw(b) as *mut u8, dropper: drop_box::<T> }
+    }
+
+    fn free(self) {
+        unsafe { (self.dropper)(self.ptr) }
+    }
+}
+
+/// Per-thread mutable state (bags of retired garbage). Only ever
+/// touched by the owning thread; reached through `UnsafeCell` so the
+/// domain itself can be shared by `&`.
+struct LocalBags {
+    bags: [Vec<Garbage>; 3],
+    bag_epochs: [u64; 3],
+    pins: u64,
+    retired_count: u64,
+    freed_count: u64,
+}
+
+impl LocalBags {
+    fn new() -> Self {
+        Self {
+            bags: [Vec::new(), Vec::new(), Vec::new()],
+            bag_epochs: [0, 0, 0],
+            pins: 0,
+            retired_count: 0,
+            freed_count: 0,
+        }
+    }
+}
+
+struct Slot {
+    /// The epoch this thread has announced, or `INACTIVE`.
+    epoch: AtomicU64,
+    local: std::cell::UnsafeCell<LocalBags>,
+}
+
+unsafe impl Sync for Slot {}
+
+/// An EBR domain: one per family of shared objects.
+pub struct Domain {
+    global: CachePadded<AtomicU64>,
+    slots: Vec<CachePadded<Slot>>,
+}
+
+impl Domain {
+    /// Create a domain for up to `max_threads` participants
+    /// (thread ids `0..max_threads`).
+    pub fn new(max_threads: usize) -> Self {
+        let slots = (0..max_threads)
+            .map(|_| {
+                CachePadded::new(Slot {
+                    epoch: AtomicU64::new(INACTIVE),
+                    local: std::cell::UnsafeCell::new(LocalBags::new()),
+                })
+            })
+            .collect();
+        Self { global: CachePadded::new(AtomicU64::new(2)), slots }
+    }
+
+    pub fn max_threads(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn global_epoch(&self) -> u64 {
+        self.global.load(Ordering::Acquire)
+    }
+
+    /// Pin thread `tid`. While the returned guard lives, no object
+    /// retired *after* this call will be freed. Not reentrant: a
+    /// thread must not pin the same domain twice concurrently.
+    ///
+    /// Must only be called from the thread that owns `tid`.
+    #[inline]
+    pub fn pin(&self, tid: usize) -> Guard<'_> {
+        let slot = &self.slots[tid];
+        debug_assert_eq!(
+            slot.epoch.load(Ordering::Relaxed),
+            INACTIVE,
+            "ebr: thread {tid} pinned twice"
+        );
+        let e = self.global.load(Ordering::Relaxed);
+        slot.epoch.store(e, Ordering::SeqCst);
+        // Re-read: if the global moved between our load and store we
+        // might have announced a stale epoch; fix it up (one retry is
+        // enough, the announcement only needs to be ≥ the epoch at
+        // some point after it became visible).
+        let e2 = self.global.load(Ordering::SeqCst);
+        if e2 != e {
+            slot.epoch.store(e2, Ordering::SeqCst);
+        }
+
+        let local = unsafe { &mut *slot.local.get() };
+        local.pins += 1;
+        if local.pins % ADVANCE_PERIOD == 0 {
+            self.try_advance();
+        }
+        self.collect(tid);
+        Guard { domain: self, tid }
+    }
+
+    /// Retire a boxed object: it will be dropped once safe.
+    /// Must only be called from the thread that owns `tid`.
+    pub fn retire_box<T: Send>(&self, tid: usize, b: Box<T>) {
+        let e = self.global.load(Ordering::Acquire);
+        let local = unsafe { &mut *self.slots[tid].local.get() };
+        let idx = (e % 3) as usize;
+        if local.bag_epochs[idx] != e {
+            // The bag's old contents must be from e-3 or older — they
+            // are definitely safe to free now.
+            debug_assert!(local.bag_epochs[idx] + 3 <= e || local.bags[idx].is_empty());
+            local.freed_count += local.bags[idx].len() as u64;
+            for g in local.bags[idx].drain(..) {
+                g.free();
+            }
+            local.bag_epochs[idx] = e;
+        }
+        local.bags[idx].push(Garbage::from_box(b));
+        local.retired_count += 1;
+        if local.bags[idx].len() % 128 == 0 {
+            self.try_advance();
+        }
+    }
+
+    /// Free any bags that are ≥ 2 epochs behind the global epoch.
+    fn collect(&self, tid: usize) {
+        let e = self.global.load(Ordering::Acquire);
+        let local = unsafe { &mut *self.slots[tid].local.get() };
+        for i in 0..3 {
+            if !local.bags[i].is_empty() && local.bag_epochs[i] + 2 <= e {
+                local.freed_count += local.bags[i].len() as u64;
+                for g in local.bags[i].drain(..) {
+                    g.free();
+                }
+            }
+        }
+    }
+
+    /// Try to advance the global epoch: possible iff every pinned
+    /// thread has announced the current epoch.
+    pub fn try_advance(&self) -> bool {
+        let e = self.global.load(Ordering::SeqCst);
+        for slot in &self.slots {
+            let a = slot.epoch.load(Ordering::SeqCst);
+            if a != INACTIVE && a != e {
+                return false;
+            }
+        }
+        self.global
+            .compare_exchange(e, e + 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+    }
+
+    /// (tid-local) statistics: `(retired, freed)` counts.
+    pub fn stats(&self, tid: usize) -> (u64, u64) {
+        let local = unsafe { &*self.slots[tid].local.get() };
+        (local.retired_count, local.freed_count)
+    }
+
+    /// Force-free all garbage. Only safe when no thread is pinned and
+    /// no references to retired objects remain; used on shutdown.
+    pub fn flush_all(&mut self) {
+        for slot in &self.slots {
+            debug_assert_eq!(slot.epoch.load(Ordering::Relaxed), INACTIVE);
+            let local = unsafe { &mut *slot.local.get() };
+            for bag in &mut local.bags {
+                local.freed_count += bag.len() as u64;
+                for g in bag.drain(..) {
+                    g.free();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Domain {
+    fn drop(&mut self) {
+        self.flush_all();
+    }
+}
+
+/// RAII pin guard; unpins on drop.
+pub struct Guard<'a> {
+    domain: &'a Domain,
+    tid: usize,
+}
+
+impl Guard<'_> {
+    pub fn tid(&self) -> usize {
+        self.tid
+    }
+}
+
+impl Drop for Guard<'_> {
+    fn drop(&mut self) {
+        self.domain.slots[self.tid].epoch.store(INACTIVE, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    /// A type whose drop increments a counter, to observe frees.
+    struct Tracked(Arc<AtomicUsize>);
+
+    impl Drop for Tracked {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn garbage_freed_after_epochs_advance() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let d = Domain::new(1);
+        {
+            let _g = d.pin(0);
+            d.retire_box(0, Box::new(Tracked(Arc::clone(&drops))));
+        }
+        assert_eq!(drops.load(Ordering::SeqCst), 0, "freed too early");
+        // Advance epochs and pin again to trigger collection.
+        for _ in 0..4 {
+            assert!(d.try_advance());
+            let _g = d.pin(0);
+        }
+        assert_eq!(drops.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn pinned_thread_blocks_advance() {
+        let d = Domain::new(2);
+        let _g = d.pin(0);
+        let e = d.global_epoch();
+        assert!(d.try_advance(), "announcing thread at current epoch should allow advance");
+        assert_eq!(d.global_epoch(), e + 1);
+        // Thread 0 is still announced at the *old* epoch now.
+        assert!(!d.try_advance(), "stale announcement must block advance");
+    }
+
+    #[test]
+    fn unpinned_threads_do_not_block() {
+        let d = Domain::new(8);
+        assert!(d.try_advance());
+        assert!(d.try_advance());
+    }
+
+    #[test]
+    fn drop_domain_frees_everything() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        {
+            let d = Domain::new(2);
+            for i in 0..10 {
+                d.retire_box(i % 2, Box::new(Tracked(Arc::clone(&drops))));
+            }
+        }
+        assert_eq!(drops.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn concurrent_stress_no_use_after_free() {
+        // Readers follow a shared pointer while a writer keeps swapping
+        // and retiring it; Tracked values are checked for liveness via
+        // a magic field (a UAF would likely trip the assert or MIRI,
+        // and at minimum the final drop count must match).
+        struct Node {
+            magic: u64,
+        }
+        let d = Arc::new(Domain::new(4));
+        let current = Arc::new(std::sync::atomic::AtomicPtr::new(Box::into_raw(Box::new(
+            Node { magic: 0xDEAD_BEEF },
+        ))));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        let mut handles = Vec::new();
+        for tid in 1..4 {
+            let d = Arc::clone(&d);
+            let current = Arc::clone(&current);
+            let stop = Arc::clone(&stop);
+            handles.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let _g = d.pin(tid);
+                    let p = current.load(Ordering::Acquire);
+                    let node = unsafe { &*p };
+                    assert_eq!(node.magic, 0xDEAD_BEEF);
+                }
+            }));
+        }
+        for _ in 0..2_000 {
+            let _g = d.pin(0);
+            let fresh = Box::into_raw(Box::new(Node { magic: 0xDEAD_BEEF }));
+            let old = current.swap(fresh, Ordering::AcqRel);
+            d.retire_box(0, unsafe { Box::from_raw(old) });
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Final cleanup.
+        let last = current.load(Ordering::Acquire);
+        drop(unsafe { Box::from_raw(last) });
+    }
+
+    #[test]
+    fn stats_track_retired_and_freed() {
+        let d = Domain::new(1);
+        d.retire_box(0, Box::new(1u32));
+        d.retire_box(0, Box::new(2u32));
+        let (retired, _freed) = d.stats(0);
+        assert_eq!(retired, 2);
+    }
+}

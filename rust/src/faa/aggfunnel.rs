@@ -1,0 +1,858 @@
+//! Aggregating Funnels — the paper's Algorithm 1.
+//!
+//! A strongly-linearizable `Fetch&Add` built from `Load`, `Store` and
+//! hardware `F&A` only. One principal variable `Main` holds the
+//! object's value; `2m` *Aggregators* (m for positive deltas, m for
+//! negative) absorb concurrent operations into *batches*. Each
+//! operation performs a single F&A on its Aggregator's `value`; the
+//! operation that starts a batch (the *delegate*) applies the whole
+//! batch to `Main` with one F&A and publishes a `Batch` record from
+//! which the remaining operations compute their own return values
+//! (Lemma 3.4: `mainBefore + (aBefore − batch.before) · sgn(df)`).
+//!
+//! The overflow path (the paper's cyan code) is implemented: when an
+//! Aggregator's `value` passes `threshold`, the delegate *retires* it —
+//! replacing it in the `Agg` array with a fresh Aggregator and setting
+//! its `final` field so stragglers restart — bounding each Aggregator's
+//! `value` below 2⁶⁴ provided every |delta| < 2⁶³/p.
+//!
+//! Memory reclamation (§3.1.2) uses the crate's epoch-based
+//! reclamation: a `Batch` is retired when a newer batch replaces it as
+//! `last`, an Aggregator when it is replaced in `Agg`; Θ(m) objects are
+//! live at any time.
+//!
+//! This implementation is generic over the `Main` cell ([`MainCell`])
+//! so the §3.2 recursive construction — replacing `Main` with another
+//! Aggregating Funnel — is expressed as `AggFunnel<AggFunnel<...>>`
+//! (see [`super::recursive`]).
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+use super::choose::Choose;
+use super::{delta_to_u64, BatchStats, FetchAddObject};
+use crate::ebr;
+use crate::sync::{Backoff, CachePadded};
+use crate::util::rng::Rng;
+
+/// `final` field value meaning "Aggregator still in use" (the paper's ∞).
+const FINAL_INFINITY: u64 = u64::MAX;
+
+/// A batch of operations applied to an Aggregator (all fields
+/// immutable after publication; `previous` links the Batch list).
+struct Batch {
+    /// Aggregator's `value` before the batch (`before` in the paper).
+    before: u64,
+    /// Aggregator's `value` after the batch.
+    after: u64,
+    /// Value of `Main` just before the batch was applied to it.
+    main_before: u64,
+    /// Previous Batch in the Aggregator's list (null for the sentinel).
+    previous: *mut Batch,
+}
+
+// Safety: a Batch is immutable after publication; the raw `previous`
+// pointer is only dereferenced by EBR-pinned readers, and Batch's drop
+// does not follow it. Sending a retired Batch to the EBR domain (which
+// may free it from another thread) is therefore sound.
+unsafe impl Send for Batch {}
+
+/// The rarely-written, waiter-read pair of an Aggregator. `last` and
+/// `final` are always read together in the wait loop (lines 23–24) and
+/// written together by retiring delegates, so they share a cache line
+/// — one transfer serves both reads (§Perf: −1 line touch per op) —
+/// while the RMW-hot `value` stays on its own line.
+struct AggregatorTail {
+    /// Most recent Batch applied to `Main` from this Aggregator.
+    last: AtomicPtr<Batch>,
+    /// `value` after the final batch once retired, else ∞.
+    final_value: AtomicU64,
+}
+
+/// An Aggregator: funnels a stream of operations into batches.
+struct Aggregator {
+    /// Sum of |delta| of all operations applied here (only grows).
+    value: CachePadded<AtomicU64>,
+    tail: CachePadded<AggregatorTail>,
+}
+
+impl Aggregator {
+    fn boxed() -> Box<Aggregator> {
+        let sentinel = Box::into_raw(Box::new(Batch {
+            before: 0,
+            after: 0,
+            main_before: 0,
+            previous: std::ptr::null_mut(),
+        }));
+        Box::new(Aggregator {
+            value: CachePadded::new(AtomicU64::new(0)),
+            tail: CachePadded::new(AggregatorTail {
+                last: AtomicPtr::new(sentinel),
+                final_value: AtomicU64::new(FINAL_INFINITY),
+            }),
+        })
+    }
+}
+
+impl Drop for Aggregator {
+    fn drop(&mut self) {
+        // Only the current `last` Batch is still owned by the
+        // Aggregator — every older Batch was individually retired when
+        // it was replaced as `last`.
+        let last = *self.tail.last.get_mut();
+        if !last.is_null() {
+            drop(unsafe { Box::from_raw(last) });
+        }
+    }
+}
+
+/// The `Main` cell an [`AggFunnel`] applies batches to. Implemented by
+/// a plain atomic word ([`AtomicMain`]) and by `AggFunnel` itself
+/// (giving the recursive construction of §3.2).
+pub trait MainCell: Send + Sync {
+    /// F&A of a signed delta (mod 2⁶⁴); returns the previous value.
+    fn apply_add(&self, tid: usize, delta: i64) -> u64;
+    /// Linearizable read.
+    fn load(&self, tid: usize) -> u64;
+    /// CAS; returns the witnessed value.
+    fn cas(&self, tid: usize, old: u64, new: u64) -> u64;
+    /// Atomic OR; returns the previous value.
+    fn or(&self, tid: usize, bits: u64) -> u64;
+}
+
+/// A cache-padded atomic word as the principal variable.
+pub struct AtomicMain(CachePadded<AtomicU64>);
+
+impl AtomicMain {
+    pub fn new(initial: u64) -> Self {
+        Self(CachePadded::new(AtomicU64::new(initial)))
+    }
+}
+
+impl MainCell for AtomicMain {
+    #[inline]
+    fn apply_add(&self, _tid: usize, delta: i64) -> u64 {
+        self.0.fetch_add(delta_to_u64(delta), Ordering::AcqRel)
+    }
+
+    #[inline]
+    fn load(&self, _tid: usize) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    fn cas(&self, _tid: usize, old: u64, new: u64) -> u64 {
+        match self.0.compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(prev) => prev,
+            Err(actual) => actual,
+        }
+    }
+
+    #[inline]
+    fn or(&self, _tid: usize, bits: u64) -> u64 {
+        self.0.fetch_or(bits, Ordering::AcqRel)
+    }
+}
+
+/// Construction parameters for an [`AggFunnel`].
+#[derive(Clone, Debug)]
+pub struct AggFunnelConfig {
+    /// Maximum number of threads (`p`); thread ids are `0..p`.
+    pub max_threads: usize,
+    /// Aggregators per sign (`m`). The paper's best default is 6.
+    pub aggregators: usize,
+    /// Aggregator retirement threshold (paper default 2⁶³). Tests use
+    /// tiny values to exercise the overflow path.
+    pub threshold: u64,
+    /// Aggregator selection policy.
+    pub choose: Choose,
+    /// Threads with `tid < direct_threads` are high-priority: their
+    /// `fetch_add` goes straight to `Main` (§4.4's AGGFUNNEL-(m,d)).
+    pub direct_threads: usize,
+    /// Seed for the per-thread RNGs used by `Choose::Random`.
+    pub seed: u64,
+    /// Recording mode (for the linearizability verifier): every
+    /// funnelled operation is logged and Batch records are kept alive
+    /// so [`AggFunnel::extract_history`] can reconstruct the full
+    /// batch history after the run. Costs memory ∝ history length.
+    pub record: bool,
+}
+
+impl AggFunnelConfig {
+    /// The paper's default configuration: AGGFUNNEL-6, static even
+    /// assignment, threshold 2⁶³, no priority threads.
+    pub fn new(max_threads: usize) -> Self {
+        Self {
+            max_threads: max_threads.max(1),
+            aggregators: 6,
+            threshold: 1 << 63,
+            choose: Choose::StaticEven,
+            direct_threads: 0,
+            seed: 0x5EED_A66F,
+            record: false,
+        }
+    }
+
+    pub fn with_aggregators(mut self, m: usize) -> Self {
+        self.aggregators = m.max(1);
+        self
+    }
+
+    pub fn with_threshold(mut self, t: u64) -> Self {
+        self.threshold = t;
+        self
+    }
+
+    pub fn with_choose(mut self, c: Choose) -> Self {
+        self.choose = c;
+        self
+    }
+
+    pub fn with_direct_threads(mut self, d: usize) -> Self {
+        self.direct_threads = d;
+        self
+    }
+
+    /// Enable history recording (verifier mode). Forces an effectively
+    /// infinite threshold so the batch chains stay walkable.
+    pub fn with_recording(mut self) -> Self {
+        self.record = true;
+        self.threshold = u64::MAX;
+        self
+    }
+}
+
+/// One recorded funnelled operation (verifier mode).
+#[derive(Clone, Copy, Debug)]
+pub struct OpRecord {
+    /// Index into the `Agg` array (sign encoded: `>= m` is negative).
+    pub agg_index: u32,
+    /// Result of the op's F&A on the Aggregator's `value`.
+    pub a_before: u64,
+    /// The operation's |delta|.
+    pub magnitude: u64,
+    /// The value the operation returned to its caller.
+    pub result: u64,
+}
+
+/// Per-thread scratch state (RNG for random choice, batch counters).
+struct ThreadScratch {
+    rng: Rng,
+    /// Batches this thread applied to Main as a delegate (+ direct ops).
+    main_faas: u64,
+    /// Fetch&Add operations this thread completed through the funnel.
+    ops: u64,
+    /// Recorded operations (verifier mode only).
+    records: Vec<OpRecord>,
+}
+
+/// Aggregating Funnels (paper Algorithm 1), generic over the `Main`
+/// cell for the recursive construction.
+pub struct AggFunnel<M: MainCell = AtomicMain> {
+    main: M,
+    /// `Agg[0..m)` for positive deltas, `Agg[m..2m)` for negative.
+    agg: Vec<CachePadded<AtomicPtr<Aggregator>>>,
+    cfg: AggFunnelConfig,
+    ebr: ebr::Domain,
+    scratch: Vec<CachePadded<std::cell::UnsafeCell<ThreadScratch>>>,
+}
+
+unsafe impl<M: MainCell> Send for AggFunnel<M> {}
+unsafe impl<M: MainCell> Sync for AggFunnel<M> {}
+
+impl AggFunnel<AtomicMain> {
+    /// Build with the paper's defaults (`AGGFUNNEL-6`) for `p` threads.
+    pub fn new(max_threads: usize) -> Self {
+        Self::with_config(AggFunnelConfig::new(max_threads))
+    }
+
+    /// Build with an explicit configuration and a plain atomic `Main`.
+    pub fn with_config(cfg: AggFunnelConfig) -> Self {
+        Self::with_main(cfg, AtomicMain::new(0))
+    }
+}
+
+impl<M: MainCell> AggFunnel<M> {
+    /// Build with an explicit `Main` cell (the recursive construction
+    /// passes another `AggFunnel` here).
+    pub fn with_main(cfg: AggFunnelConfig, main: M) -> Self {
+        let m2 = cfg.aggregators * 2;
+        let agg = (0..m2)
+            .map(|_| CachePadded::new(AtomicPtr::new(Box::into_raw(Aggregator::boxed()))))
+            .collect();
+        let mut seed_rng = Rng::new(cfg.seed);
+        let scratch = (0..cfg.max_threads)
+            .map(|t| {
+                CachePadded::new(std::cell::UnsafeCell::new(ThreadScratch {
+                    rng: seed_rng.fork(t as u64),
+                    main_faas: 0,
+                    ops: 0,
+                    records: Vec::new(),
+                }))
+            })
+            .collect();
+        let ebr = ebr::Domain::new(cfg.max_threads);
+        Self { main, agg, cfg, ebr, scratch }
+    }
+
+    pub fn config(&self) -> &AggFunnelConfig {
+        &self.cfg
+    }
+
+    /// Number of Aggregators per sign (`m`).
+    pub fn aggregators_per_sign(&self) -> usize {
+        self.cfg.aggregators
+    }
+
+    #[inline]
+    fn scratch(&self, tid: usize) -> &mut ThreadScratch {
+        // Safety: `tid` is owned by exactly one OS thread (trait contract).
+        unsafe { &mut *self.scratch[tid].get() }
+    }
+
+    /// ChooseAggregator (line 20): index into `agg`, honouring sign.
+    #[inline]
+    fn choose_index(&self, tid: usize, positive: bool) -> usize {
+        let m = self.cfg.aggregators;
+        let scratch = self.scratch(tid);
+        let g = self.cfg.choose.pick(tid, m, || scratch.rng.next_u64());
+        if positive {
+            g
+        } else {
+            m + g
+        }
+    }
+
+    /// The funnelled Fetch&Add path (lines 20–37).
+    fn fetch_add_funnel(&self, tid: usize, delta: i64) -> u64 {
+        let positive = delta > 0;
+        let magnitude = delta.unsigned_abs();
+        let index = self.choose_index(tid, positive);
+        let slot = &self.agg[index];
+        let guard = self.ebr.pin(tid);
+
+        // "go to line 21" (overflow restart) re-reads Agg[index].
+        loop {
+            // Line 21: a ← Agg[index].
+            let a_ptr = slot.load(Ordering::Acquire);
+            debug_assert!(!a_ptr.is_null());
+            let a = unsafe { &*a_ptr };
+
+            // Line 22: register in a batch with a single F&A.
+            let a_before = a.value.fetch_add(magnitude, Ordering::AcqRel);
+
+            // Lines 23–24: wait until my batch has been added to a's
+            // list, or until I can start the next batch, or until the
+            // Aggregator is retired under me. Read order matters
+            // (§3.1.1): `a.last` first, `a.final` second.
+            let mut backoff = Backoff::new();
+            let last_ptr = loop {
+                let last_ptr = a.tail.last.load(Ordering::Acquire);
+                let last = unsafe { &*last_ptr };
+                if last.after >= a_before {
+                    if a_before >= a.tail.final_value.load(Ordering::Acquire) {
+                        break std::ptr::null_mut(); // line 24: restart
+                    }
+                    break last_ptr;
+                }
+                if a_before >= a.tail.final_value.load(Ordering::Acquire) {
+                    break std::ptr::null_mut(); // line 24: restart
+                }
+                backoff.snooze();
+            };
+            if last_ptr.is_null() {
+                // Aggregator overflowed; Agg[index] already holds a
+                // fresh Aggregator (the delegate replaced it *before*
+                // setting `final`). Restart there with the full delta.
+                continue;
+            }
+            let batch = unsafe { &*last_ptr };
+
+            return if batch.after == a_before {
+                // Lines 26–33: I am the delegate of the next batch.
+                let result =
+                    self.run_delegate(tid, index, a_ptr, last_ptr, a_before, positive);
+                if self.cfg.record {
+                    self.scratch(tid).records.push(OpRecord {
+                        agg_index: index as u32,
+                        a_before,
+                        magnitude,
+                        result,
+                    });
+                }
+                result
+            } else {
+                // Lines 34–37: my batch is already linked; find it and
+                // derive my return value.
+                let result = Self::non_delegate_result(batch, a_before, positive);
+                let s = self.scratch(tid);
+                s.ops += 1;
+                if self.cfg.record {
+                    s.records.push(OpRecord {
+                        agg_index: index as u32,
+                        a_before,
+                        magnitude,
+                        result,
+                    });
+                }
+                drop(guard);
+                result
+            };
+        }
+    }
+
+    /// Delegate path (lines 26–33): close the batch, apply it to Main,
+    /// publish the Batch record, retire the Aggregator on overflow.
+    fn run_delegate(
+        &self,
+        tid: usize,
+        index: usize,
+        a_ptr: *mut Aggregator,
+        last_ptr: *mut Batch,
+        a_before: u64,
+        positive: bool,
+    ) -> u64 {
+        let a = unsafe { &*a_ptr };
+
+        // Line 27: read the Aggregator's value — this closes the batch.
+        let a_after = a.value.load(Ordering::Acquire);
+        debug_assert!(a_after > a_before);
+        let sum = a_after.wrapping_sub(a_before);
+
+        // Line 28: apply the whole batch to Main with one F&A.
+        // (`sum < 2^63` because threshold ≤ 2^63 and |delta| < 2^63/p.)
+        let signed_sum = if positive { sum as i64 } else { (sum as i64).wrapping_neg() };
+        let main_before = self.main.apply_add(tid, signed_sum);
+
+        // Lines 29–31: retire the Aggregator if it crossed the
+        // threshold. Order is load-bearing: replace in Agg first, then
+        // set `final` — so any operation that sees `final` set will
+        // find the fresh Aggregator on restart.
+        let retired = a_after >= self.cfg.threshold;
+        if retired {
+            let fresh = Box::into_raw(Aggregator::boxed());
+            self.agg[index].store(fresh, Ordering::Release);
+            a.tail.final_value.store(a_after, Ordering::Release);
+        }
+
+        // Line 32: publish the Batch record; waiters exit their loops.
+        let new_batch = Box::into_raw(Box::new(Batch {
+            before: a_before,
+            after: a_after,
+            main_before,
+            previous: last_ptr,
+        }));
+        a.tail.last.store(new_batch, Ordering::Release);
+
+        // §3.1.2 reclamation: the replaced Batch is no longer pointed
+        // to by the Aggregator (only by `previous` links that pinned
+        // stragglers may still traverse) — retire it. Likewise the
+        // Aggregator itself if we replaced it in Agg. In verifier mode
+        // the chain is kept alive for `extract_history`.
+        if !self.cfg.record {
+            self.ebr.retire_box(tid, unsafe { Box::from_raw(last_ptr) });
+            if retired {
+                self.ebr.retire_box(tid, unsafe { Box::from_raw(a_ptr) });
+            }
+        }
+
+        let s = self.scratch(tid);
+        s.main_faas += 1;
+        s.ops += 1;
+        main_before // line 33
+    }
+
+    /// Non-delegate result computation (lines 35–37).
+    #[inline]
+    fn non_delegate_result(mut batch: &Batch, a_before: u64, positive: bool) -> u64 {
+        // Line 35–36: walk back to the Batch containing me
+        // (97% of the time `batch` already is it — paper §3.1).
+        while batch.before > a_before {
+            debug_assert!(!batch.previous.is_null());
+            batch = unsafe { &*batch.previous };
+        }
+        debug_assert!(batch.before <= a_before && a_before < batch.after);
+        // Line 37: mainBefore + (aBefore − batch.before) · sgn(df).
+        let offset = a_before.wrapping_sub(batch.before);
+        if positive {
+            batch.main_before.wrapping_add(offset)
+        } else {
+            batch.main_before.wrapping_sub(offset)
+        }
+    }
+
+    /// Objects *owned* by the funnel right now: its 2m Aggregators and
+    /// their current `last` Batches (everything else has been handed to
+    /// EBR). This is the Θ(m) bound of §3.1.2. (Older batches linked
+    /// via `previous` are retired garbage and must not be traversed
+    /// outside a pinned operation, so they are not counted here.)
+    pub fn debug_owned_objects(&self) -> usize {
+        2 * self.agg.len() // one Aggregator + one last Batch per slot
+    }
+
+    /// Reclamation counters summed over threads: `(retired, freed)`.
+    pub fn debug_ebr_stats(&self) -> (u64, u64) {
+        let mut retired = 0;
+        let mut freed = 0;
+        for tid in 0..self.cfg.max_threads {
+            let (r, f) = self.ebr.stats(tid);
+            retired += r;
+            freed += f;
+        }
+        (retired, freed)
+    }
+}
+
+impl<M: MainCell> FetchAddObject for AggFunnel<M> {
+    fn fetch_add(&self, tid: usize, delta: i64) -> u64 {
+        // Line 19: Fetch&Add(0) is a Read.
+        if delta == 0 {
+            return self.read(tid);
+        }
+        // §4.4: high-priority threads bypass the funnel.
+        if tid < self.cfg.direct_threads {
+            return self.fetch_add_direct(tid, delta);
+        }
+        self.fetch_add_funnel(tid, delta)
+    }
+
+    #[inline]
+    fn read(&self, tid: usize) -> u64 {
+        self.main.load(tid) // lines 16–17
+    }
+
+    #[inline]
+    fn fetch_add_direct(&self, tid: usize, delta: i64) -> u64 {
+        let s = self.scratch(tid);
+        s.main_faas += 1;
+        s.ops += 1;
+        self.main.apply_add(tid, delta) // lines 38–39
+    }
+
+    #[inline]
+    fn compare_and_swap(&self, tid: usize, old: u64, new: u64) -> u64 {
+        self.main.cas(tid, old, new) // lines 40–41
+    }
+
+    #[inline]
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64 {
+        self.main.or(tid, bits)
+    }
+
+    fn max_threads(&self) -> usize {
+        self.cfg.max_threads
+    }
+
+    fn batch_stats(&self) -> BatchStats {
+        let mut stats = BatchStats::default();
+        for s in &self.scratch {
+            let s = unsafe { &*s.get() };
+            stats.main_faas += s.main_faas;
+            stats.ops += s.ops;
+        }
+        stats
+    }
+}
+
+impl<M: MainCell> Drop for AggFunnel<M> {
+    fn drop(&mut self) {
+        for slot in &self.agg {
+            let p = slot.load(Ordering::Relaxed);
+            if p.is_null() {
+                continue;
+            }
+            if self.cfg.record {
+                // Verifier mode kept the whole chain alive: free every
+                // Batch behind `last`, then let the Aggregator's own
+                // drop free `last` itself.
+                unsafe {
+                    let a = &*p;
+                    let last = a.tail.last.load(Ordering::Relaxed);
+                    if !last.is_null() {
+                        let mut b = (*last).previous;
+                        while !b.is_null() {
+                            let prev = (*b).previous;
+                            drop(Box::from_raw(b));
+                            b = prev;
+                        }
+                    }
+                }
+            }
+            drop(unsafe { Box::from_raw(p) });
+        }
+        // Retired Aggregators/Batches are freed by the EBR domain drop.
+    }
+}
+
+impl<M: MainCell> AggFunnel<M> {
+    /// Reconstruct the full batch history of a recording-mode run.
+    ///
+    /// Must be called after every worker thread has finished (it walks
+    /// the Batch chains and the per-thread op logs unsynchronized).
+    /// Returns the history in oracle layout plus, aligned with it, the
+    /// value each operation actually returned — ready for
+    /// [`crate::runtime::OracleRuntime::batch_returns`] comparison.
+    ///
+    /// Panics if the funnel was not built `with_recording()`, and
+    /// asserts Invariant 3.1 (each Aggregator's batch list is
+    /// contiguous: `previous.after == before`, strictly increasing)
+    /// while walking.
+    pub fn extract_history(&self) -> (crate::runtime::BatchHistory, Vec<u64>) {
+        assert!(self.cfg.record, "extract_history requires recording mode");
+        // Gather all op records, bucketed per Aggregator index.
+        let mut per_agg: Vec<Vec<OpRecord>> = vec![Vec::new(); self.agg.len()];
+        for s in &self.scratch {
+            let s = unsafe { &*s.get() };
+            for r in &s.records {
+                per_agg[r.agg_index as usize].push(*r);
+            }
+        }
+        let mut history = crate::runtime::BatchHistory::default();
+        let mut recorded = Vec::new();
+        for (index, slot) in self.agg.iter().enumerate() {
+            let mut ops = std::mem::take(&mut per_agg[index]);
+            if ops.is_empty() {
+                continue;
+            }
+            ops.sort_by_key(|r| r.a_before);
+            let sign: i32 = if index < self.cfg.aggregators { 1 } else { -1 };
+            // Collect the chain oldest-first.
+            let a = unsafe { &*slot.load(Ordering::Acquire) };
+            let mut chain = Vec::new();
+            let mut b = a.tail.last.load(Ordering::Acquire);
+            while !b.is_null() {
+                chain.push(unsafe { &*b });
+                b = unsafe { (*b).previous };
+            }
+            chain.reverse();
+            // Invariant 3.1 checks + op assignment.
+            let mut op_iter = ops.iter().peekable();
+            for w in chain.windows(2) {
+                assert_eq!(w[0].after, w[1].before, "Invariant 3.1: contiguity violated");
+            }
+            for batch in chain.iter().skip(1) {
+                // skip the sentinel (before == after == 0)
+                assert!(batch.after > batch.before, "Invariant 3.1: empty batch");
+                let mut deltas = Vec::new();
+                let mut cursor = batch.before;
+                while let Some(r) = op_iter.peek() {
+                    if r.a_before >= batch.after {
+                        break;
+                    }
+                    assert_eq!(
+                        r.a_before, cursor,
+                        "ops within a batch must tile it exactly"
+                    );
+                    deltas.push(r.magnitude);
+                    recorded.push(r.result);
+                    cursor = cursor.wrapping_add(r.magnitude);
+                    op_iter.next();
+                }
+                assert_eq!(cursor, batch.after, "batch sum mismatch (Invariant 3.1)");
+                history.push_batch(batch.main_before, sign, &deltas);
+            }
+            assert!(op_iter.next().is_none(), "op not covered by any batch");
+        }
+        (history, recorded)
+    }
+}
+
+/// `AggFunnel` can itself serve as the `Main` cell of an outer funnel
+/// (§3.2's recursive construction).
+impl<M: MainCell> MainCell for AggFunnel<M> {
+    #[inline]
+    fn apply_add(&self, tid: usize, delta: i64) -> u64 {
+        self.fetch_add(tid, delta)
+    }
+
+    #[inline]
+    fn load(&self, tid: usize) -> u64 {
+        self.read(tid)
+    }
+
+    #[inline]
+    fn cas(&self, tid: usize, old: u64, new: u64) -> u64 {
+        self.compare_and_swap(tid, old, new)
+    }
+
+    #[inline]
+    fn or(&self, tid: usize, bits: u64) -> u64 {
+        self.fetch_or(tid, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_matches_hardware_semantics() {
+        let f = AggFunnel::new(1);
+        assert_eq!(f.fetch_add(0, 5), 0);
+        assert_eq!(f.fetch_add(0, 3), 5);
+        assert_eq!(f.fetch_add(0, -2), 8);
+        assert_eq!(f.read(0), 6);
+        assert_eq!(f.fetch_add(0, 0), 6, "Fetch&Add(0) is a Read");
+    }
+
+    #[test]
+    fn rmw_operations_hit_main() {
+        let f = AggFunnel::new(2);
+        f.fetch_add(0, 10);
+        assert_eq!(f.compare_and_swap(0, 10, 99), 10);
+        assert_eq!(f.read(1), 99);
+        assert_eq!(f.fetch_or(1, 0b100), 99);
+        assert_eq!(f.read(0), 99 | 0b100);
+    }
+
+    #[test]
+    fn direct_path_counts_and_returns() {
+        let f = AggFunnel::with_config(AggFunnelConfig::new(2).with_direct_threads(1));
+        assert_eq!(f.fetch_add(0, 7), 0); // tid 0 is high-priority → direct
+        assert_eq!(f.fetch_add(1, 1), 7);
+        let stats = f.batch_stats();
+        assert_eq!(stats.ops, 2);
+    }
+
+    #[test]
+    fn wrapping_negative_to_below_zero() {
+        let f = AggFunnel::new(1);
+        assert_eq!(f.fetch_add(0, -3), 0);
+        assert_eq!(f.read(0), (-3i64) as u64);
+        assert_eq!(f.fetch_add(0, 3), (-3i64) as u64);
+        assert_eq!(f.read(0), 0);
+    }
+
+    #[test]
+    fn concurrent_sum_conserved_mixed_signs() {
+        let p = 8;
+        let f = Arc::new(AggFunnel::with_config(
+            AggFunnelConfig::new(p).with_aggregators(2),
+        ));
+        let per_thread = 4_000i64;
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        let d = if (tid + i as usize) % 4 == 0 { -3 } else { 5 };
+                        f.fetch_add(tid, d);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut expected = 0i64;
+        for tid in 0..p {
+            for i in 0..per_thread {
+                expected += if (tid + i as usize) % 4 == 0 { -3 } else { 5 };
+            }
+        }
+        assert_eq!(f.read(0), expected as u64);
+    }
+
+    #[test]
+    fn fetch_inc_results_distinct_and_dense() {
+        // All-increment workload: the multiset of returned values must
+        // be exactly {0, 1, ..., N-1} — the classic F&I correctness probe.
+        let p = 6;
+        let per_thread = 3_000usize;
+        let f = Arc::new(AggFunnel::with_config(
+            AggFunnelConfig::new(p).with_aggregators(3),
+        ));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    (0..per_thread).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let n = p * per_thread;
+        assert_eq!(all, (0..n as u64).collect::<Vec<_>>());
+        assert_eq!(f.read(0), n as u64);
+    }
+
+    #[test]
+    fn overflow_path_retires_aggregators() {
+        // Tiny threshold forces constant Aggregator retirement; the
+        // object must stay linearizable throughout.
+        let p = 4;
+        let per_thread = 2_000usize;
+        let f = Arc::new(AggFunnel::with_config(
+            AggFunnelConfig::new(p).with_aggregators(1).with_threshold(64),
+        ));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    (0..per_thread).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let n = p * per_thread;
+        assert_eq!(all, (0..n as u64).collect::<Vec<_>>(), "lost or duplicated a ticket");
+    }
+
+    #[test]
+    fn batch_stats_show_combining_under_concurrency() {
+        let p = 8;
+        let f = Arc::new(AggFunnel::with_config(
+            AggFunnelConfig::new(p).with_aggregators(1),
+        ));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    for _ in 0..2_000 {
+                        f.fetch_add(tid, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = f.batch_stats();
+        assert_eq!(stats.ops, 8 * 2_000);
+        assert!(stats.main_faas <= stats.ops);
+        assert!(stats.main_faas > 0);
+    }
+
+    #[test]
+    fn random_choose_policy_works() {
+        let p = 4;
+        let f = Arc::new(AggFunnel::with_config(
+            AggFunnelConfig::new(p).with_aggregators(3).with_choose(Choose::Random),
+        ));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    (0..2_000).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..(p as u64 * 2_000)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn owned_objects_theta_m() {
+        let f = AggFunnel::new(2);
+        for i in 0..100 {
+            f.fetch_add(0, 1 + i);
+        }
+        // §3.1.2: Θ(m) non-retired objects regardless of history length.
+        assert_eq!(f.debug_owned_objects(), 2 * 2 * 6);
+        let (retired, _freed) = f.debug_ebr_stats();
+        assert!(retired >= 100, "each applied batch retires its predecessor");
+    }
+}

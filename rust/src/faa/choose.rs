@@ -1,0 +1,90 @@
+//! `ChooseAggregator` policies (paper §3.1, Algorithm 2, §4.2, §4.4).
+//!
+//! The proof of linearizability holds for *any* choice of Aggregator,
+//! so the policy is a pure tuning knob. The paper evaluates:
+//!
+//! * a **static, symmetric** assignment — each thread always uses the
+//!   same Aggregator, threads spread so per-Aggregator load differs by
+//!   at most one (used for all main experiments);
+//! * Algorithm 2's **√p grouping** (a static assignment with m = ⌊√p⌋);
+//! * **random** selection per operation (mentioned as an alternative);
+//! * the **asymmetric (m, d)** scheme of §4.4 where `d` high-priority
+//!   threads bypass the funnel via `Fetch&AddDirect`.
+
+/// Aggregator selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Choose {
+    /// Thread `tid` always uses Aggregator `tid % m` (static,
+    /// symmetric, even). The paper's default for AGGFUNNEL-m.
+    StaticEven,
+    /// Uniformly random Aggregator for every operation.
+    Random,
+}
+
+impl Choose {
+    /// Pick an Aggregator index in `0..m`.
+    ///
+    /// `rand` supplies entropy only for `Random` (it is not consulted
+    /// for the static policy, so static callers may pass a dummy).
+    #[inline]
+    pub fn pick(self, tid: usize, m: usize, rand: impl FnOnce() -> u64) -> usize {
+        debug_assert!(m > 0);
+        match self {
+            Choose::StaticEven => tid % m,
+            Choose::Random => (rand() % m as u64) as usize,
+        }
+    }
+}
+
+/// The paper's Algorithm 2: `m = ⌊√p⌋` Aggregators per sign with √p
+/// threads per group. Returns the `m` to build an [`super::AggFunnel`]
+/// with to reproduce that configuration.
+pub fn sqrt_p_aggregators(p: usize) -> usize {
+    ((p as f64).sqrt().floor() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_even_is_balanced() {
+        let m = 6;
+        let p = 176;
+        let mut load = vec![0usize; m];
+        for tid in 0..p {
+            load[Choose::StaticEven.pick(tid, m, || unreachable!())] += 1;
+        }
+        let min = *load.iter().min().unwrap();
+        let max = *load.iter().max().unwrap();
+        assert!(max - min <= 1, "load {load:?} not balanced");
+    }
+
+    #[test]
+    fn static_even_is_stable_per_thread() {
+        let a = Choose::StaticEven.pick(13, 6, || unreachable!());
+        for _ in 0..10 {
+            assert_eq!(Choose::StaticEven.pick(13, 6, || unreachable!()), a);
+        }
+    }
+
+    #[test]
+    fn random_in_range_and_uses_entropy() {
+        let mut i = 0u64;
+        for _ in 0..100 {
+            let v = Choose::Random.pick(0, 7, || {
+                i += 13;
+                i
+            });
+            assert!(v < 7);
+        }
+    }
+
+    #[test]
+    fn sqrt_p_values() {
+        assert_eq!(sqrt_p_aggregators(1), 1);
+        assert_eq!(sqrt_p_aggregators(4), 2);
+        assert_eq!(sqrt_p_aggregators(176), 13);
+        assert_eq!(sqrt_p_aggregators(0), 1);
+    }
+}

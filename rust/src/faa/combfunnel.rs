@@ -1,0 +1,366 @@
+//! Combining Funnels baseline (Shavit & Zemach, JPDC 2000) — the
+//! state-of-the-art software Fetch&Add the paper compares against.
+//!
+//! Structure (faithful to the published design): operations descend
+//! through a series of *combining layers*, each an array of cells.
+//! At every layer a thread swaps a pointer to its announcement node
+//! into a randomly chosen cell, obtaining the node of whichever thread
+//! visited that cell last; it then tries to *capture* that node with a
+//! CAS, adopting its (subtree) sum and carrying it further down. At
+//! the final layer the surviving delegate applies the combined sum to
+//! the central variable with one hardware F&A, then distributes return
+//! values back through the capture tree. The funnel is `⌈log p⌉ − 1`
+//! layers deep with width halving per layer — the best-performing
+//! configuration in the paper's evaluation (§4.3).
+//!
+//! Characteristics the paper highlights (and our benches reproduce):
+//! many shared-variable accesses per operation ⇒ slow at low thread
+//! counts; combining kicks in at high thread counts; high fairness due
+//! to random cell choice.
+
+use std::sync::atomic::{AtomicI64, AtomicPtr, AtomicU32, AtomicU64, Ordering};
+
+use super::{delta_to_u64, BatchStats, FetchAddObject};
+use crate::sync::{Backoff, CachePadded};
+use crate::util::rng::Rng;
+
+/// Node states. FREE nodes may be captured; LOCKED nodes are briefly
+/// uncapturable while their owner mutates them; CAPTURED nodes belong
+/// to another operation's subtree; DONE carries a delivered result.
+const FREE: u32 = 0;
+const LOCKED: u32 = 1;
+const CAPTURED: u32 = 2;
+const DONE: u32 = 3;
+
+/// Per-thread announcement node. Lives for the lifetime of the object
+/// (stale cell pointers may always be dereferenced).
+struct Node {
+    state: AtomicU32,
+    /// Signed sum of this operation's delta plus all captured subtrees.
+    sum: AtomicI64,
+    /// This operation's own delta (distribution needs it separately).
+    delta: AtomicI64,
+    /// Result delivered by the capturer (valid once state == DONE).
+    result: AtomicU64,
+    /// Captured child nodes, in capture order. Owner-only.
+    children: std::cell::UnsafeCell<Vec<*const Node>>,
+}
+
+unsafe impl Sync for Node {}
+
+impl Node {
+    fn new() -> Self {
+        Self {
+            state: AtomicU32::new(LOCKED), // uncapturable until an op starts
+            sum: AtomicI64::new(0),
+            delta: AtomicI64::new(0),
+            result: AtomicU64::new(0),
+            children: std::cell::UnsafeCell::new(Vec::new()),
+        }
+    }
+}
+
+/// Configuration of the funnel geometry.
+#[derive(Clone, Debug)]
+pub struct CombiningFunnelConfig {
+    pub max_threads: usize,
+    /// Number of combining layers (paper-best: ⌈log₂ p⌉ − 1).
+    pub layers: usize,
+    /// Width of the first layer (halved at each deeper layer).
+    pub top_width: usize,
+    /// Spins spent parked at each cell waiting for a collision.
+    pub collision_window: u32,
+    pub seed: u64,
+}
+
+impl CombiningFunnelConfig {
+    /// The paper's best-performing geometry for `p` threads.
+    pub fn new(p: usize) -> Self {
+        let p = p.max(1);
+        let log = (usize::BITS - (p - 1).leading_zeros()).max(1) as usize; // ceil(log2 p)
+        Self {
+            max_threads: p,
+            layers: log.saturating_sub(1).max(1),
+            top_width: (p / 2).max(1),
+            collision_window: 32,
+            seed: 0xC0DE_FA11_C0DE_FA11,
+        }
+    }
+}
+
+/// Combining Funnels Fetch&Add object.
+pub struct CombiningFunnel {
+    main: CachePadded<AtomicU64>,
+    /// `layers[l]` is an array of cells holding node pointers.
+    layers: Vec<Vec<CachePadded<AtomicPtr<Node>>>>,
+    nodes: Vec<CachePadded<Node>>,
+    rngs: Vec<CachePadded<std::cell::UnsafeCell<Rng>>>,
+    cfg: CombiningFunnelConfig,
+    /// F&As applied to `main` (for the batch-size metric).
+    main_faas: CachePadded<AtomicU64>,
+    ops: CachePadded<AtomicU64>,
+}
+
+unsafe impl Send for CombiningFunnel {}
+unsafe impl Sync for CombiningFunnel {}
+
+impl CombiningFunnel {
+    pub fn new(max_threads: usize) -> Self {
+        Self::with_config(CombiningFunnelConfig::new(max_threads))
+    }
+
+    pub fn with_config(cfg: CombiningFunnelConfig) -> Self {
+        let mut layers = Vec::with_capacity(cfg.layers);
+        let mut width = cfg.top_width.max(1);
+        for _ in 0..cfg.layers {
+            layers.push(
+                (0..width).map(|_| CachePadded::new(AtomicPtr::new(std::ptr::null_mut()))).collect(),
+            );
+            width = (width / 2).max(1);
+        }
+        let nodes = (0..cfg.max_threads).map(|_| CachePadded::new(Node::new())).collect();
+        let mut seed = Rng::new(cfg.seed);
+        let rngs = (0..cfg.max_threads)
+            .map(|t| CachePadded::new(std::cell::UnsafeCell::new(seed.fork(t as u64))))
+            .collect();
+        Self {
+            main: CachePadded::new(AtomicU64::new(0)),
+            layers,
+            nodes,
+            rngs,
+            cfg,
+            main_faas: CachePadded::new(AtomicU64::new(0)),
+            ops: CachePadded::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn config(&self) -> &CombiningFunnelConfig {
+        &self.cfg
+    }
+
+    /// Distribute results through `node`'s capture subtree: `node`'s
+    /// own answer is `base`; children get consecutive prefix offsets.
+    fn distribute(node: &Node, base: u64) -> u64 {
+        let mut cur = base.wrapping_add(delta_to_u64(node.delta.load(Ordering::Relaxed)));
+        let children = unsafe { &mut *node.children.get() };
+        for &child_ptr in children.iter() {
+            let child = unsafe { &*child_ptr };
+            child.result.store(cur, Ordering::Relaxed);
+            child.state.store(DONE, Ordering::Release);
+            cur = cur.wrapping_add(child.sum.load(Ordering::Relaxed) as u64);
+        }
+        children.clear();
+        base
+    }
+
+    fn fetch_add_slow(&self, tid: usize, delta: i64) -> u64 {
+        let node = &*self.nodes[tid];
+        let rng = unsafe { &mut *self.rngs[tid].get() };
+
+        // Initialize my announcement and become capturable.
+        unsafe { (*node.children.get()).clear() };
+        node.delta.store(delta, Ordering::Relaxed);
+        node.sum.store(delta, Ordering::Relaxed);
+        node.state.store(FREE, Ordering::Release);
+
+        for layer in &self.layers {
+            // Park my node at a random cell of this layer.
+            let cell = &layer[rng.below(layer.len() as u64) as usize];
+            let prev = cell.swap(node as *const Node as *mut Node, Ordering::AcqRel);
+
+            // Collision window: stay capturable for a moment.
+            for _ in 0..self.cfg.collision_window {
+                if node.state.load(Ordering::Acquire) == CAPTURED {
+                    break;
+                }
+                std::hint::spin_loop();
+            }
+
+            // Lock myself so my subtree sum can't change under a capturer.
+            if node
+                .state
+                .compare_exchange(FREE, LOCKED, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                // I was captured: wait for my result to be delivered,
+                // then deliver to my own children.
+                let mut backoff = Backoff::new();
+                while node.state.load(Ordering::Acquire) != DONE {
+                    backoff.snooze();
+                }
+                let base = node.result.load(Ordering::Relaxed);
+                self.ops.fetch_add(1, Ordering::Relaxed);
+                return Self::distribute(node, base);
+            }
+
+            // Try to combine with the node previously parked here.
+            if !prev.is_null() && !std::ptr::eq(prev, node) {
+                let other = unsafe { &*prev };
+                if other
+                    .state
+                    .compare_exchange(FREE, CAPTURED, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    let captured_sum = other.sum.load(Ordering::Relaxed);
+                    node.sum.fetch_add(captured_sum, Ordering::Relaxed);
+                    unsafe { (*node.children.get()).push(other) };
+                }
+            }
+
+            // Descend: become capturable again for the next layer.
+            node.state.store(FREE, Ordering::Release);
+        }
+
+        // Survived all layers: take myself out of circulation and apply
+        // the combined sum to the central variable.
+        if node
+            .state
+            .compare_exchange(FREE, LOCKED, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            // Captured at the very last moment.
+            let mut backoff = Backoff::new();
+            while node.state.load(Ordering::Acquire) != DONE {
+                backoff.snooze();
+            }
+            let base = node.result.load(Ordering::Relaxed);
+            self.ops.fetch_add(1, Ordering::Relaxed);
+            return Self::distribute(node, base);
+        }
+
+        let sum = node.sum.load(Ordering::Relaxed);
+        let base = self.main.fetch_add(delta_to_u64(sum), Ordering::AcqRel);
+        self.main_faas.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        Self::distribute(node, base)
+    }
+}
+
+impl FetchAddObject for CombiningFunnel {
+    fn fetch_add(&self, tid: usize, delta: i64) -> u64 {
+        if delta == 0 {
+            return self.read(tid);
+        }
+        self.fetch_add_slow(tid, delta)
+    }
+
+    #[inline]
+    fn read(&self, _tid: usize) -> u64 {
+        self.main.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    fn fetch_add_direct(&self, _tid: usize, delta: i64) -> u64 {
+        self.main_faas.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.main.fetch_add(delta_to_u64(delta), Ordering::AcqRel)
+    }
+
+    #[inline]
+    fn compare_and_swap(&self, _tid: usize, old: u64, new: u64) -> u64 {
+        match self.main.compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(prev) => prev,
+            Err(actual) => actual,
+        }
+    }
+
+    #[inline]
+    fn fetch_or(&self, _tid: usize, bits: u64) -> u64 {
+        self.main.fetch_or(bits, Ordering::AcqRel)
+    }
+
+    fn max_threads(&self) -> usize {
+        self.cfg.max_threads
+    }
+
+    fn batch_stats(&self) -> BatchStats {
+        BatchStats {
+            main_faas: self.main_faas.load(Ordering::Relaxed),
+            ops: self.ops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_semantics() {
+        let f = CombiningFunnel::new(1);
+        assert_eq!(f.fetch_add(0, 5), 0);
+        assert_eq!(f.fetch_add(0, -2), 5);
+        assert_eq!(f.read(0), 3);
+        assert_eq!(f.fetch_add(0, 0), 3);
+    }
+
+    #[test]
+    fn geometry_matches_paper_best() {
+        let cfg = CombiningFunnelConfig::new(176);
+        assert_eq!(cfg.layers, 7, "ceil(log2 176) - 1 = 7");
+        let cfg = CombiningFunnelConfig::new(2);
+        assert_eq!(cfg.layers, 1);
+    }
+
+    #[test]
+    fn concurrent_fetch_inc_dense() {
+        let p = 8;
+        let f = Arc::new(CombiningFunnel::new(p));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    (0..2_000).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..(p as u64 * 2_000)).collect::<Vec<_>>());
+        assert_eq!(f.read(0), p as u64 * 2_000);
+    }
+
+    #[test]
+    fn concurrent_mixed_signs_sum_conserved() {
+        let p = 6;
+        let f = Arc::new(CombiningFunnel::new(p));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    for i in 0i64..3_000 {
+                        f.fetch_add(tid, if i % 3 == 0 { -5 } else { 4 });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let per: i64 = (0..3_000).map(|i| if i % 3 == 0 { -5 } else { 4 }).sum();
+        assert_eq!(f.read(0) as i64, 6 * per);
+    }
+
+    #[test]
+    fn combining_happens_under_contention() {
+        let p = 8;
+        let f = Arc::new(CombiningFunnel::new(p));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    for _ in 0..2_000 {
+                        f.fetch_add(tid, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = f.batch_stats();
+        assert_eq!(s.ops, p as u64 * 2_000);
+        assert!(s.main_faas <= s.ops);
+    }
+}

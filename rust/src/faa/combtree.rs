@@ -1,0 +1,221 @@
+//! Flat-combining Fetch&Add — a lock-based combining baseline in the
+//! style the paper cites as prior software combining ([12] Fatourou &
+//! Kallimanis, CC-Synch; Hendler et al.'s flat combining).
+//!
+//! Every thread publishes its delta in a per-thread announcement slot;
+//! whichever thread acquires the combiner lock scans all slots,
+//! applies the *sum* of pending operations to `Main` with a single
+//! hardware F&A, and writes each participant's return value (base +
+//! prefix of earlier deltas in scan order) back into its slot. Threads
+//! that fail to get the lock spin on their own slot.
+//!
+//! Compared with Aggregating Funnels this serializes all combining
+//! through one lock (the paper's critique of single-point combining),
+//! but it combines aggressively — a useful ablation between "hardware
+//! F&A" and "Aggregating Funnels" in our extended benchmarks.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+use super::{delta_to_u64, BatchStats, FetchAddObject};
+use crate::sync::{Backoff, CachePadded};
+
+struct Slot {
+    /// Request sequence: odd = pending request, even = response ready.
+    seq: AtomicU64,
+    delta: AtomicI64,
+    resp: AtomicU64,
+}
+
+/// Flat-combining fetch-and-add object (`CombiningTree` name kept for
+/// the module's role as the tree/lock-based combining baseline slot in
+/// the benchmark matrix).
+pub struct CombiningTree {
+    main: CachePadded<AtomicU64>,
+    lock: CachePadded<AtomicBool>,
+    slots: Vec<CachePadded<Slot>>,
+    main_faas: CachePadded<AtomicU64>,
+    ops: CachePadded<AtomicU64>,
+}
+
+impl CombiningTree {
+    pub fn new(max_threads: usize) -> Self {
+        let slots = (0..max_threads.max(1))
+            .map(|_| {
+                CachePadded::new(Slot {
+                    seq: AtomicU64::new(0),
+                    delta: AtomicI64::new(0),
+                    resp: AtomicU64::new(0),
+                })
+            })
+            .collect();
+        Self {
+            main: CachePadded::new(AtomicU64::new(0)),
+            lock: CachePadded::new(AtomicBool::new(false)),
+            slots,
+            main_faas: CachePadded::new(AtomicU64::new(0)),
+            ops: CachePadded::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn try_lock(&self) -> bool {
+        !self.lock.load(Ordering::Relaxed)
+            && self.lock.compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed).is_ok()
+    }
+
+    /// Serve every pending announcement (including the caller's).
+    fn combine(&self) {
+        // Gather pending requests in slot order.
+        let mut pending: Vec<(usize, u64, i64)> = Vec::with_capacity(self.slots.len());
+        let mut total: i64 = 0;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq % 2 == 1 {
+                let d = slot.delta.load(Ordering::Relaxed);
+                pending.push((i, seq, d));
+                total = total.wrapping_add(d);
+            }
+        }
+        if pending.is_empty() {
+            return;
+        }
+        let base = self.main.fetch_add(delta_to_u64(total), Ordering::AcqRel);
+        self.main_faas.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(pending.len() as u64, Ordering::Relaxed);
+        let mut prefix = base;
+        for (i, seq, d) in pending {
+            let slot = &self.slots[i];
+            slot.resp.store(prefix, Ordering::Relaxed);
+            slot.seq.store(seq + 1, Ordering::Release); // publish response
+            prefix = prefix.wrapping_add(delta_to_u64(d));
+        }
+    }
+}
+
+impl FetchAddObject for CombiningTree {
+    fn fetch_add(&self, tid: usize, delta: i64) -> u64 {
+        if delta == 0 {
+            return self.read(tid);
+        }
+        let slot = &self.slots[tid];
+        // Publish the request: delta first, then flip seq to odd.
+        slot.delta.store(delta, Ordering::Relaxed);
+        let my_seq = slot.seq.load(Ordering::Relaxed) + 1;
+        debug_assert_eq!(my_seq % 2, 1);
+        slot.seq.store(my_seq, Ordering::Release);
+
+        let mut backoff = Backoff::new();
+        loop {
+            // Response ready?
+            if slot.seq.load(Ordering::Acquire) == my_seq + 1 {
+                return slot.resp.load(Ordering::Relaxed);
+            }
+            // Otherwise try to become the combiner.
+            if self.try_lock() {
+                self.combine();
+                self.lock.store(false, Ordering::Release);
+                // Our own request is necessarily served now.
+                debug_assert_eq!(slot.seq.load(Ordering::Acquire), my_seq + 1);
+                return slot.resp.load(Ordering::Relaxed);
+            }
+            backoff.snooze();
+        }
+    }
+
+    #[inline]
+    fn read(&self, _tid: usize) -> u64 {
+        self.main.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    fn fetch_add_direct(&self, _tid: usize, delta: i64) -> u64 {
+        self.main_faas.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.main.fetch_add(delta_to_u64(delta), Ordering::AcqRel)
+    }
+
+    #[inline]
+    fn compare_and_swap(&self, _tid: usize, old: u64, new: u64) -> u64 {
+        match self.main.compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(prev) => prev,
+            Err(actual) => actual,
+        }
+    }
+
+    #[inline]
+    fn fetch_or(&self, _tid: usize, bits: u64) -> u64 {
+        self.main.fetch_or(bits, Ordering::AcqRel)
+    }
+
+    fn max_threads(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn batch_stats(&self) -> BatchStats {
+        BatchStats {
+            main_faas: self.main_faas.load(Ordering::Relaxed),
+            ops: self.ops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_semantics() {
+        let f = CombiningTree::new(1);
+        assert_eq!(f.fetch_add(0, 3), 0);
+        assert_eq!(f.fetch_add(0, -1), 3);
+        assert_eq!(f.read(0), 2);
+    }
+
+    #[test]
+    fn concurrent_fetch_inc_dense() {
+        let p = 8;
+        let f = Arc::new(CombiningTree::new(p));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    (0..2_000).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..(p as u64 * 2_000)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mixed_signs_sum_conserved() {
+        let p = 4;
+        let f = Arc::new(CombiningTree::new(p));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    for i in 0i64..5_000 {
+                        f.fetch_add(tid, if i % 2 == 0 { -2 } else { 3 });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let per: i64 = (0..5_000).map(|i| if i % 2 == 0 { -2 } else { 3 }).sum();
+        assert_eq!(f.read(0) as i64, 4 * per);
+    }
+
+    #[test]
+    fn combining_counts() {
+        let f = CombiningTree::new(2);
+        f.fetch_add(0, 1);
+        f.fetch_add(1, 1);
+        let s = f.batch_stats();
+        assert_eq!(s.ops, 2);
+        assert!(s.main_faas >= 1 && s.main_faas <= 2);
+    }
+}

@@ -1,0 +1,177 @@
+//! The §3.1.2 counter variant: Add/Read only, no Batch objects.
+//!
+//! "For a counter, which supports only Add and Read operations, we can
+//! save space by not using Batch objects at all — if each Aggregator
+//! simply stores the value that would usually be stored in
+//! `last.after`, Add operations can detect when to stop waiting for
+//! their batch to be applied to Main." An `Add` has no return value,
+//! so batches need no per-operation result bookkeeping: the delegate
+//! bumps the Aggregator's `applied` watermark after its F&A on `Main`,
+//! releasing every operation registered below the watermark.
+//!
+//! Allocation-free after construction — the space usage is exactly
+//! Θ(m) words forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::choose::Choose;
+use super::delta_to_u64;
+use crate::sync::{Backoff, CachePadded};
+
+struct CounterAggregator {
+    /// Sum of magnitudes registered at this Aggregator (only grows).
+    value: CachePadded<AtomicU64>,
+    /// Prefix of `value` already transferred to `Main`
+    /// (the role `last.after` plays in the full algorithm).
+    applied: CachePadded<AtomicU64>,
+}
+
+/// A linearizable concurrent counter (Add / Read) built on the
+/// Aggregating Funnels batching scheme without Batch records.
+pub struct AggCounter {
+    main: CachePadded<AtomicU64>,
+    /// m Aggregators for positive deltas then m for negative.
+    agg: Vec<CounterAggregator>,
+    m: usize,
+    choose: Choose,
+    max_threads: usize,
+}
+
+impl AggCounter {
+    pub fn new(max_threads: usize, aggregators: usize) -> Self {
+        let m = aggregators.max(1);
+        let agg = (0..2 * m)
+            .map(|_| CounterAggregator {
+                value: CachePadded::new(AtomicU64::new(0)),
+                applied: CachePadded::new(AtomicU64::new(0)),
+            })
+            .collect();
+        Self {
+            main: CachePadded::new(AtomicU64::new(0)),
+            agg,
+            m,
+            choose: Choose::StaticEven,
+            max_threads: max_threads.max(1),
+        }
+    }
+
+    pub fn max_threads(&self) -> usize {
+        self.max_threads
+    }
+
+    /// Add `delta` to the counter (no return value — that is the whole
+    /// point of the §3.1.2 simplification).
+    pub fn add(&self, tid: usize, delta: i64) {
+        if delta == 0 {
+            return;
+        }
+        let positive = delta > 0;
+        let g = self.choose.pick(tid, self.m, || tid as u64);
+        let a = &self.agg[if positive { g } else { self.m + g }];
+
+        let before = a.value.fetch_add(delta.unsigned_abs(), Ordering::AcqRel);
+        let mut backoff = Backoff::new();
+        loop {
+            let applied = a.applied.load(Ordering::Acquire);
+            if applied > before {
+                return; // my batch reached Main
+            }
+            if applied == before {
+                // I am the delegate: close the batch, apply it to Main,
+                // then raise the watermark to release the batch.
+                let after = a.value.load(Ordering::Acquire);
+                let sum = after.wrapping_sub(before);
+                let add = if positive { sum } else { sum.wrapping_neg() };
+                self.main.fetch_add(add, Ordering::AcqRel);
+                a.applied.store(after, Ordering::Release);
+                return;
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Read the counter (linearizes at the load of `Main`).
+    pub fn read(&self, _tid: usize) -> u64 {
+        self.main.load(Ordering::SeqCst)
+    }
+
+    /// Signed view of the counter value (for counters that stay within
+    /// i64 range).
+    pub fn read_signed(&self, tid: usize) -> i64 {
+        self.read(tid) as i64
+    }
+}
+
+// Keep the delta-folding helper linked into this module's doctests.
+const _: fn(i64) -> u64 = delta_to_u64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_adds() {
+        let c = AggCounter::new(1, 2);
+        c.add(0, 5);
+        c.add(0, -2);
+        c.add(0, 0);
+        assert_eq!(c.read_signed(0), 3);
+    }
+
+    #[test]
+    fn concurrent_sum_conserved() {
+        let p = 8;
+        let c = Arc::new(AggCounter::new(p, 2));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0i64..5_000 {
+                        c.add(tid, if i % 5 == 0 { -4 } else { 1 });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let per_thread: i64 = (0..5_000).map(|i| if i % 5 == 0 { -4 } else { 1 }).sum();
+        assert_eq!(c.read_signed(0), 8 * per_thread);
+    }
+
+    #[test]
+    fn monotone_under_increments() {
+        // With only positive adds, concurrent reads must be monotone.
+        let c = Arc::new(AggCounter::new(4, 1));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let reader = {
+            let c = Arc::clone(&c);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut prev = 0;
+                while !stop.load(Ordering::Relaxed) {
+                    let v = c.read(3);
+                    assert!(v >= prev, "counter went backwards: {prev} -> {v}");
+                    prev = v;
+                }
+            })
+        };
+        let writers: Vec<_> = (0..3)
+            .map(|tid| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..20_000 {
+                        c.add(tid, 1);
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        reader.join().unwrap();
+        assert_eq!(c.read(0), 60_000);
+    }
+}

@@ -1,0 +1,125 @@
+//! Linearizable software fetch-and-add objects.
+//!
+//! The value domain is a 64-bit unsigned integer with wrap-around
+//! (mod 2⁶⁴) semantics, exactly like the hardware `lock xadd`
+//! instruction the paper's `Main` variable relies on. Deltas are
+//! signed; a negative delta wraps, as the paper specifies ("we assume
+//! the arithmetic in line 37 wraps around modulo 2⁶⁴").
+//!
+//! Implementations:
+//!
+//! * [`hardware::HardwareFaa`] — a single atomic word (the baseline the
+//!   paper calls "hardware F&A").
+//! * [`aggfunnel::AggFunnel`] — the paper's Aggregating Funnels
+//!   (Algorithm 1), including overflow handling, `Fetch&AddDirect`,
+//!   `Read`, `Compare&Swap` and `Fetch&Or` (RMWability).
+//! * [`recursive`] — the §3.2 recursive construction (an `AggFunnel`
+//!   whose `Main` is itself an `AggFunnel`).
+//! * [`counter::AggCounter`] — the §3.1.2 Add/Read-only counter that
+//!   needs no Batch objects.
+//! * [`combfunnel::CombiningFunnel`] — the Combining Funnels baseline
+//!   (Shavit & Zemach 2000) the paper compares against.
+//! * [`combtree::CombiningTree`] — the classic software combining tree
+//!   (related-work baseline, used in ablations).
+
+pub mod aggfunnel;
+pub mod choose;
+pub mod combfunnel;
+pub mod combtree;
+pub mod counter;
+pub mod hardware;
+pub mod recursive;
+
+pub use aggfunnel::{AggFunnel, AggFunnelConfig};
+pub use choose::Choose;
+pub use combfunnel::{CombiningFunnel, CombiningFunnelConfig};
+pub use combtree::CombiningTree;
+pub use counter::AggCounter;
+pub use hardware::HardwareFaa;
+pub use recursive::RecursiveAggFunnel;
+
+/// Fold a signed delta into the unsigned wrap-around domain.
+#[inline]
+pub fn delta_to_u64(delta: i64) -> u64 {
+    delta as u64 // two's-complement: wrapping add of this IS adding delta mod 2^64
+}
+
+/// A linearizable 64-bit fetch-and-add object (the paper's object `O`).
+///
+/// Every method takes the caller's thread id `tid`
+/// (`0 <= tid < max_threads()`); each tid must be used by at most one
+/// OS thread at a time. Implementations use it for Aggregator
+/// selection, epoch-based reclamation and per-thread scratch state.
+pub trait FetchAddObject: Send + Sync {
+    /// Atomically add `delta` (mod 2⁶⁴) and return the previous value.
+    fn fetch_add(&self, tid: usize, delta: i64) -> u64;
+
+    /// Return the current value (paper: `Read`, i.e. `Fetch&Add(0)`).
+    fn read(&self, tid: usize) -> u64;
+
+    /// Apply the add directly to `Main`, bypassing any combining — the
+    /// paper's `Fetch&AddDirect` for high-priority threads. For
+    /// implementations without combining this is `fetch_add`.
+    fn fetch_add_direct(&self, tid: usize, delta: i64) -> u64 {
+        self.fetch_add(tid, delta)
+    }
+
+    /// RMWability (§3, "Our implementation is RMWable"): hardware
+    /// compare-and-swap applied to the object. Returns the witnessed
+    /// value (equal to `old` iff the CAS succeeded).
+    fn compare_and_swap(&self, tid: usize, old: u64, new: u64) -> u64;
+
+    /// RMWability: atomic OR applied to the object; returns the prior
+    /// value. (LCRQ uses this to set the ring-closed bit.)
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64;
+
+    /// Upper bound on thread ids this object was built for.
+    fn max_threads(&self) -> usize;
+
+    /// Implementation-specific statistics for the benchmark harness:
+    /// `(batches_applied, ops_batched)`, used to derive the paper's
+    /// *average batch size* metric (§4.1). Non-combining
+    /// implementations report every op as its own batch.
+    fn batch_stats(&self) -> BatchStats {
+        BatchStats::default()
+    }
+}
+
+/// Counters backing the paper's "average batch size" metric.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Number of F&A instructions applied to `Main` (batches plus
+    /// direct operations).
+    pub main_faas: u64,
+    /// Number of `Fetch&Add` operations those F&As accomplished.
+    pub ops: u64,
+}
+
+impl BatchStats {
+    pub fn avg_batch_size(&self) -> f64 {
+        if self.main_faas == 0 {
+            0.0
+        } else {
+            self.ops as f64 / self.main_faas as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_folding_wraps() {
+        assert_eq!(delta_to_u64(5), 5);
+        assert_eq!(0u64.wrapping_add(delta_to_u64(-1)), u64::MAX);
+        assert_eq!(10u64.wrapping_add(delta_to_u64(-3)), 7);
+    }
+
+    #[test]
+    fn batch_stats_avg() {
+        let s = BatchStats { main_faas: 4, ops: 10 };
+        assert!((s.avg_batch_size() - 2.5).abs() < 1e-12);
+        assert_eq!(BatchStats::default().avg_batch_size(), 0.0);
+    }
+}

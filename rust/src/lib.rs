@@ -1,0 +1,45 @@
+//! # Aggregating Funnels
+//!
+//! A from-scratch reproduction of *"Aggregating Funnels for Faster
+//! Fetch&Add and Queues"* (Roh, Fatourou, Wei, Jayanti, Ruppert, Shun).
+//!
+//! The crate provides:
+//!
+//! * [`faa`] — linearizable software `Fetch&Add` objects: the paper's
+//!   **Aggregating Funnels** (Algorithm 1, including the overflow/retire
+//!   path, `Fetch&AddDirect` and RMWability), the recursive construction
+//!   (§3.2), the Add/Read-only counter variant (§3.1.2), plus the
+//!   baselines it is evaluated against (hardware F&A, Combining
+//!   Funnels, combining trees).
+//! * [`queue`] — the LCRQ family of concurrent FIFO queues with the
+//!   fetch-and-add objects pluggable (LCRQ, LPRQ, LSCQ, MS-queue),
+//!   reproducing the paper's §4.5 queue benchmark.
+//! * [`ebr`] — epoch-based memory reclamation (the paper's §3.1.2
+//!   memory-management substrate).
+//! * [`sim`] — a deterministic discrete-event multicore simulator
+//!   (cache-line ownership + contention queueing + NUMA sockets) used to
+//!   regenerate the paper's 176-thread figures on any host, plus
+//!   simulator ports of every algorithm.
+//! * [`bench`] — the workload generator, sweep driver and figure
+//!   emitters for every figure in the paper's evaluation (Figs. 3–6).
+//! * [`runtime`] / [`verify`] — the PJRT runtime that loads the
+//!   AOT-compiled JAX/Pallas linearization oracle
+//!   (`artifacts/*.hlo.txt`) and the history verifier built on it.
+//! * [`service`] — a thread-pooled ticket-dispenser server whose hot
+//!   path is an Aggregating Funnel (the "deployable system" wrapper).
+//! * [`config`] / [`util`] — hand-rolled substrates (TOML-subset
+//!   config, CLI parsing, PRNG, stats, JSON, timing harness, property
+//!   testing). The build is fully offline; the only external
+//!   dependencies are `xla` and `anyhow`.
+
+pub mod bench;
+pub mod config;
+pub mod ebr;
+pub mod faa;
+pub mod queue;
+pub mod runtime;
+pub mod service;
+pub mod sim;
+pub mod verify;
+pub mod sync;
+pub mod util;

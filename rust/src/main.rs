@@ -1,0 +1,356 @@
+//! `aggfunnels` — the command-line launcher.
+//!
+//! Subcommands:
+//!
+//! * `figures [fig3|fig4|fig5|fig6|all]` — regenerate the paper's
+//!   figures on the contention simulator; TSV into `results/`.
+//! * `sim` — one simulated Fetch&Add sweep with explicit parameters.
+//! * `bench-faa` / `bench-queue` — native-thread throughput on this
+//!   host.
+//! * `verify` — record a concurrent run and check it against the
+//!   linearization oracle (AOT JAX/Pallas artifact via PJRT, or the
+//!   CPU reference with `--cpu-oracle`).
+//! * `predict` — evaluate the AOT analytic contention model.
+//! * `serve` / `take` — the ticket service and a demo client.
+
+use std::time::Duration;
+
+use aggfunnels::bench::figures::{run_group, SweepOpts, FIGURE_GROUPS};
+use aggfunnels::bench::native::{
+    make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
+};
+use aggfunnels::bench::{rows_to_table, rows_to_tsv};
+use aggfunnels::config::AppConfig;
+use aggfunnels::faa::choose::sqrt_p_aggregators;
+use aggfunnels::runtime::{ContentionRuntime, OracleRuntime};
+use aggfunnels::service::{serve, ServeOpts, TicketClient};
+use aggfunnels::sim::algos::AlgoSpec;
+use aggfunnels::sim::workloads::{run_faa_point, FaaWorkload};
+use aggfunnels::util::cli::{Cli, Parsed};
+use aggfunnels::util::parse_int_list;
+use aggfunnels::verify::{verify_faa_run, OracleBackend};
+use anyhow::{anyhow, bail, Result};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "figures" => cmd_figures(rest),
+        "sim" => cmd_sim(rest),
+        "bench-faa" => cmd_bench_faa(rest),
+        "bench-queue" => cmd_bench_queue(rest),
+        "verify" => cmd_verify(rest),
+        "predict" => cmd_predict(rest),
+        "serve" => cmd_serve(rest),
+        "take" => cmd_take(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}\n");
+        print_usage();
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "aggfunnels — Aggregating Funnels reproduction\n\n\
+         Usage: aggfunnels <subcommand> [options]\n\n\
+         Subcommands:\n  \
+         figures [group|all] [--quick] [--grid L] [--horizon N] [--out DIR]\n  \
+         sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
+         bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
+         bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
+         verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
+         predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
+         serve [--addr A] [--workers W] [--m M]\n  \
+         take [--addr A] [--count N] [--priority] [--stats]\n\n\
+         FAA algos:  {FAA_ALGOS:?}\n\
+         Queues:     {QUEUE_ALGOS:?}\n\
+         Global: --config FILE applies configs/*.toml settings."
+    );
+}
+
+fn load_config(p: &Parsed) -> Result<AppConfig> {
+    AppConfig::load(p.get("config").map(std::path::Path::new))
+}
+
+fn grid_from(p: &Parsed, default: &[usize]) -> Result<Vec<usize>> {
+    match p.get("grid").or_else(|| p.get("threads")) {
+        Some(s) => parse_int_list(s).ok_or_else(|| anyhow!("bad thread list {s:?}")),
+        None => Ok(default.to_vec()),
+    }
+}
+
+fn cmd_figures(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels figures", "regenerate the paper's figures (simulated)")
+        .opt("config", None, "TOML config file")
+        .opt("grid", None, "thread counts, e.g. 1,2,4:8,16")
+        .opt("horizon", None, "virtual cycles per point")
+        .opt("out", Some("results"), "output directory for TSV")
+        .opt("seed", None, "simulation seed")
+        .flag("quick", "tiny grid/horizon smoke run");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let cfg = load_config(&p)?;
+
+    let mut opts = if p.has_flag("quick") { SweepOpts::quick() } else { SweepOpts::default() };
+    if !p.has_flag("quick") {
+        opts.grid = cfg.bench.grid.clone();
+        opts.horizon = cfg.sim.horizon_cycles;
+    }
+    if let Some(g) = p.get("grid") {
+        opts.grid = parse_int_list(g).ok_or_else(|| anyhow!("bad grid {g:?}"))?;
+    }
+    if let Some(h) = p.parse_as::<u64>("horizon") {
+        opts.horizon = h;
+    }
+    if let Some(s) = p.parse_as::<u64>("seed") {
+        opts.seed = s;
+    }
+
+    let groups: Vec<String> = match p.positional.first().map(String::as_str) {
+        None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
+        Some(g) => vec![g.to_string()],
+    };
+    let out_dir = std::path::PathBuf::from(p.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    for g in groups {
+        let t0 = std::time::Instant::now();
+        let rows = run_group(&g, &opts).ok_or_else(|| anyhow!("unknown figure group {g:?}"))?;
+        let name = if g.starts_with("fig") {
+            g.clone()
+        } else {
+            format!("fig{}", &g[..1])
+        };
+        let path = out_dir.join(format!("{name}.tsv"));
+        std::fs::write(&path, rows_to_tsv(&rows))?;
+        let mut figures: Vec<&str> = rows.iter().map(|r| r.figure).collect();
+        figures.sort_unstable();
+        figures.dedup();
+        println!(
+            "== {name}: {} rows -> {} ({:.1}s) ==",
+            rows.len(),
+            path.display(),
+            t0.elapsed().as_secs_f64()
+        );
+        for fig in figures {
+            let sub: Vec<_> = rows.iter().filter(|r| r.figure == fig).cloned().collect();
+            let metric = sub[0].metric;
+            println!("-- Figure {fig} ({metric}) --\n{}", rows_to_table(&sub, metric));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels sim", "one simulated Fetch&Add sweep")
+        .opt("config", None, "TOML config file")
+        .opt("algo", Some("aggfunnel"), "hw | aggfunnel | aggfunnel-sqrtp | rec-aggfunnel | combfunnel")
+        .opt("threads", Some("1,8,32,96,176"), "thread counts")
+        .opt("m", Some("6"), "aggregators per sign")
+        .opt("direct", Some("0"), "high-priority direct threads")
+        .opt("faa-ratio", Some("0.9"), "fraction of ops that are F&A")
+        .opt("work", Some("512"), "mean local work (cycles)")
+        .opt("horizon", None, "virtual cycles per point")
+        .flag("sticky", "owner-sticky line arbitration (Fig. 4b fairness ablation)");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let mut cfg = load_config(&p)?;
+    if p.has_flag("sticky") {
+        cfg.sim.owner_sticky = true;
+    }
+    let grid = grid_from(&p, &[1, 8, 32, 96, 176])?;
+    let m: usize = p.parse_or("m", 6);
+    let direct: usize = p.parse_or("direct", 0);
+    let wl = FaaWorkload::update_heavy()
+        .with_faa_ratio(p.parse_or("faa-ratio", 0.9))
+        .with_work_mean(p.parse_or("work", 512.0));
+    println!(
+        "{:<24} {:>8} {:>10} {:>10} {:>10} {:>12}",
+        "algo", "threads", "Mops/s", "fairness", "avgbatch", "sim-events"
+    );
+    for threads in grid {
+        let mut sim_cfg = cfg.sim.to_sim_config(threads);
+        if let Some(h) = p.parse_as::<u64>("horizon") {
+            sim_cfg.horizon_cycles = h;
+        }
+        let spec = match p.get_or("algo", "aggfunnel") {
+            "hw" => AlgoSpec::Hw,
+            "aggfunnel" => AlgoSpec::Agg { m, direct },
+            "aggfunnel-sqrtp" => AlgoSpec::Agg { m: sqrt_p_aggregators(threads), direct },
+            "rec-aggfunnel" => {
+                AlgoSpec::RecAgg { outer_m: threads.div_ceil(6).max(1), inner_m: 6 }
+            }
+            "combfunnel" => AlgoSpec::Comb,
+            other => bail!("unknown algo {other:?}"),
+        };
+        let pt = run_faa_point(&sim_cfg, &spec, &wl);
+        println!(
+            "{:<24} {:>8} {:>10.2} {:>10.3} {:>10.2} {:>12}",
+            pt.algo, pt.threads, pt.mops, pt.fairness, pt.avg_batch, pt.sim_events
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_faa(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels bench-faa", "native Fetch&Add throughput on this host")
+        .opt("config", None, "TOML config file")
+        .opt("algo", Some("aggfunnel"), "see `aggfunnels help` for the list")
+        .opt("threads", Some("1,2,4,8"), "thread counts")
+        .opt("m", Some("6"), "aggregators per sign")
+        .opt("faa-ratio", Some("0.9"), "fraction of F&A ops")
+        .opt("work", Some("512"), "mean local work (cycles)")
+        .opt("ms", Some("500"), "milliseconds per point");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let _ = load_config(&p)?;
+    let grid = grid_from(&p, &[1, 2, 4, 8])?;
+    let algo = p.get_or("algo", "aggfunnel").to_string();
+    let m: usize = p.parse_or("m", 6);
+    println!(
+        "{:<18} {:>8} {:>10} {:>10} {:>10}",
+        "algo", "threads", "Mops/s", "fairness", "avgbatch"
+    );
+    for threads in grid {
+        let faa = make_faa(&algo, threads, m).ok_or_else(|| anyhow!("unknown algo {algo:?}"))?;
+        let pt = run_native_faa(
+            faa,
+            &algo,
+            threads,
+            p.parse_or("faa-ratio", 0.9),
+            p.parse_or("work", 512.0),
+            Duration::from_millis(p.parse_or("ms", 500)),
+        );
+        println!(
+            "{:<18} {:>8} {:>10.2} {:>10.3} {:>10.2}",
+            pt.algo, pt.threads, pt.mops, pt.fairness, pt.avg_batch
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_queue(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels bench-queue", "native queue throughput on this host")
+        .opt("config", None, "TOML config file")
+        .opt("algo", Some("lcrq+aggfunnel"), "see `aggfunnels help` for the list")
+        .opt("threads", Some("1,2,4,8"), "thread counts")
+        .opt("work", Some("512"), "mean local work (cycles)")
+        .opt("ms", Some("500"), "milliseconds per point");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let _ = load_config(&p)?;
+    let grid = grid_from(&p, &[1, 2, 4, 8])?;
+    let algo = p.get_or("algo", "lcrq+aggfunnel").to_string();
+    println!("{:<18} {:>8} {:>10} {:>10}", "queue", "threads", "Mops/s", "fairness");
+    for threads in grid {
+        let q = make_queue(&algo, threads).ok_or_else(|| anyhow!("unknown queue {algo:?}"))?;
+        let pt = run_native_queue(
+            q,
+            &algo,
+            threads,
+            p.parse_or("work", 512.0),
+            Duration::from_millis(p.parse_or("ms", 500)),
+        );
+        println!("{:<18} {:>8} {:>10.2} {:>10.3}", pt.algo, pt.threads, pt.mops, pt.fairness);
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels verify", "verify a recorded run against the oracle")
+        .opt("threads", Some("8"), "worker threads")
+        .opt("m", Some("3"), "aggregators per sign")
+        .opt("ops", Some("20000"), "operations per thread")
+        .opt("seed", Some("42"), "workload seed")
+        .flag("cpu-oracle", "use the CPU reference instead of the PJRT artifact");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let backend = if p.has_flag("cpu-oracle") {
+        OracleBackend::Cpu
+    } else {
+        let rt = OracleRuntime::load_default()?;
+        println!("oracle artifacts loaded (platform {}, sizes {:?})", rt.platform(), rt.sizes());
+        OracleBackend::Pjrt(rt)
+    };
+    let report = verify_faa_run(
+        p.parse_or("threads", 8),
+        p.parse_or("m", 3),
+        p.parse_or("ops", 20_000),
+        p.parse_or("seed", 42),
+        &backend,
+    )?;
+    println!(
+        "VERIFIED: {} ops in {} batches (avg batch {:.2}) across {} threads against {}",
+        report.ops, report.batches, report.avg_batch, report.threads, report.checked_against
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels predict", "evaluate the AOT analytic contention model")
+        .opt("grid", Some("1,2,4,8,16,32,48,64,96,128,176"), "thread counts")
+        .opt("work", Some("512"), "mean local work (cycles)")
+        .opt("faa-ratio", Some("0.9"), "fraction of F&A ops")
+        .opt("m", Some("6"), "aggregators per sign");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let rt = ContentionRuntime::load_default()?;
+    let grid = grid_from(&p, &[1, 8, 32, 96, 176])?;
+    let pred = rt.predict(
+        &grid,
+        p.parse_or("work", 512.0),
+        p.parse_or("faa-ratio", 0.9),
+        p.parse_or("m", 6),
+    )?;
+    println!("{:>8} {:>14} {:>18}", "threads", "hw (Mops/s)", "aggfunnel (Mops/s)");
+    for i in 0..pred.threads.len() {
+        println!(
+            "{:>8} {:>14.2} {:>18.2}",
+            pred.threads[i] as usize, pred.hw_mops[i], pred.agg_mops[i]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels serve", "run the ticket service")
+        .opt("config", None, "TOML config file")
+        .opt("addr", None, "listen address")
+        .opt("workers", None, "worker threads")
+        .opt("m", None, "aggregators per sign");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let cfg = load_config(&p)?;
+    let opts = ServeOpts {
+        addr: p.get_or("addr", &cfg.service.addr).to_string(),
+        workers: p.parse_or("workers", cfg.service.workers),
+        aggregators: p.parse_or("m", cfg.service.aggregators),
+    };
+    let handle = serve(&opts)?;
+    println!("ticket service on {} ({} workers); Ctrl-C to stop", handle.addr, opts.workers);
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_take(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels take", "take tickets from a running service")
+        .opt("addr", Some("127.0.0.1:7471"), "service address")
+        .opt("count", Some("1"), "tickets to take")
+        .flag("priority", "use the Fetch&AddDirect fast path")
+        .flag("stats", "also print server stats");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    let count: u64 = p.parse_or("count", 1);
+    let start = client.take(count, p.has_flag("priority"))?;
+    println!("tickets [{start}, {})", start + count);
+    if p.has_flag("stats") {
+        println!("{}", client.stats()?.to_string());
+    }
+    Ok(())
+}

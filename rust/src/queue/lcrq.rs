@@ -1,0 +1,578 @@
+//! LCRQ — Linked Concurrent Ring Queue (Morrison & Afek, PPoPP 2013),
+//! generic over the fetch-and-add object driving the ring indices.
+//!
+//! A CRQ is a ring of `R` cells plus `Head`/`Tail` indices bumped with
+//! fetch-and-add. Each cell packs `(safe bit, index)` and a value into
+//! 16 bytes updated with double-width CAS. An enqueuer claims slot
+//! `t = F&A(Tail)` and tries to install its item at `ring[t mod R]`;
+//! a dequeuer claims `h = F&A(Head)` and tries to take the item with
+//! matching index. When a ring fills or starves, it is *closed* (a bit
+//! in `Tail`) and a fresh CRQ is linked behind it — the "L" of LCRQ.
+//!
+//! **The paper's experiment** (§4.5): `Head`/`Tail` of the *active*
+//! ring are exactly the F&A hot spots, so we make them pluggable
+//! ([`IndexFactory`]): `Lcrq<HwIndexFactory>` is stock LCRQ;
+//! `Lcrq<AggIndexFactory>` is "LCRQ + Aggregating Funnels";
+//! `Lcrq<CombIndexFactory>` is "LCRQ + Combining Funnels". Closing
+//! uses `fetch_or` on the index object — supported by all three since
+//! Aggregating Funnels are RMWable (any primitive applies to `Main`).
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+use super::{ConcurrentQueue, EMPTY_ITEM};
+use crate::ebr;
+use crate::faa::aggfunnel::{AggFunnel, AggFunnelConfig};
+use crate::faa::combfunnel::{CombiningFunnel, CombiningFunnelConfig};
+use crate::faa::FetchAddObject;
+use crate::sync::{atomic128, AtomicU128, Backoff, CachePadded};
+
+/// Closed bit in `Tail` (bit 63).
+const CLOSED: u64 = 1 << 63;
+/// Safe bit within a cell's index word (bit 63).
+const SAFE: u64 = 1 << 63;
+const IDX_MASK: u64 = !SAFE;
+
+/// A 64-bit fetch-and-add cell used for a ring's `Head` or `Tail`.
+pub trait IndexCell: Send + Sync + 'static {
+    fn faa(&self, tid: usize, add: u64) -> u64;
+    fn load(&self, tid: usize) -> u64;
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64;
+    /// CAS returning the witnessed value (used by `fixState`).
+    fn cas(&self, tid: usize, old: u64, new: u64) -> u64;
+}
+
+/// Builds fresh index cells — one pair per CRQ ring.
+pub trait IndexFactory: Send + Sync + 'static {
+    type Cell: IndexCell;
+    fn make(&self, initial: u64) -> Self::Cell;
+    /// Short label for benchmark output ("hw", "aggfunnel", ...).
+    fn label(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------
+// Index cell implementations
+// ---------------------------------------------------------------------
+
+/// Hardware F&A index (stock LCRQ).
+pub struct HwIndex(CachePadded<AtomicU64>);
+
+impl IndexCell for HwIndex {
+    #[inline]
+    fn faa(&self, _tid: usize, add: u64) -> u64 {
+        self.0.fetch_add(add, Ordering::AcqRel)
+    }
+
+    #[inline]
+    fn load(&self, _tid: usize) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    fn fetch_or(&self, _tid: usize, bits: u64) -> u64 {
+        self.0.fetch_or(bits, Ordering::AcqRel)
+    }
+
+    #[inline]
+    fn cas(&self, _tid: usize, old: u64, new: u64) -> u64 {
+        match self.0.compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(p) => p,
+            Err(a) => a,
+        }
+    }
+}
+
+/// Factory for stock-LCRQ hardware indices.
+#[derive(Clone, Default)]
+pub struct HwIndexFactory;
+
+impl IndexFactory for HwIndexFactory {
+    type Cell = HwIndex;
+
+    fn make(&self, initial: u64) -> HwIndex {
+        HwIndex(CachePadded::new(AtomicU64::new(initial)))
+    }
+
+    fn label(&self) -> &'static str {
+        "hw"
+    }
+}
+
+/// Aggregating-Funnels index: the paper's modification. Ring indices
+/// only ever grow by +1, so only the positive Aggregators are used.
+pub struct AggIndex(AggFunnel);
+
+impl IndexCell for AggIndex {
+    #[inline]
+    fn faa(&self, tid: usize, add: u64) -> u64 {
+        self.0.fetch_add(tid, add as i64)
+    }
+
+    #[inline]
+    fn load(&self, tid: usize) -> u64 {
+        self.0.read(tid)
+    }
+
+    #[inline]
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64 {
+        self.0.fetch_or(tid, bits)
+    }
+
+    #[inline]
+    fn cas(&self, tid: usize, old: u64, new: u64) -> u64 {
+        self.0.compare_and_swap(tid, old, new)
+    }
+}
+
+/// Factory for Aggregating-Funnels ring indices (AGGFUNNEL-m).
+#[derive(Clone)]
+pub struct AggIndexFactory {
+    pub max_threads: usize,
+    pub aggregators: usize,
+}
+
+impl AggIndexFactory {
+    pub fn new(max_threads: usize) -> Self {
+        Self { max_threads, aggregators: 6 } // the paper's default m
+    }
+}
+
+impl IndexFactory for AggIndexFactory {
+    type Cell = AggIndex;
+
+    fn make(&self, initial: u64) -> AggIndex {
+        let cfg = AggFunnelConfig::new(self.max_threads).with_aggregators(self.aggregators);
+        let f = AggFunnel::with_config(cfg);
+        if initial != 0 {
+            f.fetch_add_direct(0, initial as i64);
+        }
+        AggIndex(f)
+    }
+
+    fn label(&self) -> &'static str {
+        "aggfunnel"
+    }
+}
+
+/// Combining-Funnels index (the baseline replacement in Fig. 6).
+pub struct CombIndex(CombiningFunnel);
+
+impl IndexCell for CombIndex {
+    #[inline]
+    fn faa(&self, tid: usize, add: u64) -> u64 {
+        self.0.fetch_add(tid, add as i64)
+    }
+
+    #[inline]
+    fn load(&self, tid: usize) -> u64 {
+        self.0.read(tid)
+    }
+
+    #[inline]
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64 {
+        self.0.fetch_or(tid, bits)
+    }
+
+    #[inline]
+    fn cas(&self, tid: usize, old: u64, new: u64) -> u64 {
+        self.0.compare_and_swap(tid, old, new)
+    }
+}
+
+/// Factory for Combining-Funnels ring indices.
+#[derive(Clone)]
+pub struct CombIndexFactory {
+    pub max_threads: usize,
+}
+
+impl IndexFactory for CombIndexFactory {
+    type Cell = CombIndex;
+
+    fn make(&self, initial: u64) -> CombIndex {
+        let f = CombiningFunnel::with_config(CombiningFunnelConfig::new(self.max_threads));
+        if initial != 0 {
+            f.fetch_add_direct(0, initial as i64);
+        }
+        CombIndex(f)
+    }
+
+    fn label(&self) -> &'static str {
+        "combfunnel"
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRQ ring
+// ---------------------------------------------------------------------
+
+/// Pack a cell: low word = (safe|idx), high word = value.
+#[inline]
+fn cell(safe_idx: u64, val: u64) -> u128 {
+    atomic128::pack(safe_idx, val)
+}
+
+struct Crq<F: IndexFactory> {
+    head: F::Cell,
+    tail: F::Cell, // bit 63 = closed
+    next: CachePadded<AtomicPtr<Crq<F>>>,
+    ring: Vec<AtomicU128>,
+    order: u32, // log2(ring size)
+}
+
+unsafe impl<F: IndexFactory> Send for Crq<F> {}
+unsafe impl<F: IndexFactory> Sync for Crq<F> {}
+
+impl<F: IndexFactory> Crq<F> {
+    /// Fresh ring; `first` optionally pre-enqueues one item at slot 0
+    /// (used when linking a new ring during enqueue).
+    fn new(factory: &F, order: u32, first: Option<u64>) -> Box<Self> {
+        let size = 1usize << order;
+        let ring: Vec<AtomicU128> = (0..size)
+            .map(|i| AtomicU128::new(cell(SAFE | i as u64, EMPTY_ITEM)))
+            .collect();
+        let (tail0, head0) = match first {
+            Some(x) => {
+                ring[0].store(cell(SAFE, x));
+                (1, 0)
+            }
+            None => (0, 0),
+        };
+        Box::new(Crq {
+            head: factory.make(head0),
+            tail: factory.make(tail0),
+            next: CachePadded::new(AtomicPtr::new(std::ptr::null_mut())),
+            ring,
+            order,
+        })
+    }
+
+    #[inline]
+    fn size(&self) -> u64 {
+        1u64 << self.order
+    }
+
+    #[inline]
+    fn mask(&self) -> u64 {
+        self.size() - 1
+    }
+
+    /// Attempt to enqueue on this ring. `Err(())` means the ring is
+    /// closed and a new ring must be linked.
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), ()> {
+        debug_assert_ne!(item, EMPTY_ITEM);
+        let mut attempts = 0u32;
+        loop {
+            let t_raw = self.tail.faa(tid, 1);
+            if t_raw & CLOSED != 0 {
+                return Err(());
+            }
+            let t = t_raw;
+            let slot = &self.ring[(t & self.mask()) as usize];
+            let cur = slot.load();
+            let (safe_idx, val) = atomic128::unpack(cur);
+            let idx = safe_idx & IDX_MASK;
+            let safe = safe_idx & SAFE != 0;
+            if val == EMPTY_ITEM
+                && idx <= t
+                && (safe || self.head.load(tid) <= t)
+                && slot.compare_exchange(cell(safe_idx, EMPTY_ITEM), cell(SAFE | t, item)).is_ok()
+            {
+                return Ok(());
+            }
+            // Failed: ring full or we're starving → close it.
+            attempts += 1;
+            let h = self.head.load(tid);
+            if t.wrapping_sub(h) >= self.size() || attempts > 16 {
+                self.tail.fetch_or(tid, CLOSED);
+                return Err(());
+            }
+        }
+    }
+
+    /// Attempt to dequeue. `Err(())` means empty (possibly closed).
+    fn dequeue(&self, tid: usize) -> Result<u64, ()> {
+        loop {
+            let h = self.head.faa(tid, 1);
+            let slot = &self.ring[(h & self.mask()) as usize];
+            let mut backoff = Backoff::new();
+            loop {
+                let cur = slot.load();
+                let (safe_idx, val) = atomic128::unpack(cur);
+                let idx = safe_idx & IDX_MASK;
+                let _safe = safe_idx & SAFE != 0;
+                if idx > h {
+                    break; // our round was skipped
+                }
+                if val != EMPTY_ITEM {
+                    if idx == h {
+                        // Transition: consume, advancing idx by ring size.
+                        if slot
+                            .compare_exchange(
+                                cur,
+                                cell((safe_idx & SAFE) | (h + self.size()), EMPTY_ITEM),
+                            )
+                            .is_ok()
+                        {
+                            return Ok(val);
+                        }
+                    } else {
+                        // Old item (idx < h): mark unsafe so its slow
+                        // enqueuer cannot be wrongly dequeued later.
+                        if slot.compare_exchange(cur, cell(idx, val)).is_ok() {
+                            break;
+                        }
+                    }
+                } else {
+                    // Empty: advance idx so the enqueuer of round h
+                    // cannot install after we give up.
+                    if slot
+                        .compare_exchange(cur, cell((safe_idx & SAFE) | (h + self.size()), EMPTY_ITEM))
+                        .is_ok()
+                    {
+                        break;
+                    }
+                }
+                backoff.spin();
+            }
+            // Empty check (paper: if Tail ≤ h + 1, the queue is empty).
+            let t = self.tail.load(tid) & !CLOSED;
+            if t <= h + 1 {
+                self.fix_state(tid);
+                return Err(());
+            }
+        }
+    }
+
+    /// fixState(): if dequeuers overtook the tail, push Tail up to
+    /// Head so future enqueues use fresh slots.
+    fn fix_state(&self, tid: usize) {
+        loop {
+            let t_raw = self.tail.load(tid);
+            let h = self.head.load(tid);
+            if h <= (t_raw & !CLOSED) {
+                return; // consistent
+            }
+            let new = (t_raw & CLOSED) | h;
+            if self.tail.cas(tid, t_raw, new) == t_raw {
+                return;
+            }
+        }
+    }
+
+    /// Is this ring both closed and drained? (Used only by tests.)
+    #[cfg(test)]
+    fn is_closed(&self, tid: usize) -> bool {
+        self.tail.load(tid) & CLOSED != 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// LCRQ: linked list of CRQs
+// ---------------------------------------------------------------------
+
+/// LCRQ over index factory `F`. Ring size is `2^ring_order`
+/// (paper artifact default: 2^12).
+pub struct Lcrq<F: IndexFactory> {
+    head: CachePadded<AtomicPtr<Crq<F>>>,
+    tail: CachePadded<AtomicPtr<Crq<F>>>,
+    factory: F,
+    ring_order: u32,
+    max_threads: usize,
+    ebr: ebr::Domain,
+}
+
+unsafe impl<F: IndexFactory> Send for Lcrq<F> {}
+unsafe impl<F: IndexFactory> Sync for Lcrq<F> {}
+
+impl<F: IndexFactory> Lcrq<F> {
+    pub fn new(max_threads: usize, factory: F) -> Self {
+        Self::with_ring_order(max_threads, factory, 12)
+    }
+
+    pub fn with_ring_order(max_threads: usize, factory: F, ring_order: u32) -> Self {
+        let first = Box::into_raw(Crq::new(&factory, ring_order, None));
+        Self {
+            head: CachePadded::new(AtomicPtr::new(first)),
+            tail: CachePadded::new(AtomicPtr::new(first)),
+            factory,
+            ring_order,
+            max_threads: max_threads.max(1),
+            ebr: ebr::Domain::new(max_threads.max(1)),
+        }
+    }
+
+    pub fn index_label(&self) -> &'static str {
+        self.factory.label()
+    }
+}
+
+impl<F: IndexFactory> ConcurrentQueue for Lcrq<F> {
+    fn enqueue(&self, tid: usize, item: u64) {
+        debug_assert_ne!(item, EMPTY_ITEM);
+        let _guard = self.ebr.pin(tid);
+        loop {
+            let crq_ptr = self.tail.load(Ordering::Acquire);
+            let crq = unsafe { &*crq_ptr };
+            // Help advance a lagging tail pointer.
+            let next = crq.next.load(Ordering::Acquire);
+            if !next.is_null() {
+                let _ = self.tail.compare_exchange(
+                    crq_ptr,
+                    next,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
+                continue;
+            }
+            if crq.enqueue(tid, item).is_ok() {
+                return;
+            }
+            // Ring closed: link a fresh ring carrying our item.
+            let fresh = Box::into_raw(Crq::new(&self.factory, self.ring_order, Some(item)));
+            match crq.next.compare_exchange(
+                std::ptr::null_mut(),
+                fresh,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    let _ = self.tail.compare_exchange(
+                        crq_ptr,
+                        fresh,
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    );
+                    return;
+                }
+                Err(_) => {
+                    // Someone else linked first; free ours and retry.
+                    drop(unsafe { Box::from_raw(fresh) });
+                }
+            }
+        }
+    }
+
+    fn dequeue(&self, tid: usize) -> Option<u64> {
+        let _guard = self.ebr.pin(tid);
+        loop {
+            let crq_ptr = self.head.load(Ordering::Acquire);
+            let crq = unsafe { &*crq_ptr };
+            if let Ok(v) = crq.dequeue(tid) {
+                return Some(v);
+            }
+            // Ring observed empty. If there is no successor, the queue
+            // is empty; otherwise retire this ring and advance.
+            let next = crq.next.load(Ordering::Acquire);
+            if next.is_null() {
+                return None;
+            }
+            // Second chance: items may have landed between our failed
+            // dequeue and the next check (paper's recheck).
+            if let Ok(v) = crq.dequeue(tid) {
+                return Some(v);
+            }
+            if self
+                .head
+                .compare_exchange(crq_ptr, next, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.ebr.retire_box(tid, unsafe { Box::from_raw(crq_ptr) });
+            }
+        }
+    }
+
+    fn max_threads(&self) -> usize {
+        self.max_threads
+    }
+}
+
+impl<F: IndexFactory> Drop for Lcrq<F> {
+    fn drop(&mut self) {
+        // Free the remaining chain of rings.
+        let mut p = self.head.load(Ordering::Relaxed);
+        while !p.is_null() {
+            let crq = unsafe { Box::from_raw(p) };
+            p = crq.next.load(Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::queue_tests::{check_concurrent, check_sequential};
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_hw() {
+        check_sequential(&Lcrq::new(1, HwIndexFactory));
+    }
+
+    #[test]
+    fn sequential_agg() {
+        check_sequential(&Lcrq::new(1, AggIndexFactory::new(1)));
+    }
+
+    #[test]
+    fn sequential_comb() {
+        check_sequential(&Lcrq::new(1, CombIndexFactory { max_threads: 1 }));
+    }
+
+    #[test]
+    fn tiny_ring_forces_ring_transitions() {
+        // Ring of 4 slots: every few enqueues closes a ring.
+        let q = Lcrq::with_ring_order(1, HwIndexFactory, 2);
+        for x in 0..100 {
+            q.enqueue(0, x);
+        }
+        for x in 0..100 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+        assert_eq!(q.dequeue(0), None);
+    }
+
+    #[test]
+    fn dequeue_empty_then_enqueue_again() {
+        let q = Lcrq::with_ring_order(1, HwIndexFactory, 3);
+        assert_eq!(q.dequeue(0), None);
+        q.enqueue(0, 7);
+        assert_eq!(q.dequeue(0), Some(7));
+        assert_eq!(q.dequeue(0), None);
+        q.enqueue(0, 8);
+        assert_eq!(q.dequeue(0), Some(8));
+    }
+
+    #[test]
+    fn concurrent_hw_small_ring() {
+        let q = Arc::new(Lcrq::with_ring_order(8, HwIndexFactory, 4));
+        check_concurrent(q, 4, 4, 5_000);
+    }
+
+    #[test]
+    fn concurrent_agg_index() {
+        let q = Arc::new(Lcrq::with_ring_order(8, AggIndexFactory::new(8), 6));
+        check_concurrent(q, 4, 4, 3_000);
+    }
+
+    #[test]
+    fn concurrent_comb_index() {
+        let q = Arc::new(Lcrq::with_ring_order(8, CombIndexFactory { max_threads: 8 }, 6));
+        check_concurrent(q, 4, 4, 2_000);
+    }
+
+    #[test]
+    fn close_bit_set_on_full_ring() {
+        let q = Lcrq::with_ring_order(1, HwIndexFactory, 1); // 2 slots
+        for x in 0..10 {
+            q.enqueue(0, x);
+        }
+        // The first ring must have been closed along the way.
+        let first = q.head.load(Ordering::Relaxed);
+        assert!(unsafe { &*first }.is_closed(0) || !unsafe { &*first }
+            .next
+            .load(Ordering::Relaxed)
+            .is_null());
+        for x in 0..10 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Concurrent FIFO queues (the paper's §4.5 application).
+//!
+//! * [`lcrq`] — LCRQ (Morrison & Afek, PPoPP 2013): a linked list of
+//!   circular ring queues driven by fetch-and-add, using double-width
+//!   CAS on ring cells. **Generic over the fetch-and-add object** used
+//!   for the ring indices — plugging in [`crate::faa::AggFunnel`]
+//!   reproduces the paper's headline result (up to 2.5× over LCRQ with
+//!   hardware F&A at high thread counts).
+//! * [`prq`] — a single-word-CAS variant of the CRQ cell protocol
+//!   (15-bit cycle + safe bit + 48-bit value packed in one word),
+//!   standing in for LPRQ (Romanov & Koval, PPoPP 2023) in the
+//!   benchmark matrix; see DESIGN.md §Substitutions.
+//! * [`msq`] — Michael–Scott queue, the classic CAS-based baseline.
+//!
+//! All queues implement [`ConcurrentQueue`] over `u64` items
+//! (`item != u64::MAX`; the all-ones value is the internal ⊥). Boxed
+//! payloads can be carried by storing `Box::into_raw` addresses.
+
+pub mod lcrq;
+pub mod msq;
+pub mod prq;
+
+pub use lcrq::{AggIndexFactory, CombIndexFactory, HwIndexFactory, IndexCell, IndexFactory, Lcrq};
+pub use msq::MsQueue;
+pub use prq::Prq;
+
+/// Reserved sentinel: queues cannot carry this value.
+pub const EMPTY_ITEM: u64 = u64::MAX;
+
+/// A multi-producer multi-consumer FIFO queue of `u64` items.
+///
+/// `tid` contract is the same as [`crate::faa::FetchAddObject`]: ids in
+/// `0..max_threads`, one OS thread per id at a time.
+pub trait ConcurrentQueue: Send + Sync {
+    /// Enqueue `item` (must not equal [`EMPTY_ITEM`]).
+    fn enqueue(&self, tid: usize, item: u64);
+
+    /// Dequeue the oldest item, or `None` if the queue is empty at
+    /// some point during the call (linearizable emptiness).
+    fn dequeue(&self, tid: usize) -> Option<u64>;
+
+    fn max_threads(&self) -> usize;
+}
+
+#[cfg(test)]
+pub(crate) mod queue_tests {
+    //! Shared conformance suite run against every queue implementation.
+    use super::*;
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+
+    /// Sequential FIFO behaviour against a reference VecDeque.
+    pub fn check_sequential<Q: ConcurrentQueue>(q: &Q) {
+        assert_eq!(q.dequeue(0), None);
+        let mut model = VecDeque::new();
+        let mut x = 1u64;
+        // interleave enq/deq in a few phases
+        for phase in 0..4 {
+            for _ in 0..(50 + phase * 37) {
+                q.enqueue(0, x);
+                model.push_back(x);
+                x += 1;
+            }
+            for _ in 0..(30 + phase * 29) {
+                assert_eq!(q.dequeue(0), model.pop_front());
+            }
+        }
+        while let Some(v) = model.pop_front() {
+            assert_eq!(q.dequeue(0), Some(v));
+        }
+        assert_eq!(q.dequeue(0), None);
+    }
+
+    /// Concurrent producers/consumers: no loss, no duplication, exact
+    /// per-producer sequence sets, and per-consumer streams respecting
+    /// each producer's order (a consequence of FIFO).
+    pub fn check_concurrent<Q: ConcurrentQueue + 'static>(
+        q: Arc<Q>,
+        producers: usize,
+        consumers: usize,
+        per_producer: u64,
+    ) {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let total = producers as u64 * per_producer;
+        let consumed_count = Arc::new(AtomicU64::new(0));
+
+        let producer_handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    // item encodes (producer, seq) so order can be checked
+                    for seq in 0..per_producer {
+                        q.enqueue(p, ((p as u64) << 32) | seq);
+                    }
+                })
+            })
+            .collect();
+        let consumer_handles: Vec<_> = (0..consumers)
+            .map(|c| {
+                let q = Arc::clone(&q);
+                let count = Arc::clone(&consumed_count);
+                let tid = producers + c;
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while count.load(Ordering::Acquire) < total {
+                        if let Some(v) = q.dequeue(tid) {
+                            got.push(v);
+                            count.fetch_add(1, Ordering::AcqRel);
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in producer_handles {
+            h.join().unwrap();
+        }
+        let per_consumer: Vec<Vec<u64>> =
+            consumer_handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        // Per-consumer streams must respect each producer's order.
+        for stream in &per_consumer {
+            let mut last_seq = vec![None::<u64>; producers];
+            for v in stream {
+                let (p, seq) = ((v >> 32) as usize, v & 0xFFFF_FFFF);
+                if let Some(prev) = last_seq[p] {
+                    assert!(seq > prev, "producer {p} order violated: {prev} then {seq}");
+                }
+                last_seq[p] = Some(seq);
+            }
+        }
+        // Exact multiset across all consumers.
+        let mut all: Vec<u64> = per_consumer.into_iter().flatten().collect();
+        assert_eq!(all.len() as u64, total, "lost or duplicated items");
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total, "duplicated items");
+        for p in 0..producers as u64 {
+            let seqs: Vec<u64> =
+                all.iter().filter(|v| (*v >> 32) == p).map(|v| v & 0xFFFF_FFFF).collect();
+            assert_eq!(seqs, (0..per_producer).collect::<Vec<_>>(), "producer {p} items wrong");
+        }
+        assert_eq!(q.dequeue(0), None, "queue should be drained");
+    }
+}

@@ -1,0 +1,163 @@
+//! Michael–Scott queue — the classic lock-free linked queue (PODC'96).
+//!
+//! The non-F&A baseline: every enqueue/dequeue CASes the shared
+//! `tail`/`head` pointer, so it contends the way LCRQ's rings were
+//! designed to avoid. Included to anchor the low end of the queue
+//! benchmark (the paper's related work: F&A-based queues beat
+//! CAS-retry queues at scale).
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+use super::{ConcurrentQueue, EMPTY_ITEM};
+use crate::ebr;
+use crate::sync::CachePadded;
+
+struct Node {
+    value: u64,
+    next: AtomicPtr<Node>,
+}
+
+/// Michael–Scott two-lock-free queue of `u64` items.
+pub struct MsQueue {
+    head: CachePadded<AtomicPtr<Node>>,
+    tail: CachePadded<AtomicPtr<Node>>,
+    max_threads: usize,
+    ebr: ebr::Domain,
+    /// Enqueue counter (kept for symmetric stats with ring queues).
+    enqueues: CachePadded<AtomicU64>,
+}
+
+unsafe impl Send for MsQueue {}
+unsafe impl Sync for MsQueue {}
+
+impl MsQueue {
+    pub fn new(max_threads: usize) -> Self {
+        let dummy = Box::into_raw(Box::new(Node {
+            value: EMPTY_ITEM,
+            next: AtomicPtr::new(std::ptr::null_mut()),
+        }));
+        Self {
+            head: CachePadded::new(AtomicPtr::new(dummy)),
+            tail: CachePadded::new(AtomicPtr::new(dummy)),
+            max_threads: max_threads.max(1),
+            ebr: ebr::Domain::new(max_threads.max(1)),
+            enqueues: CachePadded::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+impl ConcurrentQueue for MsQueue {
+    fn enqueue(&self, tid: usize, item: u64) {
+        debug_assert_ne!(item, EMPTY_ITEM);
+        let node = Box::into_raw(Box::new(Node {
+            value: item,
+            next: AtomicPtr::new(std::ptr::null_mut()),
+        }));
+        let _guard = self.ebr.pin(tid);
+        loop {
+            let tail = self.tail.load(Ordering::Acquire);
+            let tail_ref = unsafe { &*tail };
+            let next = tail_ref.next.load(Ordering::Acquire);
+            if tail != self.tail.load(Ordering::Acquire) {
+                continue; // tail moved under us
+            }
+            if next.is_null() {
+                if tail_ref
+                    .next
+                    .compare_exchange(
+                        std::ptr::null_mut(),
+                        node,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    let _ = self.tail.compare_exchange(
+                        tail,
+                        node,
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    );
+                    self.enqueues.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            } else {
+                // Help swing the tail forward.
+                let _ =
+                    self.tail.compare_exchange(tail, next, Ordering::AcqRel, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn dequeue(&self, tid: usize) -> Option<u64> {
+        let _guard = self.ebr.pin(tid);
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let tail = self.tail.load(Ordering::Acquire);
+            let next = unsafe { &*head }.next.load(Ordering::Acquire);
+            if head != self.head.load(Ordering::Acquire) {
+                continue;
+            }
+            if head == tail {
+                if next.is_null() {
+                    return None; // empty
+                }
+                // Tail lagging; help.
+                let _ =
+                    self.tail.compare_exchange(tail, next, Ordering::AcqRel, Ordering::Relaxed);
+                continue;
+            }
+            let value = unsafe { &*next }.value;
+            if self
+                .head
+                .compare_exchange(head, next, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.ebr.retire_box(tid, unsafe { Box::from_raw(head) });
+                return Some(value);
+            }
+        }
+    }
+
+    fn max_threads(&self) -> usize {
+        self.max_threads
+    }
+}
+
+impl Drop for MsQueue {
+    fn drop(&mut self) {
+        let mut p = self.head.load(Ordering::Relaxed);
+        while !p.is_null() {
+            let node = unsafe { Box::from_raw(p) };
+            p = node.next.load(Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::queue_tests::{check_concurrent, check_sequential};
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential() {
+        check_sequential(&MsQueue::new(1));
+    }
+
+    #[test]
+    fn concurrent() {
+        check_concurrent(Arc::new(MsQueue::new(8)), 4, 4, 5_000);
+    }
+
+    #[test]
+    fn empty_and_refill() {
+        let q = MsQueue::new(1);
+        assert_eq!(q.dequeue(0), None);
+        q.enqueue(0, 1);
+        q.enqueue(0, 2);
+        assert_eq!(q.dequeue(0), Some(1));
+        assert_eq!(q.dequeue(0), Some(2));
+        assert_eq!(q.dequeue(0), None);
+    }
+}

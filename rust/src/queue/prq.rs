@@ -1,0 +1,371 @@
+//! PRQ — the CRQ cell protocol packed into a *single* 64-bit word.
+//!
+//! Stands in for LPRQ (Romanov & Koval, PPoPP 2023: "LCRQ does NOT
+//! require CAS2") in the benchmark matrix. Like LPRQ, it keeps the
+//! LCRQ structure (F&A-driven ring indices, closed bit, linked rings)
+//! but replaces the double-width-CAS cell with a single-word scheme;
+//! unlike LPRQ's two-word handshake we pack `(safe:1, cycle:15,
+//! value:48)` into one word, trading value width (48-bit payloads —
+//! enough for pointers and benchmark items) for protocol simplicity.
+//! See DESIGN.md §Substitutions.
+//!
+//! Cell state machine per slot `j` with `cycle c = round / ring_size`:
+//!
+//! * `(safe, c', ⊥)` with `c' ≤ c` — open for the round-`c` enqueuer
+//!   (only if `safe` or no dequeuer has passed, as in CRQ);
+//! * `(safe, c, v)` — value enqueued for round `c`;
+//! * dequeuer of round `c` consumes by CAS to `(safe, c+1, ⊥)`;
+//!   skips an empty slot the same way; marks an *older* occupied slot
+//!   unsafe `(0, c', v)` so its lagging dequeuer must exist.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+use super::lcrq::{IndexCell, IndexFactory};
+use super::ConcurrentQueue;
+use crate::ebr;
+use crate::sync::{Backoff, CachePadded};
+
+const CLOSED: u64 = 1 << 63;
+
+// Cell layout: bit 63 = safe, bits 48..63 = cycle (mod 2^15), bits 0..48 = value.
+const CELL_SAFE: u64 = 1 << 63;
+const CYCLE_SHIFT: u32 = 48;
+const CYCLE_MASK: u64 = 0x7FFF;
+const VALUE_MASK: u64 = (1 << 48) - 1;
+/// 48-bit ⊥.
+const BOT: u64 = VALUE_MASK;
+
+/// Largest enqueuable item (values are 48-bit in this queue).
+pub const PRQ_MAX_ITEM: u64 = BOT - 1;
+
+#[inline]
+fn mk(safe: bool, cycle: u64, value: u64) -> u64 {
+    (if safe { CELL_SAFE } else { 0 }) | ((cycle & CYCLE_MASK) << CYCLE_SHIFT) | (value & VALUE_MASK)
+}
+
+#[inline]
+fn parts(cell: u64) -> (bool, u64, u64) {
+    (cell & CELL_SAFE != 0, (cell >> CYCLE_SHIFT) & CYCLE_MASK, cell & VALUE_MASK)
+}
+
+/// Compare cycles modulo 2^15 (window comparison; rings never have
+/// more than a handful of live cycles in flight).
+#[inline]
+fn cycle_lt(a: u64, b: u64) -> bool {
+    a != b && ((b.wrapping_sub(a)) & CYCLE_MASK) < (CYCLE_MASK / 2)
+}
+
+struct Ring<F: IndexFactory> {
+    head: F::Cell,
+    tail: F::Cell, // bit 63 = closed
+    next: CachePadded<AtomicPtr<Ring<F>>>,
+    cells: Vec<CachePadded<AtomicU64>>,
+    order: u32,
+}
+
+unsafe impl<F: IndexFactory> Send for Ring<F> {}
+unsafe impl<F: IndexFactory> Sync for Ring<F> {}
+
+impl<F: IndexFactory> Ring<F> {
+    fn new(factory: &F, order: u32, first: Option<u64>) -> Box<Self> {
+        let size = 1usize << order;
+        let cells: Vec<CachePadded<AtomicU64>> =
+            (0..size).map(|_| CachePadded::new(AtomicU64::new(mk(true, 0, BOT)))).collect();
+        let (t0, h0) = match first {
+            Some(x) => {
+                cells[0].store(mk(true, 0, x), Ordering::Relaxed);
+                (1, 0)
+            }
+            None => (0, 0),
+        };
+        Box::new(Ring {
+            head: factory.make(h0),
+            tail: factory.make(t0),
+            next: CachePadded::new(AtomicPtr::new(std::ptr::null_mut())),
+            cells,
+            order,
+        })
+    }
+
+    #[inline]
+    fn size(&self) -> u64 {
+        1 << self.order
+    }
+
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), ()> {
+        let mut attempts = 0u32;
+        loop {
+            let t_raw = self.tail.faa(tid, 1);
+            if t_raw & CLOSED != 0 {
+                return Err(());
+            }
+            let t = t_raw;
+            let c = (t >> self.order) & CYCLE_MASK;
+            let slot = &*self.cells[(t & (self.size() - 1)) as usize];
+            let cur = slot.load(Ordering::Acquire);
+            let (safe, cyc, val) = parts(cur);
+            if val == BOT
+                && (cyc == c || cycle_lt(cyc, c))
+                && (safe || self.head.load(tid) <= t)
+                && slot
+                    .compare_exchange(cur, mk(true, c, item), Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                return Ok(());
+            }
+            attempts += 1;
+            let h = self.head.load(tid);
+            if t.wrapping_sub(h) >= self.size() || attempts > 16 {
+                self.tail.fetch_or(tid, CLOSED);
+                return Err(());
+            }
+        }
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<u64, ()> {
+        loop {
+            let h = self.head.faa(tid, 1);
+            let c = (h >> self.order) & CYCLE_MASK;
+            let slot = &*self.cells[(h & (self.size() - 1)) as usize];
+            let mut backoff = Backoff::new();
+            loop {
+                let cur = slot.load(Ordering::Acquire);
+                let (safe, cyc, val) = parts(cur);
+                if cycle_lt(c, cyc) {
+                    break; // round already skipped
+                }
+                if val != BOT {
+                    if cyc == c {
+                        // Consume.
+                        if slot
+                            .compare_exchange(
+                                cur,
+                                mk(safe, c + 1, BOT),
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                        {
+                            return Ok(val);
+                        }
+                    } else {
+                        // Older round's value: mark unsafe and move on;
+                        // its own (lagging) dequeuer will consume it.
+                        if slot
+                            .compare_exchange(
+                                cur,
+                                mk(false, cyc, val),
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                        {
+                            break;
+                        }
+                    }
+                } else {
+                    // Empty: advance the cycle so the round-c enqueuer
+                    // cannot install behind us.
+                    if slot
+                        .compare_exchange(
+                            cur,
+                            mk(safe, c + 1, BOT),
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    {
+                        break;
+                    }
+                }
+                backoff.spin();
+            }
+            let t = self.tail.load(tid) & !CLOSED;
+            if t <= h + 1 {
+                self.fix_state(tid);
+                return Err(());
+            }
+        }
+    }
+
+    fn fix_state(&self, tid: usize) {
+        loop {
+            let t_raw = self.tail.load(tid);
+            let h = self.head.load(tid);
+            if h <= (t_raw & !CLOSED) {
+                return;
+            }
+            let new = (t_raw & CLOSED) | h;
+            if self.tail.cas(tid, t_raw, new) == t_raw {
+                return;
+            }
+        }
+    }
+}
+
+/// Linked PRQ (LPRQ stand-in): linked list of single-word-CAS rings.
+pub struct Prq<F: IndexFactory> {
+    head: CachePadded<AtomicPtr<Ring<F>>>,
+    tail: CachePadded<AtomicPtr<Ring<F>>>,
+    factory: F,
+    ring_order: u32,
+    max_threads: usize,
+    ebr: ebr::Domain,
+}
+
+unsafe impl<F: IndexFactory> Send for Prq<F> {}
+unsafe impl<F: IndexFactory> Sync for Prq<F> {}
+
+impl<F: IndexFactory> Prq<F> {
+    pub fn new(max_threads: usize, factory: F) -> Self {
+        Self::with_ring_order(max_threads, factory, 12)
+    }
+
+    pub fn with_ring_order(max_threads: usize, factory: F, ring_order: u32) -> Self {
+        let first = Box::into_raw(Ring::new(&factory, ring_order, None));
+        Self {
+            head: CachePadded::new(AtomicPtr::new(first)),
+            tail: CachePadded::new(AtomicPtr::new(first)),
+            factory,
+            ring_order,
+            max_threads: max_threads.max(1),
+            ebr: ebr::Domain::new(max_threads.max(1)),
+        }
+    }
+}
+
+impl<F: IndexFactory> ConcurrentQueue for Prq<F> {
+    fn enqueue(&self, tid: usize, item: u64) {
+        assert!(item <= PRQ_MAX_ITEM, "PRQ items are 48-bit");
+        let _guard = self.ebr.pin(tid);
+        loop {
+            let ring_ptr = self.tail.load(Ordering::Acquire);
+            let ring = unsafe { &*ring_ptr };
+            let next = ring.next.load(Ordering::Acquire);
+            if !next.is_null() {
+                let _ = self.tail.compare_exchange(
+                    ring_ptr,
+                    next,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
+                continue;
+            }
+            if ring.enqueue(tid, item).is_ok() {
+                return;
+            }
+            let fresh = Box::into_raw(Ring::new(&self.factory, self.ring_order, Some(item)));
+            match ring.next.compare_exchange(
+                std::ptr::null_mut(),
+                fresh,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    let _ = self.tail.compare_exchange(
+                        ring_ptr,
+                        fresh,
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    );
+                    return;
+                }
+                Err(_) => drop(unsafe { Box::from_raw(fresh) }),
+            }
+        }
+    }
+
+    fn dequeue(&self, tid: usize) -> Option<u64> {
+        let _guard = self.ebr.pin(tid);
+        loop {
+            let ring_ptr = self.head.load(Ordering::Acquire);
+            let ring = unsafe { &*ring_ptr };
+            if let Ok(v) = ring.dequeue(tid) {
+                return Some(v);
+            }
+            let next = ring.next.load(Ordering::Acquire);
+            if next.is_null() {
+                return None;
+            }
+            if let Ok(v) = ring.dequeue(tid) {
+                return Some(v);
+            }
+            if self
+                .head
+                .compare_exchange(ring_ptr, next, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.ebr.retire_box(tid, unsafe { Box::from_raw(ring_ptr) });
+            }
+        }
+    }
+
+    fn max_threads(&self) -> usize {
+        self.max_threads
+    }
+}
+
+impl<F: IndexFactory> Drop for Prq<F> {
+    fn drop(&mut self) {
+        let mut p = self.head.load(Ordering::Relaxed);
+        while !p.is_null() {
+            let ring = unsafe { Box::from_raw(p) };
+            p = ring.next.load(Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::lcrq::HwIndexFactory;
+    use crate::queue::queue_tests::{check_concurrent, check_sequential};
+    use std::sync::Arc;
+
+    #[test]
+    fn cell_packing() {
+        let c = mk(true, 5, 1234);
+        assert_eq!(parts(c), (true, 5, 1234));
+        let c = mk(false, CYCLE_MASK, BOT);
+        assert_eq!(parts(c), (false, CYCLE_MASK, BOT));
+    }
+
+    #[test]
+    fn cycle_window_comparison() {
+        assert!(cycle_lt(1, 2));
+        assert!(!cycle_lt(2, 1));
+        assert!(!cycle_lt(3, 3));
+        // wrap-around: 0x7FFE < 1 (mod 2^15 window)
+        assert!(cycle_lt(CYCLE_MASK - 1, 1));
+    }
+
+    #[test]
+    fn sequential() {
+        check_sequential(&Prq::new(1, HwIndexFactory));
+    }
+
+    #[test]
+    fn tiny_ring_transitions() {
+        let q = Prq::with_ring_order(1, HwIndexFactory, 2);
+        for x in 0..200 {
+            q.enqueue(0, x);
+        }
+        for x in 0..200 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+        assert_eq!(q.dequeue(0), None);
+    }
+
+    #[test]
+    fn concurrent() {
+        let q = Arc::new(Prq::with_ring_order(8, HwIndexFactory, 5));
+        check_concurrent(q, 4, 4, 4_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "48-bit")]
+    fn rejects_oversized_items() {
+        let q = Prq::new(1, HwIndexFactory);
+        q.enqueue(0, 1 << 50);
+    }
+}

@@ -1,0 +1,320 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas
+//! artifacts from the Rust request path.
+//!
+//! Python runs once at `make artifacts`; afterwards this module is the
+//! only bridge to the compiled computations:
+//!
+//! * [`OracleRuntime`] — the linearization oracle
+//!   (`artifacts/oracle_<N>.hlo.txt`): given a batch history it returns
+//!   the expected result of every `Fetch&Add`. Histories are padded to
+//!   the smallest compiled size (1024/4096/16384) with a dummy batch.
+//! * [`ContentionRuntime`] — the analytic throughput model
+//!   (`artifacts/contention_64.hlo.txt`) behind `aggfunnels predict`.
+//!
+//! The interchange format is HLO *text* (`HloModuleProto::
+//! from_text_file`), not serialized protos — see DESIGN.md and
+//! python/compile/aot.py for why.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Compiled oracle sizes emitted by `python/compile/aot.py`.
+pub const ORACLE_SIZES: [usize; 3] = [1024, 4096, 16384];
+
+/// Number of sweep points in the contention artifact.
+pub const PREDICT_POINTS: usize = 64;
+
+/// Locate the artifacts directory: `$AGG_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("AGG_ARTIFACTS") {
+        return Ok(PathBuf::from(dir));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let candidate = cur.join("artifacts");
+        if candidate.join("model.hlo.txt").exists() {
+            return Ok(candidate);
+        }
+        if !cur.pop() {
+            bail!(
+                "artifacts/ not found (run `make artifacts` or set AGG_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+/// A batch history in oracle layout (see python/compile/model.py).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchHistory {
+    /// |delta| per op; batches contiguous, ops in linearization order.
+    pub deltas: Vec<u64>,
+    /// Batch index per op (nondecreasing).
+    pub seg_ids: Vec<i32>,
+    /// `mainBefore` per batch.
+    pub seg_base: Vec<u64>,
+    /// +1 / −1 per batch.
+    pub seg_sign: Vec<i32>,
+}
+
+impl BatchHistory {
+    pub fn ops(&self) -> usize {
+        self.deltas.len()
+    }
+
+    pub fn batches(&self) -> usize {
+        self.seg_base.len()
+    }
+
+    /// Append one batch; returns its segment id.
+    pub fn push_batch(&mut self, main_before: u64, sign: i32, deltas: &[u64]) -> i32 {
+        let seg = self.seg_base.len() as i32;
+        self.seg_base.push(main_before);
+        self.seg_sign.push(sign);
+        for &d in deltas {
+            self.deltas.push(d);
+            self.seg_ids.push(seg);
+        }
+        seg
+    }
+
+    /// Pad to exactly `n` ops / `n` batch slots (dummy trailing batch).
+    fn padded(&self, n: usize) -> Result<BatchHistory> {
+        if self.ops() > n || self.batches() >= n {
+            bail!("history with {} ops / {} batches exceeds oracle size {n}", self.ops(), self.batches());
+        }
+        let mut h = self.clone();
+        let dummy_seg = h.seg_base.len() as i32;
+        h.seg_base.resize(n, 0);
+        h.seg_sign.resize(n, 1);
+        h.deltas.resize(n, 0);
+        h.seg_ids.resize(n, dummy_seg);
+        Ok(h)
+    }
+}
+
+/// CPU reference implementation of the oracle (used by tests and as a
+/// fallback when artifacts are absent).
+pub fn batch_returns_cpu(h: &BatchHistory) -> Vec<u64> {
+    let mut out = Vec::with_capacity(h.deltas.len());
+    let mut running: u64 = 0;
+    let mut prev_seg = i32::MIN;
+    for i in 0..h.deltas.len() {
+        let seg = h.seg_ids[i];
+        if seg != prev_seg {
+            running = 0;
+            prev_seg = seg;
+        }
+        let base = h.seg_base[seg as usize];
+        out.push(if h.seg_sign[seg as usize] >= 0 {
+            base.wrapping_add(running)
+        } else {
+            base.wrapping_sub(running)
+        });
+        running = running.wrapping_add(h.deltas[i]);
+    }
+    out
+}
+
+/// The linearization oracle, backed by PJRT executables.
+pub struct OracleRuntime {
+    client: xla::PjRtClient,
+    /// (size, executable) pairs, ascending by size.
+    exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+impl OracleRuntime {
+    /// Load every available oracle artifact from `dir`.
+    pub fn load(dir: &Path) -> Result<OracleRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = Vec::new();
+        for n in ORACLE_SIZES {
+            let path = dir.join(format!("oracle_{n}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?;
+            exes.push((n, exe));
+        }
+        if exes.is_empty() {
+            bail!("no oracle_<N>.hlo.txt artifacts in {}", dir.display());
+        }
+        Ok(OracleRuntime { client, exes })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<OracleRuntime> {
+        Self::load(&artifacts_dir()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.exes.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Like [`Self::batch_returns`] but splits arbitrarily large
+    /// histories into batch-aligned chunks that fit the largest
+    /// compiled oracle (each batch's results are independent given its
+    /// recorded `mainBefore`, so chunking is semantics-preserving).
+    pub fn batch_returns_chunked(&self, history: &BatchHistory) -> Result<Vec<u64>> {
+        let max = *self.exes.last().map(|(n, _)| n).unwrap_or(&0);
+        if history.ops().max(history.batches() + 1) <= max {
+            return self.batch_returns(history);
+        }
+        let mut out = Vec::with_capacity(history.ops());
+        let mut chunk = BatchHistory::default();
+        let mut start = 0usize;
+        let flush = |chunk: &mut BatchHistory, out: &mut Vec<u64>, this: &Self| -> Result<()> {
+            if chunk.ops() > 0 {
+                out.extend(this.batch_returns(chunk)?);
+                *chunk = BatchHistory::default();
+            }
+            Ok(())
+        };
+        for seg in 0..history.batches() {
+            // ops of this batch = the contiguous seg_ids == seg range.
+            let len = history.seg_ids[start..].iter().take_while(|&&s| s == seg as i32).count();
+            if chunk.ops() + len > max || chunk.batches() + 2 > max {
+                flush(&mut chunk, &mut out, self)?;
+            }
+            if len > max {
+                bail!("single batch of {len} ops exceeds oracle capacity {max}");
+            }
+            chunk.push_batch(
+                history.seg_base[seg],
+                history.seg_sign[seg],
+                &history.deltas[start..start + len],
+            );
+            start += len;
+        }
+        flush(&mut chunk, &mut out, self)?;
+        Ok(out)
+    }
+
+    /// Expected return value of every op in `history`, computed by the
+    /// AOT-compiled JAX/Pallas oracle.
+    pub fn batch_returns(&self, history: &BatchHistory) -> Result<Vec<u64>> {
+        let need = history.ops().max(history.batches() + 1);
+        let (n, exe) = self
+            .exes
+            .iter()
+            .find(|(n, _)| *n >= need)
+            .with_context(|| format!("history too large for compiled oracles ({need} ops)"))?;
+        let h = history.padded(*n)?;
+        let deltas = xla::Literal::vec1(h.deltas.as_slice());
+        let seg_ids = xla::Literal::vec1(h.seg_ids.as_slice());
+        let seg_base = xla::Literal::vec1(h.seg_base.as_slice());
+        let seg_sign = xla::Literal::vec1(h.seg_sign.as_slice());
+        let result = exe
+            .execute::<xla::Literal>(&[deltas, seg_ids, seg_base, seg_sign])
+            .context("oracle execution")?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let mut v: Vec<u64> = out.to_vec()?;
+        v.truncate(history.ops());
+        Ok(v)
+    }
+}
+
+/// The analytic contention model (`aggfunnels predict`).
+pub struct ContentionRuntime {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Predicted throughput curves (Mops/s).
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub threads: Vec<f64>,
+    pub hw_mops: Vec<f64>,
+    pub agg_mops: Vec<f64>,
+}
+
+impl ContentionRuntime {
+    pub fn load(dir: &Path) -> Result<ContentionRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let path = dir.join(format!("contention_{PREDICT_POINTS}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(ContentionRuntime { exe })
+    }
+
+    pub fn load_default() -> Result<ContentionRuntime> {
+        Self::load(&artifacts_dir()?)
+    }
+
+    /// Evaluate the model over `threads` (padded/truncated to the
+    /// compiled K points).
+    pub fn predict(&self, threads: &[usize], work_mean: f64, faa_ratio: f64, m: usize) -> Result<Prediction> {
+        let mut p: Vec<f64> = threads.iter().map(|&t| t as f64).collect();
+        p.resize(PREDICT_POINTS, *p.last().unwrap_or(&1.0));
+        let p_lit = xla::Literal::vec1(p.as_slice());
+        let work = xla::Literal::scalar(work_mean);
+        let ratio = xla::Literal::scalar(faa_ratio);
+        let m_lit = xla::Literal::scalar(m as f64);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[p_lit, work, ratio, m_lit])?[0][0]
+            .to_literal_sync()?;
+        let (hw, agg) = result.to_tuple2()?;
+        let mut hw: Vec<f64> = hw.to_vec()?;
+        let mut agg: Vec<f64> = agg.to_vec()?;
+        hw.truncate(threads.len());
+        agg.truncate(threads.len());
+        Ok(Prediction {
+            threads: threads.iter().map(|&t| t as f64).collect(),
+            hw_mops: hw,
+            agg_mops: agg,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_push_and_pad() {
+        let mut h = BatchHistory::default();
+        let s0 = h.push_batch(100, 1, &[5, 3]);
+        let s1 = h.push_batch(108, -1, &[2]);
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(h.ops(), 3);
+        assert_eq!(h.batches(), 2);
+        let p = h.padded(8).unwrap();
+        assert_eq!(p.deltas.len(), 8);
+        assert_eq!(p.seg_ids[3..], [2, 2, 2, 2, 2]);
+        assert_eq!(p.seg_base.len(), 8);
+        assert!(h.padded(2).is_err());
+    }
+
+    #[test]
+    fn cpu_oracle_basic() {
+        let mut h = BatchHistory::default();
+        h.push_batch(100, 1, &[5, 3, 2]);
+        h.push_batch(50, -1, &[4, 1]);
+        assert_eq!(batch_returns_cpu(&h), vec![100, 105, 108, 50, 46]);
+    }
+
+    #[test]
+    fn cpu_oracle_wraps() {
+        let mut h = BatchHistory::default();
+        h.push_batch(u64::MAX, 1, &[2, 3]);
+        assert_eq!(batch_returns_cpu(&h), vec![u64::MAX, 1]);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_oracle.rs (they
+    // need `make artifacts` to have run).
+}

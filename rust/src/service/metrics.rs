@@ -1,0 +1,126 @@
+//! A small lock-free metrics registry (named monotonic counters).
+//!
+//! Fixed set of slots allocated on first use behind a spinlocked name
+//! table; increments afterwards are a single relaxed atomic add, so
+//! the hot path never takes the lock.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sync::SpinLock;
+
+const MAX_COUNTERS: usize = 64;
+
+/// Counter registry.
+pub struct Metrics {
+    names: SpinLock<Vec<&'static str>>,
+    slots: Vec<AtomicU64>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            names: SpinLock::new(Vec::new()),
+            slots: (0..MAX_COUNTERS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn slot_of(&self, name: &'static str) -> usize {
+        {
+            let names = self.names.lock();
+            if let Some(i) = names.iter().position(|n| *n == name) {
+                return i;
+            }
+        }
+        let mut names = self.names.lock();
+        if let Some(i) = names.iter().position(|n| *n == name) {
+            return i;
+        }
+        let i = names.len();
+        assert!(i < MAX_COUNTERS, "too many metric names");
+        names.push(name);
+        i
+    }
+
+    /// Increment `name` by one.
+    pub fn incr(&self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    /// Add `v` to `name`.
+    pub fn add(&self, name: &'static str, v: u64) {
+        let i = self.slot_of(name);
+        self.slots[i].fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Read one counter.
+    pub fn get(&self, name: &'static str) -> u64 {
+        let names = self.names.lock();
+        match names.iter().position(|n| *n == name) {
+            Some(i) => self.slots[i].load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        let names = self.names.lock();
+        names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.to_string(), self.slots[i].load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn incr_and_get() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.incr("a");
+        m.add("b", 5);
+        assert_eq!(m.get("a"), 2);
+        assert_eq!(m.get("b"), 5);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn snapshot_contains_all() {
+        let m = Metrics::new();
+        m.incr("x");
+        m.incr("y");
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap["x"], 1);
+    }
+
+    #[test]
+    fn concurrent_increments_sum() {
+        let m = Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        m.incr("hot");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get("hot"), 40_000);
+    }
+}

@@ -1,0 +1,335 @@
+//! The ticket service: a deployable wrapper around the library.
+//!
+//! A thread-pooled TCP server dispensing monotonically increasing
+//! ticket ranges — the classic fetch-and-add application (distinct
+//! ids, timestamps, sequence numbers). The hot path is one
+//! `Fetch&Add(count)` on an Aggregating Funnel shared by all workers;
+//! requests flagged `priority` use `Fetch&AddDirect` (§4.4), giving
+//! latency-critical callers the fast path without hurting others.
+//!
+//! Wire protocol: one JSON object per line.
+//!
+//! ```text
+//! → {"op":"take","count":3}            ← {"ok":true,"start":17,"count":3}
+//! → {"op":"take","count":1,"priority":true}
+//! → {"op":"read"}                      ← {"ok":true,"value":20}
+//! → {"op":"stats"}                     ← {"ok":true,...counters...}
+//! ```
+
+pub mod metrics;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::faa::{AggFunnel, AggFunnelConfig, FetchAddObject};
+use crate::util::json::Json;
+use metrics::Metrics;
+
+/// Shared server state.
+struct ServerState {
+    tickets: AggFunnel,
+    metrics: Metrics,
+    stop: AtomicBool,
+    active_conns: AtomicUsize,
+}
+
+/// Handle used to control a running server.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    state: Arc<ServerState>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and join all workers.
+    pub fn shutdown(mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Configuration for [`serve`].
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub addr: String,
+    pub workers: usize,
+    pub aggregators: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        let s = crate::config::ServiceSettings::default();
+        Self { addr: s.addr, workers: s.workers, aggregators: s.aggregators }
+    }
+}
+
+/// Start the ticket server; returns immediately with a handle.
+pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("binding {}", opts.addr))?;
+    let addr = listener.local_addr()?;
+    // tid 0 is reserved for priority/direct operations issued by any
+    // worker (direct ops never touch per-thread funnel state that
+    // conflicts: they only hit Main and the tid-0 stats counters,
+    // which we guard with the metrics registry instead).
+    let funnel_threads = opts.workers + 1;
+    let state = Arc::new(ServerState {
+        tickets: AggFunnel::with_config(
+            AggFunnelConfig::new(funnel_threads).with_aggregators(opts.aggregators),
+        ),
+        metrics: Metrics::new(),
+        stop: AtomicBool::new(false),
+        active_conns: AtomicUsize::new(0),
+    });
+
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut threads = Vec::new();
+    for w in 0..opts.workers {
+        let rx = Arc::clone(&rx);
+        let state = Arc::clone(&state);
+        threads.push(std::thread::spawn(move || {
+            let tid = w + 1; // funnel tid for this worker
+            loop {
+                let conn = match rx.lock().unwrap().recv() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                if state.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                state.active_conns.fetch_add(1, Ordering::Relaxed);
+                let _ = handle_conn(&state, tid, conn);
+                state.active_conns.fetch_sub(1, Ordering::Relaxed);
+            }
+        }));
+    }
+    {
+        let state = Arc::clone(&state);
+        threads.push(std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if state.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Ok(conn) = conn {
+                    if tx.send(conn).is_err() {
+                        return;
+                    }
+                }
+            }
+        }));
+    }
+    Ok(ServerHandle { addr, state, threads })
+}
+
+fn handle_conn(state: &ServerState, tid: usize, conn: TcpStream) -> Result<()> {
+    conn.set_nodelay(true).ok();
+    // Bounded reads so a worker parked on an idle connection still
+    // notices shutdown (otherwise `shutdown()` would hang on join).
+    conn.set_read_timeout(Some(std::time::Duration::from_millis(200))).ok();
+    let mut writer = conn.try_clone()?;
+    let mut reader = BufReader::new(conn);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_request(state, tid, &line) {
+            Ok(json) => json,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(e.to_string())),
+            ]),
+        };
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let op = req.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing op"))?;
+    match op {
+        "take" => {
+            let count = req.get("count").and_then(Json::as_u64).unwrap_or(1).max(1);
+            let priority =
+                req.get("priority").and_then(Json::as_bool).unwrap_or(false);
+            let start = if priority {
+                state.metrics.incr("take_priority");
+                state.tickets.fetch_add_direct(tid, count as i64)
+            } else {
+                state.metrics.incr("take");
+                state.tickets.fetch_add(tid, count as i64)
+            };
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("start", Json::num(start as f64)),
+                ("count", Json::num(count as f64)),
+            ]))
+        }
+        "read" => {
+            state.metrics.incr("read");
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("value", Json::num(state.tickets.read(tid) as f64)),
+            ]))
+        }
+        "stats" => {
+            let mut pairs = vec![("ok", Json::Bool(true))];
+            let snap = state.metrics.snapshot();
+            let stats = state.tickets.batch_stats();
+            let extra = [
+                ("main_faas".to_string(), stats.main_faas),
+                ("batched_ops".to_string(), stats.ops),
+            ];
+            let mut obj = std::collections::BTreeMap::new();
+            for (k, v) in pairs.drain(..) {
+                obj.insert(k.to_string(), v);
+            }
+            for (k, v) in snap.into_iter().chain(extra) {
+                obj.insert(k, Json::num(v as f64));
+            }
+            Ok(Json::Obj(obj))
+        }
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+/// Minimal blocking client for the ticket service.
+pub struct TicketClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TicketClient {
+    pub fn connect(addr: &str) -> Result<TicketClient> {
+        let conn = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        conn.set_nodelay(true).ok();
+        let writer = conn.try_clone()?;
+        Ok(TicketClient { reader: BufReader::new(conn), writer })
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(anyhow!(
+                "server error: {}",
+                resp.get("error").and_then(Json::as_str).unwrap_or("?")
+            ));
+        }
+        Ok(resp)
+    }
+
+    /// Take a contiguous range of `count` tickets; returns the start.
+    pub fn take(&mut self, count: u64, priority: bool) -> Result<u64> {
+        let mut pairs = vec![
+            ("op", Json::str("take")),
+            ("count", Json::num(count as f64)),
+        ];
+        if priority {
+            pairs.push(("priority", Json::Bool(true)));
+        }
+        let resp = self.roundtrip(Json::obj(pairs))?;
+        resp.get("start").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing start"))
+    }
+
+    pub fn read(&mut self) -> Result<u64> {
+        let resp = self.roundtrip(Json::obj(vec![("op", Json::str("read"))]))?;
+        resp.get("value").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing value"))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start() -> ServerHandle {
+        serve(&ServeOpts { addr: "127.0.0.1:0".into(), workers: 3, aggregators: 2 }).unwrap()
+    }
+
+    #[test]
+    fn tickets_are_disjoint_ranges() {
+        let server = start();
+        let addr = server.addr.to_string();
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = TicketClient::connect(&addr).unwrap();
+                    let mut ranges = Vec::new();
+                    for i in 0..50u64 {
+                        let count = 1 + i % 4;
+                        let start = c.take(count, i % 7 == 0).unwrap();
+                        ranges.push((start, count));
+                    }
+                    ranges
+                })
+            })
+            .collect();
+        let mut all: Vec<(u64, u64)> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        // Ranges must tile [0, total) without overlap.
+        let mut expected_start = 0u64;
+        for (start, count) in all {
+            assert_eq!(start, expected_start, "overlapping or gapped ticket ranges");
+            expected_start = start + count;
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn read_and_stats_work() {
+        let server = start();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(c.take(5, false).unwrap(), 0);
+        assert_eq!(c.read().unwrap(), 5);
+        let stats = c.stats().unwrap();
+        assert!(stats.get("take").and_then(Json::as_u64).unwrap_or(0) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_errors() {
+        let server = start();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        c.writer.write_all(b"{\"op\":\"nope\"}\n").unwrap();
+        let mut line = String::new();
+        c.reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        // Connection stays usable.
+        assert_eq!(c.take(1, false).unwrap(), 0);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,597 @@
+//! Simulator ports of the fetch-and-add algorithms.
+//!
+//! The same algorithm logic as [`crate::faa`], written as `async fn`s
+//! over simulated memory so 176-thread contention behaviour can be
+//! measured on any host. Structures live in the simulated heap with
+//! realistic layout (every hot field on its own cache line; `Batch`
+//! records packed in one line), so the cost model sees exactly the
+//! memory traffic the real algorithm generates.
+//!
+//! Pointers are word addresses stored as `u64` ([`NULL_ADDR`] = null).
+
+use std::cell::{Cell, RefCell};
+use std::future::Future;
+use std::pin::Pin;
+
+use super::executor::{Addr, Ctx, NULL_ADDR};
+
+/// Which algorithm to simulate (benchmark matrix axis).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoSpec {
+    /// Hardware F&A: one shared word.
+    Hw,
+    /// Aggregating Funnels with `m` Aggregators per sign and `direct`
+    /// high-priority threads (§4.4's AGGFUNNEL-(m, d)).
+    Agg { m: usize, direct: usize },
+    /// Recursive Aggregating Funnels (§3.2): `outer_m` Aggregators over
+    /// an inner funnel with `inner_m` Aggregators.
+    RecAgg { outer_m: usize, inner_m: usize },
+    /// Combining Funnels (Shavit & Zemach) with paper-best geometry.
+    Comb,
+}
+
+impl AlgoSpec {
+    pub fn label(&self) -> String {
+        match self {
+            AlgoSpec::Hw => "hw-faa".into(),
+            AlgoSpec::Agg { m, direct: 0 } => format!("aggfunnel-{m}"),
+            AlgoSpec::Agg { m, direct } => format!("aggfunnel-({m},{direct})"),
+            AlgoSpec::RecAgg { outer_m, inner_m } => format!("rec-aggfunnel-{outer_m}/{inner_m}"),
+            AlgoSpec::Comb => "combfunnel".into(),
+        }
+    }
+}
+
+/// A simulated fetch-and-add object.
+pub enum SimFaa {
+    Hw(SimHw),
+    Agg(SimAggFunnel),
+    Comb(SimCombFunnel),
+}
+
+impl SimFaa {
+    /// Build the object in simulated memory (host-side; no cycles).
+    pub fn build(spec: &AlgoSpec, ctx: &Ctx, threads: usize) -> SimFaa {
+        match spec {
+            AlgoSpec::Hw => SimFaa::Hw(SimHw::new(ctx)),
+            AlgoSpec::Agg { m, direct } => {
+                SimFaa::Agg(SimAggFunnel::new(ctx, *m, *direct, SimMain::Word(ctx.alloc_line(1))))
+            }
+            AlgoSpec::RecAgg { outer_m, inner_m } => {
+                let inner =
+                    SimAggFunnel::new(ctx, *inner_m, 0, SimMain::Word(ctx.alloc_line(1)));
+                SimFaa::Agg(SimAggFunnel::new(ctx, *outer_m, 0, SimMain::Funnel(Box::new(inner))))
+            }
+            AlgoSpec::Comb => SimFaa::Comb(SimCombFunnel::new(ctx, threads)),
+        }
+    }
+
+    pub async fn fetch_add(&self, ctx: &Ctx, delta: i64) -> u64 {
+        match self {
+            SimFaa::Hw(f) => f.fetch_add(ctx, delta).await,
+            SimFaa::Agg(f) => f.fetch_add(ctx, delta).await,
+            SimFaa::Comb(f) => f.fetch_add(ctx, delta).await,
+        }
+    }
+
+    pub async fn read(&self, ctx: &Ctx) -> u64 {
+        match self {
+            SimFaa::Hw(f) => ctx.load(f.main).await,
+            SimFaa::Agg(f) => f.read(ctx).await,
+            SimFaa::Comb(f) => ctx.load(f.main).await,
+        }
+    }
+
+    /// `(main_faas, ops)` — the average-batch-size counters.
+    pub fn batch_stats(&self) -> (u64, u64) {
+        match self {
+            SimFaa::Hw(f) => (f.ops.get(), f.ops.get()),
+            SimFaa::Agg(f) => (f.main_faas.get(), f.ops.get()),
+            SimFaa::Comb(f) => (f.main_faas.get(), f.ops.get()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hardware F&A
+// ---------------------------------------------------------------------
+
+/// One shared word; every operation is a single RMW on it.
+pub struct SimHw {
+    pub main: Addr,
+    ops: Cell<u64>,
+}
+
+impl SimHw {
+    pub fn new(ctx: &Ctx) -> Self {
+        Self { main: ctx.alloc_line(1), ops: Cell::new(0) }
+    }
+
+    pub async fn fetch_add(&self, ctx: &Ctx, delta: i64) -> u64 {
+        self.ops.set(self.ops.get() + 1);
+        if delta == 0 {
+            return ctx.load(self.main).await;
+        }
+        ctx.faa(self.main, delta as u64).await
+    }
+}
+
+// ---------------------------------------------------------------------
+// Aggregating Funnels (Algorithm 1)
+// ---------------------------------------------------------------------
+
+// Aggregator block: three cache lines (value / last / final each padded).
+const AG_VALUE: u32 = 0;
+const AG_LAST: u32 = 8;
+const AG_FINAL: u32 = 16;
+// Batch block: one cache line.
+const B_BEFORE: u32 = 0;
+const B_AFTER: u32 = 1;
+const B_MAIN_BEFORE: u32 = 2;
+const B_PREVIOUS: u32 = 3;
+
+/// `Main` of a simulated funnel: a raw word or an inner funnel (§3.2).
+pub enum SimMain {
+    Word(Addr),
+    Funnel(Box<SimAggFunnel>),
+}
+
+/// Simulated Aggregating Funnels object.
+pub struct SimAggFunnel {
+    main: SimMain,
+    /// 2m slots (m positive then m negative), each a padded line
+    /// holding the current Aggregator block's address.
+    agg_slots: Vec<Addr>,
+    m: usize,
+    direct_threads: usize,
+    threshold: u64,
+    pub main_faas: Cell<u64>,
+    pub ops: Cell<u64>,
+}
+
+impl SimAggFunnel {
+    pub fn new(ctx: &Ctx, m: usize, direct_threads: usize, main: SimMain) -> Self {
+        let m = m.max(1);
+        let agg_slots: Vec<Addr> = (0..2 * m)
+            .map(|_| {
+                let slot = ctx.alloc_line(1);
+                let agg = Self::make_aggregator(ctx);
+                ctx.poke(slot, agg.0 as u64);
+                slot
+            })
+            .collect();
+        Self {
+            main,
+            agg_slots,
+            m,
+            direct_threads,
+            threshold: 1 << 63,
+            main_faas: Cell::new(0),
+            ops: Cell::new(0),
+        }
+    }
+
+    /// Allocate + initialize an Aggregator block (host-time pokes; the
+    /// simulated cost of publishing it is paid by the store that links
+    /// it into `Agg`).
+    fn make_aggregator(ctx: &Ctx) -> Addr {
+        let a = ctx.alloc(24); // 3 lines
+        let sentinel = ctx.alloc_line(4);
+        ctx.poke(Addr(sentinel.0 + B_BEFORE), 0);
+        ctx.poke(Addr(sentinel.0 + B_AFTER), 0);
+        ctx.poke(Addr(sentinel.0 + B_MAIN_BEFORE), 0);
+        ctx.poke(Addr(sentinel.0 + B_PREVIOUS), NULL_ADDR);
+        ctx.poke(Addr(a.0 + AG_VALUE), 0);
+        ctx.poke(Addr(a.0 + AG_LAST), sentinel.0 as u64);
+        ctx.poke(Addr(a.0 + AG_FINAL), u64::MAX);
+        a
+    }
+
+    /// Apply a (signed) batch to Main — recursion point for §3.2.
+    /// Only the recursive arm boxes (async recursion needs one
+    /// indirection); the common flat-funnel path stays allocation-free.
+    async fn apply_main(&self, ctx: &Ctx, delta: i64) -> u64 {
+        match &self.main {
+            SimMain::Word(w) => ctx.faa(*w, delta as u64).await,
+            SimMain::Funnel(inner) => {
+                let fut: Pin<Box<dyn Future<Output = u64> + '_>> =
+                    Box::pin(inner.fetch_add_inner(ctx, delta));
+                fut.await
+            }
+        }
+    }
+
+    /// Address of the innermost `Main` word (for host-side seeding and
+    /// the RMWable operations below).
+    pub fn main_addr(&self) -> Addr {
+        match &self.main {
+            SimMain::Word(w) => *w,
+            SimMain::Funnel(inner) => inner.main_addr(),
+        }
+    }
+
+    /// RMWability: atomic OR applied to `Main` (LCRQ ring closing).
+    pub async fn fetch_or(&self, ctx: &Ctx, bits: u64) -> u64 {
+        ctx.fetch_or(self.main_addr(), bits).await
+    }
+
+    /// RMWability: CAS on `Main`; returns the witnessed value.
+    pub async fn cas_main(&self, ctx: &Ctx, old: u64, new: u64) -> u64 {
+        ctx.cas(self.main_addr(), old, new).await.0
+    }
+
+    pub async fn read(&self, ctx: &Ctx) -> u64 {
+        // Recursion bottoms out at the innermost Main word.
+        ctx.load(self.main_addr()).await
+    }
+
+    pub async fn fetch_add(&self, ctx: &Ctx, delta: i64) -> u64 {
+        self.fetch_add_inner(ctx, delta).await
+    }
+
+    async fn fetch_add_inner(&self, ctx: &Ctx, delta: i64) -> u64 {
+        self.ops.set(self.ops.get() + 1);
+        if delta == 0 {
+            return self.read(ctx).await;
+        }
+        if ctx.tid < self.direct_threads {
+            self.main_faas.set(self.main_faas.get() + 1);
+            return self.apply_main(ctx, delta).await;
+        }
+        let positive = delta > 0;
+        let magnitude = delta.unsigned_abs();
+        let g = ctx.tid % self.m; // static even assignment
+        let slot = self.agg_slots[if positive { g } else { self.m + g }];
+
+        'restart: loop {
+            // Line 21: a ← Agg[index].
+            let a = Addr(ctx.load(slot).await as u32);
+            // Line 22: register with one F&A on the Aggregator.
+            let a_before = ctx.faa(Addr(a.0 + AG_VALUE), magnitude).await;
+
+            // Lines 23–24: wait until my batch is linked or I can lead.
+            let mut last_raw = ctx.load(Addr(a.0 + AG_LAST)).await;
+            let (batch, after) = loop {
+                let batch = Addr(last_raw as u32);
+                let after = ctx.load(Addr(batch.0 + B_AFTER)).await;
+                if after >= a_before {
+                    let fin = ctx.load(Addr(a.0 + AG_FINAL)).await;
+                    if a_before >= fin {
+                        continue 'restart;
+                    }
+                    break (batch, after);
+                }
+                let fin = ctx.load(Addr(a.0 + AG_FINAL)).await;
+                if a_before >= fin {
+                    continue 'restart;
+                }
+                // Spin on `last` until the delegate publishes a batch.
+                let prev = last_raw;
+                last_raw = ctx.spin_until(Addr(a.0 + AG_LAST), move |v| v != prev).await;
+            };
+
+            return if after == a_before {
+                // Delegate (lines 26–33).
+                let a_after = ctx.load(Addr(a.0 + AG_VALUE)).await;
+                let sum = a_after.wrapping_sub(a_before);
+                let signed = if positive { sum as i64 } else { (sum as i64).wrapping_neg() };
+                let main_before = self.apply_main(ctx, signed).await;
+                self.main_faas.set(self.main_faas.get() + 1);
+                if a_after >= self.threshold {
+                    let fresh = Self::make_aggregator(ctx);
+                    ctx.store(slot, fresh.0 as u64).await;
+                    ctx.store(Addr(a.0 + AG_FINAL), a_after).await;
+                }
+                // Publish the Batch record (fields then the link).
+                let b = ctx.alloc_line(4);
+                ctx.store(Addr(b.0 + B_BEFORE), a_before).await;
+                ctx.store(Addr(b.0 + B_AFTER), a_after).await;
+                ctx.store(Addr(b.0 + B_MAIN_BEFORE), main_before).await;
+                ctx.store(Addr(b.0 + B_PREVIOUS), batch.0 as u64).await;
+                ctx.store(Addr(a.0 + AG_LAST), b.0 as u64).await;
+                main_before
+            } else {
+                // Non-delegate (lines 34–37): find my batch, derive result.
+                let mut b = batch;
+                let mut before = ctx.load(Addr(b.0 + B_BEFORE)).await;
+                while before > a_before {
+                    b = Addr(ctx.load(Addr(b.0 + B_PREVIOUS)).await as u32);
+                    before = ctx.load(Addr(b.0 + B_BEFORE)).await;
+                }
+                let main_before = ctx.load(Addr(b.0 + B_MAIN_BEFORE)).await;
+                let offset = a_before.wrapping_sub(before);
+                if positive {
+                    main_before.wrapping_add(offset)
+                } else {
+                    main_before.wrapping_sub(offset)
+                }
+            };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Combining Funnels
+// ---------------------------------------------------------------------
+
+// Node block (one line): state / sum / delta / result.
+const N_STATE: u32 = 0;
+const N_SUM: u32 = 1;
+const N_DELTA: u32 = 2;
+const N_RESULT: u32 = 3;
+
+const CF_FREE: u64 = 0;
+const CF_LOCKED: u64 = 1;
+const CF_CAPTURED: u64 = 2;
+const CF_DONE: u64 = 3;
+
+/// Simulated Combining Funnels (geometry: ⌈log₂ p⌉ − 1 layers, width
+/// halving, random cells, pairwise capture).
+pub struct SimCombFunnel {
+    pub main: Addr,
+    /// layers[l] = padded cells holding node addresses (or NULL).
+    layers: Vec<Vec<Addr>>,
+    /// Per-thread node block addresses.
+    nodes: Vec<Addr>,
+    /// Host-side capture lists (owner-only, like the native version's
+    /// UnsafeCell<Vec>): children[tid] = captured node addrs.
+    children: Vec<RefCell<Vec<Addr>>>,
+    collision_window: u64,
+    pub main_faas: Cell<u64>,
+    pub ops: Cell<u64>,
+}
+
+impl SimCombFunnel {
+    pub fn new(ctx: &Ctx, threads: usize) -> Self {
+        let p = threads.max(1);
+        let log = (usize::BITS - (p - 1).leading_zeros()).max(1) as usize;
+        let n_layers = log.saturating_sub(1).max(1);
+        let mut layers = Vec::new();
+        let mut width = (p / 2).max(1);
+        for _ in 0..n_layers {
+            layers.push((0..width).map(|_| {
+                let c = ctx.alloc_line(1);
+                ctx.poke(c, NULL_ADDR);
+                c
+            }).collect());
+            width = (width / 2).max(1);
+        }
+        let nodes = (0..p)
+            .map(|_| {
+                let n = ctx.alloc_line(4);
+                ctx.poke(Addr(n.0 + N_STATE), CF_LOCKED);
+                n
+            })
+            .collect();
+        Self {
+            main: ctx.alloc_line(1),
+            layers,
+            nodes,
+            children: (0..p).map(|_| RefCell::new(Vec::new())).collect(),
+            collision_window: 200, // cycles parked per layer for collisions
+            main_faas: Cell::new(0),
+            ops: Cell::new(0),
+        }
+    }
+
+    /// Deliver results to my captured children (prefix order).
+    async fn distribute(&self, ctx: &Ctx, node: Addr, base: u64) -> u64 {
+        let delta = ctx.load(Addr(node.0 + N_DELTA)).await;
+        let mut cur = base.wrapping_add(delta);
+        let kids: Vec<Addr> = self.children[ctx.tid].borrow_mut().drain(..).collect();
+        for child in kids {
+            let child_sum = ctx.load(Addr(child.0 + N_SUM)).await;
+            ctx.store(Addr(child.0 + N_RESULT), cur).await;
+            ctx.store(Addr(child.0 + N_STATE), CF_DONE).await;
+            cur = cur.wrapping_add(child_sum);
+        }
+        base
+    }
+
+    pub async fn fetch_add(&self, ctx: &Ctx, delta: i64) -> u64 {
+        self.ops.set(self.ops.get() + 1);
+        if delta == 0 {
+            return ctx.load(self.main).await;
+        }
+        let node = self.nodes[ctx.tid];
+        self.children[ctx.tid].borrow_mut().clear();
+        ctx.store(Addr(node.0 + N_DELTA), delta as u64).await;
+        ctx.store(Addr(node.0 + N_SUM), delta as u64).await;
+        ctx.store(Addr(node.0 + N_STATE), CF_FREE).await;
+
+        for layer in &self.layers {
+            let cell = layer[(ctx.rand_u64() % layer.len() as u64) as usize];
+            let prev = ctx.swap(cell, node.0 as u64).await;
+
+            // Collision window: stay parked (capturable).
+            ctx.work(self.collision_window).await;
+
+            // Self-lock; failure means I was captured.
+            let (_, locked) = ctx.cas(Addr(node.0 + N_STATE), CF_FREE, CF_LOCKED).await;
+            if !locked {
+                let _ = ctx.spin_until(Addr(node.0 + N_STATE), |v| v == CF_DONE).await;
+                let base = ctx.load(Addr(node.0 + N_RESULT)).await;
+                return self.distribute(ctx, node, base).await;
+            }
+            // Try to capture the node previously parked at this cell.
+            if prev != NULL_ADDR && prev != node.0 as u64 {
+                let other = Addr(prev as u32);
+                let (_, captured) =
+                    ctx.cas(Addr(other.0 + N_STATE), CF_FREE, CF_CAPTURED).await;
+                if captured {
+                    let other_sum = ctx.load(Addr(other.0 + N_SUM)).await;
+                    let my_sum = ctx.load(Addr(node.0 + N_SUM)).await;
+                    ctx.store(Addr(node.0 + N_SUM), my_sum.wrapping_add(other_sum)).await;
+                    self.children[ctx.tid].borrow_mut().push(other);
+                }
+            }
+            ctx.store(Addr(node.0 + N_STATE), CF_FREE).await;
+        }
+
+        // Final layer survived: lock and apply to Main.
+        let (_, locked) = ctx.cas(Addr(node.0 + N_STATE), CF_FREE, CF_LOCKED).await;
+        if !locked {
+            let _ = ctx.spin_until(Addr(node.0 + N_STATE), |v| v == CF_DONE).await;
+            let base = ctx.load(Addr(node.0 + N_RESULT)).await;
+            return self.distribute(ctx, node, base).await;
+        }
+        let sum = ctx.load(Addr(node.0 + N_SUM)).await;
+        let base = ctx.faa(self.main, sum).await;
+        self.main_faas.set(self.main_faas.get() + 1);
+        self.distribute(ctx, node, base).await
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Sim, SimConfig};
+    use std::rc::Rc;
+
+    fn run_dense_check(spec: AlgoSpec, p: usize, per_thread: u64) {
+        let mut cfg = SimConfig::c3_standard_176(p);
+        cfg.horizon_cycles = u64::MAX; // run to completion
+        let mut sim = Sim::new(cfg);
+        let ctx0 = sim.ctx(0);
+        let faa = Rc::new(SimFaa::build(&spec, &ctx0, p));
+        let results: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(Vec::new()));
+        for tid in 0..p {
+            let ctx = sim.ctx(tid);
+            let faa = Rc::clone(&faa);
+            let results = Rc::clone(&results);
+            sim.spawn(tid, async move {
+                for _ in 0..per_thread {
+                    let v = faa.fetch_add(&ctx, 1).await;
+                    results.borrow_mut().push(v);
+                    ctx.work(ctx.rand_geometric(128.0)).await;
+                }
+            });
+        }
+        sim.run();
+        let mut r = results.borrow().clone();
+        r.sort_unstable();
+        let n = p as u64 * per_thread;
+        assert_eq!(r, (0..n).collect::<Vec<_>>(), "{} lost/dup results", spec.label());
+    }
+
+    #[test]
+    fn sim_hw_dense() {
+        run_dense_check(AlgoSpec::Hw, 8, 100);
+    }
+
+    #[test]
+    fn sim_aggfunnel_dense() {
+        run_dense_check(AlgoSpec::Agg { m: 2, direct: 0 }, 8, 100);
+    }
+
+    #[test]
+    fn sim_aggfunnel_many_threads_dense() {
+        run_dense_check(AlgoSpec::Agg { m: 4, direct: 0 }, 32, 40);
+    }
+
+    #[test]
+    fn sim_aggfunnel_with_direct_dense() {
+        run_dense_check(AlgoSpec::Agg { m: 2, direct: 2 }, 8, 100);
+    }
+
+    #[test]
+    fn sim_recursive_dense() {
+        run_dense_check(AlgoSpec::RecAgg { outer_m: 4, inner_m: 2 }, 16, 50);
+    }
+
+    #[test]
+    fn sim_combfunnel_dense() {
+        run_dense_check(AlgoSpec::Comb, 8, 60);
+    }
+
+    #[test]
+    fn sim_aggfunnel_mixed_signs() {
+        let p = 8;
+        let mut cfg = SimConfig::c3_standard_176(p);
+        cfg.horizon_cycles = u64::MAX;
+        let mut sim = Sim::new(cfg);
+        let ctx0 = sim.ctx(0);
+        let faa = Rc::new(SimFaa::build(&AlgoSpec::Agg { m: 2, direct: 0 }, &ctx0, p));
+        for tid in 0..p {
+            let ctx = sim.ctx(tid);
+            let faa = Rc::clone(&faa);
+            sim.spawn(tid, async move {
+                for i in 0..100i64 {
+                    let d = if (i + ctx.tid as i64) % 3 == 0 { -2 } else { 5 };
+                    faa.fetch_add(&ctx, d).await;
+                }
+            });
+        }
+        sim.run();
+        // Check final value via a fresh read.
+        let ctx = sim.ctx(0);
+        let faa2 = Rc::clone(&faa);
+        let mut expected = 0i64;
+        for tid in 0..p as i64 {
+            for i in 0..100 {
+                expected += if (i + tid) % 3 == 0 { -2 } else { 5 };
+            }
+        }
+        // One more tiny run step to read the value.
+        let done = Rc::new(Cell::new(0u64));
+        {
+            let done = Rc::clone(&done);
+            sim.spawn(0, async move {
+                done.set(faa2.read(&ctx).await);
+            });
+        }
+        sim.run();
+        assert_eq!(done.get() as i64, expected);
+    }
+
+    #[test]
+    fn sim_batching_reduces_main_faas() {
+        let p = 32;
+        let mut cfg = SimConfig::c3_standard_176(p);
+        cfg.horizon_cycles = u64::MAX;
+        let mut sim = Sim::new(cfg);
+        let ctx0 = sim.ctx(0);
+        let faa = Rc::new(SimFaa::build(&AlgoSpec::Agg { m: 1, direct: 0 }, &ctx0, p));
+        for tid in 0..p {
+            let ctx = sim.ctx(tid);
+            let faa = Rc::clone(&faa);
+            sim.spawn(tid, async move {
+                for _ in 0..50 {
+                    faa.fetch_add(&ctx, 1).await;
+                }
+            });
+        }
+        sim.run();
+        let (main_faas, ops) = faa.batch_stats();
+        assert_eq!(ops, 32 * 50);
+        assert!(
+            main_faas < ops / 2,
+            "expected real batching: {main_faas} main F&As for {ops} ops"
+        );
+    }
+
+    #[test]
+    fn sim_deterministic() {
+        let run = || {
+            let p = 8;
+            let mut cfg = SimConfig::c3_standard_176(p);
+            cfg.horizon_cycles = u64::MAX;
+            let mut sim = Sim::new(cfg);
+            let ctx0 = sim.ctx(0);
+            let faa = Rc::new(SimFaa::build(&AlgoSpec::Agg { m: 2, direct: 0 }, &ctx0, p));
+            for tid in 0..p {
+                let ctx = sim.ctx(tid);
+                let faa = Rc::clone(&faa);
+                sim.spawn(tid, async move {
+                    for _ in 0..100 {
+                        faa.fetch_add(&ctx, 1).await;
+                        ctx.work(ctx.rand_geometric(64.0)).await;
+                    }
+                });
+            }
+            let end = sim.run();
+            (end, sim.events_processed())
+        };
+        assert_eq!(run(), run());
+    }
+}

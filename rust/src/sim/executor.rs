@@ -1,0 +1,827 @@
+//! The discrete-event executor and simulated shared memory.
+//!
+//! Virtual threads are plain `async fn`s; every simulated memory
+//! access is an await point. The executor keeps a binary heap of
+//! `(completion_time, seq, tid)` events and always advances the
+//! earliest one, so execution order equals virtual-time order and runs
+//! are fully deterministic. A memory operation is *scheduled* when the
+//! future is first polled (reserving its cache-line slot and fixing
+//! its completion time) and takes *effect* when its event is popped —
+//! i.e. operations linearize in completion-time order.
+//!
+//! See [`super`] for the machine model rationale and calibration.
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context as TaskContext, Poll, Waker};
+
+use super::SimConfig;
+use crate::util::rng::Rng;
+
+/// Address of a simulated 64-bit word. `Addr` values are also stored
+/// *inside* simulated memory (as `u64`) to build linked structures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Addr(pub u32);
+
+/// Null simulated pointer (stored in memory as `u64::MAX`).
+pub const NULL_ADDR: u64 = u64::MAX;
+
+const WORDS_PER_LINE: u32 = 8;
+
+/// The pending memory operation of a virtual thread.
+#[derive(Clone, Debug)]
+enum OpKind {
+    Work,
+    Load { addr: Addr },
+    Store { addr: Addr, value: u64 },
+    Faa { addr: Addr, add: u64 },
+    Or { addr: Addr, bits: u64 },
+    Swap { addr: Addr, value: u64 },
+    Cas { addr: Addr, old: u64, new: u64 },
+    /// Double-width CAS over two *adjacent* words (same line).
+    Cas2 { addr: Addr, old: (u64, u64), new: (u64, u64) },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ThreadPhase {
+    /// No operation outstanding (being polled or about to be).
+    Running,
+    /// Operation scheduled; event will apply it.
+    Waiting,
+    /// Result available for the future to pick up.
+    Ready,
+    /// Parked on a line watcher (no event scheduled).
+    Parked,
+    /// Woken from a park; future must re-check its predicate.
+    Woken,
+    Done,
+}
+
+struct ThreadState {
+    phase: ThreadPhase,
+    pending: Option<OpKind>,
+    /// Result of the last applied op (old value for RMWs; for CAS the
+    /// witnessed value, with `cas_ok` flagging success).
+    result: u64,
+    result2: u64,
+    cas_ok: bool,
+    rng: Rng,
+    /// Completed user-level operations (filled by workloads).
+    ops_done: u64,
+}
+
+struct Line {
+    /// Core that last took the line exclusively (u32::MAX = nobody).
+    owner: u32,
+    /// Time until which the line is busy with exclusive transfers.
+    avail_at: u64,
+    /// Threads parked waiting for a write to this line.
+    watchers: Vec<usize>,
+}
+
+/// Shared simulator state (single-threaded; `Rc<RefCell>` inside).
+pub struct SimState {
+    cfg: SimConfig,
+    now: u64,
+    seq: u64,
+    events: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    heap: Vec<u64>,
+    lines: Vec<Line>,
+    threads: Vec<ThreadState>,
+    /// Statistics: total simulated memory events processed.
+    pub events_processed: u64,
+}
+
+impl SimState {
+    fn line_of(addr: Addr) -> usize {
+        (addr.0 / WORDS_PER_LINE) as usize
+    }
+
+    fn core_of(&self, tid: usize) -> u32 {
+        tid as u32
+    }
+
+    fn socket_of_core(&self, core: u32) -> usize {
+        core as usize % self.cfg.sockets
+    }
+
+    /// Transfer cost for `tid` touching a line currently owned by
+    /// `owner` (exclusive access).
+    fn access_cost(&self, tid: usize, owner: u32) -> u64 {
+        let c = self.core_of(tid);
+        if owner == c {
+            self.cfg.costs.local
+        } else if owner == u32::MAX
+            || self.socket_of_core(owner) == self.socket_of_core(c)
+        {
+            self.cfg.costs.same_socket
+        } else {
+            self.cfg.costs.cross_socket
+        }
+    }
+
+    /// Schedule `op` for `tid` at the current time; returns nothing —
+    /// the event will apply it. Exclusive ops serialize on the line.
+    fn schedule_op(&mut self, tid: usize, op: OpKind) {
+        let now = self.now;
+        let done = match &op {
+            OpKind::Work => unreachable!("work scheduled via schedule_work"),
+            OpKind::Load { addr } => {
+                let line = &self.lines[Self::line_of(*addr)];
+                let cost = self.access_cost(tid, line.owner);
+                // Loads wait for in-flight exclusive transfers but do
+                // not serialize each other or take ownership.
+                now.max(line.avail_at) + cost
+            }
+            OpKind::Store { addr, .. }
+            | OpKind::Faa { addr, .. }
+            | OpKind::Or { addr, .. }
+            | OpKind::Swap { addr, .. }
+            | OpKind::Cas { addr, .. }
+            | OpKind::Cas2 { addr, .. } => {
+                let li = Self::line_of(*addr);
+                let cost = self.access_cost(tid, self.lines[li].owner);
+                let core = self.core_of(tid);
+                let sticky = self.cfg.costs.owner_sticky;
+                let line = &mut self.lines[li];
+                if sticky && line.owner == core && line.avail_at > now {
+                    // Owner-sticky arbitration: the owning core slips
+                    // its RMW in ahead of queued remote transfers
+                    // without extending the line's busy window (see
+                    // CacheCosts::owner_sticky).
+                    now + cost
+                } else {
+                    let start = now.max(line.avail_at);
+                    let done = start + cost;
+                    line.avail_at = done; // exclusive: line busy until done
+                    line.owner = core;
+                    done
+                }
+            }
+        };
+        self.threads[tid].pending = Some(op);
+        self.threads[tid].phase = ThreadPhase::Waiting;
+        self.push_event(done, tid);
+    }
+
+    fn schedule_work(&mut self, tid: usize, cycles: u64) {
+        self.threads[tid].pending = Some(OpKind::Work);
+        self.threads[tid].phase = ThreadPhase::Waiting;
+        let done = self.now + cycles;
+        self.push_event(done, tid);
+    }
+
+    fn push_event(&mut self, time: u64, tid: usize) {
+        self.seq += 1;
+        self.events.push(Reverse((time, self.seq, tid)));
+    }
+
+    /// Apply `tid`'s pending op; store results; wake watchers on writes.
+    fn apply_pending(&mut self, tid: usize) {
+        let op = self.threads[tid].pending.take().expect("event without pending op");
+        self.events_processed += 1;
+        let mut woke_line: Option<usize> = None;
+        {
+            let t = &mut self.threads[tid];
+            t.cas_ok = false;
+            match op {
+                OpKind::Work => {
+                    t.result = 0;
+                }
+                OpKind::Load { addr } => {
+                    t.result = self.heap[addr.0 as usize];
+                }
+                OpKind::Store { addr, value } => {
+                    self.heap[addr.0 as usize] = value;
+                    t.result = 0;
+                    woke_line = Some(Self::line_of(addr));
+                }
+                OpKind::Faa { addr, add } => {
+                    let p = &mut self.heap[addr.0 as usize];
+                    t.result = *p;
+                    *p = p.wrapping_add(add);
+                    woke_line = Some(Self::line_of(addr));
+                }
+                OpKind::Or { addr, bits } => {
+                    let p = &mut self.heap[addr.0 as usize];
+                    t.result = *p;
+                    *p |= bits;
+                    woke_line = Some(Self::line_of(addr));
+                }
+                OpKind::Swap { addr, value } => {
+                    let p = &mut self.heap[addr.0 as usize];
+                    t.result = *p;
+                    *p = value;
+                    woke_line = Some(Self::line_of(addr));
+                }
+                OpKind::Cas { addr, old, new } => {
+                    let p = &mut self.heap[addr.0 as usize];
+                    t.result = *p;
+                    if *p == old {
+                        *p = new;
+                        t.cas_ok = true;
+                        woke_line = Some(Self::line_of(addr));
+                    }
+                }
+                OpKind::Cas2 { addr, old, new } => {
+                    let i = addr.0 as usize;
+                    t.result = self.heap[i];
+                    t.result2 = self.heap[i + 1];
+                    if self.heap[i] == old.0 && self.heap[i + 1] == old.1 {
+                        self.heap[i] = new.0;
+                        self.heap[i + 1] = new.1;
+                        t.cas_ok = true;
+                        woke_line = Some(Self::line_of(addr));
+                    }
+                }
+            }
+            t.phase = ThreadPhase::Ready;
+        }
+        if let Some(li) = woke_line {
+            // Ownership follows the op that actually completed (the
+            // physical holder) — this is what lets owner-sticky
+            // arbitration model consecutive same-core RMWs.
+            self.lines[li].owner = self.core_of(tid);
+            if !self.lines[li].watchers.is_empty() {
+                let watchers = std::mem::take(&mut self.lines[li].watchers);
+                let wake_at = self.now + self.cfg.costs.wake;
+                for w in watchers {
+                    self.threads[w].phase = ThreadPhase::Woken;
+                    self.push_event(wake_at, w);
+                }
+            }
+        }
+    }
+}
+
+/// Handle a virtual thread uses to touch the simulated machine.
+#[derive(Clone)]
+pub struct Ctx {
+    pub tid: usize,
+    state: Rc<RefCell<SimState>>,
+}
+
+impl Ctx {
+    /// Current virtual time (cycles).
+    pub fn now(&self) -> u64 {
+        self.state.borrow().now
+    }
+
+    pub fn config(&self) -> SimConfig {
+        self.state.borrow().cfg.clone()
+    }
+
+    /// Draw from this thread's deterministic RNG.
+    pub fn rand_u64(&self) -> u64 {
+        self.state.borrow_mut().threads[self.tid].rng.next_u64()
+    }
+
+    /// Geometric local-work sample with the given mean, in cycles.
+    pub fn rand_geometric(&self, mean: f64) -> u64 {
+        self.state.borrow_mut().threads[self.tid].rng.geometric(mean)
+    }
+
+    /// Count one completed user-level operation for this thread.
+    pub fn count_op(&self) {
+        self.state.borrow_mut().threads[self.tid].ops_done += 1;
+    }
+
+    /// Allocate `n` fresh words, starting on a cache-line boundary.
+    /// (Bump allocator; the simulator never frees.)
+    pub fn alloc(&self, n: usize) -> Addr {
+        let mut s = self.state.borrow_mut();
+        // Round up to a line boundary.
+        let start = (s.heap.len() as u32).div_ceil(WORDS_PER_LINE) * WORDS_PER_LINE;
+        let end = start as usize + n.max(1);
+        s.heap.resize(end, 0);
+        let need_lines = (end as u32).div_ceil(WORDS_PER_LINE) as usize;
+        while s.lines.len() < need_lines {
+            s.lines.push(Line { owner: u32::MAX, avail_at: 0, watchers: Vec::new() });
+        }
+        Addr(start)
+    }
+
+    /// Allocate a whole cache line holding `n ≤ 8` words (padded).
+    pub fn alloc_line(&self, n: usize) -> Addr {
+        debug_assert!(n as u32 <= WORDS_PER_LINE);
+        let a = self.alloc(WORDS_PER_LINE as usize);
+        let _ = n;
+        a
+    }
+
+    /// Host-side direct write, for initializing structures before (or
+    /// while) the simulation runs. Charges no cycles and wakes no
+    /// watchers — use only for freshly allocated, unpublished memory.
+    pub fn poke(&self, addr: Addr, value: u64) {
+        self.state.borrow_mut().heap[addr.0 as usize] = value;
+    }
+
+    /// Host-side direct read (no cycles) — for assertions in tests and
+    /// post-run metric extraction.
+    pub fn peek(&self, addr: Addr) -> u64 {
+        self.state.borrow().heap[addr.0 as usize]
+    }
+
+    fn op(&self, kind: OpKind) -> OpFuture {
+        OpFuture { ctx: self.clone(), kind: Some(kind) }
+    }
+
+    pub fn load(&self, addr: Addr) -> impl Future<Output = u64> + '_ {
+        let f = self.op(OpKind::Load { addr });
+        async move { f.await.0 }
+    }
+
+    pub fn store(&self, addr: Addr, value: u64) -> impl Future<Output = ()> + '_ {
+        let f = self.op(OpKind::Store { addr, value });
+        async move {
+            f.await;
+        }
+    }
+
+    pub fn faa(&self, addr: Addr, add: u64) -> impl Future<Output = u64> + '_ {
+        let f = self.op(OpKind::Faa { addr, add });
+        async move { f.await.0 }
+    }
+
+    pub fn swap(&self, addr: Addr, value: u64) -> impl Future<Output = u64> + '_ {
+        let f = self.op(OpKind::Swap { addr, value });
+        async move { f.await.0 }
+    }
+
+    /// Atomic OR; returns the previous value.
+    pub fn fetch_or(&self, addr: Addr, bits: u64) -> impl Future<Output = u64> + '_ {
+        let f = self.op(OpKind::Or { addr, bits });
+        async move { f.await.0 }
+    }
+
+    /// CAS; returns `(witnessed, success)`.
+    pub fn cas(&self, addr: Addr, old: u64, new: u64) -> impl Future<Output = (u64, bool)> + '_ {
+        let f = self.op(OpKind::Cas { addr, old, new });
+        async move {
+            let (v, _v2, ok) = f.await;
+            (v, ok)
+        }
+    }
+
+    /// Double-width CAS on adjacent words; returns witnessed pair + success.
+    pub fn cas2(
+        &self,
+        addr: Addr,
+        old: (u64, u64),
+        new: (u64, u64),
+    ) -> impl Future<Output = ((u64, u64), bool)> + '_ {
+        debug_assert!(addr.0 % WORDS_PER_LINE < WORDS_PER_LINE - 1, "cas2 pair must share a line");
+        let f = self.op(OpKind::Cas2 { addr, old, new });
+        async move {
+            let (v, v2, ok) = f.await;
+            ((v, v2), ok)
+        }
+    }
+
+    /// Local computation for `cycles` (no memory traffic).
+    pub fn work(&self, cycles: u64) -> impl Future<Output = ()> + '_ {
+        WorkFuture { ctx: self.clone(), cycles: Some(cycles) }
+    }
+
+    /// Spin until `pred(word value)` holds; models MONITOR/MWAIT-style
+    /// spinning: one costed load, then park until the line is written.
+    /// Returns the satisfying value.
+    pub async fn spin_until(&self, addr: Addr, pred: impl Fn(u64) -> bool) -> u64 {
+        // First probe is a normal (costed) load.
+        let v = self.load(addr).await;
+        if pred(v) {
+            return v;
+        }
+        loop {
+            let v = ParkFuture { ctx: self.clone(), addr, registered: false }.await;
+            if pred(v) {
+                return v;
+            }
+        }
+    }
+}
+
+/// Future for one scheduled memory/work op. Resolves to
+/// `(result, result2, cas_ok)`.
+struct OpFuture {
+    ctx: Ctx,
+    kind: Option<OpKind>,
+}
+
+impl Future for OpFuture {
+    type Output = (u64, u64, bool);
+
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut TaskContext<'_>) -> Poll<Self::Output> {
+        let tid = self.ctx.tid;
+        let state = Rc::clone(&self.ctx.state);
+        let mut s = state.borrow_mut();
+        match s.threads[tid].phase {
+            ThreadPhase::Running => {
+                let kind = self.kind.take().expect("OpFuture polled without op");
+                s.schedule_op(tid, kind);
+                Poll::Pending
+            }
+            ThreadPhase::Ready => {
+                s.threads[tid].phase = ThreadPhase::Running;
+                let t = &s.threads[tid];
+                Poll::Ready((t.result, t.result2, t.cas_ok))
+            }
+            ThreadPhase::Waiting => Poll::Pending,
+            other => unreachable!("OpFuture in phase {other:?}"),
+        }
+    }
+}
+
+struct WorkFuture {
+    ctx: Ctx,
+    cycles: Option<u64>,
+}
+
+impl Future for WorkFuture {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut TaskContext<'_>) -> Poll<Self::Output> {
+        let tid = self.ctx.tid;
+        let state = Rc::clone(&self.ctx.state);
+        let mut s = state.borrow_mut();
+        match s.threads[tid].phase {
+            ThreadPhase::Running => {
+                let cycles = self.cycles.take().expect("WorkFuture repolled");
+                if cycles == 0 {
+                    return Poll::Ready(());
+                }
+                s.schedule_work(tid, cycles);
+                Poll::Pending
+            }
+            ThreadPhase::Ready => {
+                s.threads[tid].phase = ThreadPhase::Running;
+                Poll::Ready(())
+            }
+            ThreadPhase::Waiting => Poll::Pending,
+            other => unreachable!("WorkFuture in phase {other:?}"),
+        }
+    }
+}
+
+/// Park on a line until it is written; resolves to the word's value at
+/// wake time (the refetch the waking invalidation implies — its cost
+/// is the `wake` latency already charged).
+struct ParkFuture {
+    ctx: Ctx,
+    addr: Addr,
+    registered: bool,
+}
+
+impl Future for ParkFuture {
+    type Output = u64;
+
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut TaskContext<'_>) -> Poll<Self::Output> {
+        let tid = self.ctx.tid;
+        let addr = self.addr;
+        let state = Rc::clone(&self.ctx.state);
+        let mut s = state.borrow_mut();
+        if !self.registered {
+            self.registered = true;
+            let li = SimState::line_of(addr);
+            s.lines[li].watchers.push(tid);
+            s.threads[tid].phase = ThreadPhase::Parked;
+            return Poll::Pending;
+        }
+        match s.threads[tid].phase {
+            ThreadPhase::Woken => {
+                s.threads[tid].phase = ThreadPhase::Running;
+                Poll::Ready(s.heap[addr.0 as usize])
+            }
+            ThreadPhase::Parked => Poll::Pending,
+            other => unreachable!("ParkFuture in phase {other:?}"),
+        }
+    }
+}
+
+/// The simulator: spawn virtual threads, run to quiescence or horizon.
+pub struct Sim {
+    state: Rc<RefCell<SimState>>,
+    threads: Vec<Option<Pin<Box<dyn Future<Output = ()>>>>>,
+}
+
+impl Sim {
+    pub fn new(cfg: SimConfig) -> Self {
+        let mut seed_rng = Rng::new(cfg.seed);
+        let threads = (0..cfg.threads)
+            .map(|t| ThreadState {
+                phase: ThreadPhase::Running,
+                pending: None,
+                result: 0,
+                result2: 0,
+                cas_ok: false,
+                rng: seed_rng.fork(t as u64),
+                ops_done: 0,
+            })
+            .collect();
+        let state = Rc::new(RefCell::new(SimState {
+            cfg,
+            now: 0,
+            seq: 0,
+            events: BinaryHeap::new(),
+            heap: Vec::new(),
+            lines: Vec::new(),
+            threads,
+            events_processed: 0,
+        }));
+        let nthreads = state.borrow().cfg.threads;
+        Sim { state, threads: (0..nthreads).map(|_| None).collect() }
+    }
+
+    /// Context for allocating shared structures before spawning.
+    pub fn ctx(&self, tid: usize) -> Ctx {
+        Ctx { tid, state: Rc::clone(&self.state) }
+    }
+
+    /// Install the body of virtual thread `tid` (replacing any
+    /// previously finished body — `run` can be called again).
+    pub fn spawn<Fut>(&mut self, tid: usize, fut: Fut)
+    where
+        Fut: Future<Output = ()> + 'static,
+    {
+        self.threads[tid] = Some(Box::pin(fut));
+        self.state.borrow_mut().threads[tid].phase = ThreadPhase::Running;
+    }
+
+    /// Drive the simulation until all threads finish or the event heap
+    /// drains (parked threads past the horizon are abandoned).
+    /// Returns the final virtual time.
+    pub fn run(&mut self) -> u64 {
+        let waker = Waker::noop();
+        let mut cx = TaskContext::from_waker(waker);
+
+        // Initial poll of every thread to get first events scheduled.
+        for tid in 0..self.threads.len() {
+            self.poll_thread(tid, &mut cx);
+        }
+        loop {
+            let ev = {
+                let mut s = self.state.borrow_mut();
+                match s.events.pop() {
+                    Some(Reverse(ev)) => {
+                        s.now = ev.0;
+                        ev
+                    }
+                    None => break,
+                }
+            };
+            let (_time, _seq, tid) = ev;
+            {
+                let mut s = self.state.borrow_mut();
+                if s.threads[tid].phase == ThreadPhase::Waiting {
+                    s.apply_pending(tid);
+                } else if s.threads[tid].phase != ThreadPhase::Woken {
+                    // Stale event (e.g. thread finished); skip.
+                    continue;
+                }
+            }
+            self.poll_thread(tid, &mut cx);
+        }
+        self.state.borrow().now
+    }
+
+    fn poll_thread(&mut self, tid: usize, cx: &mut TaskContext<'_>) {
+        if let Some(fut) = &mut self.threads[tid] {
+            if fut.as_mut().poll(cx).is_ready() {
+                self.threads[tid] = None;
+                self.state.borrow_mut().threads[tid].phase = ThreadPhase::Done;
+            }
+        }
+    }
+
+    /// Per-thread completed-op counters (for throughput/fairness).
+    pub fn ops_done(&self) -> Vec<u64> {
+        self.state.borrow().threads.iter().map(|t| t.ops_done).collect()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.state.borrow().events_processed
+    }
+
+    pub fn now(&self) -> u64 {
+        self.state.borrow().now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+
+    fn small_cfg(threads: usize) -> SimConfig {
+        SimConfig::c3_standard_176(threads)
+    }
+
+    #[test]
+    fn single_thread_work_advances_clock() {
+        let mut sim = Sim::new(small_cfg(1));
+        let ctx = sim.ctx(0);
+        sim.spawn(0, async move {
+            ctx.work(1000).await;
+            ctx.work(500).await;
+        });
+        let end = sim.run();
+        assert_eq!(end, 1500);
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let mut sim = Sim::new(small_cfg(1));
+        let ctx = sim.ctx(0);
+        let a = ctx.alloc_line(1);
+        sim.spawn(0, async move {
+            ctx.store(a, 42).await;
+            let v = ctx.load(a).await;
+            assert_eq!(v, 42);
+            ctx.count_op();
+        });
+        sim.run();
+        assert_eq!(sim.ops_done(), vec![1]);
+    }
+
+    #[test]
+    fn faa_serializes_and_returns_old() {
+        let p = 4;
+        let mut sim = Sim::new(small_cfg(p));
+        let shared = sim.ctx(0).alloc_line(1);
+        for tid in 0..p {
+            let ctx = sim.ctx(tid);
+            sim.spawn(tid, async move {
+                for _ in 0..100 {
+                    ctx.faa(shared, 1).await;
+                    ctx.count_op();
+                }
+            });
+        }
+        let end = sim.run();
+        // 400 serialized RMWs: end time at least 400 × local cost.
+        assert!(end >= 400 * 14);
+        assert_eq!(sim.ops_done().iter().sum::<u64>(), 400);
+    }
+
+    #[test]
+    fn faa_results_dense() {
+        let p = 8;
+        let mut sim = Sim::new(small_cfg(p));
+        let shared = sim.ctx(0).alloc_line(1);
+        let results: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(Vec::new()));
+        for tid in 0..p {
+            let ctx = sim.ctx(tid);
+            let results = Rc::clone(&results);
+            sim.spawn(tid, async move {
+                for _ in 0..50 {
+                    let v = ctx.faa(shared, 1).await;
+                    results.borrow_mut().push(v);
+                    ctx.work(ctx.rand_geometric(100.0)).await;
+                }
+            });
+        }
+        sim.run();
+        let mut r = results.borrow().clone();
+        r.sort_unstable();
+        assert_eq!(*r, (0..400u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cas_success_and_failure() {
+        let mut sim = Sim::new(small_cfg(1));
+        let ctx = sim.ctx(0);
+        let a = ctx.alloc_line(1);
+        sim.spawn(0, async move {
+            let (w, ok) = ctx.cas(a, 0, 7).await;
+            assert!(ok);
+            assert_eq!(w, 0);
+            let (w, ok) = ctx.cas(a, 0, 9).await;
+            assert!(!ok);
+            assert_eq!(w, 7);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn cas2_pairs() {
+        let mut sim = Sim::new(small_cfg(1));
+        let ctx = sim.ctx(0);
+        let a = ctx.alloc_line(2);
+        sim.spawn(0, async move {
+            ctx.store(a, 1).await;
+            ctx.store(Addr(a.0 + 1), 2).await;
+            let (_, ok) = ctx.cas2(a, (1, 2), (3, 4)).await;
+            assert!(ok);
+            assert_eq!(ctx.load(a).await, 3);
+            assert_eq!(ctx.load(Addr(a.0 + 1)).await, 4);
+            let (w, ok) = ctx.cas2(a, (1, 2), (9, 9)).await;
+            assert!(!ok);
+            assert_eq!(w, (3, 4));
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn spin_until_wakes_on_store() {
+        let mut sim = Sim::new(small_cfg(2));
+        let flag = sim.ctx(0).alloc_line(1);
+        let ctx0 = sim.ctx(0);
+        sim.spawn(0, async move {
+            let v = ctx0.spin_until(flag, |v| v == 5).await;
+            assert_eq!(v, 5);
+            // The waiter must wake after the writer's store at t≈10_000.
+            assert!(ctx0.now() >= 10_000);
+            ctx0.count_op();
+        });
+        let ctx1 = sim.ctx(1);
+        sim.spawn(1, async move {
+            ctx1.work(10_000).await;
+            ctx1.store(flag, 5).await;
+        });
+        sim.run();
+        assert_eq!(sim.ops_done()[0], 1);
+    }
+
+    #[test]
+    fn spin_until_sees_multiple_writes(){
+        let mut sim = Sim::new(small_cfg(2));
+        let w = sim.ctx(0).alloc_line(1);
+        let ctx0 = sim.ctx(0);
+        sim.spawn(0, async move {
+            // Wait for the value 3 specifically; earlier writes rewake us.
+            let v = ctx0.spin_until(w, |v| v == 3).await;
+            assert_eq!(v, 3);
+            ctx0.count_op();
+        });
+        let ctx1 = sim.ctx(1);
+        sim.spawn(1, async move {
+            for i in 1..=3u64 {
+                ctx1.work(5_000).await;
+                ctx1.store(w, i).await;
+            }
+        });
+        sim.run();
+        assert_eq!(sim.ops_done()[0], 1);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let run = || {
+            let p = 6;
+            let mut sim = Sim::new(small_cfg(p));
+            let shared = sim.ctx(0).alloc_line(1);
+            for tid in 0..p {
+                let ctx = sim.ctx(tid);
+                sim.spawn(tid, async move {
+                    for _ in 0..200 {
+                        ctx.faa(shared, 1).await;
+                        ctx.work(ctx.rand_geometric(512.0)).await;
+                    }
+                });
+            }
+            let end = sim.run();
+            (end, sim.events_processed())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn remote_access_costs_more_than_local() {
+        // One thread hammers a line it owns vs. alternating owners.
+        let solo_time = {
+            let mut sim = Sim::new(small_cfg(1));
+            let a = sim.ctx(0).alloc_line(1);
+            let ctx = sim.ctx(0);
+            sim.spawn(0, async move {
+                for _ in 0..1000 {
+                    ctx.faa(a, 1).await;
+                }
+            });
+            sim.run()
+        };
+        let duo_time = {
+            let mut sim = Sim::new(small_cfg(2));
+            let a = sim.ctx(0).alloc_line(1);
+            for tid in 0..2 {
+                let ctx = sim.ctx(tid);
+                sim.spawn(tid, async move {
+                    for _ in 0..500 {
+                        ctx.faa(a, 1).await;
+                    }
+                });
+            }
+            sim.run()
+        };
+        assert!(
+            duo_time > solo_time,
+            "line bouncing must cost more: solo {solo_time}, duo {duo_time}"
+        );
+    }
+
+    use std::cell::RefCell;
+    use std::rc::Rc;
+}

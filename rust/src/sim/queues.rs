@@ -1,0 +1,533 @@
+//! Simulator ports of the concurrent queues (paper §4.5 / Fig. 6).
+//!
+//! `SimLcrq` mirrors [`crate::queue::lcrq`]: rings of CAS2 cells with
+//! fetch-and-add indices, pluggable between hardware F&A, Aggregating
+//! Funnels and Combining Funnels. `SimPrq` mirrors the single-word
+//! variant and `SimMsq` the Michael–Scott baseline — together covering
+//! every line of the paper's Figure 6 (see DESIGN.md §Substitutions for
+//! the LSCQ→PRQ note).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::algos::{SimAggFunnel, SimCombFunnel, SimMain};
+use super::executor::{Addr, Ctx, NULL_ADDR};
+
+const CLOSED: u64 = 1 << 63;
+const SAFE: u64 = 1 << 63;
+const IDX_MASK: u64 = !SAFE;
+const EMPTY: u64 = u64::MAX;
+
+/// Which fetch-and-add object drives ring indices.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimIndexSpec {
+    Hw,
+    Agg { m: usize },
+    Comb { threads: usize },
+}
+
+impl SimIndexSpec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimIndexSpec::Hw => "lcrq",
+            SimIndexSpec::Agg { .. } => "lcrq+aggfunnel",
+            SimIndexSpec::Comb { .. } => "lcrq+combfunnel",
+        }
+    }
+
+    fn build(&self, ctx: &Ctx, initial: u64) -> SimIndex {
+        match self {
+            SimIndexSpec::Hw => {
+                let a = ctx.alloc_line(1);
+                ctx.poke(a, initial);
+                SimIndex::Hw(a)
+            }
+            SimIndexSpec::Agg { m } => {
+                let f = SimAggFunnel::new(ctx, *m, 0, SimMain::Word(ctx.alloc_line(1)));
+                ctx.poke(f.main_addr(), initial);
+                SimIndex::Agg(f)
+            }
+            SimIndexSpec::Comb { threads } => {
+                let f = SimCombFunnel::new(ctx, *threads);
+                ctx.poke(f.main, initial);
+                SimIndex::Comb(f)
+            }
+        }
+    }
+}
+
+/// A simulated fetch-and-add index cell.
+pub enum SimIndex {
+    Hw(Addr),
+    Agg(SimAggFunnel),
+    Comb(SimCombFunnel),
+}
+
+impl SimIndex {
+    async fn faa(&self, ctx: &Ctx, add: u64) -> u64 {
+        match self {
+            SimIndex::Hw(a) => ctx.faa(*a, add).await,
+            SimIndex::Agg(f) => f.fetch_add(ctx, add as i64).await,
+            SimIndex::Comb(f) => f.fetch_add(ctx, add as i64).await,
+        }
+    }
+
+    async fn load(&self, ctx: &Ctx) -> u64 {
+        match self {
+            SimIndex::Hw(a) => ctx.load(*a).await,
+            SimIndex::Agg(f) => f.read(ctx).await,
+            SimIndex::Comb(f) => ctx.load(f.main).await,
+        }
+    }
+
+    async fn fetch_or(&self, ctx: &Ctx, bits: u64) -> u64 {
+        match self {
+            SimIndex::Hw(a) => ctx.fetch_or(*a, bits).await,
+            SimIndex::Agg(f) => f.fetch_or(ctx, bits).await,
+            SimIndex::Comb(f) => ctx.fetch_or(f.main, bits).await,
+        }
+    }
+
+    async fn cas(&self, ctx: &Ctx, old: u64, new: u64) -> u64 {
+        match self {
+            SimIndex::Hw(a) => ctx.cas(*a, old, new).await.0,
+            SimIndex::Agg(f) => f.cas_main(ctx, old, new).await,
+            SimIndex::Comb(f) => ctx.cas(f.main, old, new).await.0,
+        }
+    }
+}
+
+struct SimRing {
+    head: SimIndex,
+    tail: SimIndex,
+    /// Sim word holding the next ring's id (NULL_ADDR sentinel = none).
+    next: Addr,
+    /// Base of `2 * size` words; cell i = (idx word, value word).
+    cells: Addr,
+    order: u32,
+}
+
+impl SimRing {
+    fn new(spec: &SimIndexSpec, ctx: &Ctx, order: u32, first: Option<u64>) -> SimRing {
+        let size = 1u32 << order;
+        let cells = ctx.alloc((2 * size) as usize);
+        for i in 0..size {
+            ctx.poke(Addr(cells.0 + 2 * i), SAFE | i as u64);
+            ctx.poke(Addr(cells.0 + 2 * i + 1), EMPTY);
+        }
+        let next = ctx.alloc_line(1);
+        ctx.poke(next, NULL_ADDR);
+        let (t0, h0) = match first {
+            Some(x) => {
+                ctx.poke(cells, SAFE);
+                ctx.poke(Addr(cells.0 + 1), x);
+                (1, 0)
+            }
+            None => (0, 0),
+        };
+        SimRing {
+            head: spec.build(ctx, h0),
+            tail: spec.build(ctx, t0),
+            next,
+            cells,
+            order,
+        }
+    }
+
+    fn size(&self) -> u64 {
+        1 << self.order
+    }
+
+    fn cell_addr(&self, round: u64) -> Addr {
+        Addr(self.cells.0 + 2 * (round & (self.size() - 1)) as u32)
+    }
+
+    async fn enqueue(&self, ctx: &Ctx, item: u64) -> Result<(), ()> {
+        let mut attempts = 0u32;
+        loop {
+            let t_raw = self.tail.faa(ctx, 1).await;
+            if t_raw & CLOSED != 0 {
+                return Err(());
+            }
+            let t = t_raw;
+            let slot = self.cell_addr(t);
+            let safe_idx = ctx.load(slot).await;
+            let val = ctx.load(Addr(slot.0 + 1)).await;
+            let idx = safe_idx & IDX_MASK;
+            let safe = safe_idx & SAFE != 0;
+            if val == EMPTY && idx <= t && (safe || self.head.load(ctx).await <= t) {
+                let (_, ok) =
+                    ctx.cas2(slot, (safe_idx, EMPTY), (SAFE | t, item)).await;
+                if ok {
+                    return Ok(());
+                }
+            }
+            attempts += 1;
+            let h = self.head.load(ctx).await;
+            if t.wrapping_sub(h) >= self.size() || attempts > 16 {
+                self.tail.fetch_or(ctx, CLOSED).await;
+                return Err(());
+            }
+        }
+    }
+
+    async fn dequeue(&self, ctx: &Ctx) -> Result<u64, ()> {
+        loop {
+            let h = self.head.faa(ctx, 1).await;
+            let slot = self.cell_addr(h);
+            loop {
+                let safe_idx = ctx.load(slot).await;
+                let val = ctx.load(Addr(slot.0 + 1)).await;
+                let idx = safe_idx & IDX_MASK;
+                if idx > h {
+                    break;
+                }
+                if val != EMPTY {
+                    if idx == h {
+                        let (_, ok) = ctx
+                            .cas2(
+                                slot,
+                                (safe_idx, val),
+                                ((safe_idx & SAFE) | (h + self.size()), EMPTY),
+                            )
+                            .await;
+                        if ok {
+                            return Ok(val);
+                        }
+                    } else {
+                        // mark unsafe
+                        let (_, ok) = ctx.cas2(slot, (safe_idx, val), (idx, val)).await;
+                        if ok {
+                            break;
+                        }
+                    }
+                } else {
+                    let (_, ok) = ctx
+                        .cas2(
+                            slot,
+                            (safe_idx, EMPTY),
+                            ((safe_idx & SAFE) | (h + self.size()), EMPTY),
+                        )
+                        .await;
+                    if ok {
+                        break;
+                    }
+                }
+            }
+            let t = self.tail.load(ctx).await & !CLOSED;
+            if t <= h + 1 {
+                self.fix_state(ctx).await;
+                return Err(());
+            }
+        }
+    }
+
+    async fn fix_state(&self, ctx: &Ctx) {
+        loop {
+            let t_raw = self.tail.load(ctx).await;
+            let h = self.head.load(ctx).await;
+            if h <= (t_raw & !CLOSED) {
+                return;
+            }
+            let new = (t_raw & CLOSED) | h;
+            if self.tail.cas(ctx, t_raw, new).await == t_raw {
+                return;
+            }
+        }
+    }
+}
+
+/// Simulated LCRQ (linked rings, pluggable F&A indices).
+pub struct SimLcrq {
+    spec: SimIndexSpec,
+    rings: RefCell<Vec<Rc<SimRing>>>,
+    /// Sim words holding the head/tail ring ids.
+    head_ptr: Addr,
+    tail_ptr: Addr,
+    order: u32,
+}
+
+impl SimLcrq {
+    pub fn new(spec: SimIndexSpec, ctx: &Ctx, order: u32) -> Self {
+        let first = Rc::new(SimRing::new(&spec, ctx, order, None));
+        let head_ptr = ctx.alloc_line(1);
+        let tail_ptr = ctx.alloc_line(1);
+        ctx.poke(head_ptr, 0);
+        ctx.poke(tail_ptr, 0);
+        Self { spec, rings: RefCell::new(vec![first]), head_ptr, tail_ptr, order }
+    }
+
+    pub fn label(&self) -> &'static str {
+        self.spec.label()
+    }
+
+    fn ring(&self, id: u64) -> Rc<SimRing> {
+        Rc::clone(&self.rings.borrow()[id as usize])
+    }
+
+    fn add_ring(&self, ring: SimRing) -> u64 {
+        let mut rings = self.rings.borrow_mut();
+        rings.push(Rc::new(ring));
+        (rings.len() - 1) as u64
+    }
+
+    pub async fn enqueue(&self, ctx: &Ctx, item: u64) {
+        loop {
+            let tail_id = ctx.load(self.tail_ptr).await;
+            let ring = self.ring(tail_id);
+            let next = ctx.load(ring.next).await;
+            if next != NULL_ADDR {
+                let _ = ctx.cas(self.tail_ptr, tail_id, next).await;
+                continue;
+            }
+            if ring.enqueue(ctx, item).await.is_ok() {
+                return;
+            }
+            // Ring closed: build a successor carrying our item.
+            let fresh = SimRing::new(&self.spec, ctx, self.order, Some(item));
+            let fresh_id = self.add_ring(fresh);
+            let (_, linked) = ctx.cas(ring.next, NULL_ADDR, fresh_id).await;
+            if linked {
+                let _ = ctx.cas(self.tail_ptr, tail_id, fresh_id).await;
+                return;
+            }
+            // Lost the race; our ring is garbage (bump allocator, no free).
+        }
+    }
+
+    pub async fn dequeue(&self, ctx: &Ctx) -> Option<u64> {
+        loop {
+            let head_id = ctx.load(self.head_ptr).await;
+            let ring = self.ring(head_id);
+            if let Ok(v) = ring.dequeue(ctx).await {
+                return Some(v);
+            }
+            let next = ctx.load(ring.next).await;
+            if next == NULL_ADDR {
+                return None;
+            }
+            if let Ok(v) = ring.dequeue(ctx).await {
+                return Some(v);
+            }
+            let _ = ctx.cas(self.head_ptr, head_id, next).await;
+        }
+    }
+}
+
+/// Simulated Michael–Scott queue (CAS-retry baseline for Fig. 6).
+pub struct SimMsq {
+    /// Sim words: head/tail hold node addresses.
+    head: Addr,
+    tail: Addr,
+}
+
+// Node layout (one line): value, next.
+const MN_VALUE: u32 = 0;
+const MN_NEXT: u32 = 1;
+
+impl SimMsq {
+    pub fn new(ctx: &Ctx) -> Self {
+        let dummy = ctx.alloc_line(2);
+        ctx.poke(Addr(dummy.0 + MN_VALUE), EMPTY);
+        ctx.poke(Addr(dummy.0 + MN_NEXT), NULL_ADDR);
+        let head = ctx.alloc_line(1);
+        let tail = ctx.alloc_line(1);
+        ctx.poke(head, dummy.0 as u64);
+        ctx.poke(tail, dummy.0 as u64);
+        Self { head, tail }
+    }
+
+    pub async fn enqueue(&self, ctx: &Ctx, item: u64) {
+        let node = ctx.alloc_line(2);
+        ctx.poke(Addr(node.0 + MN_VALUE), item);
+        ctx.poke(Addr(node.0 + MN_NEXT), NULL_ADDR);
+        loop {
+            let tail = ctx.load(self.tail).await;
+            let next_addr = Addr(tail as u32 + MN_NEXT);
+            let next = ctx.load(next_addr).await;
+            if next == NULL_ADDR {
+                let (_, ok) = ctx.cas(next_addr, NULL_ADDR, node.0 as u64).await;
+                if ok {
+                    let _ = ctx.cas(self.tail, tail, node.0 as u64).await;
+                    return;
+                }
+            } else {
+                let _ = ctx.cas(self.tail, tail, next).await;
+            }
+        }
+    }
+
+    pub async fn dequeue(&self, ctx: &Ctx) -> Option<u64> {
+        loop {
+            let head = ctx.load(self.head).await;
+            let tail = ctx.load(self.tail).await;
+            let next = ctx.load(Addr(head as u32 + MN_NEXT)).await;
+            if head == tail {
+                if next == NULL_ADDR {
+                    return None;
+                }
+                let _ = ctx.cas(self.tail, tail, next).await;
+                continue;
+            }
+            let value = ctx.load(Addr(next as u32 + MN_VALUE)).await;
+            let (_, ok) = ctx.cas(self.head, head, next).await;
+            if ok {
+                return Some(value);
+            }
+        }
+    }
+}
+
+/// The queue variants in the Fig. 6 matrix.
+pub enum SimQueue {
+    Lcrq(SimLcrq),
+    Msq(SimMsq),
+}
+
+/// Queue algorithm axis for the simulated benchmark.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueueSpec {
+    LcrqHw,
+    LcrqAgg { m: usize },
+    LcrqComb,
+    Msq,
+}
+
+impl QueueSpec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            QueueSpec::LcrqHw => "lcrq",
+            QueueSpec::LcrqAgg { .. } => "lcrq+aggfunnel",
+            QueueSpec::LcrqComb => "lcrq+combfunnel",
+            QueueSpec::Msq => "msq",
+        }
+    }
+
+    pub fn build(&self, ctx: &Ctx, threads: usize, ring_order: u32) -> SimQueue {
+        match self {
+            QueueSpec::LcrqHw => SimQueue::Lcrq(SimLcrq::new(SimIndexSpec::Hw, ctx, ring_order)),
+            QueueSpec::LcrqAgg { m } => {
+                SimQueue::Lcrq(SimLcrq::new(SimIndexSpec::Agg { m: *m }, ctx, ring_order))
+            }
+            QueueSpec::LcrqComb => {
+                SimQueue::Lcrq(SimLcrq::new(SimIndexSpec::Comb { threads }, ctx, ring_order))
+            }
+            QueueSpec::Msq => SimQueue::Msq(SimMsq::new(ctx)),
+        }
+    }
+}
+
+impl SimQueue {
+    pub async fn enqueue(&self, ctx: &Ctx, item: u64) {
+        match self {
+            SimQueue::Lcrq(q) => q.enqueue(ctx, item).await,
+            SimQueue::Msq(q) => q.enqueue(ctx, item).await,
+        }
+    }
+
+    pub async fn dequeue(&self, ctx: &Ctx) -> Option<u64> {
+        match self {
+            SimQueue::Lcrq(q) => q.dequeue(ctx).await,
+            SimQueue::Msq(q) => q.dequeue(ctx).await,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Sim, SimConfig};
+
+    fn fifo_check(spec: QueueSpec, p: usize, per_thread: u64, ring_order: u32) {
+        let mut cfg = SimConfig::c3_standard_176(p);
+        cfg.horizon_cycles = u64::MAX;
+        let mut sim = Sim::new(cfg);
+        let ctx0 = sim.ctx(0);
+        let q = Rc::new(spec.build(&ctx0, p, ring_order));
+        let consumed: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(Vec::new()));
+        let producers = p / 2;
+        for tid in 0..producers {
+            let ctx = sim.ctx(tid);
+            let q = Rc::clone(&q);
+            sim.spawn(tid, async move {
+                for seq in 0..per_thread {
+                    q.enqueue(&ctx, ((tid as u64) << 32) | seq).await;
+                    ctx.work(ctx.rand_geometric(128.0)).await;
+                }
+            });
+        }
+        let total = producers as u64 * per_thread;
+        let remaining = Rc::new(std::cell::Cell::new(total));
+        for tid in producers..p {
+            let ctx = sim.ctx(tid);
+            let q = Rc::clone(&q);
+            let consumed = Rc::clone(&consumed);
+            let remaining = Rc::clone(&remaining);
+            sim.spawn(tid, async move {
+                while remaining.get() > 0 {
+                    if let Some(v) = q.dequeue(&ctx).await {
+                        consumed.borrow_mut().push(v);
+                        remaining.set(remaining.get() - 1);
+                    } else {
+                        ctx.work(200).await;
+                    }
+                }
+            });
+        }
+        sim.run();
+        let mut all = consumed.borrow().clone();
+        assert_eq!(all.len() as u64, total, "{}: lost items", spec.label());
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total, "{}: duplicated items", spec.label());
+        for prod in 0..producers as u64 {
+            let seqs: Vec<u64> =
+                all.iter().filter(|v| (*v >> 32) == prod).map(|v| v & 0xFFFF_FFFF).collect();
+            assert_eq!(seqs, (0..per_thread).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn sim_lcrq_hw_fifo() {
+        fifo_check(QueueSpec::LcrqHw, 8, 100, 4);
+    }
+
+    #[test]
+    fn sim_lcrq_agg_fifo() {
+        fifo_check(QueueSpec::LcrqAgg { m: 2 }, 8, 80, 4);
+    }
+
+    #[test]
+    fn sim_lcrq_comb_fifo() {
+        fifo_check(QueueSpec::LcrqComb, 8, 50, 4);
+    }
+
+    #[test]
+    fn sim_msq_fifo() {
+        fifo_check(QueueSpec::Msq, 8, 100, 4);
+    }
+
+    #[test]
+    fn sim_lcrq_tiny_ring_transitions() {
+        fifo_check(QueueSpec::LcrqHw, 4, 120, 1);
+    }
+
+    #[test]
+    fn sim_lcrq_single_thread_order() {
+        let mut cfg = SimConfig::c3_standard_176(1);
+        cfg.horizon_cycles = u64::MAX;
+        let mut sim = Sim::new(cfg);
+        let ctx = sim.ctx(0);
+        let q = Rc::new(QueueSpec::LcrqHw.build(&ctx, 1, 3));
+        sim.spawn(0, async move {
+            for x in 0..50 {
+                q.enqueue(&ctx, x).await;
+            }
+            for x in 0..50 {
+                assert_eq!(q.dequeue(&ctx).await, Some(x));
+            }
+            assert_eq!(q.dequeue(&ctx).await, None);
+        });
+        sim.run();
+    }
+}

@@ -1,0 +1,342 @@
+//! Simulated benchmark workloads — the drivers behind every figure.
+//!
+//! Mirrors the paper's §4.1 methodology: each thread loops { one
+//! operation on the shared object; geometrically-distributed local
+//! work } until the virtual-time horizon. Operations are `Fetch&Add`
+//! with uniform deltas in 1..=100 or `Read`, mixed by `faa_ratio`.
+//! Outputs: throughput (Mops/s at the simulated clock), the min/max
+//! fairness metric, and average batch size — exactly the three
+//! quantities the paper plots.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::algos::{AlgoSpec, SimFaa};
+use super::queues::QueueSpec;
+use super::{Sim, SimConfig};
+use crate::util::stats::{fairness, mops};
+
+/// Fetch&Add workload parameters (paper §4.1).
+#[derive(Clone, Debug)]
+pub struct FaaWorkload {
+    /// Fraction of operations that are Fetch&Add (rest are Reads).
+    pub faa_ratio: f64,
+    /// Mean of the geometric local-work distribution, in cycles.
+    pub work_mean: f64,
+    /// Delta range (inclusive); the paper uses 1..=100.
+    pub delta_min: u64,
+    pub delta_max: u64,
+}
+
+impl FaaWorkload {
+    /// 90% Fetch&Add / 10% Read, 512 cycles work — the headline mix.
+    pub fn update_heavy() -> Self {
+        Self { faa_ratio: 0.9, work_mean: 512.0, delta_min: 1, delta_max: 100 }
+    }
+
+    pub fn with_faa_ratio(mut self, r: f64) -> Self {
+        self.faa_ratio = r;
+        self
+    }
+
+    pub fn with_work_mean(mut self, w: f64) -> Self {
+        self.work_mean = w;
+        self
+    }
+}
+
+/// One measured sweep point.
+#[derive(Clone, Debug)]
+pub struct FaaPoint {
+    pub algo: String,
+    pub threads: usize,
+    pub mops: f64,
+    pub fairness: f64,
+    pub avg_batch: f64,
+    /// Mean per-thread throughput of high-priority (direct) threads
+    /// and of the remaining threads, in Mops/s (Fig. 5b).
+    pub direct_mops_per_thread: f64,
+    pub funnel_mops_per_thread: f64,
+    /// Simulator health: events processed per measured point.
+    pub sim_events: u64,
+}
+
+/// Run one simulated Fetch&Add benchmark point.
+pub fn run_faa_point(cfg: &SimConfig, spec: &AlgoSpec, wl: &FaaWorkload) -> FaaPoint {
+    let p = cfg.threads;
+    let mut sim = Sim::new(cfg.clone());
+    let ctx0 = sim.ctx(0);
+    let faa = Rc::new(SimFaa::build(spec, &ctx0, p));
+    let horizon = cfg.horizon_cycles;
+    let wl = wl.clone();
+    for tid in 0..p {
+        let ctx = sim.ctx(tid);
+        let faa = Rc::clone(&faa);
+        let wl = wl.clone();
+        sim.spawn(tid, async move {
+            while ctx.now() < horizon {
+                let is_faa = ctx.rand_u64() as f64 / u64::MAX as f64 <= wl.faa_ratio;
+                if is_faa {
+                    let d = wl.delta_min + ctx.rand_u64() % (wl.delta_max - wl.delta_min + 1);
+                    faa.fetch_add(&ctx, d as i64).await;
+                } else {
+                    faa.read(&ctx).await;
+                }
+                ctx.count_op();
+                let w = ctx.rand_geometric(wl.work_mean);
+                if w > 0 {
+                    ctx.work(w).await;
+                }
+            }
+        });
+    }
+    let end = sim.run().max(1);
+    let per_thread = sim.ops_done();
+    let total: u64 = per_thread.iter().sum();
+    let secs = cfg.seconds(end);
+    let (main_faas, ops) = faa.batch_stats();
+    let direct = match spec {
+        AlgoSpec::Agg { direct, .. } => *direct,
+        _ => 0,
+    };
+    let class_mops = |slice: &[u64]| {
+        if slice.is_empty() {
+            0.0
+        } else {
+            mops(slice.iter().sum::<u64>(), secs) / slice.len() as f64
+        }
+    };
+    FaaPoint {
+        algo: spec.label(),
+        threads: p,
+        mops: mops(total, secs),
+        fairness: fairness(&per_thread),
+        avg_batch: if main_faas == 0 { 0.0 } else { ops as f64 / main_faas as f64 },
+        direct_mops_per_thread: class_mops(&per_thread[..direct.min(p)]),
+        funnel_mops_per_thread: class_mops(&per_thread[direct.min(p)..]),
+        sim_events: sim.events_processed(),
+    }
+}
+
+/// Queue workload shapes (the three panels of Fig. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueScenario {
+    /// Every thread alternates enqueue / dequeue (paper: "pairs").
+    Pairs,
+    /// p/2 dedicated producers, p/2 dedicated consumers.
+    ProducerConsumer,
+    /// Each op is enqueue or dequeue with probability ½.
+    Random5050,
+}
+
+impl QueueScenario {
+    pub fn label(&self) -> &'static str {
+        match self {
+            QueueScenario::Pairs => "pairs",
+            QueueScenario::ProducerConsumer => "prod-cons",
+            QueueScenario::Random5050 => "random-50-50",
+        }
+    }
+}
+
+/// One measured queue sweep point.
+#[derive(Clone, Debug)]
+pub struct QueuePoint {
+    pub queue: &'static str,
+    pub scenario: &'static str,
+    pub threads: usize,
+    /// Total operations (enqueues + dequeues) per second, as the paper
+    /// reports ("total throughput, double the transfer rate").
+    pub mops: f64,
+    pub fairness: f64,
+    pub sim_events: u64,
+}
+
+/// Run one simulated queue benchmark point.
+pub fn run_queue_point(
+    cfg: &SimConfig,
+    spec: &QueueSpec,
+    scenario: QueueScenario,
+    work_mean: f64,
+) -> QueuePoint {
+    let p = cfg.threads;
+    let mut sim = Sim::new(cfg.clone());
+    let ctx0 = sim.ctx(0);
+    let ring_order = 10; // 1024-cell rings in simulation
+    let q = Rc::new(spec.build(&ctx0, p, ring_order));
+    let horizon = cfg.horizon_cycles;
+    // Pre-fill so dequeues in Random5050 usually succeed (paper warms
+    // queues before measuring).
+    let prefill: Rc<RefCell<u64>> = Rc::new(RefCell::new(0));
+    {
+        let q = Rc::clone(&q);
+        let ctx = sim.ctx(0);
+        let prefill = Rc::clone(&prefill);
+        sim.spawn(0, async move {
+            for i in 0..256 {
+                q.enqueue(&ctx, (1 << 40) | i).await;
+            }
+            *prefill.borrow_mut() = ctx.now();
+        });
+        sim.run();
+    }
+    for tid in 0..p {
+        let ctx = sim.ctx(tid);
+        let q = Rc::clone(&q);
+        sim.spawn(tid, async move {
+            let mut seq = 0u64;
+            loop {
+                if ctx.now() >= horizon {
+                    break;
+                }
+                match scenario {
+                    QueueScenario::Pairs => {
+                        q.enqueue(&ctx, ((tid as u64) << 32) | seq).await;
+                        seq += 1;
+                        ctx.count_op();
+                        ctx.work(ctx.rand_geometric(work_mean)).await;
+                        q.dequeue(&ctx).await;
+                        ctx.count_op();
+                        ctx.work(ctx.rand_geometric(work_mean)).await;
+                    }
+                    QueueScenario::ProducerConsumer => {
+                        if tid < ctx.config().threads / 2 {
+                            q.enqueue(&ctx, ((tid as u64) << 32) | seq).await;
+                            seq += 1;
+                        } else {
+                            q.dequeue(&ctx).await;
+                        }
+                        ctx.count_op();
+                        ctx.work(ctx.rand_geometric(work_mean)).await;
+                    }
+                    QueueScenario::Random5050 => {
+                        if ctx.rand_u64() % 2 == 0 {
+                            q.enqueue(&ctx, ((tid as u64) << 32) | seq).await;
+                            seq += 1;
+                        } else {
+                            q.dequeue(&ctx).await;
+                        }
+                        ctx.count_op();
+                        ctx.work(ctx.rand_geometric(work_mean)).await;
+                    }
+                }
+            }
+        });
+    }
+    let end = sim.run().max(1);
+    let per_thread = sim.ops_done();
+    let total: u64 = per_thread.iter().sum();
+    let secs = cfg.seconds(end);
+    QueuePoint {
+        queue: spec.label(),
+        scenario: scenario.label(),
+        threads: p,
+        mops: mops(total, secs),
+        fairness: fairness(&per_thread),
+        sim_events: sim.events_processed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(threads: usize) -> SimConfig {
+        let mut cfg = SimConfig::c3_standard_176(threads);
+        cfg.horizon_cycles = 300_000; // keep unit tests fast
+        cfg
+    }
+
+    #[test]
+    fn faa_point_produces_sane_metrics() {
+        let cfg = quick_cfg(8);
+        let p = run_faa_point(&cfg, &AlgoSpec::Hw, &FaaWorkload::update_heavy());
+        assert!(p.mops > 0.0);
+        assert!(p.fairness > 0.0 && p.fairness <= 1.0);
+        assert_eq!(p.threads, 8);
+        // hardware: every op its own "batch"
+        assert!((p.avg_batch - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggfunnel_batches_exceed_one_under_contention() {
+        let cfg = quick_cfg(32);
+        let p = run_faa_point(
+            &cfg,
+            &AlgoSpec::Agg { m: 2, direct: 0 },
+            &FaaWorkload::update_heavy().with_work_mean(64.0),
+        );
+        assert!(p.avg_batch > 1.2, "expected combining, batch = {}", p.avg_batch);
+    }
+
+    #[test]
+    fn hw_plateau_vs_aggfunnel_at_high_threads() {
+        // The paper's core claim, in miniature: at high thread counts
+        // the funnel beats hardware F&A.
+        let cfg = quick_cfg(96);
+        let wl = FaaWorkload::update_heavy();
+        let hw = run_faa_point(&cfg, &AlgoSpec::Hw, &wl);
+        let agg = run_faa_point(&cfg, &AlgoSpec::Agg { m: 6, direct: 0 }, &wl);
+        assert!(
+            agg.mops > hw.mops,
+            "aggfunnel ({:.1}) should beat hw ({:.1}) at 96 threads",
+            agg.mops,
+            hw.mops
+        );
+    }
+
+    #[test]
+    fn direct_threads_get_higher_throughput() {
+        let cfg = quick_cfg(16);
+        let p = run_faa_point(
+            &cfg,
+            &AlgoSpec::Agg { m: 2, direct: 1 },
+            &FaaWorkload::update_heavy().with_work_mean(32.0),
+        );
+        assert!(
+            p.direct_mops_per_thread > p.funnel_mops_per_thread,
+            "direct {} <= funnel {}",
+            p.direct_mops_per_thread,
+            p.funnel_mops_per_thread
+        );
+    }
+
+    #[test]
+    fn queue_point_runs_all_scenarios() {
+        let cfg = quick_cfg(8);
+        for scenario in
+            [QueueScenario::Pairs, QueueScenario::ProducerConsumer, QueueScenario::Random5050]
+        {
+            let p = run_queue_point(&cfg, &QueueSpec::LcrqHw, scenario, 512.0);
+            assert!(p.mops > 0.0, "{}: zero throughput", scenario.label());
+        }
+    }
+
+    #[test]
+    fn sticky_arbitration_reduces_hw_fairness() {
+        // The Fig. 4b mechanism: with owner-sticky arbitration and
+        // little local work, the line owner monopolizes hardware F&A.
+        let mut cfg = quick_cfg(32);
+        cfg.horizon_cycles = 400_000;
+        let wl = FaaWorkload::update_heavy().with_work_mean(16.0).with_faa_ratio(1.0);
+        let fair = run_faa_point(&cfg, &AlgoSpec::Hw, &wl);
+        cfg.costs.owner_sticky = true;
+        let sticky = run_faa_point(&cfg, &AlgoSpec::Hw, &wl);
+        assert!(
+            sticky.fairness < fair.fairness,
+            "sticky ({:.3}) should be less fair than FCFS ({:.3})",
+            sticky.fairness,
+            fair.fairness
+        );
+    }
+
+    #[test]
+    fn deterministic_points() {
+        let cfg = quick_cfg(12);
+        let wl = FaaWorkload::update_heavy();
+        let a = run_faa_point(&cfg, &AlgoSpec::Agg { m: 2, direct: 0 }, &wl);
+        let b = run_faa_point(&cfg, &AlgoSpec::Agg { m: 2, direct: 0 }, &wl);
+        assert_eq!(a.mops, b.mops);
+        assert_eq!(a.sim_events, b.sim_events);
+    }
+}

@@ -1,0 +1,225 @@
+//! 128-bit atomics (the "CAS2 / double-width CAS" LCRQ requires).
+//!
+//! std has no `AtomicU128`, so on x86-64 we wrap the `cmpxchg16b`
+//! instruction (runtime-detected); elsewhere, or when the instruction
+//! is unavailable, we fall back to a striped spinlock table. The
+//! fallback preserves linearizability (every access to a given word
+//! takes the same stripe lock) at the cost of being blocking — which
+//! only affects progress, not correctness, and is documented in
+//! DESIGN.md as a portability substitution.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::spinlock::SpinLock;
+
+/// Pack two `u64`s into a `u128` (lo = first field, hi = second).
+#[inline]
+pub const fn pack(lo: u64, hi: u64) -> u128 {
+    (lo as u128) | ((hi as u128) << 64)
+}
+
+/// Unpack a `u128` into `(lo, hi)`.
+#[inline]
+pub const fn unpack(v: u128) -> (u64, u64) {
+    (v as u64, (v >> 64) as u64)
+}
+
+/// A 16-byte-aligned atomically-accessed 128-bit word.
+#[repr(C, align(16))]
+pub struct AtomicU128 {
+    v: UnsafeCell<u128>,
+}
+
+unsafe impl Send for AtomicU128 {}
+unsafe impl Sync for AtomicU128 {}
+
+const MODE_UNKNOWN: u8 = 0;
+const MODE_CMPXCHG16B: u8 = 1;
+const MODE_LOCKED: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNKNOWN);
+
+#[inline]
+fn mode() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != MODE_UNKNOWN {
+        return m;
+    }
+    let detected = detect();
+    MODE.store(detected, Ordering::Relaxed);
+    detected
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> u8 {
+    if std::is_x86_feature_detected!("cmpxchg16b") {
+        MODE_CMPXCHG16B
+    } else {
+        MODE_LOCKED
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> u8 {
+    MODE_LOCKED
+}
+
+/// Striped lock table for the fallback path. 64 stripes keeps
+/// independent words mostly independent while bounding memory.
+const STRIPES: usize = 64;
+
+fn stripe(addr: usize) -> &'static SpinLock<()> {
+    static LOCKS: [SpinLock<()>; STRIPES] = {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const L: SpinLock<()> = SpinLock::new(());
+        [L; STRIPES]
+    };
+    // The word is 16-byte aligned; hash its line address.
+    &LOCKS[(addr >> 4) % STRIPES]
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "cmpxchg16b")]
+unsafe fn cas16(dst: *mut u128, old: u128, new: u128) -> u128 {
+    core::arch::x86_64::cmpxchg16b(dst, old, new, Ordering::AcqRel, Ordering::Acquire)
+}
+
+impl AtomicU128 {
+    pub const fn new(v: u128) -> Self {
+        Self { v: UnsafeCell::new(v) }
+    }
+
+    pub const fn new_pair(lo: u64, hi: u64) -> Self {
+        Self::new(pack(lo, hi))
+    }
+
+    /// Atomic load (on x86-64: a `cmpxchg16b` with equal operands,
+    /// which performs an atomic 16-byte read).
+    #[inline]
+    pub fn load(&self) -> u128 {
+        match mode() {
+            #[cfg(target_arch = "x86_64")]
+            MODE_CMPXCHG16B => unsafe { cas16(self.v.get(), 0, 0) },
+            _ => {
+                let _g = stripe(self.v.get() as usize).lock();
+                unsafe { *self.v.get() }
+            }
+        }
+    }
+
+    /// Atomic compare-exchange; returns `Ok(old)` on success and
+    /// `Err(actual)` on failure.
+    #[inline]
+    pub fn compare_exchange(&self, old: u128, new: u128) -> Result<u128, u128> {
+        match mode() {
+            #[cfg(target_arch = "x86_64")]
+            MODE_CMPXCHG16B => {
+                let prev = unsafe { cas16(self.v.get(), old, new) };
+                if prev == old {
+                    Ok(prev)
+                } else {
+                    Err(prev)
+                }
+            }
+            _ => {
+                let _g = stripe(self.v.get() as usize).lock();
+                let cur = unsafe { *self.v.get() };
+                if cur == old {
+                    unsafe { *self.v.get() = new };
+                    Ok(cur)
+                } else {
+                    Err(cur)
+                }
+            }
+        }
+    }
+
+    /// Atomic store (CAS loop — stores are rare in LCRQ).
+    #[inline]
+    pub fn store(&self, new: u128) {
+        let mut cur = self.load();
+        loop {
+            match self.compare_exchange(cur, new) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Atomic swap; returns the previous value.
+    #[inline]
+    pub fn swap(&self, new: u128) -> u128 {
+        let mut cur = self.load();
+        loop {
+            match self.compare_exchange(cur, new) {
+                Ok(prev) => return prev,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for AtomicU128 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (lo, hi) = unpack(self.load());
+        write!(f, "AtomicU128(lo={lo:#x}, hi={hi:#x})")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let v = pack(0xDEAD_BEEF, 0xCAFE_BABE_0000_0001);
+        assert_eq!(unpack(v), (0xDEAD_BEEF, 0xCAFE_BABE_0000_0001));
+    }
+
+    #[test]
+    fn load_store_cas() {
+        let a = AtomicU128::new_pair(1, 2);
+        assert_eq!(unpack(a.load()), (1, 2));
+        assert!(a.compare_exchange(pack(1, 2), pack(3, 4)).is_ok());
+        assert_eq!(unpack(a.load()), (3, 4));
+        assert_eq!(a.compare_exchange(pack(1, 2), pack(9, 9)), Err(pack(3, 4)));
+        a.store(pack(7, 8));
+        assert_eq!(unpack(a.load()), (7, 8));
+        assert_eq!(a.swap(pack(0, 0)), pack(7, 8));
+    }
+
+    #[test]
+    fn concurrent_cas_counter() {
+        // Use the high half as a counter, low half as a tag; every
+        // successful CAS must observe a consistent pair.
+        let a = Arc::new(AtomicU128::new_pair(0, 0));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..5_000 {
+                        loop {
+                            let cur = a.load();
+                            let (lo, hi) = unpack(cur);
+                            assert_eq!(lo, hi, "torn 128-bit read observed");
+                            if a.compare_exchange(cur, pack(lo + 1, hi + 1)).is_ok() {
+                                break;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(unpack(a.load()), (20_000, 20_000));
+    }
+
+    #[test]
+    fn alignment_is_16() {
+        assert_eq!(std::mem::align_of::<AtomicU128>(), 16);
+    }
+}

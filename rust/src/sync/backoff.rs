@@ -1,0 +1,94 @@
+//! Exponential backoff for contended retry loops and wait loops.
+//!
+//! Two phases: spin (pause instructions, doubling) then yield to the
+//! OS scheduler. Yielding matters doubly here: the CI host may have
+//! fewer cores than benchmark threads, so a waiter that never yields
+//! can prevent the delegate that would release it from running at all.
+
+use std::sync::atomic::{compiler_fence, Ordering};
+
+/// Exponential backoff helper.
+#[derive(Debug)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backoff {
+    /// Spin limit (2^SPIN_LIMIT pause instructions per step).
+    const SPIN_LIMIT: u32 = 6;
+    /// After this step, every backoff yields the thread.
+    const YIELD_LIMIT: u32 = 10;
+
+    pub const fn new() -> Self {
+        Self { step: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// True once waiting has degraded to OS yields — callers may use it
+    /// to switch to a heavier strategy (e.g. re-read state).
+    pub fn is_yielding(&self) -> bool {
+        self.step > Self::SPIN_LIMIT
+    }
+
+    /// Back off once: spin briefly, escalating to `yield_now`.
+    #[inline]
+    pub fn snooze(&mut self) {
+        if self.step <= Self::SPIN_LIMIT {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+            compiler_fence(Ordering::SeqCst);
+        } else {
+            std::thread::yield_now();
+        }
+        if self.step <= Self::YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// Pure spin (no yield) — for loops that are guaranteed short.
+    #[inline]
+    pub fn spin(&mut self) {
+        let limit = self.step.min(Self::SPIN_LIMIT);
+        for _ in 0..(1u32 << limit) {
+            std::hint::spin_loop();
+        }
+        if self.step <= Self::YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates_to_yield() {
+        let mut b = Backoff::new();
+        assert!(!b.is_yielding());
+        for _ in 0..20 {
+            b.snooze();
+        }
+        assert!(b.is_yielding());
+        b.reset();
+        assert!(!b.is_yielding());
+    }
+
+    #[test]
+    fn spin_does_not_panic_at_limits() {
+        let mut b = Backoff::new();
+        for _ in 0..100 {
+            b.spin();
+        }
+    }
+}

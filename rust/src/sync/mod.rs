@@ -1,0 +1,13 @@
+//! Low-level synchronization substrate: cache-line padding, exponential
+//! backoff, a 128-bit atomic (the CAS2 LCRQ needs), and a tiny
+//! spinlock used by fallback paths and tests.
+
+pub mod atomic128;
+pub mod backoff;
+pub mod padded;
+pub mod spinlock;
+
+pub use atomic128::AtomicU128;
+pub use backoff::Backoff;
+pub use padded::CachePadded;
+pub use spinlock::SpinLock;

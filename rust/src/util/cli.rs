@@ -1,0 +1,227 @@
+//! A small hand-rolled command-line parser (no external deps).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional
+//! arguments, and generates usage text from declared options. This is
+//! the substrate behind the `aggfunnels` binary's subcommands and the
+//! per-figure bench drivers.
+
+use std::collections::BTreeMap;
+
+/// A declared option, used for parsing and for `--help` output.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line: option values plus positional arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.parse_as(name).unwrap_or(default)
+    }
+}
+
+/// Command parser: declared options + free-form positionals.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+/// Error produced on unknown or malformed arguments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self { program, about, opts: Vec::new() }
+    }
+
+    /// Declare an option that takes a value (`--name V` or `--name=V`).
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    /// Declare a boolean flag (`--name`).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let dashes = format!("--{}", o.name);
+            let arg = if o.takes_value { " <value>" } else { "" };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  {dashes}{arg:<10} {}{}\n", o.help, def));
+        }
+        s.push_str("  --help       print this message\n");
+        s
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse an argument vector (excluding argv[0]).
+    pub fn parse<I, S>(&self, args: I) -> Result<Parsed, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut parsed = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                parsed.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let args: Vec<String> = args.into_iter().map(|s| s.as_ref().to_string()).collect();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if body == "help" {
+                    return Err(CliError(self.usage()));
+                }
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .spec(name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("option --{name} needs a value")))?
+                        }
+                    };
+                    parsed.values.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{name} does not take a value")));
+                    }
+                    parsed.flags.push(name.to_string());
+                }
+            } else {
+                parsed.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); on error print and exit.
+    pub fn parse_env(&self) -> Parsed {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("threads", Some("4"), "thread count")
+            .opt("algo", None, "algorithm")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(Vec::<&str>::new()).unwrap();
+        assert_eq!(p.get("threads"), Some("4"));
+        assert_eq!(p.get("algo"), None);
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = cli().parse(["--threads", "8", "--algo=agg"]).unwrap();
+        assert_eq!(p.parse_as::<usize>("threads"), Some(8));
+        assert_eq!(p.get("algo"), Some("agg"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let p = cli().parse(["--verbose", "pos1", "pos2"]).unwrap();
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(["--algo"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli().parse(["--verbose=1"]).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cli().parse(["--help"]).unwrap_err();
+        assert!(err.0.contains("thread count"));
+    }
+
+    #[test]
+    fn parse_or_fallback() {
+        let p = cli().parse(["--threads", "junk"]).unwrap();
+        assert_eq!(p.parse_or::<usize>("threads", 3), 3);
+    }
+}

@@ -1,0 +1,169 @@
+//! Micro-benchmark timing harness (criterion is not available offline).
+//!
+//! `Bencher` runs a closure repeatedly with warmup, adaptively sizing
+//! batches so each measurement batch lasts ~`batch_target`; it reports
+//! mean/median/p95 per-iteration time and iterations/second. The
+//! `benches/*.rs` targets (declared with `harness = false`) and the
+//! figure drivers are built on this.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark: per-iteration nanoseconds statistics.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub ns_per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.ns_per_iter.mean <= 0.0 {
+            0.0
+        } else {
+            1e9 / self.ns_per_iter.mean
+        }
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12.1} ns/iter (p50 {:>10.1}, p95 {:>10.1})  {:>12.0} iters/s",
+            self.name, self.ns_per_iter.mean, self.ns_per_iter.p50, self.ns_per_iter.p95,
+            self.ops_per_sec()
+        )
+    }
+}
+
+/// Adaptive micro-benchmark runner.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub batch_target: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            batch_target: Duration::from_millis(10),
+            samples: 32,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            batch_target: Duration::from_millis(2),
+            samples: 16,
+        }
+    }
+
+    /// Benchmark `f`, which performs exactly one "iteration" per call.
+    pub fn bench(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        // Warmup + estimate cost of one iteration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 8 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000_000 {
+                break;
+            }
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / warm_iters as f64).max(0.5);
+        let batch = ((self.batch_target.as_nanos() as f64 / est_ns) as u64).clamp(1, 1 << 24);
+
+        let mut per_iter_ns = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        let measure_start = Instant::now();
+        while per_iter_ns.len() < self.samples && measure_start.elapsed() < self.measure * 4 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            per_iter_ns.push(ns);
+            total_iters += batch;
+            if measure_start.elapsed() >= self.measure && per_iter_ns.len() >= 8 {
+                break;
+            }
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            ns_per_iter: Summary::of(&per_iter_ns),
+        }
+    }
+
+    /// Benchmark with per-batch setup: `setup` produces state consumed
+    /// by one timed call of `f`.
+    pub fn bench_with_setup<S>(
+        &self,
+        name: &str,
+        mut setup: impl FnMut() -> S,
+        mut f: impl FnMut(S),
+    ) -> BenchResult {
+        let mut samples = Vec::with_capacity(self.samples);
+        // Warmup.
+        let warm_start = Instant::now();
+        while warm_start.elapsed() < self.warmup {
+            let s = setup();
+            f(s);
+        }
+        let mut total = 0u64;
+        for _ in 0..self.samples {
+            let s = setup();
+            let t = Instant::now();
+            f(s);
+            samples.push(t.elapsed().as_nanos() as f64);
+            total += 1;
+        }
+        BenchResult { name: name.to_string(), iters: total, ns_per_iter: Summary::of(&samples) }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept behind one name so call sites read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.ns_per_iter.mean > 0.0);
+        assert!(r.ns_per_iter.mean < 1e6, "a no-op should not take 1ms");
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn bench_with_setup_runs() {
+        let b = Bencher::quick();
+        let r = b.bench_with_setup(
+            "sum-vec",
+            || (0..1000u64).collect::<Vec<_>>(),
+            |v| {
+                black_box(v.iter().sum::<u64>());
+            },
+        );
+        assert_eq!(r.iters, b.samples as u64);
+    }
+}

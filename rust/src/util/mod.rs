@@ -1,0 +1,86 @@
+//! Hand-rolled general-purpose substrates.
+//!
+//! The build is fully offline (only `xla` + `anyhow` are vendored), so
+//! the crate carries its own PRNG, stats, CLI parser, TOML-subset
+//! config reader, JSON emitter, micro-benchmark timing harness and a
+//! proptest-style randomized property-testing helper.
+
+pub mod cli;
+pub mod harness;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;
+
+/// Number of bytes in a cache line on every machine we care about.
+pub const CACHE_LINE: usize = 64;
+
+/// Parse a human-friendly count like `"4k"`, `"2m"`, `"1g"` or `"1000"`.
+pub fn parse_count(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.as_bytes()[s.len() - 1].to_ascii_lowercase() {
+        b'k' => (&s[..s.len() - 1], 1_000u64),
+        b'm' => (&s[..s.len() - 1], 1_000_000u64),
+        b'g' => (&s[..s.len() - 1], 1_000_000_000u64),
+        _ => (s, 1u64),
+    };
+    num.trim().parse::<u64>().ok().map(|n| n * mult)
+}
+
+/// Parse a comma-separated list of integers with optional ranges, e.g.
+/// `"1,2,4:8,16"` (`a:b` is inclusive).
+pub fn parse_int_list(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once(':') {
+            let a: usize = a.trim().parse().ok()?;
+            let b: usize = b.trim().parse().ok()?;
+            if a > b {
+                return None;
+            }
+            out.extend(a..=b);
+        } else {
+            out.push(part.parse().ok()?);
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_count_plain() {
+        assert_eq!(parse_count("1000"), Some(1000));
+    }
+
+    #[test]
+    fn parse_count_suffixes() {
+        assert_eq!(parse_count("4k"), Some(4_000));
+        assert_eq!(parse_count("2M"), Some(2_000_000));
+        assert_eq!(parse_count("1g"), Some(1_000_000_000));
+    }
+
+    #[test]
+    fn parse_count_garbage() {
+        assert_eq!(parse_count(""), None);
+        assert_eq!(parse_count("x"), None);
+        assert_eq!(parse_count("12q"), None);
+    }
+
+    #[test]
+    fn parse_int_list_ranges() {
+        assert_eq!(parse_int_list("1,2,4:6"), Some(vec![1, 2, 4, 5, 6]));
+        assert_eq!(parse_int_list("7"), Some(vec![7]));
+        assert_eq!(parse_int_list("3:1"), None);
+    }
+}

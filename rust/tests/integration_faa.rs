@@ -1,0 +1,219 @@
+//! Cross-implementation integration tests: every Fetch&Add
+//! implementation must satisfy the same observable contract under real
+//! concurrency (dense fetch-and-inc tickets, sum conservation with
+//! mixed signs, sensible batch statistics).
+
+use std::sync::Arc;
+
+use aggfunnels::faa::{
+    AggFunnel, AggFunnelConfig, Choose, CombiningFunnel, CombiningTree, FetchAddObject,
+    HardwareFaa, RecursiveAggFunnel,
+};
+
+fn all_impls(p: usize) -> Vec<(&'static str, Arc<dyn FetchAddObject>)> {
+    vec![
+        ("hw", Arc::new(HardwareFaa::new(p))),
+        ("aggfunnel-1", Arc::new(AggFunnel::with_config(AggFunnelConfig::new(p).with_aggregators(1)))),
+        ("aggfunnel-6", Arc::new(AggFunnel::with_config(AggFunnelConfig::new(p).with_aggregators(6)))),
+        (
+            "aggfunnel-rand",
+            Arc::new(AggFunnel::with_config(
+                AggFunnelConfig::new(p).with_aggregators(3).with_choose(Choose::Random),
+            )),
+        ),
+        (
+            "aggfunnel-direct",
+            Arc::new(AggFunnel::with_config(
+                AggFunnelConfig::new(p).with_aggregators(2).with_direct_threads(1),
+            )),
+        ),
+        (
+            "aggfunnel-overflow",
+            Arc::new(AggFunnel::with_config(
+                AggFunnelConfig::new(p).with_aggregators(2).with_threshold(128),
+            )),
+        ),
+        ("rec-aggfunnel", Arc::new(RecursiveAggFunnel::new(p, 4, 2))),
+        ("combfunnel", Arc::new(CombiningFunnel::new(p))),
+        ("flatcomb", Arc::new(CombiningTree::new(p))),
+    ]
+}
+
+/// Fetch&Inc must hand out exactly {0, 1, ..., N-1}.
+#[test]
+fn dense_tickets_all_impls() {
+    let p = 6;
+    let per_thread = 2_000u64;
+    for (name, faa) in all_impls(p) {
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&faa);
+                std::thread::spawn(move || {
+                    (0..per_thread).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let n = p as u64 * per_thread;
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "{name}: tickets not dense");
+        assert_eq!(faa.read(0), n, "{name}: final value wrong");
+    }
+}
+
+/// Mixed-sign concurrent adds conserve the total.
+#[test]
+fn sum_conservation_all_impls() {
+    let p = 4;
+    let per_thread = 3_000i64;
+    for (name, faa) in all_impls(p) {
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&faa);
+                std::thread::spawn(move || {
+                    let mut sum = 0i64;
+                    for i in 0..per_thread {
+                        let d = match (tid + i as usize) % 3 {
+                            0 => -7,
+                            1 => 4,
+                            _ => 9,
+                        };
+                        f.fetch_add(tid, d);
+                        sum += d;
+                    }
+                    sum
+                })
+            })
+            .collect();
+        let expected: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(faa.read(0) as i64, expected, "{name}: sum not conserved");
+    }
+}
+
+/// Interleaved reads never observe values outside the running range
+/// under increment-only workloads (monotonicity of the object).
+#[test]
+fn reads_monotone_under_increments() {
+    let p = 4;
+    for (name, faa) in all_impls(p) {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let reader = {
+            let f = Arc::clone(&faa);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut prev = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let v = f.read(p - 1);
+                    assert!(v >= prev, "read went backwards");
+                    prev = v;
+                    reads += 1;
+                }
+                reads
+            })
+        };
+        let writers: Vec<_> = (0..p - 1)
+            .map(|tid| {
+                let f = Arc::clone(&faa);
+                std::thread::spawn(move || {
+                    for _ in 0..5_000 {
+                        f.fetch_add(tid, 2);
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let reads = reader.join().unwrap();
+        assert!(reads > 0, "{name}: reader starved entirely");
+        assert_eq!(faa.read(0), (p as u64 - 1) * 5_000 * 2, "{name}");
+    }
+}
+
+/// Batch statistics are consistent: ops ≥ main F&As; combining
+/// implementations batch under contention.
+#[test]
+fn batch_stats_consistent() {
+    let p = 8;
+    let faa = Arc::new(AggFunnel::with_config(AggFunnelConfig::new(p).with_aggregators(1)));
+    let handles: Vec<_> = (0..p)
+        .map(|tid| {
+            let f = Arc::clone(&faa);
+            std::thread::spawn(move || {
+                for _ in 0..3_000 {
+                    f.fetch_add(tid, 1);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = faa.batch_stats();
+    assert_eq!(s.ops, p as u64 * 3_000);
+    assert!(s.main_faas >= 1);
+    assert!(s.main_faas <= s.ops);
+}
+
+/// CAS and Fetch&Or work through the funnel (RMWability) and interact
+/// correctly with concurrent fetch_adds on the same object.
+#[test]
+fn rmw_operations_linearize_with_faas() {
+    let p = 4;
+    let faa = Arc::new(AggFunnel::new(p));
+    // Writer threads add; one thread occasionally sets a high bit via
+    // fetch_or; the bit must never be lost by fetch_adds.
+    const FLAG: u64 = 1 << 40;
+    let handles: Vec<_> = (0..p)
+        .map(|tid| {
+            let f = Arc::clone(&faa);
+            std::thread::spawn(move || {
+                if tid == 0 {
+                    for _ in 0..100 {
+                        f.fetch_or(tid, FLAG);
+                        std::thread::yield_now();
+                    }
+                } else {
+                    for _ in 0..2_000 {
+                        f.fetch_add(tid, 1);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let v = faa.read(0);
+    assert_eq!(v & FLAG, FLAG, "fetch_or bit lost");
+    assert_eq!(v & 0xFFFF_FFFF, (p as u64 - 1) * 2_000, "adds lost");
+}
+
+/// The recording mode must not change results (spot check) and must
+/// reconstruct histories whose batches tile the Aggregator exactly.
+#[test]
+fn recording_mode_reconstructs_history() {
+    let p = 4;
+    let faa = Arc::new(AggFunnel::with_config(
+        AggFunnelConfig::new(p).with_aggregators(2).with_recording(),
+    ));
+    let handles: Vec<_> = (0..p)
+        .map(|tid| {
+            let f = Arc::clone(&faa);
+            std::thread::spawn(move || {
+                (0..1_000).map(|i| f.fetch_add(tid, 1 + (i % 7))).collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (history, recorded) = faa.extract_history();
+    assert_eq!(history.ops(), 4_000);
+    assert_eq!(recorded.len(), 4_000);
+    // The history's batch sums must equal the final object value.
+    let total: u64 = history.deltas.iter().sum();
+    assert_eq!(faa.read(0), total);
+}

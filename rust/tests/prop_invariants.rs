@@ -1,0 +1,215 @@
+//! Randomized property tests (hand-rolled proptest-style helper) over
+//! the paper's invariants and the crate's substrates.
+
+use std::sync::Arc;
+
+use aggfunnels::faa::{AggFunnel, AggFunnelConfig, FetchAddObject};
+use aggfunnels::runtime::{batch_returns_cpu, BatchHistory};
+use aggfunnels::sim::algos::AlgoSpec;
+use aggfunnels::sim::workloads::{run_faa_point, FaaWorkload};
+use aggfunnels::sim::SimConfig;
+use aggfunnels::util::json::Json;
+use aggfunnels::util::prop::{check, run as prop_run, PropConfig};
+use aggfunnels::util::tomlmini::{TomlDoc, TomlValue};
+use aggfunnels::verify::{verify_faa_run, OracleBackend};
+use aggfunnels::{prop_assert, prop_assert_eq};
+
+/// Lemma 3.4 + Invariants 3.1/3.3 over random concurrent runs with
+/// random thread counts, Aggregator counts and seeds.
+#[test]
+fn prop_faa_runs_linearizable() {
+    prop_run(
+        "faa_runs_linearizable",
+        PropConfig { cases: 12, seed: 0xFA4, max_size: 6 },
+        |c| {
+            let threads = 1 + c.rng.below(6) as usize;
+            let m = 1 + c.rng.below(4) as usize;
+            let ops = 200 + c.rng.below(800) as usize;
+            let seed = c.rng.next_u64();
+            verify_faa_run(threads, m, ops, seed, &OracleBackend::Cpu)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        },
+    );
+}
+
+/// The overflow/retire path preserves dense fetch-and-inc tickets for
+/// random tiny thresholds.
+#[test]
+fn prop_overflow_path_dense() {
+    prop_run(
+        "overflow_dense",
+        PropConfig { cases: 10, seed: 0x0F, max_size: 8 },
+        |c| {
+            let p = 2 + c.rng.below(4) as usize;
+            let threshold = 16 + c.rng.below(512);
+            let per_thread = 800u64;
+            let f = Arc::new(AggFunnel::with_config(
+                AggFunnelConfig::new(p).with_aggregators(1 + c.rng.below(3) as usize).with_threshold(threshold),
+            ));
+            let handles: Vec<_> = (0..p)
+                .map(|tid| {
+                    let f = Arc::clone(&f);
+                    std::thread::spawn(move || {
+                        (0..per_thread).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                    })
+                })
+                .collect();
+            let mut all: Vec<u64> =
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            all.sort_unstable();
+            let n = p as u64 * per_thread;
+            prop_assert_eq!(all.len() as u64, n);
+            prop_assert!(
+                all == (0..n).collect::<Vec<_>>(),
+                "tickets not dense with threshold {threshold}"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// The CPU oracle itself: results within a batch are strictly
+/// base + prefix, independent of how the history is split into
+/// batches (merging adjacent same-sign batches with adjusted bases
+/// yields the same returns).
+#[test]
+fn prop_oracle_batch_split_invariance() {
+    check("oracle_split_invariance", |c| {
+        // Build a random positive-only run, then express it as (a) one
+        // batch and (b) random sub-batches with correct bases.
+        let deltas = c.nonempty_vec_of(|r| r.range_inclusive(1, 100));
+        let base = c.rng.next_u64();
+        let mut single = BatchHistory::default();
+        single.push_batch(base, 1, &deltas);
+        let want = batch_returns_cpu(&single);
+
+        let mut split = BatchHistory::default();
+        let mut i = 0;
+        let mut cur_base = base;
+        while i < deltas.len() {
+            let len = 1 + c.rng.below((deltas.len() - i) as u64) as usize;
+            let chunk = &deltas[i..i + len];
+            split.push_batch(cur_base, 1, chunk);
+            cur_base = cur_base.wrapping_add(chunk.iter().sum::<u64>());
+            i += len;
+        }
+        let got = batch_returns_cpu(&split);
+        prop_assert_eq!(got, want);
+        Ok(())
+    });
+}
+
+/// Simulator determinism across random seeds and thread counts.
+#[test]
+fn prop_sim_deterministic() {
+    prop_run(
+        "sim_deterministic",
+        PropConfig { cases: 6, seed: 0xD5, max_size: 4 },
+        |c| {
+            let threads = 2 + c.rng.below(24) as usize;
+            let seed = c.rng.next_u64();
+            let mut cfg = SimConfig::c3_standard_176(threads);
+            cfg.horizon_cycles = 150_000;
+            cfg.seed = seed;
+            let wl = FaaWorkload::update_heavy();
+            let spec = AlgoSpec::Agg { m: 1 + c.rng.below(4) as usize, direct: 0 };
+            let a = run_faa_point(&cfg, &spec, &wl);
+            let b = run_faa_point(&cfg, &spec, &wl);
+            prop_assert_eq!(a.sim_events, b.sim_events);
+            prop_assert!(a.mops == b.mops, "throughput differed across identical runs");
+            Ok(())
+        },
+    );
+}
+
+/// JSON round-trip for random values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(r: &mut aggfunnels::util::rng::Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.chance(0.5)),
+            2 => Json::Num((r.next_u64() % 1_000_000) as f64),
+            3 => Json::Str(format!("s{}-\"esc\"\n", r.next_u64() % 1000)),
+            4 => Json::Arr((0..r.below(4)).map(|_| random_json(r, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..r.below(4) {
+                    m.insert(format!("k{i}"), random_json(r, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check("json_roundtrip", |c| {
+        let v = random_json(c.rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).map_err(|e| format!("parse failed on {s}: {e}"))?;
+        prop_assert_eq!(back, v);
+        Ok(())
+    });
+}
+
+/// TOML parser: values render→parse round-trip.
+#[test]
+fn prop_toml_value_roundtrip() {
+    check("toml_roundtrip", |c| {
+        let n = c.rng.next_u64() as i64 / 2;
+        let f = (c.rng.next_u64() % 10_000) as f64 / 7.0;
+        let b = c.rng.chance(0.5);
+        let arr: Vec<i64> = c.vec_of(|r| r.next_u64() as i64 / 2);
+        let text = format!(
+            "i = {n}\nf = {f}\nb = {b}\narr = [{}]\n[t]\ns = \"hello world\"",
+            arr.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+        );
+        let doc = TomlDoc::parse(&text).map_err(|e| e)?;
+        prop_assert_eq!(doc.int_or("i", -1), n);
+        prop_assert!((doc.float_or("f", -1.0) - f).abs() < 1e-9, "float mismatch");
+        prop_assert_eq!(doc.bool_or("b", !b), b);
+        prop_assert_eq!(doc.str_or("t.s", ""), "hello world".to_string());
+        let got: Vec<i64> = doc
+            .get("arr")
+            .and_then(TomlValue::as_array)
+            .map(|a| a.iter().filter_map(TomlValue::as_int).collect())
+            .unwrap_or_default();
+        prop_assert_eq!(got, arr);
+        Ok(())
+    });
+}
+
+/// Random mixed-sign sums conserve across every batch configuration.
+#[test]
+fn prop_mixed_sign_sum_conservation() {
+    prop_run(
+        "mixed_sign_sum",
+        PropConfig { cases: 8, seed: 0x51, max_size: 6 },
+        |c| {
+            let p = 1 + c.rng.below(5) as usize;
+            let m = 1 + c.rng.below(6) as usize;
+            let f = Arc::new(AggFunnel::with_config(AggFunnelConfig::new(p).with_aggregators(m)));
+            let per_thread = 500;
+            let seeds: Vec<u64> = (0..p).map(|_| c.rng.next_u64()).collect();
+            let handles: Vec<_> = (0..p)
+                .map(|tid| {
+                    let f = Arc::clone(&f);
+                    let seed = seeds[tid];
+                    std::thread::spawn(move || {
+                        let mut rng = aggfunnels::util::rng::Rng::new(seed);
+                        let mut sum = 0i64;
+                        for _ in 0..per_thread {
+                            let mag = rng.range_inclusive(1, 100) as i64;
+                            let d = if rng.chance(0.5) { mag } else { -mag };
+                            f.fetch_add(tid, d);
+                            sum += d;
+                        }
+                        sum
+                    })
+                })
+                .collect();
+            let expected: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            prop_assert_eq!(f.read(0) as i64, expected);
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,109 @@
+//! PJRT runtime integration: the AOT JAX/Pallas oracle must agree with
+//! the CPU reference on random histories, pad correctly at every
+//! compiled size, and back the full verify pipeline.
+//!
+//! Requires `make artifacts`; every test degrades to a skip (with a
+//! loud message) when the artifacts are missing so `cargo test` works
+//! in a fresh checkout.
+
+use aggfunnels::runtime::{batch_returns_cpu, BatchHistory, OracleRuntime};
+use aggfunnels::util::rng::Rng;
+use aggfunnels::verify::{verify_faa_run, OracleBackend};
+
+fn runtime_or_skip() -> Option<OracleRuntime> {
+    match OracleRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn random_history(rng: &mut Rng, batches: usize, max_batch: usize) -> BatchHistory {
+    let mut h = BatchHistory::default();
+    let mut main: u64 = rng.next_u64();
+    for _ in 0..batches {
+        let len = rng.range_inclusive(1, max_batch as u64) as usize;
+        let deltas: Vec<u64> = (0..len).map(|_| rng.range_inclusive(1, 100)).collect();
+        let sign = if rng.chance(0.5) { 1 } else { -1 };
+        h.push_batch(main, sign, &deltas);
+        let sum: u64 = deltas.iter().sum();
+        main = if sign > 0 { main.wrapping_add(sum) } else { main.wrapping_sub(sum) };
+    }
+    h
+}
+
+#[test]
+fn oracle_matches_cpu_on_random_histories() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0x02AC_1E);
+    for case in 0..20 {
+        let h = random_history(&mut rng, 1 + case % 40, 12);
+        let got = rt.batch_returns(&h).unwrap();
+        let want = batch_returns_cpu(&h);
+        assert_eq!(got, want, "case {case}");
+    }
+}
+
+#[test]
+fn oracle_handles_every_compiled_size() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(7);
+    // Sizes straddling each compiled artifact boundary.
+    for target_ops in [1usize, 1000, 1024, 1025, 4000, 4100, 16000] {
+        let mut h = BatchHistory::default();
+        let mut remaining = target_ops;
+        let mut main = 0u64;
+        while remaining > 0 {
+            let len = remaining.min(rng.range_inclusive(1, 9) as usize);
+            let deltas: Vec<u64> = (0..len).map(|_| rng.range_inclusive(1, 100)).collect();
+            h.push_batch(main, 1, &deltas);
+            main = main.wrapping_add(deltas.iter().sum::<u64>());
+            remaining -= len;
+        }
+        let got = rt.batch_returns(&h).unwrap();
+        assert_eq!(got, batch_returns_cpu(&h), "{target_ops} ops");
+        assert_eq!(got.len(), target_ops);
+    }
+}
+
+#[test]
+fn oracle_rejects_oversized_history() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut h = BatchHistory::default();
+    for i in 0..17_000u64 {
+        h.push_batch(i, 1, &[1]);
+    }
+    assert!(rt.batch_returns(&h).is_err());
+}
+
+#[test]
+fn oracle_chunked_handles_large_histories() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(99);
+    let h = random_history(&mut rng, 9_000, 8); // ~40k ops on average
+    let got = rt.batch_returns_chunked(&h).unwrap();
+    assert_eq!(got, batch_returns_cpu(&h));
+}
+
+#[test]
+fn oracle_wraps_mod_2_64() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut h = BatchHistory::default();
+    h.push_batch(u64::MAX - 1, 1, &[3, 4]);
+    h.push_batch(2, -1, &[5, 7]);
+    let got = rt.batch_returns(&h).unwrap();
+    // batch0: base 2⁶⁴−2, +3 wraps to 1; batch1: base 2, −5 wraps to 2⁶⁴−3.
+    assert_eq!(got, vec![u64::MAX - 1, 1, 2, u64::MAX - 2]);
+    assert_eq!(got, batch_returns_cpu(&h));
+}
+
+#[test]
+fn full_verify_pipeline_via_pjrt() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let backend = OracleBackend::Pjrt(rt);
+    let report = verify_faa_run(6, 3, 2_000, 0xABCD, &backend).unwrap();
+    assert_eq!(report.ops, 12_000);
+    assert_eq!(report.checked_against, "pjrt-aot-oracle");
+}

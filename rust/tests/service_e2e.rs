@@ -1,0 +1,82 @@
+//! End-to-end tests of the ticket service over real TCP: concurrent
+//! clients, priority requests, error handling, and shutdown.
+
+use std::sync::Arc;
+
+use aggfunnels::service::{serve, ServeOpts, TicketClient};
+use aggfunnels::util::json::Json;
+
+fn start(workers: usize) -> aggfunnels::service::ServerHandle {
+    serve(&ServeOpts { addr: "127.0.0.1:0".into(), workers, aggregators: 2 }).unwrap()
+}
+
+#[test]
+fn many_clients_disjoint_coverage() {
+    let server = start(4);
+    let addr = Arc::new(server.addr.to_string());
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let mut c = TicketClient::connect(&addr).unwrap();
+                let mut out = Vec::new();
+                for k in 0..200u64 {
+                    let count = 1 + (i as u64 + k) % 5;
+                    let start = c.take(count, k % 10 == 0).unwrap();
+                    out.push((start, count));
+                }
+                out
+            })
+        })
+        .collect();
+    let mut ranges: Vec<(u64, u64)> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    ranges.sort_unstable();
+    let mut expect = 0;
+    for (s, c) in ranges {
+        assert_eq!(s, expect, "gap or overlap in dispensed tickets");
+        expect = s + c;
+    }
+    let mut c = TicketClient::connect(&addr).unwrap();
+    assert_eq!(c.read().unwrap(), expect);
+    server.shutdown();
+}
+
+#[test]
+fn stats_reflect_traffic() {
+    let server = start(2);
+    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    for _ in 0..5 {
+        c.take(1, false).unwrap();
+    }
+    c.take(1, true).unwrap();
+    c.read().unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.get("take").and_then(Json::as_u64).unwrap() >= 5);
+    assert_eq!(stats.get("take_priority").and_then(Json::as_u64), Some(1));
+    assert!(stats.get("read").and_then(Json::as_u64).unwrap() >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_do_not_kill_connection() {
+    use std::io::{BufRead, Write};
+    let server = start(2);
+    let conn = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(conn);
+    for bad in ["not json", "{}", "{\"op\":42}", "{\"op\":\"bogus\"}"] {
+        writer.write_all(bad.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+    }
+    // Still serviceable afterwards.
+    writer.write_all(b"{\"op\":\"take\",\"count\":2}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+}

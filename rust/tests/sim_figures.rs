@@ -1,0 +1,81 @@
+//! Shape-level acceptance tests for the regenerated figures: the
+//! paper's qualitative claims must hold on reduced sweeps (the full
+//! sweeps run under `cargo bench`; acceptance criteria are documented
+//! in EXPERIMENTS.md).
+
+use aggfunnels::bench::figures::{fig3, fig4_headline, fig6, SweepOpts};
+use aggfunnels::bench::Row;
+
+fn opts(grid: Vec<usize>) -> SweepOpts {
+    SweepOpts { grid, horizon: 600_000, seed: 0x51AE }
+}
+
+fn value(rows: &[Row], fig: &str, series: &str, threads: usize) -> f64 {
+    rows.iter()
+        .find(|r| r.figure == fig && r.series == series && r.threads == threads)
+        .unwrap_or_else(|| panic!("missing {fig}/{series}/{threads}"))
+        .value
+}
+
+#[test]
+fn fig3_shapes() {
+    let rows = fig3(&opts(vec![2, 96]));
+    // 3a: at 96 threads every aggfunnel variant beats hardware F&A.
+    let hw = value(&rows, "3a", "hw-faa", 96);
+    for m in [2, 4, 6, 8] {
+        let agg = value(&rows, "3a", &format!("aggfunnel-{m}"), 96);
+        assert!(agg > hw, "3a: aggfunnel-{m} ({agg:.1}) must beat hw ({hw:.1}) at 96 threads");
+    }
+    // 3b: fewer Aggregators -> larger batches (paper's observation).
+    let b2 = value(&rows, "3b", "aggfunnel-2", 96);
+    let b8 = value(&rows, "3b", "aggfunnel-8", 96);
+    assert!(b2 > b8, "3b: m=2 batches ({b2:.2}) must exceed m=8 ({b8:.2})");
+    // 3b: batches grow with threads.
+    let b2_small = value(&rows, "3b", "aggfunnel-2", 2);
+    assert!(b2 > b2_small, "3b: batches must grow with contention");
+    // 3c: read-heavier workload still has aggfunnel ahead at scale,
+    // but with lower absolute throughput than 3a for aggfunnel-6
+    // (reads all hit Main).
+    let agg_3c = value(&rows, "3c", "aggfunnel-6", 96);
+    let hw_3c = value(&rows, "3c", "hw-faa", 96);
+    assert!(agg_3c > hw_3c, "3c: aggfunnel must beat hw at scale");
+}
+
+#[test]
+fn fig4_shapes() {
+    let rows = fig4_headline(&opts(vec![2, 96]));
+    let hw = value(&rows, "4a", "hw-faa", 96);
+    let agg = value(&rows, "4a", "aggfunnel-6", 96);
+    let comb = value(&rows, "4a", "combfunnel", 96);
+    let rec = value(&rows, "4a", "rec-aggfunnel", 96);
+    // Ordering at high thread counts: aggfunnel first; combfunnel and
+    // hw below it; recursive between (paper: recursive did not beat
+    // single-level up to 176 threads).
+    assert!(agg > hw, "4a: aggfunnel ({agg:.1}) must beat hw ({hw:.1})");
+    assert!(agg > comb, "4a: aggfunnel ({agg:.1}) must beat combfunnel ({comb:.1})");
+    assert!(rec > hw, "4a: recursive ({rec:.1}) must beat hw ({hw:.1})");
+    assert!(agg >= rec * 0.8, "4a: single-level should not lose badly to recursive");
+    // At 2 threads hardware wins (funnel path overhead) — the paper's
+    // low-thread-count observation.
+    let hw2 = value(&rows, "4a", "hw-faa", 2);
+    let comb2 = value(&rows, "4a", "combfunnel", 2);
+    assert!(hw2 > comb2, "4a: hw must beat combfunnel at 2 threads");
+    // 4b: fairness within [0,1]; aggfunnel fairness high at scale.
+    let f_agg = value(&rows, "4b", "aggfunnel-6", 96);
+    assert!(f_agg > 0.5 && f_agg <= 1.0, "4b: aggfunnel fairness {f_agg}");
+}
+
+#[test]
+fn fig6_shapes() {
+    let rows = fig6(&opts(vec![64]));
+    for panel in ["6a", "6b", "6c"] {
+        let hw = value(&rows, panel, "lcrq", 64);
+        let agg = value(&rows, panel, "lcrq+aggfunnel", 64);
+        let msq = value(&rows, panel, "msq", 64);
+        assert!(
+            agg > hw,
+            "{panel}: lcrq+aggfunnel ({agg:.1}) must beat lcrq ({hw:.1}) at 64 threads"
+        );
+        assert!(hw > msq, "{panel}: lcrq ({hw:.1}) must beat msq ({msq:.1})");
+    }
+}
