@@ -19,12 +19,7 @@ use aggfunnels::service::{serve, ServeOpts, TicketClient};
 use aggfunnels::util::stats::Summary;
 
 fn main() {
-    let server = serve(&ServeOpts {
-        addr: "127.0.0.1:0".into(),
-        workers: 6,
-        aggregators: 2,
-    })
-    .expect("server start");
+    let server = serve(&ServeOpts::fixed("127.0.0.1:0", 6, 2)).expect("server start");
     let addr = server.addr.to_string();
     println!("ticket service on {addr}");
 

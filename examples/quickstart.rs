@@ -6,12 +6,16 @@
 //!
 //! Builds an Aggregating Funnels `Fetch&Add` object, exercises it from
 //! several threads, shows RMWability (`Read`, `CAS`, `Fetch&Or`),
-//! `Fetch&AddDirect`, the Add/Read counter variant, and an
-//! LCRQ queue with funnel-backed indices.
+//! `Fetch&AddDirect`, the Add/Read counter variant, an LCRQ queue with
+//! funnel-backed indices, and the elastic funnel with an AIMD width
+//! policy.
 
 use std::sync::Arc;
 
-use aggfunnels::faa::{AggCounter, AggFunnel, AggFunnelConfig, FetchAddObject};
+use aggfunnels::faa::{
+    AggCounter, AggFunnel, AggFunnelConfig, AimdParams, ElasticAggFunnel, ElasticConfig,
+    FetchAddObject, WidthPolicy,
+};
 use aggfunnels::queue::{AggIndexFactory, ConcurrentQueue, Lcrq};
 
 fn main() {
@@ -86,5 +90,37 @@ fn main() {
         h.join().unwrap();
     }
     println!("queue drained              : {}", q.dequeue(0).is_none());
+
+    // --- 5. Elastic width: the funnel resizes itself under load. ---
+    let elastic = Arc::new(ElasticAggFunnel::with_config(
+        ElasticConfig::new(threads)
+            .with_max_width(8)
+            .with_policy(WidthPolicy::Aimd(AimdParams::default())),
+    ));
+    println!("elastic starts at width    : {}", elastic.active_width());
+    let handles: Vec<_> = (0..threads)
+        .map(|tid| {
+            let f = Arc::clone(&elastic);
+            std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    f.fetch_add(tid, 1);
+                }
+            })
+        })
+        .collect();
+    // A controller thread would call this periodically; one poll after
+    // the burst is enough to see the AIMD decision.
+    for h in handles {
+        h.join().unwrap();
+    }
+    let aimd = WidthPolicy::Aimd(AimdParams::default());
+    let width = elastic.poll_policy(&aimd);
+    let stats = elastic.batch_stats();
+    println!(
+        "elastic after 80k hot ops  : width {width}, avg batch {:.2}, {} resizes",
+        stats.avg_batch_size(),
+        elastic.resizes()
+    );
+
     println!("\nquickstart OK");
 }

@@ -12,9 +12,13 @@
 //! Acceptance criteria (shape-level) live in EXPERIMENTS.md.
 
 use super::Row;
+use crate::faa::width::{AimdParams, WidthPolicy};
 use crate::sim::algos::AlgoSpec;
 use crate::sim::queues::QueueSpec;
-use crate::sim::workloads::{run_faa_point, run_queue_point, FaaWorkload, QueueScenario};
+use crate::sim::workloads::{
+    run_elastic_faa_point, run_faa_point, run_queue_point, FaaWorkload, PhasePlan,
+    QueueScenario,
+};
 use crate::sim::SimConfig;
 
 /// Sweep options shared by all figures.
@@ -51,11 +55,12 @@ impl SweepOpts {
     }
 }
 
-/// All figure groups, for CLI enumeration.
-pub const FIGURE_GROUPS: [&str; 4] = ["fig3", "fig4", "fig5", "fig6"];
+/// All figure groups, for CLI enumeration. `width` is this crate's
+/// beyond-the-paper scenario: adaptive funnel width under thread churn.
+pub const FIGURE_GROUPS: [&str; 5] = ["fig3", "fig4", "fig5", "fig6", "width"];
 
-/// Run a figure group by name ("fig3" | "fig4" | "fig5" | "fig6" or a
-/// panel name like "3a" which maps to its group).
+/// Run a figure group by name ("fig3" | "fig4" | "fig5" | "fig6" |
+/// "width", or a panel name like "3a" / "w1" which maps to its group).
 pub fn run_group(name: &str, opts: &SweepOpts) -> Option<Vec<Row>> {
     match name.trim_start_matches("fig") {
         "3" | "3a" | "3b" | "3c" => Some(fig3(opts)),
@@ -68,6 +73,7 @@ pub fn run_group(name: &str, opts: &SweepOpts) -> Option<Vec<Row>> {
         "4c" | "4d" | "4e" | "4f" => Some(fig4_variants(opts)),
         "5" | "5a" | "5b" | "5c" => Some(fig5(opts)),
         "6" | "6a" | "6b" | "6c" => Some(fig6(opts)),
+        "width" | "w1" | "w2" | "w3" | "w4" => Some(width_sweep(opts)),
         _ => None,
     }
 }
@@ -194,6 +200,44 @@ pub fn fig5(opts: &SweepOpts) -> Vec<Row> {
     rows
 }
 
+/// Width policies compared by the `width` scenario.
+fn width_policies() -> Vec<WidthPolicy> {
+    vec![
+        WidthPolicy::Fixed(6),
+        WidthPolicy::SqrtP,
+        WidthPolicy::Aimd(AimdParams::default()),
+    ]
+}
+
+/// The adaptive-width scenario (beyond the paper): each policy runs
+/// the same phased thread-churn workload (quiet → flash crowd → half
+/// load → flash crowd) on an elastic funnel, emitting per-policy
+/// throughput (`w1`), average batch size (`w2`), final active width
+/// (`w3`) and resize count (`w4`).
+pub fn width_sweep(opts: &SweepOpts) -> Vec<Row> {
+    let wl = FaaWorkload::update_heavy();
+    let mut rows = Vec::new();
+    for &p in &opts.grid {
+        if p < 4 {
+            continue; // churn needs a few threads to have phases
+        }
+        let cfg = opts.cfg(p);
+        let plan = PhasePlan::churn(p, cfg.horizon_cycles);
+        // Poll often enough for several windows per phase.
+        let control_period = (plan.phase_cycles / 8).max(1);
+        let max_width = 12;
+        for policy in width_policies() {
+            let pt = run_elastic_faa_point(&cfg, max_width, &policy, &wl, &plan, control_period);
+            let series = pt.policy.clone();
+            rows.push(Row { figure: "w1", series: series.clone(), threads: p, metric: "mops", value: pt.mops });
+            rows.push(Row { figure: "w2", series: series.clone(), threads: p, metric: "avg_batch", value: pt.avg_batch });
+            rows.push(Row { figure: "w3", series: series.clone(), threads: p, metric: "final_width", value: pt.final_width as f64 });
+            rows.push(Row { figure: "w4", series, threads: p, metric: "resizes", value: pt.resizes as f64 });
+        }
+    }
+    rows
+}
+
 /// Figure 6: queue throughput across three scenarios.
 pub fn fig6(opts: &SweepOpts) -> Vec<Row> {
     let specs: [(&'static str, QueueSpec); 4] = [
@@ -253,6 +297,29 @@ mod tests {
         assert!(rows.iter().any(|r| r.series == "hw-faa"));
         assert!(rows.iter().any(|r| r.series == "aggfunnel-6"));
         assert!(rows.iter().any(|r| r.series == "aggfunnel-sqrtp"));
+    }
+
+    #[test]
+    fn width_sweep_emits_per_policy_rows() {
+        let opts = SweepOpts { grid: vec![16], horizon: 200_000, ..SweepOpts::quick() };
+        let rows = run_group("width", &opts).unwrap();
+        for series in ["fixed-6", "sqrtp", "aimd"] {
+            for (fig, metric) in [("w1", "mops"), ("w2", "avg_batch")] {
+                let row = rows
+                    .iter()
+                    .find(|r| r.figure == fig && r.series == series && r.threads == 16)
+                    .unwrap_or_else(|| panic!("missing {fig}/{series}"));
+                assert_eq!(row.metric, metric);
+                assert!(row.value >= 0.0);
+            }
+        }
+        // The throughput rows must be genuine measurements.
+        assert!(rows
+            .iter()
+            .filter(|r| r.figure == "w1")
+            .all(|r| r.value > 0.0));
+        // Panel aliases resolve to the same group.
+        assert!(run_group("w2", &opts).is_some());
     }
 
     #[test]

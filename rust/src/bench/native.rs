@@ -11,16 +11,24 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::faa::{
-    AggFunnel, AggFunnelConfig, CombiningFunnel, CombiningTree, FetchAddObject, HardwareFaa,
-    RecursiveAggFunnel,
+    AggFunnel, AggFunnelConfig, AimdParams, CombiningFunnel, CombiningTree, ElasticAggFunnel,
+    ElasticConfig, FetchAddObject, HardwareFaa, RecursiveAggFunnel, WidthPolicy,
 };
 use crate::queue::{AggIndexFactory, CombIndexFactory, ConcurrentQueue, HwIndexFactory, Lcrq, MsQueue, Prq};
 use crate::util::rng::Rng;
 use crate::util::stats::{fairness, mops};
 
 /// Native fetch-and-add algorithms by name.
-pub const FAA_ALGOS: [&str; 6] =
-    ["hw", "aggfunnel", "rec-aggfunnel", "combfunnel", "flatcomb", "aggfunnel-rand"];
+pub const FAA_ALGOS: [&str; 8] = [
+    "hw",
+    "aggfunnel",
+    "rec-aggfunnel",
+    "combfunnel",
+    "flatcomb",
+    "aggfunnel-rand",
+    "elastic",
+    "elastic-aimd",
+];
 
 /// Build a native FAA object by CLI name.
 pub fn make_faa(name: &str, threads: usize, m: usize) -> Option<Arc<dyn FetchAddObject>> {
@@ -37,6 +45,22 @@ pub fn make_faa(name: &str, threads: usize, m: usize) -> Option<Arc<dyn FetchAdd
         "rec-aggfunnel" => Arc::new(RecursiveAggFunnel::paper_config(threads)),
         "combfunnel" => Arc::new(CombiningFunnel::new(threads)),
         "flatcomb" => Arc::new(CombiningTree::new(threads)),
+        // Elastic funnel pinned at `m`: measures the elasticity
+        // machinery's overhead against plain "aggfunnel".
+        "elastic" => Arc::new(ElasticAggFunnel::with_config(
+            ElasticConfig::new(threads)
+                .with_max_width(m.max(1) * 2)
+                .with_policy(WidthPolicy::Fixed(m)),
+        )),
+        // Self-sizing elastic funnel (AIMD). `run_native_faa` has no
+        // controller, so this measures the AIMD start-small width; a
+        // policy-driven run needs a caller-side poll loop (the service
+        // and the `width` figure scenario both provide one).
+        "elastic-aimd" => Arc::new(ElasticAggFunnel::with_config(
+            ElasticConfig::new(threads)
+                .with_max_width(m.max(1) * 2)
+                .with_policy(WidthPolicy::Aimd(AimdParams::default())),
+        )),
         _ => return None,
     })
 }

@@ -97,11 +97,27 @@ pub struct ServiceSettings {
     pub aggregators: usize,
     /// Worker slots reserved for priority requests (Fetch&AddDirect).
     pub priority_workers: usize,
+    /// Width policy for the elastic funnel: `fixed:<m>` (or a bare
+    /// integer), `sqrtp`, or `aimd`.
+    pub width_policy: String,
+    /// Aggregator slot capacity per sign (the elastic ceiling).
+    pub max_aggregators: usize,
+    /// Controller poll period for adaptive policies, in milliseconds
+    /// (0 disables the resize controller thread).
+    pub resize_interval_ms: u64,
 }
 
 impl Default for ServiceSettings {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7471".into(), workers: 8, aggregators: 6, priority_workers: 1 }
+        Self {
+            addr: "127.0.0.1:7471".into(),
+            workers: 8,
+            aggregators: 6,
+            priority_workers: 1,
+            width_policy: "aimd".into(),
+            max_aggregators: 12,
+            resize_interval_ms: 25,
+        }
     }
 }
 
@@ -149,6 +165,11 @@ impl AppConfig {
         sv.aggregators = doc.int_or("service.aggregators", sv.aggregators as i64) as usize;
         sv.priority_workers =
             doc.int_or("service.priority_workers", sv.priority_workers as i64) as usize;
+        sv.width_policy = doc.str_or("service.width_policy", &sv.width_policy);
+        sv.max_aggregators =
+            doc.int_or("service.max_aggregators", sv.max_aggregators as i64) as usize;
+        sv.resize_interval_ms =
+            doc.int_or("service.resize_interval_ms", sv.resize_interval_ms as i64) as u64;
         Ok(())
     }
 
@@ -200,10 +221,30 @@ mod tests {
         assert_eq!(c.service.addr, "0.0.0.0:9000");
         // untouched keys keep defaults
         assert_eq!(c.sim.cpus_per_socket, 44);
+        assert_eq!(c.service.width_policy, "aimd");
+        assert_eq!(c.service.max_aggregators, 12);
         assert!(!c.sim.owner_sticky);
         let doc = TomlDoc::parse("sim.costs.owner_sticky = true").unwrap();
         c.apply_doc(&doc).unwrap();
         assert!(c.sim.owner_sticky);
+    }
+
+    #[test]
+    fn width_policy_keys_apply() {
+        let mut c = AppConfig::default();
+        let doc = TomlDoc::parse(
+            r#"
+            [service]
+            width_policy = "sqrtp"
+            max_aggregators = 16
+            resize_interval_ms = 100
+            "#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.width_policy, "sqrtp");
+        assert_eq!(c.service.max_aggregators, 16);
+        assert_eq!(c.service.resize_interval_ms, 100);
     }
 
     #[test]

@@ -35,19 +35,22 @@ use crate::sync::{Backoff, CachePadded};
 use crate::util::rng::Rng;
 
 /// `final` field value meaning "Aggregator still in use" (the paper's ∞).
-const FINAL_INFINITY: u64 = u64::MAX;
+///
+/// Shared with [`super::elastic`], which reuses the same Aggregator and
+/// Batch memory layout for its resizable variant.
+pub(super) const FINAL_INFINITY: u64 = u64::MAX;
 
 /// A batch of operations applied to an Aggregator (all fields
 /// immutable after publication; `previous` links the Batch list).
-struct Batch {
+pub(super) struct Batch {
     /// Aggregator's `value` before the batch (`before` in the paper).
-    before: u64,
+    pub(super) before: u64,
     /// Aggregator's `value` after the batch.
-    after: u64,
+    pub(super) after: u64,
     /// Value of `Main` just before the batch was applied to it.
-    main_before: u64,
+    pub(super) main_before: u64,
     /// Previous Batch in the Aggregator's list (null for the sentinel).
-    previous: *mut Batch,
+    pub(super) previous: *mut Batch,
 }
 
 // Safety: a Batch is immutable after publication; the raw `previous`
@@ -61,22 +64,22 @@ unsafe impl Send for Batch {}
 /// written together by retiring delegates, so they share a cache line
 /// — one transfer serves both reads (§Perf: −1 line touch per op) —
 /// while the RMW-hot `value` stays on its own line.
-struct AggregatorTail {
+pub(super) struct AggregatorTail {
     /// Most recent Batch applied to `Main` from this Aggregator.
-    last: AtomicPtr<Batch>,
+    pub(super) last: AtomicPtr<Batch>,
     /// `value` after the final batch once retired, else ∞.
-    final_value: AtomicU64,
+    pub(super) final_value: AtomicU64,
 }
 
 /// An Aggregator: funnels a stream of operations into batches.
-struct Aggregator {
+pub(super) struct Aggregator {
     /// Sum of |delta| of all operations applied here (only grows).
-    value: CachePadded<AtomicU64>,
-    tail: CachePadded<AggregatorTail>,
+    pub(super) value: CachePadded<AtomicU64>,
+    pub(super) tail: CachePadded<AggregatorTail>,
 }
 
 impl Aggregator {
-    fn boxed() -> Box<Aggregator> {
+    pub(super) fn boxed() -> Box<Aggregator> {
         let sentinel = Box::into_raw(Box::new(Batch {
             before: 0,
             after: 0,
@@ -340,25 +343,8 @@ impl<M: MainCell> AggFunnel<M> {
             // Line 22: register in a batch with a single F&A.
             let a_before = a.value.fetch_add(magnitude, Ordering::AcqRel);
 
-            // Lines 23–24: wait until my batch has been added to a's
-            // list, or until I can start the next batch, or until the
-            // Aggregator is retired under me. Read order matters
-            // (§3.1.1): `a.last` first, `a.final` second.
-            let mut backoff = Backoff::new();
-            let last_ptr = loop {
-                let last_ptr = a.tail.last.load(Ordering::Acquire);
-                let last = unsafe { &*last_ptr };
-                if last.after >= a_before {
-                    if a_before >= a.tail.final_value.load(Ordering::Acquire) {
-                        break std::ptr::null_mut(); // line 24: restart
-                    }
-                    break last_ptr;
-                }
-                if a_before >= a.tail.final_value.load(Ordering::Acquire) {
-                    break std::ptr::null_mut(); // line 24: restart
-                }
-                backoff.snooze();
-            };
+            // Lines 23–24 (shared with the elastic funnel).
+            let last_ptr = await_batch(a, a_before);
             if last_ptr.is_null() {
                 // Aggregator overflowed; Agg[index] already holds a
                 // fresh Aggregator (the delegate replaced it *before*
@@ -383,7 +369,7 @@ impl<M: MainCell> AggFunnel<M> {
             } else {
                 // Lines 34–37: my batch is already linked; find it and
                 // derive my return value.
-                let result = Self::non_delegate_result(batch, a_before, positive);
+                let result = non_delegate_result(batch, a_before, positive);
                 let s = self.scratch(tid);
                 s.ops += 1;
                 if self.cfg.record {
@@ -459,25 +445,6 @@ impl<M: MainCell> AggFunnel<M> {
         s.main_faas += 1;
         s.ops += 1;
         main_before // line 33
-    }
-
-    /// Non-delegate result computation (lines 35–37).
-    #[inline]
-    fn non_delegate_result(mut batch: &Batch, a_before: u64, positive: bool) -> u64 {
-        // Line 35–36: walk back to the Batch containing me
-        // (97% of the time `batch` already is it — paper §3.1).
-        while batch.before > a_before {
-            debug_assert!(!batch.previous.is_null());
-            batch = unsafe { &*batch.previous };
-        }
-        debug_assert!(batch.before <= a_before && a_before < batch.after);
-        // Line 37: mainBefore + (aBefore − batch.before) · sgn(df).
-        let offset = a_before.wrapping_sub(batch.before);
-        if positive {
-            batch.main_before.wrapping_add(offset)
-        } else {
-            batch.main_before.wrapping_sub(offset)
-        }
     }
 
     /// Objects *owned* by the funnel right now: its 2m Aggregators and
@@ -556,31 +523,82 @@ impl<M: MainCell> FetchAddObject for AggFunnel<M> {
 impl<M: MainCell> Drop for AggFunnel<M> {
     fn drop(&mut self) {
         for slot in &self.agg {
-            let p = slot.load(Ordering::Relaxed);
-            if p.is_null() {
-                continue;
-            }
-            if self.cfg.record {
-                // Verifier mode kept the whole chain alive: free every
-                // Batch behind `last`, then let the Aggregator's own
-                // drop free `last` itself.
-                unsafe {
-                    let a = &*p;
-                    let last = a.tail.last.load(Ordering::Relaxed);
-                    if !last.is_null() {
-                        let mut b = (*last).previous;
-                        while !b.is_null() {
-                            let prev = (*b).previous;
-                            drop(Box::from_raw(b));
-                            b = prev;
-                        }
-                    }
-                }
-            }
-            drop(unsafe { Box::from_raw(p) });
+            free_aggregator(slot.load(Ordering::Relaxed), self.cfg.record);
         }
         // Retired Aggregators/Batches are freed by the EBR domain drop.
     }
+}
+
+/// The lines 23–24 wait loop, shared by the static and elastic
+/// funnels: spin until my batch has been added to `a`'s list, or until
+/// I can start the next batch — returning the `last` Batch pointer —
+/// or until the Aggregator is retired under me, returning null (the
+/// caller restarts with the full delta). Read order is load-bearing
+/// (§3.1.1): `a.last` first, `a.final` second.
+#[inline]
+pub(super) fn await_batch(a: &Aggregator, a_before: u64) -> *mut Batch {
+    let mut backoff = Backoff::new();
+    loop {
+        let last_ptr = a.tail.last.load(Ordering::Acquire);
+        let last = unsafe { &*last_ptr };
+        if last.after >= a_before {
+            if a_before >= a.tail.final_value.load(Ordering::Acquire) {
+                return std::ptr::null_mut(); // line 24: restart
+            }
+            return last_ptr;
+        }
+        if a_before >= a.tail.final_value.load(Ordering::Acquire) {
+            return std::ptr::null_mut(); // line 24: restart
+        }
+        backoff.snooze();
+    }
+}
+
+/// Non-delegate result computation (lines 35–37), shared by the static
+/// and elastic funnels.
+#[inline]
+pub(super) fn non_delegate_result(mut batch: &Batch, a_before: u64, positive: bool) -> u64 {
+    // Line 35–36: walk back to the Batch containing me
+    // (97% of the time `batch` already is it — paper §3.1).
+    while batch.before > a_before {
+        debug_assert!(!batch.previous.is_null());
+        batch = unsafe { &*batch.previous };
+    }
+    debug_assert!(batch.before <= a_before && a_before < batch.after);
+    // Line 37: mainBefore + (aBefore − batch.before) · sgn(df).
+    let offset = a_before.wrapping_sub(batch.before);
+    if positive {
+        batch.main_before.wrapping_add(offset)
+    } else {
+        batch.main_before.wrapping_sub(offset)
+    }
+}
+
+/// Free an owned Aggregator at drop time, shared by the static and
+/// elastic funnels. In recording mode the whole Batch chain was kept
+/// alive: free every Batch behind `last`, then let the Aggregator's
+/// own drop free `last` itself.
+///
+/// Caller must own `p` exclusively (drop-time only).
+pub(super) fn free_aggregator(p: *mut Aggregator, record: bool) {
+    if p.is_null() {
+        return;
+    }
+    if record {
+        unsafe {
+            let a = &*p;
+            let last = a.tail.last.load(Ordering::Relaxed);
+            if !last.is_null() {
+                let mut b = (*last).previous;
+                while !b.is_null() {
+                    let prev = (*b).previous;
+                    drop(Box::from_raw(b));
+                    b = prev;
+                }
+            }
+        }
+    }
+    drop(unsafe { Box::from_raw(p) });
 }
 
 impl<M: MainCell> AggFunnel<M> {

@@ -1,15 +1,33 @@
 //! `ChooseAggregator` policies (paper §3.1, Algorithm 2, §4.2, §4.4).
 //!
 //! The proof of linearizability holds for *any* choice of Aggregator,
-//! so the policy is a pure tuning knob. The paper evaluates:
+//! so the policy is a pure tuning knob. This enum covers the two
+//! *per-operation* selection rules the crate implements:
 //!
-//! * a **static, symmetric** assignment — each thread always uses the
-//!   same Aggregator, threads spread so per-Aggregator load differs by
-//!   at most one (used for all main experiments);
-//! * Algorithm 2's **√p grouping** (a static assignment with m = ⌊√p⌋);
-//! * **random** selection per operation (mentioned as an alternative);
-//! * the **asymmetric (m, d)** scheme of §4.4 where `d` high-priority
-//!   threads bypass the funnel via `Fetch&AddDirect`.
+//! * [`Choose::StaticEven`] — each thread always uses Aggregator
+//!   `tid % m`, spreading threads so per-Aggregator load differs by at
+//!   most one (the paper's default for all main experiments);
+//! * [`Choose::Random`] — uniformly random Aggregator per operation
+//!   (mentioned in the paper as an alternative).
+//!
+//! Two schemes the paper also evaluates are **not** `Choose` variants,
+//! because they size or partition the funnel rather than pick within
+//! it — find them where they actually live:
+//!
+//! * Algorithm 2's **√p grouping** fixes `m = ⌊√p⌋` and then uses the
+//!   static assignment above; [`sqrt_p_aggregators`] computes that `m`
+//!   for [`super::AggFunnelConfig::with_aggregators`], and
+//!   [`super::WidthPolicy::SqrtP`] applies the same rule to an elastic
+//!   funnel.
+//! * the **asymmetric (m, d)** scheme of §4.4, where `d` high-priority
+//!   threads bypass the funnel entirely, is
+//!   [`super::AggFunnelConfig::with_direct_threads`] (routing to
+//!   `fetch_add_direct`), not a selection policy.
+//!
+//! Elastic funnels ([`super::ElasticAggFunnel`]) apply a `Choose` over
+//! their *active prefix* only: `m` here is whatever width the
+//! [`super::WidthPolicy`] has currently granted, so the same two
+//! variants cover the adaptive case unchanged.
 
 /// Aggregator selection policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,7 +56,9 @@ impl Choose {
 
 /// The paper's Algorithm 2: `m = ⌊√p⌋` Aggregators per sign with √p
 /// threads per group. Returns the `m` to build an [`super::AggFunnel`]
-/// with to reproduce that configuration.
+/// with to reproduce that configuration; the elastic counterpart is
+/// [`super::WidthPolicy::SqrtP`], which re-applies this rule whenever
+/// the controller polls.
 pub fn sqrt_p_aggregators(p: usize) -> usize {
     ((p as f64).sqrt().floor() as usize).max(1)
 }

@@ -277,6 +277,7 @@ impl FetchAddObject for CombiningFunnel {
         BatchStats {
             main_faas: self.main_faas.load(Ordering::Relaxed),
             ops: self.ops.load(Ordering::Relaxed),
+            ..BatchStats::default()
         }
     }
 }

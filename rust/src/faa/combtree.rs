@@ -154,6 +154,7 @@ impl FetchAddObject for CombiningTree {
         BatchStats {
             main_faas: self.main_faas.load(Ordering::Relaxed),
             ops: self.ops.load(Ordering::Relaxed),
+            ..BatchStats::default()
         }
     }
 }

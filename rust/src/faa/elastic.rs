@@ -1,0 +1,771 @@
+//! Elastic Aggregating Funnels: Algorithm 1 with a runtime-resizable
+//! active Aggregator set.
+//!
+//! [`ElasticAggFunnel`] keeps `2 · max_width` Aggregator slots (the
+//! capacity) but routes operations only over the *active prefix*
+//! `0..active` of each sign's slots. A controller — the service's
+//! resize thread, a benchmark harness, or any caller of
+//! [`ElasticAggFunnel::poll_policy`] — moves the active width between
+//! epochs, driven by a [`WidthPolicy`] over the funnel's
+//! [`ContentionMonitor`] window.
+//!
+//! # How resizing stays linearizable
+//!
+//! The §3.1 proof holds for *any* `ChooseAggregator`, so changing the
+//! choice set over time cannot break linearizability; the only new
+//! obligation is that no operation is stranded on a deactivated
+//! Aggregator. Resizing therefore reuses the paper's own overflow
+//! machinery (the cyan code) instead of inventing a second protocol:
+//!
+//! * **Grow** is trivial — the slots already exist, each holding a
+//!   fresh Aggregator; raising `active` just lets `Choose` pick them.
+//! * **Shrink** only lowers `active`. Operations already registered on
+//!   a deactivated Aggregator finish normally; the *next delegate* on
+//!   it observes `index >= active` and retires it exactly as if it had
+//!   crossed `threshold` — replace the slot, publish `final`, send the
+//!   drained Aggregator to [`crate::ebr`]. Stragglers that registered
+//!   after the delegate's closing read observe `final`, restart, and
+//!   re-run `Choose` over the *current* active prefix (unlike the
+//!   static funnel, a restart here re-chooses). An idle deactivated
+//!   Aggregator holds no operations and is simply reclaimed on drop —
+//!   retirement is lazy, bounded by one batch per deactivated slot.
+//!
+//! The delegate cannot count the operations in its batch (it only sees
+//! the magnitude sum), but it *can* detect a batch that combined
+//! nothing: the sum equals its own magnitude iff no one else joined
+//! (every magnitude is ≥ 1). That single bit per batch is what the
+//! AIMD policy's multiplicative-decrease feeds on.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+
+use super::aggfunnel::{
+    await_batch, free_aggregator, non_delegate_result, Aggregator, AtomicMain, Batch, MainCell,
+};
+use super::choose::Choose;
+use super::width::{ContentionMonitor, ContentionSnapshot, WidthPolicy};
+use super::{BatchStats, FetchAddObject};
+use crate::ebr;
+use crate::sync::{CachePadded, SpinLock};
+use crate::util::rng::Rng;
+
+/// Construction parameters for an [`ElasticAggFunnel`].
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Maximum number of threads (`p`); thread ids are `0..p`.
+    pub max_threads: usize,
+    /// Aggregator slots per sign (the elastic capacity). The active
+    /// width never exceeds this.
+    pub max_width: usize,
+    /// Policy that sizes the active prefix (also determines the
+    /// initial width).
+    pub policy: WidthPolicy,
+    /// Aggregator retirement threshold (paper default 2⁶³).
+    pub threshold: u64,
+    /// Aggregator selection policy over the active prefix.
+    pub choose: Choose,
+    /// Seed for the per-thread RNGs used by `Choose::Random`.
+    pub seed: u64,
+    /// Recording mode for the linearizability verifier: keeps every
+    /// Batch chain and retired Aggregator alive so
+    /// [`ElasticAggFunnel::extract_history`] can reconstruct the run.
+    pub record: bool,
+}
+
+impl ElasticConfig {
+    /// Defaults: capacity 12 per sign, AIMD policy, threshold 2⁶³,
+    /// static-even choice.
+    pub fn new(max_threads: usize) -> Self {
+        Self {
+            max_threads: max_threads.max(1),
+            max_width: 12,
+            policy: WidthPolicy::Aimd(super::width::AimdParams::default()),
+            threshold: 1 << 63,
+            choose: Choose::StaticEven,
+            seed: 0xE1A5_71C5,
+            record: false,
+        }
+    }
+
+    pub fn with_max_width(mut self, w: usize) -> Self {
+        self.max_width = w.max(1);
+        self
+    }
+
+    pub fn with_policy(mut self, p: WidthPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn with_threshold(mut self, t: u64) -> Self {
+        self.threshold = t;
+        self
+    }
+
+    pub fn with_choose(mut self, c: Choose) -> Self {
+        self.choose = c;
+        self
+    }
+
+    /// Enable history recording (verifier mode). Forces an effectively
+    /// infinite overflow threshold so batch chains stay walkable;
+    /// resize-driven retirement still happens and is logged.
+    pub fn with_recording(mut self) -> Self {
+        self.record = true;
+        self.threshold = u64::MAX;
+        self
+    }
+}
+
+/// One recorded funnelled operation (verifier mode). Unlike the static
+/// funnel's record, the Aggregator is identified by pointer rather
+/// than slot index: a resizing run can retire several Aggregator
+/// *generations* through the same slot, and each generation's `value`
+/// sequence restarts at zero.
+#[derive(Clone, Copy, Debug)]
+struct ElasticOpRecord {
+    /// The Aggregator this operation's batch lives on.
+    agg: *mut Aggregator,
+    /// Result of the op's F&A on the Aggregator's `value`.
+    a_before: u64,
+    /// The operation's |delta|.
+    magnitude: u64,
+    /// The value the operation returned to its caller.
+    result: u64,
+}
+
+/// A retired Aggregator kept alive for history extraction.
+struct RetiredAgg {
+    ptr: *mut Aggregator,
+    /// Slot index at retirement (`>= max_width` means negative sign).
+    index: usize,
+}
+
+// Safety: raw pointers in records are only dereferenced after every
+// worker thread has quiesced (extract_history contract), and the
+// pointees are never freed in recording mode before drop.
+unsafe impl Send for RetiredAgg {}
+
+/// Per-thread scratch state.
+struct ElasticScratch {
+    rng: Rng,
+    /// Recorded operations (verifier mode only).
+    records: Vec<ElasticOpRecord>,
+}
+
+/// Controller-side bookkeeping for [`ElasticAggFunnel::poll_policy`].
+#[derive(Default)]
+struct ControllerState {
+    last: ContentionSnapshot,
+}
+
+/// Aggregating Funnels with an adaptively sized Aggregator set.
+///
+/// Implements [`FetchAddObject`] exactly like [`super::AggFunnel`]
+/// (same batching protocol, same RMWability, same EBR reclamation) and
+/// adds [`resize`](Self::resize) / [`poll_policy`](Self::poll_policy)
+/// for width control plus a [`ContentionMonitor`] for observability.
+pub struct ElasticAggFunnel {
+    main: AtomicMain,
+    /// `agg[0..max_width)` positive, `agg[max_width..2·max_width)`
+    /// negative. Slot offsets use `max_width` (capacity), never the
+    /// active width, so slots are stable across resizes.
+    agg: Vec<CachePadded<AtomicPtr<Aggregator>>>,
+    /// Active Aggregators per sign; picks route over `0..active`.
+    active: CachePadded<AtomicUsize>,
+    resizes: AtomicU64,
+    cfg: ElasticConfig,
+    monitor: ContentionMonitor,
+    ebr: ebr::Domain,
+    scratch: Vec<CachePadded<std::cell::UnsafeCell<ElasticScratch>>>,
+    /// Aggregators retired while recording (verifier mode only).
+    retired_log: SpinLock<Vec<RetiredAgg>>,
+    controller: SpinLock<ControllerState>,
+}
+
+unsafe impl Send for ElasticAggFunnel {}
+unsafe impl Sync for ElasticAggFunnel {}
+
+impl ElasticAggFunnel {
+    /// Build with defaults (AIMD policy, capacity 12) for `p` threads.
+    pub fn new(max_threads: usize) -> Self {
+        Self::with_config(ElasticConfig::new(max_threads))
+    }
+
+    /// Build with an explicit configuration.
+    pub fn with_config(cfg: ElasticConfig) -> Self {
+        let m2 = cfg.max_width * 2;
+        let agg = (0..m2)
+            .map(|_| CachePadded::new(AtomicPtr::new(Box::into_raw(Aggregator::boxed()))))
+            .collect();
+        let mut seed_rng = Rng::new(cfg.seed);
+        let scratch = (0..cfg.max_threads)
+            .map(|t| {
+                CachePadded::new(std::cell::UnsafeCell::new(ElasticScratch {
+                    rng: seed_rng.fork(t as u64),
+                    records: Vec::new(),
+                }))
+            })
+            .collect();
+        let initial = cfg.policy.initial_width(cfg.max_threads, cfg.max_width);
+        let ebr = ebr::Domain::new(cfg.max_threads);
+        let monitor = ContentionMonitor::new(cfg.max_threads);
+        Self {
+            main: AtomicMain::new(0),
+            agg,
+            active: CachePadded::new(AtomicUsize::new(initial)),
+            resizes: AtomicU64::new(0),
+            cfg,
+            monitor,
+            ebr,
+            scratch,
+            retired_log: SpinLock::new(Vec::new()),
+            controller: SpinLock::new(ControllerState::default()),
+        }
+    }
+
+    pub fn config(&self) -> &ElasticConfig {
+        &self.cfg
+    }
+
+    /// The current active width per sign.
+    pub fn active_width(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// The fixed slot capacity per sign.
+    pub fn max_width(&self) -> usize {
+        self.cfg.max_width
+    }
+
+    /// Number of resizes applied so far.
+    pub fn resizes(&self) -> u64 {
+        self.resizes.load(Ordering::Relaxed)
+    }
+
+    /// The funnel's contention monitor (live counters).
+    pub fn monitor(&self) -> &ContentionMonitor {
+        &self.monitor
+    }
+
+    /// Set the active width (clamped to `1..=max_width`); returns the
+    /// previous width. Safe to call from any thread at any time —
+    /// in-flight operations on deactivated Aggregators drain through
+    /// the overflow protocol (see the module docs).
+    pub fn resize(&self, width: usize) -> usize {
+        let width = width.clamp(1, self.cfg.max_width);
+        let prev = self.active.swap(width, Ordering::AcqRel);
+        if prev != width {
+            self.resizes.fetch_add(1, Ordering::Relaxed);
+        }
+        prev
+    }
+
+    /// Apply `policy` to the contention window accumulated since the
+    /// previous poll and resize if it says so; returns the (possibly
+    /// new) active width. Intended for a single periodic controller —
+    /// concurrent pollers serialize on an internal spinlock.
+    pub fn poll_policy(&self, policy: &WidthPolicy) -> usize {
+        let window = {
+            // Snapshot under the lock: if a concurrent poller could
+            // interleave between snapshot and store, an older snapshot
+            // might overwrite a newer `last` and the next window would
+            // double-count the gap.
+            let mut ctl = self.controller.lock();
+            let snap = self.monitor.snapshot();
+            let w = snap.delta(&ctl.last);
+            ctl.last = snap;
+            w
+        };
+        let current = self.active_width();
+        let target =
+            policy.decide(self.cfg.max_threads, current, self.cfg.max_width, &window);
+        if target != current {
+            self.resize(target);
+        }
+        target
+    }
+
+    #[inline]
+    fn scratch(&self, tid: usize) -> &mut ElasticScratch {
+        // Safety: `tid` is owned by exactly one OS thread (trait contract).
+        unsafe { &mut *self.scratch[tid].get() }
+    }
+
+    /// Slot index for in-sign Aggregator `g`.
+    #[inline]
+    fn slot_index(&self, g: usize, positive: bool) -> usize {
+        if positive {
+            g
+        } else {
+            self.cfg.max_width + g
+        }
+    }
+
+    /// The funnelled Fetch&Add path. Identical to the static funnel's
+    /// lines 20–37 except that every (re)start re-runs `Choose` over
+    /// the current active prefix.
+    fn fetch_add_funnel(&self, tid: usize, delta: i64) -> u64 {
+        let positive = delta > 0;
+        let magnitude = delta.unsigned_abs();
+        let guard = self.ebr.pin(tid);
+
+        loop {
+            // Re-read the active width on every attempt so restarts
+            // route onto the post-resize prefix.
+            let width = self.active.load(Ordering::Acquire).max(1);
+            let g = {
+                let scratch = self.scratch(tid);
+                self.cfg.choose.pick(tid, width, || scratch.rng.next_u64())
+            };
+            let index = self.slot_index(g, positive);
+            let slot = &self.agg[index];
+
+            // Line 21: a ← Agg[index].
+            let a_ptr = slot.load(Ordering::Acquire);
+            debug_assert!(!a_ptr.is_null());
+            let a = unsafe { &*a_ptr };
+
+            // Line 22: register in a batch with a single F&A.
+            let a_before = a.value.fetch_add(magnitude, Ordering::AcqRel);
+
+            // Lines 23–24 (shared with the static funnel).
+            let last_ptr = await_batch(a, a_before);
+            if last_ptr.is_null() {
+                // Aggregator was retired (overflow or deactivation);
+                // restart with the full delta, re-choosing the slot.
+                self.monitor.record_restart(tid);
+                continue;
+            }
+            let batch = unsafe { &*last_ptr };
+
+            let result = if batch.after == a_before {
+                // Lines 26–33: I am the delegate of the next batch.
+                self.run_delegate(tid, index, a_ptr, last_ptr, a_before, magnitude, positive)
+            } else {
+                // Lines 34–37: my batch is already linked; find it and
+                // derive my return value (shared with the static funnel).
+                non_delegate_result(batch, a_before, positive)
+            };
+            self.monitor.record_op(tid);
+            if self.cfg.record {
+                self.scratch(tid).records.push(ElasticOpRecord {
+                    agg: a_ptr,
+                    a_before,
+                    magnitude,
+                    result,
+                });
+            }
+            drop(guard);
+            return result;
+        }
+    }
+
+    /// Delegate path (lines 26–33) plus the elastic retirement rule:
+    /// an Aggregator is retired when it crosses `threshold` *or* when
+    /// its slot has been deactivated by a shrink.
+    #[allow(clippy::too_many_arguments)]
+    fn run_delegate(
+        &self,
+        tid: usize,
+        index: usize,
+        a_ptr: *mut Aggregator,
+        last_ptr: *mut Batch,
+        a_before: u64,
+        magnitude: u64,
+        positive: bool,
+    ) -> u64 {
+        let a = unsafe { &*a_ptr };
+
+        // Line 27: read the Aggregator's value — this closes the batch.
+        let a_after = a.value.load(Ordering::Acquire);
+        debug_assert!(a_after > a_before);
+        let sum = a_after.wrapping_sub(a_before);
+
+        // Line 28: apply the whole batch to Main with one F&A.
+        let signed_sum = if positive { sum as i64 } else { (sum as i64).wrapping_neg() };
+        let main_before = self.main.apply_add(tid, signed_sum);
+
+        // Lines 29–31, extended: retire on overflow or deactivation.
+        // Order is load-bearing: replace in Agg first, then set
+        // `final`, so restarts always find a fresh Aggregator.
+        let g = if index >= self.cfg.max_width { index - self.cfg.max_width } else { index };
+        let deactivated = g >= self.active.load(Ordering::Acquire);
+        let retired = a_after >= self.cfg.threshold || deactivated;
+        if retired {
+            let fresh = Box::into_raw(Aggregator::boxed());
+            self.agg[index].store(fresh, Ordering::Release);
+            a.tail.final_value.store(a_after, Ordering::Release);
+        }
+
+        // Line 32: publish the Batch record; waiters exit their loops.
+        let new_batch = Box::into_raw(Box::new(Batch {
+            before: a_before,
+            after: a_after,
+            main_before,
+            previous: last_ptr,
+        }));
+        a.tail.last.store(new_batch, Ordering::Release);
+
+        // §3.1.2 reclamation, as in the static funnel. In recording
+        // mode the chain is kept alive (and retired Aggregators are
+        // logged) for `extract_history`.
+        if !self.cfg.record {
+            self.ebr.retire_box(tid, unsafe { Box::from_raw(last_ptr) });
+            if retired {
+                self.ebr.retire_box(tid, unsafe { Box::from_raw(a_ptr) });
+            }
+        } else if retired {
+            self.retired_log.lock().push(RetiredAgg { ptr: a_ptr, index });
+        }
+
+        // All magnitudes are ≥ 1, so the batch combined nothing iff
+        // its sum is exactly the delegate's own magnitude.
+        self.monitor.record_batch(tid, sum == magnitude);
+        main_before // line 33
+    }
+
+    /// Reconstruct the full batch history of a recording-mode run,
+    /// including every retired Aggregator generation.
+    ///
+    /// Must be called after all worker threads (and the resize
+    /// controller) have finished. Returns the history in oracle layout
+    /// plus, aligned with it, the value each operation actually
+    /// returned — ready for [`crate::verify::verify_history_against`].
+    /// Panics if the funnel was not built with
+    /// [`ElasticConfig::with_recording`], and asserts Invariant 3.1
+    /// per Aggregator while walking.
+    pub fn extract_history(&self) -> (crate::runtime::BatchHistory, Vec<u64>) {
+        assert!(self.cfg.record, "extract_history requires recording mode");
+        // Every Aggregator generation that ever existed: retired ones
+        // (in retirement order) then the ones still in the slots.
+        let mut generations: Vec<(*mut Aggregator, usize)> = self
+            .retired_log
+            .lock()
+            .iter()
+            .map(|r| (r.ptr, r.index))
+            .collect();
+        for (index, slot) in self.agg.iter().enumerate() {
+            generations.push((slot.load(Ordering::Acquire), index));
+        }
+
+        // Bucket op records by Aggregator pointer (recording mode never
+        // frees, so pointers are unique generation keys).
+        let mut per_agg: std::collections::HashMap<*mut Aggregator, Vec<ElasticOpRecord>> =
+            std::collections::HashMap::new();
+        for s in &self.scratch {
+            let s = unsafe { &*s.get() };
+            for r in &s.records {
+                per_agg.entry(r.agg).or_default().push(*r);
+            }
+        }
+
+        let mut history = crate::runtime::BatchHistory::default();
+        let mut recorded = Vec::new();
+        for (a_ptr, index) in generations {
+            let Some(mut ops) = per_agg.remove(&a_ptr) else { continue };
+            ops.sort_by_key(|r| r.a_before);
+            let sign: i32 = if index < self.cfg.max_width { 1 } else { -1 };
+            // Collect the chain oldest-first.
+            let a = unsafe { &*a_ptr };
+            let mut chain = Vec::new();
+            let mut b = a.tail.last.load(Ordering::Acquire);
+            while !b.is_null() {
+                chain.push(unsafe { &*b });
+                b = unsafe { (*b).previous };
+            }
+            chain.reverse();
+            for w in chain.windows(2) {
+                assert_eq!(w[0].after, w[1].before, "Invariant 3.1: contiguity violated");
+            }
+            let mut op_iter = ops.iter().peekable();
+            for batch in chain.iter().skip(1) {
+                // skip the sentinel (before == after == 0)
+                assert!(batch.after > batch.before, "Invariant 3.1: empty batch");
+                let mut deltas = Vec::new();
+                let mut cursor = batch.before;
+                while let Some(r) = op_iter.peek() {
+                    if r.a_before >= batch.after {
+                        break;
+                    }
+                    assert_eq!(r.a_before, cursor, "ops within a batch must tile it exactly");
+                    deltas.push(r.magnitude);
+                    recorded.push(r.result);
+                    cursor = cursor.wrapping_add(r.magnitude);
+                    op_iter.next();
+                }
+                assert_eq!(cursor, batch.after, "batch sum mismatch (Invariant 3.1)");
+                history.push_batch(batch.main_before, sign, &deltas);
+            }
+            assert!(op_iter.next().is_none(), "op not covered by any batch");
+        }
+        assert!(per_agg.is_empty(), "op recorded against an unknown Aggregator");
+        (history, recorded)
+    }
+
+    /// Reclamation counters summed over threads: `(retired, freed)`.
+    pub fn debug_ebr_stats(&self) -> (u64, u64) {
+        let mut retired = 0;
+        let mut freed = 0;
+        for tid in 0..self.cfg.max_threads {
+            let (r, f) = self.ebr.stats(tid);
+            retired += r;
+            freed += f;
+        }
+        (retired, freed)
+    }
+}
+
+impl FetchAddObject for ElasticAggFunnel {
+    fn fetch_add(&self, tid: usize, delta: i64) -> u64 {
+        if delta == 0 {
+            return self.read(tid); // line 19: Fetch&Add(0) is a Read
+        }
+        self.fetch_add_funnel(tid, delta)
+    }
+
+    #[inline]
+    fn read(&self, tid: usize) -> u64 {
+        self.main.load(tid)
+    }
+
+    #[inline]
+    fn fetch_add_direct(&self, tid: usize, delta: i64) -> u64 {
+        self.monitor.record_direct(tid);
+        self.main.apply_add(tid, delta)
+    }
+
+    #[inline]
+    fn compare_and_swap(&self, tid: usize, old: u64, new: u64) -> u64 {
+        let witnessed = self.main.cas(tid, old, new);
+        if witnessed != old {
+            self.monitor.record_cas_failure(tid);
+        }
+        witnessed
+    }
+
+    #[inline]
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64 {
+        self.main.or(tid, bits)
+    }
+
+    fn max_threads(&self) -> usize {
+        self.cfg.max_threads
+    }
+
+    fn batch_stats(&self) -> BatchStats {
+        let mut stats = BatchStats::default();
+        self.monitor.fold_into(&mut stats);
+        stats
+    }
+}
+
+impl Drop for ElasticAggFunnel {
+    fn drop(&mut self) {
+        for r in self.retired_log.lock().drain(..) {
+            // Only populated in recording mode (otherwise EBR owns
+            // retired Aggregators); chains are kept alive there, so
+            // free them along with the Aggregator.
+            free_aggregator(r.ptr, true);
+        }
+        for slot in &self.agg {
+            free_aggregator(slot.load(Ordering::Relaxed), self.cfg.record);
+        }
+        // Retired Aggregators/Batches from non-recording runs are
+        // freed by the EBR domain drop.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_matches_hardware_semantics() {
+        let f = ElasticAggFunnel::new(1);
+        assert_eq!(f.fetch_add(0, 5), 0);
+        assert_eq!(f.fetch_add(0, 3), 5);
+        assert_eq!(f.fetch_add(0, -2), 8);
+        assert_eq!(f.read(0), 6);
+        assert_eq!(f.fetch_add(0, 0), 6, "Fetch&Add(0) is a Read");
+    }
+
+    #[test]
+    fn rmw_and_direct_hit_main() {
+        let f = ElasticAggFunnel::new(2);
+        f.fetch_add(0, 10);
+        assert_eq!(f.compare_and_swap(0, 10, 99), 10);
+        assert_eq!(f.compare_and_swap(1, 5, 7), 99, "failed CAS witnesses");
+        assert_eq!(f.fetch_or(1, 0b100), 99);
+        assert_eq!(f.fetch_add_direct(0, 1), 99 | 0b100);
+        let stats = f.batch_stats();
+        assert_eq!(stats.cas_failures, 1);
+        assert!(stats.ops >= 2);
+    }
+
+    #[test]
+    fn resize_clamps_and_counts() {
+        let f = ElasticAggFunnel::with_config(
+            ElasticConfig::new(4).with_max_width(8).with_policy(WidthPolicy::Fixed(3)),
+        );
+        assert_eq!(f.active_width(), 3);
+        assert_eq!(f.resize(5), 3);
+        assert_eq!(f.active_width(), 5);
+        assert_eq!(f.resize(100), 5);
+        assert_eq!(f.active_width(), 8, "clamped to capacity");
+        f.resize(0);
+        assert_eq!(f.active_width(), 1, "clamped to 1");
+        assert_eq!(f.resizes(), 3);
+        f.resize(1);
+        assert_eq!(f.resizes(), 3, "no-op resize not counted");
+    }
+
+    #[test]
+    fn poll_policy_applies_aimd() {
+        let f = ElasticAggFunnel::with_config(
+            ElasticConfig::new(8).with_max_width(8).with_policy(WidthPolicy::Fixed(2)),
+        );
+        // Manufacture a hot window: many ops per batch.
+        for _ in 0..64 {
+            f.monitor().record_op(0);
+        }
+        for _ in 0..4 {
+            f.monitor().record_batch(0, false);
+        }
+        let aimd = WidthPolicy::Aimd(super::super::width::AimdParams::default());
+        assert_eq!(f.poll_policy(&aimd), 3, "avg batch 16 grows 2 -> 3");
+        // Second poll sees an empty window: hold.
+        assert_eq!(f.poll_policy(&aimd), 3);
+    }
+
+    #[test]
+    fn dense_tickets_while_resizing() {
+        let p = 6;
+        let per_thread = 3_000usize;
+        let f = Arc::new(ElasticAggFunnel::with_config(
+            ElasticConfig::new(p).with_max_width(6).with_policy(WidthPolicy::Fixed(4)),
+        ));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let controller = {
+            let f = Arc::clone(&f);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut w = 1usize;
+                while !stop.load(Ordering::Relaxed) {
+                    f.resize(w);
+                    w = w % 6 + 1;
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    (0..per_thread).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        stop.store(true, Ordering::Relaxed);
+        controller.join().unwrap();
+        all.sort_unstable();
+        let n = p * per_thread;
+        assert_eq!(all, (0..n as u64).collect::<Vec<_>>(), "lost or duplicated a ticket");
+    }
+
+    #[test]
+    fn shrink_under_load_with_tiny_threshold() {
+        // Overflow retirement and deactivation retirement interleave.
+        let p = 4;
+        let per_thread = 2_000usize;
+        let f = Arc::new(ElasticAggFunnel::with_config(
+            ElasticConfig::new(p)
+                .with_max_width(4)
+                .with_policy(WidthPolicy::Fixed(4))
+                .with_threshold(64),
+        ));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    let mut out = Vec::with_capacity(per_thread);
+                    for i in 0..per_thread {
+                        if tid == 0 && i == per_thread / 2 {
+                            f.resize(1);
+                        }
+                        out.push(f.fetch_add(tid, 1));
+                    }
+                    out
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let n = p * per_thread;
+        assert_eq!(all, (0..n as u64).collect::<Vec<_>>());
+        let (retired, _freed) = f.debug_ebr_stats();
+        assert!(retired > 0, "batches/aggregators must flow through EBR");
+    }
+
+    #[test]
+    fn recorded_history_replays_with_resizes() {
+        let p = 4;
+        let f = Arc::new(ElasticAggFunnel::with_config(
+            ElasticConfig::new(p).with_max_width(4).with_recording(),
+        ));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    let mut sum = 0i64;
+                    for i in 0..1_500i64 {
+                        if tid == 0 && i % 100 == 0 {
+                            f.resize(1 + (i as usize / 100) % 4);
+                        }
+                        let d = if (tid as i64 + i) % 3 == 0 { -2 } else { 5 };
+                        f.fetch_add(tid, d);
+                        sum += d;
+                    }
+                    sum
+                })
+            })
+            .collect();
+        let expected: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(f.read(0) as i64, expected, "sum conservation (Invariant 3.3)");
+        let (history, recorded) = f.extract_history();
+        assert_eq!(history.ops(), p * 1_500);
+        let want = crate::runtime::batch_returns_cpu(&history);
+        assert_eq!(want, recorded, "Lemma 3.4 with elastic resizes");
+    }
+
+    #[test]
+    fn batch_stats_account_under_elasticity() {
+        let p = 8;
+        let f = Arc::new(ElasticAggFunnel::with_config(
+            ElasticConfig::new(p).with_max_width(8).with_policy(WidthPolicy::Fixed(2)),
+        ));
+        let handles: Vec<_> = (0..p)
+            .map(|tid| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    for i in 0..2_000usize {
+                        if tid == 1 && i % 500 == 0 {
+                            f.resize(1 + i / 500);
+                        }
+                        f.fetch_add(tid, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = f.batch_stats();
+        assert_eq!(stats.ops, 8 * 2_000);
+        assert!(stats.main_faas <= stats.ops);
+        assert!(stats.main_faas > 0);
+        assert!(stats.avg_batch_size() >= 1.0);
+        assert!(stats.single_op_batches <= stats.main_faas);
+    }
+}

@@ -21,22 +21,31 @@
 //!   (Shavit & Zemach 2000) the paper compares against.
 //! * [`combtree::CombiningTree`] — the classic software combining tree
 //!   (related-work baseline, used in ablations).
+//! * [`elastic::ElasticAggFunnel`] — Aggregating Funnels whose active
+//!   Aggregator set grows and shrinks at runtime, driven by a
+//!   [`width::WidthPolicy`] over a lock-free
+//!   [`width::ContentionMonitor`] (this crate's extension beyond the
+//!   paper; see `DESIGN.md`).
 
 pub mod aggfunnel;
 pub mod choose;
 pub mod combfunnel;
 pub mod combtree;
 pub mod counter;
+pub mod elastic;
 pub mod hardware;
 pub mod recursive;
+pub mod width;
 
 pub use aggfunnel::{AggFunnel, AggFunnelConfig};
 pub use choose::Choose;
 pub use combfunnel::{CombiningFunnel, CombiningFunnelConfig};
 pub use combtree::CombiningTree;
 pub use counter::AggCounter;
+pub use elastic::{ElasticAggFunnel, ElasticConfig};
 pub use hardware::HardwareFaa;
 pub use recursive::RecursiveAggFunnel;
+pub use width::{AimdParams, ContentionMonitor, ContentionSnapshot, WidthPolicy};
 
 /// Fold a signed delta into the unsigned wrap-around domain.
 #[inline]
@@ -85,7 +94,10 @@ pub trait FetchAddObject: Send + Sync {
     }
 }
 
-/// Counters backing the paper's "average batch size" metric.
+/// Counters backing the paper's "average batch size" metric, plus the
+/// contention signals the adaptive-width subsystem samples
+/// ([`width::ContentionMonitor`] folds its window counters in here so
+/// every consumer reads one record).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct BatchStats {
     /// Number of F&A instructions applied to `Main` (batches plus
@@ -93,6 +105,13 @@ pub struct BatchStats {
     pub main_faas: u64,
     /// Number of `Fetch&Add` operations those F&As accomplished.
     pub ops: u64,
+    /// Batches that combined exactly one operation (no batching win);
+    /// the AIMD shrink signal. Zero for implementations that do not
+    /// track it.
+    pub single_op_batches: u64,
+    /// Failed `Compare&Swap` attempts observed on the object. Zero for
+    /// implementations that do not track it.
+    pub cas_failures: u64,
 }
 
 impl BatchStats {
@@ -102,6 +121,11 @@ impl BatchStats {
         } else {
             self.ops as f64 / self.main_faas as f64
         }
+    }
+
+    /// True iff at least one batch retired more than one operation.
+    pub fn combining_occurred(&self) -> bool {
+        self.ops > self.main_faas
     }
 }
 
@@ -118,7 +142,7 @@ mod tests {
 
     #[test]
     fn batch_stats_avg() {
-        let s = BatchStats { main_faas: 4, ops: 10 };
+        let s = BatchStats { main_faas: 4, ops: 10, ..BatchStats::default() };
         assert!((s.avg_batch_size() - 2.5).abs() < 1e-12);
         assert_eq!(BatchStats::default().avg_batch_size(), 0.0);
     }

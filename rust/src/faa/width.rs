@@ -1,0 +1,438 @@
+//! Adaptive funnel width: contention monitoring and width policies.
+//!
+//! The paper treats the number of Aggregators `m` as a static tuning
+//! knob (§4.2 evaluates fixed widths; Algorithm 2 fixes `m = ⌊√p⌋`).
+//! A production service, however, sees thread counts and contention
+//! that vary at runtime: a fixed `m` is wasted memory at low load and
+//! a hot spot at high load. This module supplies the two pieces an
+//! elastic funnel ([`super::ElasticAggFunnel`]) needs to adapt:
+//!
+//! * [`ContentionMonitor`] — a lock-free, cache-padded, per-thread set
+//!   of counters (batches applied, ops batched, single-op batches,
+//!   CAS failures, overflow restarts). Writers touch only their own
+//!   line with relaxed atomics, so the hot path pays one uncontended
+//!   add; a controller thread reads a [`ContentionSnapshot`] at any
+//!   time without stopping the world.
+//! * [`WidthPolicy`] — the decision rule mapping a window of monitor
+//!   deltas to a new active width: [`WidthPolicy::Fixed`] (the paper's
+//!   static `m`), [`WidthPolicy::SqrtP`] (Algorithm 2's `⌊√p⌋` rule)
+//!   and [`WidthPolicy::Aimd`] — additive-increase when batches run
+//!   hot (high occupancy means each Aggregator is absorbing many
+//!   concurrent ops), multiplicative-decrease when batches run
+//!   near-empty (no combining is happening, so fewer Aggregators
+//!   serve the same load with less per-op latency).
+//!
+//! The linearizability proof of §3.1 holds for *any* Aggregator
+//! choice, so resizing the active set between epochs never threatens
+//! correctness — only throughput. See `DESIGN.md` for how the elastic
+//! funnel retires drained Aggregators safely.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::choose::sqrt_p_aggregators;
+use super::BatchStats;
+use crate::sync::CachePadded;
+
+/// Per-thread monitor counters; one cache line per thread.
+#[derive(Default)]
+struct MonitorSlot {
+    /// Batches this thread applied to `Main` as a delegate.
+    batches: AtomicU64,
+    /// Fetch&Add operations completed through the funnel.
+    ops: AtomicU64,
+    /// Batches that contained exactly one operation (no combining).
+    single_op_batches: AtomicU64,
+    /// Direct (`Fetch&AddDirect`) operations: each is its own F&A on
+    /// `Main`, but they are kept out of the funnel counters so they
+    /// cannot dilute the policy's batch-occupancy signals.
+    direct_ops: AtomicU64,
+    /// Failed `Compare&Swap` attempts observed on `Main`.
+    cas_failures: AtomicU64,
+    /// Operation restarts forced by Aggregator retirement.
+    restarts: AtomicU64,
+}
+
+/// Lock-free contention statistics for an elastic funnel.
+///
+/// Each thread id owns one cache-padded slot; recording is a relaxed
+/// `fetch_add` on the owner's line (never contended), and snapshots
+/// are relaxed sums over all slots. Totals fold into the crate-wide
+/// [`BatchStats`] so every consumer of the average-batch-size metric
+/// sees the same numbers.
+pub struct ContentionMonitor {
+    slots: Vec<CachePadded<MonitorSlot>>,
+}
+
+impl ContentionMonitor {
+    /// Monitor for thread ids `0..max_threads`.
+    pub fn new(max_threads: usize) -> Self {
+        Self {
+            slots: (0..max_threads.max(1))
+                .map(|_| CachePadded::new(MonitorSlot::default()))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, tid: usize) -> &MonitorSlot {
+        &self.slots[tid]
+    }
+
+    /// One funnelled operation completed (delegate or not).
+    #[inline]
+    pub fn record_op(&self, tid: usize) {
+        self.slot(tid).ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A delegate applied one batch to `Main`. `single` marks a batch
+    /// that contained only the delegate's own operation.
+    #[inline]
+    pub fn record_batch(&self, tid: usize, single: bool) {
+        let s = self.slot(tid);
+        s.batches.fetch_add(1, Ordering::Relaxed);
+        if single {
+            s.single_op_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A direct (`Fetch&AddDirect`) operation: its own F&A on `Main`,
+    /// counted separately so the width policy only sees funnel
+    /// traffic (a priority-heavy workload must not mask the funnel's
+    /// grow/shrink signals).
+    #[inline]
+    pub fn record_direct(&self, tid: usize) {
+        self.slot(tid).direct_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `Compare&Swap` on `Main` witnessed a value other than `old`.
+    #[inline]
+    pub fn record_cas_failure(&self, tid: usize) {
+        self.slot(tid).cas_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An operation restarted because its Aggregator was retired.
+    #[inline]
+    pub fn record_restart(&self, tid: usize) {
+        self.slot(tid).restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Relaxed sum over every thread's counters.
+    pub fn snapshot(&self) -> ContentionSnapshot {
+        let mut snap = ContentionSnapshot::default();
+        for s in &self.slots {
+            snap.batches += s.batches.load(Ordering::Relaxed);
+            snap.batched_ops += s.ops.load(Ordering::Relaxed);
+            snap.single_op_batches += s.single_op_batches.load(Ordering::Relaxed);
+            snap.direct_ops += s.direct_ops.load(Ordering::Relaxed);
+            snap.cas_failures += s.cas_failures.load(Ordering::Relaxed);
+            snap.restarts += s.restarts.load(Ordering::Relaxed);
+        }
+        snap
+    }
+
+    /// Fold the totals into the crate-wide batch-statistics record.
+    /// Direct ops count here (each is one F&A on `Main` that retired
+    /// one op, matching the static funnel's accounting) even though
+    /// the policy-facing ratios exclude them.
+    pub fn fold_into(&self, stats: &mut BatchStats) {
+        let snap = self.snapshot();
+        stats.main_faas += snap.batches + snap.direct_ops;
+        stats.ops += snap.batched_ops + snap.direct_ops;
+        stats.single_op_batches += snap.single_op_batches;
+        stats.cas_failures += snap.cas_failures;
+    }
+}
+
+/// A point-in-time (or windowed, via [`ContentionSnapshot::delta`])
+/// view of a [`ContentionMonitor`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ContentionSnapshot {
+    /// Batches applied to `Main` by funnel delegates (directs excluded
+    /// so they cannot dilute the occupancy ratios below).
+    pub batches: u64,
+    /// Funnelled operations those batches accomplished.
+    pub batched_ops: u64,
+    /// Batches containing exactly one operation.
+    pub single_op_batches: u64,
+    /// `Fetch&AddDirect` operations (one F&A on `Main` each).
+    pub direct_ops: u64,
+    /// Failed CAS attempts on `Main`.
+    pub cas_failures: u64,
+    /// Retirement-forced operation restarts.
+    pub restarts: u64,
+}
+
+impl ContentionSnapshot {
+    /// Counters accumulated since `earlier` (saturating).
+    pub fn delta(&self, earlier: &ContentionSnapshot) -> ContentionSnapshot {
+        ContentionSnapshot {
+            batches: self.batches.saturating_sub(earlier.batches),
+            batched_ops: self.batched_ops.saturating_sub(earlier.batched_ops),
+            single_op_batches: self
+                .single_op_batches
+                .saturating_sub(earlier.single_op_batches),
+            direct_ops: self.direct_ops.saturating_sub(earlier.direct_ops),
+            cas_failures: self.cas_failures.saturating_sub(earlier.cas_failures),
+            restarts: self.restarts.saturating_sub(earlier.restarts),
+        }
+    }
+
+    /// Operations per F&A on `Main` (the paper's §4.1 metric); 0.0
+    /// when the window saw no batches.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_ops as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of batches that combined nothing; 0.0 when empty.
+    pub fn single_fraction(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.single_op_batches as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Tuning knobs for [`WidthPolicy::Aimd`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AimdParams {
+    /// Additive-increase trigger: grow by one Aggregator when the
+    /// window's average batch size reaches this occupancy.
+    pub grow_batch: f64,
+    /// Multiplicative-decrease trigger: halve the width when at least
+    /// this fraction of the window's batches combined nothing.
+    pub shrink_single_fraction: f64,
+    /// Never shrink below this width.
+    pub min_width: usize,
+}
+
+impl Default for AimdParams {
+    fn default() -> Self {
+        // Occupancy 4 means each Main F&A is retiring four ops — the
+        // Aggregator lines are clearly the hot spot, so spread. A
+        // window where most batches are singletons means combining is
+        // not paying for the funnel detour — collapse quickly.
+        Self { grow_batch: 4.0, shrink_single_fraction: 0.5, min_width: 1 }
+    }
+}
+
+/// How an elastic funnel sizes its active Aggregator set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WidthPolicy {
+    /// A constant width — the paper's static `m` (AGGFUNNEL-m).
+    Fixed(usize),
+    /// Algorithm 2's `m = ⌊√p⌋` rule, recomputed from the funnel's
+    /// thread bound.
+    SqrtP,
+    /// Additive-increase / multiplicative-decrease driven by the
+    /// contention window (see [`AimdParams`]).
+    Aimd(AimdParams),
+}
+
+impl WidthPolicy {
+    /// The width to start a funnel at, before any window has elapsed.
+    pub fn initial_width(&self, p: usize, max_width: usize) -> usize {
+        let w = match self {
+            WidthPolicy::Fixed(m) => *m,
+            WidthPolicy::SqrtP => sqrt_p_aggregators(p),
+            // AIMD starts at the floor and earns its width from
+            // observed contention, like a TCP slow-start without the
+            // exponential phase.
+            WidthPolicy::Aimd(a) => a.min_width,
+        };
+        w.clamp(1, max_width.max(1))
+    }
+
+    /// Decide the next active width given the current one and a
+    /// window of contention counters.
+    pub fn decide(
+        &self,
+        p: usize,
+        current: usize,
+        max_width: usize,
+        window: &ContentionSnapshot,
+    ) -> usize {
+        let max_width = max_width.max(1);
+        let target = match self {
+            WidthPolicy::Fixed(m) => *m,
+            WidthPolicy::SqrtP => sqrt_p_aggregators(p),
+            WidthPolicy::Aimd(a) => {
+                if window.batches == 0 {
+                    // Quiet window: no evidence either way.
+                    current
+                } else if window.avg_batch() >= a.grow_batch {
+                    current + 1
+                } else if window.single_fraction() >= a.shrink_single_fraction {
+                    (current / 2).max(a.min_width)
+                } else {
+                    current
+                }
+            }
+        };
+        target.clamp(1, max_width)
+    }
+
+    /// Parse a CLI/config spelling: `fixed:<m>` (or a bare integer),
+    /// `sqrtp`, or `aimd`.
+    pub fn parse(s: &str) -> Option<WidthPolicy> {
+        let s = s.trim();
+        if let Some(m) = s.strip_prefix("fixed:") {
+            return m.trim().parse().ok().map(WidthPolicy::Fixed);
+        }
+        match s {
+            "sqrtp" | "sqrt-p" | "sqrt_p" => Some(WidthPolicy::SqrtP),
+            "aimd" => Some(WidthPolicy::Aimd(AimdParams::default())),
+            _ => s.parse().ok().map(WidthPolicy::Fixed),
+        }
+    }
+
+    /// Stable display name, used as a benchmark series label.
+    pub fn label(&self) -> String {
+        match self {
+            WidthPolicy::Fixed(m) => format!("fixed-{m}"),
+            WidthPolicy::SqrtP => "sqrtp".into(),
+            WidthPolicy::Aimd(_) => "aimd".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monitor_counts_and_snapshots() {
+        let m = ContentionMonitor::new(2);
+        m.record_op(0);
+        m.record_op(1);
+        m.record_batch(0, false);
+        m.record_batch(1, true);
+        m.record_direct(0);
+        m.record_cas_failure(1);
+        m.record_restart(0);
+        let s = m.snapshot();
+        assert_eq!(s.batched_ops, 2, "directs stay out of the funnel ops");
+        assert_eq!(s.batches, 2, "directs stay out of the batch count");
+        assert_eq!(s.direct_ops, 1);
+        assert_eq!(s.single_op_batches, 1);
+        assert_eq!(s.cas_failures, 1);
+        assert_eq!(s.restarts, 1);
+    }
+
+    #[test]
+    fn direct_traffic_does_not_dilute_policy_ratios() {
+        // A priority-heavy workload whose funnel batches are all
+        // singletons must still trip the AIMD shrink signal.
+        let m = ContentionMonitor::new(1);
+        for _ in 0..1_000 {
+            m.record_direct(0);
+        }
+        for _ in 0..10 {
+            m.record_op(0);
+            m.record_batch(0, true);
+        }
+        let s = m.snapshot();
+        assert!((s.single_fraction() - 1.0).abs() < 1e-12);
+        let aimd = WidthPolicy::Aimd(AimdParams::default());
+        assert_eq!(aimd.decide(8, 6, 12, &s), 3, "shrink despite direct flood");
+    }
+
+    #[test]
+    fn snapshot_delta_and_ratios() {
+        let a = ContentionSnapshot { batches: 10, batched_ops: 40, single_op_batches: 2, ..Default::default() };
+        let b = ContentionSnapshot { batches: 30, batched_ops: 60, single_op_batches: 17, ..Default::default() };
+        let w = b.delta(&a);
+        assert_eq!(w.batches, 20);
+        assert_eq!(w.batched_ops, 20);
+        assert!((w.avg_batch() - 1.0).abs() < 1e-12);
+        assert!((w.single_fraction() - 0.75).abs() < 1e-12);
+        assert_eq!(ContentionSnapshot::default().avg_batch(), 0.0);
+    }
+
+    #[test]
+    fn fold_into_batch_stats_includes_directs() {
+        let m = ContentionMonitor::new(1);
+        m.record_op(0);
+        m.record_batch(0, true);
+        m.record_direct(0);
+        let mut stats = BatchStats::default();
+        m.fold_into(&mut stats);
+        assert_eq!(stats.ops, 2, "funnel op + direct op");
+        assert_eq!(stats.main_faas, 2, "one batch + one direct F&A");
+        assert_eq!(stats.single_op_batches, 1);
+    }
+
+    #[test]
+    fn aimd_grows_on_high_occupancy() {
+        let p = WidthPolicy::Aimd(AimdParams::default());
+        let hot = ContentionSnapshot { batches: 100, batched_ops: 900, ..Default::default() };
+        assert_eq!(p.decide(64, 4, 12, &hot), 5);
+        // Capped at max_width.
+        assert_eq!(p.decide(64, 12, 12, &hot), 12);
+    }
+
+    #[test]
+    fn aimd_halves_on_near_empty_batches() {
+        let p = WidthPolicy::Aimd(AimdParams::default());
+        let cold = ContentionSnapshot {
+            batches: 100,
+            batched_ops: 110,
+            single_op_batches: 95,
+            ..Default::default()
+        };
+        assert_eq!(p.decide(64, 8, 12, &cold), 4);
+        assert_eq!(p.decide(64, 1, 12, &cold), 1, "floor holds");
+    }
+
+    #[test]
+    fn aimd_holds_on_quiet_or_balanced_windows() {
+        let p = WidthPolicy::Aimd(AimdParams::default());
+        assert_eq!(p.decide(64, 6, 12, &ContentionSnapshot::default()), 6);
+        let balanced = ContentionSnapshot {
+            batches: 100,
+            batched_ops: 250, // avg 2.5: below grow, above near-empty
+            single_op_batches: 10,
+            ..Default::default()
+        };
+        assert_eq!(p.decide(64, 6, 12, &balanced), 6);
+    }
+
+    #[test]
+    fn static_policies_ignore_the_window() {
+        let w = ContentionSnapshot { batches: 1, batched_ops: 1000, ..Default::default() };
+        assert_eq!(WidthPolicy::Fixed(6).decide(176, 2, 12, &w), 6);
+        assert_eq!(WidthPolicy::SqrtP.decide(176, 2, 16, &w), 13);
+        assert_eq!(WidthPolicy::Fixed(99).decide(176, 2, 12, &w), 12, "clamped");
+    }
+
+    #[test]
+    fn initial_widths() {
+        assert_eq!(WidthPolicy::Fixed(6).initial_width(176, 12), 6);
+        assert_eq!(WidthPolicy::SqrtP.initial_width(176, 12), 12, "√176=13 clamps to 12");
+        assert_eq!(WidthPolicy::Aimd(AimdParams::default()).initial_width(176, 12), 1);
+    }
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(WidthPolicy::parse("fixed:6"), Some(WidthPolicy::Fixed(6)));
+        assert_eq!(WidthPolicy::parse("4"), Some(WidthPolicy::Fixed(4)));
+        assert_eq!(WidthPolicy::parse("sqrtp"), Some(WidthPolicy::SqrtP));
+        assert_eq!(
+            WidthPolicy::parse("aimd"),
+            Some(WidthPolicy::Aimd(AimdParams::default()))
+        );
+        assert_eq!(WidthPolicy::parse("nope"), None);
+        assert_eq!(WidthPolicy::parse("fixed-6"), None);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(WidthPolicy::Fixed(6).label(), "fixed-6");
+        assert_eq!(WidthPolicy::SqrtP.label(), "sqrtp");
+        assert_eq!(WidthPolicy::Aimd(AimdParams::default()).label(), "aimd");
+    }
+}

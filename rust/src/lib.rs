@@ -8,9 +8,11 @@
 //! * [`faa`] — linearizable software `Fetch&Add` objects: the paper's
 //!   **Aggregating Funnels** (Algorithm 1, including the overflow/retire
 //!   path, `Fetch&AddDirect` and RMWability), the recursive construction
-//!   (§3.2), the Add/Read-only counter variant (§3.1.2), plus the
-//!   baselines it is evaluated against (hardware F&A, Combining
-//!   Funnels, combining trees).
+//!   (§3.2), the Add/Read-only counter variant (§3.1.2), the
+//!   **elastic** funnel whose Aggregator set resizes at runtime under a
+//!   contention-driven width policy (beyond the paper; see DESIGN.md),
+//!   plus the baselines it is evaluated against (hardware F&A,
+//!   Combining Funnels, combining trees).
 //! * [`queue`] — the LCRQ family of concurrent FIFO queues with the
 //!   fetch-and-add objects pluggable (LCRQ, LPRQ, LSCQ, MS-queue),
 //!   reproducing the paper's §4.5 queue benchmark.
@@ -31,6 +33,12 @@
 //!   config, CLI parsing, PRNG, stats, JSON, timing harness, property
 //!   testing). The build is fully offline; the only external
 //!   dependencies are `xla` and `anyhow`.
+
+/// The project README, included verbatim so its `rust` examples run
+/// as doctests (`cargo test --doc` — the CI docs job).
+#[doc = include_str!("../../README.md")]
+#[cfg(doctest)]
+pub struct ReadmeDoctests;
 
 pub mod bench;
 pub mod config;

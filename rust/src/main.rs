@@ -22,6 +22,7 @@ use aggfunnels::bench::native::{
 use aggfunnels::bench::{rows_to_table, rows_to_tsv};
 use aggfunnels::config::AppConfig;
 use aggfunnels::faa::choose::sqrt_p_aggregators;
+use aggfunnels::faa::WidthPolicy;
 use aggfunnels::runtime::{ContentionRuntime, OracleRuntime};
 use aggfunnels::service::{serve, ServeOpts, TicketClient};
 use aggfunnels::sim::algos::AlgoSpec;
@@ -67,14 +68,14 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|all] [--quick] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|all] [--quick] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
          verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
-         serve [--addr A] [--workers W] [--m M]\n  \
-         take [--addr A] [--count N] [--priority] [--stats]\n\n\
+         serve [--addr A] [--workers W] [--m M] [--policy P] [--max-m M] [--resize-ms T]\n  \
+         take [--addr A] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n\n\
          FAA algos:  {FAA_ALGOS:?}\n\
          Queues:     {QUEUE_ALGOS:?}\n\
          Global: --config FILE applies configs/*.toml settings."
@@ -127,8 +128,10 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
     for g in groups {
         let t0 = std::time::Instant::now();
         let rows = run_group(&g, &opts).ok_or_else(|| anyhow!("unknown figure group {g:?}"))?;
-        let name = if g.starts_with("fig") {
+        let name = if g.starts_with("fig") || g == "width" {
             g.clone()
+        } else if g.starts_with('w') {
+            "width".to_string()
         } else {
             format!("fig{}", &g[..1])
         };
@@ -323,16 +326,30 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("config", None, "TOML config file")
         .opt("addr", None, "listen address")
         .opt("workers", None, "worker threads")
-        .opt("m", None, "aggregators per sign");
+        .opt("m", None, "initial aggregators per sign")
+        .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
+        .opt("max-m", None, "aggregator slot capacity per sign")
+        .opt("resize-ms", None, "resize controller period (0 disables)");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let cfg = load_config(&p)?;
+    let policy_spec = p.get_or("policy", &cfg.service.width_policy).to_string();
+    let policy = WidthPolicy::parse(&policy_spec)
+        .ok_or_else(|| anyhow!("unknown width policy {policy_spec:?}"))?;
     let opts = ServeOpts {
         addr: p.get_or("addr", &cfg.service.addr).to_string(),
         workers: p.parse_or("workers", cfg.service.workers),
         aggregators: p.parse_or("m", cfg.service.aggregators),
+        policy,
+        max_aggregators: p.parse_or("max-m", cfg.service.max_aggregators),
+        resize_interval_ms: p.parse_or("resize-ms", cfg.service.resize_interval_ms),
     };
     let handle = serve(&opts)?;
-    println!("ticket service on {} ({} workers); Ctrl-C to stop", handle.addr, opts.workers);
+    println!(
+        "ticket service on {} ({} workers, policy {}); Ctrl-C to stop",
+        handle.addr,
+        opts.workers,
+        opts.policy.label()
+    );
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
@@ -342,10 +359,20 @@ fn cmd_take(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("aggfunnels take", "take tickets from a running service")
         .opt("addr", Some("127.0.0.1:7471"), "service address")
         .opt("count", Some("1"), "tickets to take")
+        .opt("resize", None, "set the funnel's active width first")
+        .opt("set-policy", None, "swap the width policy first (fixed:<m> | sqrtp | aimd)")
         .flag("priority", "use the Fetch&AddDirect fast path")
         .flag("stats", "also print server stats");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    if let Some(policy) = p.get("set-policy") {
+        let applied = client.set_policy(policy)?;
+        println!("width policy now {applied}");
+    }
+    if let Some(w) = p.parse_as::<u64>("resize") {
+        let width = client.resize(w)?;
+        println!("active width now {width}");
+    }
     let count: u64 = p.parse_or("count", 1);
     let start = client.take(count, p.has_flag("priority"))?;
     println!("tickets [{start}, {})", start + count);

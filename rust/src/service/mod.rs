@@ -7,6 +7,13 @@
 //! requests flagged `priority` use `Fetch&AddDirect` (§4.4), giving
 //! latency-critical callers the fast path without hurting others.
 //!
+//! The ticket counter is an *elastic* Aggregating Funnel: a resize
+//! controller thread periodically applies the configured
+//! [`WidthPolicy`] to the funnel's contention window, so one deployment
+//! serves both quiet and flash-crowd traffic; `stats` exposes the live
+//! width and contention counters, and the `resize` / `policy` ops
+//! reconfigure the subsystem at runtime without a restart.
+//!
 //! Wire protocol: one JSON object per line.
 //!
 //! ```text
@@ -14,6 +21,8 @@
 //! → {"op":"take","count":1,"priority":true}
 //! → {"op":"read"}                      ← {"ok":true,"value":20}
 //! → {"op":"stats"}                     ← {"ok":true,...counters...}
+//! → {"op":"resize","width":4}          ← {"ok":true,"width":4,"previous":6}
+//! → {"op":"policy","policy":"aimd"}    ← {"ok":true,"policy":"aimd"}
 //! ```
 
 pub mod metrics;
@@ -25,13 +34,15 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::faa::{AggFunnel, AggFunnelConfig, FetchAddObject};
+use crate::faa::{ElasticAggFunnel, ElasticConfig, FetchAddObject, WidthPolicy};
 use crate::util::json::Json;
 use metrics::Metrics;
 
 /// Shared server state.
 struct ServerState {
-    tickets: AggFunnel,
+    tickets: ElasticAggFunnel,
+    /// Active width policy; swappable at runtime via the `policy` op.
+    policy: Mutex<WidthPolicy>,
     metrics: Metrics,
     stop: AtomicBool,
     active_conns: AtomicUsize,
@@ -61,13 +72,44 @@ impl ServerHandle {
 pub struct ServeOpts {
     pub addr: String,
     pub workers: usize,
+    /// Initial active width per sign.
     pub aggregators: usize,
+    /// Width policy the resize controller applies.
+    pub policy: WidthPolicy,
+    /// Aggregator slot capacity per sign (elastic ceiling).
+    pub max_aggregators: usize,
+    /// Controller poll period in milliseconds (0 disables the
+    /// controller thread; `resize`/`policy` ops still work).
+    pub resize_interval_ms: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
         let s = crate::config::ServiceSettings::default();
-        Self { addr: s.addr, workers: s.workers, aggregators: s.aggregators }
+        Self {
+            addr: s.addr,
+            workers: s.workers,
+            aggregators: s.aggregators,
+            policy: WidthPolicy::parse(&s.width_policy)
+                .unwrap_or(WidthPolicy::Fixed(s.aggregators)),
+            max_aggregators: s.max_aggregators,
+            resize_interval_ms: s.resize_interval_ms,
+        }
+    }
+}
+
+impl ServeOpts {
+    /// Old-style fixed-width options (no adaptive resizing): the
+    /// funnel stays at `aggregators` wide.
+    pub fn fixed(addr: &str, workers: usize, aggregators: usize) -> Self {
+        Self {
+            addr: addr.into(),
+            workers,
+            aggregators,
+            policy: WidthPolicy::Fixed(aggregators),
+            max_aggregators: aggregators.max(1),
+            resize_interval_ms: 0,
+        }
     }
 }
 
@@ -81,18 +123,50 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
     // conflicts: they only hit Main and the tid-0 stats counters,
     // which we guard with the metrics registry instead).
     let funnel_threads = opts.workers + 1;
+    let tickets = ElasticAggFunnel::with_config(
+        ElasticConfig::new(funnel_threads)
+            .with_max_width(opts.max_aggregators.max(opts.aggregators))
+            .with_policy(opts.policy),
+    );
+    // `aggregators` is the explicit starting width regardless of what
+    // the policy would pick on its own.
+    tickets.resize(opts.aggregators);
     let state = Arc::new(ServerState {
-        tickets: AggFunnel::with_config(
-            AggFunnelConfig::new(funnel_threads).with_aggregators(opts.aggregators),
-        ),
+        tickets,
+        policy: Mutex::new(opts.policy),
         metrics: Metrics::new(),
         stop: AtomicBool::new(false),
         active_conns: AtomicUsize::new(0),
     });
 
+    // Resize controller: apply the policy to the funnel's contention
+    // window every poll period. Sleeps in short slices so shutdown
+    // never waits on a long configured period.
+    let mut threads = Vec::new();
+    if opts.resize_interval_ms > 0 {
+        let state = Arc::clone(&state);
+        let period = std::time::Duration::from_millis(opts.resize_interval_ms);
+        let slice = period.min(std::time::Duration::from_millis(20));
+        threads.push(std::thread::spawn(move || loop {
+            let mut slept = std::time::Duration::ZERO;
+            while slept < period {
+                if state.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let chunk = slice.min(period - slept);
+                std::thread::sleep(chunk);
+                slept += chunk;
+            }
+            if state.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let policy = *state.policy.lock().unwrap();
+            state.tickets.poll_policy(&policy);
+        }));
+    }
+
     let (tx, rx) = mpsc::channel::<TcpStream>();
     let rx = Arc::new(Mutex::new(rx));
-    let mut threads = Vec::new();
     for w in 0..opts.workers {
         let rx = Arc::clone(&rx);
         let state = Arc::clone(&state);
@@ -203,6 +277,11 @@ fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
             let extra = [
                 ("main_faas".to_string(), stats.main_faas),
                 ("batched_ops".to_string(), stats.ops),
+                ("single_op_batches".to_string(), stats.single_op_batches),
+                ("cas_failures".to_string(), stats.cas_failures),
+                ("active_width".to_string(), state.tickets.active_width() as u64),
+                ("max_width".to_string(), state.tickets.max_width() as u64),
+                ("resizes".to_string(), state.tickets.resizes()),
             ];
             let mut obj = std::collections::BTreeMap::new();
             for (k, v) in pairs.drain(..) {
@@ -211,7 +290,43 @@ fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
             for (k, v) in snap.into_iter().chain(extra) {
                 obj.insert(k, Json::num(v as f64));
             }
+            obj.insert("avg_batch".to_string(), Json::num(stats.avg_batch_size()));
+            obj.insert(
+                "width_policy".to_string(),
+                Json::str(state.policy.lock().unwrap().label()),
+            );
             Ok(Json::Obj(obj))
+        }
+        "resize" => {
+            let width = req
+                .get("width")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("resize needs a width"))? as usize;
+            state.metrics.incr("resize");
+            let previous = state.tickets.resize(width);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("width", Json::num(state.tickets.active_width() as f64)),
+                ("previous", Json::num(previous as f64)),
+            ]))
+        }
+        "policy" => {
+            let spec = req
+                .get("policy")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("policy needs a policy string"))?;
+            let policy = WidthPolicy::parse(spec)
+                .ok_or_else(|| anyhow!("unknown width policy {spec:?}"))?;
+            state.metrics.incr("policy");
+            *state.policy.lock().unwrap() = policy;
+            // Apply once immediately so `resize_interval_ms = 0`
+            // deployments still honour the change.
+            state.tickets.poll_policy(&policy);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("policy", Json::str(policy.label())),
+                ("width", Json::num(state.tickets.active_width() as f64)),
+            ]))
         }
         other => Err(anyhow!("unknown op {other:?}")),
     }
@@ -267,6 +382,27 @@ impl TicketClient {
     pub fn stats(&mut self) -> Result<Json> {
         self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
     }
+
+    /// Set the funnel's active width; returns the width now in force.
+    pub fn resize(&mut self, width: u64) -> Result<u64> {
+        let resp = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("resize")),
+            ("width", Json::num(width as f64)),
+        ]))?;
+        resp.get("width").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing width"))
+    }
+
+    /// Swap the width policy at runtime (`fixed:<m>`, `sqrtp`, `aimd`).
+    pub fn set_policy(&mut self, policy: &str) -> Result<String> {
+        let resp = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("policy")),
+            ("policy", Json::str(policy)),
+        ]))?;
+        resp.get("policy")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("missing policy"))
+    }
 }
 
 #[cfg(test)]
@@ -274,7 +410,7 @@ mod tests {
     use super::*;
 
     fn start() -> ServerHandle {
-        serve(&ServeOpts { addr: "127.0.0.1:0".into(), workers: 3, aggregators: 2 }).unwrap()
+        serve(&ServeOpts::fixed("127.0.0.1:0", 3, 2)).unwrap()
     }
 
     #[test]
@@ -316,6 +452,49 @@ mod tests {
         assert_eq!(c.read().unwrap(), 5);
         let stats = c.stats().unwrap();
         assert!(stats.get("take").and_then(Json::as_u64).unwrap_or(0) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn resize_and_policy_ops_reconfigure_live() {
+        let server = serve(&ServeOpts {
+            max_aggregators: 8,
+            resize_interval_ms: 0, // manual control only
+            ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+        })
+        .unwrap();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(c.resize(5).unwrap(), 5);
+        assert_eq!(c.resize(100).unwrap(), 8, "clamped to capacity");
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(8));
+        assert_eq!(stats.get("max_width").and_then(Json::as_u64), Some(8));
+        assert!(stats.get("resizes").and_then(Json::as_u64).unwrap_or(0) >= 2);
+        // Policy swap applies immediately (fixed:3 forces the width).
+        assert_eq!(c.set_policy("fixed:3").unwrap(), "fixed-3");
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(3));
+        assert!(c.set_policy("bogus").is_err());
+        // Tickets still flow after reconfiguration.
+        assert_eq!(c.take(2, false).unwrap(), 0);
+        assert_eq!(c.read().unwrap(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_expose_contention_counters() {
+        let server = start();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        for _ in 0..20 {
+            c.take(1, false).unwrap();
+        }
+        let stats = c.stats().unwrap();
+        let ops = stats.get("batched_ops").and_then(Json::as_u64).unwrap();
+        let faas = stats.get("main_faas").and_then(Json::as_u64).unwrap();
+        assert!(ops >= 20);
+        assert!(faas <= ops, "ops ({ops}) must bound main F&As ({faas})");
+        assert!(stats.get("avg_batch").is_some());
+        assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("fixed-2"));
         server.shutdown();
     }
 

@@ -137,16 +137,28 @@ pub enum SimMain {
 }
 
 /// Simulated Aggregating Funnels object.
+///
+/// Supports the elastic extension: `m` is the slot *capacity* per
+/// sign, while [`SimAggFunnel::set_active_width`] bounds the prefix
+/// `Choose` routes over — the simulator twin of
+/// [`crate::faa::ElasticAggFunnel`]. Deactivated Aggregators drain
+/// through the same delegate-driven retirement as overflow.
 pub struct SimAggFunnel {
     main: SimMain,
     /// 2m slots (m positive then m negative), each a padded line
     /// holding the current Aggregator block's address.
     agg_slots: Vec<Addr>,
     m: usize,
+    /// Active width per sign (`1..=m`); picks route over `0..active`.
+    active: Cell<usize>,
     direct_threads: usize,
     threshold: u64,
     pub main_faas: Cell<u64>,
     pub ops: Cell<u64>,
+    /// Batches that combined exactly one operation (AIMD shrink signal).
+    pub single_batches: Cell<u64>,
+    /// Width changes applied via `set_active_width`.
+    pub resizes: Cell<u64>,
 }
 
 impl SimAggFunnel {
@@ -164,11 +176,37 @@ impl SimAggFunnel {
             main,
             agg_slots,
             m,
+            active: Cell::new(m),
             direct_threads,
             threshold: 1 << 63,
             main_faas: Cell::new(0),
             ops: Cell::new(0),
+            single_batches: Cell::new(0),
+            resizes: Cell::new(0),
         }
+    }
+
+    /// Current active width per sign.
+    pub fn active_width(&self) -> usize {
+        self.active.get()
+    }
+
+    /// Slot capacity per sign.
+    pub fn max_width(&self) -> usize {
+        self.m
+    }
+
+    /// Resize the active prefix (clamped to `1..=m`); returns the
+    /// previous width. In-flight operations on deactivated slots drain
+    /// via delegate-driven retirement, exactly like the native elastic
+    /// funnel.
+    pub fn set_active_width(&self, w: usize) -> usize {
+        let w = w.clamp(1, self.m);
+        let prev = self.active.replace(w);
+        if prev != w {
+            self.resizes.set(self.resizes.get() + 1);
+        }
+        prev
     }
 
     /// Allocate + initialize an Aggregator block (host-time pokes; the
@@ -240,10 +278,14 @@ impl SimAggFunnel {
         }
         let positive = delta > 0;
         let magnitude = delta.unsigned_abs();
-        let g = ctx.tid % self.m; // static even assignment
-        let slot = self.agg_slots[if positive { g } else { self.m + g }];
 
         'restart: loop {
+            // Static even assignment over the *active* prefix; restarts
+            // re-choose so they land on the post-resize width.
+            let width = self.active.get().max(1);
+            let g = ctx.tid % width;
+            let slot = self.agg_slots[if positive { g } else { self.m + g }];
+
             // Line 21: a ← Agg[index].
             let a = Addr(ctx.load(slot).await as u32);
             // Line 22: register with one F&A on the Aggregator.
@@ -277,7 +319,13 @@ impl SimAggFunnel {
                 let signed = if positive { sum as i64 } else { (sum as i64).wrapping_neg() };
                 let main_before = self.apply_main(ctx, signed).await;
                 self.main_faas.set(self.main_faas.get() + 1);
-                if a_after >= self.threshold {
+                if sum == magnitude {
+                    // Every magnitude is ≥ 1, so sum == mine means the
+                    // batch combined nothing.
+                    self.single_batches.set(self.single_batches.get() + 1);
+                }
+                // Retire on overflow or on deactivation by a shrink.
+                if a_after >= self.threshold || g >= self.active.get() {
                     let fresh = Self::make_aggregator(ctx);
                     ctx.store(slot, fresh.0 as u64).await;
                     ctx.store(Addr(a.0 + AG_FINAL), a_after).await;
@@ -502,6 +550,41 @@ mod tests {
     #[test]
     fn sim_combfunnel_dense() {
         run_dense_check(AlgoSpec::Comb, 8, 60);
+    }
+
+    #[test]
+    fn sim_elastic_resize_dense() {
+        // Width churn mid-run must not lose or duplicate tickets.
+        let p = 8;
+        let mut cfg = SimConfig::c3_standard_176(p);
+        cfg.horizon_cycles = u64::MAX;
+        let mut sim = Sim::new(cfg);
+        let ctx0 = sim.ctx(0);
+        let faa =
+            Rc::new(SimAggFunnel::new(&ctx0, 4, 0, SimMain::Word(ctx0.alloc_line(1))));
+        let results: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(Vec::new()));
+        for tid in 0..p {
+            let ctx = sim.ctx(tid);
+            let faa = Rc::clone(&faa);
+            let results = Rc::clone(&results);
+            sim.spawn(tid, async move {
+                for i in 0..100u64 {
+                    if tid == 0 && i % 10 == 0 {
+                        faa.set_active_width(1 + (i as usize / 10) % 4);
+                    }
+                    let v = faa.fetch_add(&ctx, 1).await;
+                    results.borrow_mut().push(v);
+                    ctx.work(ctx.rand_geometric(64.0)).await;
+                }
+            });
+        }
+        sim.run();
+        let mut r = results.borrow().clone();
+        r.sort_unstable();
+        let n = p as u64 * 100;
+        assert_eq!(r, (0..n).collect::<Vec<_>>(), "resize lost/duplicated results");
+        assert!(faa.resizes.get() > 0, "resizes must have been applied");
+        assert!(faa.active_width() <= 4);
     }
 
     #[test]

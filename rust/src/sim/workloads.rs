@@ -11,9 +11,10 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use super::algos::{AlgoSpec, SimFaa};
+use super::algos::{AlgoSpec, SimAggFunnel, SimFaa, SimMain};
 use super::queues::QueueSpec;
 use super::{Sim, SimConfig};
+use crate::faa::width::{ContentionSnapshot, WidthPolicy};
 use crate::util::stats::{fairness, mops};
 
 /// Fetch&Add workload parameters (paper §4.1).
@@ -114,6 +115,132 @@ pub fn run_faa_point(cfg: &SimConfig, spec: &AlgoSpec, wl: &FaaWorkload) -> FaaP
         avg_batch: if main_faas == 0 { 0.0 } else { ops as f64 / main_faas as f64 },
         direct_mops_per_thread: class_mops(&per_thread[..direct.min(p)]),
         funnel_mops_per_thread: class_mops(&per_thread[direct.min(p)..]),
+        sim_events: sim.events_processed(),
+    }
+}
+
+/// A phased thread-churn plan: how many threads are runnable in each
+/// equal-length phase of the horizon. Threads with `tid >= active`
+/// park (pure local work) for the phase — the simulator analogue of a
+/// service whose client population surges and drains.
+#[derive(Clone, Debug)]
+pub struct PhasePlan {
+    /// Runnable thread count per phase (each entry one phase).
+    pub active_threads: Vec<usize>,
+    /// Virtual cycles per phase.
+    pub phase_cycles: u64,
+}
+
+impl PhasePlan {
+    /// The default churn shape: quiet start (p/4), flash crowd (p),
+    /// half load (p/2), flash crowd again (p).
+    pub fn churn(p: usize, horizon: u64) -> Self {
+        let active_threads = vec![(p / 4).max(1), p, (p / 2).max(1), p];
+        Self { active_threads, phase_cycles: (horizon / 4).max(1) }
+    }
+
+    /// Runnable threads at virtual time `now`.
+    pub fn active_at(&self, now: u64) -> usize {
+        let i = (now / self.phase_cycles.max(1)) as usize;
+        self.active_threads[i.min(self.active_threads.len() - 1)]
+    }
+}
+
+/// One measured elastic (phased-load) sweep point.
+#[derive(Clone, Debug)]
+pub struct ElasticPoint {
+    pub policy: String,
+    pub threads: usize,
+    pub mops: f64,
+    pub avg_batch: f64,
+    /// Active width when the horizon expired.
+    pub final_width: usize,
+    /// Resizes the controller applied.
+    pub resizes: u64,
+    pub sim_events: u64,
+}
+
+/// Run one simulated Fetch&Add point under a phased thread-churn load
+/// with an elastic funnel: thread 0 doubles as the resize controller,
+/// applying `policy` to the contention window every `control_period`
+/// cycles (the simulator twin of the service's controller thread).
+pub fn run_elastic_faa_point(
+    cfg: &SimConfig,
+    max_width: usize,
+    policy: &WidthPolicy,
+    wl: &FaaWorkload,
+    plan: &PhasePlan,
+    control_period: u64,
+) -> ElasticPoint {
+    let p = cfg.threads;
+    let mut sim = Sim::new(cfg.clone());
+    let ctx0 = sim.ctx(0);
+    let faa = Rc::new(SimAggFunnel::new(&ctx0, max_width, 0, SimMain::Word(ctx0.alloc_line(1))));
+    faa.set_active_width(policy.initial_width(p, max_width));
+    let horizon = cfg.horizon_cycles;
+    let control_period = control_period.max(1);
+    let last_window: Rc<RefCell<ContentionSnapshot>> =
+        Rc::new(RefCell::new(ContentionSnapshot::default()));
+    for tid in 0..p {
+        let ctx = sim.ctx(tid);
+        let faa = Rc::clone(&faa);
+        let wl = wl.clone();
+        let plan = plan.clone();
+        let policy = *policy;
+        let last_window = Rc::clone(&last_window);
+        sim.spawn(tid, async move {
+            let mut next_control = 0u64;
+            while ctx.now() < horizon {
+                // Thread 0 is also the controller (it is runnable in
+                // every phase, since every phase keeps >= 1 thread).
+                if tid == 0 && ctx.now() >= next_control {
+                    next_control = ctx.now() + control_period;
+                    let snap = ContentionSnapshot {
+                        batches: faa.main_faas.get(),
+                        batched_ops: faa.ops.get(),
+                        single_op_batches: faa.single_batches.get(),
+                        ..ContentionSnapshot::default()
+                    };
+                    let window = snap.delta(&last_window.borrow());
+                    *last_window.borrow_mut() = snap;
+                    let cur = faa.active_width();
+                    let target = policy.decide(p, cur, max_width, &window);
+                    if target != cur {
+                        faa.set_active_width(target);
+                    }
+                }
+                // Phase gating: parked threads burn local work only.
+                if tid > 0 && tid >= plan.active_at(ctx.now()) {
+                    ctx.work(256).await;
+                    continue;
+                }
+                let is_faa = ctx.rand_u64() as f64 / u64::MAX as f64 <= wl.faa_ratio;
+                if is_faa {
+                    let d = wl.delta_min + ctx.rand_u64() % (wl.delta_max - wl.delta_min + 1);
+                    faa.fetch_add(&ctx, d as i64).await;
+                } else {
+                    faa.read(&ctx).await;
+                }
+                ctx.count_op();
+                let w = ctx.rand_geometric(wl.work_mean);
+                if w > 0 {
+                    ctx.work(w).await;
+                }
+            }
+        });
+    }
+    let end = sim.run().max(1);
+    let per_thread = sim.ops_done();
+    let total: u64 = per_thread.iter().sum();
+    let secs = cfg.seconds(end);
+    let (main_faas, ops) = (faa.main_faas.get(), faa.ops.get());
+    ElasticPoint {
+        policy: policy.label(),
+        threads: p,
+        mops: mops(total, secs),
+        avg_batch: if main_faas == 0 { 0.0 } else { ops as f64 / main_faas as f64 },
+        final_width: faa.active_width(),
+        resizes: faa.resizes.get(),
         sim_events: sim.events_processed(),
     }
 }
@@ -328,6 +455,75 @@ mod tests {
             sticky.fairness,
             fair.fairness
         );
+    }
+
+    #[test]
+    fn phase_plan_shapes_load() {
+        let plan = PhasePlan::churn(32, 400_000);
+        assert_eq!(plan.active_at(0), 8);
+        assert_eq!(plan.active_at(100_000), 32);
+        assert_eq!(plan.active_at(200_000), 16);
+        assert_eq!(plan.active_at(399_999), 32);
+        assert_eq!(plan.active_at(10_000_000), 32, "past-horizon clamps to last phase");
+    }
+
+    #[test]
+    fn elastic_point_produces_sane_metrics() {
+        let cfg = quick_cfg(16);
+        let plan = PhasePlan::churn(16, cfg.horizon_cycles);
+        let wl = FaaWorkload::update_heavy().with_work_mean(64.0);
+        let pt = run_elastic_faa_point(
+            &cfg,
+            8,
+            &WidthPolicy::Aimd(crate::faa::AimdParams::default()),
+            &wl,
+            &plan,
+            20_000,
+        );
+        assert!(pt.mops > 0.0);
+        assert!(pt.final_width >= 1 && pt.final_width <= 8);
+        assert_eq!(pt.policy, "aimd");
+        assert!(pt.avg_batch >= 1.0);
+    }
+
+    #[test]
+    fn elastic_fixed_policy_never_resizes_after_start() {
+        let cfg = quick_cfg(8);
+        let plan = PhasePlan::churn(8, cfg.horizon_cycles);
+        let pt = run_elastic_faa_point(
+            &cfg,
+            8,
+            &WidthPolicy::Fixed(4),
+            &FaaWorkload::update_heavy(),
+            &plan,
+            10_000,
+        );
+        assert_eq!(pt.final_width, 4);
+        assert_eq!(pt.policy, "fixed-4");
+        // set_active_width(initial) may count once if it differed from
+        // the construction default; the controller itself never moves.
+        assert!(pt.resizes <= 1, "fixed policy resized {} times", pt.resizes);
+    }
+
+    #[test]
+    fn elastic_points_deterministic() {
+        let cfg = quick_cfg(12);
+        let plan = PhasePlan::churn(12, cfg.horizon_cycles);
+        let wl = FaaWorkload::update_heavy();
+        let run = || {
+            run_elastic_faa_point(
+                &cfg,
+                6,
+                &WidthPolicy::Aimd(crate::faa::AimdParams::default()),
+                &wl,
+                &plan,
+                15_000,
+            )
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.mops, b.mops);
+        assert_eq!(a.final_width, b.final_width);
+        assert_eq!(a.sim_events, b.sim_events);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use aggfunnels::service::{serve, ServeOpts, TicketClient};
 use aggfunnels::util::json::Json;
 
 fn start(workers: usize) -> aggfunnels::service::ServerHandle {
-    serve(&ServeOpts { addr: "127.0.0.1:0".into(), workers, aggregators: 2 }).unwrap()
+    serve(&ServeOpts::fixed("127.0.0.1:0", workers, 2)).unwrap()
 }
 
 #[test]
@@ -54,6 +54,47 @@ fn stats_reflect_traffic() {
     assert!(stats.get("take").and_then(Json::as_u64).unwrap() >= 5);
     assert_eq!(stats.get("take_priority").and_then(Json::as_u64), Some(1));
     assert!(stats.get("read").and_then(Json::as_u64).unwrap() >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn adaptive_service_survives_burst_and_reports_width() {
+    // An AIMD-managed server under a client burst: tickets must stay
+    // disjoint and dense, and stats must expose the live width.
+    let server = serve(&ServeOpts {
+        policy: aggfunnels::faa::WidthPolicy::Aimd(Default::default()),
+        max_aggregators: 8,
+        resize_interval_ms: 5,
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    })
+    .unwrap();
+    let addr = Arc::new(server.addr.to_string());
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let mut c = TicketClient::connect(&addr).unwrap();
+                let mut out = Vec::new();
+                for _ in 0..300u64 {
+                    out.push((c.take(1, false).unwrap(), 1u64));
+                }
+                out
+            })
+        })
+        .collect();
+    let mut ranges: Vec<(u64, u64)> =
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    ranges.sort_unstable();
+    let mut expect = 0;
+    for (s, c) in ranges {
+        assert_eq!(s, expect, "gap or overlap while resizing");
+        expect = s + c;
+    }
+    let mut c = TicketClient::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    let width = stats.get("active_width").and_then(Json::as_u64).unwrap();
+    assert!((1..=8).contains(&width), "width {width} out of range");
+    assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("aimd"));
     server.shutdown();
 }
 
