@@ -16,8 +16,8 @@ use crate::faa::width::{AimdParams, WidthPolicy};
 use crate::sim::algos::AlgoSpec;
 use crate::sim::queues::QueueSpec;
 use crate::sim::workloads::{
-    run_elastic_faa_point, run_faa_point, run_queue_point, FaaWorkload, PhasePlan,
-    QueueScenario,
+    run_elastic_faa_point, run_faa_point, run_mixed_point, run_queue_point, FaaWorkload,
+    PhasePlan, QueueScenario,
 };
 use crate::sim::SimConfig;
 
@@ -55,12 +55,16 @@ impl SweepOpts {
     }
 }
 
-/// All figure groups, for CLI enumeration. `width` is this crate's
-/// beyond-the-paper scenario: adaptive funnel width under thread churn.
-pub const FIGURE_GROUPS: [&str; 5] = ["fig3", "fig4", "fig5", "fig6", "width"];
+/// All figure groups, for CLI enumeration. `width` and `mix` are this
+/// crate's beyond-the-paper scenarios: adaptive funnel width under
+/// thread churn, and a multi-object counter + queue mixed workload.
+/// (`service-mix`, the native wire-path variant, runs real servers and
+/// is driven separately — see [`crate::bench::service_mix`].)
+pub const FIGURE_GROUPS: [&str; 6] = ["fig3", "fig4", "fig5", "fig6", "width", "mix"];
 
 /// Run a figure group by name ("fig3" | "fig4" | "fig5" | "fig6" |
-/// "width", or a panel name like "3a" / "w1" which maps to its group).
+/// "width" | "mix", or a panel name like "3a" / "w1" / "m1" which maps
+/// to its group).
 pub fn run_group(name: &str, opts: &SweepOpts) -> Option<Vec<Row>> {
     match name.trim_start_matches("fig") {
         "3" | "3a" | "3b" | "3c" => Some(fig3(opts)),
@@ -74,6 +78,7 @@ pub fn run_group(name: &str, opts: &SweepOpts) -> Option<Vec<Row>> {
         "5" | "5a" | "5b" | "5c" => Some(fig5(opts)),
         "6" | "6a" | "6b" | "6c" => Some(fig6(opts)),
         "width" | "w1" | "w2" | "w3" | "w4" => Some(width_sweep(opts)),
+        "mix" | "m1" | "m2" => Some(mix_sweep(opts)),
         _ => None,
     }
 }
@@ -238,6 +243,45 @@ pub fn width_sweep(opts: &SweepOpts) -> Vec<Row> {
     rows
 }
 
+/// The multi-object mixed scenario (beyond the paper): a hot counter
+/// and a hot LCRQ contending in one process, with the counter backend
+/// and the queue's index backend moving together — the simulator twin
+/// of the registry service's traffic. Emits combined throughput
+/// (`m1`) and the counter's average batch size (`m2`) per backend.
+pub fn mix_sweep(opts: &SweepOpts) -> Vec<Row> {
+    let backends: [(&'static str, AlgoSpec, QueueSpec); 3] = [
+        ("hw", AlgoSpec::Hw, QueueSpec::LcrqHw),
+        ("aggfunnel", AlgoSpec::Agg { m: 6, direct: 0 }, QueueSpec::LcrqAgg { m: 6 }),
+        ("combfunnel", AlgoSpec::Comb, QueueSpec::LcrqComb),
+    ];
+    let wl = FaaWorkload::update_heavy();
+    let mut rows = Vec::new();
+    for &p in &opts.grid {
+        if p < 2 {
+            continue;
+        }
+        let cfg = opts.cfg(p);
+        for (series, faa_spec, queue_spec) in &backends {
+            let pt = run_mixed_point(&cfg, faa_spec, queue_spec, &wl, 0.5);
+            rows.push(Row {
+                figure: "m1",
+                series: series.to_string(),
+                threads: p,
+                metric: "mops",
+                value: pt.mops,
+            });
+            rows.push(Row {
+                figure: "m2",
+                series: series.to_string(),
+                threads: p,
+                metric: "avg_batch",
+                value: pt.avg_batch,
+            });
+        }
+    }
+    rows
+}
+
 /// Figure 6: queue throughput across three scenarios.
 pub fn fig6(opts: &SweepOpts) -> Vec<Row> {
     let specs: [(&'static str, QueueSpec); 4] = [
@@ -320,6 +364,22 @@ mod tests {
             .all(|r| r.value > 0.0));
         // Panel aliases resolve to the same group.
         assert!(run_group("w2", &opts).is_some());
+    }
+
+    #[test]
+    fn mix_sweep_emits_per_backend_rows() {
+        let opts = SweepOpts { grid: vec![8], horizon: 150_000, ..SweepOpts::quick() };
+        let rows = run_group("mix", &opts).unwrap();
+        for series in ["hw", "aggfunnel", "combfunnel"] {
+            let m1 = rows
+                .iter()
+                .find(|r| r.figure == "m1" && r.series == series)
+                .unwrap_or_else(|| panic!("missing m1/{series}"));
+            assert!(m1.value > 0.0);
+            assert!(rows.iter().any(|r| r.figure == "m2" && r.series == series));
+        }
+        // Panel aliases resolve to the same group.
+        assert!(run_group("m2", &opts).is_some());
     }
 
     #[test]

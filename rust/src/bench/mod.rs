@@ -10,6 +10,9 @@
 
 pub mod figures;
 pub mod native;
+pub mod service_mix;
+
+use crate::util::json::Json;
 
 /// One emitted data point, long-form (figure, series, x, metric, value).
 #[derive(Clone, Debug, PartialEq)]
@@ -31,6 +34,42 @@ pub fn rows_to_tsv(rows: &[Row]) -> String {
         ));
     }
     out
+}
+
+/// Render rows as the machine-readable `BENCH_<scenario>.json`
+/// document tracked across PRs: scenario name, the thread grid, every
+/// row, and the throughput (`mops`) rows pulled out for quick diffing.
+pub fn rows_to_json(scenario: &str, rows: &[Row]) -> Json {
+    let mut threads: Vec<usize> = rows.iter().map(|r| r.threads).collect();
+    threads.sort_unstable();
+    threads.dedup();
+    let row_json = |r: &Row| {
+        Json::obj(vec![
+            ("figure", Json::str(r.figure)),
+            ("series", Json::str(r.series.clone())),
+            ("threads", Json::num(r.threads as f64)),
+            ("metric", Json::str(r.metric)),
+            ("value", Json::num(r.value)),
+        ])
+    };
+    let throughput: Vec<Json> = rows
+        .iter()
+        .filter(|r| r.metric == "mops")
+        .map(|r| {
+            Json::obj(vec![
+                ("figure", Json::str(r.figure)),
+                ("series", Json::str(r.series.clone())),
+                ("threads", Json::num(r.threads as f64)),
+                ("mops", Json::num(r.value)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::str(scenario)),
+        ("threads", Json::arr(threads.into_iter().map(|t| Json::num(t as f64)))),
+        ("rows", Json::arr(rows.iter().map(row_json))),
+        ("throughput", Json::Arr(throughput)),
+    ])
 }
 
 /// Render a compact stdout table: one line per (series, threads) with
@@ -92,5 +131,19 @@ mod tests {
         assert!(table.contains("hw"));
         assert!(table.contains("10.00"));
         assert!(!table.contains("0.90"), "fairness row must be filtered out");
+    }
+
+    #[test]
+    fn json_schema_roundtrips() {
+        let doc = rows_to_json("fig3", &sample_rows());
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("scenario").and_then(Json::as_str), Some("fig3"));
+        let threads = parsed.get("threads").and_then(Json::as_arr).unwrap();
+        assert_eq!(threads.len(), 2, "deduped thread grid");
+        assert_eq!(parsed.get("rows").and_then(Json::as_arr).unwrap().len(), 4);
+        let throughput = parsed.get("throughput").and_then(Json::as_arr).unwrap();
+        assert_eq!(throughput.len(), 3, "only mops rows");
+        assert_eq!(throughput[0].get("series").and_then(Json::as_str), Some("hw"));
+        assert_eq!(throughput[0].get("mops").and_then(Json::as_f64), Some(10.0));
     }
 }

@@ -14,7 +14,7 @@ use crate::faa::{
     AggFunnel, AggFunnelConfig, AimdParams, CombiningFunnel, CombiningTree, ElasticAggFunnel,
     ElasticConfig, FetchAddObject, HardwareFaa, RecursiveAggFunnel, WidthPolicy,
 };
-use crate::queue::{AggIndexFactory, CombIndexFactory, ConcurrentQueue, HwIndexFactory, Lcrq, MsQueue, Prq};
+use crate::queue::ConcurrentQueue;
 use crate::util::rng::Rng;
 use crate::util::stats::{fairness, mops};
 
@@ -61,25 +61,22 @@ pub fn make_faa(name: &str, threads: usize, m: usize) -> Option<Arc<dyn FetchAdd
                 .with_max_width(m.max(1) * 2)
                 .with_policy(WidthPolicy::Aimd(AimdParams::default())),
         )),
-        _ => return None,
+        // Anything else goes through the shared backend-spec grammar
+        // ("aggfunnel:4", "elastic:sqrtp", ... — the registry
+        // service's spellings).
+        other => return crate::faa::BackendSpec::parse(other).map(|s| s.build(threads)),
     })
 }
 
-/// Native queue variants by name.
-pub const QUEUE_ALGOS: [&str; 5] = ["lcrq", "lcrq+aggfunnel", "lcrq+combfunnel", "lprq", "msq"];
+/// Native queue variants by name (the shared queue-spec grammar
+/// accepts more — e.g. `lcrq+elastic:sqrtp`).
+pub const QUEUE_ALGOS: [&str; 6] =
+    ["lcrq", "lcrq+aggfunnel", "lcrq+combfunnel", "lcrq+elastic", "lprq", "msq"];
 
-/// Build a native queue by CLI name.
+/// Build a native queue by CLI name (delegates to the shared
+/// [`crate::queue::make_queue`] spec grammar).
 pub fn make_queue(name: &str, threads: usize) -> Option<Arc<dyn ConcurrentQueue>> {
-    Some(match name {
-        "lcrq" => Arc::new(Lcrq::new(threads, HwIndexFactory)),
-        "lcrq+aggfunnel" => Arc::new(Lcrq::new(threads, AggIndexFactory::new(threads))),
-        "lcrq+combfunnel" => {
-            Arc::new(Lcrq::new(threads, CombIndexFactory { max_threads: threads }))
-        }
-        "lprq" => Arc::new(Prq::new(threads, HwIndexFactory)),
-        "msq" => Arc::new(MsQueue::new(threads)),
-        _ => return None,
-    })
+    crate::queue::make_queue(name, threads)
 }
 
 /// Result of a native throughput run.

@@ -1,0 +1,154 @@
+//! The `service-mix` scenario: full wire-path throughput of the
+//! registry service under mixed multi-object traffic.
+//!
+//! Unlike the simulated figure groups, this starts a *real* server
+//! per point (TCP, JSON lines, tid leasing, resize controller) with
+//! two hot objects — the default ticket counter and a `jobs` queue —
+//! and drives it with native client threads that interleave `take`,
+//! `enqueue` and `dequeue`. One series per queue index backend
+//! (`lcrq+hw`, `lcrq+aggfunnel`, `lcrq+elastic`) shows what the
+//! paper's §4.5 result looks like through the whole deployable stack
+//! rather than on bare queue objects.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::Row;
+use crate::config::ObjectManifest;
+use crate::service::{serve, ServeOpts, TicketClient};
+use crate::util::json::Json;
+use crate::util::stats::mops;
+
+/// The index backends the scenario compares.
+pub const SERVICE_MIX_BACKENDS: [&str; 3] = ["lcrq+hw", "lcrq+aggfunnel", "lcrq+elastic"];
+
+/// Options for [`run_service_mix`].
+#[derive(Clone, Debug)]
+pub struct ServiceMixOpts {
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for ServiceMixOpts {
+    fn default() -> Self {
+        Self { clients: vec![1, 2, 4, 8], duration: Duration::from_millis(300) }
+    }
+}
+
+impl ServiceMixOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self { clients: vec![2], duration: Duration::from_millis(60) }
+    }
+}
+
+/// Run the scenario: for every backend and client count, serve a
+/// counter + queue pair and measure end-to-end request throughput.
+/// Emits `sm1` (Mops/s over the wire) and `sm2` (the queue indices'
+/// average batch size — zero for non-batching backends).
+pub fn run_service_mix(opts: &ServiceMixOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for backend in SERVICE_MIX_BACKENDS {
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                objects: vec![ObjectManifest {
+                    name: "jobs".into(),
+                    kind: "queue".into(),
+                    backend: backend.into(),
+                }],
+                // One spare lease for the post-run stats probe.
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving {backend} for {clients} clients"))?;
+            let addr = Arc::new(server.addr.to_string());
+            let stop = Arc::new(AtomicBool::new(false));
+            let workers: Vec<_> = (0..clients)
+                .map(|i| {
+                    let addr = Arc::clone(&addr);
+                    let stop = Arc::clone(&stop);
+                    std::thread::spawn(move || -> Result<u64> {
+                        let mut c = TicketClient::connect(&addr)?;
+                        let mut ops = 0u64;
+                        let mut seq = (i as u64) << 32;
+                        while !stop.load(Ordering::Relaxed) {
+                            c.take(1, false)?;
+                            c.enqueue("jobs", seq)?;
+                            seq += 1;
+                            c.dequeue("jobs")?;
+                            ops += 3;
+                        }
+                        Ok(ops)
+                    })
+                })
+                .collect();
+            let t0 = Instant::now();
+            std::thread::sleep(opts.duration);
+            stop.store(true, Ordering::Relaxed);
+            // Join every worker before propagating any error, and shut
+            // the server down on all paths — an early `?` here would
+            // leak the accept/controller threads and the bound port.
+            let mut total = 0u64;
+            let mut client_err: Option<anyhow::Error> = None;
+            for w in workers {
+                match w.join() {
+                    Ok(Ok(ops)) => total += ops,
+                    Ok(Err(e)) => client_err = client_err.or(Some(e)),
+                    Err(_) => {
+                        client_err =
+                            client_err.or_else(|| Some(anyhow::anyhow!("client thread panicked")));
+                    }
+                }
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+            if let Some(e) = client_err {
+                server.shutdown();
+                return Err(e.context(format!("{backend} with {clients} clients")));
+            }
+            let probe = TicketClient::connect(&addr).and_then(|mut p| p.stats_on("jobs"));
+            server.shutdown();
+            let avg_batch = probe?.get("avg_batch").and_then(Json::as_f64).unwrap_or(0.0);
+            rows.push(Row {
+                figure: "sm1",
+                series: backend.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: mops(total, elapsed),
+            });
+            rows.push(Row {
+                figure: "sm2",
+                series: backend.to_string(),
+                threads: clients,
+                metric: "avg_batch",
+                value: avg_batch,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_backends_run_end_to_end() {
+        let opts = ServiceMixOpts { clients: vec![2], duration: Duration::from_millis(40) };
+        let rows = run_service_mix(&opts).unwrap();
+        for backend in SERVICE_MIX_BACKENDS {
+            let sm1 = rows
+                .iter()
+                .find(|r| r.figure == "sm1" && r.series == backend)
+                .unwrap_or_else(|| panic!("missing sm1/{backend}"));
+            assert!(sm1.value > 0.0, "{backend}: zero wire throughput");
+            assert!(rows.iter().any(|r| r.figure == "sm2" && r.series == backend));
+        }
+        assert_eq!(rows.len(), 2 * SERVICE_MIX_BACKENDS.len());
+    }
+}

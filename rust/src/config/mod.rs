@@ -89,10 +89,46 @@ impl Default for BenchSettings {
     }
 }
 
+/// One named object pre-created at service boot, from an
+/// `[objects.<name>]` manifest section:
+///
+/// ```toml
+/// [objects.orders]
+/// kind = "counter"            # default kind
+/// backend = "elastic:aimd"    # default counter backend
+///
+/// [objects.jobs]
+/// kind = "queue"
+/// backend = "lcrq+elastic"    # default queue backend
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObjectManifest {
+    pub name: String,
+    /// `"counter"` or `"queue"`.
+    pub kind: String,
+    /// Backend spec — counters use the [`crate::faa::BackendSpec`]
+    /// grammar, queues the [`crate::queue::make_queue`] grammar.
+    pub backend: String,
+}
+
+impl ObjectManifest {
+    /// The backend spec an object kind defaults to when none is given
+    /// (used for kind validation here and for defaulting at object
+    /// creation); `None` for unknown kinds.
+    pub fn default_backend(kind: &str) -> Option<&'static str> {
+        match kind {
+            "counter" => Some("elastic:aimd"),
+            "queue" => Some("lcrq+elastic"),
+            _ => None,
+        }
+    }
+}
+
 /// Ticket-service settings.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServiceSettings {
     pub addr: String,
+    /// Maximum concurrent client connections (the tid lease pool).
     pub workers: usize,
     pub aggregators: usize,
     /// Worker slots reserved for priority requests (Fetch&AddDirect).
@@ -105,6 +141,8 @@ pub struct ServiceSettings {
     /// Controller poll period for adaptive policies, in milliseconds
     /// (0 disables the resize controller thread).
     pub resize_interval_ms: u64,
+    /// Objects pre-created at boot (besides the default counter).
+    pub objects: Vec<ObjectManifest>,
 }
 
 impl Default for ServiceSettings {
@@ -117,6 +155,7 @@ impl Default for ServiceSettings {
             width_policy: "aimd".into(),
             max_aggregators: 12,
             resize_interval_ms: 25,
+            objects: Vec::new(),
         }
     }
 }
@@ -170,6 +209,44 @@ impl AppConfig {
             doc.int_or("service.max_aggregators", sv.max_aggregators as i64) as usize;
         sv.resize_interval_ms =
             doc.int_or("service.resize_interval_ms", sv.resize_interval_ms as i64) as u64;
+
+        // `[objects.<name>]` manifest sections; later layers override
+        // per name, fields merge within a name.
+        let mut objects: std::collections::BTreeMap<String, ObjectManifest> =
+            sv.objects.iter().map(|o| (o.name.clone(), o.clone())).collect();
+        for (key, value) in &doc.entries {
+            let Some(rest) = key.strip_prefix("objects.") else { continue };
+            let (name, field) = rest.split_once('.').ok_or_else(|| {
+                anyhow!("object manifests need `objects.<name>.<field>`, got {key:?}")
+            })?;
+            let entry = objects.entry(name.to_string()).or_insert_with(|| ObjectManifest {
+                name: name.to_string(),
+                kind: "counter".into(),
+                backend: String::new(),
+            });
+            let text = value
+                .as_str()
+                .ok_or_else(|| anyhow!("{key}: manifest fields are strings"))?;
+            match field {
+                "kind" => entry.kind = text.to_string(),
+                "backend" => entry.backend = text.to_string(),
+                other => return Err(anyhow!("unknown object field {other:?} in {key:?}")),
+            }
+        }
+        for o in objects.values() {
+            // Validate the kind early (clear config-time error), but
+            // leave an unset backend empty: it is defaulted per kind
+            // at create time, so a later layer overriding only `kind`
+            // cannot strand the earlier kind's default backend.
+            if ObjectManifest::default_backend(&o.kind).is_none() {
+                return Err(anyhow!(
+                    "object {:?}: unknown kind {:?} (counter | queue)",
+                    o.name,
+                    o.kind
+                ));
+            }
+        }
+        sv.objects = objects.into_values().collect();
         Ok(())
     }
 
@@ -245,6 +322,59 @@ mod tests {
         assert_eq!(c.service.width_policy, "sqrtp");
         assert_eq!(c.service.max_aggregators, 16);
         assert_eq!(c.service.resize_interval_ms, 100);
+    }
+
+    #[test]
+    fn objects_manifest_parses() {
+        let mut c = AppConfig::default();
+        let doc = TomlDoc::parse(
+            r#"
+            [objects.orders]
+            kind = "counter"
+            backend = "elastic:sqrtp"
+            [objects.jobs]
+            kind = "queue"
+            [objects.events]
+            "#,
+        )
+        .unwrap();
+        // Bare `[objects.events]` contributes no keys, so only two
+        // manifests materialize.
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.objects.len(), 2);
+        let jobs = c.service.objects.iter().find(|o| o.name == "jobs").unwrap();
+        assert_eq!(jobs.kind, "queue");
+        assert_eq!(jobs.backend, "", "unset backend stays empty until create time");
+        let orders = c.service.objects.iter().find(|o| o.name == "orders").unwrap();
+        assert_eq!(orders.kind, "counter");
+        assert_eq!(orders.backend, "elastic:sqrtp");
+        // A later layer overrides per name and merges fields.
+        let doc = TomlDoc::parse("objects.orders.backend = \"elastic:aimd\"").unwrap();
+        c.apply_doc(&doc).unwrap();
+        let orders = c.service.objects.iter().find(|o| o.name == "orders").unwrap();
+        assert_eq!(orders.kind, "counter", "kind survives the merge");
+        assert_eq!(orders.backend, "elastic:aimd");
+        // A layer changing only the kind must not strand the earlier
+        // kind's default backend: the backend stays unset and is
+        // re-defaulted for the *new* kind when the object is created.
+        let doc = TomlDoc::parse("objects.jobs.kind = \"counter\"").unwrap();
+        c.apply_doc(&doc).unwrap();
+        let jobs = c.service.objects.iter().find(|o| o.name == "jobs").unwrap();
+        assert_eq!(jobs.kind, "counter");
+        assert_eq!(jobs.backend, "");
+    }
+
+    #[test]
+    fn objects_manifest_rejects_bad_entries() {
+        let mut c = AppConfig::default();
+        let doc = TomlDoc::parse("[objects.x]\nkind = \"stack\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "unknown kind");
+        let doc = TomlDoc::parse("[objects.x]\ncolour = \"red\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "unknown field");
+        let doc = TomlDoc::parse("objects.x = \"flat\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "missing field path");
+        let doc = TomlDoc::parse("[objects.x]\nkind = 3").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "non-string field");
     }
 
     #[test]

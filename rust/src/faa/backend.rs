@@ -1,0 +1,202 @@
+//! Backend specifications: one string grammar for every place a
+//! fetch-and-add object is constructed from configuration — named
+//! counters in the registry service, LCRQ ring-index factories, CLI
+//! algorithm flags, and the `[objects]` manifest section.
+//!
+//! Grammar (case-sensitive, `:`-separated parameters):
+//!
+//! | Spec | Object |
+//! |------|--------|
+//! | `hw` | [`HardwareFaa`] — a single atomic word |
+//! | `aggfunnel` / `aggfunnel:<m>` | [`AggFunnel`] with `m` Aggregators per sign (default 6) |
+//! | `combfunnel` | [`CombiningFunnel`] baseline |
+//! | `elastic` / `elastic:<policy>` | [`ElasticAggFunnel`] under a [`WidthPolicy`] (default `aimd`) |
+//!
+//! The `elastic` policy parameter reuses [`WidthPolicy::parse`], so
+//! `elastic:fixed:4`, `elastic:sqrtp` and `elastic:aimd` all work.
+//! Queue index backends compose this grammar with a queue family
+//! (`lcrq+elastic:aimd` — see [`crate::queue::make_queue`]).
+
+use std::sync::Arc;
+
+use super::aggfunnel::{AggFunnel, AggFunnelConfig};
+use super::combfunnel::CombiningFunnel;
+use super::elastic::{ElasticAggFunnel, ElasticConfig};
+use super::hardware::HardwareFaa;
+use super::width::WidthPolicy;
+use super::FetchAddObject;
+
+/// Default Aggregator count (the paper's `m = 6`).
+pub const DEFAULT_AGGREGATORS: usize = 6;
+/// Default elastic slot capacity per sign.
+pub const DEFAULT_MAX_WIDTH: usize = 12;
+
+/// A parsed fetch-and-add backend specification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BackendSpec {
+    /// Hardware F&A (one atomic word).
+    Hw,
+    /// Static Aggregating Funnel with `m` Aggregators per sign.
+    Agg { m: usize },
+    /// Combining Funnels baseline.
+    Comb,
+    /// Elastic Aggregating Funnel under a width policy.
+    Elastic { policy: WidthPolicy, max_width: usize },
+}
+
+impl BackendSpec {
+    /// Parse a backend-spec string; `None` on unknown spellings.
+    pub fn parse(s: &str) -> Option<BackendSpec> {
+        let s = s.trim();
+        let (head, param) = match s.split_once(':') {
+            Some((h, p)) => (h, Some(p)),
+            None => (s, None),
+        };
+        match (head, param) {
+            ("hw", None) => Some(BackendSpec::Hw),
+            ("aggfunnel", None) => Some(BackendSpec::Agg { m: DEFAULT_AGGREGATORS }),
+            ("aggfunnel", Some(m)) => {
+                m.trim().parse().ok().map(|m: usize| BackendSpec::Agg { m: m.max(1) })
+            }
+            ("combfunnel", None) => Some(BackendSpec::Comb),
+            ("elastic", None) => Some(BackendSpec::Elastic {
+                policy: WidthPolicy::Aimd(Default::default()),
+                max_width: DEFAULT_MAX_WIDTH,
+            }),
+            ("elastic", Some(p)) => WidthPolicy::parse(p)
+                .map(|policy| BackendSpec::Elastic { policy, max_width: DEFAULT_MAX_WIDTH }),
+            _ => None,
+        }
+    }
+
+    /// Override the elastic slot capacity (no-op for static backends).
+    pub fn with_max_width(mut self, w: usize) -> Self {
+        if let BackendSpec::Elastic { max_width, .. } = &mut self {
+            *max_width = w.max(1);
+        }
+        self
+    }
+
+    /// Canonical spelling, usable as a series label and re-parseable.
+    pub fn label(&self) -> String {
+        match self {
+            BackendSpec::Hw => "hw".into(),
+            BackendSpec::Agg { m } => format!("aggfunnel:{m}"),
+            BackendSpec::Comb => "combfunnel".into(),
+            BackendSpec::Elastic { policy, .. } => match policy {
+                WidthPolicy::Fixed(m) => format!("elastic:fixed:{m}"),
+                WidthPolicy::SqrtP => "elastic:sqrtp".into(),
+                WidthPolicy::Aimd(_) => "elastic:aimd".into(),
+            },
+        }
+    }
+
+    /// Build the fetch-and-add object this spec describes.
+    pub fn build(&self, max_threads: usize) -> Arc<dyn FetchAddObject> {
+        match self {
+            BackendSpec::Hw => Arc::new(HardwareFaa::new(max_threads)),
+            BackendSpec::Agg { m } => Arc::new(AggFunnel::with_config(
+                AggFunnelConfig::new(max_threads).with_aggregators(*m),
+            )),
+            BackendSpec::Comb => Arc::new(CombiningFunnel::new(max_threads)),
+            BackendSpec::Elastic { policy, max_width } => {
+                Arc::new(self::build_elastic(max_threads, *policy, *max_width))
+            }
+        }
+    }
+
+    /// The width policy (and slot capacity) a *counter object* built
+    /// from this spec should run under. Registry counters always ride
+    /// an [`ElasticAggFunnel`] (so `resize`/`policy`/width stats work
+    /// uniformly); static specs pin the policy instead of changing the
+    /// object type. `Hw`/`Comb` have no funnel width — `None`.
+    pub fn counter_policy(&self) -> Option<(WidthPolicy, usize)> {
+        match self {
+            BackendSpec::Agg { m } => Some((WidthPolicy::Fixed(*m), (*m).max(1) * 2)),
+            BackendSpec::Elastic { policy, max_width } => Some((*policy, *max_width)),
+            BackendSpec::Hw | BackendSpec::Comb => None,
+        }
+    }
+}
+
+/// Build an elastic funnel with an explicit policy and capacity.
+pub fn build_elastic(
+    max_threads: usize,
+    policy: WidthPolicy,
+    max_width: usize,
+) -> ElasticAggFunnel {
+    ElasticAggFunnel::with_config(
+        ElasticConfig::new(max_threads).with_max_width(max_width).with_policy(policy),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(BackendSpec::parse("hw"), Some(BackendSpec::Hw));
+        assert_eq!(BackendSpec::parse("aggfunnel"), Some(BackendSpec::Agg { m: 6 }));
+        assert_eq!(BackendSpec::parse("aggfunnel:4"), Some(BackendSpec::Agg { m: 4 }));
+        assert_eq!(BackendSpec::parse("combfunnel"), Some(BackendSpec::Comb));
+        assert!(matches!(
+            BackendSpec::parse("elastic"),
+            Some(BackendSpec::Elastic { policy: WidthPolicy::Aimd(_), max_width: 12 })
+        ));
+        assert_eq!(
+            BackendSpec::parse("elastic:fixed:4"),
+            Some(BackendSpec::Elastic { policy: WidthPolicy::Fixed(4), max_width: 12 })
+        );
+        assert_eq!(
+            BackendSpec::parse("elastic:sqrtp"),
+            Some(BackendSpec::Elastic { policy: WidthPolicy::SqrtP, max_width: 12 })
+        );
+        assert_eq!(BackendSpec::parse("nope"), None);
+        assert_eq!(BackendSpec::parse("elastic:bogus"), None);
+        assert_eq!(BackendSpec::parse("aggfunnel:x"), None);
+    }
+
+    #[test]
+    fn labels_reparse() {
+        for spec in [
+            BackendSpec::Hw,
+            BackendSpec::Agg { m: 4 },
+            BackendSpec::Comb,
+            BackendSpec::Elastic { policy: WidthPolicy::SqrtP, max_width: 12 },
+            BackendSpec::Elastic { policy: WidthPolicy::Fixed(3), max_width: 12 },
+        ] {
+            assert_eq!(BackendSpec::parse(&spec.label()), Some(spec), "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn built_objects_count_correctly() {
+        for spec in ["hw", "aggfunnel:2", "combfunnel", "elastic:fixed:2"] {
+            let f = BackendSpec::parse(spec).unwrap().build(2);
+            assert_eq!(f.fetch_add(0, 5), 0, "{spec}");
+            assert_eq!(f.fetch_add(1, 3), 5, "{spec}");
+            assert_eq!(f.read(0), 8, "{spec}");
+        }
+    }
+
+    #[test]
+    fn counter_policy_mapping() {
+        assert_eq!(
+            BackendSpec::parse("aggfunnel:4").unwrap().counter_policy(),
+            Some((WidthPolicy::Fixed(4), 8))
+        );
+        let (policy, w) = BackendSpec::parse("elastic:sqrtp").unwrap().counter_policy().unwrap();
+        assert_eq!(policy, WidthPolicy::SqrtP);
+        assert_eq!(w, 12);
+        assert_eq!(BackendSpec::Hw.counter_policy(), None);
+    }
+
+    #[test]
+    fn max_width_override() {
+        let spec = BackendSpec::parse("elastic:aimd").unwrap().with_max_width(5);
+        assert_eq!(spec.counter_policy().unwrap().1, 5);
+        // No-op on static backends.
+        assert_eq!(BackendSpec::Hw.with_max_width(5), BackendSpec::Hw);
+    }
+}

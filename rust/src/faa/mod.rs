@@ -26,8 +26,12 @@
 //!   [`width::WidthPolicy`] over a lock-free
 //!   [`width::ContentionMonitor`] (this crate's extension beyond the
 //!   paper; see `DESIGN.md`).
+//! * [`backend::BackendSpec`] — the one-string construction grammar
+//!   (`hw`, `aggfunnel:<m>`, `combfunnel`, `elastic:<policy>`) shared
+//!   by the registry service, the queue index factories and the CLI.
 
 pub mod aggfunnel;
+pub mod backend;
 pub mod choose;
 pub mod combfunnel;
 pub mod combtree;
@@ -38,6 +42,7 @@ pub mod recursive;
 pub mod width;
 
 pub use aggfunnel::{AggFunnel, AggFunnelConfig};
+pub use backend::BackendSpec;
 pub use choose::Choose;
 pub use combfunnel::{CombiningFunnel, CombiningFunnelConfig};
 pub use combtree::CombiningTree;
@@ -115,6 +120,14 @@ pub struct BatchStats {
 }
 
 impl BatchStats {
+    /// Accumulate another record's counters into this one.
+    pub fn merge(&mut self, other: &BatchStats) {
+        self.main_faas += other.main_faas;
+        self.ops += other.ops;
+        self.single_op_batches += other.single_op_batches;
+        self.cas_failures += other.cas_failures;
+    }
+
     pub fn avg_batch_size(&self) -> f64 {
         if self.main_faas == 0 {
             0.0
@@ -145,5 +158,12 @@ mod tests {
         let s = BatchStats { main_faas: 4, ops: 10, ..BatchStats::default() };
         assert!((s.avg_batch_size() - 2.5).abs() < 1e-12);
         assert_eq!(BatchStats::default().avg_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn batch_stats_merge_covers_every_field() {
+        let mut a = BatchStats { main_faas: 1, ops: 2, single_op_batches: 3, cas_failures: 4 };
+        a.merge(&BatchStats { main_faas: 10, ops: 20, single_op_batches: 30, cas_failures: 40 });
+        assert_eq!(a, BatchStats { main_faas: 11, ops: 22, single_op_batches: 33, cas_failures: 44 });
     }
 }

@@ -11,7 +11,9 @@
 //!   linearization oracle (AOT JAX/Pallas artifact via PJRT, or the
 //!   CPU reference with `--cpu-oracle`).
 //! * `predict` — evaluate the AOT analytic contention model.
-//! * `serve` / `take` — the ticket service and a demo client.
+//! * `serve` / `take` — the registry service and a demo client.
+//! * `obj` / `enqueue` / `dequeue` — registry management and queue
+//!   traffic against a running service.
 
 use std::time::Duration;
 
@@ -19,7 +21,8 @@ use aggfunnels::bench::figures::{run_group, SweepOpts, FIGURE_GROUPS};
 use aggfunnels::bench::native::{
     make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
 };
-use aggfunnels::bench::{rows_to_table, rows_to_tsv};
+use aggfunnels::bench::service_mix::{run_service_mix, ServiceMixOpts};
+use aggfunnels::bench::{rows_to_json, rows_to_table, rows_to_tsv};
 use aggfunnels::config::AppConfig;
 use aggfunnels::faa::choose::sqrt_p_aggregators;
 use aggfunnels::faa::WidthPolicy;
@@ -50,6 +53,9 @@ fn main() {
         "predict" => cmd_predict(rest),
         "serve" => cmd_serve(rest),
         "take" => cmd_take(rest),
+        "obj" => cmd_obj(rest),
+        "enqueue" => cmd_enqueue(rest),
+        "dequeue" => cmd_dequeue(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -68,16 +74,20 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|all] [--quick] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
          verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
          serve [--addr A] [--workers W] [--m M] [--policy P] [--max-m M] [--resize-ms T]\n  \
-         take [--addr A] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n\n\
+         take [--addr A] [--name O] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n  \
+         obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B]\n  \
+         enqueue --name O --item N [--addr A]\n  \
+         dequeue --name O [--addr A]\n\n\
          FAA algos:  {FAA_ALGOS:?}\n\
          Queues:     {QUEUE_ALGOS:?}\n\
+         Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy]; queues compose as lcrq+<backend>\n\
          Global: --config FILE applies configs/*.toml settings."
     );
 }
@@ -100,7 +110,8 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
         .opt("horizon", None, "virtual cycles per point")
         .opt("out", Some("results"), "output directory for TSV")
         .opt("seed", None, "simulation seed")
-        .flag("quick", "tiny grid/horizon smoke run");
+        .flag("quick", "tiny grid/horizon smoke run")
+        .flag("json", "also emit machine-readable BENCH_<scenario>.json");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let cfg = load_config(&p)?;
 
@@ -119,6 +130,8 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
         opts.seed = s;
     }
 
+    // `all` covers the simulated groups; `service-mix` starts real
+    // servers, so it only runs when named explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -127,16 +140,37 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
     for g in groups {
         let t0 = std::time::Instant::now();
-        let rows = run_group(&g, &opts).ok_or_else(|| anyhow!("unknown figure group {g:?}"))?;
-        let name = if g.starts_with("fig") || g == "width" {
-            g.clone()
-        } else if g.starts_with('w') {
-            "width".to_string()
+        let (name, rows) = if g == "service-mix" {
+            let mut mix = if p.has_flag("quick") {
+                ServiceMixOpts::quick()
+            } else {
+                ServiceMixOpts::default()
+            };
+            if p.get("grid").is_some() {
+                mix.clients = opts.grid.clone();
+            }
+            ("service-mix".to_string(), run_service_mix(&mix)?)
         } else {
-            format!("fig{}", &g[..1])
+            let rows =
+                run_group(&g, &opts).ok_or_else(|| anyhow!("unknown figure group {g:?}"))?;
+            let name = if g.starts_with("fig") || g == "width" || g == "mix" {
+                g.clone()
+            } else if g.starts_with('w') {
+                "width".to_string()
+            } else if g.starts_with('m') {
+                "mix".to_string()
+            } else {
+                format!("fig{}", &g[..1])
+            };
+            (name, rows)
         };
         let path = out_dir.join(format!("{name}.tsv"));
         std::fs::write(&path, rows_to_tsv(&rows))?;
+        if p.has_flag("json") {
+            let json_path = out_dir.join(format!("BENCH_{name}.json"));
+            std::fs::write(&json_path, rows_to_json(&name, &rows).to_string())?;
+            println!("json -> {}", json_path.display());
+        }
         let mut figures: Vec<&str> = rows.iter().map(|r| r.figure).collect();
         figures.sort_unstable();
         figures.dedup();
@@ -322,11 +356,11 @@ fn cmd_predict(args: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
-    let cli = Cli::new("aggfunnels serve", "run the ticket service")
-        .opt("config", None, "TOML config file")
+    let cli = Cli::new("aggfunnels serve", "run the registry service")
+        .opt("config", None, "TOML config file ([objects] pre-creates named objects)")
         .opt("addr", None, "listen address")
-        .opt("workers", None, "worker threads")
-        .opt("m", None, "initial aggregators per sign")
+        .opt("workers", None, "max concurrent client connections")
+        .opt("m", None, "initial aggregators per sign (default counter)")
         .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
         .opt("max-m", None, "aggregator slot capacity per sign")
         .opt("resize-ms", None, "resize controller period (0 disables)");
@@ -342,13 +376,15 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         policy,
         max_aggregators: p.parse_or("max-m", cfg.service.max_aggregators),
         resize_interval_ms: p.parse_or("resize-ms", cfg.service.resize_interval_ms),
+        objects: cfg.service.objects.clone(),
     };
     let handle = serve(&opts)?;
     println!(
-        "ticket service on {} ({} workers, policy {}); Ctrl-C to stop",
+        "registry service on {} ({} connection slots, policy {}, {} boot object(s)); Ctrl-C to stop",
         handle.addr,
         opts.workers,
-        opts.policy.label()
+        opts.policy.label(),
+        opts.objects.len() + 1,
     );
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -358,26 +394,90 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
 fn cmd_take(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("aggfunnels take", "take tickets from a running service")
         .opt("addr", Some("127.0.0.1:7471"), "service address")
+        .opt("name", Some("tickets"), "counter object to take from")
         .opt("count", Some("1"), "tickets to take")
-        .opt("resize", None, "set the funnel's active width first")
+        .opt("resize", None, "set the object's active width first")
         .opt("set-policy", None, "swap the width policy first (fixed:<m> | sqrtp | aimd)")
         .flag("priority", "use the Fetch&AddDirect fast path")
-        .flag("stats", "also print server stats");
+        .flag("stats", "also print the object's stats");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    let name = p.get_or("name", "tickets").to_string();
     if let Some(policy) = p.get("set-policy") {
-        let applied = client.set_policy(policy)?;
+        let applied = client.set_policy_on(&name, policy)?;
         println!("width policy now {applied}");
     }
     if let Some(w) = p.parse_as::<u64>("resize") {
-        let width = client.resize(w)?;
+        let width = client.resize_on(&name, w)?;
         println!("active width now {width}");
     }
     let count: u64 = p.parse_or("count", 1);
-    let start = client.take(count, p.has_flag("priority"))?;
-    println!("tickets [{start}, {})", start + count);
+    let start = client.take_on(&name, count, p.has_flag("priority"))?;
+    println!("{name}: tickets [{start}, {})", start + count);
     if p.has_flag("stats") {
-        println!("{}", client.stats()?.to_string());
+        println!("{}", client.stats_on(&name)?.to_string());
+    }
+    Ok(())
+}
+
+fn cmd_obj(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels obj", "manage a running service's object registry")
+        .opt("addr", Some("127.0.0.1:7471"), "service address")
+        .opt("name", None, "object name (create/delete)")
+        .opt("kind", Some("counter"), "counter | queue")
+        .opt("backend", None, "backend spec (defaults per kind)");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let verb = p.positional.first().map(String::as_str).unwrap_or("list");
+    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    match verb {
+        "list" => {
+            let objects = client.list()?;
+            println!("{:<24} {:<8} backend", "name", "kind");
+            for (name, kind, backend) in objects {
+                println!("{name:<24} {kind:<8} {backend}");
+            }
+        }
+        "create" => {
+            let name = p.get("name").ok_or_else(|| anyhow!("create needs --name"))?;
+            let kind = p.get_or("kind", "counter");
+            client.create(name, kind, p.get_or("backend", ""))?;
+            println!("created {kind} {name:?}");
+        }
+        "delete" => {
+            let name = p.get("name").ok_or_else(|| anyhow!("delete needs --name"))?;
+            client.delete(name)?;
+            println!("deleted {name:?}");
+        }
+        other => bail!("unknown obj verb {other:?} (list | create | delete)"),
+    }
+    Ok(())
+}
+
+fn cmd_enqueue(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels enqueue", "enqueue an item on a served queue")
+        .opt("addr", Some("127.0.0.1:7471"), "service address")
+        .opt("name", None, "queue object name")
+        .opt("item", None, "item to enqueue (integer < 2^53)");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let name = p.get("name").ok_or_else(|| anyhow!("enqueue needs --name"))?;
+    let item: u64 =
+        p.parse_as("item").ok_or_else(|| anyhow!("enqueue needs an integer --item"))?;
+    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    client.enqueue(name, item)?;
+    println!("{name}: enqueued {item}");
+    Ok(())
+}
+
+fn cmd_dequeue(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels dequeue", "dequeue an item from a served queue")
+        .opt("addr", Some("127.0.0.1:7471"), "service address")
+        .opt("name", None, "queue object name");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let name = p.get("name").ok_or_else(|| anyhow!("dequeue needs --name"))?;
+    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    match client.dequeue(name)? {
+        Some(item) => println!("{name}: dequeued {item}"),
+        None => println!("{name}: empty"),
     }
     Ok(())
 }

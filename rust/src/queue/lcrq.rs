@@ -17,14 +17,17 @@
 //! uses `fetch_or` on the index object — supported by all three since
 //! Aggregating Funnels are RMWable (any primitive applies to `Main`).
 
-use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Weak};
 
 use super::{ConcurrentQueue, EMPTY_ITEM};
 use crate::ebr;
 use crate::faa::aggfunnel::{AggFunnel, AggFunnelConfig};
 use crate::faa::combfunnel::{CombiningFunnel, CombiningFunnelConfig};
-use crate::faa::FetchAddObject;
-use crate::sync::{atomic128, AtomicU128, Backoff, CachePadded};
+use crate::faa::elastic::ElasticAggFunnel;
+use crate::faa::width::WidthPolicy;
+use crate::faa::{BatchStats, FetchAddObject};
+use crate::sync::{atomic128, AtomicU128, Backoff, CachePadded, SpinLock};
 
 /// Closed bit in `Tail` (bit 63).
 const CLOSED: u64 = 1 << 63;
@@ -47,6 +50,11 @@ pub trait IndexFactory: Send + Sync + 'static {
     fn make(&self, initial: u64) -> Self::Cell;
     /// Short label for benchmark output ("hw", "aggfunnel", ...).
     fn label(&self) -> &'static str;
+    /// Combining statistics aggregated over every cell this factory
+    /// made (batching index backends only; others report zeros).
+    fn batch_stats(&self) -> BatchStats {
+        BatchStats::default()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -197,6 +205,220 @@ impl IndexFactory for CombIndexFactory {
 
     fn label(&self) -> &'static str {
         "combfunnel"
+    }
+}
+
+/// Elastic-funnel index: ring indices ride an [`ElasticAggFunnel`], so
+/// a queue's F&A hot spots are resizable at runtime exactly like a
+/// served counter. The factory keeps a registry of the cells it made
+/// (weakly, so retired rings still reclaim): a resize controller can
+/// [`poll_policy`](ElasticIndexFactory::poll_policy) or
+/// [`resize`](ElasticIndexFactory::resize) every live index of a queue
+/// without knowing how many rings it has linked.
+pub struct ElasticIndex {
+    cell: Arc<ElasticAggFunnel>,
+    shared: Arc<ElasticIndexShared>,
+}
+
+impl IndexCell for ElasticIndex {
+    #[inline]
+    fn faa(&self, tid: usize, add: u64) -> u64 {
+        self.cell.fetch_add(tid, add as i64)
+    }
+
+    #[inline]
+    fn load(&self, tid: usize) -> u64 {
+        self.cell.read(tid)
+    }
+
+    #[inline]
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64 {
+        self.cell.fetch_or(tid, bits)
+    }
+
+    #[inline]
+    fn cas(&self, tid: usize, old: u64, new: u64) -> u64 {
+        self.cell.compare_and_swap(tid, old, new)
+    }
+}
+
+impl Drop for ElasticIndex {
+    fn drop(&mut self) {
+        // The ring is retired: fold this cell's final counters into
+        // the factory's accumulator and unregister it in one critical
+        // section, so a concurrent `batch_stats` sees the cell in
+        // exactly one place and cumulative per-queue statistics never
+        // go backwards across ring transitions.
+        let ptr = Arc::as_ptr(&self.cell);
+        let stats = self.cell.batch_stats();
+        let mut cells = self.shared.cells.lock();
+        self.shared.retired.lock().merge(&stats);
+        cells.retain(|w| !std::ptr::eq(w.as_ptr(), ptr));
+    }
+}
+
+struct ElasticIndexShared {
+    max_threads: usize,
+    max_width: usize,
+    /// Live policy: runtime swaps land here so the cells of *future*
+    /// rings are built under the current policy, not the
+    /// construction-time one.
+    policy: SpinLock<WidthPolicy>,
+    /// Width most recently put in force (explicit resize or the last
+    /// poll's outcome); 0 until one happens. New cells start here so
+    /// a reconfiguration survives ring transitions.
+    applied_width: AtomicUsize,
+    /// Live index cells (two per linked ring, head + tail).
+    cells: SpinLock<Vec<Weak<ElasticAggFunnel>>>,
+    /// Counters inherited from cells of retired rings.
+    retired: SpinLock<BatchStats>,
+}
+
+impl ElasticIndexShared {
+    /// Strong handles to every live cell (pruning dead entries).
+    fn live(&self) -> Vec<Arc<ElasticAggFunnel>> {
+        let mut cells = self.cells.lock();
+        cells.retain(|w| w.strong_count() > 0);
+        cells.iter().filter_map(Weak::upgrade).collect()
+    }
+}
+
+/// Factory for elastic-funnel ring indices (the registry service's
+/// resizable queue backend).
+#[derive(Clone)]
+pub struct ElasticIndexFactory {
+    shared: Arc<ElasticIndexShared>,
+}
+
+impl ElasticIndexFactory {
+    /// Elastic indices for `max_threads` callers, AIMD policy, default
+    /// slot capacity.
+    pub fn new(max_threads: usize) -> Self {
+        Self::with_policy(
+            max_threads,
+            WidthPolicy::Aimd(Default::default()),
+            crate::faa::backend::DEFAULT_MAX_WIDTH,
+        )
+    }
+
+    /// Explicit policy and slot capacity per sign.
+    pub fn with_policy(max_threads: usize, policy: WidthPolicy, max_width: usize) -> Self {
+        Self {
+            shared: Arc::new(ElasticIndexShared {
+                max_threads: max_threads.max(1),
+                max_width: max_width.max(1),
+                policy: SpinLock::new(policy),
+                applied_width: AtomicUsize::new(0),
+                cells: SpinLock::new(Vec::new()),
+                retired: SpinLock::new(BatchStats::default()),
+            }),
+        }
+    }
+
+    /// Apply `policy` to every live index cell's contention window;
+    /// returns the widest resulting active width (which future rings'
+    /// cells will start at). Holds the cell registry lock across the
+    /// walk so cells being created concurrently ([`Self::make`])
+    /// cannot miss the outcome.
+    pub fn poll_policy(&self, policy: &WidthPolicy) -> usize {
+        let mut cells = self.shared.cells.lock();
+        cells.retain(|w| w.strong_count() > 0);
+        let widest = cells
+            .iter()
+            .filter_map(Weak::upgrade)
+            .map(|c| c.poll_policy(policy))
+            .max()
+            .unwrap_or(0);
+        if widest > 0 {
+            self.shared.applied_width.store(widest, Ordering::Release);
+        }
+        widest
+    }
+
+    /// Swap the live policy (future rings' cells are built under it)
+    /// and apply it to every live cell once; returns the widest
+    /// resulting active width.
+    pub fn set_policy(&self, policy: WidthPolicy) -> usize {
+        *self.shared.policy.lock() = policy;
+        self.poll_policy(&policy)
+    }
+
+    /// Set every live cell's active width — and the width future
+    /// rings' cells start at — returning it (clamped to capacity).
+    /// Store and walk happen under the cell registry lock, so a cell
+    /// mid-creation either sees the new width or is resized by us.
+    pub fn resize(&self, width: usize) -> usize {
+        let width = width.clamp(1, self.shared.max_width);
+        let mut cells = self.shared.cells.lock();
+        cells.retain(|w| w.strong_count() > 0);
+        self.shared.applied_width.store(width, Ordering::Release);
+        for cell in cells.iter().filter_map(Weak::upgrade) {
+            cell.resize(width);
+        }
+        width
+    }
+
+    /// Widest active width among live cells.
+    pub fn active_width(&self) -> usize {
+        self.shared.live().iter().map(|c| c.active_width()).max().unwrap_or(0)
+    }
+
+    /// The slot capacity each cell was built with.
+    pub fn max_width(&self) -> usize {
+        self.shared.max_width
+    }
+
+    /// Number of live index cells (two per live ring).
+    pub fn live_cells(&self) -> usize {
+        self.shared.live().len()
+    }
+}
+
+impl IndexFactory for ElasticIndexFactory {
+    type Cell = ElasticIndex;
+
+    fn make(&self, initial: u64) -> ElasticIndex {
+        let policy = *self.shared.policy.lock();
+        let cell = Arc::new(crate::faa::backend::build_elastic(
+            self.shared.max_threads,
+            policy,
+            self.shared.max_width,
+        ));
+        {
+            // Inherit the width currently in force and register in one
+            // critical section: a concurrent `resize`/`poll_policy`
+            // either already published the width we read, or walks the
+            // registry after our push and resizes this cell itself —
+            // the new ring can never be left at a stale width.
+            let mut cells = self.shared.cells.lock();
+            let applied = self.shared.applied_width.load(Ordering::Acquire);
+            if applied > 0 {
+                cell.resize(applied);
+            }
+            cells.push(Arc::downgrade(&cell));
+        }
+        if initial != 0 {
+            cell.fetch_add_direct(0, initial as i64);
+        }
+        ElasticIndex { cell, shared: Arc::clone(&self.shared) }
+    }
+
+    fn label(&self) -> &'static str {
+        "elastic"
+    }
+
+    fn batch_stats(&self) -> BatchStats {
+        // Read the retired accumulator and walk the live cells under
+        // the registry lock, pairing with `ElasticIndex::drop`'s
+        // merge-then-remove critical section: every cell is counted
+        // exactly once, so totals are monotonic.
+        let mut cells = self.shared.cells.lock();
+        cells.retain(|w| w.strong_count() > 0);
+        let mut total = *self.shared.retired.lock();
+        for cell in cells.iter().filter_map(Weak::upgrade) {
+            total.merge(&cell.batch_stats());
+        }
+        total
     }
 }
 
@@ -403,6 +625,12 @@ impl<F: IndexFactory> Lcrq<F> {
     pub fn index_label(&self) -> &'static str {
         self.factory.label()
     }
+
+    /// The index factory (e.g. to drive an [`ElasticIndexFactory`]'s
+    /// resize controls from outside the queue).
+    pub fn factory(&self) -> &F {
+        &self.factory
+    }
 }
 
 impl<F: IndexFactory> ConcurrentQueue for Lcrq<F> {
@@ -483,6 +711,10 @@ impl<F: IndexFactory> ConcurrentQueue for Lcrq<F> {
     fn max_threads(&self) -> usize {
         self.max_threads
     }
+
+    fn batch_stats(&self) -> BatchStats {
+        self.factory.batch_stats()
+    }
 }
 
 impl<F: IndexFactory> Drop for Lcrq<F> {
@@ -515,6 +747,11 @@ mod tests {
     #[test]
     fn sequential_comb() {
         check_sequential(&Lcrq::new(1, CombIndexFactory { max_threads: 1 }));
+    }
+
+    #[test]
+    fn sequential_elastic() {
+        check_sequential(&Lcrq::new(1, ElasticIndexFactory::new(1)));
     }
 
     #[test]
@@ -557,6 +794,96 @@ mod tests {
     fn concurrent_comb_index() {
         let q = Arc::new(Lcrq::with_ring_order(8, CombIndexFactory { max_threads: 8 }, 6));
         check_concurrent(q, 4, 4, 2_000);
+    }
+
+    #[test]
+    fn concurrent_elastic_index() {
+        let factory = ElasticIndexFactory::with_policy(8, WidthPolicy::Fixed(2), 4);
+        let q = Arc::new(Lcrq::with_ring_order(8, factory, 6));
+        check_concurrent(q, 4, 4, 3_000);
+    }
+
+    #[test]
+    fn concurrent_elastic_index_while_resizing() {
+        // A controller thread walks the factory's live cells mid-load,
+        // as the service's resize controller does.
+        use std::sync::atomic::AtomicBool;
+        let factory = ElasticIndexFactory::with_policy(9, WidthPolicy::Fixed(2), 6);
+        let handle = factory.clone();
+        let q = Arc::new(Lcrq::with_ring_order(9, factory, 4));
+        let stop = Arc::new(AtomicBool::new(false));
+        let controller = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut w = 1usize;
+                while !stop.load(Ordering::Relaxed) {
+                    handle.resize(w);
+                    w = w % 6 + 1;
+                    std::thread::yield_now();
+                }
+            })
+        };
+        check_concurrent(Arc::clone(&q), 4, 4, 2_000);
+        stop.store(true, Ordering::Relaxed);
+        controller.join().unwrap();
+        let stats = q.batch_stats();
+        assert!(stats.main_faas > 0, "elastic indices must report batch stats");
+        assert!(stats.ops >= stats.main_faas);
+    }
+
+    #[test]
+    fn elastic_reconfiguration_survives_ring_transitions() {
+        let factory = ElasticIndexFactory::with_policy(1, WidthPolicy::Fixed(1), 6);
+        let handle = factory.clone();
+        // 2-slot rings: every few enqueues links a fresh ring with
+        // fresh index cells.
+        let q = Lcrq::with_ring_order(1, factory, 1);
+        assert_eq!(handle.resize(4), 4);
+        for x in 0..64 {
+            q.enqueue(0, x);
+        }
+        for x in 0..64 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+        assert_eq!(handle.active_width(), 4, "resize lost across ring transitions");
+        // A runtime policy swap also sticks for future rings.
+        assert_eq!(handle.set_policy(WidthPolicy::Fixed(2)), 2);
+        for x in 0..64 {
+            q.enqueue(0, x);
+        }
+        for x in 0..64 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+        assert_eq!(handle.active_width(), 2, "policy swap lost across ring transitions");
+    }
+
+    #[test]
+    fn elastic_factory_tracks_cells_and_stats() {
+        let factory = ElasticIndexFactory::with_policy(2, WidthPolicy::Fixed(1), 3);
+        let handle = factory.clone();
+        // Tiny rings: transitions retire cells, whose counters must
+        // survive in the cumulative stats.
+        let q = Lcrq::with_ring_order(2, factory, 2);
+        assert_eq!(handle.live_cells(), 2, "head + tail of the first ring");
+        for x in 0..100 {
+            q.enqueue(0, x);
+        }
+        for x in 0..100 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+        assert_eq!(handle.resize(2), 2);
+        assert_eq!(handle.active_width(), 2);
+        assert_eq!(handle.resize(100), 3, "clamped to capacity");
+        let polled = handle.poll_policy(&WidthPolicy::Fixed(1));
+        assert_eq!(polled, 1);
+        let before = q.batch_stats();
+        assert!(before.ops > 0);
+        drop(q);
+        // All cells retired: stats must have been folded, not lost.
+        assert_eq!(handle.live_cells(), 0);
+        let after = handle.batch_stats();
+        assert!(after.ops >= before.ops, "retired-cell stats lost");
+        assert_eq!(handle.active_width(), 0, "no live cells");
     }
 
     #[test]

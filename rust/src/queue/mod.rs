@@ -20,9 +20,16 @@ pub mod lcrq;
 pub mod msq;
 pub mod prq;
 
-pub use lcrq::{AggIndexFactory, CombIndexFactory, HwIndexFactory, IndexCell, IndexFactory, Lcrq};
+pub use lcrq::{
+    AggIndexFactory, CombIndexFactory, ElasticIndex, ElasticIndexFactory, HwIndexFactory,
+    IndexCell, IndexFactory, Lcrq,
+};
 pub use msq::MsQueue;
 pub use prq::Prq;
+
+use std::sync::Arc;
+
+use crate::faa::{BackendSpec, BatchStats};
 
 /// Reserved sentinel: queues cannot carry this value.
 pub const EMPTY_ITEM: u64 = u64::MAX;
@@ -40,6 +47,66 @@ pub trait ConcurrentQueue: Send + Sync {
     fn dequeue(&self, tid: usize) -> Option<u64>;
 
     fn max_threads(&self) -> usize;
+
+    /// Combining statistics of the queue's fetch-and-add indices
+    /// (zeros for queues whose indices do not batch).
+    fn batch_stats(&self) -> BatchStats {
+        BatchStats::default()
+    }
+}
+
+/// Build a queue from a spec string: a family (`lcrq`, `prq`, `msq`),
+/// optionally composed with an index backend from the
+/// [`BackendSpec`] grammar — `lcrq+elastic:aimd`, `lcrq+aggfunnel:4`,
+/// `lcrq+hw`. Bare `lcrq`/`prq` default to hardware indices.
+/// `max_width` overrides the elastic slot capacity when given
+/// (ignored for non-elastic indices). Returns the queue plus, for
+/// elastic index backends, the factory handle a resize controller
+/// drives.
+pub fn make_queue_with_handle(
+    spec: &str,
+    max_threads: usize,
+    max_width: Option<usize>,
+) -> Option<(Arc<dyn ConcurrentQueue>, Option<ElasticIndexFactory>)> {
+    let spec = spec.trim();
+    let (family, index) = match spec.split_once('+') {
+        Some((f, i)) => (f, Some(i)),
+        None => (spec, None),
+    };
+    let mut handle: Option<ElasticIndexFactory> = None;
+    let queue: Arc<dyn ConcurrentQueue> = match (family, index) {
+        ("msq", None) => Arc::new(MsQueue::new(max_threads)),
+        ("prq" | "lprq", None | Some("hw")) => Arc::new(Prq::new(max_threads, HwIndexFactory)),
+        ("lcrq", index) => {
+            let mut index_spec = BackendSpec::parse(index.unwrap_or("hw"))?;
+            if let Some(w) = max_width {
+                index_spec = index_spec.with_max_width(w);
+            }
+            match index_spec {
+                BackendSpec::Hw => Arc::new(Lcrq::new(max_threads, HwIndexFactory)),
+                BackendSpec::Agg { m } => Arc::new(Lcrq::new(
+                    max_threads,
+                    AggIndexFactory { max_threads, aggregators: m },
+                )),
+                BackendSpec::Comb => {
+                    Arc::new(Lcrq::new(max_threads, CombIndexFactory { max_threads }))
+                }
+                BackendSpec::Elastic { policy, max_width } => {
+                    let factory = ElasticIndexFactory::with_policy(max_threads, policy, max_width);
+                    handle = Some(factory.clone());
+                    Arc::new(Lcrq::new(max_threads, factory))
+                }
+            }
+        }
+        _ => return None,
+    };
+    Some((queue, handle))
+}
+
+/// [`make_queue_with_handle`] without the width override or the
+/// controller handle.
+pub fn make_queue(spec: &str, max_threads: usize) -> Option<Arc<dyn ConcurrentQueue>> {
+    make_queue_with_handle(spec, max_threads, None).map(|(q, _)| q)
 }
 
 #[cfg(test)]
@@ -143,5 +210,55 @@ pub(crate) mod queue_tests {
             assert_eq!(seqs, (0..per_producer).collect::<Vec<_>>(), "producer {p} items wrong");
         }
         assert_eq!(q.dequeue(0), None, "queue should be drained");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_queue_spec_grammar() {
+        for spec in [
+            "lcrq",
+            "lcrq+hw",
+            "lcrq+aggfunnel",
+            "lcrq+aggfunnel:4",
+            "lcrq+combfunnel",
+            "lcrq+elastic",
+            "lcrq+elastic:sqrtp",
+            "prq",
+            "lprq",
+            "msq",
+        ] {
+            let q = make_queue(spec, 2).unwrap_or_else(|| panic!("{spec} not built"));
+            q.enqueue(0, 7);
+            assert_eq!(q.dequeue(1), Some(7), "{spec}");
+        }
+        assert!(make_queue("nope", 2).is_none());
+        assert!(make_queue("lcrq+nope", 2).is_none());
+        assert!(make_queue("msq+hw", 2).is_none(), "msq takes no index backend");
+    }
+
+    #[test]
+    fn elastic_spec_yields_controller_handle() {
+        let (q, handle) = make_queue_with_handle("lcrq+elastic:fixed:2", 2, None).unwrap();
+        let handle = handle.expect("elastic backend must expose its factory");
+        assert_eq!(handle.active_width(), 2);
+        q.enqueue(0, 1);
+        assert!(q.batch_stats().main_faas > 0, "stats flow through the trait");
+        let (_q, handle) = make_queue_with_handle("lcrq+hw", 2, None).unwrap();
+        assert!(handle.is_none());
+    }
+
+    #[test]
+    fn max_width_override_reaches_elastic_indices() {
+        let (_q, handle) = make_queue_with_handle("lcrq+elastic:aimd", 2, Some(20)).unwrap();
+        let handle = handle.unwrap();
+        assert_eq!(handle.max_width(), 20);
+        assert_eq!(handle.resize(100), 20, "clamps to the override");
+        // Ignored (not an error) for non-elastic indices.
+        let (_q, handle) = make_queue_with_handle("lcrq+aggfunnel", 2, Some(20)).unwrap();
+        assert!(handle.is_none());
     }
 }

@@ -1,51 +1,101 @@
-//! The ticket service: a deployable wrapper around the library.
+//! The registry service: a deployable wrapper around the library.
 //!
-//! A thread-pooled TCP server dispensing monotonically increasing
-//! ticket ranges — the classic fetch-and-add application (distinct
-//! ids, timestamps, sequence numbers). The hot path is one
-//! `Fetch&Add(count)` on an Aggregating Funnel shared by all workers;
-//! requests flagged `priority` use `Fetch&AddDirect` (§4.4), giving
-//! latency-critical callers the fast path without hurting others.
+//! A TCP server holding a concurrent [`Registry`] of **named
+//! objects** — elastic-funnel counters (monotonic ticket/sequence
+//! dispensers, the classic fetch-and-add application) and
+//! funnel-backed FIFO queues (LCRQ/PRQ/MSQ, with `lcrq+elastic`
+//! queues riding resizable funnel ring indices). One resize
+//! controller thread walks *all* registered objects, applying each
+//! object's [`WidthPolicy`] to its live contention window; `stats`
+//! reports independent per-object width and contention counters, and
+//! `resize`/`policy` reconfigure any single object at runtime.
 //!
-//! The ticket counter is an *elastic* Aggregating Funnel: a resize
-//! controller thread periodically applies the configured
-//! [`WidthPolicy`] to the funnel's contention window, so one deployment
-//! serves both quiet and flash-crowd traffic; `stats` exposes the live
-//! width and contention counters, and the `resize` / `policy` ops
-//! reconfigure the subsystem at runtime without a restart.
+//! Each accepted connection leases a funnel thread id for its
+//! lifetime; when all `workers` slots are leased, further connections
+//! are rejected with an error line instead of breaching the funnels'
+//! thread bound. Requests flagged `priority` use `Fetch&AddDirect`
+//! (§4.4), giving latency-critical callers the fast path without
+//! hurting others.
 //!
-//! Wire protocol: one JSON object per line.
+//! Wire protocol: one JSON object per line. `name` defaults to the
+//! boot counter `"tickets"`; items must be integers below 2⁵³ (JSON
+//! numbers are doubles).
 //!
 //! ```text
-//! → {"op":"take","count":3}            ← {"ok":true,"start":17,"count":3}
+//! → {"op":"take","count":3}                    ← {"ok":true,"start":17,"count":3}
 //! → {"op":"take","count":1,"priority":true}
-//! → {"op":"read"}                      ← {"ok":true,"value":20}
-//! → {"op":"stats"}                     ← {"ok":true,...counters...}
-//! → {"op":"resize","width":4}          ← {"ok":true,"width":4,"previous":6}
-//! → {"op":"policy","policy":"aimd"}    ← {"ok":true,"policy":"aimd"}
+//! → {"op":"read"}                              ← {"ok":true,"value":20}
+//! → {"op":"create","name":"jobs","kind":"queue","backend":"lcrq+elastic"}
+//! → {"op":"enqueue","name":"jobs","item":7}    ← {"ok":true}
+//! → {"op":"dequeue","name":"jobs"}             ← {"ok":true,"item":7}
+//! → {"op":"list"}                              ← {"ok":true,"count":2,"objects":[...]}
+//! → {"op":"stats","name":"jobs"}               ← {"ok":true,...counters...}
+//! → {"op":"resize","width":4}                  ← {"ok":true,"width":4,"previous":6}
+//! → {"op":"policy","policy":"aimd"}            ← {"ok":true,"policy":"aimd","width":1}
+//! → {"op":"delete","name":"jobs"}              ← {"ok":true,"deleted":"jobs"}
 //! ```
 
 pub mod metrics;
+pub mod registry;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::faa::{ElasticAggFunnel, ElasticConfig, FetchAddObject, WidthPolicy};
+use crate::config::ObjectManifest;
+use crate::faa::WidthPolicy;
 use crate::util::json::Json;
 use metrics::Metrics;
+pub use registry::{ObjectEntry, Registry, DEFAULT_OBJECT};
+
+/// The funnel thread-id lease pool: one id per concurrent connection.
+/// Ids are `1..=capacity`; id 0 is reserved for in-process callers
+/// (boot, benchmarks embedding the server).
+struct TidLease {
+    free: Mutex<Vec<usize>>,
+    capacity: usize,
+}
+
+impl TidLease {
+    fn new(capacity: usize) -> Self {
+        Self { free: Mutex::new((1..=capacity).rev().collect()), capacity }
+    }
+
+    fn lease(&self) -> Option<usize> {
+        self.free.lock().unwrap().pop()
+    }
+
+    fn release(&self, tid: usize) {
+        debug_assert!(tid >= 1 && tid <= self.capacity);
+        self.free.lock().unwrap().push(tid);
+    }
+}
+
+/// Returns a leased tid to the pool when dropped — including when the
+/// connection handler panics, so a crashed handler cannot permanently
+/// shrink the server's connection capacity.
+struct LeaseGuard {
+    state: Arc<ServerState>,
+    tid: usize,
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        self.state.tids.release(self.tid);
+    }
+}
 
 /// Shared server state.
 struct ServerState {
-    tickets: ElasticAggFunnel,
-    /// Active width policy; swappable at runtime via the `policy` op.
-    policy: Mutex<WidthPolicy>,
+    registry: Registry,
+    /// Server-level counters (connections, rejections, requests);
+    /// per-object traffic lives on each [`ObjectEntry`].
     metrics: Metrics,
     stop: AtomicBool,
-    active_conns: AtomicUsize,
+    tids: TidLease,
 }
 
 /// Handle used to control a running server.
@@ -53,15 +103,23 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     state: Arc<ServerState>,
     threads: Vec<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
-    /// Request shutdown and join all workers.
+    /// Request shutdown and join all workers. The accept loop polls a
+    /// non-blocking listener and connection handlers use bounded
+    /// reads, so no wake-up connection is needed — shutdown cannot be
+    /// raced by a nudge landing on the wrong thread.
     pub fn shutdown(mut self) {
         self.state.stop.store(true, Ordering::SeqCst);
-        // Nudge the accept loop with a dummy connection.
-        let _ = TcpStream::connect(self.addr);
         for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // The accept loop has exited, so no new connection threads can
+        // appear; drain the ones still running.
+        let conns: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for t in conns {
             let _ = t.join();
         }
     }
@@ -71,16 +129,21 @@ impl ServerHandle {
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
     pub addr: String,
+    /// Maximum concurrent client connections (the tid lease pool);
+    /// connections beyond it are rejected with an error line.
     pub workers: usize,
-    /// Initial active width per sign.
+    /// Initial active width per sign for the default counter.
     pub aggregators: usize,
-    /// Width policy the resize controller applies.
+    /// Width policy of the default counter.
     pub policy: WidthPolicy,
-    /// Aggregator slot capacity per sign (elastic ceiling).
+    /// Aggregator slot capacity per sign (elastic ceiling) for the
+    /// default counter.
     pub max_aggregators: usize,
     /// Controller poll period in milliseconds (0 disables the
     /// controller thread; `resize`/`policy` ops still work).
     pub resize_interval_ms: u64,
+    /// Objects pre-created at boot besides the default counter.
+    pub objects: Vec<ObjectManifest>,
 }
 
 impl Default for ServeOpts {
@@ -94,13 +157,14 @@ impl Default for ServeOpts {
                 .unwrap_or(WidthPolicy::Fixed(s.aggregators)),
             max_aggregators: s.max_aggregators,
             resize_interval_ms: s.resize_interval_ms,
+            objects: s.objects,
         }
     }
 }
 
 impl ServeOpts {
     /// Old-style fixed-width options (no adaptive resizing): the
-    /// funnel stays at `aggregators` wide.
+    /// default counter stays at `aggregators` wide.
     pub fn fixed(addr: &str, workers: usize, aggregators: usize) -> Self {
         Self {
             addr: addr.into(),
@@ -109,39 +173,46 @@ impl ServeOpts {
             policy: WidthPolicy::Fixed(aggregators),
             max_aggregators: aggregators.max(1),
             resize_interval_ms: 0,
+            objects: Vec::new(),
         }
     }
 }
 
-/// Start the ticket server; returns immediately with a handle.
+/// Start the registry service; returns immediately with a handle.
 pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
     let listener = TcpListener::bind(&opts.addr)
         .with_context(|| format!("binding {}", opts.addr))?;
+    listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
-    // tid 0 is reserved for priority/direct operations issued by any
-    // worker (direct ops never touch per-thread funnel state that
-    // conflicts: they only hit Main and the tid-0 stats counters,
-    // which we guard with the metrics registry instead).
-    let funnel_threads = opts.workers + 1;
-    let tickets = ElasticAggFunnel::with_config(
-        ElasticConfig::new(funnel_threads)
-            .with_max_width(opts.max_aggregators.max(opts.aggregators))
-            .with_policy(opts.policy),
-    );
-    // `aggregators` is the explicit starting width regardless of what
-    // the policy would pick on its own.
-    tickets.resize(opts.aggregators);
+
+    // Every object is built for `workers + 1` thread ids: one per
+    // leased connection, plus the reserved in-process tid 0.
+    let workers = opts.workers.max(1);
+    let registry = Registry::new(workers + 1);
+    let _ = registry.create_counter(
+        DEFAULT_OBJECT,
+        opts.policy,
+        opts.max_aggregators.max(opts.aggregators),
+        Some(opts.aggregators),
+    )?;
+    for m in &opts.objects {
+        registry
+            .create(&m.name, &m.kind, &m.backend, None)
+            .with_context(|| format!("boot object {:?}", m.name))?;
+    }
+
     let state = Arc::new(ServerState {
-        tickets,
-        policy: Mutex::new(opts.policy),
+        registry,
         metrics: Metrics::new(),
         stop: AtomicBool::new(false),
-        active_conns: AtomicUsize::new(0),
+        tids: TidLease::new(workers),
     });
+    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
-    // Resize controller: apply the policy to the funnel's contention
-    // window every poll period. Sleeps in short slices so shutdown
-    // never waits on a long configured period.
+    // Resize controller: walk every registered object and apply its
+    // policy to its contention window each poll period. Sleeps in
+    // short slices so shutdown never waits on a long configured
+    // period.
     let mut threads = Vec::new();
     if opts.resize_interval_ms > 0 {
         let state = Arc::clone(&state);
@@ -160,59 +231,83 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
             if state.stop.load(Ordering::SeqCst) {
                 return;
             }
-            let policy = *state.policy.lock().unwrap();
-            state.tickets.poll_policy(&policy);
+            for entry in state.registry.list() {
+                entry.poll();
+            }
         }));
     }
 
-    let (tx, rx) = mpsc::channel::<TcpStream>();
-    let rx = Arc::new(Mutex::new(rx));
-    for w in 0..opts.workers {
-        let rx = Arc::clone(&rx);
-        let state = Arc::clone(&state);
-        threads.push(std::thread::spawn(move || {
-            let tid = w + 1; // funnel tid for this worker
-            loop {
-                let conn = match rx.lock().unwrap().recv() {
-                    Ok(c) => c,
-                    Err(_) => return,
-                };
-                if state.stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                state.active_conns.fetch_add(1, Ordering::Relaxed);
-                let _ = handle_conn(&state, tid, conn);
-                state.active_conns.fetch_sub(1, Ordering::Relaxed);
-            }
-        }));
-    }
+    // Accept loop: non-blocking polls bounded by the stop flag (the
+    // explicit accept deadline that replaces the old wake-up-by-
+    // connecting shutdown nudge).
     {
         let state = Arc::clone(&state);
-        threads.push(std::thread::spawn(move || {
-            for conn in listener.incoming() {
-                if state.stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Ok(conn) = conn {
-                    if tx.send(conn).is_err() {
-                        return;
-                    }
-                }
+        let conns = Arc::clone(&conns);
+        threads.push(std::thread::spawn(move || loop {
+            if state.stop.load(Ordering::SeqCst) {
+                return;
             }
+            let conn = match listener.accept() {
+                Ok((conn, _)) => conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    continue;
+                }
+                Err(_) => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    continue;
+                }
+            };
+            state.metrics.incr("connections");
+            let Some(tid) = state.tids.lease() else {
+                // All funnel tids leased: reject instead of running a
+                // connection on an out-of-range thread id.
+                state.metrics.incr("rejected");
+                let _ = reject_conn(conn, state.tids.capacity);
+                continue;
+            };
+            let handler = {
+                let state = Arc::clone(&state);
+                std::thread::spawn(move || {
+                    let _guard = LeaseGuard { state: Arc::clone(&state), tid };
+                    let _ = handle_conn(&state, tid, conn);
+                })
+            };
+            let mut held = conns.lock().unwrap();
+            held.retain(|h| !h.is_finished());
+            held.push(handler);
         }));
     }
-    Ok(ServerHandle { addr, state, threads })
+    Ok(ServerHandle { addr, state, threads, conns })
+}
+
+/// Tell an over-capacity client why it is being dropped.
+fn reject_conn(mut conn: TcpStream, capacity: usize) -> std::io::Result<()> {
+    // Accepted sockets do not inherit the listener's non-blocking
+    // mode on Linux, but make it explicit for portability.
+    conn.set_nonblocking(false)?;
+    let resp = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(format!("server at capacity ({capacity} connection slots)"))),
+    ]);
+    conn.write_all(resp.to_string().as_bytes())?;
+    conn.write_all(b"\n")
 }
 
 fn handle_conn(state: &ServerState, tid: usize, conn: TcpStream) -> Result<()> {
+    conn.set_nonblocking(false).ok();
     conn.set_nodelay(true).ok();
-    // Bounded reads so a worker parked on an idle connection still
+    // Bounded reads so a handler parked on an idle connection still
     // notices shutdown (otherwise `shutdown()` would hang on join).
     conn.set_read_timeout(Some(std::time::Duration::from_millis(200))).ok();
     let mut writer = conn.try_clone()?;
     let mut reader = BufReader::new(conn);
+    // One buffer across iterations: a read timeout mid-line leaves the
+    // bytes read so far in `line` (read_until semantics), so a slow
+    // writer's request is completed by later reads instead of being
+    // dropped and desyncing the line stream.
+    let mut line = String::new();
     loop {
-        let mut line = String::new();
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {}
@@ -227,112 +322,163 @@ fn handle_conn(state: &ServerState, tid: usize, conn: TcpStream) -> Result<()> {
             }
             Err(e) => return Err(e.into()),
         }
-        if line.trim().is_empty() {
-            continue;
+        if !line.trim().is_empty() {
+            let response = match handle_request(state, tid, &line) {
+                Ok(json) => json,
+                Err(e) => Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(e.to_string())),
+                ]),
+            };
+            writer.write_all(response.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
         }
-        let response = match handle_request(state, tid, &line) {
-            Ok(json) => json,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(e.to_string())),
-            ]),
-        };
-        writer.write_all(response.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+        line.clear();
     }
 }
 
 fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let op = req.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing op"))?;
+    state.metrics.incr("requests");
     match op {
-        "take" => {
-            let count = req.get("count").and_then(Json::as_u64).unwrap_or(1).max(1);
-            let priority =
-                req.get("priority").and_then(Json::as_bool).unwrap_or(false);
-            let start = if priority {
-                state.metrics.incr("take_priority");
-                state.tickets.fetch_add_direct(tid, count as i64)
-            } else {
-                state.metrics.incr("take");
-                state.tickets.fetch_add(tid, count as i64)
-            };
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("start", Json::num(start as f64)),
-                ("count", Json::num(count as f64)),
-            ]))
-        }
-        "read" => {
-            state.metrics.incr("read");
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("value", Json::num(state.tickets.read(tid) as f64)),
-            ]))
-        }
-        "stats" => {
-            let mut pairs = vec![("ok", Json::Bool(true))];
-            let snap = state.metrics.snapshot();
-            let stats = state.tickets.batch_stats();
-            let extra = [
-                ("main_faas".to_string(), stats.main_faas),
-                ("batched_ops".to_string(), stats.ops),
-                ("single_op_batches".to_string(), stats.single_op_batches),
-                ("cas_failures".to_string(), stats.cas_failures),
-                ("active_width".to_string(), state.tickets.active_width() as u64),
-                ("max_width".to_string(), state.tickets.max_width() as u64),
-                ("resizes".to_string(), state.tickets.resizes()),
-            ];
-            let mut obj = std::collections::BTreeMap::new();
-            for (k, v) in pairs.drain(..) {
-                obj.insert(k.to_string(), v);
-            }
-            for (k, v) in snap.into_iter().chain(extra) {
-                obj.insert(k, Json::num(v as f64));
-            }
-            obj.insert("avg_batch".to_string(), Json::num(stats.avg_batch_size()));
-            obj.insert(
-                "width_policy".to_string(),
-                Json::str(state.policy.lock().unwrap().label()),
-            );
-            Ok(Json::Obj(obj))
-        }
-        "resize" => {
-            let width = req
-                .get("width")
-                .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("resize needs a width"))? as usize;
-            state.metrics.incr("resize");
-            let previous = state.tickets.resize(width);
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("width", Json::num(state.tickets.active_width() as f64)),
-                ("previous", Json::num(previous as f64)),
-            ]))
-        }
-        "policy" => {
-            let spec = req
-                .get("policy")
+        // -- control plane -------------------------------------------------
+        "create" => {
+            let name = req
+                .get("name")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("policy needs a policy string"))?;
-            let policy = WidthPolicy::parse(spec)
-                .ok_or_else(|| anyhow!("unknown width policy {spec:?}"))?;
-            state.metrics.incr("policy");
-            *state.policy.lock().unwrap() = policy;
-            // Apply once immediately so `resize_interval_ms = 0`
-            // deployments still honour the change.
-            state.tickets.poll_policy(&policy);
+                .ok_or_else(|| anyhow!("create needs a name"))?;
+            let kind = req.get("kind").and_then(Json::as_str).unwrap_or("counter");
+            // Empty backend → the kind's default, applied by create.
+            let backend = req.get("backend").and_then(Json::as_str).unwrap_or("");
+            let max_width =
+                req.get("max_width").and_then(Json::as_u64).map(|w| w as usize);
+            let entry = state.registry.create(name, kind, backend, max_width)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("policy", Json::str(policy.label())),
-                ("width", Json::num(state.tickets.active_width() as f64)),
+                ("name", Json::str(entry.name.clone())),
+                ("kind", Json::str(entry.kind())),
+                ("backend", Json::str(entry.backend.clone())),
             ]))
         }
-        other => Err(anyhow!("unknown op {other:?}")),
+        "delete" => {
+            let name = req
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("delete needs a name"))?;
+            state.registry.remove(name)?;
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("deleted", Json::str(name))]))
+        }
+        "list" => {
+            let objects: Vec<Json> = state
+                .registry
+                .list()
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("name", Json::str(e.name.clone())),
+                        ("kind", Json::str(e.kind())),
+                        ("backend", Json::str(e.backend.clone())),
+                    ])
+                })
+                .collect();
+            let server: std::collections::BTreeMap<String, Json> = state
+                .metrics
+                .snapshot()
+                .into_iter()
+                .map(|(k, v)| (k, Json::num(v as f64)))
+                .collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("count", Json::num(objects.len() as f64)),
+                ("objects", Json::Arr(objects)),
+                ("server", Json::Obj(server)),
+            ]))
+        }
+        // -- data plane (namespaced; name defaults to the boot counter) ----
+        _ => {
+            let name = req.get("name").and_then(Json::as_str).unwrap_or(DEFAULT_OBJECT);
+            let entry = state.registry.get(name)?;
+            match op {
+                "take" => {
+                    let count =
+                        req.get("count").and_then(Json::as_u64).unwrap_or(1).max(1);
+                    let priority =
+                        req.get("priority").and_then(Json::as_bool).unwrap_or(false);
+                    let start = entry.take(tid, count, priority)?;
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("start", Json::num(start as f64)),
+                        ("count", Json::num(count as f64)),
+                    ]))
+                }
+                "read" => Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("value", Json::num(entry.read(tid)? as f64)),
+                ])),
+                "enqueue" => {
+                    let item = req.get("item").and_then(Json::as_u64).ok_or_else(|| {
+                        anyhow!("enqueue needs an item (non-negative integer)")
+                    })?;
+                    entry.enqueue(tid, item)?;
+                    Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+                }
+                "dequeue" => Ok(match entry.dequeue(tid)? {
+                    Some(item) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("item", Json::num(item as f64)),
+                    ]),
+                    None => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("empty", Json::Bool(true)),
+                    ]),
+                }),
+                "stats" => {
+                    entry.metrics.incr("stats");
+                    let mut json = entry.stats_json();
+                    if let Json::Obj(map) = &mut json {
+                        map.insert(
+                            "registry_objects".to_string(),
+                            Json::num(state.registry.len() as f64),
+                        );
+                    }
+                    Ok(json)
+                }
+                "resize" => {
+                    let width = req
+                        .get("width")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| anyhow!("resize needs a width"))?;
+                    let (width, previous) = entry.resize(width as usize)?;
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("width", Json::num(width as f64)),
+                        ("previous", Json::num(previous as f64)),
+                    ]))
+                }
+                "policy" => {
+                    let spec = req
+                        .get("policy")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("policy needs a policy string"))?;
+                    let policy = WidthPolicy::parse(spec)
+                        .ok_or_else(|| anyhow!("unknown width policy {spec:?}"))?;
+                    let width = entry.set_policy(policy)?;
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("policy", Json::str(policy.label())),
+                        ("width", Json::num(width as f64)),
+                    ]))
+                }
+                other => Err(anyhow!("unknown op {other:?}")),
+            }
+        }
     }
 }
 
-/// Minimal blocking client for the ticket service.
+/// Minimal blocking client for the registry service. Un-named methods
+/// address the boot counter ([`DEFAULT_OBJECT`]); `*_on` methods and
+/// the queue ops are namespaced.
 pub struct TicketClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -361,10 +507,80 @@ impl TicketClient {
         Ok(resp)
     }
 
-    /// Take a contiguous range of `count` tickets; returns the start.
-    pub fn take(&mut self, count: u64, priority: bool) -> Result<u64> {
+    /// Create a named object (`kind`: `counter` | `queue`; `backend`:
+    /// the spec grammar, empty for the kind's default).
+    pub fn create(&mut self, name: &str, kind: &str, backend: &str) -> Result<()> {
+        let mut pairs = vec![
+            ("op", Json::str("create")),
+            ("name", Json::str(name)),
+            ("kind", Json::str(kind)),
+        ];
+        if !backend.is_empty() {
+            pairs.push(("backend", Json::str(backend)));
+        }
+        self.roundtrip(Json::obj(pairs)).map(drop)
+    }
+
+    /// Delete a named object.
+    pub fn delete(&mut self, name: &str) -> Result<()> {
+        self.roundtrip(Json::obj(vec![
+            ("op", Json::str("delete")),
+            ("name", Json::str(name)),
+        ]))
+        .map(drop)
+    }
+
+    /// List registered objects as `(name, kind, backend)` triples.
+    pub fn list(&mut self) -> Result<Vec<(String, String, String)>> {
+        let resp = self.roundtrip(Json::obj(vec![("op", Json::str("list"))]))?;
+        let objects = resp
+            .get("objects")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing objects"))?;
+        objects
+            .iter()
+            .map(|o| {
+                let field = |k: &str| {
+                    o.get(k)
+                        .and_then(Json::as_str)
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("object missing {k}"))
+                };
+                Ok((field("name")?, field("kind")?, field("backend")?))
+            })
+            .collect()
+    }
+
+    /// Enqueue `item` on a named queue.
+    pub fn enqueue(&mut self, name: &str, item: u64) -> Result<()> {
+        self.roundtrip(Json::obj(vec![
+            ("op", Json::str("enqueue")),
+            ("name", Json::str(name)),
+            ("item", Json::num(item as f64)),
+        ]))
+        .map(drop)
+    }
+
+    /// Dequeue from a named queue (`None` when empty).
+    pub fn dequeue(&mut self, name: &str) -> Result<Option<u64>> {
+        let resp = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("dequeue")),
+            ("name", Json::str(name)),
+        ]))?;
+        if resp.get("empty").and_then(Json::as_bool) == Some(true) {
+            return Ok(None);
+        }
+        resp.get("item")
+            .and_then(Json::as_u64)
+            .map(Some)
+            .ok_or_else(|| anyhow!("missing item"))
+    }
+
+    /// Take a contiguous range of `count` values from a named counter.
+    pub fn take_on(&mut self, name: &str, count: u64, priority: bool) -> Result<u64> {
         let mut pairs = vec![
             ("op", Json::str("take")),
+            ("name", Json::str(name)),
             ("count", Json::num(count as f64)),
         ];
         if priority {
@@ -374,34 +590,66 @@ impl TicketClient {
         resp.get("start").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing start"))
     }
 
-    pub fn read(&mut self) -> Result<u64> {
-        let resp = self.roundtrip(Json::obj(vec![("op", Json::str("read"))]))?;
+    /// Take from the default counter; returns the range start.
+    pub fn take(&mut self, count: u64, priority: bool) -> Result<u64> {
+        self.take_on(DEFAULT_OBJECT, count, priority)
+    }
+
+    /// Read a named counter.
+    pub fn read_on(&mut self, name: &str) -> Result<u64> {
+        let resp = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("read")),
+            ("name", Json::str(name)),
+        ]))?;
         resp.get("value").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing value"))
     }
 
-    pub fn stats(&mut self) -> Result<Json> {
-        self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
+    pub fn read(&mut self) -> Result<u64> {
+        self.read_on(DEFAULT_OBJECT)
     }
 
-    /// Set the funnel's active width; returns the width now in force.
-    pub fn resize(&mut self, width: u64) -> Result<u64> {
+    /// Per-object stats for a named object.
+    pub fn stats_on(&mut self, name: &str) -> Result<Json> {
+        self.roundtrip(Json::obj(vec![
+            ("op", Json::str("stats")),
+            ("name", Json::str(name)),
+        ]))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.stats_on(DEFAULT_OBJECT)
+    }
+
+    /// Set a named object's active width; returns the width in force.
+    pub fn resize_on(&mut self, name: &str, width: u64) -> Result<u64> {
         let resp = self.roundtrip(Json::obj(vec![
             ("op", Json::str("resize")),
+            ("name", Json::str(name)),
             ("width", Json::num(width as f64)),
         ]))?;
         resp.get("width").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing width"))
     }
 
-    /// Swap the width policy at runtime (`fixed:<m>`, `sqrtp`, `aimd`).
-    pub fn set_policy(&mut self, policy: &str) -> Result<String> {
+    pub fn resize(&mut self, width: u64) -> Result<u64> {
+        self.resize_on(DEFAULT_OBJECT, width)
+    }
+
+    /// Swap a named object's width policy (`fixed:<m>`, `sqrtp`,
+    /// `aimd`).
+    pub fn set_policy_on(&mut self, name: &str, policy: &str) -> Result<String> {
         let resp = self.roundtrip(Json::obj(vec![
             ("op", Json::str("policy")),
+            ("name", Json::str(name)),
             ("policy", Json::str(policy)),
         ]))?;
         resp.get("policy")
             .and_then(Json::as_str)
             .map(str::to_string)
             .ok_or_else(|| anyhow!("missing policy"))
+    }
+
+    pub fn set_policy(&mut self, policy: &str) -> Result<String> {
+        self.set_policy_on(DEFAULT_OBJECT, policy)
     }
 }
 
@@ -452,6 +700,8 @@ mod tests {
         assert_eq!(c.read().unwrap(), 5);
         let stats = c.stats().unwrap();
         assert!(stats.get("take").and_then(Json::as_u64).unwrap_or(0) >= 1);
+        assert_eq!(stats.get("name").and_then(Json::as_str), Some(DEFAULT_OBJECT));
+        assert_eq!(stats.get("registry_objects").and_then(Json::as_u64), Some(1));
         server.shutdown();
     }
 
@@ -510,5 +760,120 @@ mod tests {
         // Connection stays usable.
         assert_eq!(c.take(1, false).unwrap(), 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn registry_ops_over_the_wire() {
+        let server = start();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        c.create("jobs", "queue", "lcrq+elastic:fixed:2").unwrap();
+        c.create("orders", "counter", "").unwrap(); // kind default backend
+        assert!(c.create("jobs", "queue", "").is_err(), "duplicate name");
+        let listed = c.list().unwrap();
+        let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["jobs", "orders", DEFAULT_OBJECT]);
+        assert_eq!(listed[0].1, "queue");
+        assert_eq!(listed[0].2, "lcrq+elastic:fixed:2");
+
+        // Queue traffic, independent of the default counter.
+        assert_eq!(c.dequeue("jobs").unwrap(), None);
+        c.enqueue("jobs", 41).unwrap();
+        c.enqueue("jobs", 42).unwrap();
+        assert_eq!(c.dequeue("jobs").unwrap(), Some(41));
+        // Named counter traffic.
+        assert_eq!(c.take_on("orders", 3, false).unwrap(), 0);
+        assert_eq!(c.read_on("orders").unwrap(), 3);
+        assert_eq!(c.read().unwrap(), 0, "default counter untouched");
+
+        // Kind mismatches and unknown names are clean errors.
+        assert!(c.take_on("jobs", 1, false).is_err());
+        assert!(c.enqueue(DEFAULT_OBJECT, 1).is_err());
+        assert!(c.dequeue("ghost").is_err());
+
+        // Per-object stats are independent.
+        let jobs = c.stats_on("jobs").unwrap();
+        assert_eq!(jobs.get("kind").and_then(Json::as_str), Some("queue"));
+        assert_eq!(jobs.get("enqueue").and_then(Json::as_u64), Some(2));
+        assert_eq!(jobs.get("active_width").and_then(Json::as_u64), Some(2));
+        let orders = c.stats_on("orders").unwrap();
+        assert_eq!(orders.get("take").and_then(Json::as_u64), Some(1));
+        assert!(orders.get("enqueue").is_none());
+
+        c.delete("jobs").unwrap();
+        assert!(c.delete("jobs").is_err());
+        assert_eq!(c.list().unwrap().len(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn queue_width_ops_ride_the_index_factory() {
+        let server = start();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        c.create("q", "queue", "lcrq+elastic:fixed:2").unwrap();
+        assert_eq!(c.resize_on("q", 4).unwrap(), 4);
+        assert_eq!(c.set_policy_on("q", "fixed:1").unwrap(), "fixed-1");
+        let stats = c.stats_on("q").unwrap();
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(1));
+        // Non-elastic indices have no width controls.
+        c.create("q2", "queue", "lcrq+hw").unwrap();
+        assert!(c.resize_on("q2", 4).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn connections_beyond_lease_pool_rejected() {
+        let server = serve(&ServeOpts::fixed("127.0.0.1:0", 1, 2)).unwrap();
+        let addr = server.addr.to_string();
+        let mut first = TicketClient::connect(&addr).unwrap();
+        // Completing a request proves the only lease is held.
+        assert_eq!(first.take(1, false).unwrap(), 0);
+        // Read the rejection line without writing first (a write could
+        // race the server-side close into an RST that drops the line).
+        let second = TcpStream::connect(&addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(second).read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        let err = resp.get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("capacity"), "unexpected rejection: {err}");
+        // The leased connection keeps working.
+        assert_eq!(first.take(1, false).unwrap(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn manifest_objects_precreated_at_boot() {
+        let server = serve(&ServeOpts {
+            objects: vec![
+                ObjectManifest {
+                    name: "jobs".into(),
+                    kind: "queue".into(),
+                    backend: "lcrq+elastic".into(),
+                },
+                ObjectManifest {
+                    name: "orders".into(),
+                    kind: "counter".into(),
+                    backend: "elastic:sqrtp".into(),
+                },
+            ],
+            ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+        })
+        .unwrap();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(c.list().unwrap().len(), 3);
+        c.enqueue("jobs", 9).unwrap();
+        assert_eq!(c.dequeue("jobs").unwrap(), Some(9));
+        assert_eq!(c.take_on("orders", 2, false).unwrap(), 0);
+        server.shutdown();
+        // A manifest colliding with the boot counter fails loudly.
+        let err = serve(&ServeOpts {
+            objects: vec![ObjectManifest {
+                name: DEFAULT_OBJECT.into(),
+                kind: "counter".into(),
+                backend: "elastic:aimd".into(),
+            }],
+            ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+        });
+        assert!(err.is_err());
     }
 }

@@ -1,0 +1,498 @@
+//! The object registry: named fetch-and-add counters and funnel-backed
+//! FIFO queues living behind one wire protocol.
+//!
+//! A registry maps names to [`ObjectEntry`]s. An entry is either a
+//! **counter** — an [`ElasticAggFunnel`] with a per-object
+//! [`WidthPolicy`], today's ticket counter made nameable — or a
+//! **queue** — any [`crate::queue::make_queue`] spec, with
+//! `lcrq+elastic` queues keeping an [`ElasticIndexFactory`] handle so
+//! the service's resize controller can walk a queue's ring indices
+//! exactly like a counter's Aggregator set. Every entry carries its
+//! own [`Metrics`] so `stats` reports independent per-object traffic
+//! and contention counters.
+//!
+//! Lookups take a read lock and clone an `Arc` out; the data-plane ops
+//! (`take`, `enqueue`, …) then run lock-free on the object itself.
+//! `create`/`delete` are control-plane and take the write lock.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use crate::config::ObjectManifest;
+use crate::faa::{backend, BackendSpec, BatchStats, ElasticAggFunnel, FetchAddObject, WidthPolicy};
+use crate::queue::{make_queue_with_handle, ConcurrentQueue, ElasticIndexFactory, EMPTY_ITEM};
+use crate::util::json::Json;
+
+/// The object un-named requests route to (the pre-registry protocol's
+/// single anonymous ticket counter, now just a well-known name).
+pub const DEFAULT_OBJECT: &str = "tickets";
+
+/// A served object's body.
+pub enum ObjectBody {
+    Counter(ElasticAggFunnel),
+    Queue {
+        queue: Arc<dyn ConcurrentQueue>,
+        /// Present iff the index backend is elastic (resizable).
+        elastic: Option<ElasticIndexFactory>,
+    },
+}
+
+/// One named object: body + backend label + per-object metrics +
+/// runtime-swappable width policy.
+pub struct ObjectEntry {
+    pub name: String,
+    /// Canonical backend spec (re-parseable; shown by `list`).
+    pub backend: String,
+    pub metrics: Metrics,
+    policy: Mutex<WidthPolicy>,
+    body: ObjectBody,
+}
+
+impl ObjectEntry {
+    pub fn kind(&self) -> &'static str {
+        match self.body {
+            ObjectBody::Counter(_) => "counter",
+            ObjectBody::Queue { .. } => "queue",
+        }
+    }
+
+    fn as_counter(&self, op: &str) -> Result<&ElasticAggFunnel> {
+        match &self.body {
+            ObjectBody::Counter(f) => Ok(f),
+            ObjectBody::Queue { .. } => {
+                Err(anyhow!("object {:?} is a queue; {op} needs a counter", self.name))
+            }
+        }
+    }
+
+    fn as_queue(&self, op: &str) -> Result<&Arc<dyn ConcurrentQueue>> {
+        match &self.body {
+            ObjectBody::Queue { queue, .. } => Ok(queue),
+            ObjectBody::Counter(_) => {
+                Err(anyhow!("object {:?} is a counter; {op} needs a queue", self.name))
+            }
+        }
+    }
+
+    /// Counter op: `Fetch&Add(count)`, direct when `priority`.
+    pub fn take(&self, tid: usize, count: u64, priority: bool) -> Result<u64> {
+        let funnel = self.as_counter("take")?;
+        Ok(if priority {
+            self.metrics.incr("take_priority");
+            funnel.fetch_add_direct(tid, count as i64)
+        } else {
+            self.metrics.incr("take");
+            funnel.fetch_add(tid, count as i64)
+        })
+    }
+
+    /// Counter op: linearizable read.
+    pub fn read(&self, tid: usize) -> Result<u64> {
+        let funnel = self.as_counter("read")?;
+        self.metrics.incr("read");
+        Ok(funnel.read(tid))
+    }
+
+    /// Queue op: enqueue one item.
+    pub fn enqueue(&self, tid: usize, item: u64) -> Result<()> {
+        if item >= EMPTY_ITEM {
+            return Err(anyhow!("item {item} is reserved"));
+        }
+        let queue = self.as_queue("enqueue")?;
+        self.metrics.incr("enqueue");
+        queue.enqueue(tid, item);
+        Ok(())
+    }
+
+    /// Queue op: dequeue the oldest item (`None` on empty).
+    pub fn dequeue(&self, tid: usize) -> Result<Option<u64>> {
+        let queue = self.as_queue("dequeue")?;
+        self.metrics.incr("dequeue");
+        let got = queue.dequeue(tid);
+        if got.is_none() {
+            self.metrics.incr("dequeue_empty");
+        }
+        Ok(got)
+    }
+
+    /// Set the active funnel width: the Aggregator prefix for a
+    /// counter, every live ring index for an elastic-index queue.
+    /// Returns `(new_width, previous_width)`.
+    pub fn resize(&self, width: usize) -> Result<(usize, usize)> {
+        self.metrics.incr("resize");
+        match &self.body {
+            ObjectBody::Counter(f) => {
+                let previous = f.resize(width);
+                Ok((f.active_width(), previous))
+            }
+            ObjectBody::Queue { elastic: Some(factory), .. } => {
+                let previous = factory.active_width();
+                Ok((factory.resize(width), previous))
+            }
+            ObjectBody::Queue { .. } => {
+                Err(anyhow!("queue {:?} has a non-resizable {:?} index", self.name, self.backend))
+            }
+        }
+    }
+
+    /// Swap the width policy at runtime; applies once immediately.
+    /// Returns the active width now in force.
+    pub fn set_policy(&self, policy: WidthPolicy) -> Result<usize> {
+        self.metrics.incr("policy");
+        match &self.body {
+            ObjectBody::Counter(f) => {
+                *self.policy.lock().unwrap() = policy;
+                Ok(f.poll_policy(&policy))
+            }
+            ObjectBody::Queue { elastic: Some(factory), .. } => {
+                *self.policy.lock().unwrap() = policy;
+                // Through the factory so future rings' cells are built
+                // under the new policy too.
+                Ok(factory.set_policy(policy))
+            }
+            ObjectBody::Queue { .. } => {
+                Err(anyhow!("queue {:?} has a non-resizable {:?} index", self.name, self.backend))
+            }
+        }
+    }
+
+    /// The current width policy.
+    pub fn policy(&self) -> WidthPolicy {
+        *self.policy.lock().unwrap()
+    }
+
+    /// One resize-controller tick: apply the object's policy to its
+    /// contention window. No-op for non-elastic queues.
+    pub fn poll(&self) {
+        let policy = self.policy();
+        match &self.body {
+            ObjectBody::Counter(f) => {
+                f.poll_policy(&policy);
+            }
+            ObjectBody::Queue { elastic: Some(factory), .. } => {
+                factory.poll_policy(&policy);
+            }
+            ObjectBody::Queue { .. } => {}
+        }
+    }
+
+    /// The object's combining statistics (counter funnel, or queue
+    /// ring indices for batching index backends).
+    pub fn batch_stats(&self) -> BatchStats {
+        match &self.body {
+            ObjectBody::Counter(f) => f.batch_stats(),
+            ObjectBody::Queue { queue, .. } => queue.batch_stats(),
+        }
+    }
+
+    /// Per-object `stats` payload: identity, per-object traffic
+    /// counters, and independent width/contention counters.
+    pub fn stats_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("ok".to_string(), Json::Bool(true));
+        obj.insert("name".to_string(), Json::str(self.name.clone()));
+        obj.insert("kind".to_string(), Json::str(self.kind()));
+        obj.insert("backend".to_string(), Json::str(self.backend.clone()));
+        for (k, v) in self.metrics.snapshot() {
+            obj.insert(k, Json::num(v as f64));
+        }
+        let stats = self.batch_stats();
+        for (k, v) in [
+            ("main_faas", stats.main_faas),
+            ("batched_ops", stats.ops),
+            ("single_op_batches", stats.single_op_batches),
+            ("cas_failures", stats.cas_failures),
+        ] {
+            obj.insert(k.to_string(), Json::num(v as f64));
+        }
+        obj.insert("avg_batch".to_string(), Json::num(stats.avg_batch_size()));
+        match &self.body {
+            ObjectBody::Counter(f) => {
+                obj.insert("active_width".to_string(), Json::num(f.active_width() as f64));
+                obj.insert("max_width".to_string(), Json::num(f.max_width() as f64));
+                obj.insert("resizes".to_string(), Json::num(f.resizes() as f64));
+                obj.insert("width_policy".to_string(), Json::str(self.policy().label()));
+            }
+            ObjectBody::Queue { elastic: Some(factory), .. } => {
+                obj.insert("active_width".to_string(), Json::num(factory.active_width() as f64));
+                obj.insert("max_width".to_string(), Json::num(factory.max_width() as f64));
+                obj.insert("index_cells".to_string(), Json::num(factory.live_cells() as f64));
+                obj.insert("width_policy".to_string(), Json::str(self.policy().label()));
+            }
+            ObjectBody::Queue { .. } => {}
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// The concurrent name → object map.
+pub struct Registry {
+    map: RwLock<BTreeMap<String, Arc<ObjectEntry>>>,
+    /// Funnel tid bound every created object is built for (the
+    /// service's lease-pool size plus the reserved tid 0).
+    max_threads: usize,
+}
+
+impl Registry {
+    pub fn new(max_threads: usize) -> Self {
+        Self { map: RwLock::new(BTreeMap::new()), max_threads: max_threads.max(1) }
+    }
+
+    /// Create a counter directly from a policy (the boot path for the
+    /// default object, where the policy is already parsed). `initial`
+    /// overrides the policy's starting width.
+    pub fn create_counter(
+        &self,
+        name: &str,
+        policy: WidthPolicy,
+        max_width: usize,
+        initial: Option<usize>,
+    ) -> Result<Arc<ObjectEntry>> {
+        let spec = BackendSpec::Elastic { policy, max_width: max_width.max(1) };
+        let funnel = backend::build_elastic(self.max_threads, policy, max_width.max(1));
+        if let Some(w) = initial {
+            funnel.resize(w);
+        }
+        self.insert(ObjectEntry {
+            name: validated_name(name)?,
+            backend: spec.label(),
+            metrics: Metrics::new(),
+            policy: Mutex::new(policy),
+            body: ObjectBody::Counter(funnel),
+        })
+    }
+
+    /// Create an object from wire/manifest strings. An empty
+    /// `backend_spec` takes the kind's default; `max_width` overrides
+    /// the elastic slot capacity when given.
+    pub fn create(
+        &self,
+        name: &str,
+        kind: &str,
+        backend_spec: &str,
+        max_width: Option<usize>,
+    ) -> Result<Arc<ObjectEntry>> {
+        let backend_spec = if backend_spec.is_empty() {
+            ObjectManifest::default_backend(kind).unwrap_or("")
+        } else {
+            backend_spec
+        };
+        match kind {
+            "counter" => {
+                let mut spec = BackendSpec::parse(backend_spec)
+                    .ok_or_else(|| anyhow!("unknown counter backend {backend_spec:?}"))?;
+                if let Some(w) = max_width {
+                    spec = spec.with_max_width(w);
+                }
+                let (policy, width) = spec.counter_policy().ok_or_else(|| {
+                    anyhow!(
+                        "counter backend {backend_spec:?} does not batch; \
+                         use aggfunnel:<m> or elastic:<policy>"
+                    )
+                })?;
+                self.create_counter(name, policy, width, None)
+            }
+            "queue" => {
+                let (queue, elastic) =
+                    make_queue_with_handle(backend_spec, self.max_threads, max_width)
+                        .ok_or_else(|| anyhow!("unknown queue backend {backend_spec:?}"))?;
+                let policy = match backend_spec.split_once('+') {
+                    Some((_, index)) => match BackendSpec::parse(index) {
+                        Some(BackendSpec::Elastic { policy, .. }) => policy,
+                        _ => WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS),
+                    },
+                    None => WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS),
+                };
+                self.insert(ObjectEntry {
+                    name: validated_name(name)?,
+                    backend: backend_spec.trim().to_string(),
+                    metrics: Metrics::new(),
+                    policy: Mutex::new(policy),
+                    body: ObjectBody::Queue { queue, elastic },
+                })
+            }
+            other => Err(anyhow!("unknown object kind {other:?} (counter | queue)")),
+        }
+    }
+
+    fn insert(&self, entry: ObjectEntry) -> Result<Arc<ObjectEntry>> {
+        let mut map = self.map.write().unwrap();
+        if map.contains_key(&entry.name) {
+            return Err(anyhow!("object {:?} already exists", entry.name));
+        }
+        let entry = Arc::new(entry);
+        map.insert(entry.name.clone(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Look an object up by name.
+    pub fn get(&self, name: &str) -> Result<Arc<ObjectEntry>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no object named {name:?}"))
+    }
+
+    /// Delete an object. In-flight data-plane ops on other
+    /// connections hold their own `Arc` and finish normally.
+    pub fn remove(&self, name: &str) -> Result<()> {
+        self.map
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(drop)
+            .ok_or_else(|| anyhow!("no object named {name:?}"))
+    }
+
+    /// Every registered object, in name order.
+    pub fn list(&self) -> Vec<Arc<ObjectEntry>> {
+        self.map.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.read().unwrap().is_empty()
+    }
+}
+
+/// Object names share the config-key charset, so every valid name is
+/// also addressable from an `[objects.<name>]` manifest section.
+fn validated_name(name: &str) -> Result<String> {
+    if name.is_empty() || name.len() > 64 {
+        return Err(anyhow!("object names must be 1..=64 characters"));
+    }
+    if !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+        return Err(anyhow!("invalid object name {name:?} (use [A-Za-z0-9_-])"));
+    }
+    Ok(name.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_backend_defaults_per_kind() {
+        let r = Registry::new(2);
+        let c = r.create("c", "counter", "", None).unwrap();
+        assert_eq!(c.backend, "elastic:aimd");
+        let q = r.create("q", "queue", "", None).unwrap();
+        assert_eq!(q.backend, "lcrq+elastic");
+        q.enqueue(0, 1).unwrap();
+        assert_eq!(q.dequeue(1).unwrap(), Some(1));
+        assert!(r.create("x", "stack", "", None).is_err(), "kind still validated");
+    }
+
+    #[test]
+    fn create_get_list_delete() {
+        let r = Registry::new(4);
+        r.create("c1", "counter", "elastic:aimd", None).unwrap();
+        r.create("q1", "queue", "lcrq+elastic", None).unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(!r.is_empty());
+        assert!(r.create("c1", "counter", "elastic:aimd", None).is_err(), "duplicate");
+        let names: Vec<String> = r.list().iter().map(|e| e.name.clone()).collect();
+        assert_eq!(names, vec!["c1", "q1"], "name order");
+        assert_eq!(r.get("c1").unwrap().kind(), "counter");
+        assert_eq!(r.get("q1").unwrap().kind(), "queue");
+        r.remove("c1").unwrap();
+        assert!(r.get("c1").is_err());
+        assert!(r.remove("c1").is_err());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let r = Registry::new(2);
+        assert!(r.create("x", "counter", "bogus", None).is_err());
+        assert!(r.create("x", "counter", "hw", None).is_err(), "hw counters have no width");
+        assert!(r.create("x", "queue", "bogus", None).is_err());
+        assert!(r.create("x", "stack", "lcrq", None).is_err());
+        assert!(r.create("", "counter", "elastic", None).is_err());
+        assert!(r.create("a b", "counter", "elastic", None).is_err());
+        assert!(r.create(&"n".repeat(65), "counter", "elastic", None).is_err());
+    }
+
+    #[test]
+    fn counter_entry_ops() {
+        let r = Registry::new(2);
+        let e = r.create("c", "counter", "elastic:fixed:2", Some(6)).unwrap();
+        assert_eq!(e.take(0, 5, false).unwrap(), 0);
+        assert_eq!(e.take(1, 1, true).unwrap(), 5);
+        assert_eq!(e.read(0).unwrap(), 6);
+        assert!(e.enqueue(0, 1).is_err(), "counters reject queue ops");
+        assert!(e.dequeue(0).is_err());
+        let (width, previous) = e.resize(4).unwrap();
+        assert_eq!((width, previous), (4, 2));
+        assert_eq!(e.resize(100).unwrap().0, 6, "clamped to the max_width override");
+        assert_eq!(e.set_policy(WidthPolicy::Fixed(3)).unwrap(), 3);
+        let stats = e.stats_json();
+        assert_eq!(stats.get("take").and_then(Json::as_u64), Some(1));
+        assert_eq!(stats.get("take_priority").and_then(Json::as_u64), Some(1));
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(3));
+        assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("fixed-3"));
+        assert_eq!(stats.get("kind").and_then(Json::as_str), Some("counter"));
+    }
+
+    #[test]
+    fn queue_entry_ops() {
+        let r = Registry::new(2);
+        let e = r.create("q", "queue", "lcrq+elastic:fixed:2", None).unwrap();
+        assert_eq!(e.dequeue(0).unwrap(), None);
+        e.enqueue(0, 7).unwrap();
+        e.enqueue(1, 8).unwrap();
+        assert_eq!(e.dequeue(1).unwrap(), Some(7));
+        assert!(e.take(0, 1, false).is_err(), "queues reject counter ops");
+        assert!(e.read(0).is_err());
+        assert!(e.enqueue(0, EMPTY_ITEM).is_err(), "sentinel rejected");
+        let (width, previous) = e.resize(3).unwrap();
+        assert_eq!((width, previous), (3, 2));
+        e.poll(); // controller tick must not panic
+        let stats = e.stats_json();
+        assert_eq!(stats.get("enqueue").and_then(Json::as_u64), Some(2));
+        assert_eq!(stats.get("dequeue").and_then(Json::as_u64), Some(2));
+        assert_eq!(stats.get("dequeue_empty").and_then(Json::as_u64), Some(1));
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(3));
+        assert!(stats.get("index_cells").and_then(Json::as_u64).unwrap() >= 2);
+        assert!(stats.get("main_faas").and_then(Json::as_u64).unwrap() > 0);
+    }
+
+    #[test]
+    fn queue_max_width_override_applies() {
+        let r = Registry::new(2);
+        let e = r.create("q", "queue", "lcrq+elastic:aimd", Some(20)).unwrap();
+        assert_eq!(e.resize(100).unwrap().0, 20, "clamped to the create-time override");
+        let stats = e.stats_json();
+        assert_eq!(stats.get("max_width").and_then(Json::as_u64), Some(20));
+    }
+
+    #[test]
+    fn non_elastic_queue_has_no_width_controls() {
+        let r = Registry::new(2);
+        let e = r.create("q", "queue", "lcrq+hw", None).unwrap();
+        e.enqueue(0, 1).unwrap();
+        assert!(e.resize(2).is_err());
+        assert!(e.set_policy(WidthPolicy::SqrtP).is_err());
+        e.poll(); // still a no-op, not an error
+        let stats = e.stats_json();
+        assert!(stats.get("active_width").is_none());
+        assert_eq!(stats.get("backend").and_then(Json::as_str), Some("lcrq+hw"));
+    }
+
+    #[test]
+    fn aggfunnel_counter_spec_pins_width() {
+        let r = Registry::new(2);
+        let e = r.create("c", "counter", "aggfunnel:3", None).unwrap();
+        let stats = e.stats_json();
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(3));
+        assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("fixed-3"));
+    }
+}

@@ -245,6 +245,115 @@ pub fn run_elastic_faa_point(
     }
 }
 
+/// One measured multi-object point: a hot counter and a hot queue
+/// contending in one process — the simulator twin of the registry
+/// service's mixed traffic (counter `take`s interleaved with queue
+/// `enqueue`/`dequeue` across the same threads).
+#[derive(Clone, Debug)]
+pub struct MixedPoint {
+    pub faa_algo: String,
+    pub queue: &'static str,
+    pub threads: usize,
+    /// Combined throughput over both objects.
+    pub mops: f64,
+    pub counter_ops: u64,
+    pub queue_ops: u64,
+    /// Average batch size observed on the counter.
+    pub avg_batch: f64,
+    pub fairness: f64,
+    pub sim_events: u64,
+}
+
+/// Run one simulated mixed-workload point: each thread flips a
+/// `counter_ratio` coin per iteration between a counter operation
+/// (F&A/Read per `wl`) and a queue operation (alternating
+/// enqueue/dequeue), with geometric local work in between.
+pub fn run_mixed_point(
+    cfg: &SimConfig,
+    faa_spec: &AlgoSpec,
+    queue_spec: &QueueSpec,
+    wl: &FaaWorkload,
+    counter_ratio: f64,
+) -> MixedPoint {
+    let p = cfg.threads;
+    let mut sim = Sim::new(cfg.clone());
+    let ctx0 = sim.ctx(0);
+    let faa = Rc::new(SimFaa::build(faa_spec, &ctx0, p));
+    let ring_order = 10;
+    let q = Rc::new(queue_spec.build(&ctx0, p, ring_order));
+    // Warm the queue so early dequeues usually succeed.
+    {
+        let q = Rc::clone(&q);
+        let ctx = sim.ctx(0);
+        sim.spawn(0, async move {
+            for i in 0..256 {
+                q.enqueue(&ctx, (1 << 40) | i).await;
+            }
+        });
+        sim.run();
+    }
+    let horizon = cfg.horizon_cycles;
+    let tallies: Rc<RefCell<(u64, u64)>> = Rc::new(RefCell::new((0, 0)));
+    for tid in 0..p {
+        let ctx = sim.ctx(tid);
+        let faa = Rc::clone(&faa);
+        let q = Rc::clone(&q);
+        let wl = wl.clone();
+        let tallies = Rc::clone(&tallies);
+        sim.spawn(tid, async move {
+            let mut seq = 0u64;
+            let mut enq_next = tid % 2 == 0;
+            while ctx.now() < horizon {
+                let on_counter =
+                    ctx.rand_u64() as f64 / u64::MAX as f64 <= counter_ratio;
+                if on_counter {
+                    let is_faa =
+                        ctx.rand_u64() as f64 / u64::MAX as f64 <= wl.faa_ratio;
+                    if is_faa {
+                        let d = wl.delta_min
+                            + ctx.rand_u64() % (wl.delta_max - wl.delta_min + 1);
+                        faa.fetch_add(&ctx, d as i64).await;
+                    } else {
+                        faa.read(&ctx).await;
+                    }
+                    tallies.borrow_mut().0 += 1;
+                } else {
+                    if enq_next {
+                        q.enqueue(&ctx, ((tid as u64) << 32) | seq).await;
+                        seq += 1;
+                    } else {
+                        q.dequeue(&ctx).await;
+                    }
+                    enq_next = !enq_next;
+                    tallies.borrow_mut().1 += 1;
+                }
+                ctx.count_op();
+                let w = ctx.rand_geometric(wl.work_mean);
+                if w > 0 {
+                    ctx.work(w).await;
+                }
+            }
+        });
+    }
+    let end = sim.run().max(1);
+    let per_thread = sim.ops_done();
+    let total: u64 = per_thread.iter().sum();
+    let secs = cfg.seconds(end);
+    let (main_faas, ops) = faa.batch_stats();
+    let (counter_ops, queue_ops) = *tallies.borrow();
+    MixedPoint {
+        faa_algo: faa_spec.label(),
+        queue: queue_spec.label(),
+        threads: p,
+        mops: mops(total, secs),
+        counter_ops,
+        queue_ops,
+        avg_batch: if main_faas == 0 { 0.0 } else { ops as f64 / main_faas as f64 },
+        fairness: fairness(&per_thread),
+        sim_events: sim.events_processed(),
+    }
+}
+
 /// Queue workload shapes (the three panels of Fig. 6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QueueScenario {
@@ -455,6 +564,49 @@ mod tests {
             sticky.fairness,
             fair.fairness
         );
+    }
+
+    #[test]
+    fn mixed_point_exercises_both_objects() {
+        let cfg = quick_cfg(8);
+        let pt = run_mixed_point(
+            &cfg,
+            &AlgoSpec::Agg { m: 2, direct: 0 },
+            &QueueSpec::LcrqAgg { m: 2 },
+            &FaaWorkload::update_heavy().with_work_mean(64.0),
+            0.5,
+        );
+        assert!(pt.mops > 0.0);
+        assert!(pt.counter_ops > 0, "no counter traffic");
+        assert!(pt.queue_ops > 0, "no queue traffic");
+        assert!(pt.avg_batch >= 1.0, "counter must batch under contention");
+        assert_eq!(pt.faa_algo, "aggfunnel-2");
+        assert_eq!(pt.queue, "lcrq+aggfunnel");
+        assert!(pt.fairness > 0.0 && pt.fairness <= 1.0);
+    }
+
+    #[test]
+    fn mixed_points_deterministic() {
+        let cfg = quick_cfg(8);
+        let wl = FaaWorkload::update_heavy();
+        let run = || run_mixed_point(&cfg, &AlgoSpec::Hw, &QueueSpec::LcrqHw, &wl, 0.5);
+        let (a, b) = (run(), run());
+        assert_eq!(a.mops, b.mops);
+        assert_eq!(a.counter_ops, b.counter_ops);
+        assert_eq!(a.queue_ops, b.queue_ops);
+        assert_eq!(a.sim_events, b.sim_events);
+    }
+
+    #[test]
+    fn mixed_ratio_shapes_traffic() {
+        let cfg = quick_cfg(8);
+        let wl = FaaWorkload::update_heavy();
+        let hot_counter =
+            run_mixed_point(&cfg, &AlgoSpec::Hw, &QueueSpec::LcrqHw, &wl, 0.9);
+        let hot_queue =
+            run_mixed_point(&cfg, &AlgoSpec::Hw, &QueueSpec::LcrqHw, &wl, 0.1);
+        assert!(hot_counter.counter_ops > hot_counter.queue_ops);
+        assert!(hot_queue.queue_ops > hot_queue.counter_ops);
     }
 
     #[test]

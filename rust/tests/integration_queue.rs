@@ -5,8 +5,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use aggfunnels::faa::WidthPolicy;
 use aggfunnels::queue::{
-    AggIndexFactory, CombIndexFactory, ConcurrentQueue, HwIndexFactory, Lcrq, MsQueue, Prq,
+    AggIndexFactory, CombIndexFactory, ConcurrentQueue, ElasticIndexFactory, HwIndexFactory,
+    IndexFactory, Lcrq, MsQueue, Prq,
 };
 use aggfunnels::verify::{encode_item, FifoChecker};
 
@@ -20,6 +22,14 @@ fn all_queues(p: usize, ring_order: u32) -> Vec<(&'static str, Arc<dyn Concurren
         (
             "lcrq+combfunnel",
             Arc::new(Lcrq::with_ring_order(p, CombIndexFactory { max_threads: p }, ring_order)),
+        ),
+        (
+            "lcrq+elastic",
+            Arc::new(Lcrq::with_ring_order(
+                p,
+                ElasticIndexFactory::with_policy(p, WidthPolicy::Fixed(2), 4),
+                ring_order,
+            )),
         ),
         ("lprq", Arc::new(Prq::with_ring_order(p, HwIndexFactory, ring_order))),
         ("msq", Arc::new(MsQueue::new(p))),
@@ -93,6 +103,34 @@ fn unbalanced_producers_consumers() {
     for (name, q) in all_queues(8, 6) {
         fifo_run(&format!("{name}/7p1c"), Arc::clone(&q), 7, 1, 1_000);
     }
+}
+
+#[test]
+fn elastic_index_fifo_holds_while_controller_resizes() {
+    // FIFO conformance for LCRQ+elastic while a controller thread
+    // walks the factory's live ring indices (the service's resize
+    // controller, in miniature), across ring-transition churn.
+    let p = 8;
+    let factory = ElasticIndexFactory::with_policy(p, WidthPolicy::Fixed(2), 6);
+    let handle = factory.clone();
+    let q: Arc<dyn ConcurrentQueue> = Arc::new(Lcrq::with_ring_order(p, factory, 3));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let controller = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = 1usize;
+            while !stop.load(Ordering::Relaxed) {
+                handle.resize(w);
+                w = w % 6 + 1;
+                std::thread::yield_now();
+            }
+            handle.batch_stats()
+        })
+    };
+    fifo_run("lcrq+elastic/resizing", Arc::clone(&q), 4, 4, 2_000);
+    stop.store(true, Ordering::Relaxed);
+    let stats = controller.join().unwrap();
+    assert!(stats.ops >= 2 * 4 * 2_000, "every enqueue and dequeue hits an index F&A");
 }
 
 #[test]

@@ -1,8 +1,10 @@
-//! End-to-end tests of the ticket service over real TCP: concurrent
-//! clients, priority requests, error handling, and shutdown.
+//! End-to-end tests of the registry service over real TCP: concurrent
+//! clients, multiple named objects, priority requests, error handling,
+//! and shutdown.
 
 use std::sync::Arc;
 
+use aggfunnels::config::ObjectManifest;
 use aggfunnels::service::{serve, ServeOpts, TicketClient};
 use aggfunnels::util::json::Json;
 
@@ -12,7 +14,8 @@ fn start(workers: usize) -> aggfunnels::service::ServerHandle {
 
 #[test]
 fn many_clients_disjoint_coverage() {
-    let server = start(4);
+    // 7 connection slots: 6 concurrent clients plus the final reader.
+    let server = start(7);
     let addr = Arc::new(server.addr.to_string());
     let handles: Vec<_> = (0..6)
         .map(|i| {
@@ -65,7 +68,9 @@ fn adaptive_service_survives_burst_and_reports_width() {
         policy: aggfunnels::faa::WidthPolicy::Aimd(Default::default()),
         max_aggregators: 8,
         resize_interval_ms: 5,
-        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+        // One spare slot: the post-burst stats probe may connect
+        // before the burst clients' leases are released.
+        ..ServeOpts::fixed("127.0.0.1:0", 5, 2)
     })
     .unwrap();
     let addr = Arc::new(server.addr.to_string());
@@ -96,6 +101,124 @@ fn adaptive_service_survives_burst_and_reports_width() {
     assert!((1..=8).contains(&width), "width {width} out of range");
     assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("aimd"));
     server.shutdown();
+}
+
+#[test]
+fn two_objects_served_concurrently_with_independent_stats() {
+    // The registry acceptance path: one named counter and one LCRQ
+    // queue with an elastic funnel index, created at boot from a
+    // manifest, driven concurrently over real TCP. Counter ranges must
+    // stay dense, the queue must neither lose nor duplicate items, and
+    // per-object `stats` must report independent width/contention
+    // counters.
+    let clients = 4;
+    let per_client = 250u64;
+    let server = serve(&ServeOpts {
+        resize_interval_ms: 5,
+        objects: vec![ObjectManifest {
+            name: "jobs".into(),
+            kind: "queue".into(),
+            backend: "lcrq+elastic:aimd".into(),
+        }],
+        ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+    })
+    .unwrap();
+    let addr = Arc::new(server.addr.to_string());
+    let handles: Vec<_> = (0..clients as u64)
+        .map(|i| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let mut c = TicketClient::connect(&addr).unwrap();
+                let mut ranges = Vec::new();
+                let mut got = Vec::new();
+                for k in 0..per_client {
+                    ranges.push((c.take(1 + k % 3, k % 9 == 0).unwrap(), 1 + k % 3));
+                    c.enqueue("jobs", (i << 32) | k).unwrap();
+                    if let Some(item) = c.dequeue("jobs").unwrap() {
+                        got.push(item);
+                    }
+                }
+                (ranges, got)
+            })
+        })
+        .collect();
+    let mut ranges = Vec::new();
+    let mut consumed = Vec::new();
+    for h in handles {
+        let (r, g) = h.join().unwrap();
+        ranges.extend(r);
+        consumed.extend(g);
+    }
+    // Counter: dense disjoint ranges despite queue traffic.
+    ranges.sort_unstable();
+    let mut expect = 0;
+    for (s, c) in ranges {
+        assert_eq!(s, expect, "gap or overlap in counter ranges");
+        expect = s + c;
+    }
+    // Queue: drain the stragglers, then the multiset must be exact.
+    let mut c = TicketClient::connect(&addr).unwrap();
+    while let Some(item) = c.dequeue("jobs").unwrap() {
+        consumed.push(item);
+    }
+    consumed.sort_unstable();
+    let mut expected: Vec<u64> = (0..clients as u64)
+        .flat_map(|i| (0..per_client).map(move |k| (i << 32) | k))
+        .collect();
+    expected.sort_unstable();
+    assert_eq!(consumed, expected, "queue lost or duplicated items");
+
+    // Independent per-object stats.
+    let tickets = c.stats().unwrap();
+    let jobs = c.stats_on("jobs").unwrap();
+    assert_eq!(tickets.get("kind").and_then(Json::as_str), Some("counter"));
+    assert_eq!(jobs.get("kind").and_then(Json::as_str), Some("queue"));
+    let takes = tickets.get("take").and_then(Json::as_u64).unwrap()
+        + tickets.get("take_priority").and_then(Json::as_u64).unwrap();
+    assert_eq!(takes, clients as u64 * per_client);
+    assert!(tickets.get("enqueue").is_none(), "no queue traffic on the counter");
+    assert!(jobs.get("enqueue").and_then(Json::as_u64).unwrap() >= clients as u64 * per_client);
+    assert!(jobs.get("take").is_none(), "no counter traffic on the queue");
+    // Both objects expose their own (elastic) width and contention
+    // counters, sized by their own capacity.
+    let t_width = tickets.get("active_width").and_then(Json::as_u64).unwrap();
+    assert!((1..=2).contains(&t_width), "counter width {t_width}");
+    let j_width = jobs.get("active_width").and_then(Json::as_u64).unwrap();
+    assert!((1..=12).contains(&j_width), "queue index width {j_width}");
+    assert!(jobs.get("index_cells").and_then(Json::as_u64).unwrap() >= 2);
+    assert!(jobs.get("main_faas").and_then(Json::as_u64).unwrap() > 0);
+    let t_ops = tickets.get("batched_ops").and_then(Json::as_u64).unwrap();
+    let j_ops = jobs.get("batched_ops").and_then(Json::as_u64).unwrap();
+    assert!(t_ops > 0 && j_ops > 0, "both funnels saw traffic");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_is_prompt_under_concurrent_connects() {
+    // The old nudge-based shutdown could hang if its wake-up
+    // connection was consumed as a client; the polling accept loop
+    // must shut down promptly even while new clients keep arriving.
+    for _ in 0..5 {
+        let server = start(2);
+        let addr = server.addr.to_string();
+        let spam = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // Connections racing the stop flag; errors are fine.
+                for _ in 0..20 {
+                    let _ = std::net::TcpStream::connect(&addr);
+                }
+            })
+        };
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "shutdown took {:?}",
+            t0.elapsed()
+        );
+        spam.join().unwrap();
+    }
 }
 
 #[test]
