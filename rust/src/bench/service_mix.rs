@@ -1,14 +1,21 @@
-//! The `service-mix` scenario: full wire-path throughput of the
-//! registry service under mixed multi-object traffic.
+//! The `service-mix` and `service-shard` scenarios: full wire-path
+//! throughput of the registry service under mixed multi-object
+//! traffic.
 //!
-//! Unlike the simulated figure groups, this starts a *real* server
-//! per point (TCP, JSON lines, tid leasing, resize controller) with
-//! two hot objects — the default ticket counter and a `jobs` queue —
-//! and drives it with native client threads that interleave `take`,
-//! `enqueue` and `dequeue`. One series per queue index backend
-//! (`lcrq+hw`, `lcrq+aggfunnel`, `lcrq+elastic`) shows what the
-//! paper's §4.5 result looks like through the whole deployable stack
-//! rather than on bare queue objects.
+//! Unlike the simulated figure groups, these start a *real* server
+//! per point (TCP, JSON lines, tid leasing, resize controller) and
+//! drive it with native client threads.
+//!
+//! * `service-mix`: two hot objects — the default ticket counter and
+//!   a `jobs` queue — with one series per queue index backend
+//!   (`lcrq+hw`, `lcrq+aggfunnel`, `lcrq+elastic`): the paper's §4.5
+//!   result through the whole deployable stack rather than on bare
+//!   queue objects.
+//! * `service-shard`: the same mixed counter+queue workload spread
+//!   over several named objects, swept across 1/2/4 registry shards —
+//!   one series per shard count. Clients route with the `shardmap`
+//!   line, so a shard is an independent contention domain end to end
+//!   (own accept loop, lease pool, registry, controller).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -18,11 +25,11 @@ use anyhow::{Context, Result};
 
 use super::Row;
 use crate::config::ObjectManifest;
-use crate::service::{serve, ServeOpts, TicketClient};
+use crate::service::{serve, ServeOpts, ServerHandle, TicketClient};
 use crate::util::json::Json;
 use crate::util::stats::mops;
 
-/// The index backends the scenario compares.
+/// The index backends the `service-mix` scenario compares.
 pub const SERVICE_MIX_BACKENDS: [&str; 3] = ["lcrq+hw", "lcrq+aggfunnel", "lcrq+elastic"];
 
 /// Options for [`run_service_mix`].
@@ -47,79 +54,103 @@ impl ServiceMixOpts {
     }
 }
 
-/// Run the scenario: for every backend and client count, serve a
-/// counter + queue pair and measure end-to-end request throughput.
-/// Emits `sm1` (Mops/s over the wire) and `sm2` (the queue indices'
-/// average batch size — zero for non-batching backends).
+/// One client's unit of work in a wire-path scenario: issue a fixed
+/// burst of requests through `client`. `i` is the client index,
+/// `seq` a per-client item-sequence cursor. Returns the number of
+/// requests issued.
+type WireStep = fn(i: u64, client: &mut TicketClient, seq: &mut u64) -> Result<u64>;
+
+/// Shared wire-path driver: run `clients` native client threads, each
+/// looping `step` against the served address until `duration`
+/// elapses; join every worker before propagating any error and shut
+/// the server down on all paths (an early `?` would leak the
+/// accept/controller threads and the bound ports). A fresh connection
+/// then runs `probe` before shutdown. Returns `(mops, probe result)`.
+fn measure_wire_point(
+    server: ServerHandle,
+    clients: usize,
+    duration: Duration,
+    step: WireStep,
+    probe: fn(&mut TicketClient) -> Result<Json>,
+) -> Result<(f64, Json)> {
+    let addr = Arc::new(server.addr.to_string());
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..clients)
+        .map(|i| {
+            let addr = Arc::clone(&addr);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || -> Result<u64> {
+                let mut c = TicketClient::connect(&addr)?;
+                let mut ops = 0u64;
+                let mut seq = (i as u64) << 32;
+                while !stop.load(Ordering::Relaxed) {
+                    ops += step(i as u64, &mut c, &mut seq)?;
+                }
+                Ok(ops)
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    let mut client_err: Option<anyhow::Error> = None;
+    for w in workers {
+        match w.join() {
+            Ok(Ok(ops)) => total += ops,
+            Ok(Err(e)) => client_err = client_err.or(Some(e)),
+            Err(_) => {
+                client_err =
+                    client_err.or_else(|| Some(anyhow::anyhow!("client thread panicked")));
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    if let Some(e) = client_err {
+        server.shutdown();
+        return Err(e);
+    }
+    let probed = TicketClient::connect(&addr).and_then(|mut p| probe(&mut p));
+    server.shutdown();
+    Ok((mops(total, elapsed), probed?))
+}
+
+/// Run the `service-mix` scenario: for every backend and client
+/// count, serve a counter + queue pair and measure end-to-end request
+/// throughput. Emits `sm1` (Mops/s over the wire) and `sm2` (the
+/// queue indices' average batch size — zero for non-batching
+/// backends).
 pub fn run_service_mix(opts: &ServiceMixOpts) -> Result<Vec<Row>> {
+    fn step(_i: u64, c: &mut TicketClient, seq: &mut u64) -> Result<u64> {
+        c.take(1, false)?;
+        c.enqueue("jobs", *seq)?;
+        *seq += 1;
+        c.dequeue("jobs")?;
+        Ok(3)
+    }
+    fn probe(p: &mut TicketClient) -> Result<Json> {
+        p.stats_on("jobs")
+    }
     let mut rows = Vec::new();
     for backend in SERVICE_MIX_BACKENDS {
         for &clients in &opts.clients {
             let clients = clients.max(1);
             let server = serve(&ServeOpts {
                 resize_interval_ms: 10,
-                objects: vec![ObjectManifest {
-                    name: "jobs".into(),
-                    kind: "queue".into(),
-                    backend: backend.into(),
-                }],
+                objects: vec![ObjectManifest::new("jobs", "queue", backend)],
                 // One spare lease for the post-run stats probe.
                 ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
             })
             .with_context(|| format!("serving {backend} for {clients} clients"))?;
-            let addr = Arc::new(server.addr.to_string());
-            let stop = Arc::new(AtomicBool::new(false));
-            let workers: Vec<_> = (0..clients)
-                .map(|i| {
-                    let addr = Arc::clone(&addr);
-                    let stop = Arc::clone(&stop);
-                    std::thread::spawn(move || -> Result<u64> {
-                        let mut c = TicketClient::connect(&addr)?;
-                        let mut ops = 0u64;
-                        let mut seq = (i as u64) << 32;
-                        while !stop.load(Ordering::Relaxed) {
-                            c.take(1, false)?;
-                            c.enqueue("jobs", seq)?;
-                            seq += 1;
-                            c.dequeue("jobs")?;
-                            ops += 3;
-                        }
-                        Ok(ops)
-                    })
-                })
-                .collect();
-            let t0 = Instant::now();
-            std::thread::sleep(opts.duration);
-            stop.store(true, Ordering::Relaxed);
-            // Join every worker before propagating any error, and shut
-            // the server down on all paths — an early `?` here would
-            // leak the accept/controller threads and the bound port.
-            let mut total = 0u64;
-            let mut client_err: Option<anyhow::Error> = None;
-            for w in workers {
-                match w.join() {
-                    Ok(Ok(ops)) => total += ops,
-                    Ok(Err(e)) => client_err = client_err.or(Some(e)),
-                    Err(_) => {
-                        client_err =
-                            client_err.or_else(|| Some(anyhow::anyhow!("client thread panicked")));
-                    }
-                }
-            }
-            let elapsed = t0.elapsed().as_secs_f64();
-            if let Some(e) = client_err {
-                server.shutdown();
-                return Err(e.context(format!("{backend} with {clients} clients")));
-            }
-            let probe = TicketClient::connect(&addr).and_then(|mut p| p.stats_on("jobs"));
-            server.shutdown();
-            let avg_batch = probe?.get("avg_batch").and_then(Json::as_f64).unwrap_or(0.0);
+            let (throughput, jobs) = measure_wire_point(server, clients, opts.duration, step, probe)
+                .with_context(|| format!("{backend} with {clients} clients"))?;
+            let avg_batch = jobs.get("avg_batch").and_then(Json::as_f64).unwrap_or(0.0);
             rows.push(Row {
                 figure: "sm1",
                 series: backend.to_string(),
                 threads: clients,
                 metric: "mops",
-                value: mops(total, elapsed),
+                value: throughput,
             });
             rows.push(Row {
                 figure: "sm2",
@@ -127,6 +158,121 @@ pub fn run_service_mix(opts: &ServiceMixOpts) -> Result<Vec<Row>> {
                 threads: clients,
                 metric: "avg_batch",
                 value: avg_batch,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// The shard counts the `service-shard` scenario sweeps.
+pub const SERVICE_SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Options for [`run_service_shard`].
+#[derive(Clone, Debug)]
+pub struct ServiceShardOpts {
+    /// Registry shard counts to compare (one series each).
+    pub shards: Vec<usize>,
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for ServiceShardOpts {
+    fn default() -> Self {
+        Self {
+            shards: SERVICE_SHARD_COUNTS.to_vec(),
+            clients: vec![1, 2, 4, 8],
+            duration: Duration::from_millis(300),
+        }
+    }
+}
+
+impl ServiceShardOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self {
+            shards: SERVICE_SHARD_COUNTS.to_vec(),
+            clients: vec![2],
+            duration: Duration::from_millis(60),
+        }
+    }
+}
+
+/// The named objects the sharded mixed workload touches: two hot
+/// counters and two hot queues whose FNV-1a hashes land on four
+/// distinct shards at `shards = 4` and on both shards at
+/// `shards = 2` (pinned by `shard_mix_names_spread`), so adding
+/// shards genuinely spreads the namespace instead of reshuffling it
+/// onto one hot shard.
+pub const SHARD_MIX_COUNTERS: [&str; 2] = ["orders", "users"];
+pub const SHARD_MIX_QUEUES: [&str; 2] = ["jobs", "mail"];
+
+/// Run the `service-shard` scenario: for every shard count and client
+/// count, serve the mixed counter+queue object set and measure
+/// end-to-end request throughput through shard-routing clients.
+/// Emits `ss1` (Mops/s over the wire) and `ss2` (requests the serving
+/// shard had to forward — zero when clients route correctly).
+pub fn run_service_shard(opts: &ServiceShardOpts) -> Result<Vec<Row>> {
+    fn step(i: u64, c: &mut TicketClient, seq: &mut u64) -> Result<u64> {
+        let counter = SHARD_MIX_COUNTERS[i as usize % SHARD_MIX_COUNTERS.len()];
+        let queue = SHARD_MIX_QUEUES[i as usize % SHARD_MIX_QUEUES.len()];
+        c.take_on(counter, 1, false)?;
+        c.enqueue(queue, *seq)?;
+        *seq += 1;
+        c.dequeue(queue)?;
+        Ok(3)
+    }
+    fn probe(p: &mut TicketClient) -> Result<Json> {
+        p.cluster_stats()
+    }
+    let mut rows = Vec::new();
+    for &shards in &opts.shards {
+        let shards = shards.max(1);
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let mut objects: Vec<ObjectManifest> = SHARD_MIX_COUNTERS
+                .iter()
+                .map(|n| ObjectManifest::new(*n, "counter", "elastic:fixed:2"))
+                .collect();
+            objects.extend(
+                SHARD_MIX_QUEUES
+                    .iter()
+                    .map(|n| ObjectManifest::new(*n, "queue", "lcrq+elastic:fixed:2")),
+            );
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                objects,
+                // One spare lease per shard for the post-run probe.
+                ..ServeOpts::sharded("127.0.0.1:0", shards, clients + 1, 2)
+            })
+            .with_context(|| format!("serving {shards} shard(s) for {clients} clients"))?;
+            let (throughput, cluster) =
+                measure_wire_point(server, clients, opts.duration, step, probe)
+                    .with_context(|| format!("{shards} shard(s) with {clients} clients"))?;
+            let forwarded = cluster
+                .get("per_shard")
+                .and_then(Json::as_arr)
+                .map(|per| {
+                    per.iter()
+                        .filter_map(|s| s.get("forwarded").and_then(Json::as_u64))
+                        .sum::<u64>()
+                })
+                .unwrap_or(0);
+            let series = format!("shards-{shards}");
+            rows.push(Row {
+                figure: "ss1",
+                series: series.clone(),
+                threads: clients,
+                metric: "mops",
+                value: throughput,
+            });
+            rows.push(Row {
+                figure: "ss2",
+                series,
+                threads: clients,
+                metric: "forwarded",
+                value: forwarded as f64,
             });
         }
     }
@@ -150,5 +296,48 @@ mod tests {
             assert!(rows.iter().any(|r| r.figure == "sm2" && r.series == backend));
         }
         assert_eq!(rows.len(), 2 * SERVICE_MIX_BACKENDS.len());
+    }
+
+    #[test]
+    fn shard_mix_names_spread() {
+        // The whole point of the sweep is that more shards spread the
+        // namespace; pin the hash assignments so a rename cannot
+        // silently collapse the 2- or 4-shard series onto one shard.
+        use crate::service::shard_of;
+        let names: Vec<&str> =
+            SHARD_MIX_COUNTERS.iter().chain(SHARD_MIX_QUEUES.iter()).copied().collect();
+        for shards in [2usize, 4] {
+            let hit: std::collections::BTreeSet<usize> =
+                names.iter().map(|n| shard_of(n, shards)).collect();
+            assert_eq!(
+                hit.len(),
+                shards,
+                "object names {names:?} must cover all {shards} shards, got {hit:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_sweep_runs_end_to_end() {
+        let opts = ServiceShardOpts {
+            shards: vec![1, 2],
+            clients: vec![2],
+            duration: Duration::from_millis(40),
+        };
+        let rows = run_service_shard(&opts).unwrap();
+        for shards in [1usize, 2] {
+            let series = format!("shards-{shards}");
+            let ss1 = rows
+                .iter()
+                .find(|r| r.figure == "ss1" && r.series == series)
+                .unwrap_or_else(|| panic!("missing ss1/{series}"));
+            assert!(ss1.value > 0.0, "{series}: zero wire throughput");
+            let ss2 = rows
+                .iter()
+                .find(|r| r.figure == "ss2" && r.series == series)
+                .unwrap_or_else(|| panic!("missing ss2/{series}"));
+            assert_eq!(ss2.value, 0.0, "{series}: routed clients should never be forwarded");
+        }
+        assert_eq!(rows.len(), 4);
     }
 }

@@ -96,6 +96,7 @@ impl Default for BenchSettings {
 /// [objects.orders]
 /// kind = "counter"            # default kind
 /// backend = "elastic:aimd"    # default counter backend
+/// direct_quota = 2            # §4.4 d: max concurrent Fetch&AddDirect
 ///
 /// [objects.jobs]
 /// kind = "queue"
@@ -109,9 +110,16 @@ pub struct ObjectManifest {
     /// Backend spec — counters use the [`crate::faa::BackendSpec`]
     /// grammar, queues the [`crate::queue::make_queue`] grammar.
     pub backend: String,
+    /// §4.4 direct-thread quota `d` for counters (`None` = unlimited
+    /// direct; every `priority` request bypasses the funnel).
+    pub direct_quota: Option<usize>,
 }
 
 impl ObjectManifest {
+    /// A quota-less manifest (the common case and the PR 3 shape).
+    pub fn new(name: impl Into<String>, kind: impl Into<String>, backend: impl Into<String>) -> Self {
+        Self { name: name.into(), kind: kind.into(), backend: backend.into(), direct_quota: None }
+    }
     /// The backend spec an object kind defaults to when none is given
     /// (used for kind validation here and for defaulting at object
     /// creation); `None` for unknown kinds.
@@ -128,11 +136,16 @@ impl ObjectManifest {
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServiceSettings {
     pub addr: String,
-    /// Maximum concurrent client connections (the tid lease pool).
+    /// Number of independent registry shards. Shard `i` listens on
+    /// `addr`'s port + `i` (each shard picks its own ephemeral port
+    /// when the configured port is 0); object names route to shards
+    /// by FNV-1a hash. `1` (the default) is wire-compatible with the
+    /// pre-shard protocol.
+    pub shards: usize,
+    /// Maximum concurrent client connections *per shard* (each
+    /// shard's tid lease pool).
     pub workers: usize,
     pub aggregators: usize,
-    /// Worker slots reserved for priority requests (Fetch&AddDirect).
-    pub priority_workers: usize,
     /// Width policy for the elastic funnel: `fixed:<m>` (or a bare
     /// integer), `sqrtp`, or `aimd`.
     pub width_policy: String,
@@ -149,9 +162,9 @@ impl Default for ServiceSettings {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:7471".into(),
+            shards: 1,
             workers: 8,
             aggregators: 6,
-            priority_workers: 1,
             width_policy: "aimd".into(),
             max_aggregators: 12,
             resize_interval_ms: 25,
@@ -200,15 +213,18 @@ impl AppConfig {
 
         let sv = &mut self.service;
         sv.addr = doc.str_or("service.addr", &sv.addr);
-        sv.workers = doc.int_or("service.workers", sv.workers as i64) as usize;
-        sv.aggregators = doc.int_or("service.aggregators", sv.aggregators as i64) as usize;
-        sv.priority_workers =
-            doc.int_or("service.priority_workers", sv.priority_workers as i64) as usize;
+        // Clamp on the i64 before the cast: a negative value must
+        // floor to 1, not wrap to a huge count (the service multiplies
+        // `shards * workers` to size funnel thread tables).
+        sv.shards = doc.int_or("service.shards", sv.shards as i64).max(1) as usize;
+        sv.workers = doc.int_or("service.workers", sv.workers as i64).max(1) as usize;
+        sv.aggregators =
+            doc.int_or("service.aggregators", sv.aggregators as i64).max(1) as usize;
         sv.width_policy = doc.str_or("service.width_policy", &sv.width_policy);
         sv.max_aggregators =
-            doc.int_or("service.max_aggregators", sv.max_aggregators as i64) as usize;
+            doc.int_or("service.max_aggregators", sv.max_aggregators as i64).max(1) as usize;
         sv.resize_interval_ms =
-            doc.int_or("service.resize_interval_ms", sv.resize_interval_ms as i64) as u64;
+            doc.int_or("service.resize_interval_ms", sv.resize_interval_ms as i64).max(0) as u64;
 
         // `[objects.<name>]` manifest sections; later layers override
         // per name, fields merge within a name.
@@ -219,17 +235,33 @@ impl AppConfig {
             let (name, field) = rest.split_once('.').ok_or_else(|| {
                 anyhow!("object manifests need `objects.<name>.<field>`, got {key:?}")
             })?;
-            let entry = objects.entry(name.to_string()).or_insert_with(|| ObjectManifest {
-                name: name.to_string(),
-                kind: "counter".into(),
-                backend: String::new(),
-            });
-            let text = value
-                .as_str()
-                .ok_or_else(|| anyhow!("{key}: manifest fields are strings"))?;
+            let entry = objects
+                .entry(name.to_string())
+                .or_insert_with(|| ObjectManifest::new(name, "counter", ""));
             match field {
-                "kind" => entry.kind = text.to_string(),
-                "backend" => entry.backend = text.to_string(),
+                "kind" => {
+                    entry.kind = value
+                        .as_str()
+                        .ok_or_else(|| anyhow!("{key}: kind must be a string"))?
+                        .to_string();
+                }
+                "backend" => {
+                    entry.backend = value
+                        .as_str()
+                        .ok_or_else(|| anyhow!("{key}: backend must be a string"))?
+                        .to_string();
+                }
+                "direct_quota" => {
+                    // Accept an integer or an integer-valued string.
+                    let d = value
+                        .as_int()
+                        .or_else(|| value.as_str().and_then(|s| s.trim().parse().ok()))
+                        .filter(|d| *d >= 0)
+                        .ok_or_else(|| {
+                            anyhow!("{key}: direct_quota must be a non-negative integer")
+                        })?;
+                    entry.direct_quota = Some(d as usize);
+                }
                 other => return Err(anyhow!("unknown object field {other:?} in {key:?}")),
             }
         }
@@ -362,6 +394,44 @@ mod tests {
         let jobs = c.service.objects.iter().find(|o| o.name == "jobs").unwrap();
         assert_eq!(jobs.kind, "counter");
         assert_eq!(jobs.backend, "");
+    }
+
+    #[test]
+    fn shards_setting_applies_and_clamps() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.service.shards, 1, "default is the unsharded wire protocol");
+        let doc = TomlDoc::parse("[service]\nshards = 4").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.shards, 4);
+        let doc = TomlDoc::parse("[service]\nshards = 0").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.shards, 1, "clamped to at least one shard");
+        let doc = TomlDoc::parse("[service]\nshards = -3").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.shards, 1, "negative values clamp, not wrap");
+    }
+
+    #[test]
+    fn direct_quota_manifest_field_parses() {
+        let mut c = AppConfig::default();
+        let doc = TomlDoc::parse(
+            r#"
+            [objects.orders]
+            kind = "counter"
+            direct_quota = 2
+            [objects.vip]
+            kind = "counter"
+            direct_quota = "1"
+            "#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        let orders = c.service.objects.iter().find(|o| o.name == "orders").unwrap();
+        assert_eq!(orders.direct_quota, Some(2));
+        let vip = c.service.objects.iter().find(|o| o.name == "vip").unwrap();
+        assert_eq!(vip.direct_quota, Some(1), "integer-valued strings accepted");
+        let doc = TomlDoc::parse("[objects.orders]\ndirect_quota = \"lots\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "non-integer quota rejected");
     }
 
     #[test]

@@ -16,7 +16,22 @@
 //! `elastic:fixed:4`, `elastic:sqrtp` and `elastic:aimd` all work.
 //! Queue index backends compose this grammar with a queue family
 //! (`lcrq+elastic:aimd` — see [`crate::queue::make_queue`]).
+//!
+//! Funnelled specs (`aggfunnel`, `elastic`) accept an optional
+//! trailing `:d<k>` segment — the §4.4 **direct quota**: at most `k`
+//! callers may ride `Fetch&AddDirect` concurrently; callers beyond
+//! the quota are demoted to the funnelled path. `aggfunnel:4:d2` and
+//! `elastic:aimd:d1` parse; without the segment the quota is
+//! unlimited (every priority request goes direct, the pre-quota
+//! behaviour). [`BackendSpec::build`] enforces the quota with a
+//! [`DirectQuota`] gate, and the registry service gates per object
+//! with the same [`DirectPermits`], so the suffix means one thing
+//! everywhere. The paper's AGGFUNNEL-(m,d) *designated-thread*
+//! variant (threads `tid < d` bypass the funnel on plain
+//! `fetch_add`) is a separate mechanism, configured via
+//! [`AggFunnelConfig::with_direct_threads`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::aggfunnel::{AggFunnel, AggFunnelConfig};
@@ -24,7 +39,7 @@ use super::combfunnel::CombiningFunnel;
 use super::elastic::{ElasticAggFunnel, ElasticConfig};
 use super::hardware::HardwareFaa;
 use super::width::WidthPolicy;
-use super::FetchAddObject;
+use super::{BatchStats, FetchAddObject};
 
 /// Default Aggregator count (the paper's `m = 6`).
 pub const DEFAULT_AGGREGATORS: usize = 6;
@@ -36,36 +51,48 @@ pub const DEFAULT_MAX_WIDTH: usize = 12;
 pub enum BackendSpec {
     /// Hardware F&A (one atomic word).
     Hw,
-    /// Static Aggregating Funnel with `m` Aggregators per sign.
-    Agg { m: usize },
+    /// Static Aggregating Funnel with `m` Aggregators per sign and an
+    /// optional §4.4 direct-thread quota (`None` = unlimited).
+    Agg { m: usize, direct: Option<usize> },
     /// Combining Funnels baseline.
     Comb,
-    /// Elastic Aggregating Funnel under a width policy.
-    Elastic { policy: WidthPolicy, max_width: usize },
+    /// Elastic Aggregating Funnel under a width policy, with an
+    /// optional §4.4 direct-thread quota (`None` = unlimited).
+    Elastic { policy: WidthPolicy, max_width: usize, direct: Option<usize> },
 }
 
 impl BackendSpec {
     /// Parse a backend-spec string; `None` on unknown spellings.
     pub fn parse(s: &str) -> Option<BackendSpec> {
-        let s = s.trim();
+        let (s, direct) = split_direct_quota(s.trim());
         let (head, param) = match s.split_once(':') {
             Some((h, p)) => (h, Some(p)),
             None => (s, None),
         };
-        match (head, param) {
+        let spec = match (head, param) {
             ("hw", None) => Some(BackendSpec::Hw),
-            ("aggfunnel", None) => Some(BackendSpec::Agg { m: DEFAULT_AGGREGATORS }),
+            ("aggfunnel", None) => Some(BackendSpec::Agg { m: DEFAULT_AGGREGATORS, direct }),
             ("aggfunnel", Some(m)) => {
-                m.trim().parse().ok().map(|m: usize| BackendSpec::Agg { m: m.max(1) })
+                m.trim().parse().ok().map(|m: usize| BackendSpec::Agg { m: m.max(1), direct })
             }
             ("combfunnel", None) => Some(BackendSpec::Comb),
             ("elastic", None) => Some(BackendSpec::Elastic {
                 policy: WidthPolicy::Aimd(Default::default()),
                 max_width: DEFAULT_MAX_WIDTH,
+                direct,
             }),
-            ("elastic", Some(p)) => WidthPolicy::parse(p)
-                .map(|policy| BackendSpec::Elastic { policy, max_width: DEFAULT_MAX_WIDTH }),
+            ("elastic", Some(p)) => WidthPolicy::parse(p).map(|policy| BackendSpec::Elastic {
+                policy,
+                max_width: DEFAULT_MAX_WIDTH,
+                direct,
+            }),
             _ => None,
+        };
+        // `:d<k>` on a quota-less backend is a parse error, not a
+        // silently dropped parameter.
+        match spec {
+            Some(BackendSpec::Hw | BackendSpec::Comb) if direct.is_some() => None,
+            other => other,
         }
     }
 
@@ -77,30 +104,77 @@ impl BackendSpec {
         self
     }
 
-    /// Canonical spelling, usable as a series label and re-parseable.
-    pub fn label(&self) -> String {
+    /// Set the §4.4 direct-thread quota (no-op for `hw`/`combfunnel`,
+    /// which have no funnel to bypass).
+    pub fn with_direct_quota(mut self, d: usize) -> Self {
+        match &mut self {
+            BackendSpec::Agg { direct, .. } | BackendSpec::Elastic { direct, .. } => {
+                *direct = Some(d);
+            }
+            BackendSpec::Hw | BackendSpec::Comb => {}
+        }
+        self
+    }
+
+    /// The §4.4 direct-thread quota: `Some(d)` when configured,
+    /// `None` for unlimited (or for backends with no funnel).
+    pub fn direct_quota(&self) -> Option<usize> {
         match self {
-            BackendSpec::Hw => "hw".into(),
-            BackendSpec::Agg { m } => format!("aggfunnel:{m}"),
-            BackendSpec::Comb => "combfunnel".into(),
-            BackendSpec::Elastic { policy, .. } => match policy {
-                WidthPolicy::Fixed(m) => format!("elastic:fixed:{m}"),
-                WidthPolicy::SqrtP => "elastic:sqrtp".into(),
-                WidthPolicy::Aimd(_) => "elastic:aimd".into(),
-            },
+            BackendSpec::Agg { direct, .. } | BackendSpec::Elastic { direct, .. } => *direct,
+            BackendSpec::Hw | BackendSpec::Comb => None,
         }
     }
 
-    /// Build the fetch-and-add object this spec describes.
+    /// Canonical spelling, usable as a series label and re-parseable.
+    pub fn label(&self) -> String {
+        let mut label = match self {
+            BackendSpec::Hw => "hw".to_string(),
+            BackendSpec::Agg { m, .. } => format!("aggfunnel:{m}"),
+            BackendSpec::Comb => "combfunnel".to_string(),
+            BackendSpec::Elastic { policy, .. } => match policy {
+                WidthPolicy::Fixed(m) => format!("elastic:fixed:{m}"),
+                WidthPolicy::SqrtP => "elastic:sqrtp".to_string(),
+                WidthPolicy::Aimd(_) => "elastic:aimd".to_string(),
+            },
+        };
+        if let Some(d) = self.direct_quota() {
+            label.push_str(&format!(":d{d}"));
+        }
+        label
+    }
+
+    /// Build the fetch-and-add object this spec describes. A `:d<k>`
+    /// direct quota wraps the funnel in a [`DirectQuota`] gate — at
+    /// most `k` concurrent `fetch_add_direct` callers ride `Main`,
+    /// the rest demoted to the funnel — so the quota is enforced for
+    /// standalone builds exactly as the registry service enforces it
+    /// per object, with the same semantics for `aggfunnel` and
+    /// `elastic`. (The paper's AGGFUNNEL-(m,d) *designated-thread*
+    /// construction — plain `fetch_add` of threads `tid < d` going
+    /// straight to `Main`, with no concurrency gate — is a different
+    /// mechanism and stays available programmatically via
+    /// [`AggFunnelConfig::with_direct_threads`]; composing both in
+    /// one object would double the number of callers allowed on
+    /// `Main`.)
     pub fn build(&self, max_threads: usize) -> Arc<dyn FetchAddObject> {
         match self {
             BackendSpec::Hw => Arc::new(HardwareFaa::new(max_threads)),
-            BackendSpec::Agg { m } => Arc::new(AggFunnel::with_config(
-                AggFunnelConfig::new(max_threads).with_aggregators(*m),
-            )),
+            BackendSpec::Agg { m, direct } => {
+                let funnel = AggFunnel::with_config(
+                    AggFunnelConfig::new(max_threads).with_aggregators(*m),
+                );
+                match direct {
+                    Some(d) => Arc::new(DirectQuota::new(funnel, *d)),
+                    None => Arc::new(funnel),
+                }
+            }
             BackendSpec::Comb => Arc::new(CombiningFunnel::new(max_threads)),
-            BackendSpec::Elastic { policy, max_width } => {
-                Arc::new(self::build_elastic(max_threads, *policy, *max_width))
+            BackendSpec::Elastic { policy, max_width, direct } => {
+                let funnel = self::build_elastic(max_threads, *policy, *max_width);
+                match direct {
+                    Some(d) => Arc::new(DirectQuota::new(funnel, *d)),
+                    None => Arc::new(funnel),
+                }
             }
         }
     }
@@ -112,10 +186,124 @@ impl BackendSpec {
     /// object type. `Hw`/`Comb` have no funnel width — `None`.
     pub fn counter_policy(&self) -> Option<(WidthPolicy, usize)> {
         match self {
-            BackendSpec::Agg { m } => Some((WidthPolicy::Fixed(*m), (*m).max(1) * 2)),
-            BackendSpec::Elastic { policy, max_width } => Some((*policy, *max_width)),
+            BackendSpec::Agg { m, .. } => Some((WidthPolicy::Fixed(*m), (*m).max(1) * 2)),
+            BackendSpec::Elastic { policy, max_width, .. } => Some((*policy, *max_width)),
             BackendSpec::Hw | BackendSpec::Comb => None,
         }
+    }
+}
+
+/// Split a trailing `:d<k>` direct-quota segment off a spec string.
+fn split_direct_quota(s: &str) -> (&str, Option<usize>) {
+    if let Some((head, tail)) = s.rsplit_once(":d") {
+        if !tail.is_empty() && tail.bytes().all(|b| b.is_ascii_digit()) {
+            if let Ok(d) = tail.parse() {
+                return (head, Some(d));
+            }
+        }
+    }
+    (s, None)
+}
+
+/// Permit counter for §4.4 direct access: at most `quota` concurrent
+/// holders. Acquisition is a CAS loop on one word — callers that
+/// lose the race are expected to fall back to the funnelled path,
+/// they never spin. Shared by [`DirectQuota`] and the registry
+/// service's per-object gate so the protocol exists exactly once.
+pub struct DirectPermits {
+    quota: usize,
+    in_flight: AtomicUsize,
+}
+
+impl DirectPermits {
+    pub fn new(quota: usize) -> Self {
+        Self { quota, in_flight: AtomicUsize::new(0) }
+    }
+
+    /// The configured quota `d`.
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    /// Try to claim one of the `quota` direct slots.
+    pub fn try_acquire(&self) -> bool {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.quota {
+                return false;
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return a slot claimed by [`DirectPermits::try_acquire`].
+    pub fn release(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// Enforces a §4.4 direct-thread quota around a funnelled object: at
+/// most `quota` callers ride `Fetch&AddDirect` on `Main`
+/// concurrently; excess callers are demoted to the funnelled
+/// `fetch_add` path (they never spin). Every other operation passes
+/// straight through.
+pub struct DirectQuota<T: FetchAddObject> {
+    inner: T,
+    permits: DirectPermits,
+}
+
+impl<T: FetchAddObject> DirectQuota<T> {
+    pub fn new(inner: T, quota: usize) -> Self {
+        Self { inner, permits: DirectPermits::new(quota) }
+    }
+}
+
+impl<T: FetchAddObject> FetchAddObject for DirectQuota<T> {
+    #[inline]
+    fn fetch_add(&self, tid: usize, delta: i64) -> u64 {
+        self.inner.fetch_add(tid, delta)
+    }
+
+    #[inline]
+    fn read(&self, tid: usize) -> u64 {
+        self.inner.read(tid)
+    }
+
+    fn fetch_add_direct(&self, tid: usize, delta: i64) -> u64 {
+        if !self.permits.try_acquire() {
+            // Quota exhausted: demote to the funnel instead of
+            // overloading `Main`.
+            return self.inner.fetch_add(tid, delta);
+        }
+        let v = self.inner.fetch_add_direct(tid, delta);
+        self.permits.release();
+        v
+    }
+
+    #[inline]
+    fn compare_and_swap(&self, tid: usize, old: u64, new: u64) -> u64 {
+        self.inner.compare_and_swap(tid, old, new)
+    }
+
+    #[inline]
+    fn fetch_or(&self, tid: usize, bits: u64) -> u64 {
+        self.inner.fetch_or(tid, bits)
+    }
+
+    fn max_threads(&self) -> usize {
+        self.inner.max_threads()
+    }
+
+    fn batch_stats(&self) -> BatchStats {
+        self.inner.batch_stats()
     }
 }
 
@@ -137,20 +325,38 @@ mod tests {
     #[test]
     fn parse_spellings() {
         assert_eq!(BackendSpec::parse("hw"), Some(BackendSpec::Hw));
-        assert_eq!(BackendSpec::parse("aggfunnel"), Some(BackendSpec::Agg { m: 6 }));
-        assert_eq!(BackendSpec::parse("aggfunnel:4"), Some(BackendSpec::Agg { m: 4 }));
+        assert_eq!(
+            BackendSpec::parse("aggfunnel"),
+            Some(BackendSpec::Agg { m: 6, direct: None })
+        );
+        assert_eq!(
+            BackendSpec::parse("aggfunnel:4"),
+            Some(BackendSpec::Agg { m: 4, direct: None })
+        );
         assert_eq!(BackendSpec::parse("combfunnel"), Some(BackendSpec::Comb));
         assert!(matches!(
             BackendSpec::parse("elastic"),
-            Some(BackendSpec::Elastic { policy: WidthPolicy::Aimd(_), max_width: 12 })
+            Some(BackendSpec::Elastic {
+                policy: WidthPolicy::Aimd(_),
+                max_width: 12,
+                direct: None
+            })
         ));
         assert_eq!(
             BackendSpec::parse("elastic:fixed:4"),
-            Some(BackendSpec::Elastic { policy: WidthPolicy::Fixed(4), max_width: 12 })
+            Some(BackendSpec::Elastic {
+                policy: WidthPolicy::Fixed(4),
+                max_width: 12,
+                direct: None
+            })
         );
         assert_eq!(
             BackendSpec::parse("elastic:sqrtp"),
-            Some(BackendSpec::Elastic { policy: WidthPolicy::SqrtP, max_width: 12 })
+            Some(BackendSpec::Elastic {
+                policy: WidthPolicy::SqrtP,
+                max_width: 12,
+                direct: None
+            })
         );
         assert_eq!(BackendSpec::parse("nope"), None);
         assert_eq!(BackendSpec::parse("elastic:bogus"), None);
@@ -158,16 +364,110 @@ mod tests {
     }
 
     #[test]
+    fn parse_direct_quota_segment() {
+        assert_eq!(
+            BackendSpec::parse("aggfunnel:4:d2"),
+            Some(BackendSpec::Agg { m: 4, direct: Some(2) })
+        );
+        assert_eq!(
+            BackendSpec::parse("aggfunnel:d1"),
+            Some(BackendSpec::Agg { m: 6, direct: Some(1) })
+        );
+        assert_eq!(
+            BackendSpec::parse("elastic:sqrtp:d0"),
+            Some(BackendSpec::Elastic {
+                policy: WidthPolicy::SqrtP,
+                max_width: 12,
+                direct: Some(0)
+            })
+        );
+        assert_eq!(
+            BackendSpec::parse("elastic:fixed:3:d2"),
+            Some(BackendSpec::Elastic {
+                policy: WidthPolicy::Fixed(3),
+                max_width: 12,
+                direct: Some(2)
+            })
+        );
+        assert!(matches!(
+            BackendSpec::parse("elastic:d2"),
+            Some(BackendSpec::Elastic { policy: WidthPolicy::Aimd(_), direct: Some(2), .. })
+        ));
+        // No funnel to bypass → no quota parameter.
+        assert_eq!(BackendSpec::parse("hw:d1"), None);
+        assert_eq!(BackendSpec::parse("combfunnel:d1"), None);
+        // Malformed quotas fail the whole spec.
+        assert_eq!(BackendSpec::parse("aggfunnel:4:d"), None);
+        assert_eq!(BackendSpec::parse("aggfunnel:4:dx"), None);
+    }
+
+    #[test]
     fn labels_reparse() {
         for spec in [
             BackendSpec::Hw,
-            BackendSpec::Agg { m: 4 },
+            BackendSpec::Agg { m: 4, direct: None },
+            BackendSpec::Agg { m: 4, direct: Some(2) },
             BackendSpec::Comb,
-            BackendSpec::Elastic { policy: WidthPolicy::SqrtP, max_width: 12 },
-            BackendSpec::Elastic { policy: WidthPolicy::Fixed(3), max_width: 12 },
+            BackendSpec::Elastic { policy: WidthPolicy::SqrtP, max_width: 12, direct: None },
+            BackendSpec::Elastic {
+                policy: WidthPolicy::Fixed(3),
+                max_width: 12,
+                direct: Some(1),
+            },
         ] {
             assert_eq!(BackendSpec::parse(&spec.label()), Some(spec), "{}", spec.label());
         }
+    }
+
+    #[test]
+    fn direct_quota_accessors() {
+        let spec = BackendSpec::parse("elastic:aimd").unwrap().with_direct_quota(2);
+        assert_eq!(spec.direct_quota(), Some(2));
+        assert_eq!(spec.label(), "elastic:aimd:d2");
+        assert_eq!(BackendSpec::Hw.with_direct_quota(2).direct_quota(), None);
+    }
+
+    #[test]
+    fn agg_build_gates_directs_like_elastic() {
+        // The `:d<k>` suffix means the same thing on every funnelled
+        // backend: a concurrency quota on explicit directs. Plain
+        // fetch_add is untouched and everything still counts.
+        let f = BackendSpec::parse("aggfunnel:2:d1").unwrap().build(2);
+        assert_eq!(f.fetch_add(0, 5), 0);
+        assert_eq!(f.fetch_add(1, 3), 5);
+        assert_eq!(f.fetch_add_direct(0, 2), 8);
+        assert_eq!(f.read(0), 10);
+        // Quota 0 demotes explicit directs to the funnel; the result
+        // is still linearizable.
+        let gated = BackendSpec::parse("aggfunnel:2:d0").unwrap().build(2);
+        assert_eq!(gated.fetch_add_direct(0, 7), 0);
+        assert_eq!(gated.read(1), 7);
+    }
+
+    #[test]
+    fn elastic_build_enforces_direct_quota() {
+        // Quota 0: fetch_add_direct demotes to the funnel, visible as
+        // a single-op batch (a true direct records no batch at all).
+        let gated = BackendSpec::parse("elastic:fixed:1:d0").unwrap().build(2);
+        assert_eq!(gated.fetch_add_direct(0, 5), 0);
+        assert_eq!(gated.read(1), 5);
+        let s = gated.batch_stats();
+        assert!(s.single_op_batches >= 1, "demoted direct must go through the funnel: {s:?}");
+
+        let open = BackendSpec::parse("elastic:fixed:1").unwrap().build(2);
+        assert_eq!(open.fetch_add_direct(0, 5), 0);
+        assert_eq!(
+            open.batch_stats().single_op_batches,
+            0,
+            "unlimited direct bypasses the funnel"
+        );
+
+        // A positive quota admits directs again.
+        let one = BackendSpec::parse("elastic:fixed:1:d1").unwrap().build(2);
+        assert_eq!(one.fetch_add_direct(0, 2), 0);
+        assert_eq!(one.fetch_add_direct(1, 3), 2);
+        assert_eq!(one.read(0), 5);
+        assert_eq!(one.batch_stats().single_op_batches, 0, "sequential directs fit quota 1");
     }
 
     #[test]
@@ -184,6 +484,11 @@ mod tests {
     fn counter_policy_mapping() {
         assert_eq!(
             BackendSpec::parse("aggfunnel:4").unwrap().counter_policy(),
+            Some((WidthPolicy::Fixed(4), 8))
+        );
+        // The quota is orthogonal to the width policy.
+        assert_eq!(
+            BackendSpec::parse("aggfunnel:4:d2").unwrap().counter_policy(),
             Some((WidthPolicy::Fixed(4), 8))
         );
         let (policy, w) = BackendSpec::parse("elastic:sqrtp").unwrap().counter_policy().unwrap();

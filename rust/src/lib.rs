@@ -27,8 +27,10 @@
 //! * [`runtime`] / [`verify`] — the PJRT runtime that loads the
 //!   AOT-compiled JAX/Pallas linearization oracle
 //!   (`artifacts/*.hlo.txt`) and the history verifier built on it.
-//! * [`service`] — a thread-pooled ticket-dispenser server whose hot
-//!   path is an Aggregating Funnel (the "deployable system" wrapper).
+//! * [`service`] — the sharded registry service: named counters and
+//!   funnel-backed queues spread over name-hash-routed shards, each
+//!   an independent contention domain (the "deployable system"
+//!   wrapper).
 //! * [`config`] / [`util`] — hand-rolled substrates (TOML-subset
 //!   config, CLI parsing, PRNG, stats, JSON, timing harness, property
 //!   testing). The build is fully offline; the only external

@@ -21,7 +21,9 @@ use aggfunnels::bench::figures::{run_group, SweepOpts, FIGURE_GROUPS};
 use aggfunnels::bench::native::{
     make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
 };
-use aggfunnels::bench::service_mix::{run_service_mix, ServiceMixOpts};
+use aggfunnels::bench::service_mix::{
+    run_service_mix, run_service_shard, ServiceMixOpts, ServiceShardOpts,
+};
 use aggfunnels::bench::{rows_to_json, rows_to_table, rows_to_tsv};
 use aggfunnels::config::AppConfig;
 use aggfunnels::faa::choose::sqrt_p_aggregators;
@@ -74,20 +76,20 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|mix|service-mix|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|service-shard|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
          verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
-         serve [--addr A] [--workers W] [--m M] [--policy P] [--max-m M] [--resize-ms T]\n  \
+         serve [--addr A] [--shards S] [--workers W] [--m M] [--policy P] [--max-m M] [--resize-ms T]\n  \
          take [--addr A] [--name O] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n  \
-         obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B]\n  \
+         obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B] [--direct-quota D] [--max-width W]\n  \
          enqueue --name O --item N [--addr A]\n  \
          dequeue --name O [--addr A]\n\n\
          FAA algos:  {FAA_ALGOS:?}\n\
          Queues:     {QUEUE_ALGOS:?}\n\
-         Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy]; queues compose as lcrq+<backend>\n\
+         Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy], each with an optional :d<k> direct quota; queues compose as lcrq+<backend>\n\
          Global: --config FILE applies configs/*.toml settings."
     );
 }
@@ -130,8 +132,9 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
         opts.seed = s;
     }
 
-    // `all` covers the simulated groups; `service-mix` starts real
-    // servers, so it only runs when named explicitly.
+    // `all` covers the simulated groups; `service-mix` and
+    // `service-shard` start real servers, so they only run when named
+    // explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -150,6 +153,16 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
                 mix.clients = opts.grid.clone();
             }
             ("service-mix".to_string(), run_service_mix(&mix)?)
+        } else if g == "service-shard" {
+            let mut sweep = if p.has_flag("quick") {
+                ServiceShardOpts::quick()
+            } else {
+                ServiceShardOpts::default()
+            };
+            if p.get("grid").is_some() {
+                sweep.clients = opts.grid.clone();
+            }
+            ("service-shard".to_string(), run_service_shard(&sweep)?)
         } else {
             let rows =
                 run_group(&g, &opts).ok_or_else(|| anyhow!("unknown figure group {g:?}"))?;
@@ -358,8 +371,9 @@ fn cmd_predict(args: Vec<String>) -> Result<()> {
 fn cmd_serve(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("aggfunnels serve", "run the registry service")
         .opt("config", None, "TOML config file ([objects] pre-creates named objects)")
-        .opt("addr", None, "listen address")
-        .opt("workers", None, "max concurrent client connections")
+        .opt("addr", None, "listen address (shard i binds port + i)")
+        .opt("shards", None, "independent registry shards (name-hash routed)")
+        .opt("workers", None, "max concurrent client connections per shard")
         .opt("m", None, "initial aggregators per sign (default counter)")
         .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
         .opt("max-m", None, "aggregator slot capacity per sign")
@@ -371,6 +385,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown width policy {policy_spec:?}"))?;
     let opts = ServeOpts {
         addr: p.get_or("addr", &cfg.service.addr).to_string(),
+        shards: p.parse_or("shards", cfg.service.shards),
         workers: p.parse_or("workers", cfg.service.workers),
         aggregators: p.parse_or("m", cfg.service.aggregators),
         policy,
@@ -380,8 +395,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     };
     let handle = serve(&opts)?;
     println!(
-        "registry service on {} ({} connection slots, policy {}, {} boot object(s)); Ctrl-C to stop",
+        "registry service on {} ({} shard(s) on ports {:?}, {} connection slots each, \
+         policy {}, {} boot object(s)); Ctrl-C to stop",
         handle.addr,
+        handle.shard_ports().len(),
+        handle.shard_ports(),
         opts.workers,
         opts.policy.label(),
         opts.objects.len() + 1,
@@ -425,7 +443,9 @@ fn cmd_obj(args: Vec<String>) -> Result<()> {
         .opt("addr", Some("127.0.0.1:7471"), "service address")
         .opt("name", None, "object name (create/delete)")
         .opt("kind", Some("counter"), "counter | queue")
-        .opt("backend", None, "backend spec (defaults per kind)");
+        .opt("backend", None, "backend spec (defaults per kind)")
+        .opt("max-width", None, "elastic slot capacity override")
+        .opt("direct-quota", None, "§4.4 d: max concurrent Fetch&AddDirect (counters)");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let verb = p.positional.first().map(String::as_str).unwrap_or("list");
     let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
@@ -440,7 +460,13 @@ fn cmd_obj(args: Vec<String>) -> Result<()> {
         "create" => {
             let name = p.get("name").ok_or_else(|| anyhow!("create needs --name"))?;
             let kind = p.get_or("kind", "counter");
-            client.create(name, kind, p.get_or("backend", ""))?;
+            client.create_with(
+                name,
+                kind,
+                p.get_or("backend", ""),
+                p.parse_as::<u64>("max-width"),
+                p.parse_as::<u64>("direct-quota"),
+            )?;
             println!("created {kind} {name:?}");
         }
         "delete" => {

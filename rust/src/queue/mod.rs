@@ -79,19 +79,26 @@ pub fn make_queue_with_handle(
         ("prq" | "lprq", None | Some("hw")) => Arc::new(Prq::new(max_threads, HwIndexFactory)),
         ("lcrq", index) => {
             let mut index_spec = BackendSpec::parse(index.unwrap_or("hw"))?;
+            // Ring indices have no priority path, so a `:d<k>`
+            // direct quota on the index spec would be silently
+            // inert; fail the spec instead (every entry point — CLI
+            // benches, registry, tests — then agrees it is invalid).
+            if index_spec.direct_quota().is_some() {
+                return None;
+            }
             if let Some(w) = max_width {
                 index_spec = index_spec.with_max_width(w);
             }
             match index_spec {
                 BackendSpec::Hw => Arc::new(Lcrq::new(max_threads, HwIndexFactory)),
-                BackendSpec::Agg { m } => Arc::new(Lcrq::new(
+                BackendSpec::Agg { m, .. } => Arc::new(Lcrq::new(
                     max_threads,
                     AggIndexFactory { max_threads, aggregators: m },
                 )),
                 BackendSpec::Comb => {
                     Arc::new(Lcrq::new(max_threads, CombIndexFactory { max_threads }))
                 }
-                BackendSpec::Elastic { policy, max_width } => {
+                BackendSpec::Elastic { policy, max_width, .. } => {
                     let factory = ElasticIndexFactory::with_policy(max_threads, policy, max_width);
                     handle = Some(factory.clone());
                     Arc::new(Lcrq::new(max_threads, factory))
@@ -238,6 +245,10 @@ mod tests {
         assert!(make_queue("nope", 2).is_none());
         assert!(make_queue("lcrq+nope", 2).is_none());
         assert!(make_queue("msq+hw", 2).is_none(), "msq takes no index backend");
+        // Ring indices have no priority path: a direct quota on the
+        // index spec is invalid, not silently inert.
+        assert!(make_queue("lcrq+elastic:aimd:d2", 2).is_none());
+        assert!(make_queue("lcrq+aggfunnel:4:d1", 2).is_none());
     }
 
     #[test]

@@ -1,21 +1,34 @@
 //! The registry service: a deployable wrapper around the library.
 //!
-//! A TCP server holding a concurrent [`Registry`] of **named
-//! objects** — elastic-funnel counters (monotonic ticket/sequence
-//! dispensers, the classic fetch-and-add application) and
-//! funnel-backed FIFO queues (LCRQ/PRQ/MSQ, with `lcrq+elastic`
-//! queues riding resizable funnel ring indices). One resize
-//! controller thread walks *all* registered objects, applying each
-//! object's [`WidthPolicy`] to its live contention window; `stats`
-//! reports independent per-object width and contention counters, and
-//! `resize`/`policy` reconfigure any single object at runtime.
+//! A TCP server holding **named objects** — elastic-funnel counters
+//! (monotonic ticket/sequence dispensers, the classic fetch-and-add
+//! application) and funnel-backed FIFO queues (LCRQ/PRQ/MSQ, with
+//! `lcrq+elastic` queues riding resizable funnel ring indices) —
+//! spread across `S` independent [`Shard`]s. Each shard owns its own
+//! [`Registry`], listener port, `workers`-sized tid-lease pool,
+//! metrics, and resize-controller thread; object names route to
+//! shards by FNV-1a hash ([`shard_of`]), so unrelated objects never
+//! share an accept loop, a lock domain, or a cache line's worth of
+//! registry state. This module is the thin router on top: it owns the
+//! shard map, fans `list` and aggregate `stats` out across shards,
+//! and forwards mis-routed single-object ops to the owning shard
+//! in-process.
 //!
-//! Each accepted connection leases a funnel thread id for its
-//! lifetime; when all `workers` slots are leased, further connections
-//! are rejected with an error line instead of breaching the funnels'
-//! thread bound. Requests flagged `priority` use `Fetch&AddDirect`
-//! (§4.4), giving latency-critical callers the fast path without
-//! hurting others.
+//! On connect, a sharded server (S > 1) pushes one `shardmap` line
+//! (shard count, hash scheme, per-shard ports) so clients route
+//! follow-up requests straight to the owning shard's port — the hot
+//! path never crosses a shard boundary. `shards = 1` servers send no
+//! greeting and stay line-for-line wire-compatible with the pre-shard
+//! protocol; un-named ops still route to the boot counter `tickets`.
+//!
+//! Each accepted connection leases a funnel thread id from its
+//! shard's pool for its lifetime; when all `workers` slots are
+//! leased, further connections on that shard are rejected with an
+//! error line instead of breaching the funnels' thread bounds.
+//! Requests flagged `priority` use `Fetch&AddDirect` (§4.4) subject
+//! to the object's configurable direct-thread quota `d`: at most `d`
+//! priority callers ride `Main` concurrently, the rest are demoted to
+//! the funnel.
 //!
 //! Wire protocol: one JSON object per line. `name` defaults to the
 //! boot counter `"tickets"`; items must be integers below 2⁵³ (JSON
@@ -25,11 +38,14 @@
 //! → {"op":"take","count":3}                    ← {"ok":true,"start":17,"count":3}
 //! → {"op":"take","count":1,"priority":true}
 //! → {"op":"read"}                              ← {"ok":true,"value":20}
+//! → {"op":"shardmap"}                          ← {"ok":true,"shardmap":true,"shards":4,"hash":"fnv1a64","base_port":7471,"ports":[...]}
 //! → {"op":"create","name":"jobs","kind":"queue","backend":"lcrq+elastic"}
+//! → {"op":"create","name":"vip","kind":"counter","direct_quota":2}
 //! → {"op":"enqueue","name":"jobs","item":7}    ← {"ok":true}
 //! → {"op":"dequeue","name":"jobs"}             ← {"ok":true,"item":7}
-//! → {"op":"list"}                              ← {"ok":true,"count":2,"objects":[...]}
+//! → {"op":"list"}                              ← {"ok":true,"count":2,"objects":[...]}   (all shards, sorted)
 //! → {"op":"stats","name":"jobs"}               ← {"ok":true,...counters...}
+//! → {"op":"stats","name":"*"}                  ← {"ok":true,"scope":"cluster",...}       (all shards, merged)
 //! → {"op":"resize","width":4}                  ← {"ok":true,"width":4,"previous":6}
 //! → {"op":"policy","policy":"aimd"}            ← {"ok":true,"policy":"aimd","width":1}
 //! → {"op":"delete","name":"jobs"}              ← {"ok":true,"deleted":"jobs"}
@@ -37,7 +53,9 @@
 
 pub mod metrics;
 pub mod registry;
+pub mod shard;
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -46,69 +64,86 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::ObjectManifest;
-use crate::faa::WidthPolicy;
+use crate::faa::{BatchStats, WidthPolicy};
 use crate::util::json::Json;
-use metrics::Metrics;
-pub use registry::{ObjectEntry, Registry, DEFAULT_OBJECT};
+pub use registry::{CreateOpts, ObjectEntry, Registry, DEFAULT_OBJECT};
+pub use shard::{fnv1a64, shard_of, Shard, SHARD_HASH_SCHEME};
 
-/// The funnel thread-id lease pool: one id per concurrent connection.
-/// Ids are `1..=capacity`; id 0 is reserved for in-process callers
-/// (boot, benchmarks embedding the server).
-struct TidLease {
-    free: Mutex<Vec<usize>>,
-    capacity: usize,
-}
-
-impl TidLease {
-    fn new(capacity: usize) -> Self {
-        Self { free: Mutex::new((1..=capacity).rev().collect()), capacity }
-    }
-
-    fn lease(&self) -> Option<usize> {
-        self.free.lock().unwrap().pop()
-    }
-
-    fn release(&self, tid: usize) {
-        debug_assert!(tid >= 1 && tid <= self.capacity);
-        self.free.lock().unwrap().push(tid);
-    }
-}
-
-/// Returns a leased tid to the pool when dropped — including when the
-/// connection handler panics, so a crashed handler cannot permanently
-/// shrink the server's connection capacity.
-struct LeaseGuard {
-    state: Arc<ServerState>,
-    tid: usize,
-}
-
-impl Drop for LeaseGuard {
-    fn drop(&mut self) {
-        self.state.tids.release(self.tid);
-    }
-}
-
-/// Shared server state.
-struct ServerState {
-    registry: Registry,
-    /// Server-level counters (connections, rejections, requests);
-    /// per-object traffic lives on each [`ObjectEntry`].
-    metrics: Metrics,
+/// Shared server state: the shard set plus the stop flag. The shards
+/// live in one process, so cross-shard operations (`list`, aggregate
+/// `stats`, forwarding a mis-routed op) are plain in-process walks —
+/// no internal RPC.
+pub(crate) struct ServerState {
+    shards: Vec<Shard>,
     stop: AtomicBool,
-    tids: TidLease,
+}
+
+impl ServerState {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// The shard that owns `name` under the advertised hash scheme.
+    fn shard_for(&self, name: &str) -> &Shard {
+        &self.shards[shard_of(name, self.shards.len())]
+    }
+
+    /// Resolve the owning shard for a request received on shard
+    /// `via`. A legacy or mis-routed client is served anyway — the
+    /// handler walks over to the owning shard in-process (tid ranges
+    /// are disjoint across shards, so this is safe) — but the hop is
+    /// counted: a hot `forwarded` counter means the client is not
+    /// using the shard map.
+    fn route(&self, via: usize, name: &str) -> &Shard {
+        let owner = self.shard_for(name);
+        if owner.index != via {
+            self.shards[via].metrics.incr("forwarded");
+        }
+        owner
+    }
+
+    /// The `shardmap` document: shard count, hash scheme and the
+    /// per-shard port layout (`base_port` is `ports[0]`; with an
+    /// explicit configured port the layout is `base_port + i`, with
+    /// port 0 each shard binds its own ephemeral port, so `ports` is
+    /// authoritative).
+    fn shardmap_json(&self, via: usize, greeting: bool) -> Json {
+        let ports: Vec<Json> = self.shards.iter().map(|s| Json::num(s.port as f64)).collect();
+        let mut pairs = vec![
+            ("ok", Json::Bool(true)),
+            ("shardmap", Json::Bool(true)),
+            ("shard", Json::num(via as f64)),
+            ("shards", Json::num(self.shards.len() as f64)),
+            ("hash", Json::str(SHARD_HASH_SCHEME)),
+            ("base_port", Json::num(self.shards[0].port as f64)),
+            ("ports", Json::Arr(ports)),
+        ];
+        if greeting {
+            pairs.push(("greeting", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
 }
 
 /// Handle used to control a running server.
 pub struct ServerHandle {
+    /// Shard 0's address (the `base_port` of the shard map; the only
+    /// address for `shards = 1`).
     pub addr: std::net::SocketAddr,
+    ports: Vec<u16>,
     state: Arc<ServerState>,
     threads: Vec<std::thread::JoinHandle<()>>,
     conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
-    /// Request shutdown and join all workers. The accept loop polls a
-    /// non-blocking listener and connection handlers use bounded
+    /// The per-shard port layout (length = shard count).
+    pub fn shard_ports(&self) -> &[u16] {
+        &self.ports
+    }
+
+    /// Request shutdown and join all workers. The accept loops poll
+    /// non-blocking listeners and connection handlers use bounded
     /// reads, so no wake-up connection is needed — shutdown cannot be
     /// raced by a nudge landing on the wrong thread.
     pub fn shutdown(mut self) {
@@ -116,8 +151,8 @@ impl ServerHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        // The accept loop has exited, so no new connection threads can
-        // appear; drain the ones still running.
+        // The accept loops have exited, so no new connection threads
+        // can appear; drain the ones still running.
         let conns: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
         for t in conns {
             let _ = t.join();
@@ -128,9 +163,16 @@ impl ServerHandle {
 /// Configuration for [`serve`].
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
+    /// Shard 0's listen address. With an explicit port `p`, shard `i`
+    /// binds `p + i`; with port 0 every shard binds its own ephemeral
+    /// port (the `shardmap` line carries the actual layout).
     pub addr: String,
-    /// Maximum concurrent client connections (the tid lease pool);
-    /// connections beyond it are rejected with an error line.
+    /// Number of independent registry shards (1 = the pre-shard wire
+    /// protocol, no greeting).
+    pub shards: usize,
+    /// Maximum concurrent client connections *per shard* (each
+    /// shard's tid lease pool); connections beyond it are rejected
+    /// with an error line.
     pub workers: usize,
     /// Initial active width per sign for the default counter.
     pub aggregators: usize,
@@ -140,9 +182,11 @@ pub struct ServeOpts {
     /// default counter.
     pub max_aggregators: usize,
     /// Controller poll period in milliseconds (0 disables the
-    /// controller thread; `resize`/`policy` ops still work).
+    /// per-shard controller threads; `resize`/`policy` ops still
+    /// work).
     pub resize_interval_ms: u64,
-    /// Objects pre-created at boot besides the default counter.
+    /// Objects pre-created at boot besides the default counter, each
+    /// assigned to its owning shard by name hash.
     pub objects: Vec<ObjectManifest>,
 }
 
@@ -151,6 +195,7 @@ impl Default for ServeOpts {
         let s = crate::config::ServiceSettings::default();
         Self {
             addr: s.addr,
+            shards: s.shards,
             workers: s.workers,
             aggregators: s.aggregators,
             policy: WidthPolicy::parse(&s.width_policy)
@@ -163,11 +208,12 @@ impl Default for ServeOpts {
 }
 
 impl ServeOpts {
-    /// Old-style fixed-width options (no adaptive resizing): the
-    /// default counter stays at `aggregators` wide.
+    /// Old-style fixed-width options (no adaptive resizing, single
+    /// shard): the default counter stays at `aggregators` wide.
     pub fn fixed(addr: &str, workers: usize, aggregators: usize) -> Self {
         Self {
             addr: addr.into(),
+            shards: 1,
             workers,
             aggregators,
             policy: WidthPolicy::Fixed(aggregators),
@@ -176,173 +222,123 @@ impl ServeOpts {
             objects: Vec::new(),
         }
     }
+
+    /// `fixed`, with `shards` independent shards.
+    pub fn sharded(addr: &str, shards: usize, workers: usize, aggregators: usize) -> Self {
+        Self { shards: shards.max(1), ..Self::fixed(addr, workers, aggregators) }
+    }
 }
 
 /// Start the registry service; returns immediately with a handle.
 pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
-    let listener = TcpListener::bind(&opts.addr)
-        .with_context(|| format!("binding {}", opts.addr))?;
-    listener.set_nonblocking(true)?;
-    let addr = listener.local_addr()?;
-
-    // Every object is built for `workers + 1` thread ids: one per
-    // leased connection, plus the reserved in-process tid 0.
+    let shard_count = opts.shards.max(1);
     let workers = opts.workers.max(1);
-    let registry = Registry::new(workers + 1);
-    let _ = registry.create_counter(
-        DEFAULT_OBJECT,
-        opts.policy,
-        opts.max_aggregators.max(opts.aggregators),
-        Some(opts.aggregators),
-    )?;
+    let (host, base_port) = split_host_port(&opts.addr)?;
+
+    // Bind every shard's listener up front so a port collision fails
+    // the whole boot instead of leaving a half-listening server.
+    let mut listeners = Vec::with_capacity(shard_count);
+    for i in 0..shard_count {
+        let bind = if base_port == 0 {
+            format!("{host}:0")
+        } else {
+            // The documented layout is `base_port + i`; refuse a
+            // layout that would run off the end of the port space
+            // instead of wrapping into ephemeral binds.
+            let port = u32::from(base_port) + i as u32;
+            let port = u16::try_from(port).map_err(|_| {
+                anyhow!("shard {i} port {port} exceeds 65535 (base {base_port}, {shard_count} shards)")
+            })?;
+            format!("{host}:{port}")
+        };
+        let listener =
+            TcpListener::bind(&bind).with_context(|| format!("binding shard {i} on {bind}"))?;
+        listener.set_nonblocking(true)?;
+        listeners.push(listener);
+    }
+    let addr = listeners[0].local_addr()?;
+
+    // Every object is built for `shards * workers + 1` thread ids:
+    // one per leased connection on any shard (leases map to disjoint
+    // global tid ranges, see `Shard::global_tid`), plus the reserved
+    // in-process tid 0. This is what makes in-process forwarding of a
+    // mis-routed op safe.
+    let max_threads = shard_count * workers + 1;
+    let mut shards = Vec::with_capacity(shard_count);
+    for (i, listener) in listeners.iter().enumerate() {
+        shards.push(Shard::new(
+            i,
+            listener.local_addr()?.port(),
+            Registry::new(max_threads),
+            workers,
+        ));
+    }
+    let state = Arc::new(ServerState { shards, stop: AtomicBool::new(false) });
+
+    // Boot objects land on their owning shards: the default counter
+    // by the hash of its well-known name, manifest objects likewise.
+    state
+        .shard_for(DEFAULT_OBJECT)
+        .registry
+        .create_counter(
+            DEFAULT_OBJECT,
+            opts.policy,
+            opts.max_aggregators.max(opts.aggregators),
+            Some(opts.aggregators),
+            None,
+        )?;
     for m in &opts.objects {
-        registry
-            .create(&m.name, &m.kind, &m.backend, None)
+        state
+            .shard_for(&m.name)
+            .registry
+            .create(
+                &m.name,
+                &m.kind,
+                &m.backend,
+                CreateOpts { max_width: None, direct_quota: m.direct_quota },
+            )
             .with_context(|| format!("boot object {:?}", m.name))?;
     }
 
-    let state = Arc::new(ServerState {
-        registry,
-        metrics: Metrics::new(),
-        stop: AtomicBool::new(false),
-        tids: TidLease::new(workers),
-    });
     let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-
-    // Resize controller: walk every registered object and apply its
-    // policy to its contention window each poll period. Sleeps in
-    // short slices so shutdown never waits on a long configured
-    // period.
     let mut threads = Vec::new();
     if opts.resize_interval_ms > 0 {
-        let state = Arc::clone(&state);
         let period = std::time::Duration::from_millis(opts.resize_interval_ms);
-        let slice = period.min(std::time::Duration::from_millis(20));
-        threads.push(std::thread::spawn(move || loop {
-            let mut slept = std::time::Duration::ZERO;
-            while slept < period {
-                if state.stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                let chunk = slice.min(period - slept);
-                std::thread::sleep(chunk);
-                slept += chunk;
-            }
-            if state.stop.load(Ordering::SeqCst) {
-                return;
-            }
-            for entry in state.registry.list() {
-                entry.poll();
-            }
-        }));
-    }
-
-    // Accept loop: non-blocking polls bounded by the stop flag (the
-    // explicit accept deadline that replaces the old wake-up-by-
-    // connecting shutdown nudge).
-    {
-        let state = Arc::clone(&state);
-        let conns = Arc::clone(&conns);
-        threads.push(std::thread::spawn(move || loop {
-            if state.stop.load(Ordering::SeqCst) {
-                return;
-            }
-            let conn = match listener.accept() {
-                Ok((conn, _)) => conn,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
-                    continue;
-                }
-                Err(_) => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
-                    continue;
-                }
-            };
-            state.metrics.incr("connections");
-            let Some(tid) = state.tids.lease() else {
-                // All funnel tids leased: reject instead of running a
-                // connection on an out-of-range thread id.
-                state.metrics.incr("rejected");
-                let _ = reject_conn(conn, state.tids.capacity);
-                continue;
-            };
-            let handler = {
-                let state = Arc::clone(&state);
-                std::thread::spawn(move || {
-                    let _guard = LeaseGuard { state: Arc::clone(&state), tid };
-                    let _ = handle_conn(&state, tid, conn);
-                })
-            };
-            let mut held = conns.lock().unwrap();
-            held.retain(|h| !h.is_finished());
-            held.push(handler);
-        }));
-    }
-    Ok(ServerHandle { addr, state, threads, conns })
-}
-
-/// Tell an over-capacity client why it is being dropped.
-fn reject_conn(mut conn: TcpStream, capacity: usize) -> std::io::Result<()> {
-    // Accepted sockets do not inherit the listener's non-blocking
-    // mode on Linux, but make it explicit for portability.
-    conn.set_nonblocking(false)?;
-    let resp = Json::obj(vec![
-        ("ok", Json::Bool(false)),
-        ("error", Json::str(format!("server at capacity ({capacity} connection slots)"))),
-    ]);
-    conn.write_all(resp.to_string().as_bytes())?;
-    conn.write_all(b"\n")
-}
-
-fn handle_conn(state: &ServerState, tid: usize, conn: TcpStream) -> Result<()> {
-    conn.set_nonblocking(false).ok();
-    conn.set_nodelay(true).ok();
-    // Bounded reads so a handler parked on an idle connection still
-    // notices shutdown (otherwise `shutdown()` would hang on join).
-    conn.set_read_timeout(Some(std::time::Duration::from_millis(200))).ok();
-    let mut writer = conn.try_clone()?;
-    let mut reader = BufReader::new(conn);
-    // One buffer across iterations: a read timeout mid-line leaves the
-    // bytes read so far in `line` (read_until semantics), so a slow
-    // writer's request is completed by later reads instead of being
-    // dropped and desyncing the line stream.
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if state.stop.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
-                continue;
-            }
-            Err(e) => return Err(e.into()),
+        for i in 0..shard_count {
+            threads.push(shard::spawn_controller(Arc::clone(&state), i, period));
         }
-        if !line.trim().is_empty() {
-            let response = match handle_request(state, tid, &line) {
-                Ok(json) => json,
-                Err(e) => Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::str(e.to_string())),
-                ]),
-            };
-            writer.write_all(response.to_string().as_bytes())?;
-            writer.write_all(b"\n")?;
-        }
-        line.clear();
     }
+    for (i, listener) in listeners.into_iter().enumerate() {
+        threads.push(shard::spawn_accept_loop(
+            Arc::clone(&state),
+            i,
+            listener,
+            Arc::clone(&conns),
+        ));
+    }
+    let ports = state.shards.iter().map(|s| s.port).collect();
+    Ok(ServerHandle { addr, ports, state, threads, conns })
 }
 
-fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
+/// Split `host:port` (the port may be 0 for ephemeral binding).
+fn split_host_port(addr: &str) -> Result<(String, u16)> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow!("address {addr:?} must be host:port"))?;
+    let port: u16 = port.parse().with_context(|| format!("bad port in {addr:?}"))?;
+    Ok((host.to_string(), port))
+}
+
+/// Route one request line received on shard `via` by a connection
+/// running as global funnel tid `tid`.
+fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let op = req.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing op"))?;
-    state.metrics.incr("requests");
+    state.shards[via].metrics.incr("requests");
     match op {
-        // -- control plane -------------------------------------------------
+        // -- shard map ------------------------------------------------------
+        "shardmap" => Ok(state.shardmap_json(via, false)),
+        // -- control plane (routed to the owning shard) ---------------------
         "create" => {
             let name = req
                 .get("name")
@@ -351,14 +347,21 @@ fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
             let kind = req.get("kind").and_then(Json::as_str).unwrap_or("counter");
             // Empty backend → the kind's default, applied by create.
             let backend = req.get("backend").and_then(Json::as_str).unwrap_or("");
-            let max_width =
-                req.get("max_width").and_then(Json::as_u64).map(|w| w as usize);
-            let entry = state.registry.create(name, kind, backend, max_width)?;
+            let create_opts = CreateOpts {
+                max_width: req.get("max_width").and_then(Json::as_u64).map(|w| w as usize),
+                direct_quota: req
+                    .get("direct_quota")
+                    .and_then(Json::as_u64)
+                    .map(|d| d as usize),
+            };
+            let owner = state.route(via, name);
+            let entry = owner.registry.create(name, kind, backend, create_opts)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("name", Json::str(entry.name.clone())),
                 ("kind", Json::str(entry.kind())),
                 ("backend", Json::str(entry.backend.clone())),
+                ("shard", Json::num(owner.index as f64)),
             ]))
         }
         "delete" => {
@@ -366,39 +369,24 @@ fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
                 .get("name")
                 .and_then(Json::as_str)
                 .ok_or_else(|| anyhow!("delete needs a name"))?;
-            state.registry.remove(name)?;
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("deleted", Json::str(name))]))
-        }
-        "list" => {
-            let objects: Vec<Json> = state
-                .registry
-                .list()
-                .iter()
-                .map(|e| {
-                    Json::obj(vec![
-                        ("name", Json::str(e.name.clone())),
-                        ("kind", Json::str(e.kind())),
-                        ("backend", Json::str(e.backend.clone())),
-                    ])
-                })
-                .collect();
-            let server: std::collections::BTreeMap<String, Json> = state
-                .metrics
-                .snapshot()
-                .into_iter()
-                .map(|(k, v)| (k, Json::num(v as f64)))
-                .collect();
+            let owner = state.route(via, name);
+            owner.registry.remove(name)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("count", Json::num(objects.len() as f64)),
-                ("objects", Json::Arr(objects)),
-                ("server", Json::Obj(server)),
+                ("deleted", Json::str(name)),
+                ("shard", Json::num(owner.index as f64)),
             ]))
+        }
+        // -- cross-shard fan-out --------------------------------------------
+        "list" => Ok(list_all(state)),
+        "stats" if req.get("name").and_then(Json::as_str) == Some("*") => {
+            Ok(cluster_stats(state))
         }
         // -- data plane (namespaced; name defaults to the boot counter) ----
         _ => {
             let name = req.get("name").and_then(Json::as_str).unwrap_or(DEFAULT_OBJECT);
-            let entry = state.registry.get(name)?;
+            let owner = state.route(via, name);
+            let entry = owner.registry.get(name)?;
             match op {
                 "take" => {
                     let count =
@@ -439,8 +427,9 @@ fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
                     if let Json::Obj(map) = &mut json {
                         map.insert(
                             "registry_objects".to_string(),
-                            Json::num(state.registry.len() as f64),
+                            Json::num(owner.registry.len() as f64),
                         );
+                        map.insert("shard".to_string(), Json::num(owner.index as f64));
                     }
                     Ok(json)
                 }
@@ -476,40 +465,306 @@ fn handle_request(state: &ServerState, tid: usize, line: &str) -> Result<Json> {
     }
 }
 
-/// Minimal blocking client for the registry service. Un-named methods
-/// address the boot counter ([`DEFAULT_OBJECT`]); `*_on` methods and
-/// the queue ops are namespaced.
-pub struct TicketClient {
+/// `list`: fan out over every shard and merge, sorted by name (map
+/// iteration order must never leak into the wire protocol — it made
+/// e2e assertions and cross-shard merges nondeterministic).
+fn list_all(state: &ServerState) -> Json {
+    let mut objects: Vec<(String, Json)> = Vec::new();
+    for shard in &state.shards {
+        for e in shard.registry.list() {
+            objects.push((
+                e.name.clone(),
+                Json::obj(vec![
+                    ("name", Json::str(e.name.clone())),
+                    ("kind", Json::str(e.kind())),
+                    ("backend", Json::str(e.backend.clone())),
+                    ("shard", Json::num(shard.index as f64)),
+                ]),
+            ));
+        }
+    }
+    objects.sort_by(|a, b| a.0.cmp(&b.0));
+    // Server-level counters merge across shards key-wise.
+    let mut server: BTreeMap<String, u64> = BTreeMap::new();
+    for shard in &state.shards {
+        for (k, v) in shard.metrics.snapshot() {
+            *server.entry(k).or_insert(0) += v;
+        }
+    }
+    let server: BTreeMap<String, Json> =
+        server.into_iter().map(|(k, v)| (k, Json::num(v as f64))).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("count", Json::num(objects.len() as f64)),
+        ("shards", Json::num(state.shards.len() as f64)),
+        ("objects", Json::Arr(objects.into_iter().map(|(_, j)| j).collect())),
+        ("server", Json::Obj(server)),
+    ])
+}
+
+/// `stats` with `name = "*"`: the cluster aggregate — object counts,
+/// funnel batch totals and per-object traffic summed over every
+/// shard, plus one entry per shard with its own counters.
+fn cluster_stats(state: &ServerState) -> Json {
+    let mut object_count = 0usize;
+    let mut agg = BatchStats::default();
+    let mut totals: BTreeMap<String, u64> = BTreeMap::new();
+    let mut per_shard = Vec::new();
+    for shard in &state.shards {
+        let entries = shard.registry.list();
+        object_count += entries.len();
+        for e in &entries {
+            for (k, v) in e.metrics.snapshot() {
+                *totals.entry(k).or_insert(0) += v;
+            }
+            agg.merge(&e.batch_stats());
+        }
+        let mut sj: BTreeMap<String, Json> = shard
+            .metrics
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::num(v as f64)))
+            .collect();
+        sj.insert("shard".to_string(), Json::num(shard.index as f64));
+        sj.insert("port".to_string(), Json::num(shard.port as f64));
+        sj.insert("objects".to_string(), Json::num(entries.len() as f64));
+        per_shard.push(Json::Obj(sj));
+    }
+    let totals: BTreeMap<String, Json> =
+        totals.into_iter().map(|(k, v)| (k, Json::num(v as f64))).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("scope", Json::str("cluster")),
+        ("shards", Json::num(state.shards.len() as f64)),
+        ("objects", Json::num(object_count as f64)),
+        ("main_faas", Json::num(agg.main_faas as f64)),
+        ("batched_ops", Json::num(agg.ops as f64)),
+        ("avg_batch", Json::num(agg.avg_batch_size())),
+        ("totals", Json::Obj(totals)),
+        ("per_shard", Json::Arr(per_shard)),
+    ])
+}
+
+/// Client-side retry policy for capacity rejections: a rejected
+/// connection never executed anything (the server writes the
+/// rejection and closes without reading), so redialing is
+/// idempotency-safe; the bound keeps a genuinely full shard from
+/// hanging the caller.
+const CAPACITY_RETRIES: u32 = 40;
+const CAPACITY_RETRY_DELAY: std::time::Duration = std::time::Duration::from_millis(5);
+
+/// True when a response is a lease-pool capacity rejection — the
+/// structured `rejected` marker, with a message-text fallback.
+fn is_capacity_rejection(resp: &Json) -> bool {
+    resp.get("rejected").and_then(Json::as_bool) == Some(true)
+        || resp
+            .get("error")
+            .and_then(Json::as_str)
+            .is_some_and(|e| e.contains("at capacity"))
+}
+
+/// One connection to one shard.
+struct ClientConn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
-impl TicketClient {
-    pub fn connect(addr: &str) -> Result<TicketClient> {
+impl ClientConn {
+    fn open(addr: &str) -> Result<ClientConn> {
         let conn = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         conn.set_nodelay(true).ok();
         let writer = conn.try_clone()?;
-        Ok(TicketClient { reader: BufReader::new(conn), writer })
+        Ok(ClientConn { reader: BufReader::new(conn), writer })
     }
 
-    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+    /// Write one request and read the matching response, skipping any
+    /// pushed `greeting` lines (a sharded server greets every new
+    /// connection with the shard map).
+    fn roundtrip_raw(&mut self, req: &Json) -> Result<Json> {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let resp = Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))?;
-        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
-            return Err(anyhow!(
-                "server error: {}",
-                resp.get("error").and_then(Json::as_str).unwrap_or("?")
-            ));
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(anyhow!("server closed the connection"));
+            }
+            let resp = Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))?;
+            if resp.get("greeting").and_then(Json::as_bool) == Some(true) {
+                continue;
+            }
+            return Ok(resp);
         }
-        Ok(resp)
+    }
+}
+
+/// Minimal blocking client for the registry service, shard-aware: on
+/// connect it asks the server for the shard map and from then on
+/// routes every named request to the owning shard's port over a
+/// lazily-opened per-shard connection — the hot path never bounces
+/// through a proxy shard. Un-named methods address the boot counter
+/// ([`DEFAULT_OBJECT`]); `*_on` methods and the queue ops are
+/// namespaced. Pre-shard (PR 3) servers are detected by their
+/// "unknown op" reply to the handshake and served over the single
+/// original connection.
+pub struct TicketClient {
+    host: String,
+    ports: Vec<u16>,
+    conns: Vec<Option<ClientConn>>,
+}
+
+impl TicketClient {
+    pub fn connect(addr: &str) -> Result<TicketClient> {
+        let (host, _) = split_host_port(addr)?;
+        // Bounded retry on capacity rejections, mirroring
+        // `roundtrip_on`: the handshake races lease releases of
+        // just-closed connections, and a rejected connection never
+        // executed anything, so redialing is safe.
+        let mut attempts = 0u32;
+        loop {
+            let mut conn = ClientConn::open(addr)?;
+            let resp =
+                conn.roundtrip_raw(&Json::obj(vec![("op", Json::str("shardmap"))]))?;
+            if resp.get("ok").and_then(Json::as_bool) == Some(true)
+                && resp.get("shardmap").and_then(Json::as_bool) == Some(true)
+            {
+                let ports: Vec<u16> = resp
+                    .get("ports")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("shardmap missing ports"))?
+                    .iter()
+                    .filter_map(Json::as_u64)
+                    .map(|p| p as u16)
+                    .collect();
+                if ports.is_empty() {
+                    return Err(anyhow!("shardmap with no ports"));
+                }
+                let mut conns: Vec<Option<ClientConn>> =
+                    (0..ports.len()).map(|_| None).collect();
+                if ports.len() == 1 {
+                    // Single shard: keep the handshake connection,
+                    // it is the only one we will ever need.
+                    conns[0] = Some(conn);
+                } else {
+                    // Sharded: drop the handshake connection instead
+                    // of caching it. Caching would pin one of the
+                    // dialed shard's tid leases for this client's
+                    // whole lifetime even if none of its objects
+                    // live there — capping total clients at one
+                    // shard's `workers` pool and defeating per-shard
+                    // admission independence. Per-shard connections
+                    // open lazily on first use.
+                    drop(conn);
+                }
+                return Ok(TicketClient { host, ports, conns });
+            }
+            let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+            if err.contains("unknown op") {
+                // A pre-shard server: one implicit shard on the
+                // connected port, and the handshake error consumed
+                // above keeps the line stream in sync.
+                let port = conn.writer.peer_addr()?.port();
+                return Ok(TicketClient {
+                    host,
+                    ports: vec![port],
+                    conns: vec![Some(conn)],
+                });
+            }
+            if is_capacity_rejection(&resp) {
+                attempts += 1;
+                if attempts < CAPACITY_RETRIES {
+                    drop(conn);
+                    std::thread::sleep(CAPACITY_RETRY_DELAY);
+                    continue;
+                }
+            }
+            return Err(anyhow!("server error: {}", if err.is_empty() { "?" } else { err }));
+        }
+    }
+
+    /// Number of shards in the connected server's map.
+    pub fn shards(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// The advertised per-shard port layout.
+    pub fn shard_ports(&self) -> &[u16] {
+        &self.ports
+    }
+
+    /// The shard index `name` routes to.
+    pub fn shard_for(&self, name: &str) -> usize {
+        shard_of(name, self.ports.len())
+    }
+
+    fn conn_for(&mut self, shard: usize) -> Result<&mut ClientConn> {
+        debug_assert!(shard < self.ports.len());
+        if self.conns[shard].is_none() {
+            let addr = format!("{}:{}", self.host, self.ports[shard]);
+            self.conns[shard] = Some(ClientConn::open(&addr)?);
+        }
+        Ok(self.conns[shard].as_mut().unwrap())
+    }
+
+    fn roundtrip_on(&mut self, shard: usize, req: Json) -> Result<Json> {
+        // Capacity rejections can be transient: a just-closed
+        // connection's lease is only released once its handler
+        // observes the EOF, so a freshly-dialed connection can race
+        // the release. Retry them within the shared policy bound.
+        let mut attempts = 0u32;
+        loop {
+            let resp = match self.conn_for(shard)?.roundtrip_raw(&req) {
+                Ok(resp) => resp,
+                Err(e) => {
+                    // Transport failure (closed socket, bad line):
+                    // drop the cached connection so the next request
+                    // to this shard reconnects instead of reusing a
+                    // dead socket. Not retried here — the request may
+                    // already have executed server-side.
+                    self.conns[shard] = None;
+                    return Err(e);
+                }
+            };
+            if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+                if is_capacity_rejection(&resp) {
+                    // The server closes after a capacity rejection;
+                    // evict the dead cached connection either way.
+                    self.conns[shard] = None;
+                    attempts += 1;
+                    if attempts < CAPACITY_RETRIES {
+                        std::thread::sleep(CAPACITY_RETRY_DELAY);
+                        continue;
+                    }
+                }
+                return Err(anyhow!(
+                    "server error: {}",
+                    resp.get("error").and_then(Json::as_str).unwrap_or("?")
+                ));
+            }
+            return Ok(resp);
+        }
+    }
+
+    /// Route a named request to its owning shard.
+    fn roundtrip(&mut self, name: &str, req: Json) -> Result<Json> {
+        self.roundtrip_on(self.shard_for(name), req)
     }
 
     /// Create a named object (`kind`: `counter` | `queue`; `backend`:
     /// the spec grammar, empty for the kind's default).
     pub fn create(&mut self, name: &str, kind: &str, backend: &str) -> Result<()> {
+        self.create_with(name, kind, backend, None, None)
+    }
+
+    /// `create` with the optional per-object overrides: elastic slot
+    /// capacity and the §4.4 direct-thread quota (counters only).
+    pub fn create_with(
+        &mut self,
+        name: &str,
+        kind: &str,
+        backend: &str,
+        max_width: Option<u64>,
+        direct_quota: Option<u64>,
+    ) -> Result<()> {
         let mut pairs = vec![
             ("op", Json::str("create")),
             ("name", Json::str(name)),
@@ -518,21 +773,28 @@ impl TicketClient {
         if !backend.is_empty() {
             pairs.push(("backend", Json::str(backend)));
         }
-        self.roundtrip(Json::obj(pairs)).map(drop)
+        if let Some(w) = max_width {
+            pairs.push(("max_width", Json::num(w as f64)));
+        }
+        if let Some(d) = direct_quota {
+            pairs.push(("direct_quota", Json::num(d as f64)));
+        }
+        self.roundtrip(name, Json::obj(pairs)).map(drop)
     }
 
     /// Delete a named object.
     pub fn delete(&mut self, name: &str) -> Result<()> {
-        self.roundtrip(Json::obj(vec![
-            ("op", Json::str("delete")),
-            ("name", Json::str(name)),
-        ]))
+        self.roundtrip(
+            name,
+            Json::obj(vec![("op", Json::str("delete")), ("name", Json::str(name))]),
+        )
         .map(drop)
     }
 
-    /// List registered objects as `(name, kind, backend)` triples.
+    /// List registered objects across all shards, sorted by name, as
+    /// `(name, kind, backend)` triples.
     pub fn list(&mut self) -> Result<Vec<(String, String, String)>> {
-        let resp = self.roundtrip(Json::obj(vec![("op", Json::str("list"))]))?;
+        let resp = self.roundtrip_on(0, Json::obj(vec![("op", Json::str("list"))]))?;
         let objects = resp
             .get("objects")
             .and_then(Json::as_arr)
@@ -553,20 +815,23 @@ impl TicketClient {
 
     /// Enqueue `item` on a named queue.
     pub fn enqueue(&mut self, name: &str, item: u64) -> Result<()> {
-        self.roundtrip(Json::obj(vec![
-            ("op", Json::str("enqueue")),
-            ("name", Json::str(name)),
-            ("item", Json::num(item as f64)),
-        ]))
+        self.roundtrip(
+            name,
+            Json::obj(vec![
+                ("op", Json::str("enqueue")),
+                ("name", Json::str(name)),
+                ("item", Json::num(item as f64)),
+            ]),
+        )
         .map(drop)
     }
 
     /// Dequeue from a named queue (`None` when empty).
     pub fn dequeue(&mut self, name: &str) -> Result<Option<u64>> {
-        let resp = self.roundtrip(Json::obj(vec![
-            ("op", Json::str("dequeue")),
-            ("name", Json::str(name)),
-        ]))?;
+        let resp = self.roundtrip(
+            name,
+            Json::obj(vec![("op", Json::str("dequeue")), ("name", Json::str(name))]),
+        )?;
         if resp.get("empty").and_then(Json::as_bool) == Some(true) {
             return Ok(None);
         }
@@ -586,7 +851,7 @@ impl TicketClient {
         if priority {
             pairs.push(("priority", Json::Bool(true)));
         }
-        let resp = self.roundtrip(Json::obj(pairs))?;
+        let resp = self.roundtrip(name, Json::obj(pairs))?;
         resp.get("start").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing start"))
     }
 
@@ -597,10 +862,10 @@ impl TicketClient {
 
     /// Read a named counter.
     pub fn read_on(&mut self, name: &str) -> Result<u64> {
-        let resp = self.roundtrip(Json::obj(vec![
-            ("op", Json::str("read")),
-            ("name", Json::str(name)),
-        ]))?;
+        let resp = self.roundtrip(
+            name,
+            Json::obj(vec![("op", Json::str("read")), ("name", Json::str(name))]),
+        )?;
         resp.get("value").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing value"))
     }
 
@@ -610,23 +875,35 @@ impl TicketClient {
 
     /// Per-object stats for a named object.
     pub fn stats_on(&mut self, name: &str) -> Result<Json> {
-        self.roundtrip(Json::obj(vec![
-            ("op", Json::str("stats")),
-            ("name", Json::str(name)),
-        ]))
+        self.roundtrip(
+            name,
+            Json::obj(vec![("op", Json::str("stats")), ("name", Json::str(name))]),
+        )
     }
 
     pub fn stats(&mut self) -> Result<Json> {
         self.stats_on(DEFAULT_OBJECT)
     }
 
+    /// The cluster aggregate (`stats` with `name = "*"`): objects,
+    /// funnel batch totals and traffic merged over every shard.
+    pub fn cluster_stats(&mut self) -> Result<Json> {
+        self.roundtrip_on(
+            0,
+            Json::obj(vec![("op", Json::str("stats")), ("name", Json::str("*"))]),
+        )
+    }
+
     /// Set a named object's active width; returns the width in force.
     pub fn resize_on(&mut self, name: &str, width: u64) -> Result<u64> {
-        let resp = self.roundtrip(Json::obj(vec![
-            ("op", Json::str("resize")),
-            ("name", Json::str(name)),
-            ("width", Json::num(width as f64)),
-        ]))?;
+        let resp = self.roundtrip(
+            name,
+            Json::obj(vec![
+                ("op", Json::str("resize")),
+                ("name", Json::str(name)),
+                ("width", Json::num(width as f64)),
+            ]),
+        )?;
         resp.get("width").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing width"))
     }
 
@@ -637,11 +914,14 @@ impl TicketClient {
     /// Swap a named object's width policy (`fixed:<m>`, `sqrtp`,
     /// `aimd`).
     pub fn set_policy_on(&mut self, name: &str, policy: &str) -> Result<String> {
-        let resp = self.roundtrip(Json::obj(vec![
-            ("op", Json::str("policy")),
-            ("name", Json::str(name)),
-            ("policy", Json::str(policy)),
-        ]))?;
+        let resp = self.roundtrip(
+            name,
+            Json::obj(vec![
+                ("op", Json::str("policy")),
+                ("name", Json::str(name)),
+                ("policy", Json::str(policy)),
+            ]),
+        )?;
         resp.get("policy")
             .and_then(Json::as_str)
             .map(str::to_string)
@@ -706,6 +986,94 @@ mod tests {
     }
 
     #[test]
+    fn single_shard_shardmap_op_and_no_greeting() {
+        use std::io::{BufRead, Write};
+        let server = start();
+        // Raw socket: a single-shard server must not greet (that is
+        // the PR 3 wire contract), but must answer the shardmap op.
+        let conn = std::net::TcpStream::connect(server.addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = std::io::BufReader::new(conn);
+        writer.write_all(b"{\"op\":\"take\",\"count\":1}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(
+            resp.get("start").and_then(Json::as_u64),
+            Some(0),
+            "first line is the take response, not a greeting: {line}"
+        );
+        writer.write_all(b"{\"op\":\"shardmap\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("shards").and_then(Json::as_u64), Some(1));
+        assert_eq!(resp.get("hash").and_then(Json::as_str), Some(SHARD_HASH_SCHEME));
+        let ports = resp.get("ports").and_then(Json::as_arr).unwrap();
+        assert_eq!(ports.len(), 1);
+        assert_eq!(ports[0].as_u64(), Some(server.addr.port() as u64));
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_server_greets_and_routes() {
+        let server = serve(&ServeOpts::sharded("127.0.0.1:0", 3, 2, 2)).unwrap();
+        assert_eq!(server.shard_ports().len(), 3);
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(c.shards(), 3);
+        assert_eq!(c.shard_ports(), server.shard_ports());
+        // The default counter works regardless of which shard owns it.
+        assert_eq!(c.take(2, false).unwrap(), 0);
+        assert_eq!(c.read().unwrap(), 2);
+        // Named objects land on their hash shard and round-trip.
+        for name in ["a", "b", "c", "d", "e"] {
+            c.create(name, "counter", "elastic:fixed:1").unwrap();
+            assert_eq!(c.take_on(name, 1, false).unwrap(), 0);
+        }
+        let listed = c.list().unwrap();
+        let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c", "d", "e", DEFAULT_OBJECT], "sorted merge");
+        // The cluster aggregate sees every shard's objects.
+        let agg = c.cluster_stats().unwrap();
+        assert_eq!(agg.get("objects").and_then(Json::as_u64), Some(6));
+        assert_eq!(agg.get("shards").and_then(Json::as_u64), Some(3));
+        assert_eq!(
+            agg.get("per_shard").and_then(Json::as_arr).map(|a| a.len()),
+            Some(3)
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn legacy_connection_to_sharded_server_is_forwarded() {
+        use std::io::{BufRead, Write};
+        let server = serve(&ServeOpts::sharded("127.0.0.1:0", 2, 2, 2)).unwrap();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        c.create("roam", "counter", "elastic:fixed:1").unwrap();
+        // A client that ignores the shard map and sends everything to
+        // one port must still be served correctly (in-process
+        // forwarding), for every shard's port.
+        for port in server.shard_ports() {
+            let conn = std::net::TcpStream::connect(("127.0.0.1", *port)).unwrap();
+            let mut writer = conn.try_clone().unwrap();
+            let mut reader = std::io::BufReader::new(conn);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap(); // greeting
+            assert_eq!(
+                Json::parse(&line).unwrap().get("greeting").and_then(Json::as_bool),
+                Some(true)
+            );
+            writer.write_all(b"{\"op\":\"take\",\"name\":\"roam\",\"count\":1}\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(&line).unwrap();
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+        }
+        assert_eq!(c.read_on("roam").unwrap(), 2, "both forwarded takes counted");
+        server.shutdown();
+    }
+
+    #[test]
     fn resize_and_policy_ops_reconfigure_live() {
         let server = serve(&ServeOpts {
             max_aggregators: 8,
@@ -749,16 +1117,40 @@ mod tests {
     }
 
     #[test]
-    fn bad_requests_get_errors() {
+    fn direct_quota_over_the_wire() {
         let server = start();
         let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.writer.write_all(b"{\"op\":\"nope\"}\n").unwrap();
+        c.create_with("vip", "counter", "elastic:fixed:2", None, Some(0)).unwrap();
+        assert_eq!(c.take_on("vip", 4, true).unwrap(), 0);
+        let stats = c.stats_on("vip").unwrap();
+        assert_eq!(stats.get("direct_quota").and_then(Json::as_u64), Some(0));
+        assert_eq!(
+            stats.get("take_priority_demoted").and_then(Json::as_u64),
+            Some(1),
+            "quota 0 demotes priority to the funnel"
+        );
+        assert_eq!(stats.get("backend").and_then(Json::as_str), Some("elastic:fixed:2:d0"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_errors() {
+        use std::io::{BufRead, Write};
+        let server = start();
+        let conn = std::net::TcpStream::connect(server.addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = std::io::BufReader::new(conn);
+        writer.write_all(b"{\"op\":\"nope\"}\n").unwrap();
         let mut line = String::new();
-        c.reader.read_line(&mut line).unwrap();
+        reader.read_line(&mut line).unwrap();
         let resp = Json::parse(&line).unwrap();
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
         // Connection stays usable.
-        assert_eq!(c.take(1, false).unwrap(), 0);
+        writer.write_all(b"{\"op\":\"take\",\"count\":1}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("start").and_then(Json::as_u64), Some(0));
         server.shutdown();
     }
 
@@ -845,16 +1237,8 @@ mod tests {
     fn manifest_objects_precreated_at_boot() {
         let server = serve(&ServeOpts {
             objects: vec![
-                ObjectManifest {
-                    name: "jobs".into(),
-                    kind: "queue".into(),
-                    backend: "lcrq+elastic".into(),
-                },
-                ObjectManifest {
-                    name: "orders".into(),
-                    kind: "counter".into(),
-                    backend: "elastic:sqrtp".into(),
-                },
+                ObjectManifest::new("jobs", "queue", "lcrq+elastic"),
+                ObjectManifest::new("orders", "counter", "elastic:sqrtp"),
             ],
             ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
         })
@@ -867,13 +1251,26 @@ mod tests {
         server.shutdown();
         // A manifest colliding with the boot counter fails loudly.
         let err = serve(&ServeOpts {
-            objects: vec![ObjectManifest {
-                name: DEFAULT_OBJECT.into(),
-                kind: "counter".into(),
-                backend: "elastic:aimd".into(),
-            }],
+            objects: vec![ObjectManifest::new(DEFAULT_OBJECT, "counter", "elastic:aimd")],
             ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn manifest_direct_quota_applies() {
+        let server = serve(&ServeOpts {
+            objects: vec![ObjectManifest {
+                direct_quota: Some(1),
+                ..ObjectManifest::new("vip", "counter", "elastic:fixed:2")
+            }],
+            ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+        })
+        .unwrap();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let stats = c.stats_on("vip").unwrap();
+        assert_eq!(stats.get("direct_quota").and_then(Json::as_u64), Some(1));
+        assert_eq!(stats.get("backend").and_then(Json::as_str), Some("elastic:fixed:2:d1"));
+        server.shutdown();
     }
 }

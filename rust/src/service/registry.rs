@@ -22,6 +22,7 @@ use anyhow::{anyhow, Result};
 
 use super::metrics::Metrics;
 use crate::config::ObjectManifest;
+use crate::faa::backend::DirectPermits;
 use crate::faa::{backend, BackendSpec, BatchStats, ElasticAggFunnel, FetchAddObject, WidthPolicy};
 use crate::queue::{make_queue_with_handle, ConcurrentQueue, ElasticIndexFactory, EMPTY_ITEM};
 use crate::util::json::Json;
@@ -29,6 +30,26 @@ use crate::util::json::Json;
 /// The object un-named requests route to (the pre-registry protocol's
 /// single anonymous ticket counter, now just a well-known name).
 pub const DEFAULT_OBJECT: &str = "tickets";
+
+/// Per-object creation options beyond the backend spec string.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CreateOpts {
+    /// Elastic slot capacity override.
+    pub max_width: Option<usize>,
+    /// §4.4 direct-thread quota `d`: at most this many `priority`
+    /// requests ride `Fetch&AddDirect` concurrently; the rest are
+    /// demoted to the funnel path. `None` = unlimited (every priority
+    /// request goes direct). Counters only. Overrides a `:d<k>`
+    /// segment in the backend spec.
+    pub direct_quota: Option<usize>,
+}
+
+impl CreateOpts {
+    /// Only a width override (the historical `create` option set).
+    pub fn width(max_width: Option<usize>) -> Self {
+        Self { max_width, direct_quota: None }
+    }
+}
 
 /// A served object's body.
 pub enum ObjectBody {
@@ -48,6 +69,11 @@ pub struct ObjectEntry {
     pub backend: String,
     pub metrics: Metrics,
     policy: Mutex<WidthPolicy>,
+    /// §4.4 direct-thread quota gate; `None` = unlimited direct. The
+    /// entry gates here (rather than wrapping the funnel in a
+    /// [`backend::DirectQuota`]) so demotions are visible in the
+    /// per-object metrics.
+    direct: Option<DirectPermits>,
     body: ObjectBody,
 }
 
@@ -77,16 +103,39 @@ impl ObjectEntry {
         }
     }
 
-    /// Counter op: `Fetch&Add(count)`, direct when `priority`.
+    /// Counter op: `Fetch&Add(count)`; `priority` requests take the
+    /// §4.4 `Fetch&AddDirect` fast path while the object's
+    /// direct-thread quota has a free slot, and are demoted to the
+    /// funnel (counted as `take_priority_demoted`) when it does not.
     pub fn take(&self, tid: usize, count: u64, priority: bool) -> Result<u64> {
         let funnel = self.as_counter("take")?;
-        Ok(if priority {
-            self.metrics.incr("take_priority");
-            funnel.fetch_add_direct(tid, count as i64)
-        } else {
-            self.metrics.incr("take");
-            funnel.fetch_add(tid, count as i64)
-        })
+        if priority {
+            match &self.direct {
+                None => {
+                    self.metrics.incr("take_priority");
+                    return Ok(funnel.fetch_add_direct(tid, count as i64));
+                }
+                Some(gate) if gate.try_acquire() => {
+                    self.metrics.incr("take_priority");
+                    let v = funnel.fetch_add_direct(tid, count as i64);
+                    gate.release();
+                    return Ok(v);
+                }
+                Some(_) => {
+                    // Quota exhausted: priority demotes to the shared
+                    // funnel path instead of overloading `Main`.
+                    self.metrics.incr("take_priority_demoted");
+                    return Ok(funnel.fetch_add(tid, count as i64));
+                }
+            }
+        }
+        self.metrics.incr("take");
+        Ok(funnel.fetch_add(tid, count as i64))
+    }
+
+    /// The configured §4.4 direct quota (`None` = unlimited).
+    pub fn direct_quota(&self) -> Option<usize> {
+        self.direct.as_ref().map(DirectPermits::quota)
     }
 
     /// Counter op: linearizable read.
@@ -215,6 +264,9 @@ impl ObjectEntry {
                 obj.insert("max_width".to_string(), Json::num(f.max_width() as f64));
                 obj.insert("resizes".to_string(), Json::num(f.resizes() as f64));
                 obj.insert("width_policy".to_string(), Json::str(self.policy().label()));
+                if let Some(d) = self.direct_quota() {
+                    obj.insert("direct_quota".to_string(), Json::num(d as f64));
+                }
             }
             ObjectBody::Queue { elastic: Some(factory), .. } => {
                 obj.insert("active_width".to_string(), Json::num(factory.active_width() as f64));
@@ -243,15 +295,24 @@ impl Registry {
 
     /// Create a counter directly from a policy (the boot path for the
     /// default object, where the policy is already parsed). `initial`
-    /// overrides the policy's starting width.
+    /// overrides the policy's starting width; `direct_quota` is the
+    /// §4.4 `d` parameter (`None` = unlimited direct).
     pub fn create_counter(
         &self,
         name: &str,
         policy: WidthPolicy,
         max_width: usize,
         initial: Option<usize>,
+        direct_quota: Option<usize>,
     ) -> Result<Arc<ObjectEntry>> {
-        let spec = BackendSpec::Elastic { policy, max_width: max_width.max(1) };
+        let mut spec = BackendSpec::Elastic {
+            policy,
+            max_width: max_width.max(1),
+            direct: None,
+        };
+        if let Some(d) = direct_quota {
+            spec = spec.with_direct_quota(d);
+        }
         let funnel = backend::build_elastic(self.max_threads, policy, max_width.max(1));
         if let Some(w) = initial {
             funnel.resize(w);
@@ -261,19 +322,21 @@ impl Registry {
             backend: spec.label(),
             metrics: Metrics::new(),
             policy: Mutex::new(policy),
+            direct: direct_quota.map(DirectPermits::new),
             body: ObjectBody::Counter(funnel),
         })
     }
 
     /// Create an object from wire/manifest strings. An empty
-    /// `backend_spec` takes the kind's default; `max_width` overrides
-    /// the elastic slot capacity when given.
+    /// `backend_spec` takes the kind's default; [`CreateOpts`] carries
+    /// the per-object overrides (elastic slot capacity, §4.4 direct
+    /// quota).
     pub fn create(
         &self,
         name: &str,
         kind: &str,
         backend_spec: &str,
-        max_width: Option<usize>,
+        opts: CreateOpts,
     ) -> Result<Arc<ObjectEntry>> {
         let backend_spec = if backend_spec.is_empty() {
             ObjectManifest::default_backend(kind).unwrap_or("")
@@ -284,8 +347,12 @@ impl Registry {
             "counter" => {
                 let mut spec = BackendSpec::parse(backend_spec)
                     .ok_or_else(|| anyhow!("unknown counter backend {backend_spec:?}"))?;
-                if let Some(w) = max_width {
+                if let Some(w) = opts.max_width {
                     spec = spec.with_max_width(w);
+                }
+                // An explicit option wins over a `:d<k>` spec segment.
+                if let Some(d) = opts.direct_quota {
+                    spec = spec.with_direct_quota(d);
                 }
                 let (policy, width) = spec.counter_policy().ok_or_else(|| {
                     anyhow!(
@@ -293,24 +360,42 @@ impl Registry {
                          use aggfunnel:<m> or elastic:<policy>"
                     )
                 })?;
-                self.create_counter(name, policy, width, None)
+                self.create_counter(name, policy, width, None, spec.direct_quota())
             }
             "queue" => {
+                if opts.direct_quota.is_some() {
+                    return Err(anyhow!(
+                        "direct_quota applies to counters; queue {name:?} has no priority path"
+                    ));
+                }
+                // A `:d<k>` segment on the index spec would be
+                // silently inert (ring indices have no priority
+                // path), so reject it like the explicit option
+                // instead of echoing a quota that isn't enforced.
+                let index_spec = backend_spec.split_once('+').map(|(_, index)| index);
+                if index_spec
+                    .and_then(BackendSpec::parse)
+                    .and_then(|s| s.direct_quota())
+                    .is_some()
+                {
+                    return Err(anyhow!(
+                        "direct quota applies to counters; queue index spec {backend_spec:?} \
+                         cannot carry :d<k>"
+                    ));
+                }
                 let (queue, elastic) =
-                    make_queue_with_handle(backend_spec, self.max_threads, max_width)
+                    make_queue_with_handle(backend_spec, self.max_threads, opts.max_width)
                         .ok_or_else(|| anyhow!("unknown queue backend {backend_spec:?}"))?;
-                let policy = match backend_spec.split_once('+') {
-                    Some((_, index)) => match BackendSpec::parse(index) {
-                        Some(BackendSpec::Elastic { policy, .. }) => policy,
-                        _ => WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS),
-                    },
-                    None => WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS),
+                let policy = match index_spec.and_then(BackendSpec::parse) {
+                    Some(BackendSpec::Elastic { policy, .. }) => policy,
+                    _ => WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS),
                 };
                 self.insert(ObjectEntry {
                     name: validated_name(name)?,
                     backend: backend_spec.trim().to_string(),
                     metrics: Metrics::new(),
                     policy: Mutex::new(policy),
+                    direct: None,
                     body: ObjectBody::Queue { queue, elastic },
                 })
             }
@@ -379,26 +464,30 @@ fn validated_name(name: &str) -> Result<String> {
 mod tests {
     use super::*;
 
+    fn plain() -> CreateOpts {
+        CreateOpts::default()
+    }
+
     #[test]
     fn empty_backend_defaults_per_kind() {
         let r = Registry::new(2);
-        let c = r.create("c", "counter", "", None).unwrap();
+        let c = r.create("c", "counter", "", plain()).unwrap();
         assert_eq!(c.backend, "elastic:aimd");
-        let q = r.create("q", "queue", "", None).unwrap();
+        let q = r.create("q", "queue", "", plain()).unwrap();
         assert_eq!(q.backend, "lcrq+elastic");
         q.enqueue(0, 1).unwrap();
         assert_eq!(q.dequeue(1).unwrap(), Some(1));
-        assert!(r.create("x", "stack", "", None).is_err(), "kind still validated");
+        assert!(r.create("x", "stack", "", plain()).is_err(), "kind still validated");
     }
 
     #[test]
     fn create_get_list_delete() {
         let r = Registry::new(4);
-        r.create("c1", "counter", "elastic:aimd", None).unwrap();
-        r.create("q1", "queue", "lcrq+elastic", None).unwrap();
+        r.create("c1", "counter", "elastic:aimd", plain()).unwrap();
+        r.create("q1", "queue", "lcrq+elastic", plain()).unwrap();
         assert_eq!(r.len(), 2);
         assert!(!r.is_empty());
-        assert!(r.create("c1", "counter", "elastic:aimd", None).is_err(), "duplicate");
+        assert!(r.create("c1", "counter", "elastic:aimd", plain()).is_err(), "duplicate");
         let names: Vec<String> = r.list().iter().map(|e| e.name.clone()).collect();
         assert_eq!(names, vec!["c1", "q1"], "name order");
         assert_eq!(r.get("c1").unwrap().kind(), "counter");
@@ -410,21 +499,37 @@ mod tests {
     }
 
     #[test]
+    fn list_is_sorted_regardless_of_creation_order() {
+        let r = Registry::new(2);
+        for name in ["zeta", "alpha", "mid", "beta"] {
+            r.create(name, "counter", "elastic:aimd", plain()).unwrap();
+        }
+        let names: Vec<String> = r.list().iter().map(|e| e.name.clone()).collect();
+        assert_eq!(names, vec!["alpha", "beta", "mid", "zeta"]);
+    }
+
+    #[test]
     fn invalid_specs_rejected() {
         let r = Registry::new(2);
-        assert!(r.create("x", "counter", "bogus", None).is_err());
-        assert!(r.create("x", "counter", "hw", None).is_err(), "hw counters have no width");
-        assert!(r.create("x", "queue", "bogus", None).is_err());
-        assert!(r.create("x", "stack", "lcrq", None).is_err());
-        assert!(r.create("", "counter", "elastic", None).is_err());
-        assert!(r.create("a b", "counter", "elastic", None).is_err());
-        assert!(r.create(&"n".repeat(65), "counter", "elastic", None).is_err());
+        assert!(r.create("x", "counter", "bogus", plain()).is_err());
+        assert!(r.create("x", "counter", "hw", plain()).is_err(), "hw counters have no width");
+        assert!(r.create("x", "queue", "bogus", plain()).is_err());
+        assert!(r.create("x", "stack", "lcrq", plain()).is_err());
+        assert!(r.create("", "counter", "elastic", plain()).is_err());
+        assert!(r.create("a b", "counter", "elastic", plain()).is_err());
+        assert!(r.create(&"n".repeat(65), "counter", "elastic", plain()).is_err());
+        // Queues have no priority path, so no direct quota either —
+        // neither as an explicit option nor as a spec segment.
+        let opts = CreateOpts { direct_quota: Some(1), ..CreateOpts::default() };
+        assert!(r.create("x", "queue", "lcrq+elastic", opts).is_err());
+        assert!(r.create("x", "queue", "lcrq+elastic:aimd:d2", plain()).is_err());
+        assert!(r.create("x", "queue", "lcrq+aggfunnel:4:d1", plain()).is_err());
     }
 
     #[test]
     fn counter_entry_ops() {
         let r = Registry::new(2);
-        let e = r.create("c", "counter", "elastic:fixed:2", Some(6)).unwrap();
+        let e = r.create("c", "counter", "elastic:fixed:2", CreateOpts::width(Some(6))).unwrap();
         assert_eq!(e.take(0, 5, false).unwrap(), 0);
         assert_eq!(e.take(1, 1, true).unwrap(), 5);
         assert_eq!(e.read(0).unwrap(), 6);
@@ -443,9 +548,113 @@ mod tests {
     }
 
     #[test]
+    fn direct_quota_gates_priority_takes() {
+        let r = Registry::new(4);
+        // Quota 0: every priority take demotes to the funnel path.
+        let e = r.create("c", "counter", "elastic:fixed:2:d0", plain()).unwrap();
+        assert_eq!(e.backend, "elastic:fixed:2:d0", "quota survives in the label");
+        assert_eq!(e.direct_quota(), Some(0));
+        assert_eq!(e.take(0, 3, true).unwrap(), 0);
+        assert_eq!(e.take(1, 2, true).unwrap(), 3);
+        let stats = e.stats_json();
+        assert_eq!(stats.get("take_priority_demoted").and_then(Json::as_u64), Some(2));
+        assert!(stats.get("take_priority").is_none(), "nothing went direct");
+        assert_eq!(stats.get("direct_quota").and_then(Json::as_u64), Some(0));
+
+        // An explicit option wins over the spec segment and shows up
+        // in the canonical backend label.
+        let opts = CreateOpts { direct_quota: Some(2), ..CreateOpts::default() };
+        let e2 = r.create("c2", "counter", "elastic:aimd:d0", opts).unwrap();
+        assert_eq!(e2.backend, "elastic:aimd:d2");
+        assert_eq!(e2.direct_quota(), Some(2));
+        assert_eq!(e2.take(0, 1, true).unwrap(), 0);
+        let stats = e2.stats_json();
+        assert_eq!(stats.get("take_priority").and_then(Json::as_u64), Some(1));
+        assert!(stats.get("take_priority_demoted").is_none());
+
+        // Unlimited (no quota) keeps the pre-quota behaviour.
+        let e3 = r.create("c3", "counter", "elastic:aimd", plain()).unwrap();
+        assert_eq!(e3.direct_quota(), None);
+        e3.take(0, 1, true).unwrap();
+        assert!(e3.stats_json().get("direct_quota").is_none());
+    }
+
+    #[test]
+    fn concurrent_create_delete_same_name_is_safe() {
+        // The shard refactor must not regress registry races: hammer
+        // one name with create/delete from several threads; every op
+        // must either succeed or fail cleanly, and the final state
+        // must be coherent.
+        let r = Arc::new(Registry::new(4));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let mut created = 0u64;
+                    let mut deleted = 0u64;
+                    for i in 0..200 {
+                        if (t + i) % 2 == 0 {
+                            if r.create("contested", "counter", "elastic:aimd", plain()).is_ok()
+                            {
+                                created += 1;
+                            }
+                        } else if r.remove("contested").is_ok() {
+                            deleted += 1;
+                        }
+                    }
+                    (created, deleted)
+                })
+            })
+            .collect();
+        let (mut created, mut deleted) = (0, 0);
+        for t in threads {
+            let (c, d) = t.join().unwrap();
+            created += c;
+            deleted += d;
+        }
+        let live = r.get("contested").is_ok();
+        assert_eq!(created, deleted + live as u64, "creates balance deletes + survivor");
+        assert_eq!(r.len(), live as usize);
+    }
+
+    #[test]
+    fn delete_while_enqueue_in_flight_is_safe() {
+        // A data-plane op holds its own Arc: deleting the object under
+        // it must not invalidate the queue mid-operation, and items
+        // already enqueued through the doomed handle stay readable
+        // through that handle.
+        let r = Arc::new(Registry::new(4));
+        r.create("doomed", "queue", "lcrq+elastic:fixed:2", plain()).unwrap();
+        let entry = r.get("doomed").unwrap();
+        let writer = {
+            let entry = Arc::clone(&entry);
+            std::thread::spawn(move || {
+                let mut sent = 0u64;
+                for i in 0..500u64 {
+                    entry.enqueue(1, i).unwrap();
+                    sent += 1;
+                }
+                sent
+            })
+        };
+        // Race the delete into the middle of the enqueue storm.
+        while r.remove("doomed").is_err() {
+            std::hint::spin_loop();
+        }
+        let sent = writer.join().unwrap();
+        assert_eq!(sent, 500, "enqueues on a held Arc survive the delete");
+        assert!(r.get("doomed").is_err(), "name is gone from the registry");
+        let mut drained = 0u64;
+        while entry.dequeue(0).unwrap().is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, sent, "no items lost to the race");
+    }
+
+    #[test]
     fn queue_entry_ops() {
         let r = Registry::new(2);
-        let e = r.create("q", "queue", "lcrq+elastic:fixed:2", None).unwrap();
+        let e = r.create("q", "queue", "lcrq+elastic:fixed:2", plain()).unwrap();
         assert_eq!(e.dequeue(0).unwrap(), None);
         e.enqueue(0, 7).unwrap();
         e.enqueue(1, 8).unwrap();
@@ -468,7 +677,7 @@ mod tests {
     #[test]
     fn queue_max_width_override_applies() {
         let r = Registry::new(2);
-        let e = r.create("q", "queue", "lcrq+elastic:aimd", Some(20)).unwrap();
+        let e = r.create("q", "queue", "lcrq+elastic:aimd", CreateOpts::width(Some(20))).unwrap();
         assert_eq!(e.resize(100).unwrap().0, 20, "clamped to the create-time override");
         let stats = e.stats_json();
         assert_eq!(stats.get("max_width").and_then(Json::as_u64), Some(20));
@@ -477,7 +686,7 @@ mod tests {
     #[test]
     fn non_elastic_queue_has_no_width_controls() {
         let r = Registry::new(2);
-        let e = r.create("q", "queue", "lcrq+hw", None).unwrap();
+        let e = r.create("q", "queue", "lcrq+hw", plain()).unwrap();
         e.enqueue(0, 1).unwrap();
         assert!(e.resize(2).is_err());
         assert!(e.set_policy(WidthPolicy::SqrtP).is_err());
@@ -490,7 +699,7 @@ mod tests {
     #[test]
     fn aggfunnel_counter_spec_pins_width() {
         let r = Registry::new(2);
-        let e = r.create("c", "counter", "aggfunnel:3", None).unwrap();
+        let e = r.create("c", "counter", "aggfunnel:3", plain()).unwrap();
         let stats = e.stats_json();
         assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(3));
         assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("fixed-3"));

@@ -1,0 +1,347 @@
+//! Shards: independent contention domains for the registry service.
+//!
+//! The paper's thesis is that one hot memory word cannot absorb every
+//! thread's fetch&adds; PR 3's registry recreated the same bottleneck
+//! one level up — every object behind one accept loop, one lease
+//! pool, one resize controller. A [`Shard`] is the unit that breaks
+//! that up: it owns its *own* [`Registry`], listener port, `workers`-
+//! sized tid lease pool, [`Metrics`], and resize-controller thread,
+//! so unrelated objects never share an accept loop, a lock domain, or
+//! a controller walk (the shard-per-contention-domain design of
+//! *Sharded Elimination and Combining*, PAPERS.md).
+//!
+//! Names route to shards by **FNV-1a 64** hash ([`shard_of`]); the
+//! parent `service` module is the router that owns the shard map and
+//! the cross-shard operations, while clients that have seen the
+//! `shardmap` line talk to the owning shard's port directly — the hot
+//! path never crosses a shard boundary.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::registry::Registry;
+use super::ServerState;
+use crate::util::json::Json;
+
+/// The hash scheme advertised in the `shardmap` line. Clients must
+/// use the same function or they will knock on the wrong door (the
+/// server still answers — it forwards in-process — but the hot path
+/// stops being shard-local).
+pub const SHARD_HASH_SCHEME: &str = "fnv1a64";
+
+/// FNV-1a 64-bit hash of an object name.
+pub fn fnv1a64(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The shard an object name routes to: `fnv1a64(name) % shards`.
+pub fn shard_of(name: &str, shards: usize) -> usize {
+    if shards <= 1 {
+        0
+    } else {
+        (fnv1a64(name) % shards as u64) as usize
+    }
+}
+
+/// The funnel thread-id lease pool: one id per concurrent connection
+/// on this shard. Local leases are `1..=capacity`; they are mapped to
+/// process-global funnel tids by [`Shard::global_tid`] (global id 0
+/// is reserved for in-process callers — boot, benchmarks embedding
+/// the server).
+pub(super) struct TidLease {
+    free: Mutex<Vec<usize>>,
+    pub(super) capacity: usize,
+}
+
+impl TidLease {
+    pub(super) fn new(capacity: usize) -> Self {
+        Self { free: Mutex::new((1..=capacity).rev().collect()), capacity }
+    }
+
+    pub(super) fn lease(&self) -> Option<usize> {
+        self.free.lock().unwrap().pop()
+    }
+
+    pub(super) fn release(&self, lease: usize) {
+        debug_assert!(lease >= 1 && lease <= self.capacity);
+        self.free.lock().unwrap().push(lease);
+    }
+}
+
+/// One registry shard.
+pub struct Shard {
+    /// Position in the shard map (and the port-layout offset).
+    pub index: usize,
+    /// The TCP port this shard's listener is bound to.
+    pub port: u16,
+    /// This shard's slice of the namespace.
+    pub registry: Registry,
+    /// Shard-level counters (connections, rejections, requests,
+    /// forwarded); per-object traffic lives on each entry.
+    pub metrics: Metrics,
+    pub(super) tids: TidLease,
+}
+
+impl Shard {
+    pub(super) fn new(index: usize, port: u16, registry: Registry, workers: usize) -> Self {
+        Self { index, port, registry, metrics: Metrics::new(), tids: TidLease::new(workers) }
+    }
+
+    /// Map a shard-local lease to a process-global funnel tid.
+    ///
+    /// Every object is built for `shards * workers + 1` thread ids, so
+    /// a connection accepted on *any* shard can safely operate on an
+    /// object owned by any other shard (a mis-routed or legacy client
+    /// is forwarded in-process): shard `s`'s leases `1..=workers`
+    /// become tids `s*workers + 1 ..= s*workers + workers`, disjoint
+    /// across shards by construction.
+    pub(super) fn global_tid(&self, lease: usize) -> usize {
+        self.index * self.tids.capacity + lease
+    }
+}
+
+/// Returns a leased tid to its shard's pool when dropped — including
+/// when the connection handler panics, so a crashed handler cannot
+/// permanently shrink the shard's connection capacity.
+struct LeaseGuard {
+    state: Arc<ServerState>,
+    shard: usize,
+    lease: usize,
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        self.state.shards[self.shard].tids.release(self.lease);
+    }
+}
+
+/// Spawn this shard's resize-controller thread: walk the shard's own
+/// registry and apply each object's policy to its contention window
+/// every poll period. Sleeps in short slices so shutdown never waits
+/// on a long configured period.
+pub(super) fn spawn_controller(
+    state: Arc<ServerState>,
+    shard: usize,
+    period: std::time::Duration,
+) -> std::thread::JoinHandle<()> {
+    let slice = period.min(std::time::Duration::from_millis(20));
+    std::thread::spawn(move || loop {
+        let mut slept = std::time::Duration::ZERO;
+        while slept < period {
+            if state.stopping() {
+                return;
+            }
+            let chunk = slice.min(period - slept);
+            std::thread::sleep(chunk);
+            slept += chunk;
+        }
+        if state.stopping() {
+            return;
+        }
+        for entry in state.shards[shard].registry.list() {
+            entry.poll();
+        }
+    })
+}
+
+/// Spawn this shard's accept loop: non-blocking polls bounded by the
+/// stop flag (the explicit accept deadline that replaces the old
+/// wake-up-by-connecting shutdown nudge).
+pub(super) fn spawn_accept_loop(
+    state: Arc<ServerState>,
+    shard: usize,
+    listener: TcpListener,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        if state.stopping() {
+            return;
+        }
+        let conn = match listener.accept() {
+            Ok((conn, _)) => conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                continue;
+            }
+            Err(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                continue;
+            }
+        };
+        state.shards[shard].metrics.incr("connections");
+        let Some(lease) = state.shards[shard].tids.lease() else {
+            // All of this shard's funnel tids are leased: reject
+            // instead of running a connection on an out-of-range
+            // thread id.
+            state.shards[shard].metrics.incr("rejected");
+            let _ = reject_conn(&state, shard, conn);
+            continue;
+        };
+        let handler = {
+            let state = Arc::clone(&state);
+            std::thread::spawn(move || {
+                let _guard = LeaseGuard { state: Arc::clone(&state), shard, lease };
+                let tid = state.shards[shard].global_tid(lease);
+                let _ = handle_conn(&state, shard, tid, conn);
+            })
+        };
+        let mut held = conns.lock().unwrap();
+        held.retain(|h| !h.is_finished());
+        held.push(handler);
+    })
+}
+
+/// Tell an over-capacity client why it is being dropped.
+fn reject_conn(state: &ServerState, shard: usize, mut conn: TcpStream) -> std::io::Result<()> {
+    // Accepted sockets do not inherit the listener's non-blocking
+    // mode on Linux, but make it explicit for portability.
+    conn.set_nonblocking(false)?;
+    if state.shards.len() > 1 {
+        // Sharded servers greet before rejecting, so a routing client
+        // still learns the map and can retry on a less loaded shard.
+        conn.write_all(state.shardmap_json(shard, true).to_string().as_bytes())?;
+        conn.write_all(b"\n")?;
+    }
+    let capacity = state.shards[shard].tids.capacity;
+    // Single-shard servers keep the pre-shard rejection wording
+    // (wire compatibility); sharded servers name the full shard so
+    // a routing client can tell which door was shut. `rejected` is
+    // the structured marker clients key their retry policy on.
+    let error = if state.shards.len() > 1 {
+        format!("shard {shard} at capacity ({capacity} connection slots)")
+    } else {
+        format!("server at capacity ({capacity} connection slots)")
+    };
+    let resp = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("rejected", Json::Bool(true)),
+        ("error", Json::str(error)),
+    ]);
+    conn.write_all(resp.to_string().as_bytes())?;
+    conn.write_all(b"\n")?;
+    // A client may have pipelined a request before we rejected; if
+    // those bytes are still unread when the socket drops, the close
+    // can become an RST that destroys the rejection line before the
+    // client reads it. Send our FIN, then briefly drain the receive
+    // side so the close is clean. Bounded: a few short reads, so a
+    // rejection cannot stall the accept loop for long.
+    let _ = conn.shutdown(std::net::Shutdown::Write);
+    conn.set_read_timeout(Some(std::time::Duration::from_millis(20))).ok();
+    let mut sink = [0u8; 256];
+    for _ in 0..4 {
+        match std::io::Read::read(&mut conn, &mut sink) {
+            Ok(0) | Err(_) => break, // client closed, or drain window over
+            Ok(_) => {}
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(state: &ServerState, shard: usize, tid: usize, conn: TcpStream) -> Result<()> {
+    conn.set_nonblocking(false).ok();
+    conn.set_nodelay(true).ok();
+    // Bounded reads so a handler parked on an idle connection still
+    // notices shutdown (otherwise `shutdown()` would hang on join).
+    conn.set_read_timeout(Some(std::time::Duration::from_millis(200))).ok();
+    let mut writer = conn.try_clone()?;
+    let mut reader = BufReader::new(conn);
+    // Sharded servers push the shard map on connect so clients can
+    // route follow-up requests straight to the owning shard's port.
+    // Single-shard servers stay line-for-line wire-compatible with
+    // the pre-shard protocol: no greeting.
+    if state.shards.len() > 1 {
+        writer.write_all(state.shardmap_json(shard, true).to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    // One buffer across iterations: a read timeout mid-line leaves the
+    // bytes read so far in `line` (read_until semantics), so a slow
+    // writer's request is completed by later reads instead of being
+    // dropped and desyncing the line stream.
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.stopping() {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if !line.trim().is_empty() {
+            let response = match super::handle_request(state, shard, tid, &line) {
+                Ok(json) => json,
+                Err(e) => Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(e.to_string())),
+                ]),
+            };
+            writer.write_all(response.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+        }
+        line.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for shards in [1, 2, 4, 7] {
+            for name in ["tickets", "jobs", "orders", "a", "zz-9"] {
+                let s = shard_of(name, shards);
+                assert!(s < shards, "{name} -> {s} out of range for {shards}");
+                assert_eq!(s, shard_of(name, shards), "routing must be deterministic");
+            }
+        }
+        assert_eq!(shard_of("anything", 1), 0);
+        assert_eq!(shard_of("anything", 0), 0);
+    }
+
+    #[test]
+    fn names_spread_across_shards() {
+        // Not a uniformity proof — just that the hash doesn't collapse
+        // a realistic name population onto one shard.
+        let shards = 4;
+        let mut hit = vec![false; shards];
+        for i in 0..32 {
+            hit[shard_of(&format!("object-{i}"), shards)] = true;
+        }
+        assert!(hit.iter().all(|h| *h), "32 names left a shard empty: {hit:?}");
+    }
+
+    #[test]
+    fn tid_lease_roundtrip() {
+        let pool = TidLease::new(2);
+        let a = pool.lease().unwrap();
+        let b = pool.lease().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.lease().is_none(), "capacity 2");
+        pool.release(a);
+        assert_eq!(pool.lease(), Some(a));
+    }
+}

@@ -115,11 +115,7 @@ fn two_objects_served_concurrently_with_independent_stats() {
     let per_client = 250u64;
     let server = serve(&ServeOpts {
         resize_interval_ms: 5,
-        objects: vec![ObjectManifest {
-            name: "jobs".into(),
-            kind: "queue".into(),
-            backend: "lcrq+elastic:aimd".into(),
-        }],
+        objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic:aimd")],
         ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
     })
     .unwrap();
@@ -190,6 +186,228 @@ fn two_objects_served_concurrently_with_independent_stats() {
     let t_ops = tickets.get("batched_ops").and_then(Json::as_u64).unwrap();
     let j_ops = jobs.get("batched_ops").and_then(Json::as_u64).unwrap();
     assert!(t_ops > 0 && j_ops > 0, "both funnels saw traffic");
+    server.shutdown();
+}
+
+#[test]
+fn four_shards_serve_independent_objects_with_global_view() {
+    // The sharding acceptance path: a 4-shard server with a mixed
+    // counter+queue namespace created *through* different shards.
+    // Every object must be independently served (dense counter
+    // ranges, exact queue multisets per object), while `list` and the
+    // cluster aggregate see all of them regardless of shard.
+    let clients = 4;
+    let per_client = 150u64;
+    let shards = 4;
+    // These four names hash to four distinct shards (and to both
+    // shards at shards = 2) — the spread is asserted below.
+    let counters = ["orders", "users"];
+    let queues = ["jobs", "mail"];
+    let server = serve(&ServeOpts {
+        resize_interval_ms: 5,
+        ..ServeOpts::sharded("127.0.0.1:0", shards, clients + 1, 2)
+    })
+    .unwrap();
+    assert_eq!(server.shard_ports().len(), shards);
+    let addr = Arc::new(server.addr.to_string());
+
+    // Create the namespace through a routing client; the objects land
+    // on their hash shards.
+    {
+        let mut c = TicketClient::connect(&addr).unwrap();
+        assert_eq!(c.shards(), shards, "client learned the shard map");
+        for name in counters {
+            c.create(name, "counter", "elastic:fixed:2").unwrap();
+        }
+        for name in queues {
+            c.create(name, "queue", "lcrq+elastic:fixed:2").unwrap();
+        }
+        let shard_spread: std::collections::BTreeSet<usize> = counters
+            .iter()
+            .chain(queues.iter())
+            .map(|n| c.shard_for(n))
+            .collect();
+        assert_eq!(shard_spread.len(), shards, "namespace must cover every shard");
+    }
+
+    let handles: Vec<_> = (0..clients as u64)
+        .map(|i| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let mut c = TicketClient::connect(&addr).unwrap();
+                let counter = ["orders", "users"][(i % 2) as usize];
+                let queue = ["jobs", "mail"][(i % 2) as usize];
+                let mut ranges = Vec::new();
+                let mut got = Vec::new();
+                for k in 0..per_client {
+                    ranges.push((c.take_on(counter, 1 + k % 3, k % 9 == 0).unwrap(), 1 + k % 3));
+                    c.enqueue(queue, (i << 32) | k).unwrap();
+                    if let Some(item) = c.dequeue(queue).unwrap() {
+                        got.push(item);
+                    }
+                }
+                (i, ranges, got)
+            })
+        })
+        .collect();
+    // Per-object result pools: clients i and i+2 share object pair
+    // i % 2, so ranges and items merge per object.
+    let mut ranges_by_counter: std::collections::BTreeMap<&str, Vec<(u64, u64)>> =
+        Default::default();
+    let mut consumed_by_queue: std::collections::BTreeMap<&str, Vec<u64>> = Default::default();
+    let mut expected_by_queue: std::collections::BTreeMap<&str, Vec<u64>> = Default::default();
+    for h in handles {
+        let (i, ranges, got) = h.join().unwrap();
+        ranges_by_counter.entry(counters[(i % 2) as usize]).or_default().extend(ranges);
+        consumed_by_queue.entry(queues[(i % 2) as usize]).or_default().extend(got);
+        expected_by_queue
+            .entry(queues[(i % 2) as usize])
+            .or_default()
+            .extend((0..per_client).map(|k| (i << 32) | k));
+    }
+    let mut c = TicketClient::connect(&addr).unwrap();
+    // Counters: each object's ranges tile [0, its own total) densely —
+    // objects on different shards never bleed into each other.
+    for (name, mut ranges) in ranges_by_counter {
+        ranges.sort_unstable();
+        let mut expect = 0;
+        for (s, n) in ranges {
+            assert_eq!(s, expect, "{name}: gap or overlap in counter ranges");
+            expect = s + n;
+        }
+        assert_eq!(c.read_on(name).unwrap(), expect, "{name}: final counter value");
+    }
+    // Queues: drain stragglers, then each multiset must be exact.
+    for (name, consumed) in &mut consumed_by_queue {
+        while let Some(item) = c.dequeue(name).unwrap() {
+            consumed.push(item);
+        }
+        consumed.sort_unstable();
+        let expected = expected_by_queue.get_mut(name).unwrap();
+        expected.sort_unstable();
+        assert_eq!(consumed, expected, "{name}: queue lost or duplicated items");
+    }
+
+    // Cross-shard view: `list` merges every shard, sorted.
+    let listed = c.list().unwrap();
+    let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
+    assert_eq!(names, vec!["jobs", "mail", "orders", "tickets", "users"]);
+    // The cluster aggregate counts every object and shard.
+    let agg = c.cluster_stats().unwrap();
+    assert_eq!(agg.get("shards").and_then(Json::as_u64), Some(shards as u64));
+    assert_eq!(agg.get("objects").and_then(Json::as_u64), Some(5));
+    let takes = agg
+        .get("totals")
+        .and_then(|t| t.get("take"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0)
+        + agg
+            .get("totals")
+            .and_then(|t| t.get("take_priority"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+    assert_eq!(takes, clients as u64 * per_client, "aggregate sees all counter traffic");
+    // Per-object stats still resolve through the owning shard.
+    let orders = c.stats_on("orders").unwrap();
+    assert_eq!(orders.get("kind").and_then(Json::as_str), Some("counter"));
+    assert!(orders.get("shard").and_then(Json::as_u64).is_some());
+    server.shutdown();
+}
+
+#[test]
+fn single_shard_server_is_wire_compatible_with_pr3_clients() {
+    // A raw pre-shard client: no handshake, first line read is the
+    // first response. Against `shards = 1` the server must not greet.
+    use std::io::{BufRead, Write};
+    let server = start(2);
+    let conn = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(conn);
+    writer.write_all(b"{\"op\":\"take\",\"count\":2}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+    assert_eq!(resp.get("start").and_then(Json::as_u64), Some(0));
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_create_delete_over_the_wire() {
+    // Registry race, end to end: two connections fight over one name
+    // with create/delete; every response must be a clean ok or error
+    // line and the server must stay serviceable.
+    let server = start(3);
+    let addr = Arc::new(server.addr.to_string());
+    let spinners: Vec<_> = (0..2)
+        .map(|t| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let mut c = TicketClient::connect(&addr).unwrap();
+                let mut ok = 0u64;
+                for i in 0..100 {
+                    let r = if (t + i) % 2 == 0 {
+                        c.create("contested", "counter", "elastic:fixed:1")
+                    } else {
+                        c.delete("contested")
+                    };
+                    if r.is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let wins: u64 = spinners.into_iter().map(|s| s.join().unwrap()).sum();
+    assert!(wins > 0, "at least some ops must win the race");
+    let mut c = TicketClient::connect(&addr).unwrap();
+    assert_eq!(c.take(1, false).unwrap(), 0, "server survived the churn");
+    server.shutdown();
+}
+
+#[test]
+fn delete_during_enqueue_storm_is_clean() {
+    // One connection hammers enqueues while another deletes the
+    // queue. The enqueuer must see only clean responses (ok until the
+    // delete lands, "no object" errors after) and the server must
+    // keep serving both connections.
+    let server = start(3);
+    let addr = server.addr.to_string();
+    let mut victim = TicketClient::connect(&addr).unwrap();
+    victim.create("doomed", "queue", "lcrq+elastic:fixed:2").unwrap();
+    let writer = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = TicketClient::connect(&addr).unwrap();
+            let mut sent = 0u64;
+            let mut refused = 0u64;
+            for i in 0..2000u64 {
+                match c.enqueue("doomed", i) {
+                    Ok(()) => {
+                        assert_eq!(refused, 0, "enqueue succeeded after a 'no object' error");
+                        sent += 1;
+                    }
+                    Err(e) => {
+                        assert!(
+                            e.to_string().contains("no object"),
+                            "unexpected error mid-storm: {e}"
+                        );
+                        refused += 1;
+                    }
+                }
+            }
+            (sent, refused)
+        })
+    };
+    // Let the storm get going, then yank the object out from under it.
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    victim.delete("doomed").unwrap();
+    let (sent, refused) = writer.join().unwrap();
+    assert_eq!(sent + refused, 2000, "every request got a response");
+    assert!(victim.dequeue("doomed").is_err(), "object is gone");
+    // Both connections still work.
+    assert_eq!(victim.take(1, false).unwrap(), 0);
     server.shutdown();
 }
 
