@@ -16,6 +16,12 @@
 //!   one series per shard count. Clients route with the `shardmap`
 //!   line, so a shard is an independent contention domain end to end
 //!   (own accept loop, lease pool, registry, controller).
+//! * `persist`: the durability tax — the same mixed workload with the
+//!   WAL off, group-committed, and synchronous, so `BENCH_persist.json`
+//!   shows wire throughput next to the records-per-request ratio
+//!   (group commit must stay well below one record per op: one
+//!   journal record per aggregated batch, mirroring the paper's
+//!   one-hardware-F&A-per-batch amortization).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -25,7 +31,7 @@ use anyhow::{Context, Result};
 
 use super::Row;
 use crate::config::ObjectManifest;
-use crate::service::{serve, ServeOpts, ServerHandle, TicketClient};
+use crate::service::{serve, PersistOpts, ServeOpts, ServerHandle, TicketClient};
 use crate::util::json::Json;
 use crate::util::stats::mops;
 
@@ -279,6 +285,112 @@ pub fn run_service_shard(opts: &ServiceShardOpts) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
+/// The durability modes the `persist` scenario compares.
+pub const SERVICE_PERSIST_MODES: [&str; 3] = ["wal-off", "wal-group", "wal-sync"];
+
+/// Options for [`run_service_persist`].
+#[derive(Clone, Debug)]
+pub struct ServicePersistOpts {
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for ServicePersistOpts {
+    fn default() -> Self {
+        Self { clients: vec![1, 2, 4, 8], duration: Duration::from_millis(300) }
+    }
+}
+
+impl ServicePersistOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self { clients: vec![2], duration: Duration::from_millis(60) }
+    }
+}
+
+/// A unique scratch directory for one benchmark point's `data_dir`.
+fn scratch_data_dir(tag: &str) -> std::path::PathBuf {
+    crate::util::scratch_dir(&format!("bench-{tag}"))
+}
+
+/// Run the `persist` scenario: the counter + queue mixed workload
+/// with durability off (`wal-off`), group-committed (`wal-group`),
+/// and synchronous (`wal-sync`). Emits `p1` (Mops/s over the wire)
+/// and `p2` (WAL records per served request — the amortization
+/// measure: group commit writes one record per object per interval,
+/// so `p2` must sit far below 1; sync mode is the per-op upper
+/// bound, `wal-off` is identically 0).
+pub fn run_service_persist(opts: &ServicePersistOpts) -> Result<Vec<Row>> {
+    fn step(_i: u64, c: &mut TicketClient, seq: &mut u64) -> Result<u64> {
+        c.take(1, false)?;
+        c.enqueue("jobs", *seq)?;
+        *seq += 1;
+        c.dequeue("jobs")?;
+        Ok(3)
+    }
+    fn probe(p: &mut TicketClient) -> Result<Json> {
+        p.cluster_stats()
+    }
+    let mut rows = Vec::new();
+    for mode in SERVICE_PERSIST_MODES {
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let data_dir = scratch_data_dir(mode);
+            let persist = match mode {
+                "wal-off" => None,
+                "wal-group" => Some(PersistOpts {
+                    data_dir: data_dir.to_string_lossy().into_owned(),
+                    fsync_interval_ms: 5,
+                    snapshot_interval_ms: 0,
+                }),
+                _ => Some(PersistOpts::sync(data_dir.to_string_lossy().into_owned())),
+            };
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+                persist,
+                // One spare lease for the post-run stats probe.
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving {mode} for {clients} clients"))?;
+            let (throughput, cluster) =
+                measure_wire_point(server, clients, opts.duration, step, probe)
+                    .with_context(|| format!("{mode} with {clients} clients"))?;
+            let per_shard = cluster.get("per_shard").and_then(Json::as_arr);
+            let sum = |key: &str| -> u64 {
+                per_shard
+                    .map(|shards| {
+                        shards
+                            .iter()
+                            .filter_map(|s| s.get(key).and_then(Json::as_u64))
+                            .sum::<u64>()
+                    })
+                    .unwrap_or(0)
+            };
+            let requests = sum("requests").max(1);
+            let wal_records = sum("wal_records");
+            let _ = std::fs::remove_dir_all(&data_dir);
+            rows.push(Row {
+                figure: "p1",
+                series: mode.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: throughput,
+            });
+            rows.push(Row {
+                figure: "p2",
+                series: mode.to_string(),
+                threads: clients,
+                metric: "wal_records_per_request",
+                value: wal_records as f64 / requests as f64,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,6 +427,47 @@ mod tests {
                 "object names {names:?} must cover all {shards} shards, got {hit:?}"
             );
         }
+    }
+
+    #[test]
+    fn persist_sweep_measures_the_durability_tax() {
+        let opts = ServicePersistOpts { clients: vec![2], duration: Duration::from_millis(50) };
+        let rows = run_service_persist(&opts).unwrap();
+        assert_eq!(rows.len(), 2 * SERVICE_PERSIST_MODES.len());
+        let p1 = |mode: &str| {
+            rows.iter()
+                .find(|r| r.figure == "p1" && r.series == mode)
+                .unwrap_or_else(|| panic!("missing p1/{mode}"))
+                .value
+        };
+        let p2 = |mode: &str| {
+            rows.iter()
+                .find(|r| r.figure == "p2" && r.series == mode)
+                .unwrap_or_else(|| panic!("missing p2/{mode}"))
+                .value
+        };
+        for mode in SERVICE_PERSIST_MODES {
+            assert!(p1(mode) > 0.0, "{mode}: zero wire throughput");
+        }
+        assert_eq!(p2("wal-off"), 0.0, "no WAL, no records");
+        assert!(
+            p2("wal-group") < 0.5,
+            "group commit must journal per batch, not per op (got {} records/request)",
+            p2("wal-group")
+        );
+        assert!(
+            p2("wal-sync") > p2("wal-group"),
+            "sync mode is the per-op upper bound"
+        );
+        // The headline claim: group-committed durability costs far
+        // less than an order of magnitude of wire throughput (the
+        // bound is deliberately loose for noisy CI machines).
+        assert!(
+            p1("wal-group") > p1("wal-off") / 20.0,
+            "group-committed WAL collapsed throughput: {} vs {}",
+            p1("wal-group"),
+            p1("wal-off")
+        );
     }
 
     #[test]

@@ -113,12 +113,22 @@ pub struct ObjectManifest {
     /// §4.4 direct-thread quota `d` for counters (`None` = unlimited
     /// direct; every `priority` request bypasses the funnel).
     pub direct_quota: Option<usize>,
+    /// Durability opt-out: `persist = false` keeps this object
+    /// ephemeral even when the service runs with a `data_dir`
+    /// (re-created fresh from the manifest at every boot).
+    pub persist: bool,
 }
 
 impl ObjectManifest {
     /// A quota-less manifest (the common case and the PR 3 shape).
     pub fn new(name: impl Into<String>, kind: impl Into<String>, backend: impl Into<String>) -> Self {
-        Self { name: name.into(), kind: kind.into(), backend: backend.into(), direct_quota: None }
+        Self {
+            name: name.into(),
+            kind: kind.into(),
+            backend: backend.into(),
+            direct_quota: None,
+            persist: true,
+        }
     }
     /// The backend spec an object kind defaults to when none is given
     /// (used for kind validation here and for defaulting at object
@@ -154,6 +164,20 @@ pub struct ServiceSettings {
     /// Controller poll period for adaptive policies, in milliseconds
     /// (0 disables the resize controller thread).
     pub resize_interval_ms: u64,
+    /// Durability root: each shard persists a WAL + snapshots under
+    /// `<data_dir>/shard-<i>` and recovers from them at boot. Empty
+    /// (the default) disables persistence entirely.
+    pub data_dir: String,
+    /// Master durability switch: `false` ignores `data_dir` (useful
+    /// to boot a config with persistence temporarily off).
+    pub persist: bool,
+    /// Group-commit interval in milliseconds (one WAL append per
+    /// object per interval); `0` = synchronous mode — every mutation
+    /// appends its record before the response is acked.
+    pub fsync_interval_ms: u64,
+    /// Snapshot rewrite period in milliseconds (`0` = only at boot,
+    /// graceful shutdown, and the `snapshot` wire op).
+    pub snapshot_interval_ms: u64,
     /// Objects pre-created at boot (besides the default counter).
     pub objects: Vec<ObjectManifest>,
 }
@@ -168,6 +192,10 @@ impl Default for ServiceSettings {
             width_policy: "aimd".into(),
             max_aggregators: 12,
             resize_interval_ms: 25,
+            data_dir: String::new(),
+            persist: true,
+            fsync_interval_ms: 5,
+            snapshot_interval_ms: 60_000,
             objects: Vec::new(),
         }
     }
@@ -214,8 +242,8 @@ impl AppConfig {
         let sv = &mut self.service;
         sv.addr = doc.str_or("service.addr", &sv.addr);
         // Clamp on the i64 before the cast: a negative value must
-        // floor to 1, not wrap to a huge count (the service multiplies
-        // `shards * workers` to size funnel thread tables).
+        // floor to 1, not wrap to a huge count (the service sizes
+        // funnel thread tables from `workers`).
         sv.shards = doc.int_or("service.shards", sv.shards as i64).max(1) as usize;
         sv.workers = doc.int_or("service.workers", sv.workers as i64).max(1) as usize;
         sv.aggregators =
@@ -225,6 +253,13 @@ impl AppConfig {
             doc.int_or("service.max_aggregators", sv.max_aggregators as i64).max(1) as usize;
         sv.resize_interval_ms =
             doc.int_or("service.resize_interval_ms", sv.resize_interval_ms as i64).max(0) as u64;
+        sv.data_dir = doc.str_or("service.data_dir", &sv.data_dir);
+        sv.persist = doc.bool_or("service.persist", sv.persist);
+        sv.fsync_interval_ms =
+            doc.int_or("service.fsync_interval_ms", sv.fsync_interval_ms as i64).max(0) as u64;
+        sv.snapshot_interval_ms = doc
+            .int_or("service.snapshot_interval_ms", sv.snapshot_interval_ms as i64)
+            .max(0) as u64;
 
         // `[objects.<name>]` manifest sections; later layers override
         // per name, fields merge within a name.
@@ -261,6 +296,11 @@ impl AppConfig {
                             anyhow!("{key}: direct_quota must be a non-negative integer")
                         })?;
                     entry.direct_quota = Some(d as usize);
+                }
+                "persist" => {
+                    entry.persist = value
+                        .as_bool()
+                        .ok_or_else(|| anyhow!("{key}: persist must be a boolean"))?;
                 }
                 other => return Err(anyhow!("unknown object field {other:?} in {key:?}")),
             }
@@ -432,6 +472,55 @@ mod tests {
         assert_eq!(vip.direct_quota, Some(1), "integer-valued strings accepted");
         let doc = TomlDoc::parse("[objects.orders]\ndirect_quota = \"lots\"").unwrap();
         assert!(c.apply_doc(&doc).is_err(), "non-integer quota rejected");
+    }
+
+    #[test]
+    fn persistence_settings_apply() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.service.data_dir, "", "persistence is off by default");
+        assert!(c.service.persist);
+        assert_eq!(c.service.fsync_interval_ms, 5);
+        assert_eq!(c.service.snapshot_interval_ms, 60_000);
+        let doc = TomlDoc::parse(
+            r#"
+            [service]
+            data_dir = "/var/lib/aggfunnels"
+            fsync_interval_ms = 0
+            snapshot_interval_ms = 30000
+            persist = false
+            "#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.data_dir, "/var/lib/aggfunnels");
+        assert_eq!(c.service.fsync_interval_ms, 0, "0 = synchronous mode");
+        assert_eq!(c.service.snapshot_interval_ms, 30_000);
+        assert!(!c.service.persist, "master switch can disable data_dir");
+        let doc = TomlDoc::parse("service.fsync_interval_ms = -5").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.fsync_interval_ms, 0, "negative intervals clamp");
+    }
+
+    #[test]
+    fn object_persist_opt_out_parses() {
+        let mut c = AppConfig::default();
+        let doc = TomlDoc::parse(
+            r#"
+            [objects.scratch]
+            kind = "queue"
+            persist = false
+            [objects.kept]
+            kind = "counter"
+            "#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        let scratch = c.service.objects.iter().find(|o| o.name == "scratch").unwrap();
+        assert!(!scratch.persist);
+        let kept = c.service.objects.iter().find(|o| o.name == "kept").unwrap();
+        assert!(kept.persist, "persist defaults to true");
+        let doc = TomlDoc::parse("[objects.scratch]\npersist = \"nope\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "non-boolean persist rejected");
     }
 
     #[test]

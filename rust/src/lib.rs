@@ -29,8 +29,9 @@
 //!   (`artifacts/*.hlo.txt`) and the history verifier built on it.
 //! * [`service`] — the sharded registry service: named counters and
 //!   funnel-backed queues spread over name-hash-routed shards, each
-//!   an independent contention domain (the "deployable system"
-//!   wrapper).
+//!   an independent contention domain, with per-shard durability
+//!   (WAL + snapshots, crash recovery — `service::persist`) when run
+//!   with a `data_dir` (the "deployable system" wrapper).
 //! * [`config`] / [`util`] — hand-rolled substrates (TOML-subset
 //!   config, CLI parsing, PRNG, stats, JSON, timing harness, property
 //!   testing). The build is fully offline; the only external

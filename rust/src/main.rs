@@ -22,14 +22,15 @@ use aggfunnels::bench::native::{
     make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
 };
 use aggfunnels::bench::service_mix::{
-    run_service_mix, run_service_shard, ServiceMixOpts, ServiceShardOpts,
+    run_service_mix, run_service_persist, run_service_shard, ServiceMixOpts, ServicePersistOpts,
+    ServiceShardOpts,
 };
 use aggfunnels::bench::{rows_to_json, rows_to_table, rows_to_tsv};
 use aggfunnels::config::AppConfig;
 use aggfunnels::faa::choose::sqrt_p_aggregators;
 use aggfunnels::faa::WidthPolicy;
 use aggfunnels::runtime::{ContentionRuntime, OracleRuntime};
-use aggfunnels::service::{serve, ServeOpts, TicketClient};
+use aggfunnels::service::{serve, PersistOpts, ServeOpts, TicketClient};
 use aggfunnels::sim::algos::AlgoSpec;
 use aggfunnels::sim::workloads::{run_faa_point, FaaWorkload};
 use aggfunnels::util::cli::{Cli, Parsed};
@@ -58,6 +59,7 @@ fn main() {
         "obj" => cmd_obj(rest),
         "enqueue" => cmd_enqueue(rest),
         "dequeue" => cmd_dequeue(rest),
+        "snapshot" => cmd_snapshot(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -76,17 +78,18 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|mix|service-mix|service-shard|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|service-shard|persist|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
          verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
-         serve [--addr A] [--shards S] [--workers W] [--m M] [--policy P] [--max-m M] [--resize-ms T]\n  \
+         serve [--addr A] [--shards S] [--workers W] [--m M] [--policy P] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
          take [--addr A] [--name O] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n  \
-         obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B] [--direct-quota D] [--max-width W]\n  \
+         obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B] [--direct-quota D] [--max-width W] [--no-persist]\n  \
          enqueue --name O --item N [--addr A]\n  \
-         dequeue --name O [--addr A]\n\n\
+         dequeue --name O [--addr A]\n  \
+         snapshot [--addr A]\n\n\
          FAA algos:  {FAA_ALGOS:?}\n\
          Queues:     {QUEUE_ALGOS:?}\n\
          Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy], each with an optional :d<k> direct quota; queues compose as lcrq+<backend>\n\
@@ -132,9 +135,9 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
         opts.seed = s;
     }
 
-    // `all` covers the simulated groups; `service-mix` and
-    // `service-shard` start real servers, so they only run when named
-    // explicitly.
+    // `all` covers the simulated groups; `service-mix`,
+    // `service-shard` and `persist` start real servers, so they only
+    // run when named explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -153,6 +156,16 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
                 mix.clients = opts.grid.clone();
             }
             ("service-mix".to_string(), run_service_mix(&mix)?)
+        } else if g == "persist" {
+            let mut sweep = if p.has_flag("quick") {
+                ServicePersistOpts::quick()
+            } else {
+                ServicePersistOpts::default()
+            };
+            if p.get("grid").is_some() {
+                sweep.clients = opts.grid.clone();
+            }
+            ("persist".to_string(), run_service_persist(&sweep)?)
         } else if g == "service-shard" {
             let mut sweep = if p.has_flag("quick") {
                 ServiceShardOpts::quick()
@@ -377,12 +390,25 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("m", None, "initial aggregators per sign (default counter)")
         .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
         .opt("max-m", None, "aggregator slot capacity per sign")
-        .opt("resize-ms", None, "resize controller period (0 disables)");
+        .opt("resize-ms", None, "resize controller period (0 disables)")
+        .opt("data-dir", None, "durability root (per-shard WAL + snapshots; recovers at boot)")
+        .opt("fsync-ms", None, "WAL group-commit interval (0 = sync every mutation)")
+        .opt("snapshot-ms", None, "snapshot rewrite period (0 = only boot/shutdown/forced)");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let cfg = load_config(&p)?;
     let policy_spec = p.get_or("policy", &cfg.service.width_policy).to_string();
     let policy = WidthPolicy::parse(&policy_spec)
         .ok_or_else(|| anyhow!("unknown width policy {policy_spec:?}"))?;
+    let data_dir = p.get_or("data-dir", &cfg.service.data_dir).to_string();
+    let persist = if !data_dir.is_empty() && cfg.service.persist {
+        Some(PersistOpts {
+            data_dir,
+            fsync_interval_ms: p.parse_or("fsync-ms", cfg.service.fsync_interval_ms),
+            snapshot_interval_ms: p.parse_or("snapshot-ms", cfg.service.snapshot_interval_ms),
+        })
+    } else {
+        None
+    };
     let opts = ServeOpts {
         addr: p.get_or("addr", &cfg.service.addr).to_string(),
         shards: p.parse_or("shards", cfg.service.shards),
@@ -392,11 +418,20 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         max_aggregators: p.parse_or("max-m", cfg.service.max_aggregators),
         resize_interval_ms: p.parse_or("resize-ms", cfg.service.resize_interval_ms),
         objects: cfg.service.objects.clone(),
+        persist,
     };
     let handle = serve(&opts)?;
+    let durability = match &opts.persist {
+        Some(p) if p.sync_mode() => format!("durable (sync) under {}", p.data_dir),
+        Some(p) => format!(
+            "durable (group commit {}ms) under {}",
+            p.fsync_interval_ms, p.data_dir
+        ),
+        None => "in-memory only".to_string(),
+    };
     println!(
         "registry service on {} ({} shard(s) on ports {:?}, {} connection slots each, \
-         policy {}, {} boot object(s)); Ctrl-C to stop",
+         policy {}, {} boot object(s), {durability}); Ctrl-C to stop",
         handle.addr,
         handle.shard_ports().len(),
         handle.shard_ports(),
@@ -407,6 +442,21 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
+}
+
+fn cmd_snapshot(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels snapshot", "force a snapshot on a persistent service")
+        .opt("addr", Some("127.0.0.1:7471"), "service address");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    let resp = client.snapshot()?;
+    let shards = resp
+        .get("snapshots")
+        .and_then(aggfunnels::util::json::Json::as_arr)
+        .map(|a| a.len())
+        .unwrap_or(0);
+    println!("snapshotted {shards} shard(s): {}", resp.to_string());
+    Ok(())
 }
 
 fn cmd_take(args: Vec<String>) -> Result<()> {
@@ -445,7 +495,8 @@ fn cmd_obj(args: Vec<String>) -> Result<()> {
         .opt("kind", Some("counter"), "counter | queue")
         .opt("backend", None, "backend spec (defaults per kind)")
         .opt("max-width", None, "elastic slot capacity override")
-        .opt("direct-quota", None, "§4.4 d: max concurrent Fetch&AddDirect (counters)");
+        .opt("direct-quota", None, "§4.4 d: max concurrent Fetch&AddDirect (counters)")
+        .flag("no-persist", "keep the object ephemeral on a persistent server");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let verb = p.positional.first().map(String::as_str).unwrap_or("list");
     let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
@@ -466,6 +517,7 @@ fn cmd_obj(args: Vec<String>) -> Result<()> {
                 p.get_or("backend", ""),
                 p.parse_as::<u64>("max-width"),
                 p.parse_as::<u64>("direct-quota"),
+                !p.has_flag("no-persist"),
             )?;
             println!("created {kind} {name:?}");
         }

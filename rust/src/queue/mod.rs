@@ -9,7 +9,9 @@
 //! * [`prq`] — a single-word-CAS variant of the CRQ cell protocol
 //!   (15-bit cycle + safe bit + 48-bit value packed in one word),
 //!   standing in for LPRQ (Romanov & Koval, PPoPP 2023) in the
-//!   benchmark matrix; see DESIGN.md §Substitutions.
+//!   benchmark matrix; see DESIGN.md §Substitutions. Generic over the
+//!   same [`IndexFactory`] as LCRQ, so `prq+elastic:<policy>` rides
+//!   resizable funnel ring indices too.
 //! * [`msq`] — Michael–Scott queue, the classic CAS-based baseline.
 //!
 //! All queues implement [`ConcurrentQueue`] over `u64` items
@@ -25,7 +27,7 @@ pub use lcrq::{
     IndexCell, IndexFactory, Lcrq,
 };
 pub use msq::MsQueue;
-pub use prq::Prq;
+pub use prq::{Prq, PRQ_MAX_ITEM};
 
 use std::sync::Arc;
 
@@ -55,14 +57,29 @@ pub trait ConcurrentQueue: Send + Sync {
     }
 }
 
-/// Build a queue from a spec string: a family (`lcrq`, `prq`, `msq`),
-/// optionally composed with an index backend from the
-/// [`BackendSpec`] grammar — `lcrq+elastic:aimd`, `lcrq+aggfunnel:4`,
-/// `lcrq+hw`. Bare `lcrq`/`prq` default to hardware indices.
-/// `max_width` overrides the elastic slot capacity when given
-/// (ignored for non-elastic indices). Returns the queue plus, for
-/// elastic index backends, the factory handle a resize controller
-/// drives.
+/// Build a queue from a spec string: a family (`lcrq`, `prq`/`lprq`,
+/// `msq`), optionally composed with an index backend from the
+/// [`BackendSpec`] grammar — `lcrq+elastic:aimd`, `prq+aggfunnel:4`,
+/// `lcrq+hw`. Bare `lcrq`/`prq` default to hardware indices; both
+/// ring families accept every index backend, so the single-word-CAS
+/// cell protocol can ride elastic funnel indices too. `max_width`
+/// overrides the elastic slot capacity when given (ignored for
+/// non-elastic indices). Returns the queue plus, for elastic index
+/// backends, the factory handle a resize controller drives.
+/// Build a ring queue of the chosen family over `factory` (the two
+/// families share every index backend).
+fn ring_queue<F: IndexFactory>(
+    lcrq: bool,
+    max_threads: usize,
+    factory: F,
+) -> Arc<dyn ConcurrentQueue> {
+    if lcrq {
+        Arc::new(Lcrq::new(max_threads, factory))
+    } else {
+        Arc::new(Prq::new(max_threads, factory))
+    }
+}
+
 pub fn make_queue_with_handle(
     spec: &str,
     max_threads: usize,
@@ -76,8 +93,7 @@ pub fn make_queue_with_handle(
     let mut handle: Option<ElasticIndexFactory> = None;
     let queue: Arc<dyn ConcurrentQueue> = match (family, index) {
         ("msq", None) => Arc::new(MsQueue::new(max_threads)),
-        ("prq" | "lprq", None | Some("hw")) => Arc::new(Prq::new(max_threads, HwIndexFactory)),
-        ("lcrq", index) => {
+        ("lcrq" | "prq" | "lprq", index) => {
             let mut index_spec = BackendSpec::parse(index.unwrap_or("hw"))?;
             // Ring indices have no priority path, so a `:d<k>`
             // direct quota on the index spec would be silently
@@ -89,19 +105,21 @@ pub fn make_queue_with_handle(
             if let Some(w) = max_width {
                 index_spec = index_spec.with_max_width(w);
             }
+            let lcrq = family == "lcrq";
             match index_spec {
-                BackendSpec::Hw => Arc::new(Lcrq::new(max_threads, HwIndexFactory)),
-                BackendSpec::Agg { m, .. } => Arc::new(Lcrq::new(
+                BackendSpec::Hw => ring_queue(lcrq, max_threads, HwIndexFactory),
+                BackendSpec::Agg { m, .. } => ring_queue(
+                    lcrq,
                     max_threads,
                     AggIndexFactory { max_threads, aggregators: m },
-                )),
+                ),
                 BackendSpec::Comb => {
-                    Arc::new(Lcrq::new(max_threads, CombIndexFactory { max_threads }))
+                    ring_queue(lcrq, max_threads, CombIndexFactory { max_threads })
                 }
                 BackendSpec::Elastic { policy, max_width, .. } => {
                     let factory = ElasticIndexFactory::with_policy(max_threads, policy, max_width);
                     handle = Some(factory.clone());
-                    Arc::new(Lcrq::new(max_threads, factory))
+                    ring_queue(lcrq, max_threads, factory)
                 }
             }
         }
@@ -235,7 +253,13 @@ mod tests {
             "lcrq+elastic",
             "lcrq+elastic:sqrtp",
             "prq",
+            "prq+hw",
+            "prq+aggfunnel:4",
+            "prq+combfunnel",
+            "prq+elastic",
+            "prq+elastic:aimd",
             "lprq",
+            "lprq+elastic:sqrtp",
             "msq",
         ] {
             let q = make_queue(spec, 2).unwrap_or_else(|| panic!("{spec} not built"));
@@ -244,11 +268,13 @@ mod tests {
         }
         assert!(make_queue("nope", 2).is_none());
         assert!(make_queue("lcrq+nope", 2).is_none());
+        assert!(make_queue("prq+nope", 2).is_none());
         assert!(make_queue("msq+hw", 2).is_none(), "msq takes no index backend");
         // Ring indices have no priority path: a direct quota on the
         // index spec is invalid, not silently inert.
         assert!(make_queue("lcrq+elastic:aimd:d2", 2).is_none());
         assert!(make_queue("lcrq+aggfunnel:4:d1", 2).is_none());
+        assert!(make_queue("prq+elastic:aimd:d2", 2).is_none());
     }
 
     #[test]
@@ -260,6 +286,25 @@ mod tests {
         assert!(q.batch_stats().main_faas > 0, "stats flow through the trait");
         let (_q, handle) = make_queue_with_handle("lcrq+hw", 2, None).unwrap();
         assert!(handle.is_none());
+    }
+
+    #[test]
+    fn prq_elastic_spec_yields_controller_handle() {
+        // The ROADMAP gap: PRQ's Head/Tail cells register with the
+        // same ElasticIndexFactory walk LCRQ uses, so the service's
+        // resize controller drives both families identically.
+        let (q, handle) = make_queue_with_handle("prq+elastic:fixed:2", 2, None).unwrap();
+        let handle = handle.expect("prq+elastic must expose its factory");
+        assert_eq!(handle.active_width(), 2);
+        assert_eq!(handle.live_cells(), 2, "head + tail of the first ring");
+        q.enqueue(0, 1);
+        assert_eq!(q.dequeue(1), Some(1));
+        assert!(q.batch_stats().main_faas > 0, "stats flow through the PRQ trait impl");
+        assert_eq!(handle.resize(4), 4);
+        let (_q, handle) = make_queue_with_handle("prq+hw", 2, None).unwrap();
+        assert!(handle.is_none());
+        let (_q, handle) = make_queue_with_handle("prq+aggfunnel", 2, None).unwrap();
+        assert!(handle.is_none(), "static funnel indices expose no resize handle");
     }
 
     #[test]

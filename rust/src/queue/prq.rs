@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 use super::lcrq::{IndexCell, IndexFactory};
 use super::ConcurrentQueue;
 use crate::ebr;
+use crate::faa::BatchStats;
 use crate::sync::{Backoff, CachePadded};
 
 const CLOSED: u64 = 1 << 63;
@@ -232,6 +233,17 @@ impl<F: IndexFactory> Prq<F> {
             ebr: ebr::Domain::new(max_threads.max(1)),
         }
     }
+
+    pub fn index_label(&self) -> &'static str {
+        self.factory.label()
+    }
+
+    /// The index factory (e.g. to drive an
+    /// [`crate::queue::ElasticIndexFactory`]'s resize controls from
+    /// outside the queue, exactly as with LCRQ).
+    pub fn factory(&self) -> &F {
+        &self.factory
+    }
 }
 
 impl<F: IndexFactory> ConcurrentQueue for Prq<F> {
@@ -303,6 +315,14 @@ impl<F: IndexFactory> ConcurrentQueue for Prq<F> {
     fn max_threads(&self) -> usize {
         self.max_threads
     }
+
+    fn batch_stats(&self) -> BatchStats {
+        // Aggregated over every Head/Tail cell the factory ever made;
+        // cells of retired rings fold their final counters into the
+        // factory's accumulator (see `ElasticIndex::drop`), so
+        // per-queue totals survive ring transitions like LCRQ's.
+        self.factory.batch_stats()
+    }
 }
 
 impl<F: IndexFactory> Drop for Prq<F> {
@@ -367,5 +387,64 @@ mod tests {
     fn rejects_oversized_items() {
         let q = Prq::new(1, HwIndexFactory);
         q.enqueue(0, 1 << 50);
+    }
+
+    #[test]
+    fn sequential_elastic_index() {
+        use crate::queue::ElasticIndexFactory;
+        check_sequential(&Prq::new(1, ElasticIndexFactory::new(1)));
+    }
+
+    #[test]
+    fn concurrent_elastic_index_while_resizing() {
+        // The service's resize controller in miniature: a thread
+        // walks the factory's live Head/Tail cells while producers
+        // and consumers hammer the rings.
+        use crate::faa::WidthPolicy;
+        use crate::queue::ElasticIndexFactory;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let factory = ElasticIndexFactory::with_policy(9, WidthPolicy::Fixed(2), 6);
+        let handle = factory.clone();
+        let q = Arc::new(Prq::with_ring_order(9, factory, 4));
+        let stop = Arc::new(AtomicBool::new(false));
+        let controller = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut w = 1usize;
+                while !stop.load(Ordering::Relaxed) {
+                    handle.resize(w);
+                    w = w % 6 + 1;
+                    std::thread::yield_now();
+                }
+            })
+        };
+        check_concurrent(Arc::clone(&q), 4, 4, 2_000);
+        stop.store(true, Ordering::Relaxed);
+        controller.join().unwrap();
+        let stats = q.batch_stats();
+        assert!(stats.main_faas > 0, "elastic PRQ indices must report batch stats");
+        assert!(stats.ops >= stats.main_faas);
+    }
+
+    #[test]
+    fn elastic_stats_survive_ring_retirement() {
+        use crate::faa::WidthPolicy;
+        use crate::queue::ElasticIndexFactory;
+        let factory = ElasticIndexFactory::with_policy(1, WidthPolicy::Fixed(1), 3);
+        let handle = factory.clone();
+        // Tiny rings force transitions; retired cells must fold their
+        // counters into the factory accumulator, like LCRQ.
+        let q = Prq::with_ring_order(1, factory, 2);
+        for x in 0..100 {
+            q.enqueue(0, x);
+        }
+        for x in 0..100 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+        let before = q.batch_stats();
+        assert!(before.ops > 0);
+        drop(q);
+        assert_eq!(handle.live_cells(), 0);
+        assert!(handle.batch_stats().ops >= before.ops, "retired-ring stats lost");
     }
 }

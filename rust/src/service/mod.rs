@@ -48,10 +48,19 @@
 //! → {"op":"stats","name":"*"}                  ← {"ok":true,"scope":"cluster",...}       (all shards, merged)
 //! → {"op":"resize","width":4}                  ← {"ok":true,"width":4,"previous":6}
 //! → {"op":"policy","policy":"aimd"}            ← {"ok":true,"policy":"aimd","width":1}
+//! → {"op":"snapshot"}                          ← {"ok":true,"persist":true,"snapshots":[...]}  (persistent servers)
 //! → {"op":"delete","name":"jobs"}              ← {"ok":true,"deleted":"jobs"}
 //! ```
+//!
+//! With a `data_dir` configured, every shard owns a [`ShardLog`]
+//! (WAL + snapshots, see [`persist`]): mutations journal their
+//! *logical* effects at the combining points — one record per
+//! group-commit window per object, not one per op — and a restart
+//! recovers the full object set with monotonic counters and exact
+//! queue multisets before the listeners open.
 
 pub mod metrics;
+pub mod persist;
 pub mod registry;
 pub mod shard;
 
@@ -66,8 +75,9 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::ObjectManifest;
 use crate::faa::{BatchStats, WidthPolicy};
 use crate::util::json::Json;
+pub use persist::{PersistOpts, RecoveryReport, ShardLog};
 pub use registry::{CreateOpts, ObjectEntry, Registry, DEFAULT_OBJECT};
-pub use shard::{fnv1a64, shard_of, Shard, SHARD_HASH_SCHEME};
+pub use shard::{fnv1a64, fnv1a64_bytes, shard_of, Shard, FOREIGN_TIDS, SHARD_HASH_SCHEME};
 
 /// Shared server state: the shard set plus the stop flag. The shards
 /// live in one process, so cross-shard operations (`list`, aggregate
@@ -90,8 +100,8 @@ impl ServerState {
 
     /// Resolve the owning shard for a request received on shard
     /// `via`. A legacy or mis-routed client is served anyway — the
-    /// handler walks over to the owning shard in-process (tid ranges
-    /// are disjoint across shards, so this is safe) — but the hop is
+    /// handler walks over to the owning shard in-process, leasing a
+    /// tid from the owner's foreign pool for the op — but the hop is
     /// counted: a hot `forwarded` counter means the client is not
     /// using the shard map.
     fn route(&self, via: usize, name: &str) -> &Shard {
@@ -145,8 +155,29 @@ impl ServerHandle {
     /// Request shutdown and join all workers. The accept loops poll
     /// non-blocking listeners and connection handlers use bounded
     /// reads, so no wake-up connection is needed — shutdown cannot be
-    /// raced by a nudge landing on the wrong thread.
+    /// raced by a nudge landing on the wrong thread. On a persistent
+    /// server, the final journal window is flushed and a snapshot
+    /// written after every handler has drained, so a graceful
+    /// shutdown loses nothing.
     pub fn shutdown(mut self) {
+        self.halt();
+        for (i, shard) in self.state.shards.iter().enumerate() {
+            if let Some(log) = &shard.log {
+                persist::flush_shard(&self.state, i);
+                let _ = log.snapshot();
+            }
+        }
+    }
+
+    /// Test support: stop serving *without* the final flush/snapshot,
+    /// simulating a crash. Whatever the WAL already holds (everything
+    /// acked, in sync mode; everything up to the last group commit
+    /// otherwise) is exactly what a restart recovers.
+    pub fn crash(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
         self.state.stop.store(true, Ordering::SeqCst);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -188,6 +219,10 @@ pub struct ServeOpts {
     /// Objects pre-created at boot besides the default counter, each
     /// assigned to its owning shard by name hash.
     pub objects: Vec<ObjectManifest>,
+    /// Durability: `Some` gives every shard a WAL + snapshot
+    /// directory under `data_dir` and recovers from it at boot;
+    /// `None` (the default) keeps the registry in-memory only.
+    pub persist: Option<PersistOpts>,
 }
 
 impl Default for ServeOpts {
@@ -203,6 +238,7 @@ impl Default for ServeOpts {
             max_aggregators: s.max_aggregators,
             resize_interval_ms: s.resize_interval_ms,
             objects: s.objects,
+            persist: None,
         }
     }
 }
@@ -220,6 +256,7 @@ impl ServeOpts {
             max_aggregators: aggregators.max(1),
             resize_interval_ms: 0,
             objects: Vec::new(),
+            persist: None,
         }
     }
 
@@ -258,46 +295,123 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
     }
     let addr = listeners[0].local_addr()?;
 
-    // Every object is built for `shards * workers + 1` thread ids:
-    // one per leased connection on any shard (leases map to disjoint
-    // global tid ranges, see `Shard::global_tid`), plus the reserved
-    // in-process tid 0. This is what makes in-process forwarding of a
-    // mis-routed op safe.
-    let max_threads = shard_count * workers + 1;
+    // Every object is built for `workers + FOREIGN_TIDS + 1` thread
+    // ids: one per leased connection on *this* shard, the small
+    // foreign pool that forwarded (legacy/mis-routed) ops lease per
+    // operation, plus the reserved in-process tid 0. Per-object
+    // per-thread funnel tables no longer scale with the shard count.
+    let max_threads = workers + FOREIGN_TIDS + 1;
+    if let Some(p) = &opts.persist {
+        // Shard logs are bound to their slice of the hash space:
+        // refuse to boot a data_dir with a different shard count.
+        persist::check_layout(std::path::Path::new(&p.data_dir), shard_count)?;
+    }
     let mut shards = Vec::with_capacity(shard_count);
     for (i, listener) in listeners.iter().enumerate() {
-        shards.push(Shard::new(
+        let mut shard = Shard::new(
             i,
             listener.local_addr()?.port(),
             Registry::new(max_threads),
             workers,
-        ));
+        );
+        if let Some(p) = &opts.persist {
+            let dir = std::path::Path::new(&p.data_dir).join(format!("shard-{i}"));
+            let log = Arc::new(
+                ShardLog::open(&dir, p.sync_mode())
+                    .with_context(|| format!("opening shard {i} durability log"))?,
+            );
+            shard.registry.set_log(Arc::clone(&log));
+            shard.log = Some(log);
+        }
+        shards.push(shard);
     }
     let state = Arc::new(ServerState { shards, stop: AtomicBool::new(false) });
 
+    // Recovery: re-create every durable object through the ordinary
+    // BackendSpec path and seed counters/queues — before the accept
+    // loops exist, so no connection ever observes a half-recovered
+    // registry. Seeding runs on the reserved in-process tid 0.
+    for shard in &state.shards {
+        let Some(log) = &shard.log else { continue };
+        let report = log.recovery();
+        for (name, obj) in log.recovered_objects() {
+            let entry = shard
+                .registry
+                .create(
+                    &name,
+                    &obj.kind,
+                    &obj.backend,
+                    CreateOpts {
+                        max_width: obj.max_width,
+                        direct_quota: None, // travels in the backend label
+                        persist: true,
+                    },
+                )
+                .with_context(|| format!("recovering object {name:?}"))?;
+            if obj.kind == "counter" {
+                entry
+                    .seed_counter(obj.counter)
+                    .with_context(|| format!("seeding counter {name:?}"))?;
+            } else {
+                for item in &obj.items {
+                    entry
+                        .seed_queue_item(*item)
+                        .with_context(|| format!("seeding queue {name:?}"))?;
+                }
+            }
+            shard.metrics.incr("recovered_objects");
+        }
+        shard.metrics.add("wal_replayed", report.replayed as u64);
+        if report.torn_tail {
+            shard.metrics.incr("wal_torn_tail");
+        }
+    }
+
     // Boot objects land on their owning shards: the default counter
     // by the hash of its well-known name, manifest objects likewise.
-    state
-        .shard_for(DEFAULT_OBJECT)
-        .registry
-        .create_counter(
+    // Objects recovery already re-created keep their durable state
+    // (the running system outranks the boot manifest).
+    let default_owner = state.shard_for(DEFAULT_OBJECT);
+    if default_owner.registry.get(DEFAULT_OBJECT).is_err() {
+        default_owner.registry.create_counter(
             DEFAULT_OBJECT,
             opts.policy,
             opts.max_aggregators.max(opts.aggregators),
             Some(opts.aggregators),
             None,
+            true,
         )?;
+    } else {
+        default_owner.metrics.incr("boot_objects_recovered");
+    }
     for m in &opts.objects {
-        state
-            .shard_for(&m.name)
+        let owner = state.shard_for(&m.name);
+        if owner.registry.get(&m.name).is_ok() {
+            owner.metrics.incr("boot_objects_recovered");
+            continue;
+        }
+        owner
             .registry
             .create(
                 &m.name,
                 &m.kind,
                 &m.backend,
-                CreateOpts { max_width: None, direct_quota: m.direct_quota },
+                CreateOpts {
+                    max_width: None,
+                    direct_quota: m.direct_quota,
+                    persist: m.persist,
+                },
             )
             .with_context(|| format!("boot object {:?}", m.name))?;
+    }
+
+    // Compact immediately: the recovered + boot state becomes the
+    // snapshot baseline and the replayed WAL is truncated, so the log
+    // only ever holds one boot's worth of tail.
+    for shard in &state.shards {
+        if let Some(log) = &shard.log {
+            log.snapshot().with_context(|| format!("boot snapshot, shard {}", shard.index))?;
+        }
     }
 
     let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -306,6 +420,14 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
         let period = std::time::Duration::from_millis(opts.resize_interval_ms);
         for i in 0..shard_count {
             threads.push(shard::spawn_controller(Arc::clone(&state), i, period));
+        }
+    }
+    if let Some(p) = &opts.persist {
+        // In sync mode the flusher only handles periodic snapshots.
+        if !p.sync_mode() || p.snapshot_interval_ms > 0 {
+            for i in 0..shard_count {
+                threads.push(persist::spawn_flusher(Arc::clone(&state), i, p.clone()));
+            }
         }
     }
     for (i, listener) in listeners.into_iter().enumerate() {
@@ -330,7 +452,8 @@ fn split_host_port(addr: &str) -> Result<(String, u16)> {
 }
 
 /// Route one request line received on shard `via` by a connection
-/// running as global funnel tid `tid`.
+/// holding shard-local funnel tid `tid` (forwarded ops swap it for a
+/// tid leased from the owning shard's foreign pool).
 fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let op = req.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing op"))?;
@@ -338,6 +461,8 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
     match op {
         // -- shard map ------------------------------------------------------
         "shardmap" => Ok(state.shardmap_json(via, false)),
+        // -- durability -----------------------------------------------------
+        "snapshot" => snapshot_all(state),
         // -- control plane (routed to the owning shard) ---------------------
         "create" => {
             let name = req
@@ -353,6 +478,7 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
                     .get("direct_quota")
                     .and_then(Json::as_u64)
                     .map(|d| d as usize),
+                persist: req.get("persist").and_then(Json::as_bool).unwrap_or(true),
             };
             let owner = state.route(via, name);
             let entry = owner.registry.create(name, kind, backend, create_opts)?;
@@ -387,10 +513,35 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
             let name = req.get("name").and_then(Json::as_str).unwrap_or(DEFAULT_OBJECT);
             let owner = state.route(via, name);
             let entry = owner.registry.get(name)?;
+            // A forwarded op must not reuse this connection's tid on
+            // the owning shard's objects (objects are sized for the
+            // owner's own leases): borrow a tid from the owner's
+            // foreign pool for the span of this one operation — but
+            // only for the ops that actually enter a funnel
+            // (`stats`/`resize`/`policy` never touch per-thread
+            // state, so they must not occupy the small pool).
+            let needs_tid = matches!(op, "take" | "read" | "enqueue" | "dequeue");
+            let foreign;
+            let tid = if owner.index == via || !needs_tid {
+                tid
+            } else {
+                foreign = owner.lease_foreign();
+                foreign.tid
+            };
             match op {
                 "take" => {
                     let count =
                         req.get("count").and_then(Json::as_u64).unwrap_or(1).max(1);
+                    // Sanity-bound one request's range: a huge count
+                    // could push a counter past 2^53 in one shot,
+                    // where JSON (wire and WAL alike) stops being
+                    // exact — then a recovered value could round
+                    // below an acked grant.
+                    if count > MAX_TAKE_COUNT {
+                        return Err(anyhow!(
+                            "count {count} exceeds the per-request limit {MAX_TAKE_COUNT}"
+                        ));
+                    }
                     let priority =
                         req.get("priority").and_then(Json::as_bool).unwrap_or(false);
                     let start = entry.take(tid, count, priority)?;
@@ -502,6 +653,35 @@ fn list_all(state: &ServerState) -> Json {
     ])
 }
 
+/// `snapshot` (force): drain every persisted object's journal window
+/// and rewrite each shard's snapshot, truncating the WAL it absorbs.
+/// An error when the server runs without persistence.
+fn snapshot_all(state: &ServerState) -> Result<Json> {
+    let mut snapshots = Vec::new();
+    let mut any = false;
+    for (i, shard) in state.shards.iter().enumerate() {
+        let Some(log) = &shard.log else { continue };
+        any = true;
+        persist::flush_shard(state, i);
+        let (objects, absorbed) = log.snapshot()?;
+        shard.metrics.incr("snapshots_forced");
+        snapshots.push(Json::obj(vec![
+            ("shard", Json::num(shard.index as f64)),
+            ("objects", Json::num(objects as f64)),
+            ("wal_records_absorbed", Json::num(absorbed as f64)),
+        ]));
+    }
+    if !any {
+        return Err(anyhow!("persistence is disabled (no data_dir configured)"));
+    }
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("persist", Json::Bool(true)),
+        ("shards", Json::num(state.shards.len() as f64)),
+        ("snapshots", Json::Arr(snapshots)),
+    ]))
+}
+
 /// `stats` with `name = "*"`: the cluster aggregate — object counts,
 /// funnel batch totals and per-object traffic summed over every
 /// shard, plus one entry per shard with its own counters.
@@ -528,6 +708,18 @@ fn cluster_stats(state: &ServerState) -> Json {
         sj.insert("shard".to_string(), Json::num(shard.index as f64));
         sj.insert("port".to_string(), Json::num(shard.port as f64));
         sj.insert("objects".to_string(), Json::num(entries.len() as f64));
+        if let Some(log) = &shard.log {
+            // Recovery-aware stats: the durability counters ride the
+            // per-shard entry (`wal_replayed`/`recovered_objects`
+            // land in the ordinary metrics snapshot above).
+            sj.insert("persist".to_string(), Json::Bool(true));
+            sj.insert("wal_records".to_string(), Json::num(log.wal_record_count() as f64));
+            sj.insert("wal_flushes".to_string(), Json::num(log.wal_flush_count() as f64));
+            sj.insert("wal_errors".to_string(), Json::num(log.wal_error_count() as f64));
+            sj.insert("snapshots".to_string(), Json::num(log.snapshot_count() as f64));
+        } else {
+            sj.insert("persist".to_string(), Json::Bool(false));
+        }
         per_shard.push(Json::Obj(sj));
     }
     let totals: BTreeMap<String, Json> =
@@ -544,6 +736,12 @@ fn cluster_stats(state: &ServerState) -> Json {
         ("per_shard", Json::Arr(per_shard)),
     ])
 }
+
+/// Largest `count` one `take` request may ask for (2³²). Counters are
+/// journaled and served through JSON, which is exact below 2⁵³; the
+/// cap keeps a single request from vaulting a counter into the
+/// inexact range (and is far beyond any sane ticket batch anyway).
+pub const MAX_TAKE_COUNT: u64 = 1 << 32;
 
 /// Client-side retry policy for capacity rejections: a rejected
 /// connection never executed anything (the server writes the
@@ -752,11 +950,13 @@ impl TicketClient {
     /// Create a named object (`kind`: `counter` | `queue`; `backend`:
     /// the spec grammar, empty for the kind's default).
     pub fn create(&mut self, name: &str, kind: &str, backend: &str) -> Result<()> {
-        self.create_with(name, kind, backend, None, None)
+        self.create_with(name, kind, backend, None, None, true)
     }
 
     /// `create` with the optional per-object overrides: elastic slot
-    /// capacity and the §4.4 direct-thread quota (counters only).
+    /// capacity, the §4.4 direct-thread quota (counters only), and
+    /// the durability opt-out (`persist = false` keeps the object
+    /// ephemeral on a persistent server).
     pub fn create_with(
         &mut self,
         name: &str,
@@ -764,6 +964,7 @@ impl TicketClient {
         backend: &str,
         max_width: Option<u64>,
         direct_quota: Option<u64>,
+        persist: bool,
     ) -> Result<()> {
         let mut pairs = vec![
             ("op", Json::str("create")),
@@ -779,7 +980,18 @@ impl TicketClient {
         if let Some(d) = direct_quota {
             pairs.push(("direct_quota", Json::num(d as f64)));
         }
+        if !persist {
+            pairs.push(("persist", Json::Bool(false)));
+        }
         self.roundtrip(name, Json::obj(pairs)).map(drop)
+    }
+
+    /// Force a snapshot on every persistent shard: the pending
+    /// journal windows are flushed, each shard's snapshot is
+    /// rewritten, and the WAL it absorbs is truncated. Errors when
+    /// the server runs without a `data_dir`.
+    pub fn snapshot(&mut self) -> Result<Json> {
+        self.roundtrip_on(0, Json::obj(vec![("op", Json::str("snapshot"))]))
     }
 
     /// Delete a named object.
@@ -1120,7 +1332,7 @@ mod tests {
     fn direct_quota_over_the_wire() {
         let server = start();
         let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.create_with("vip", "counter", "elastic:fixed:2", None, Some(0)).unwrap();
+        c.create_with("vip", "counter", "elastic:fixed:2", None, Some(0), true).unwrap();
         assert_eq!(c.take_on("vip", 4, true).unwrap(), 0);
         let stats = c.stats_on("vip").unwrap();
         assert_eq!(stats.get("direct_quota").and_then(Json::as_u64), Some(0));
@@ -1255,6 +1467,101 @@ mod tests {
             ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn snapshot_op_requires_persistence() {
+        let server = start();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let err = c.snapshot().unwrap_err();
+        assert!(err.to_string().contains("persistence"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_op_flushes_and_compacts() {
+        let dir = crate::util::scratch_dir("snap-op");
+        let server = serve(&ServeOpts {
+            // Long group-commit interval: only the snapshot op (or
+            // shutdown) will flush within the test's lifetime.
+            persist: Some(PersistOpts {
+                data_dir: dir.to_string_lossy().into_owned(),
+                fsync_interval_ms: 60_000,
+                snapshot_interval_ms: 0,
+            }),
+            ..ServeOpts::fixed("127.0.0.1:0", 3, 2)
+        })
+        .unwrap();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        c.take(7, false).unwrap();
+        let resp = c.snapshot().unwrap();
+        assert_eq!(resp.get("persist").and_then(Json::as_bool), Some(true));
+        let snaps = resp.get("snapshots").and_then(Json::as_arr).unwrap();
+        assert_eq!(snaps.len(), 1);
+        assert!(
+            snaps[0].get("wal_records_absorbed").and_then(Json::as_u64).unwrap() >= 1,
+            "the pending counter window must be flushed into the snapshot"
+        );
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("persist").and_then(Json::as_bool), Some(true));
+        // Even a crash after the forced snapshot keeps the state.
+        server.crash();
+        let server = serve(&ServeOpts {
+            persist: Some(PersistOpts::dir(dir.to_string_lossy().into_owned())),
+            ..ServeOpts::fixed("127.0.0.1:0", 3, 2)
+        })
+        .unwrap();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(c.read().unwrap(), 7, "forced snapshot survived the crash");
+        server.shutdown();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn forwarded_ops_beyond_foreign_pool_complete() {
+        use std::io::{BufRead, Write};
+        // More concurrent mis-routed clients than FOREIGN_TIDS: the
+        // per-op foreign leases must serialize them, not break them.
+        let server = serve(&ServeOpts::sharded("127.0.0.1:0", 2, 8, 2)).unwrap();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        c.create("roam", "counter", "elastic:fixed:1").unwrap();
+        let wrong_port = server.shard_ports()[1 - c.shard_for("roam")];
+        let clients = FOREIGN_TIDS + 3;
+        let per_client = 40u64;
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let conn =
+                        std::net::TcpStream::connect(("127.0.0.1", wrong_port)).unwrap();
+                    let mut writer = conn.try_clone().unwrap();
+                    let mut reader = std::io::BufReader::new(conn);
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap(); // greeting
+                    for _ in 0..per_client {
+                        writer
+                            .write_all(b"{\"op\":\"take\",\"name\":\"roam\",\"count\":1}\n")
+                            .unwrap();
+                        line.clear();
+                        reader.read_line(&mut line).unwrap();
+                        let resp = Json::parse(&line).unwrap();
+                        assert_eq!(
+                            resp.get("ok").and_then(Json::as_bool),
+                            Some(true),
+                            "{line}"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            c.read_on("roam").unwrap(),
+            clients as u64 * per_client,
+            "every forwarded take must land exactly once"
+        );
+        server.shutdown();
     }
 
     #[test]

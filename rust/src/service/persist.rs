@@ -1,0 +1,1277 @@
+//! Durability for the registry service: per-shard write-ahead logs
+//! and compacted snapshots.
+//!
+//! Every [`super::Shard`] that serves a persistent registry owns one
+//! [`ShardLog`]: an append-only WAL of **logical** mutation records
+//! (object creations and deletions, post-batch counter values, queue
+//! item multiset deltas) plus a periodically rewritten snapshot that
+//! compacts the log. Boot-time recovery loads the snapshot, replays
+//! the WAL tail on top of it, and hands the resulting
+//! [`RecoveryModel`] back to the service, which re-creates every
+//! object through the ordinary [`crate::faa::BackendSpec`] path and
+//! seeds counters and queues before the listener starts serving.
+//!
+//! Three disciplines keep this correct without touching the lock-free
+//! hot path:
+//!
+//! * **Logical records, not funnel internals.** A counter record is
+//!   the *post-batch counter value* (`max` on replay), never the
+//!   per-thread funnel state; a queue record is an item list delta.
+//!   Replay therefore never needs to reconstruct Aggregator or ring
+//!   state — it re-creates objects from their backend spec and seeds
+//!   them, exactly as a fresh `create` would.
+//! * **Append-then-publish.** Records are framed
+//!   (`len ‖ fnv1a64 checksum ‖ payload`) and appended before they
+//!   count; snapshots are written to `snapshot.json.tmp`, fsynced,
+//!   and `rename`d into place, so a reader never observes a partially
+//!   written snapshot (the atomic-state-update discipline of
+//!   `atomic-try-update`). A torn WAL tail is detected by the frame
+//!   checksums and truncated on recovery.
+//! * **Replay-idempotent records.** Every record carries a
+//!   monotonically increasing sequence number and the snapshot
+//!   records the last sequence it covers; replay skips records the
+//!   snapshot already absorbed, so a crash between "snapshot
+//!   published" and "WAL truncated" cannot double-apply an enqueue.
+//!
+//! Group commit mirrors the paper's batching argument: with
+//! `fsync_interval_ms > 0` the mutation hot path only bumps a
+//! per-object high-water mark (counters, one lock-free `fetch_max`)
+//! or pushes onto a spinlocked item buffer (queues); a flusher thread
+//! coalesces each interval into **one record per object per
+//! interval** — one WAL append per aggregated batch of operations,
+//! not one per op, just as the funnel pays one hardware F&A per
+//! batch. `fsync_interval_ms = 0` selects synchronous mode: every
+//! mutation appends (and syncs) its record before the response is
+//! acked, which is what the crash-recovery tests run under.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::shard::fnv1a64_bytes;
+use super::ServerState;
+use crate::sync::SpinLock;
+use crate::util::json::Json;
+
+/// Maximum accepted frame payload length; a length prefix beyond this
+/// is treated as a torn/corrupt tail, not an allocation request.
+const MAX_FRAME_LEN: usize = 1 << 28;
+
+/// Largest value the durable layer represents exactly: WAL records
+/// and snapshots go through the JSON model (`f64`-backed), which is
+/// exact only below 2⁵³. Persisted queues reject bigger items at
+/// enqueue (so an acked item can never round on recovery), and
+/// recovery refuses counter seeds beyond it (a bigger value in a
+/// snapshot is corruption, not data).
+pub const MAX_DURABLE_ITEM: u64 = (1 << 53) - 1;
+
+/// Snapshot and WAL file names inside a shard's directory.
+const SNAPSHOT_FILE: &str = "snapshot.json";
+const SNAPSHOT_TMP_FILE: &str = "snapshot.json.tmp";
+const WAL_FILE: &str = "wal.log";
+
+/// Durability configuration for [`super::serve`].
+#[derive(Clone, Debug)]
+pub struct PersistOpts {
+    /// Root directory; shard `i` persists under `<data_dir>/shard-<i>`.
+    pub data_dir: String,
+    /// Group-commit interval in milliseconds: the flusher coalesces
+    /// each interval's mutations into one WAL append (one record per
+    /// object per interval) and syncs it. `0` = synchronous mode —
+    /// every mutation appends its record before the response is
+    /// acked (slowest, strongest: acked implies durable).
+    pub fsync_interval_ms: u64,
+    /// Snapshot rewrite period in milliseconds (`0` disables periodic
+    /// snapshots; one is still written at boot, on graceful shutdown,
+    /// and on the `snapshot` wire op).
+    pub snapshot_interval_ms: u64,
+}
+
+impl Default for PersistOpts {
+    fn default() -> Self {
+        Self { data_dir: String::new(), fsync_interval_ms: 5, snapshot_interval_ms: 60_000 }
+    }
+}
+
+impl PersistOpts {
+    /// Group-commit persistence under `data_dir` with the default
+    /// intervals.
+    pub fn dir(data_dir: impl Into<String>) -> Self {
+        Self { data_dir: data_dir.into(), ..Self::default() }
+    }
+
+    /// Synchronous persistence under `data_dir`: every mutation's
+    /// record is on disk before the response is acked.
+    pub fn sync(data_dir: impl Into<String>) -> Self {
+        Self { data_dir: data_dir.into(), fsync_interval_ms: 0, ..Self::default() }
+    }
+
+    /// True when every mutation appends inline (no group commit).
+    pub fn sync_mode(&self) -> bool {
+        self.fsync_interval_ms == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------
+
+/// One logical WAL record. Counter values are absolute post-batch
+/// values (replay takes the max), queue records are item-multiset
+/// deltas; the §4.4 direct quota travels inside the canonical backend
+/// label (`:d<k>`), so `Create` needs no extra field for it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    Create { name: String, kind: String, backend: String, max_width: Option<usize> },
+    Delete { name: String },
+    /// Absolute counter value after an acked take (idempotent: replay
+    /// keeps the maximum seen).
+    Counter { name: String, value: u64 },
+    Enqueue { name: String, items: Vec<u64> },
+    Dequeue { name: String, items: Vec<u64> },
+}
+
+impl Record {
+    /// Wire form: one compact JSON object carrying the sequence
+    /// number assigned at append time.
+    fn to_json(&self, seq: u64) -> Json {
+        let mut pairs = vec![("s", Json::num(seq as f64))];
+        match self {
+            Record::Create { name, kind, backend, max_width } => {
+                pairs.push(("t", Json::str("create")));
+                pairs.push(("n", Json::str(name.clone())));
+                pairs.push(("k", Json::str(kind.clone())));
+                pairs.push(("b", Json::str(backend.clone())));
+                if let Some(w) = max_width {
+                    pairs.push(("w", Json::num(*w as f64)));
+                }
+            }
+            Record::Delete { name } => {
+                pairs.push(("t", Json::str("delete")));
+                pairs.push(("n", Json::str(name.clone())));
+            }
+            Record::Counter { name, value } => {
+                pairs.push(("t", Json::str("ctr")));
+                pairs.push(("n", Json::str(name.clone())));
+                pairs.push(("v", Json::num(*value as f64)));
+            }
+            Record::Enqueue { name, items } => {
+                pairs.push(("t", Json::str("enq")));
+                pairs.push(("n", Json::str(name.clone())));
+                pairs.push(("i", Json::arr(items.iter().map(|i| Json::num(*i as f64)))));
+            }
+            Record::Dequeue { name, items } => {
+                pairs.push(("t", Json::str("deq")));
+                pairs.push(("n", Json::str(name.clone())));
+                pairs.push(("i", Json::arr(items.iter().map(|i| Json::num(*i as f64)))));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse a record payload back into `(seq, Record)`.
+    fn from_json(j: &Json) -> Result<(u64, Record)> {
+        let seq = j.get("s").and_then(Json::as_u64).ok_or_else(|| anyhow!("record missing seq"))?;
+        let t = j.get("t").and_then(Json::as_str).ok_or_else(|| anyhow!("record missing type"))?;
+        let name = || -> Result<String> {
+            Ok(j.get("n")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("record missing name"))?
+                .to_string())
+        };
+        let items = || -> Result<Vec<u64>> {
+            j.get("i")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("record missing items"))?
+                .iter()
+                .map(|v| v.as_u64().ok_or_else(|| anyhow!("non-integer item")))
+                .collect()
+        };
+        let rec = match t {
+            "create" => Record::Create {
+                name: name()?,
+                kind: j
+                    .get("k")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("create record missing kind"))?
+                    .to_string(),
+                backend: j
+                    .get("b")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("create record missing backend"))?
+                    .to_string(),
+                max_width: j.get("w").and_then(Json::as_u64).map(|w| w as usize),
+            },
+            "delete" => Record::Delete { name: name()? },
+            "ctr" => Record::Counter {
+                name: name()?,
+                value: j
+                    .get("v")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("counter record missing value"))?,
+            },
+            "enq" => Record::Enqueue { name: name()?, items: items()? },
+            "deq" => Record::Dequeue { name: name()?, items: items()? },
+            other => return Err(anyhow!("unknown record type {other:?}")),
+        };
+        Ok((seq, rec))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------
+
+/// Append one length-prefixed, checksummed frame to `out`.
+pub(crate) fn encode_frame(payload: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a64_bytes(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Decode every complete, checksum-valid frame from the front of
+/// `buf`. Returns the payload slices, the byte length of the valid
+/// prefix, and whether a torn/corrupt tail was cut off.
+pub(crate) fn decode_frames(buf: &[u8]) -> (Vec<&[u8]>, usize, bool) {
+    let mut payloads = Vec::new();
+    let mut pos = 0usize;
+    while buf.len() - pos >= 12 {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap());
+        if len > MAX_FRAME_LEN || buf.len() - pos - 12 < len {
+            break; // torn tail: length runs past EOF (or is garbage)
+        }
+        let payload = &buf[pos + 12..pos + 12 + len];
+        if fnv1a64_bytes(payload) != sum {
+            break; // corrupt frame: stop at the last valid boundary
+        }
+        payloads.push(payload);
+        pos += 12 + len;
+    }
+    let torn = pos != buf.len();
+    (payloads, pos, torn)
+}
+
+// ---------------------------------------------------------------------
+// Recovery model
+// ---------------------------------------------------------------------
+
+/// The durable view of one object: enough to re-create it through the
+/// backend-spec path and seed its contents.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObjectState {
+    /// `"counter"` or `"queue"`.
+    pub kind: String,
+    /// Canonical backend spec (carries the `:d<k>` direct quota).
+    pub backend: String,
+    /// Create-time elastic slot-capacity override, if any (not part
+    /// of the backend label, so persisted separately).
+    pub max_width: Option<usize>,
+    /// Counter value (counters only).
+    pub counter: u64,
+    /// Queue contents, oldest first (queues only).
+    pub items: VecDeque<u64>,
+}
+
+/// The materialized state a snapshot stores and the WAL replays into:
+/// object specs plus counter values and queue item lists. Also
+/// maintained live by [`ShardLog::append`], so writing a snapshot
+/// never has to inspect (or pause) the lock-free objects themselves.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecoveryModel {
+    /// Sequence number of the last applied record.
+    pub seq: u64,
+    pub objects: BTreeMap<String, ObjectState>,
+}
+
+impl RecoveryModel {
+    /// Apply one record. Idempotent across replays: records at or
+    /// below the already-applied sequence are skipped, counter values
+    /// only ever grow, and re-creating an existing object is a no-op
+    /// (the live state wins over the spec record).
+    pub fn apply(&mut self, seq: u64, rec: &Record) {
+        if seq <= self.seq {
+            return;
+        }
+        self.seq = seq;
+        match rec {
+            Record::Create { name, kind, backend, max_width } => {
+                self.objects.entry(name.clone()).or_insert_with(|| ObjectState {
+                    kind: kind.clone(),
+                    backend: backend.clone(),
+                    max_width: *max_width,
+                    ..ObjectState::default()
+                });
+            }
+            Record::Delete { name } => {
+                self.objects.remove(name);
+            }
+            Record::Counter { name, value } => {
+                if let Some(o) = self.objects.get_mut(name) {
+                    o.counter = o.counter.max(*value);
+                }
+            }
+            Record::Enqueue { name, items } => {
+                if let Some(o) = self.objects.get_mut(name) {
+                    o.items.extend(items.iter().copied());
+                }
+            }
+            Record::Dequeue { name, items } => {
+                if let Some(o) = self.objects.get_mut(name) {
+                    for item in items {
+                        if let Some(i) = o.items.iter().position(|x| x == item) {
+                            o.items.remove(i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serialize as the snapshot document.
+    pub fn to_snapshot_json(&self) -> Json {
+        let objects: BTreeMap<String, Json> = self
+            .objects
+            .iter()
+            .map(|(name, o)| {
+                let mut pairs = vec![
+                    ("kind", Json::str(o.kind.clone())),
+                    ("backend", Json::str(o.backend.clone())),
+                    ("counter", Json::num(o.counter as f64)),
+                    ("items", Json::arr(o.items.iter().map(|i| Json::num(*i as f64)))),
+                ];
+                if let Some(w) = o.max_width {
+                    pairs.push(("max_width", Json::num(w as f64)));
+                }
+                (name.clone(), Json::obj(pairs))
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("seq", Json::num(self.seq as f64)),
+            ("objects", Json::Obj(objects)),
+        ])
+    }
+
+    /// Parse a snapshot document.
+    pub fn from_snapshot_json(j: &Json) -> Result<RecoveryModel> {
+        let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != 1 {
+            return Err(anyhow!("unsupported snapshot version {version}"));
+        }
+        let seq = j.get("seq").and_then(Json::as_u64).unwrap_or(0);
+        let mut objects = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("objects") {
+            for (name, o) in map {
+                let field = |k: &str| -> Result<String> {
+                    Ok(o.get(k)
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("snapshot object {name:?} missing {k}"))?
+                        .to_string())
+                };
+                let items: VecDeque<u64> = o
+                    .get("items")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| v.as_u64().ok_or_else(|| anyhow!("non-integer snapshot item")))
+                    .collect::<Result<_>>()?;
+                objects.insert(
+                    name.clone(),
+                    ObjectState {
+                        kind: field("kind")?,
+                        backend: field("backend")?,
+                        max_width: o.get("max_width").and_then(Json::as_u64).map(|w| w as usize),
+                        counter: o.get("counter").and_then(Json::as_u64).unwrap_or(0),
+                        items,
+                    },
+                );
+            }
+        }
+        Ok(RecoveryModel { seq, objects })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cluster layout pinning
+// ---------------------------------------------------------------------
+
+/// Check (or record, on first boot) the cluster layout under
+/// `data_dir`. A shard's log is bound to its slice of the hash space,
+/// so restarting the same directory with a different shard count
+/// would silently strand every object whose name now hashes
+/// elsewhere — refuse loudly instead (resharding needs a real
+/// migration; see ROADMAP).
+pub fn check_layout(data_dir: &Path, shards: usize) -> Result<()> {
+    std::fs::create_dir_all(data_dir)
+        .with_context(|| format!("creating data dir {}", data_dir.display()))?;
+    let path = data_dir.join("layout.json");
+    if path.exists() {
+        let text = std::fs::read_to_string(&path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("corrupt layout file {}: {e}", path.display()))?;
+        let recorded =
+            json.get("shards").and_then(Json::as_u64).unwrap_or(0) as usize;
+        if recorded != shards {
+            return Err(anyhow!(
+                "data_dir {} holds a {recorded}-shard cluster; booting it with {shards} \
+                 shard(s) would strand hash-routed objects — keep the shard count or \
+                 migrate the data",
+                data_dir.display()
+            ));
+        }
+        return Ok(());
+    }
+    let doc = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("shards", Json::num(shards as f64)),
+        ("hash", Json::str(super::shard::SHARD_HASH_SCHEME)),
+    ]);
+    // Same publish discipline as snapshots (tmp → fsync → rename): a
+    // crash during first boot must not leave a partial layout file
+    // that blocks every later boot.
+    let tmp = data_dir.join("layout.json.tmp");
+    {
+        let mut f =
+            File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(doc.to_string().as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// The shard log
+// ---------------------------------------------------------------------
+
+/// What boot-time recovery found.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// Objects in the recovered model (snapshot + WAL tail).
+    pub objects: usize,
+    /// WAL records replayed on top of the snapshot.
+    pub replayed: usize,
+    /// Whether a torn/corrupt WAL tail was truncated.
+    pub torn_tail: bool,
+}
+
+/// One shard's durability state: the WAL file, the live
+/// [`RecoveryModel`] it folds into, and cumulative counters surfaced
+/// through `stats`.
+pub struct ShardLog {
+    dir: PathBuf,
+    sync: bool,
+    inner: Mutex<LogInner>,
+    /// Serializes whole drain+append cycles ([`flush_shard`]): two
+    /// concurrent drains (the flusher racing the `snapshot` op) could
+    /// otherwise split one journal's enqueue and dequeue buffers
+    /// across two appends in the wrong order.
+    drain_gate: Mutex<()>,
+    /// Set when a failed append could not be rewound: the WAL may end
+    /// in partial bytes, so no further frames may be appended behind
+    /// them (see [`ShardLog::write_records`]).
+    poisoned: std::sync::atomic::AtomicBool,
+    recovery: RecoveryReport,
+    wal_records: AtomicU64,
+    wal_flushes: AtomicU64,
+    wal_errors: AtomicU64,
+    snapshots: AtomicU64,
+}
+
+struct LogInner {
+    wal: File,
+    model: RecoveryModel,
+    records_since_snapshot: u64,
+}
+
+impl ShardLog {
+    /// Open (or create) a shard's durability directory: load the
+    /// snapshot if present, replay the WAL tail, truncate any torn
+    /// tail, and leave the WAL positioned for appends.
+    pub fn open(dir: &Path, sync: bool) -> Result<ShardLog> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating data dir {}", dir.display()))?;
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        let mut model = if snap_path.exists() {
+            let text = std::fs::read_to_string(&snap_path)
+                .with_context(|| format!("reading {}", snap_path.display()))?;
+            let json = Json::parse(&text)
+                .map_err(|e| anyhow!("corrupt snapshot {}: {e}", snap_path.display()))?;
+            RecoveryModel::from_snapshot_json(&json)
+                .with_context(|| format!("parsing {}", snap_path.display()))?
+        } else {
+            RecoveryModel::default()
+        };
+        // A leftover tmp snapshot is an unpublished write: discard it.
+        let _ = std::fs::remove_file(dir.join(SNAPSHOT_TMP_FILE));
+
+        let wal_path = dir.join(WAL_FILE);
+        let mut wal = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&wal_path)
+            .with_context(|| format!("opening {}", wal_path.display()))?;
+        let mut buf = Vec::new();
+        wal.read_to_end(&mut buf)?;
+        let (payloads, valid_len, torn_tail) = decode_frames(&buf);
+        let mut replayed = 0usize;
+        for payload in payloads {
+            // A record that frames correctly (checksum valid) but no
+            // longer parses is version skew or a bug, not a torn
+            // write — recovery refuses to boot rather than silently
+            // dropping it and every later record that may depend on
+            // it. (A torn *tail* is different: those bytes were never
+            // fully written, so truncating them loses nothing acked.)
+            let text = std::str::from_utf8(payload).map_err(|_| anyhow!("non-utf8 WAL record"))?;
+            let json =
+                Json::parse(text).map_err(|e| anyhow!("unparseable WAL record: {e}"))?;
+            let (seq, rec) = Record::from_json(&json)?;
+            model.apply(seq, &rec);
+            replayed += 1;
+        }
+        if torn_tail {
+            wal.set_len(valid_len as u64)?;
+        }
+        wal.seek(SeekFrom::Start(valid_len as u64))?;
+        let recovery = RecoveryReport { objects: model.objects.len(), replayed, torn_tail };
+        Ok(ShardLog {
+            dir: dir.to_path_buf(),
+            sync,
+            inner: Mutex::new(LogInner { wal, model, records_since_snapshot: 0 }),
+            drain_gate: Mutex::new(()),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+            recovery,
+            wal_records: AtomicU64::new(0),
+            wal_flushes: AtomicU64::new(0),
+            wal_errors: AtomicU64::new(0),
+            snapshots: AtomicU64::new(0),
+        })
+    }
+
+    /// What recovery found when this log was opened.
+    pub fn recovery(&self) -> RecoveryReport {
+        self.recovery
+    }
+
+    /// True when every mutation appends inline (no group commit).
+    pub fn sync_mode(&self) -> bool {
+        self.sync
+    }
+
+    /// The recovered objects, cloned out for boot-time re-creation.
+    pub fn recovered_objects(&self) -> Vec<(String, ObjectState)> {
+        let inner = self.inner.lock().unwrap();
+        inner.model.objects.iter().map(|(n, o)| (n.clone(), o.clone())).collect()
+    }
+
+    /// Append a batch of records: assign sequence numbers, apply them
+    /// to the live model, frame and write them, and (in sync mode)
+    /// sync to disk. One `write` syscall per batch.
+    pub fn append(&self, records: &[Record]) -> Result<()> {
+        if records.is_empty() {
+            return Ok(());
+        }
+        let mut inner = self.inner.lock().unwrap();
+        self.write_records(&mut inner, records)
+    }
+
+    /// The shared append body, under the caller-held inner lock.
+    fn write_records(&self, inner: &mut LogInner, records: &[Record]) -> Result<()> {
+        if records.is_empty() {
+            return Ok(());
+        }
+        if self.poisoned.load(Ordering::Relaxed) {
+            // A previous failed write may have left partial bytes we
+            // could not rewind; appending valid frames after garbage
+            // would make recovery's torn-tail truncation discard them.
+            return Err(anyhow!("WAL poisoned by an unrecoverable write error"));
+        }
+        let mut buf = Vec::new();
+        for rec in records {
+            let seq = inner.model.seq + 1;
+            inner.model.apply(seq, rec);
+            let payload = rec.to_json(seq).to_string();
+            encode_frame(payload.as_bytes(), &mut buf);
+        }
+        let pos = inner.wal.stream_position()?;
+        let mut wrote = inner.wal.write_all(&buf);
+        if wrote.is_ok() {
+            wrote = inner.wal.flush();
+        }
+        if wrote.is_ok() && self.sync {
+            wrote = inner.wal.sync_data();
+        }
+        if let Err(e) = wrote {
+            // Rewind past any partial frame so later (successful)
+            // appends never land behind garbage — on crash, recovery
+            // would truncate *them* as a torn tail even though they
+            // were fsynced and acked. If the rewind itself fails,
+            // poison the log: no further appends, errors surface in
+            // `wal_errors` and (sync mode) to clients.
+            let mut rewound = inner.wal.set_len(pos);
+            if rewound.is_ok() {
+                rewound = inner.wal.seek(SeekFrom::Start(pos)).map(drop);
+            }
+            if rewound.is_err() {
+                self.poisoned.store(true, Ordering::Relaxed);
+            }
+            return Err(e.into());
+        }
+        inner.records_since_snapshot += records.len() as u64;
+        self.wal_records.fetch_add(records.len() as u64, Ordering::Relaxed);
+        self.wal_flushes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Append drained journal windows, dropping any whose journal was
+    /// retired since the drain. The check runs under the log mutex —
+    /// the same mutex a delete's `Delete` record goes through after
+    /// setting the retired flag — so a flusher that drained an object
+    /// just before its delete+re-create cannot append the stale
+    /// window *after* the replacement's `Create` record (which would
+    /// replay the old object's data into the new one).
+    pub(super) fn append_journal_batches(&self, batches: Vec<(&Journal, Vec<Record>)>) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut records = Vec::new();
+        for (journal, recs) in batches {
+            if journal.is_retired() {
+                continue;
+            }
+            records.extend(recs);
+        }
+        if self.write_records(&mut inner, &records).is_err() {
+            self.wal_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// [`ShardLog::append`] for hot paths that cannot propagate an IO
+    /// error (the mutation has already been applied to the in-memory
+    /// object and cannot be withdrawn): failures are counted in
+    /// `wal_errors`, visible through `stats`.
+    pub fn append_infallible(&self, records: &[Record]) {
+        if self.append(records).is_err() {
+            self.wal_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Write a compacted snapshot (tmp + fsync + rename + directory
+    /// fsync) and truncate the WAL it absorbs. Returns
+    /// `(objects, wal records absorbed)`.
+    ///
+    /// Runs under the inner log mutex end to end, so appends stall
+    /// for the duration of one publish (periodic, default every
+    /// 60 s; also shutdown/boot/forced). That is the deliberate
+    /// price of two hard guarantees a lock-light variant loses: the
+    /// WAL truncation is atomic with the publish it reflects (so the
+    /// log cannot grow without bound under constant load), and two
+    /// racing snapshots cannot rename an older model over a newer
+    /// one whose WAL was already truncated.
+    pub fn snapshot(&self) -> Result<(usize, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        let text = inner.model.to_snapshot_json().to_string();
+        let tmp = self.dir.join(SNAPSHOT_TMP_FILE);
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(text.as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, self.dir.join(SNAPSHOT_FILE))?;
+        // Make the rename itself durable before truncating the WAL:
+        // the truncation below reaches disk, so without the directory
+        // fsync a crash could surface the *old* snapshot next to an
+        // already-empty WAL, losing acked records even in sync mode.
+        if let Ok(dir) = File::open(&self.dir) {
+            let _ = dir.sync_all();
+        }
+        inner.wal.set_len(0)?;
+        inner.wal.seek(SeekFrom::Start(0))?;
+        let _ = inner.wal.sync_data();
+        let absorbed = inner.records_since_snapshot;
+        inner.records_since_snapshot = 0;
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+        Ok((inner.model.objects.len(), absorbed))
+    }
+
+    /// Cumulative records appended since open.
+    pub fn wal_record_count(&self) -> u64 {
+        self.wal_records.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative append batches (group commits) since open.
+    pub fn wal_flush_count(&self) -> u64 {
+        self.wal_flushes.load(Ordering::Relaxed)
+    }
+
+    /// Appends that failed with an IO error (durability degraded).
+    pub fn wal_error_count(&self) -> u64 {
+        self.wal_errors.load(Ordering::Relaxed)
+    }
+
+    /// Snapshots written since open.
+    pub fn snapshot_count(&self) -> u64 {
+        self.snapshots.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-object journals
+// ---------------------------------------------------------------------
+
+enum JournalState {
+    Counter {
+        /// Highest acked post-take value not yet flushed…
+        hwm: AtomicU64,
+        /// …and the value the flusher last emitted, so an idle counter
+        /// costs zero records.
+        flushed: AtomicU64,
+    },
+    Queue {
+        enq: SpinLock<Vec<u64>>,
+        deq: SpinLock<Vec<u64>>,
+    },
+}
+
+/// The journaling hook a persisted [`super::ObjectEntry`] carries.
+/// In group-commit mode the record hooks are a single `fetch_max`
+/// (counters) or a spinlocked push (queues); the flusher drains each
+/// interval into one record per object. In sync mode each hook
+/// appends (and syncs) its record before returning, so a response is
+/// never acked before its record is durable.
+pub struct Journal {
+    log: Arc<ShardLog>,
+    name: String,
+    /// Set when the object is deleted: a data-plane op still running
+    /// on a held `Arc` must not journal into a *re-created* object of
+    /// the same name.
+    retired: std::sync::atomic::AtomicBool,
+    state: JournalState,
+}
+
+impl Journal {
+    pub fn counter(log: Arc<ShardLog>, name: impl Into<String>) -> Journal {
+        Journal {
+            log,
+            name: name.into(),
+            retired: std::sync::atomic::AtomicBool::new(false),
+            state: JournalState::Counter {
+                hwm: AtomicU64::new(0),
+                flushed: AtomicU64::new(0),
+            },
+        }
+    }
+
+    pub fn queue(log: Arc<ShardLog>, name: impl Into<String>) -> Journal {
+        Journal {
+            log,
+            name: name.into(),
+            retired: std::sync::atomic::AtomicBool::new(false),
+            state: JournalState::Queue {
+                enq: SpinLock::new(Vec::new()),
+                deq: SpinLock::new(Vec::new()),
+            },
+        }
+    }
+
+    /// The shard log this journal appends to.
+    pub fn log(&self) -> &Arc<ShardLog> {
+        &self.log
+    }
+
+    /// Stop recording (called when the object is deleted); late ops
+    /// on a held handle are applied in memory but no longer journaled.
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Release);
+    }
+
+    fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
+    }
+
+    /// Record the post-take counter value (`start + count`).
+    pub fn record_counter(&self, value: u64) {
+        if self.is_retired() {
+            return;
+        }
+        let JournalState::Counter { hwm, .. } = &self.state else { return };
+        if self.log.sync {
+            self.log.append_infallible(&[Record::Counter {
+                name: self.name.clone(),
+                value,
+            }]);
+        } else {
+            hwm.fetch_max(value, Ordering::Release);
+        }
+    }
+
+    /// Record one acked enqueue.
+    pub fn record_enqueue(&self, item: u64) {
+        if self.is_retired() {
+            return;
+        }
+        let JournalState::Queue { enq, .. } = &self.state else { return };
+        if self.log.sync {
+            self.log.append_infallible(&[Record::Enqueue {
+                name: self.name.clone(),
+                items: vec![item],
+            }]);
+        } else {
+            enq.lock().push(item);
+        }
+    }
+
+    /// Record one acked dequeue.
+    pub fn record_dequeue(&self, item: u64) {
+        if self.is_retired() {
+            return;
+        }
+        let JournalState::Queue { deq, .. } = &self.state else { return };
+        if self.log.sync {
+            self.log.append_infallible(&[Record::Dequeue {
+                name: self.name.clone(),
+                items: vec![item],
+            }]);
+        } else {
+            deq.lock().push(item);
+        }
+    }
+
+    /// Drain the pending window into records (group-commit mode; a
+    /// no-op in sync mode, where nothing buffers). At most one
+    /// counter record and one enqueue + one dequeue record per call,
+    /// however many operations the window absorbed.
+    pub fn drain_into(&self, out: &mut Vec<Record>) {
+        match &self.state {
+            JournalState::Counter { hwm, flushed } => {
+                let v = hwm.load(Ordering::Acquire);
+                if v > flushed.load(Ordering::Relaxed) {
+                    flushed.store(v, Ordering::Relaxed);
+                    out.push(Record::Counter { name: self.name.clone(), value: v });
+                }
+            }
+            JournalState::Queue { enq, deq } => {
+                // Take the *dequeue* buffer first. Enqueues are
+                // recorded write-ahead (before the item is visible in
+                // the queue), so any dequeue captured here had its
+                // enqueue recorded strictly earlier — in an already
+                // flushed window or in the enqueue buffer we take
+                // next. Taking enq first would open a window where a
+                // fresh enqueue lands in the *next* drain while its
+                // dequeue lands in this one, putting Deq before Enq
+                // in the WAL and resurrecting the item on replay.
+                let d = std::mem::take(&mut *deq.lock());
+                let e = std::mem::take(&mut *enq.lock());
+                if !e.is_empty() {
+                    out.push(Record::Enqueue { name: self.name.clone(), items: e });
+                }
+                if !d.is_empty() {
+                    out.push(Record::Dequeue { name: self.name.clone(), items: d });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The flusher
+// ---------------------------------------------------------------------
+
+/// Drain every persisted object's journal on `shard` and append the
+/// batch (shared by the flusher, the `snapshot` op, and shutdown).
+pub(super) fn flush_shard(state: &ServerState, shard: usize) {
+    let shard = &state.shards[shard];
+    let Some(log) = &shard.log else { return };
+    // One drain+append at a time: a racing pair could split a
+    // journal's enqueue/dequeue buffers across two appends and
+    // invert their WAL order.
+    let _gate = log.drain_gate.lock().unwrap();
+    let entries = shard.registry.list();
+    let mut batches = Vec::new();
+    for entry in &entries {
+        if let Some(journal) = entry.journal() {
+            let mut records = Vec::new();
+            journal.drain_into(&mut records);
+            if !records.is_empty() {
+                batches.push((journal, records));
+            }
+        }
+    }
+    // Per-journal batches so the append can drop windows of objects
+    // deleted between the drain above and the append's lock.
+    log.append_journal_batches(batches);
+}
+
+/// Spawn a shard's group-commit flusher: every `fsync_interval_ms` it
+/// coalesces the interval's mutations into one WAL append, and every
+/// `snapshot_interval_ms` it rewrites the snapshot. Sleeps in short
+/// slices so shutdown never waits on a long interval; the *final*
+/// flush + snapshot happens in `ServerHandle::shutdown`, not here, so
+/// a simulated crash (`ServerHandle::crash`) loses exactly the
+/// unflushed window and nothing more.
+pub(super) fn spawn_flusher(
+    state: Arc<ServerState>,
+    shard: usize,
+    opts: PersistOpts,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        // In sync mode every mutation already appends inline; the
+        // only work left is the periodic snapshot, so tick at that
+        // cadence instead of spinning on the 0 ms fsync interval.
+        let tick_ms = if opts.sync_mode() {
+            opts.snapshot_interval_ms.max(1)
+        } else {
+            opts.fsync_interval_ms.max(1)
+        };
+        let flush_every = std::time::Duration::from_millis(tick_ms);
+        let slice = flush_every.min(std::time::Duration::from_millis(20));
+        let snapshot_every = std::time::Duration::from_millis(opts.snapshot_interval_ms);
+        let mut since_snapshot = std::time::Duration::ZERO;
+        loop {
+            let mut slept = std::time::Duration::ZERO;
+            while slept < flush_every {
+                if state.stopping() {
+                    return;
+                }
+                let chunk = slice.min(flush_every - slept);
+                std::thread::sleep(chunk);
+                slept += chunk;
+            }
+            if state.stopping() {
+                return;
+            }
+            if !opts.sync_mode() {
+                flush_shard(&state, shard);
+            }
+            since_snapshot += flush_every;
+            if !snapshot_every.is_zero() && since_snapshot >= snapshot_every {
+                since_snapshot = std::time::Duration::ZERO;
+                if let Some(log) = &state.shards[shard].log {
+                    if log.snapshot().is_err() {
+                        log.wal_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+    use crate::util::prop;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        crate::util::scratch_dir(&format!("persist-{tag}"))
+    }
+
+    fn ctr(name: &str, value: u64) -> Record {
+        Record::Counter { name: name.into(), value }
+    }
+
+    fn create_rec(name: &str) -> Record {
+        Record::Create {
+            name: name.into(),
+            kind: "counter".into(),
+            backend: "elastic:aimd".into(),
+            max_width: None,
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let records = vec![
+            Record::Create {
+                name: "jobs".into(),
+                kind: "queue".into(),
+                backend: "lcrq+elastic:fixed:2".into(),
+                max_width: Some(20),
+            },
+            create_rec("orders"),
+            Record::Delete { name: "jobs".into() },
+            ctr("orders", 41),
+            Record::Enqueue { name: "jobs".into(), items: vec![1, 2, 3] },
+            Record::Dequeue { name: "jobs".into(), items: vec![2] },
+        ];
+        for (i, rec) in records.iter().enumerate() {
+            let json = rec.to_json(i as u64 + 1);
+            let reparsed = Json::parse(&json.to_string()).unwrap();
+            let (seq, back) = Record::from_json(&reparsed).unwrap();
+            assert_eq!(seq, i as u64 + 1);
+            assert_eq!(&back, rec, "record {i}");
+        }
+    }
+
+    #[test]
+    fn frame_codec_roundtrip_and_torn_tail() {
+        let mut buf = Vec::new();
+        encode_frame(b"alpha", &mut buf);
+        encode_frame(b"beta", &mut buf);
+        let (payloads, len, torn) = decode_frames(&buf);
+        assert_eq!(payloads, vec![b"alpha".as_slice(), b"beta".as_slice()]);
+        assert_eq!(len, buf.len());
+        assert!(!torn);
+
+        // Truncate mid-frame: the valid prefix survives, the tail is
+        // reported torn.
+        let mut torn_buf = buf.clone();
+        encode_frame(b"gamma-will-be-torn", &mut torn_buf);
+        torn_buf.truncate(buf.len() + 7);
+        let (payloads, len, torn) = decode_frames(&torn_buf);
+        assert_eq!(payloads.len(), 2);
+        assert_eq!(len, buf.len());
+        assert!(torn);
+
+        // Corrupt a payload byte: its frame (and everything after) is
+        // cut off at the checksum.
+        let mut corrupt = buf.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0xFF;
+        let (payloads, _, torn) = decode_frames(&corrupt);
+        assert_eq!(payloads, vec![b"alpha".as_slice()]);
+        assert!(torn);
+
+        // Garbage length prefix: nothing decodes, tail reported.
+        let garbage = vec![0xFFu8; 32];
+        let (payloads, len, torn) = decode_frames(&garbage);
+        assert!(payloads.is_empty());
+        assert_eq!(len, 0);
+        assert!(torn);
+    }
+
+    #[test]
+    fn model_apply_semantics() {
+        let mut m = RecoveryModel::default();
+        m.apply(1, &create_rec("c"));
+        m.apply(
+            2,
+            &Record::Create {
+                name: "q".into(),
+                kind: "queue".into(),
+                backend: "lcrq+elastic".into(),
+                max_width: None,
+            },
+        );
+        m.apply(3, &ctr("c", 10));
+        m.apply(4, &ctr("c", 7)); // stale value: max wins
+        m.apply(5, &Record::Enqueue { name: "q".into(), items: vec![5, 6, 7] });
+        m.apply(6, &Record::Dequeue { name: "q".into(), items: vec![6] });
+        assert_eq!(m.objects["c"].counter, 10);
+        assert_eq!(m.objects["q"].items, VecDeque::from(vec![5, 7]));
+        // Re-create of a live object keeps its state.
+        m.apply(7, &create_rec("c"));
+        assert_eq!(m.objects["c"].counter, 10);
+        // Records at or below the applied seq are skipped (replay
+        // idempotence across the snapshot boundary).
+        m.apply(5, &Record::Enqueue { name: "q".into(), items: vec![5, 6, 7] });
+        assert_eq!(m.objects["q"].items, VecDeque::from(vec![5, 7]));
+        // Records for unknown objects are ignored, not errors.
+        m.apply(8, &ctr("ghost", 3));
+        m.apply(9, &Record::Delete { name: "c".into() });
+        assert!(!m.objects.contains_key("c"));
+        assert_eq!(m.seq, 9);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_property() {
+        prop::check("snapshot roundtrip", |case| {
+            let mut m = RecoveryModel { seq: case.rng.below(1 << 20), ..Default::default() };
+            let names = ["a", "b-2", "long_name_3"];
+            for name in names {
+                if case.rng.below(4) == 0 {
+                    continue;
+                }
+                let queue = case.rng.below(2) == 0;
+                let items: VecDeque<u64> =
+                    case.vec_of(|r| r.below(1 << 50)).into_iter().collect();
+                m.objects.insert(
+                    name.to_string(),
+                    ObjectState {
+                        kind: if queue { "queue" } else { "counter" }.into(),
+                        backend: if queue { "lcrq+elastic" } else { "elastic:aimd:d2" }.into(),
+                        max_width: if case.rng.below(2) == 0 { None } else { Some(7) },
+                        counter: case.rng.below(1 << 50),
+                        items: if queue { items } else { VecDeque::new() },
+                    },
+                );
+            }
+            let json = m.to_snapshot_json().to_string();
+            let back = RecoveryModel::from_snapshot_json(
+                &Json::parse(&json).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            prop_assert_eq!(m, back);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn log_append_reopen_recovers() {
+        let dir = scratch_dir("reopen");
+        {
+            let log = ShardLog::open(&dir, true).unwrap();
+            assert_eq!(log.recovery().objects, 0);
+            log.append(&[create_rec("c"), ctr("c", 5), ctr("c", 12)]).unwrap();
+            assert_eq!(log.wal_record_count(), 3);
+            // Dropped without snapshot: the WAL alone must recover.
+        }
+        {
+            let log = ShardLog::open(&dir, true).unwrap();
+            let report = log.recovery();
+            assert_eq!(report.objects, 1);
+            assert_eq!(report.replayed, 3);
+            assert!(!report.torn_tail);
+            let objects = log.recovered_objects();
+            assert_eq!(objects[0].0, "c");
+            assert_eq!(objects[0].1.counter, 12);
+            // Snapshot absorbs the WAL…
+            log.append(&[ctr("c", 20)]).unwrap();
+            let (objects, absorbed) = log.snapshot().unwrap();
+            assert_eq!(objects, 1);
+            assert_eq!(absorbed, 1);
+        }
+        {
+            // …and the state survives with an empty WAL.
+            let log = ShardLog::open(&dir, true).unwrap();
+            let report = log.recovery();
+            assert_eq!(report.objects, 1);
+            assert_eq!(report.replayed, 0, "snapshot covers everything");
+            assert_eq!(log.recovered_objects()[0].1.counter, 20);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_wal_tail_is_truncated_on_reopen() {
+        let dir = scratch_dir("torn");
+        {
+            let log = ShardLog::open(&dir, true).unwrap();
+            log.append(&[create_rec("c"), ctr("c", 9)]).unwrap();
+        }
+        // Simulate a crash mid-append: tack half a frame onto the WAL.
+        let wal_path = dir.join(WAL_FILE);
+        let valid = std::fs::read(&wal_path).unwrap();
+        let mut torn = valid.clone();
+        let mut partial = Vec::new();
+        encode_frame(br#"{"s":3,"t":"ctr","n":"c","v":99}"#, &mut partial);
+        torn.extend_from_slice(&partial[..partial.len() / 2]);
+        std::fs::write(&wal_path, &torn).unwrap();
+        {
+            let log = ShardLog::open(&dir, true).unwrap();
+            let report = log.recovery();
+            assert!(report.torn_tail, "torn tail must be detected");
+            assert_eq!(report.replayed, 2, "valid prefix replays");
+            assert_eq!(log.recovered_objects()[0].1.counter, 9, "torn record discarded");
+            // The torn bytes are physically gone: new appends start at
+            // a clean frame boundary.
+            log.append(&[ctr("c", 30)]).unwrap();
+        }
+        {
+            let log = ShardLog::open(&dir, true).unwrap();
+            assert!(!log.recovery().torn_tail);
+            assert_eq!(log.recovered_objects()[0].1.counter, 30);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn crash_between_snapshot_and_truncate_replays_idempotently() {
+        let dir = scratch_dir("idem");
+        {
+            let log = ShardLog::open(&dir, true).unwrap();
+            log.append(&[
+                Record::Create {
+                    name: "q".into(),
+                    kind: "queue".into(),
+                    backend: "lcrq+elastic".into(),
+                    max_width: None,
+                },
+                Record::Enqueue { name: "q".into(), items: vec![1, 2] },
+            ])
+            .unwrap();
+        }
+        // Simulate "snapshot published but WAL not truncated": write
+        // the snapshot by hand and leave the WAL in place.
+        let wal_before = std::fs::read(dir.join(WAL_FILE)).unwrap();
+        {
+            let log = ShardLog::open(&dir, true).unwrap();
+            log.snapshot().unwrap();
+        }
+        std::fs::write(dir.join(WAL_FILE), &wal_before).unwrap();
+        {
+            // Replay sees both the snapshot and the old WAL records;
+            // the sequence check keeps the enqueue from doubling.
+            let log = ShardLog::open(&dir, true).unwrap();
+            let items = &log.recovered_objects()[0].1.items;
+            assert_eq!(*items, VecDeque::from(vec![1, 2]), "enqueue double-applied");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_group_commit_coalesces() {
+        let dir = scratch_dir("journal");
+        let log = Arc::new(ShardLog::open(&dir, false).unwrap());
+        log.append(&[create_rec("c")]).unwrap();
+        let j = Journal::counter(Arc::clone(&log), "c");
+        // Many takes, one record.
+        for v in [3u64, 9, 6, 12, 11] {
+            j.record_counter(v);
+        }
+        let mut out = Vec::new();
+        j.drain_into(&mut out);
+        assert_eq!(out, vec![ctr("c", 12)], "window coalesces to the high-water mark");
+        // An idle window drains nothing.
+        out.clear();
+        j.drain_into(&mut out);
+        assert!(out.is_empty());
+
+        let q = Journal::queue(Arc::clone(&log), "q");
+        q.record_enqueue(1);
+        q.record_enqueue(2);
+        q.record_dequeue(1);
+        q.drain_into(&mut out);
+        assert_eq!(
+            out,
+            vec![
+                Record::Enqueue { name: "q".into(), items: vec![1, 2] },
+                Record::Dequeue { name: "q".into(), items: vec![1] },
+            ]
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_sync_mode_appends_inline() {
+        let dir = scratch_dir("sync");
+        let log = Arc::new(ShardLog::open(&dir, true).unwrap());
+        log.append(&[create_rec("c")]).unwrap();
+        let j = Journal::counter(Arc::clone(&log), "c");
+        j.record_counter(4);
+        j.record_counter(9);
+        assert_eq!(log.wal_record_count(), 3, "each take appended a record");
+        let mut out = Vec::new();
+        j.drain_into(&mut out);
+        assert!(out.is_empty(), "sync mode buffers nothing");
+        drop(j);
+        drop(log);
+        let log = ShardLog::open(&dir, true).unwrap();
+        assert_eq!(log.recovered_objects()[0].1.counter, 9);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn persist_opts_modes() {
+        assert!(PersistOpts::sync("/tmp/x").sync_mode());
+        assert!(!PersistOpts::dir("/tmp/x").sync_mode());
+    }
+}

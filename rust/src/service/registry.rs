@@ -14,17 +14,29 @@
 //! Lookups take a read lock and clone an `Arc` out; the data-plane ops
 //! (`take`, `enqueue`, …) then run lock-free on the object itself.
 //! `create`/`delete` are control-plane and take the write lock.
+//!
+//! **Journaling hook.** When the service runs with a `data_dir`, the
+//! registry is handed its shard's [`ShardLog`] before any object is
+//! created. From then on every persisted entry carries a [`Journal`]
+//! and the registry records *logical* effects — `create`/`delete`
+//! specs, post-batch counter values, queue item deltas — never funnel
+//! internals. Per-object `persist = false` opts out. Create/delete
+//! records are appended while the registry write lock is held, so the
+//! WAL's control-plane order always matches the map's.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
 
 use super::metrics::Metrics;
+use super::persist::{Journal, Record, ShardLog};
 use crate::config::ObjectManifest;
 use crate::faa::backend::DirectPermits;
 use crate::faa::{backend, BackendSpec, BatchStats, ElasticAggFunnel, FetchAddObject, WidthPolicy};
-use crate::queue::{make_queue_with_handle, ConcurrentQueue, ElasticIndexFactory, EMPTY_ITEM};
+use crate::queue::{
+    make_queue_with_handle, ConcurrentQueue, ElasticIndexFactory, EMPTY_ITEM, PRQ_MAX_ITEM,
+};
 use crate::util::json::Json;
 
 /// The object un-named requests route to (the pre-registry protocol's
@@ -32,7 +44,7 @@ use crate::util::json::Json;
 pub const DEFAULT_OBJECT: &str = "tickets";
 
 /// Per-object creation options beyond the backend spec string.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct CreateOpts {
     /// Elastic slot capacity override.
     pub max_width: Option<usize>,
@@ -42,12 +54,22 @@ pub struct CreateOpts {
     /// request goes direct). Counters only. Overrides a `:d<k>`
     /// segment in the backend spec.
     pub direct_quota: Option<usize>,
+    /// Whether the object participates in the durability layer when
+    /// the service runs with a `data_dir` (default). `false` makes
+    /// the object ephemeral: it vanishes on restart.
+    pub persist: bool,
+}
+
+impl Default for CreateOpts {
+    fn default() -> Self {
+        Self { max_width: None, direct_quota: None, persist: true }
+    }
 }
 
 impl CreateOpts {
     /// Only a width override (the historical `create` option set).
     pub fn width(max_width: Option<usize>) -> Self {
-        Self { max_width, direct_quota: None }
+        Self { max_width, ..Self::default() }
     }
 }
 
@@ -62,7 +84,8 @@ pub enum ObjectBody {
 }
 
 /// One named object: body + backend label + per-object metrics +
-/// runtime-swappable width policy.
+/// runtime-swappable width policy (+ a durability journal when the
+/// registry persists).
 pub struct ObjectEntry {
     pub name: String,
     /// Canonical backend spec (re-parseable; shown by `list`).
@@ -74,6 +97,15 @@ pub struct ObjectEntry {
     /// [`backend::DirectQuota`]) so demotions are visible in the
     /// per-object metrics.
     direct: Option<DirectPermits>,
+    /// Create-time elastic capacity override; journaled so recovery
+    /// can re-create the object exactly (the backend label does not
+    /// carry it).
+    max_width_override: Option<usize>,
+    /// Largest enqueuable item (queues; PRQ packs values into 48
+    /// bits, every other family takes anything below the sentinel).
+    item_max: u64,
+    /// Durability hook; present iff this entry persists.
+    journal: Option<Journal>,
     body: ObjectBody,
 }
 
@@ -109,28 +141,52 @@ impl ObjectEntry {
     /// funnel (counted as `take_priority_demoted`) when it does not.
     pub fn take(&self, tid: usize, count: u64, priority: bool) -> Result<u64> {
         let funnel = self.as_counter("take")?;
-        if priority {
+        let start = if priority {
             match &self.direct {
                 None => {
                     self.metrics.incr("take_priority");
-                    return Ok(funnel.fetch_add_direct(tid, count as i64));
+                    funnel.fetch_add_direct(tid, count as i64)
                 }
                 Some(gate) if gate.try_acquire() => {
                     self.metrics.incr("take_priority");
                     let v = funnel.fetch_add_direct(tid, count as i64);
                     gate.release();
-                    return Ok(v);
+                    v
                 }
                 Some(_) => {
                     // Quota exhausted: priority demotes to the shared
                     // funnel path instead of overloading `Main`.
                     self.metrics.incr("take_priority_demoted");
-                    return Ok(funnel.fetch_add(tid, count as i64));
+                    funnel.fetch_add(tid, count as i64)
                 }
             }
+        } else {
+            self.metrics.incr("take");
+            funnel.fetch_add(tid, count as i64)
+        };
+        if let Some(journal) = &self.journal {
+            // The logical effect, not the funnel state: the counter
+            // reached at least `start + count` (replay keeps the max
+            // over all records, so out-of-order appends are safe).
+            // A persisted counter's grants must stay in the
+            // JSON-exact range — beyond it the journaled value would
+            // round and a restart could re-issue acked tickets. The
+            // range is consumed in memory either way, but it is
+            // *not* acked and *not* journaled, so recovery stays
+            // exact and a later snapshot can never brick the boot.
+            let end = start
+                .checked_add(count)
+                .filter(|e| *e <= super::persist::MAX_DURABLE_ITEM);
+            let Some(end) = end else {
+                self.metrics.incr("take_beyond_durable");
+                return Err(anyhow!(
+                    "counter {:?} exhausted its durable range (2^53)",
+                    self.name
+                ));
+            };
+            journal.record_counter(end);
         }
-        self.metrics.incr("take");
-        Ok(funnel.fetch_add(tid, count as i64))
+        Ok(start)
     }
 
     /// The configured §4.4 direct quota (`None` = unlimited).
@@ -151,7 +207,27 @@ impl ObjectEntry {
             return Err(anyhow!("item {item} is reserved"));
         }
         let queue = self.as_queue("enqueue")?;
+        if item > self.item_max {
+            // PRQ packs values into 48 bits; reject cleanly instead
+            // of letting the queue's debug assertion kill the
+            // connection handler.
+            return Err(anyhow!(
+                "item {item} exceeds queue {:?}'s item bound {}",
+                self.name,
+                self.item_max
+            ));
+        }
         self.metrics.incr("enqueue");
+        // Journal write-ahead: the Enq record must be ordered before
+        // any Deq record for this item, and a dequeuer can only see
+        // the item after `queue.enqueue` below — so recording first
+        // guarantees replay never sees a dequeue of an item whose
+        // enqueue record is still in flight. (A crash in between
+        // leaves an unacked item in the durable state: at-least-once,
+        // never lost.)
+        if let Some(journal) = &self.journal {
+            journal.record_enqueue(item);
+        }
         queue.enqueue(tid, item);
         Ok(())
     }
@@ -161,10 +237,51 @@ impl ObjectEntry {
         let queue = self.as_queue("dequeue")?;
         self.metrics.incr("dequeue");
         let got = queue.dequeue(tid);
-        if got.is_none() {
-            self.metrics.incr("dequeue_empty");
+        match got {
+            Some(item) => {
+                if let Some(journal) = &self.journal {
+                    journal.record_dequeue(item);
+                }
+            }
+            None => self.metrics.incr("dequeue_empty"),
         }
         Ok(got)
+    }
+
+    /// Recovery-only: raise a counter to its recovered value without
+    /// journaling (the value is already in the recovered model). Uses
+    /// the reserved in-process tid 0 — boot is single-threaded.
+    pub(super) fn seed_counter(&self, value: u64) -> Result<()> {
+        let funnel = self.as_counter("seed")?;
+        // A recovered value beyond the JSON-exact range cannot be
+        // trusted (and would wrap the i64 delta below at 2^63):
+        // refuse rather than seed a wrong counter.
+        if value > super::persist::MAX_DURABLE_ITEM {
+            return Err(anyhow!(
+                "recovered counter value {value} exceeds the durable range"
+            ));
+        }
+        if value > 0 {
+            funnel.fetch_add_direct(0, value as i64);
+        }
+        Ok(())
+    }
+
+    /// Recovery-only: re-enqueue a recovered item without journaling.
+    pub(super) fn seed_queue_item(&self, item: u64) -> Result<()> {
+        let queue = self.as_queue("seed")?;
+        queue.enqueue(0, item);
+        Ok(())
+    }
+
+    /// The durability journal, when this entry persists.
+    pub(crate) fn journal(&self) -> Option<&Journal> {
+        self.journal.as_ref()
+    }
+
+    /// Whether this entry participates in the durability layer.
+    pub fn persisted(&self) -> bool {
+        self.journal.is_some()
     }
 
     /// Set the active funnel width: the Aggregator prefix for a
@@ -245,6 +362,7 @@ impl ObjectEntry {
         obj.insert("name".to_string(), Json::str(self.name.clone()));
         obj.insert("kind".to_string(), Json::str(self.kind()));
         obj.insert("backend".to_string(), Json::str(self.backend.clone()));
+        obj.insert("persist".to_string(), Json::Bool(self.journal.is_some()));
         for (k, v) in self.metrics.snapshot() {
             obj.insert(k, Json::num(v as f64));
         }
@@ -284,19 +402,53 @@ impl ObjectEntry {
 pub struct Registry {
     map: RwLock<BTreeMap<String, Arc<ObjectEntry>>>,
     /// Funnel tid bound every created object is built for (the
-    /// service's lease-pool size plus the reserved tid 0).
+    /// service's lease-pool size plus the foreign pool and the
+    /// reserved tid 0).
     max_threads: usize,
+    /// The shard's durability log; set once before the first create
+    /// when the service runs with a `data_dir`.
+    log: OnceLock<Arc<ShardLog>>,
 }
 
 impl Registry {
     pub fn new(max_threads: usize) -> Self {
-        Self { map: RwLock::new(BTreeMap::new()), max_threads: max_threads.max(1) }
+        Self {
+            map: RwLock::new(BTreeMap::new()),
+            max_threads: max_threads.max(1),
+            log: OnceLock::new(),
+        }
+    }
+
+    /// Attach the shard's durability log. Must happen before any
+    /// object is created; later calls are ignored.
+    pub fn set_log(&self, log: Arc<ShardLog>) {
+        let _ = self.log.set(log);
+    }
+
+    /// The attached durability log, if any.
+    pub fn log(&self) -> Option<&Arc<ShardLog>> {
+        self.log.get()
+    }
+
+    /// Build the journal a new entry should carry (`None` when the
+    /// registry has no log or the object opted out).
+    fn journal_for(&self, name: &str, counter: bool, persist: bool) -> Option<Journal> {
+        if !persist {
+            return None;
+        }
+        let log = self.log.get()?;
+        Some(if counter {
+            Journal::counter(Arc::clone(log), name)
+        } else {
+            Journal::queue(Arc::clone(log), name)
+        })
     }
 
     /// Create a counter directly from a policy (the boot path for the
     /// default object, where the policy is already parsed). `initial`
     /// overrides the policy's starting width; `direct_quota` is the
-    /// §4.4 `d` parameter (`None` = unlimited direct).
+    /// §4.4 `d` parameter (`None` = unlimited direct); `persist`
+    /// opts the object into the durability layer when one is attached.
     pub fn create_counter(
         &self,
         name: &str,
@@ -304,6 +456,7 @@ impl Registry {
         max_width: usize,
         initial: Option<usize>,
         direct_quota: Option<usize>,
+        persist: bool,
     ) -> Result<Arc<ObjectEntry>> {
         let mut spec = BackendSpec::Elastic {
             policy,
@@ -317,12 +470,20 @@ impl Registry {
         if let Some(w) = initial {
             funnel.resize(w);
         }
+        let name = validated_name(name)?;
+        let journal = self.journal_for(&name, true, persist);
         self.insert(ObjectEntry {
-            name: validated_name(name)?,
+            name,
             backend: spec.label(),
             metrics: Metrics::new(),
             policy: Mutex::new(policy),
             direct: direct_quota.map(DirectPermits::new),
+            // The backend label does not carry the elastic capacity,
+            // so journal the effective one: recovery re-creates the
+            // counter with exactly this ceiling.
+            max_width_override: Some(max_width.max(1)),
+            item_max: EMPTY_ITEM - 1,
+            journal,
             body: ObjectBody::Counter(funnel),
         })
     }
@@ -360,7 +521,7 @@ impl Registry {
                          use aggfunnel:<m> or elastic:<policy>"
                     )
                 })?;
-                self.create_counter(name, policy, width, None, spec.direct_quota())
+                self.create_counter(name, policy, width, None, spec.direct_quota(), opts.persist)
             }
             "queue" => {
                 if opts.direct_quota.is_some() {
@@ -390,12 +551,29 @@ impl Registry {
                     Some(BackendSpec::Elastic { policy, .. }) => policy,
                     _ => WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS),
                 };
+                let family = backend_spec.split_once('+').map_or(backend_spec, |(f, _)| f);
+                let mut item_max = if matches!(family.trim(), "prq" | "lprq") {
+                    PRQ_MAX_ITEM
+                } else {
+                    EMPTY_ITEM - 1
+                };
+                let name = validated_name(name)?;
+                let journal = self.journal_for(&name, false, opts.persist);
+                if journal.is_some() {
+                    // Durable items ride the JSON snapshot/WAL model:
+                    // cap at the largest exactly-representable value
+                    // so recovery can never round an acked item.
+                    item_max = item_max.min(super::persist::MAX_DURABLE_ITEM);
+                }
                 self.insert(ObjectEntry {
-                    name: validated_name(name)?,
+                    name,
                     backend: backend_spec.trim().to_string(),
                     metrics: Metrics::new(),
                     policy: Mutex::new(policy),
                     direct: None,
+                    max_width_override: opts.max_width,
+                    item_max,
+                    journal,
                     body: ObjectBody::Queue { queue, elastic },
                 })
             }
@@ -410,6 +588,18 @@ impl Registry {
         }
         let entry = Arc::new(entry);
         map.insert(entry.name.clone(), Arc::clone(&entry));
+        // Journal the creation while the write lock is held so WAL
+        // control-plane order matches map order (a racing delete of
+        // this name cannot journal before us). Replay-tolerant: a
+        // Create for a name the model already holds is a no-op.
+        if let Some(journal) = &entry.journal {
+            journal.log().append_infallible(&[Record::Create {
+                name: entry.name.clone(),
+                kind: entry.kind().to_string(),
+                backend: entry.backend.clone(),
+                max_width: entry.max_width_override,
+            }]);
+        }
         Ok(entry)
     }
 
@@ -426,12 +616,17 @@ impl Registry {
     /// Delete an object. In-flight data-plane ops on other
     /// connections hold their own `Arc` and finish normally.
     pub fn remove(&self, name: &str) -> Result<()> {
-        self.map
-            .write()
-            .unwrap()
-            .remove(name)
-            .map(drop)
-            .ok_or_else(|| anyhow!("no object named {name:?}"))
+        let mut map = self.map.write().unwrap();
+        let entry = map.remove(name).ok_or_else(|| anyhow!("no object named {name:?}"))?;
+        if let Some(journal) = &entry.journal {
+            // Retire before journaling the delete: a data-plane op
+            // still running on a held Arc keeps working in memory but
+            // can no longer journal into a re-created object of the
+            // same name.
+            journal.retire();
+            journal.log().append_infallible(&[Record::Delete { name: name.to_string() }]);
+        }
+        Ok(())
     }
 
     /// Every registered object, in name order.
@@ -703,5 +898,124 @@ mod tests {
         let stats = e.stats_json();
         assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(3));
         assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("fixed-3"));
+    }
+
+    #[test]
+    fn prq_elastic_queue_has_width_controls() {
+        // The elastic-PRQ satellite end to end at the registry layer:
+        // a prq+elastic queue exposes the same resize/policy/stats
+        // surface as lcrq+elastic and its cells ride the controller
+        // walk (`poll`).
+        let r = Registry::new(2);
+        let e = r.create("q", "queue", "prq+elastic:fixed:2", plain()).unwrap();
+        e.enqueue(0, 7).unwrap();
+        assert_eq!(e.dequeue(1).unwrap(), Some(7));
+        let (width, previous) = e.resize(3).unwrap();
+        assert_eq!((width, previous), (3, 2));
+        assert_eq!(e.set_policy(WidthPolicy::Fixed(1)).unwrap(), 1);
+        e.poll();
+        let stats = e.stats_json();
+        assert_eq!(stats.get("backend").and_then(Json::as_str), Some("prq+elastic:fixed:2"));
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(1));
+        assert!(stats.get("index_cells").and_then(Json::as_u64).unwrap() >= 2);
+        assert!(stats.get("main_faas").and_then(Json::as_u64).unwrap() > 0);
+    }
+
+    #[test]
+    fn prq_queue_rejects_oversized_items_cleanly() {
+        let r = Registry::new(2);
+        let e = r.create("q", "queue", "prq", plain()).unwrap();
+        e.enqueue(0, 7).unwrap();
+        assert_eq!(e.dequeue(1).unwrap(), Some(7));
+        // PRQ values are 48-bit: a bigger item is a clean error, not a
+        // handler-killing panic.
+        assert!(e.enqueue(0, 1 << 50).is_err());
+        // LCRQ-family queues take anything below the sentinel.
+        let wide = r.create("w", "queue", "lcrq+hw", plain()).unwrap();
+        wide.enqueue(0, 1 << 50).unwrap();
+        assert_eq!(wide.dequeue(1).unwrap(), Some(1 << 50));
+    }
+
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        crate::util::scratch_dir(&format!("registry-{tag}"))
+    }
+
+    #[test]
+    fn journaled_registry_recovers_through_the_log() {
+        let dir = scratch_dir("journal");
+        {
+            let r = Registry::new(4);
+            r.set_log(Arc::new(ShardLog::open(&dir, true).unwrap()));
+            let c = r.create("c", "counter", "elastic:fixed:2", plain()).unwrap();
+            assert!(c.persisted());
+            assert_eq!(c.take(1, 5, false).unwrap(), 0);
+            assert_eq!(c.take(2, 3, true).unwrap(), 5);
+            let q = r.create("q", "queue", "lcrq+elastic", plain()).unwrap();
+            q.enqueue(1, 41).unwrap();
+            q.enqueue(2, 42).unwrap();
+            assert_eq!(q.dequeue(1).unwrap(), Some(41));
+            // Durable items must be exactly representable in the JSON
+            // WAL/snapshot model: above 2^53 is a clean error here
+            // (a non-persisted lcrq queue would accept it).
+            assert!(q.enqueue(1, 1 << 60).is_err(), "item would round in the WAL");
+            r.create("gone", "counter", "elastic:aimd", plain()).unwrap();
+            r.remove("gone").unwrap();
+            // Dropped without a snapshot: the WAL alone must carry it.
+        }
+        let log = ShardLog::open(&dir, true).unwrap();
+        let objects: BTreeMap<String, super::super::persist::ObjectState> =
+            log.recovered_objects().into_iter().collect();
+        assert_eq!(objects.len(), 2, "deleted object must not be recovered");
+        assert_eq!(objects["c"].counter, 8, "max of the acked post-take values");
+        assert_eq!(objects["c"].backend, "elastic:fixed:2");
+        assert_eq!(objects["q"].items, std::collections::VecDeque::from(vec![42]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn persist_opt_out_keeps_object_ephemeral() {
+        let dir = scratch_dir("optout");
+        {
+            let r = Registry::new(2);
+            r.set_log(Arc::new(ShardLog::open(&dir, true).unwrap()));
+            let opts = CreateOpts { persist: false, ..CreateOpts::default() };
+            let e = r.create("scratch", "counter", "elastic:aimd", opts).unwrap();
+            assert!(!e.persisted());
+            e.take(1, 9, false).unwrap();
+            assert_eq!(
+                e.stats_json().get("persist").and_then(Json::as_bool),
+                Some(false)
+            );
+            r.create("kept", "counter", "elastic:aimd", plain()).unwrap();
+        }
+        let log = ShardLog::open(&dir, true).unwrap();
+        let names: Vec<String> =
+            log.recovered_objects().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["kept"], "opted-out object left no trace");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn late_ops_on_deleted_handles_do_not_leak_into_recreated_objects() {
+        let dir = scratch_dir("reuse");
+        {
+            let r = Registry::new(2);
+            r.set_log(Arc::new(ShardLog::open(&dir, true).unwrap()));
+            let old = r.create("c", "counter", "elastic:fixed:1", plain()).unwrap();
+            old.take(1, 100, false).unwrap();
+            r.remove("c").unwrap();
+            let fresh = r.create("c", "counter", "elastic:fixed:1", plain()).unwrap();
+            fresh.take(1, 3, false).unwrap();
+            // A straggler still holding the deleted entry's Arc: its
+            // in-memory op works, but nothing is journaled under the
+            // re-created name.
+            old.take(1, 500, false).unwrap();
+            assert_eq!(fresh.read(1).unwrap(), 3);
+        }
+        let log = ShardLog::open(&dir, true).unwrap();
+        let objects = log.recovered_objects();
+        assert_eq!(objects.len(), 1);
+        assert_eq!(objects[0].1.counter, 3, "straggler value leaked into the new object");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

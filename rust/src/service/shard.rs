@@ -33,14 +33,20 @@ use crate::util::json::Json;
 /// stops being shard-local).
 pub const SHARD_HASH_SCHEME: &str = "fnv1a64";
 
-/// FNV-1a 64-bit hash of an object name.
-pub fn fnv1a64(name: &str) -> u64 {
+/// FNV-1a 64-bit hash of a byte string (also the WAL frame checksum
+/// of the persistence layer — see [`super::persist`]).
+pub fn fnv1a64_bytes(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in name.as_bytes() {
+    for b in bytes {
         h ^= u64::from(*b);
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// FNV-1a 64-bit hash of an object name.
+pub fn fnv1a64(name: &str) -> u64 {
+    fnv1a64_bytes(name.as_bytes())
 }
 
 /// The shard an object name routes to: `fnv1a64(name) % shards`.
@@ -52,19 +58,38 @@ pub fn shard_of(name: &str, shards: usize) -> usize {
     }
 }
 
-/// The funnel thread-id lease pool: one id per concurrent connection
-/// on this shard. Local leases are `1..=capacity`; they are mapped to
-/// process-global funnel tids by [`Shard::global_tid`] (global id 0
-/// is reserved for in-process callers — boot, benchmarks embedding
-/// the server).
+/// How many funnel thread ids each shard reserves for *foreign*
+/// operations — requests accepted on another shard but owned here
+/// (legacy or mis-routed clients, forwarded in-process). Every object
+/// is built for `workers + FOREIGN_TIDS + 1` tids: the shard's own
+/// connection leases, this foreign pool, and the reserved in-process
+/// tid 0 — independent of the shard count, so funnel per-thread
+/// tables no longer scale with `shards × workers`.
+pub const FOREIGN_TIDS: usize = 2;
+
+/// A funnel thread-id lease pool handing out ids from a fixed range
+/// `start..start + capacity`. Each shard has two: the connection pool
+/// (`1..=workers`, one id per concurrent connection for its lifetime)
+/// and the foreign pool (`workers+1..=workers+FOREIGN_TIDS`, leased
+/// per forwarded operation). Tid 0 is reserved for in-process callers
+/// — boot, recovery seeding, benchmarks embedding the server.
 pub(super) struct TidLease {
     free: Mutex<Vec<usize>>,
+    pub(super) start: usize,
     pub(super) capacity: usize,
 }
 
 impl TidLease {
     pub(super) fn new(capacity: usize) -> Self {
-        Self { free: Mutex::new((1..=capacity).rev().collect()), capacity }
+        Self::with_range(1, capacity)
+    }
+
+    pub(super) fn with_range(start: usize, capacity: usize) -> Self {
+        Self {
+            free: Mutex::new((start..start + capacity).rev().collect()),
+            start,
+            capacity,
+        }
     }
 
     pub(super) fn lease(&self) -> Option<usize> {
@@ -72,7 +97,7 @@ impl TidLease {
     }
 
     pub(super) fn release(&self, lease: usize) {
-        debug_assert!(lease >= 1 && lease <= self.capacity);
+        debug_assert!(lease >= self.start && lease < self.start + self.capacity);
         self.free.lock().unwrap().push(lease);
     }
 }
@@ -88,24 +113,58 @@ pub struct Shard {
     /// Shard-level counters (connections, rejections, requests,
     /// forwarded); per-object traffic lives on each entry.
     pub metrics: Metrics,
+    /// This shard's durability log (WAL + snapshots), when the
+    /// service runs with a `data_dir`.
+    pub log: Option<std::sync::Arc<super::persist::ShardLog>>,
     pub(super) tids: TidLease,
+    /// Small pool of tids for forwarded operations (see
+    /// [`FOREIGN_TIDS`]); leased per op, not per connection.
+    pub(super) foreign: TidLease,
 }
 
 impl Shard {
     pub(super) fn new(index: usize, port: u16, registry: Registry, workers: usize) -> Self {
-        Self { index, port, registry, metrics: Metrics::new(), tids: TidLease::new(workers) }
+        Self {
+            index,
+            port,
+            registry,
+            metrics: Metrics::new(),
+            log: None,
+            tids: TidLease::new(workers),
+            foreign: TidLease::with_range(workers + 1, FOREIGN_TIDS),
+        }
     }
 
-    /// Map a shard-local lease to a process-global funnel tid.
-    ///
-    /// Every object is built for `shards * workers + 1` thread ids, so
-    /// a connection accepted on *any* shard can safely operate on an
-    /// object owned by any other shard (a mis-routed or legacy client
-    /// is forwarded in-process): shard `s`'s leases `1..=workers`
-    /// become tids `s*workers + 1 ..= s*workers + workers`, disjoint
-    /// across shards by construction.
-    pub(super) fn global_tid(&self, lease: usize) -> usize {
-        self.index * self.tids.capacity + lease
+    /// Lease a foreign tid for one forwarded operation, spinning
+    /// until the pool has one free. Safe against deadlock: every
+    /// foreign lease is held only for the span of a single data-plane
+    /// op (never across a wait on another lease), so a full pool
+    /// always drains.
+    pub(super) fn lease_foreign(&self) -> ForeignLease<'_> {
+        let mut waited = false;
+        loop {
+            if let Some(tid) = self.foreign.lease() {
+                return ForeignLease { shard: self, tid };
+            }
+            if !waited {
+                waited = true;
+                self.metrics.incr("foreign_waits");
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Guard for a leased foreign tid; returns it on drop (including when
+/// the forwarded op panics).
+pub(super) struct ForeignLease<'a> {
+    shard: &'a Shard,
+    pub(super) tid: usize,
+}
+
+impl Drop for ForeignLease<'_> {
+    fn drop(&mut self) {
+        self.shard.foreign.release(self.tid);
     }
 }
 
@@ -190,8 +249,11 @@ pub(super) fn spawn_accept_loop(
             let state = Arc::clone(&state);
             std::thread::spawn(move || {
                 let _guard = LeaseGuard { state: Arc::clone(&state), shard, lease };
-                let tid = state.shards[shard].global_tid(lease);
-                let _ = handle_conn(&state, shard, tid, conn);
+                // The lease IS the shard-local funnel tid; forwarded
+                // ops on other shards lease from the owner's foreign
+                // pool instead of reusing this id (see
+                // `handle_request`).
+                let _ = handle_conn(&state, shard, lease, conn);
             })
         };
         let mut held = conns.lock().unwrap();
@@ -293,6 +355,13 @@ fn handle_conn(state: &ServerState, shard: usize, tid: usize, conn: TcpStream) -
             writer.write_all(response.to_string().as_bytes())?;
             writer.write_all(b"\n")?;
         }
+        // Also honour shutdown between requests: a client that keeps
+        // the pipe full never lets the read above time out, and a
+        // stopping server must not be held open by a busy connection
+        // (its in-flight request was still answered).
+        if state.stopping() {
+            return Ok(());
+        }
         line.clear();
     }
 }
@@ -343,5 +412,47 @@ mod tests {
         assert!(pool.lease().is_none(), "capacity 2");
         pool.release(a);
         assert_eq!(pool.lease(), Some(a));
+    }
+
+    #[test]
+    fn fnv1a64_bytes_matches_str() {
+        for s in ["", "a", "foobar", "shard-routing"] {
+            assert_eq!(fnv1a64(s), fnv1a64_bytes(s.as_bytes()));
+        }
+    }
+
+    #[test]
+    fn foreign_pool_is_disjoint_from_connection_leases() {
+        // workers = 3: connection tids 1..=3, foreign tids 4..=5,
+        // tid 0 reserved — objects need workers + FOREIGN_TIDS + 1.
+        let workers = 3;
+        let conns = TidLease::new(workers);
+        let foreign = TidLease::with_range(workers + 1, FOREIGN_TIDS);
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(t) = conns.lease() {
+            assert!((1..=workers).contains(&t));
+            assert!(seen.insert(t));
+        }
+        while let Some(t) = foreign.lease() {
+            assert!((workers + 1..=workers + FOREIGN_TIDS).contains(&t));
+            assert!(seen.insert(t), "foreign tid collided with a lease");
+        }
+        assert_eq!(seen.len(), workers + FOREIGN_TIDS);
+        assert!(!seen.contains(&0), "tid 0 stays reserved for in-process callers");
+    }
+
+    #[test]
+    fn foreign_lease_guard_returns_tid() {
+        let shard = Shard::new(0, 0, Registry::new(4), 1);
+        let first = {
+            let lease = shard.lease_foreign();
+            assert!(lease.tid >= 2, "foreign range starts after the connection pool");
+            lease.tid
+        };
+        // Returned on drop: leasing again hands the same pool back.
+        let again = shard.lease_foreign();
+        let _second = shard.lease_foreign();
+        let _ = again.tid;
+        let _ = first;
     }
 }

@@ -16,6 +16,20 @@ pub mod tomlmini;
 /// Number of bytes in a cache line on every machine we care about.
 pub const CACHE_LINE: usize = 64;
 
+/// Create a unique scratch directory under the system temp dir (no
+/// external tempfile crate): pid + wall-clock nanos keep concurrent
+/// test binaries and benchmark points apart. The caller owns cleanup.
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir()
+        .join(format!("aggfunnels-{tag}-{}-{nanos}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("creating scratch dir");
+    dir
+}
+
 /// Parse a human-friendly count like `"4k"`, `"2m"`, `"1g"` or `"1000"`.
 pub fn parse_count(s: &str) -> Option<u64> {
     let s = s.trim();

@@ -32,6 +32,18 @@ fn all_queues(p: usize, ring_order: u32) -> Vec<(&'static str, Arc<dyn Concurren
             )),
         ),
         ("lprq", Arc::new(Prq::with_ring_order(p, HwIndexFactory, ring_order))),
+        (
+            "prq+aggfunnel",
+            Arc::new(Prq::with_ring_order(p, AggIndexFactory::new(p), ring_order)),
+        ),
+        (
+            "prq+elastic",
+            Arc::new(Prq::with_ring_order(
+                p,
+                ElasticIndexFactory::with_policy(p, WidthPolicy::Fixed(2), 4),
+                ring_order,
+            )),
+        ),
         ("msq", Arc::new(MsQueue::new(p))),
     ]
 }
@@ -128,6 +140,34 @@ fn elastic_index_fifo_holds_while_controller_resizes() {
         })
     };
     fifo_run("lcrq+elastic/resizing", Arc::clone(&q), 4, 4, 2_000);
+    stop.store(true, Ordering::Relaxed);
+    let stats = controller.join().unwrap();
+    assert!(stats.ops >= 2 * 4 * 2_000, "every enqueue and dequeue hits an index F&A");
+}
+
+#[test]
+fn elastic_prq_fifo_holds_while_controller_resizes() {
+    // The PRQ twin of the LCRQ test above: single-word-CAS rings
+    // whose Head/Tail ride elastic funnels, resized mid-load by a
+    // controller walking the factory's live cells.
+    let p = 8;
+    let factory = ElasticIndexFactory::with_policy(p, WidthPolicy::Fixed(2), 6);
+    let handle = factory.clone();
+    let q: Arc<dyn ConcurrentQueue> = Arc::new(Prq::with_ring_order(p, factory, 3));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let controller = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = 1usize;
+            while !stop.load(Ordering::Relaxed) {
+                handle.resize(w);
+                w = w % 6 + 1;
+                std::thread::yield_now();
+            }
+            handle.batch_stats()
+        })
+    };
+    fifo_run("prq+elastic/resizing", Arc::clone(&q), 4, 4, 2_000);
     stop.store(true, Ordering::Relaxed);
     let stats = controller.join().unwrap();
     assert!(stats.ops >= 2 * 4 * 2_000, "every enqueue and dequeue hits an index F&A");

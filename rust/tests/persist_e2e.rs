@@ -1,0 +1,356 @@
+//! End-to-end durability tests: crash a server (drop without the
+//! final flush/snapshot), restart it on the same `data_dir`, and
+//! prove the registry comes back — same object set, monotonic
+//! counters with no duplicate ticket grants, exact queue multisets.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use aggfunnels::config::ObjectManifest;
+use aggfunnels::service::{serve, PersistOpts, ServeOpts, TicketClient};
+use aggfunnels::util::json::Json;
+
+/// Unique scratch `data_dir` for one test.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    aggfunnels::util::scratch_dir(&format!("e2e-{tag}"))
+}
+
+fn dir_str(dir: &std::path::Path) -> String {
+    dir.to_string_lossy().into_owned()
+}
+
+#[test]
+fn crash_recovery_restores_counters_and_queues_exactly() {
+    let dir = scratch_dir("crash-exact");
+    let serve_opts = |dir: &std::path::Path| ServeOpts {
+        // Synchronous mode: every acked response's record is durable,
+        // so a crash loses nothing that was acknowledged.
+        persist: Some(PersistOpts::sync(dir_str(dir))),
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    };
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let addr = server.addr.to_string();
+
+    // Build a namespace and a ledger of acked operations.
+    let mut acked_end = 0u64;
+    let mut dequeued = 0usize;
+    {
+        let mut c = TicketClient::connect(&addr).unwrap();
+        c.create("jobs", "queue", "lcrq+elastic:fixed:2").unwrap();
+        c.create("orders", "counter", "elastic:aimd:d1").unwrap();
+        for k in 0..200u64 {
+            let count = 1 + k % 4;
+            let start = c.take_on("orders", count, k % 9 == 0).unwrap();
+            acked_end = acked_end.max(start + count);
+            c.enqueue("jobs", 1000 + k).unwrap();
+            if k % 3 == 0 {
+                // The queue is never empty here (this iteration's
+                // enqueue precedes it), so FIFO hands out the oldest
+                // surviving item.
+                assert_eq!(c.dequeue("jobs").unwrap(), Some(1000 + dequeued as u64));
+                dequeued += 1;
+            }
+        }
+    }
+    // Acked enqueues minus acked dequeues: the oldest `dequeued`
+    // items are gone, the rest survive in FIFO order.
+    let expected: Vec<u64> = (0..200u64).map(|k| 1000 + k).skip(dequeued).collect();
+
+    // Crash: no graceful flush, no final snapshot.
+    server.crash();
+
+    // Restart on the same data_dir.
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let addr = server.addr.to_string();
+    let mut c = TicketClient::connect(&addr).unwrap();
+
+    // Same object set, same backends.
+    let listed = c.list().unwrap();
+    let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
+    assert_eq!(names, vec!["jobs", "orders", "tickets"]);
+    let orders = listed.iter().find(|(n, _, _)| n == "orders").unwrap();
+    assert_eq!(orders.2, "elastic:aimd:d1", "backend (and its direct quota) survives");
+
+    // Counter: resumes exactly at the last acked value; fresh takes
+    // never re-issue an acked ticket.
+    assert_eq!(c.read_on("orders").unwrap(), acked_end, "counter must resume at last ack");
+    let fresh = c.take_on("orders", 1, false).unwrap();
+    assert_eq!(fresh, acked_end, "no gap, no duplicate grant");
+
+    // Queue: exact multiset of acked enqueues minus acked dequeues,
+    // in FIFO order.
+    let mut drained = Vec::new();
+    while let Some(item) = c.dequeue("jobs").unwrap() {
+        drained.push(item);
+    }
+    assert_eq!(drained, expected, "queue multiset (and order) must survive the crash");
+
+    // Recovery-aware stats: the shard reports what it replayed.
+    let agg = c.cluster_stats().unwrap();
+    let per_shard = agg.get("per_shard").and_then(Json::as_arr).unwrap();
+    assert_eq!(per_shard[0].get("persist").and_then(Json::as_bool), Some(true));
+    let totals = agg.get("totals").unwrap();
+    assert!(totals.get("take").is_some());
+    let replayed: u64 = per_shard
+        .iter()
+        .filter_map(|s| s.get("wal_replayed").and_then(Json::as_u64))
+        .sum();
+    let recovered: u64 = per_shard
+        .iter()
+        .filter_map(|s| s.get("recovered_objects").and_then(Json::as_u64))
+        .sum();
+    assert!(replayed > 0, "the WAL tail must have been replayed");
+    assert_eq!(recovered, 3, "all three objects recovered");
+    // Per-object stats advertise durability.
+    let stats = c.stats_on("orders").unwrap();
+    assert_eq!(stats.get("persist").and_then(Json::as_bool), Some(true));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn crash_mid_workload_never_duplicates_grants() {
+    let dir = scratch_dir("crash-mid");
+    let serve_opts = |dir: &std::path::Path| ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str(dir))),
+        ..ServeOpts::fixed("127.0.0.1:0", 5, 2)
+    };
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let addr = Arc::new(server.addr.to_string());
+
+    // Hammer the default counter until the server dies under us.
+    let workers: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let mut acked: Vec<(u64, u64)> = Vec::new();
+                let Ok(mut c) = TicketClient::connect(&addr) else { return acked };
+                loop {
+                    match c.take(2, false) {
+                        Ok(start) => acked.push((start, 2)),
+                        Err(_) => return acked, // server crashed mid-flight
+                    }
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    server.crash();
+    let mut acked: Vec<(u64, u64)> = workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    assert!(!acked.is_empty(), "the workload must have made progress before the crash");
+
+    // Acked ranges are mutually disjoint…
+    acked.sort_unstable();
+    for pair in acked.windows(2) {
+        assert!(pair[0].0 + pair[0].1 <= pair[1].0, "overlapping acked ranges {pair:?}");
+    }
+    let max_acked_end = acked.last().map(|(s, c)| s + c).unwrap();
+
+    // …and the recovered counter sits at or above every acked range,
+    // so post-restart grants can never duplicate one. (It may sit
+    // above the last *acked* end: an in-flight take can be journaled
+    // before its response is lost to the crash — durability errs
+    // toward never re-issuing a value.)
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    let recovered = c.read().unwrap();
+    assert!(
+        recovered >= max_acked_end,
+        "recovered value {recovered} below acked end {max_acked_end}: duplicate grants possible"
+    );
+    let fresh = c.take(1, false).unwrap();
+    assert!(fresh >= max_acked_end, "fresh grant {fresh} collides with an acked range");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sharded_server_restarts_with_same_namespace_and_values() {
+    // The acceptance path: S = 2, group-commit WAL, graceful
+    // shutdown, restart from the same data_dir.
+    let dir = scratch_dir("sharded");
+    let serve_opts = |dir: &std::path::Path| ServeOpts {
+        resize_interval_ms: 5,
+        persist: Some(PersistOpts {
+            data_dir: dir_str(dir),
+            fsync_interval_ms: 2,
+            snapshot_interval_ms: 0,
+        }),
+        ..ServeOpts::sharded("127.0.0.1:0", 2, 5, 2)
+    };
+    // These names cover both shards at S = 2 (pinned by the
+    // service-shard bench tests).
+    let counters = ["orders", "users"];
+    let queues = ["jobs", "mail"];
+
+    let mut final_counts: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut expected_items: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+    let server = serve(&serve_opts(&dir)).unwrap();
+    {
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(c.shards(), 2);
+        let spread: std::collections::BTreeSet<usize> = counters
+            .iter()
+            .chain(queues.iter())
+            .map(|n| c.shard_for(n))
+            .collect();
+        assert_eq!(spread.len(), 2, "objects must land on both shards");
+        for name in counters {
+            c.create(name, "counter", "elastic:fixed:2").unwrap();
+        }
+        for name in queues {
+            c.create(name, "queue", "lcrq+elastic:fixed:2").unwrap();
+        }
+        for k in 0..120u64 {
+            let counter = counters[(k % 2) as usize];
+            let queue = queues[(k % 2) as usize];
+            let count = 1 + k % 3;
+            c.take_on(counter, count, false).unwrap();
+            *final_counts.entry(counter).or_insert(0) += count;
+            c.enqueue(queue, 5000 + k).unwrap();
+            expected_items.entry(queue).or_default().push(5000 + k);
+            if k % 4 == 0 {
+                let item = c.dequeue(queue).unwrap().unwrap();
+                let items = expected_items.get_mut(queue).unwrap();
+                let pos = items.iter().position(|x| *x == item).unwrap();
+                items.remove(pos);
+            }
+        }
+    }
+    // Graceful shutdown: the final journal window is flushed and each
+    // shard writes a snapshot.
+    server.shutdown();
+
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    assert_eq!(c.shards(), 2, "restart keeps the shard layout");
+
+    // Same object set across both shards.
+    let listed = c.list().unwrap();
+    let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
+    assert_eq!(names, vec!["jobs", "mail", "orders", "tickets", "users"]);
+
+    // Counters: exact values, and still monotonic under new traffic.
+    for name in counters {
+        let value = c.read_on(name).unwrap();
+        assert_eq!(value, final_counts[name], "{name}: counter value after restart");
+        assert_eq!(c.take_on(name, 1, false).unwrap(), value, "{name}: no duplicate grants");
+    }
+    // Queues: exact multisets.
+    for name in queues {
+        let mut drained = Vec::new();
+        while let Some(item) = c.dequeue(name).unwrap() {
+            drained.push(item);
+        }
+        drained.sort_unstable();
+        let mut expected = expected_items.remove(name).unwrap();
+        expected.sort_unstable();
+        assert_eq!(drained, expected, "{name}: queue multiset after restart");
+    }
+    // Both shards report persistence in the cluster aggregate.
+    let agg = c.cluster_stats().unwrap();
+    let per_shard = agg.get("per_shard").and_then(Json::as_arr).unwrap();
+    assert_eq!(per_shard.len(), 2);
+    for shard in per_shard {
+        assert_eq!(shard.get("persist").and_then(Json::as_bool), Some(true));
+        assert!(shard.get("snapshots").and_then(Json::as_u64).unwrap() >= 1);
+    }
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn persist_opt_outs_do_not_survive_restart() {
+    let dir = scratch_dir("optout");
+    let serve_opts = |dir: &std::path::Path| ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str(dir))),
+        objects: vec![ObjectManifest {
+            persist: false,
+            ..ObjectManifest::new("scratchq", "queue", "lcrq+elastic")
+        }],
+        ..ServeOpts::fixed("127.0.0.1:0", 3, 2)
+    };
+    let server = serve(&serve_opts(&dir)).unwrap();
+    {
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        // Wire-created ephemeral object + traffic into the manifest one.
+        c.create_with("cache", "counter", "elastic:aimd", None, None, false).unwrap();
+        c.take_on("cache", 50, false).unwrap();
+        c.enqueue("scratchq", 9).unwrap();
+        let stats = c.stats_on("cache").unwrap();
+        assert_eq!(stats.get("persist").and_then(Json::as_bool), Some(false));
+    }
+    server.crash();
+
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    let listed = c.list().unwrap();
+    let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
+    // The wire-created ephemeral object is gone; the manifest one is
+    // re-created fresh from the manifest (empty again).
+    assert_eq!(names, vec!["scratchq", "tickets"]);
+    assert_eq!(c.dequeue("scratchq").unwrap(), None, "opt-out queue restarts empty");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn shard_count_change_on_same_data_dir_is_refused() {
+    // A shard's log is bound to its slice of the hash space:
+    // restarting with a different shard count would strand every
+    // object whose name now hashes elsewhere, so the boot must fail
+    // loudly instead.
+    let dir = scratch_dir("layout");
+    let server = serve(&ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str(&dir))),
+        ..ServeOpts::sharded("127.0.0.1:0", 2, 3, 2)
+    })
+    .unwrap();
+    server.shutdown();
+    let err = serve(&ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str(&dir))),
+        ..ServeOpts::sharded("127.0.0.1:0", 4, 3, 2)
+    });
+    assert!(err.is_err(), "shard-count change must refuse to boot");
+    assert!(
+        format!("{:#}", err.err().unwrap()).contains("2-shard"),
+        "error must name the recorded layout"
+    );
+    // The original layout still boots.
+    let server = serve(&ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str(&dir))),
+        ..ServeOpts::sharded("127.0.0.1:0", 2, 3, 2)
+    })
+    .unwrap();
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn recovered_state_outranks_boot_manifest() {
+    let dir = scratch_dir("manifest");
+    let serve_opts = |dir: &std::path::Path| ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str(dir))),
+        objects: vec![ObjectManifest::new("orders", "counter", "elastic:fixed:2")],
+        ..ServeOpts::fixed("127.0.0.1:0", 3, 2)
+    };
+    let server = serve(&serve_opts(&dir)).unwrap();
+    {
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        c.take_on("orders", 33, false).unwrap();
+        c.take(4, false).unwrap(); // the default boot counter persists too
+    }
+    server.shutdown();
+
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    assert_eq!(
+        c.read_on("orders").unwrap(),
+        33,
+        "manifest must not reset the recovered counter"
+    );
+    assert_eq!(c.read().unwrap(), 4, "default counter value survives restarts");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
