@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use aggfunnels::service::{serve, ServeOpts, TicketClient};
+use aggfunnels::service::{serve, RegistryClient, ServeOpts, DEFAULT_OBJECT};
 use aggfunnels::util::stats::Summary;
 
 fn main() {
@@ -26,12 +26,17 @@ fn main() {
     let stop = Arc::new(AtomicBool::new(false));
     let run_client = |priority: bool, stop: Arc<AtomicBool>, addr: String| {
         std::thread::spawn(move || {
-            let mut client = TicketClient::connect(&addr).expect("connect");
+            let client = RegistryClient::connect(&addr).expect("connect");
+            let tickets = client.counter(DEFAULT_OBJECT).expect("default counter");
             let mut latencies_us = Vec::new();
             let mut ranges = Vec::new();
             while !stop.load(Ordering::Relaxed) {
                 let t0 = Instant::now();
-                let start = client.take(3, priority).expect("take");
+                let start = if priority {
+                    tickets.take_priority(3).expect("take")
+                } else {
+                    tickets.take(3).expect("take")
+                };
                 latencies_us.push(t0.elapsed().as_nanos() as f64 / 1000.0);
                 ranges.push((start, 3u64));
             }
@@ -75,8 +80,8 @@ fn main() {
         (ps.n as f64) / (ns.n as f64 / 4.0)
     );
 
-    let mut c = TicketClient::connect(&addr).unwrap();
-    println!("server stats: {}", c.stats().unwrap().to_string());
+    let c = RegistryClient::connect(&addr).unwrap();
+    println!("server stats: {}", c.counter(DEFAULT_OBJECT).unwrap().stats().unwrap().to_string());
     server.shutdown();
     println!("\npriority_tickets OK");
 }

@@ -22,6 +22,10 @@
 //!   (group commit must stay well below one record per op: one
 //!   journal record per aggregated batch, mirroring the paper's
 //!   one-hardware-F&A-per-batch amortization).
+//! * `conn`: the event core's client-scaling headline — ticket
+//!   traffic from far more concurrent connections than funnel
+//!   executors (the legacy core's hard ceiling), with the executors'
+//!   measured batch occupancy per drain as the second figure.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -31,7 +35,10 @@ use anyhow::{Context, Result};
 
 use super::Row;
 use crate::config::ObjectManifest;
-use crate::service::{serve, PersistOpts, ServeOpts, ServerHandle, TicketClient};
+use crate::service::{
+    serve, ConnOpts, CounterHandle, PersistOpts, QueueHandle, RegistryClient, ServeOpts,
+    ServerHandle, DEFAULT_OBJECT,
+};
 use crate::util::json::Json;
 use crate::util::stats::mops;
 
@@ -60,24 +67,34 @@ impl ServiceMixOpts {
     }
 }
 
+/// The typed handles one wire-path client thread works through,
+/// looked up (and kind-checked) once at connect time.
+struct WireHandles {
+    counters: Vec<CounterHandle>,
+    queues: Vec<QueueHandle>,
+}
+
 /// One client's unit of work in a wire-path scenario: issue a fixed
-/// burst of requests through `client`. `i` is the client index,
-/// `seq` a per-client item-sequence cursor. Returns the number of
-/// requests issued.
-type WireStep = fn(i: u64, client: &mut TicketClient, seq: &mut u64) -> Result<u64>;
+/// burst of requests through the pre-built handles. `i` is the client
+/// index, `seq` a per-client item-sequence cursor. Returns the number
+/// of requests issued.
+type WireStep = fn(i: u64, h: &WireHandles, seq: &mut u64) -> Result<u64>;
 
 /// Shared wire-path driver: run `clients` native client threads, each
-/// looping `step` against the served address until `duration`
-/// elapses; join every worker before propagating any error and shut
-/// the server down on all paths (an early `?` would leak the
-/// accept/controller threads and the bound ports). A fresh connection
-/// then runs `probe` before shutdown. Returns `(mops, probe result)`.
+/// connecting a [`RegistryClient`], resolving handles for the named
+/// `counters`/`queues`, and looping `step` until `duration` elapses;
+/// join every worker before propagating any error and shut the server
+/// down on all paths (an early `?` would leak the accept/controller
+/// threads and the bound ports). A fresh connection then runs `probe`
+/// before shutdown. Returns `(mops, probe result)`.
 fn measure_wire_point(
     server: ServerHandle,
     clients: usize,
     duration: Duration,
+    counters: &'static [&'static str],
+    queues: &'static [&'static str],
     step: WireStep,
-    probe: fn(&mut TicketClient) -> Result<Json>,
+    probe: fn(&RegistryClient) -> Result<Json>,
 ) -> Result<(f64, Json)> {
     let addr = Arc::new(server.addr.to_string());
     let stop = Arc::new(AtomicBool::new(false));
@@ -86,11 +103,18 @@ fn measure_wire_point(
             let addr = Arc::clone(&addr);
             let stop = Arc::clone(&stop);
             std::thread::spawn(move || -> Result<u64> {
-                let mut c = TicketClient::connect(&addr)?;
+                let c = RegistryClient::connect(&addr)?;
+                let h = WireHandles {
+                    counters: counters
+                        .iter()
+                        .map(|n| c.counter(n))
+                        .collect::<Result<Vec<_>>>()?,
+                    queues: queues.iter().map(|n| c.queue(n)).collect::<Result<Vec<_>>>()?,
+                };
                 let mut ops = 0u64;
                 let mut seq = (i as u64) << 32;
                 while !stop.load(Ordering::Relaxed) {
-                    ops += step(i as u64, &mut c, &mut seq)?;
+                    ops += step(i as u64, &h, &mut seq)?;
                 }
                 Ok(ops)
             })
@@ -116,7 +140,7 @@ fn measure_wire_point(
         server.shutdown();
         return Err(e);
     }
-    let probed = TicketClient::connect(&addr).and_then(|mut p| probe(&mut p));
+    let probed = RegistryClient::connect(&addr).and_then(|p| probe(&p));
     server.shutdown();
     Ok((mops(total, elapsed), probed?))
 }
@@ -127,15 +151,15 @@ fn measure_wire_point(
 /// queue indices' average batch size — zero for non-batching
 /// backends).
 pub fn run_service_mix(opts: &ServiceMixOpts) -> Result<Vec<Row>> {
-    fn step(_i: u64, c: &mut TicketClient, seq: &mut u64) -> Result<u64> {
-        c.take(1, false)?;
-        c.enqueue("jobs", *seq)?;
+    fn step(_i: u64, h: &WireHandles, seq: &mut u64) -> Result<u64> {
+        h.counters[0].take(1)?;
+        h.queues[0].enqueue(*seq)?;
         *seq += 1;
-        c.dequeue("jobs")?;
+        h.queues[0].dequeue()?;
         Ok(3)
     }
-    fn probe(p: &mut TicketClient) -> Result<Json> {
-        p.stats_on("jobs")
+    fn probe(p: &RegistryClient) -> Result<Json> {
+        p.object_stats("jobs")
     }
     let mut rows = Vec::new();
     for backend in SERVICE_MIX_BACKENDS {
@@ -148,8 +172,16 @@ pub fn run_service_mix(opts: &ServiceMixOpts) -> Result<Vec<Row>> {
                 ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
             })
             .with_context(|| format!("serving {backend} for {clients} clients"))?;
-            let (throughput, jobs) = measure_wire_point(server, clients, opts.duration, step, probe)
-                .with_context(|| format!("{backend} with {clients} clients"))?;
+            let (throughput, jobs) = measure_wire_point(
+                server,
+                clients,
+                opts.duration,
+                &[DEFAULT_OBJECT],
+                &["jobs"],
+                step,
+                probe,
+            )
+            .with_context(|| format!("{backend} with {clients} clients"))?;
             let avg_batch = jobs.get("avg_batch").and_then(Json::as_f64).unwrap_or(0.0);
             rows.push(Row {
                 figure: "sm1",
@@ -220,16 +252,16 @@ pub const SHARD_MIX_QUEUES: [&str; 2] = ["jobs", "mail"];
 /// Emits `ss1` (Mops/s over the wire) and `ss2` (requests the serving
 /// shard had to forward — zero when clients route correctly).
 pub fn run_service_shard(opts: &ServiceShardOpts) -> Result<Vec<Row>> {
-    fn step(i: u64, c: &mut TicketClient, seq: &mut u64) -> Result<u64> {
-        let counter = SHARD_MIX_COUNTERS[i as usize % SHARD_MIX_COUNTERS.len()];
-        let queue = SHARD_MIX_QUEUES[i as usize % SHARD_MIX_QUEUES.len()];
-        c.take_on(counter, 1, false)?;
-        c.enqueue(queue, *seq)?;
+    fn step(i: u64, h: &WireHandles, seq: &mut u64) -> Result<u64> {
+        let counter = &h.counters[i as usize % h.counters.len()];
+        let queue = &h.queues[i as usize % h.queues.len()];
+        counter.take(1)?;
+        queue.enqueue(*seq)?;
         *seq += 1;
-        c.dequeue(queue)?;
+        queue.dequeue()?;
         Ok(3)
     }
-    fn probe(p: &mut TicketClient) -> Result<Json> {
+    fn probe(p: &RegistryClient) -> Result<Json> {
         p.cluster_stats()
     }
     let mut rows = Vec::new();
@@ -253,9 +285,16 @@ pub fn run_service_shard(opts: &ServiceShardOpts) -> Result<Vec<Row>> {
                 ..ServeOpts::sharded("127.0.0.1:0", shards, clients + 1, 2)
             })
             .with_context(|| format!("serving {shards} shard(s) for {clients} clients"))?;
-            let (throughput, cluster) =
-                measure_wire_point(server, clients, opts.duration, step, probe)
-                    .with_context(|| format!("{shards} shard(s) with {clients} clients"))?;
+            let (throughput, cluster) = measure_wire_point(
+                server,
+                clients,
+                opts.duration,
+                &SHARD_MIX_COUNTERS,
+                &SHARD_MIX_QUEUES,
+                step,
+                probe,
+            )
+            .with_context(|| format!("{shards} shard(s) with {clients} clients"))?;
             let forwarded = cluster
                 .get("per_shard")
                 .and_then(Json::as_arr)
@@ -323,14 +362,14 @@ fn scratch_data_dir(tag: &str) -> std::path::PathBuf {
 /// so `p2` must sit far below 1; sync mode is the per-op upper
 /// bound, `wal-off` is identically 0).
 pub fn run_service_persist(opts: &ServicePersistOpts) -> Result<Vec<Row>> {
-    fn step(_i: u64, c: &mut TicketClient, seq: &mut u64) -> Result<u64> {
-        c.take(1, false)?;
-        c.enqueue("jobs", *seq)?;
+    fn step(_i: u64, h: &WireHandles, seq: &mut u64) -> Result<u64> {
+        h.counters[0].take(1)?;
+        h.queues[0].enqueue(*seq)?;
         *seq += 1;
-        c.dequeue("jobs")?;
+        h.queues[0].dequeue()?;
         Ok(3)
     }
-    fn probe(p: &mut TicketClient) -> Result<Json> {
+    fn probe(p: &RegistryClient) -> Result<Json> {
         p.cluster_stats()
     }
     let mut rows = Vec::new();
@@ -355,9 +394,16 @@ pub fn run_service_persist(opts: &ServicePersistOpts) -> Result<Vec<Row>> {
                 ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
             })
             .with_context(|| format!("serving {mode} for {clients} clients"))?;
-            let (throughput, cluster) =
-                measure_wire_point(server, clients, opts.duration, step, probe)
-                    .with_context(|| format!("{mode} with {clients} clients"))?;
+            let (throughput, cluster) = measure_wire_point(
+                server,
+                clients,
+                opts.duration,
+                &[DEFAULT_OBJECT],
+                &["jobs"],
+                step,
+                probe,
+            )
+            .with_context(|| format!("{mode} with {clients} clients"))?;
             let per_shard = cluster.get("per_shard").and_then(Json::as_arr);
             let sum = |key: &str| -> u64 {
                 per_shard
@@ -387,6 +433,94 @@ pub fn run_service_persist(opts: &ServicePersistOpts) -> Result<Vec<Row>> {
                 value: wal_records as f64 / requests as f64,
             });
         }
+    }
+    Ok(rows)
+}
+
+/// Funnel executor threads the `conn` scenario holds fixed while the
+/// client count sweeps past it (the legacy core's connection ceiling).
+pub const SERVICE_CONN_WORKERS: usize = 4;
+
+/// Options for [`run_service_conn`].
+#[derive(Clone, Debug)]
+pub struct ServiceConnOpts {
+    /// Concurrent connection counts to sweep (each far above
+    /// [`SERVICE_CONN_WORKERS`] in the default sweep).
+    pub clients: Vec<usize>,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for ServiceConnOpts {
+    fn default() -> Self {
+        Self { clients: vec![64, 256, 1024], duration: Duration::from_millis(300) }
+    }
+}
+
+impl ServiceConnOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self { clients: vec![64], duration: Duration::from_millis(60) }
+    }
+}
+
+/// Run the `conn` scenario: ticket traffic through the event core
+/// from many more concurrent connections than funnel executors
+/// (fixed at [`SERVICE_CONN_WORKERS`]). Emits `c1` (Mops/s over the
+/// wire) and `c2` (decoded requests per executor drain — above 1.0
+/// means the multiplexed core genuinely batches independent
+/// connections into single funnel passes, the service-layer analogue
+/// of the paper's ops-per-hardware-F&A amortization).
+pub fn run_service_conn(opts: &ServiceConnOpts) -> Result<Vec<Row>> {
+    fn step(_i: u64, h: &WireHandles, _seq: &mut u64) -> Result<u64> {
+        h.counters[0].take(1)?;
+        Ok(1)
+    }
+    fn probe(p: &RegistryClient) -> Result<Json> {
+        p.cluster_stats()
+    }
+    let mut rows = Vec::new();
+    for &clients in &opts.clients {
+        let clients = clients.max(1);
+        let server = serve(&ServeOpts {
+            resize_interval_ms: 10,
+            // Headroom over the sweep point plus the post-run probe.
+            conn: ConnOpts { max_conns: clients + 8, ..ConnOpts::default() },
+            ..ServeOpts::fixed("127.0.0.1:0", SERVICE_CONN_WORKERS, 2)
+        })
+        .with_context(|| format!("serving the event core for {clients} clients"))?;
+        let (throughput, cluster) = measure_wire_point(
+            server,
+            clients,
+            opts.duration,
+            &[DEFAULT_OBJECT],
+            &[],
+            step,
+            probe,
+        )
+        .with_context(|| format!("event core with {clients} clients"))?;
+        let occupancy = cluster
+            .get("per_shard")
+            .and_then(Json::as_arr)
+            .and_then(|per| per.first())
+            .and_then(|s| s.get("drain_occupancy"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        let series = format!("event-w{SERVICE_CONN_WORKERS}");
+        rows.push(Row {
+            figure: "c1",
+            series: series.clone(),
+            threads: clients,
+            metric: "mops",
+            value: throughput,
+        });
+        rows.push(Row {
+            figure: "c2",
+            series,
+            threads: clients,
+            metric: "drain_occupancy",
+            value: occupancy,
+        });
     }
     Ok(rows)
 }
@@ -468,6 +602,20 @@ mod tests {
             p1("wal-group"),
             p1("wal-off")
         );
+    }
+
+    #[test]
+    fn conn_sweep_runs_past_the_worker_count() {
+        // 16 concurrent connections against 4 executors: impossible
+        // under the legacy core, routine under the event core.
+        let opts = ServiceConnOpts { clients: vec![16], duration: Duration::from_millis(50) };
+        let rows = run_service_conn(&opts).unwrap();
+        assert_eq!(rows.len(), 2);
+        let c1 = rows.iter().find(|r| r.figure == "c1").unwrap();
+        assert!(c1.value > 0.0, "zero wire throughput");
+        assert_eq!(c1.threads, 16);
+        let c2 = rows.iter().find(|r| r.figure == "c2").unwrap();
+        assert!(c2.value > 0.0, "executors drained no requests");
     }
 
     #[test]

@@ -178,6 +178,19 @@ pub struct ServiceSettings {
     /// Snapshot rewrite period in milliseconds (`0` = only at boot,
     /// graceful shutdown, and the `snapshot` wire op).
     pub snapshot_interval_ms: u64,
+    /// Connection core: `"event"` (multiplexed poll loop + funnel
+    /// executors, the default) or `"threads"` (legacy
+    /// thread-per-connection with `workers` as the connection cap).
+    pub conn_mode: String,
+    /// Poll-loop threads per shard in event mode (connections are
+    /// distributed across them round-robin).
+    pub io_threads: usize,
+    /// Maximum open connections per shard in event mode; over-limit
+    /// connects get an `at_capacity` reply and a clean close.
+    pub max_conns: usize,
+    /// Backpressure ceiling: decoded-but-undrained requests per shard
+    /// before the poll loop stops reading sockets (TCP pushback).
+    pub max_pending: usize,
     /// Objects pre-created at boot (besides the default counter).
     pub objects: Vec<ObjectManifest>,
 }
@@ -196,6 +209,10 @@ impl Default for ServiceSettings {
             persist: true,
             fsync_interval_ms: 5,
             snapshot_interval_ms: 60_000,
+            conn_mode: "event".into(),
+            io_threads: 1,
+            max_conns: 1024,
+            max_pending: 4096,
             objects: Vec::new(),
         }
     }
@@ -260,6 +277,17 @@ impl AppConfig {
         sv.snapshot_interval_ms = doc
             .int_or("service.snapshot_interval_ms", sv.snapshot_interval_ms as i64)
             .max(0) as u64;
+        sv.conn_mode = doc.str_or("service.conn_mode", &sv.conn_mode);
+        if sv.conn_mode != "event" && sv.conn_mode != "threads" {
+            return Err(anyhow!(
+                "service.conn_mode must be \"event\" or \"threads\", got {:?}",
+                sv.conn_mode
+            ));
+        }
+        sv.io_threads = doc.int_or("service.io_threads", sv.io_threads as i64).max(1) as usize;
+        sv.max_conns = doc.int_or("service.max_conns", sv.max_conns as i64).max(1) as usize;
+        sv.max_pending =
+            doc.int_or("service.max_pending", sv.max_pending as i64).max(1) as usize;
 
         // `[objects.<name>]` manifest sections; later layers override
         // per name, fields merge within a name.
@@ -499,6 +527,35 @@ mod tests {
         let doc = TomlDoc::parse("service.fsync_interval_ms = -5").unwrap();
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.service.fsync_interval_ms, 0, "negative intervals clamp");
+    }
+
+    #[test]
+    fn connection_settings_apply() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.service.conn_mode, "event", "event core is the default");
+        assert_eq!(c.service.io_threads, 1);
+        assert_eq!(c.service.max_conns, 1024);
+        assert_eq!(c.service.max_pending, 4096);
+        let doc = TomlDoc::parse(
+            r#"
+            [service]
+            conn_mode = "threads"
+            io_threads = 4
+            max_conns = 64
+            max_pending = 256
+            "#,
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.conn_mode, "threads");
+        assert_eq!(c.service.io_threads, 4);
+        assert_eq!(c.service.max_conns, 64);
+        assert_eq!(c.service.max_pending, 256);
+        let doc = TomlDoc::parse("service.io_threads = 0").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.io_threads, 1, "clamped to at least one poll thread");
+        let doc = TomlDoc::parse("service.conn_mode = \"fibers\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "unknown conn_mode rejected");
     }
 
     #[test]

@@ -29,7 +29,10 @@
 //!   (`artifacts/*.hlo.txt`) and the history verifier built on it.
 //! * [`service`] — the sharded registry service: named counters and
 //!   funnel-backed queues spread over name-hash-routed shards, each
-//!   an independent contention domain, with per-shard durability
+//!   an independent contention domain, served by a multiplexed
+//!   `poll(2)` connection core (`service::conn`) that batches many
+//!   clients onto few funnel executors, spoken to through the typed
+//!   [`service::RegistryClient`], with per-shard durability
 //!   (WAL + snapshots, crash recovery — `service::persist`) when run
 //!   with a `data_dir` (the "deployable system" wrapper).
 //! * [`config`] / [`util`] — hand-rolled substrates (TOML-subset

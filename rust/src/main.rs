@@ -22,15 +22,17 @@ use aggfunnels::bench::native::{
     make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
 };
 use aggfunnels::bench::service_mix::{
-    run_service_mix, run_service_persist, run_service_shard, ServiceMixOpts, ServicePersistOpts,
-    ServiceShardOpts,
+    run_service_conn, run_service_mix, run_service_persist, run_service_shard, ServiceConnOpts,
+    ServiceMixOpts, ServicePersistOpts, ServiceShardOpts,
 };
 use aggfunnels::bench::{rows_to_json, rows_to_table, rows_to_tsv};
 use aggfunnels::config::AppConfig;
 use aggfunnels::faa::choose::sqrt_p_aggregators;
 use aggfunnels::faa::WidthPolicy;
 use aggfunnels::runtime::{ContentionRuntime, OracleRuntime};
-use aggfunnels::service::{serve, PersistOpts, ServeOpts, TicketClient};
+use aggfunnels::service::{
+    serve, ConnMode, ConnOpts, CreateSpec, PersistOpts, RegistryClient, ServeOpts,
+};
 use aggfunnels::sim::algos::AlgoSpec;
 use aggfunnels::sim::workloads::{run_faa_point, FaaWorkload};
 use aggfunnels::util::cli::{Cli, Parsed};
@@ -78,13 +80,13 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|mix|service-mix|service-shard|persist|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|service-shard|persist|conn|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
          verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
-         serve [--addr A] [--shards S] [--workers W] [--m M] [--policy P] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
+         serve [--addr A] [--shards S] [--workers W] [--conn-mode event|threads] [--io-threads N] [--max-conns N] [--max-pending N] [--m M] [--policy P] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
          take [--addr A] [--name O] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n  \
          obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B] [--direct-quota D] [--max-width W] [--no-persist]\n  \
          enqueue --name O --item N [--addr A]\n  \
@@ -136,8 +138,8 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
     }
 
     // `all` covers the simulated groups; `service-mix`,
-    // `service-shard` and `persist` start real servers, so they only
-    // run when named explicitly.
+    // `service-shard`, `persist` and `conn` start real servers, so
+    // they only run when named explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -176,6 +178,16 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
                 sweep.clients = opts.grid.clone();
             }
             ("service-shard".to_string(), run_service_shard(&sweep)?)
+        } else if g == "conn" {
+            let mut sweep = if p.has_flag("quick") {
+                ServiceConnOpts::quick()
+            } else {
+                ServiceConnOpts::default()
+            };
+            if p.get("grid").is_some() {
+                sweep.clients = opts.grid.clone();
+            }
+            ("conn".to_string(), run_service_conn(&sweep)?)
         } else {
             let rows =
                 run_group(&g, &opts).ok_or_else(|| anyhow!("unknown figure group {g:?}"))?;
@@ -386,7 +398,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("config", None, "TOML config file ([objects] pre-creates named objects)")
         .opt("addr", None, "listen address (shard i binds port + i)")
         .opt("shards", None, "independent registry shards (name-hash routed)")
-        .opt("workers", None, "max concurrent client connections per shard")
+        .opt("workers", None, "funnel executor threads per shard (threads mode: connection cap)")
+        .opt("conn-mode", None, "connection core: event (default) | threads")
+        .opt("io-threads", None, "poll-loop threads per shard (event mode)")
+        .opt("max-conns", None, "max open connections per shard (event mode)")
+        .opt("max-pending", None, "undrained-request backpressure ceiling (event mode)")
         .opt("m", None, "initial aggregators per sign (default counter)")
         .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
         .opt("max-m", None, "aggregator slot capacity per sign")
@@ -409,10 +425,19 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     } else {
         None
     };
+    let mode_spec = p.get_or("conn-mode", &cfg.service.conn_mode).to_string();
+    let conn = ConnOpts {
+        mode: ConnMode::parse(&mode_spec)
+            .ok_or_else(|| anyhow!("unknown conn mode {mode_spec:?} (event | threads)"))?,
+        io_threads: p.parse_or::<usize>("io-threads", cfg.service.io_threads).max(1),
+        max_conns: p.parse_or::<usize>("max-conns", cfg.service.max_conns).max(1),
+        max_pending: p.parse_or::<usize>("max-pending", cfg.service.max_pending).max(1),
+    };
     let opts = ServeOpts {
         addr: p.get_or("addr", &cfg.service.addr).to_string(),
         shards: p.parse_or("shards", cfg.service.shards),
         workers: p.parse_or("workers", cfg.service.workers),
+        conn,
         aggregators: p.parse_or("m", cfg.service.aggregators),
         policy,
         max_aggregators: p.parse_or("max-m", cfg.service.max_aggregators),
@@ -429,13 +454,24 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         ),
         None => "in-memory only".to_string(),
     };
+    let capacity = match opts.conn.mode {
+        ConnMode::Event => format!(
+            "{} core, {} executors + {} io thread(s), {} connections each",
+            opts.conn.mode.label(),
+            opts.workers,
+            opts.conn.io_threads,
+            opts.conn.max_conns,
+        ),
+        ConnMode::Threads => {
+            format!("{} core, {} connection slots each", opts.conn.mode.label(), opts.workers)
+        }
+    };
     println!(
-        "registry service on {} ({} shard(s) on ports {:?}, {} connection slots each, \
+        "registry service on {} ({} shard(s) on ports {:?}, {capacity}, \
          policy {}, {} boot object(s), {durability}); Ctrl-C to stop",
         handle.addr,
         handle.shard_ports().len(),
         handle.shard_ports(),
-        opts.workers,
         opts.policy.label(),
         opts.objects.len() + 1,
     );
@@ -448,7 +484,7 @@ fn cmd_snapshot(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("aggfunnels snapshot", "force a snapshot on a persistent service")
         .opt("addr", Some("127.0.0.1:7471"), "service address");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
-    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
     let resp = client.snapshot()?;
     let shards = resp
         .get("snapshots")
@@ -469,21 +505,26 @@ fn cmd_take(args: Vec<String>) -> Result<()> {
         .flag("priority", "use the Fetch&AddDirect fast path")
         .flag("stats", "also print the object's stats");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
-    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
-    let name = p.get_or("name", "tickets").to_string();
+    let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    let counter = client.counter(p.get_or("name", "tickets"))?;
+    let name = counter.name().to_string();
     if let Some(policy) = p.get("set-policy") {
-        let applied = client.set_policy_on(&name, policy)?;
+        let applied = counter.set_policy(policy)?;
         println!("width policy now {applied}");
     }
     if let Some(w) = p.parse_as::<u64>("resize") {
-        let width = client.resize_on(&name, w)?;
+        let width = counter.resize(w)?;
         println!("active width now {width}");
     }
     let count: u64 = p.parse_or("count", 1);
-    let start = client.take_on(&name, count, p.has_flag("priority"))?;
+    let start = if p.has_flag("priority") {
+        counter.take_priority(count)?
+    } else {
+        counter.take(count)?
+    };
     println!("{name}: tickets [{start}, {})", start + count);
     if p.has_flag("stats") {
-        println!("{}", client.stats_on(&name)?.to_string());
+        println!("{}", counter.stats()?.to_string());
     }
     Ok(())
 }
@@ -499,7 +540,7 @@ fn cmd_obj(args: Vec<String>) -> Result<()> {
         .flag("no-persist", "keep the object ephemeral on a persistent server");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let verb = p.positional.first().map(String::as_str).unwrap_or("list");
-    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
     match verb {
         "list" => {
             let objects = client.list()?;
@@ -511,14 +552,13 @@ fn cmd_obj(args: Vec<String>) -> Result<()> {
         "create" => {
             let name = p.get("name").ok_or_else(|| anyhow!("create needs --name"))?;
             let kind = p.get_or("kind", "counter");
-            client.create_with(
-                name,
-                kind,
-                p.get_or("backend", ""),
-                p.parse_as::<u64>("max-width"),
-                p.parse_as::<u64>("direct-quota"),
-                !p.has_flag("no-persist"),
-            )?;
+            let spec = CreateSpec {
+                backend: p.get_or("backend", "").to_string(),
+                max_width: p.parse_as::<u64>("max-width"),
+                direct_quota: p.parse_as::<u64>("direct-quota"),
+                persist: !p.has_flag("no-persist"),
+            };
+            client.create(name, kind, &spec)?;
             println!("created {kind} {name:?}");
         }
         "delete" => {
@@ -540,8 +580,8 @@ fn cmd_enqueue(args: Vec<String>) -> Result<()> {
     let name = p.get("name").ok_or_else(|| anyhow!("enqueue needs --name"))?;
     let item: u64 =
         p.parse_as("item").ok_or_else(|| anyhow!("enqueue needs an integer --item"))?;
-    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
-    client.enqueue(name, item)?;
+    let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    client.queue(name)?.enqueue(item)?;
     println!("{name}: enqueued {item}");
     Ok(())
 }
@@ -552,8 +592,8 @@ fn cmd_dequeue(args: Vec<String>) -> Result<()> {
         .opt("name", None, "queue object name");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let name = p.get("name").ok_or_else(|| anyhow!("dequeue needs --name"))?;
-    let mut client = TicketClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
-    match client.dequeue(name)? {
+    let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    match client.queue(name)?.dequeue()? {
         Some(item) => println!("{name}: dequeued {item}"),
         None => println!("{name}: empty"),
     }

@@ -1,0 +1,717 @@
+//! Client API: [`RegistryClient`] plus typed per-object handles.
+//!
+//! A [`RegistryClient`] is the shard-aware connection manager — it
+//! performs the `shardmap` handshake, opens per-shard connections
+//! lazily, and owns the control plane (`create`/`delete`/`list`/
+//! `snapshot`/cluster stats). Data-plane traffic goes through typed
+//! handles bound to one named object:
+//!
+//! ```no_run
+//! use aggfunnels::service::{CreateSpec, RegistryClient};
+//! # fn main() -> anyhow::Result<()> {
+//! let client = RegistryClient::connect("127.0.0.1:7471")?;
+//! let tickets = client.counter("tickets")?;       // typed lookup
+//! let range_start = tickets.take(5)?;             // one method, not take/take_on
+//! let jobs = client.create_queue("jobs", &CreateSpec::backend("lcrq+elastic"))?;
+//! jobs.enqueue(7)?;
+//! # Ok(()) }
+//! ```
+//!
+//! Handles are cheap clones over the shared connection core (a
+//! mutex-guarded [`ClientCore`]), so one client serves any number of
+//! handles from one set of sockets. Server failures surface as
+//! [`ServiceError`](super::ServiceError) values: match on the
+//! machine-readable [`ErrorCode`](super::ErrorCode) (carried by the
+//! wire `code` field) instead of grepping message text. Capacity
+//! rejections (`ErrorCode::AtCapacity`) are retried internally within
+//! a bounded policy — a rejected connection never executed anything,
+//! so redialing is idempotency-safe; transport failures surface as
+//! `ErrorCode::Io` and evict the cached connection without retrying,
+//! because the request may already have executed server-side.
+//!
+//! The legacy [`TicketClient`] survives as a deprecated shim over
+//! this API for one release.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::error::{service_err, ErrorCode};
+use super::registry::DEFAULT_OBJECT;
+use super::shard::shard_of;
+use super::split_host_port;
+use crate::util::json::Json;
+
+/// Client-side retry policy for capacity rejections: a rejected
+/// connection (or request) never executed anything, so redialing is
+/// idempotency-safe; the bound keeps a genuinely full shard from
+/// hanging the caller.
+const CAPACITY_RETRIES: u32 = 40;
+const CAPACITY_RETRY_DELAY: std::time::Duration = std::time::Duration::from_millis(5);
+
+/// True when a response is a capacity rejection — keyed off the
+/// machine-readable `code` first, with the structured `rejected`
+/// marker and message-text fallbacks for older servers.
+fn is_capacity_rejection(resp: &Json) -> bool {
+    resp.get("code").and_then(Json::as_str) == Some(ErrorCode::AtCapacity.as_str())
+        || resp.get("rejected").and_then(Json::as_bool) == Some(true)
+        || resp
+            .get("error")
+            .and_then(Json::as_str)
+            .is_some_and(|e| e.contains("at capacity"))
+}
+
+/// Lift a `{"ok":false,...}` reply into a typed error: the `code`
+/// field picks the [`ErrorCode`] (older servers without one map to
+/// `Protocol`), the message text rides along unchanged.
+fn server_error(resp: &Json) -> anyhow::Error {
+    let msg = resp.get("error").and_then(Json::as_str).unwrap_or("?");
+    let code = resp
+        .get("code")
+        .and_then(Json::as_str)
+        .map(ErrorCode::parse)
+        .unwrap_or(ErrorCode::Protocol);
+    service_err(code, msg)
+}
+
+/// One connection to one shard.
+struct ClientConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ClientConn {
+    fn open(addr: &str) -> Result<ClientConn> {
+        let conn = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        conn.set_nodelay(true).ok();
+        let writer = conn.try_clone()?;
+        Ok(ClientConn { reader: BufReader::new(conn), writer })
+    }
+
+    /// Write one request and read the matching response, skipping any
+    /// pushed `greeting` lines (a sharded server greets every new
+    /// connection with the shard map).
+    fn roundtrip_raw(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(anyhow!("server closed the connection"));
+            }
+            let resp = Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))?;
+            if resp.get("greeting").and_then(Json::as_bool) == Some(true) {
+                continue;
+            }
+            return Ok(resp);
+        }
+    }
+}
+
+/// The shared connection core: the shard map plus lazily-opened
+/// per-shard connections. [`RegistryClient`] and every handle hold it
+/// behind one mutex — request/response on a connection is serial
+/// anyway, and handles stay cheaply cloneable.
+struct ClientCore {
+    host: String,
+    ports: Vec<u16>,
+    conns: Vec<Option<ClientConn>>,
+}
+
+impl ClientCore {
+    fn connect(addr: &str) -> Result<ClientCore> {
+        let (host, _) = split_host_port(addr)?;
+        // Bounded retry on capacity rejections, mirroring
+        // `roundtrip_on`.
+        let mut attempts = 0u32;
+        loop {
+            let mut conn = ClientConn::open(addr)?;
+            let resp = conn.roundtrip_raw(&Json::obj(vec![("op", Json::str("shardmap"))]))?;
+            if resp.get("ok").and_then(Json::as_bool) == Some(true)
+                && resp.get("shardmap").and_then(Json::as_bool) == Some(true)
+            {
+                let ports: Vec<u16> = resp
+                    .get("ports")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("shardmap missing ports"))?
+                    .iter()
+                    .filter_map(Json::as_u64)
+                    .map(|p| p as u16)
+                    .collect();
+                if ports.is_empty() {
+                    return Err(anyhow!("shardmap with no ports"));
+                }
+                let mut conns: Vec<Option<ClientConn>> =
+                    (0..ports.len()).map(|_| None).collect();
+                if ports.len() == 1 {
+                    // Single shard: keep the handshake connection,
+                    // it is the only one we will ever need.
+                    conns[0] = Some(conn);
+                } else {
+                    // Sharded: drop the handshake connection instead
+                    // of caching it — caching would pin resources on
+                    // a shard this client's objects may never touch.
+                    // Per-shard connections open lazily on first use.
+                    drop(conn);
+                }
+                return Ok(ClientCore { host, ports, conns });
+            }
+            let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+            if err.contains("unknown op") {
+                // A pre-shard server: one implicit shard on the
+                // connected port, and the handshake error consumed
+                // above keeps the line stream in sync.
+                let port = conn.writer.peer_addr()?.port();
+                return Ok(ClientCore { host, ports: vec![port], conns: vec![Some(conn)] });
+            }
+            if is_capacity_rejection(&resp) {
+                attempts += 1;
+                if attempts < CAPACITY_RETRIES {
+                    drop(conn);
+                    std::thread::sleep(CAPACITY_RETRY_DELAY);
+                    continue;
+                }
+            }
+            return Err(server_error(&resp));
+        }
+    }
+
+    fn shard_for(&self, name: &str) -> usize {
+        shard_of(name, self.ports.len())
+    }
+
+    fn conn_for(&mut self, shard: usize) -> Result<&mut ClientConn> {
+        debug_assert!(shard < self.ports.len());
+        if self.conns[shard].is_none() {
+            let addr = format!("{}:{}", self.host, self.ports[shard]);
+            self.conns[shard] = Some(ClientConn::open(&addr)?);
+        }
+        Ok(self.conns[shard].as_mut().unwrap())
+    }
+
+    fn roundtrip_on(&mut self, shard: usize, req: Json) -> Result<Json> {
+        // Capacity rejections can be transient (a rejected connect
+        // races slot releases), so they retry within the shared
+        // bound; transport errors do NOT retry — the request may
+        // already have executed server-side.
+        let mut attempts = 0u32;
+        loop {
+            let resp = match self.conn_for(shard)?.roundtrip_raw(&req) {
+                Ok(resp) => resp,
+                Err(e) => {
+                    // Transport failure (closed socket, bad line):
+                    // evict the cached connection so the next request
+                    // to this shard redials, and surface an `Io`
+                    // error — distinctly typed from the server's own
+                    // rejections so callers can tell a dead socket
+                    // from a full shard.
+                    self.conns[shard] = None;
+                    return Err(service_err(ErrorCode::Io, e.to_string()));
+                }
+            };
+            if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+                if is_capacity_rejection(&resp) {
+                    // The server closes after a capacity rejection;
+                    // evict the dead cached connection either way.
+                    self.conns[shard] = None;
+                    attempts += 1;
+                    if attempts < CAPACITY_RETRIES {
+                        std::thread::sleep(CAPACITY_RETRY_DELAY);
+                        continue;
+                    }
+                }
+                return Err(server_error(&resp));
+            }
+            return Ok(resp);
+        }
+    }
+
+    /// Route a named request to its owning shard.
+    fn roundtrip(&mut self, name: &str, req: Json) -> Result<Json> {
+        self.roundtrip_on(self.shard_for(name), req)
+    }
+}
+
+/// Per-object creation options (see
+/// [`RegistryClient::create_counter`] /
+/// [`RegistryClient::create_queue`]).
+#[derive(Clone, Debug)]
+pub struct CreateSpec {
+    /// Backend spec-grammar label; empty picks the kind's default.
+    pub backend: String,
+    /// Elastic slot capacity ceiling override.
+    pub max_width: Option<u64>,
+    /// §4.4 direct-thread quota (counters only).
+    pub direct_quota: Option<u64>,
+    /// `false` keeps the object ephemeral on a persistent server.
+    pub persist: bool,
+}
+
+impl Default for CreateSpec {
+    fn default() -> Self {
+        CreateSpec { backend: String::new(), max_width: None, direct_quota: None, persist: true }
+    }
+}
+
+impl CreateSpec {
+    /// A spec with just a backend label.
+    pub fn backend(backend: &str) -> Self {
+        CreateSpec { backend: backend.into(), ..Self::default() }
+    }
+
+    pub fn max_width(mut self, w: u64) -> Self {
+        self.max_width = Some(w);
+        self
+    }
+
+    pub fn direct_quota(mut self, d: u64) -> Self {
+        self.direct_quota = Some(d);
+        self
+    }
+
+    /// Opt the object out of durability.
+    pub fn ephemeral(mut self) -> Self {
+        self.persist = false;
+        self
+    }
+}
+
+/// Shard-aware client for the registry service: the connection
+/// manager and control plane. Data-plane traffic goes through
+/// [`CounterHandle`]/[`QueueHandle`] values from
+/// [`counter`](Self::counter)/[`queue`](Self::queue) (typed lookup)
+/// or the `create_*` constructors.
+pub struct RegistryClient {
+    core: Arc<Mutex<ClientCore>>,
+}
+
+impl RegistryClient {
+    /// Connect and perform the `shardmap` handshake (pre-shard
+    /// servers are detected and served over the dialed port).
+    pub fn connect(addr: &str) -> Result<RegistryClient> {
+        Ok(RegistryClient { core: Arc::new(Mutex::new(ClientCore::connect(addr)?)) })
+    }
+
+    /// Number of shards in the connected server's map.
+    pub fn shards(&self) -> usize {
+        self.core.lock().unwrap().ports.len()
+    }
+
+    /// The advertised per-shard port layout.
+    pub fn shard_ports(&self) -> Vec<u16> {
+        self.core.lock().unwrap().ports.clone()
+    }
+
+    /// The shard index `name` routes to.
+    pub fn shard_for(&self, name: &str) -> usize {
+        self.core.lock().unwrap().shard_for(name)
+    }
+
+    /// Typed lookup: a handle to an existing counter. Fails with
+    /// [`ErrorCode::NoSuchObject`] when absent and
+    /// [`ErrorCode::WrongKind`] when `name` is a queue.
+    pub fn counter(&self, name: &str) -> Result<CounterHandle> {
+        self.expect_kind(name, "counter")?;
+        Ok(CounterHandle { core: Arc::clone(&self.core), name: name.to_string() })
+    }
+
+    /// Typed lookup: a handle to an existing queue.
+    pub fn queue(&self, name: &str) -> Result<QueueHandle> {
+        self.expect_kind(name, "queue")?;
+        Ok(QueueHandle { core: Arc::clone(&self.core), name: name.to_string() })
+    }
+
+    fn expect_kind(&self, name: &str, want: &str) -> Result<()> {
+        let stats = self.object_stats(name)?;
+        let kind = stats.get("kind").and_then(Json::as_str).unwrap_or("?");
+        if kind != want {
+            return Err(service_err(
+                ErrorCode::WrongKind,
+                format!("object {name:?} is a {kind}, not a {want}"),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Create a counter and return its handle.
+    pub fn create_counter(&self, name: &str, spec: &CreateSpec) -> Result<CounterHandle> {
+        self.create(name, "counter", spec)?;
+        Ok(CounterHandle { core: Arc::clone(&self.core), name: name.to_string() })
+    }
+
+    /// Create a queue and return its handle.
+    pub fn create_queue(&self, name: &str, spec: &CreateSpec) -> Result<QueueHandle> {
+        self.create(name, "queue", spec)?;
+        Ok(QueueHandle { core: Arc::clone(&self.core), name: name.to_string() })
+    }
+
+    /// Untyped create (`kind`: `counter` | `queue`) — the CLI's
+    /// entry point; prefer the typed constructors in code.
+    pub fn create(&self, name: &str, kind: &str, spec: &CreateSpec) -> Result<()> {
+        let mut pairs = vec![
+            ("op", Json::str("create")),
+            ("name", Json::str(name)),
+            ("kind", Json::str(kind)),
+        ];
+        if !spec.backend.is_empty() {
+            pairs.push(("backend", Json::str(spec.backend.clone())));
+        }
+        if let Some(w) = spec.max_width {
+            pairs.push(("max_width", Json::num(w as f64)));
+        }
+        if let Some(d) = spec.direct_quota {
+            pairs.push(("direct_quota", Json::num(d as f64)));
+        }
+        if !spec.persist {
+            pairs.push(("persist", Json::Bool(false)));
+        }
+        self.core.lock().unwrap().roundtrip(name, Json::obj(pairs)).map(drop)
+    }
+
+    /// Delete a named object (any kind).
+    pub fn delete(&self, name: &str) -> Result<()> {
+        self.core
+            .lock()
+            .unwrap()
+            .roundtrip(
+                name,
+                Json::obj(vec![("op", Json::str("delete")), ("name", Json::str(name))]),
+            )
+            .map(drop)
+    }
+
+    /// List registered objects across all shards, sorted by name, as
+    /// `(name, kind, backend)` triples.
+    pub fn list(&self) -> Result<Vec<(String, String, String)>> {
+        let resp = self
+            .core
+            .lock()
+            .unwrap()
+            .roundtrip_on(0, Json::obj(vec![("op", Json::str("list"))]))?;
+        let objects = resp
+            .get("objects")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing objects"))?;
+        objects
+            .iter()
+            .map(|o| {
+                let field = |k: &str| {
+                    o.get(k)
+                        .and_then(Json::as_str)
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("object missing {k}"))
+                };
+                Ok((field("name")?, field("kind")?, field("backend")?))
+            })
+            .collect()
+    }
+
+    /// Raw per-object stats without going through a typed handle
+    /// (kind-agnostic; the CLI's `stats` path).
+    pub fn object_stats(&self, name: &str) -> Result<Json> {
+        self.core.lock().unwrap().roundtrip(
+            name,
+            Json::obj(vec![("op", Json::str("stats")), ("name", Json::str(name))]),
+        )
+    }
+
+    /// The cluster aggregate (`stats` with `name = "*"`): objects,
+    /// funnel batch totals and traffic merged over every shard.
+    pub fn cluster_stats(&self) -> Result<Json> {
+        self.core
+            .lock()
+            .unwrap()
+            .roundtrip_on(0, Json::obj(vec![("op", Json::str("stats")), ("name", Json::str("*"))]))
+    }
+
+    /// Force a snapshot on every persistent shard. Errors when the
+    /// server runs without a `data_dir`.
+    pub fn snapshot(&self) -> Result<Json> {
+        self.core
+            .lock()
+            .unwrap()
+            .roundtrip_on(0, Json::obj(vec![("op", Json::str("snapshot"))]))
+    }
+}
+
+/// A typed handle to one named counter. One method per operation —
+/// the old `take`/`take_on` duplicate pairs collapse onto the handle,
+/// whose name travels with it.
+#[derive(Clone)]
+pub struct CounterHandle {
+    core: Arc<Mutex<ClientCore>>,
+    name: String,
+}
+
+impl CounterHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Take a contiguous range of `count` values; returns its start.
+    pub fn take(&self, count: u64) -> Result<u64> {
+        self.take_req(count, false)
+    }
+
+    /// `take` via `Fetch&AddDirect` (§4.4), subject to the object's
+    /// direct-thread quota.
+    pub fn take_priority(&self, count: u64) -> Result<u64> {
+        self.take_req(count, true)
+    }
+
+    fn take_req(&self, count: u64, priority: bool) -> Result<u64> {
+        let mut pairs = vec![
+            ("op", Json::str("take")),
+            ("name", Json::str(self.name.clone())),
+            ("count", Json::num(count as f64)),
+        ];
+        if priority {
+            pairs.push(("priority", Json::Bool(true)));
+        }
+        let resp = self.core.lock().unwrap().roundtrip(&self.name, Json::obj(pairs))?;
+        resp.get("start").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing start"))
+    }
+
+    /// Read the counter's current value.
+    pub fn read(&self) -> Result<u64> {
+        let resp = self.core.lock().unwrap().roundtrip(
+            &self.name,
+            Json::obj(vec![("op", Json::str("read")), ("name", Json::str(self.name.clone()))]),
+        )?;
+        resp.get("value").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing value"))
+    }
+
+    pub fn stats(&self) -> Result<Json> {
+        object_stats(&self.core, &self.name)
+    }
+
+    /// Set the funnel's active width; returns the width in force.
+    pub fn resize(&self, width: u64) -> Result<u64> {
+        resize(&self.core, &self.name, width)
+    }
+
+    /// Swap the width policy (`fixed:<m>`, `sqrtp`, `aimd`).
+    pub fn set_policy(&self, policy: &str) -> Result<String> {
+        set_policy(&self.core, &self.name, policy)
+    }
+}
+
+/// A typed handle to one named queue.
+#[derive(Clone)]
+pub struct QueueHandle {
+    core: Arc<Mutex<ClientCore>>,
+    name: String,
+}
+
+impl QueueHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Enqueue `item` (an integer below 2⁵³).
+    pub fn enqueue(&self, item: u64) -> Result<()> {
+        self.core
+            .lock()
+            .unwrap()
+            .roundtrip(
+                &self.name,
+                Json::obj(vec![
+                    ("op", Json::str("enqueue")),
+                    ("name", Json::str(self.name.clone())),
+                    ("item", Json::num(item as f64)),
+                ]),
+            )
+            .map(drop)
+    }
+
+    /// Dequeue one item (`None` when empty).
+    pub fn dequeue(&self) -> Result<Option<u64>> {
+        let resp = self.core.lock().unwrap().roundtrip(
+            &self.name,
+            Json::obj(vec![
+                ("op", Json::str("dequeue")),
+                ("name", Json::str(self.name.clone())),
+            ]),
+        )?;
+        if resp.get("empty").and_then(Json::as_bool) == Some(true) {
+            return Ok(None);
+        }
+        resp.get("item")
+            .and_then(Json::as_u64)
+            .map(Some)
+            .ok_or_else(|| anyhow!("missing item"))
+    }
+
+    pub fn stats(&self) -> Result<Json> {
+        object_stats(&self.core, &self.name)
+    }
+
+    /// Set the funnel index's active width (elastic backends only).
+    pub fn resize(&self, width: u64) -> Result<u64> {
+        resize(&self.core, &self.name, width)
+    }
+
+    pub fn set_policy(&self, policy: &str) -> Result<String> {
+        set_policy(&self.core, &self.name, policy)
+    }
+}
+
+// The width-control and stats requests are identical for both kinds;
+// shared here so the handles stay one method per wire op.
+fn object_stats(core: &Arc<Mutex<ClientCore>>, name: &str) -> Result<Json> {
+    core.lock().unwrap().roundtrip(
+        name,
+        Json::obj(vec![("op", Json::str("stats")), ("name", Json::str(name))]),
+    )
+}
+
+fn resize(core: &Arc<Mutex<ClientCore>>, name: &str, width: u64) -> Result<u64> {
+    let resp = core.lock().unwrap().roundtrip(
+        name,
+        Json::obj(vec![
+            ("op", Json::str("resize")),
+            ("name", Json::str(name)),
+            ("width", Json::num(width as f64)),
+        ]),
+    )?;
+    resp.get("width").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing width"))
+}
+
+fn set_policy(core: &Arc<Mutex<ClientCore>>, name: &str, policy: &str) -> Result<String> {
+    let resp = core.lock().unwrap().roundtrip(
+        name,
+        Json::obj(vec![
+            ("op", Json::str("policy")),
+            ("name", Json::str(name)),
+            ("policy", Json::str(policy)),
+        ]),
+    )?;
+    resp.get("policy")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing policy"))
+}
+
+/// The pre-redesign flat client: every op as a method, `*_on`
+/// duplicates included. A thin shim over [`RegistryClient`], kept for
+/// one release so downstream callers can migrate at leisure.
+#[deprecated(note = "use RegistryClient with CounterHandle/QueueHandle instead")]
+pub struct TicketClient {
+    inner: RegistryClient,
+}
+
+#[allow(deprecated)]
+impl TicketClient {
+    pub fn connect(addr: &str) -> Result<TicketClient> {
+        Ok(TicketClient { inner: RegistryClient::connect(addr)? })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.inner.shards()
+    }
+
+    pub fn shard_ports(&self) -> Vec<u16> {
+        self.inner.shard_ports()
+    }
+
+    pub fn shard_for(&self, name: &str) -> usize {
+        self.inner.shard_for(name)
+    }
+
+    pub fn create(&mut self, name: &str, kind: &str, backend: &str) -> Result<()> {
+        self.inner.create(name, kind, &CreateSpec::backend(backend))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_with(
+        &mut self,
+        name: &str,
+        kind: &str,
+        backend: &str,
+        max_width: Option<u64>,
+        direct_quota: Option<u64>,
+        persist: bool,
+    ) -> Result<()> {
+        let spec = CreateSpec {
+            backend: backend.into(),
+            max_width,
+            direct_quota,
+            persist,
+        };
+        self.inner.create(name, kind, &spec)
+    }
+
+    pub fn snapshot(&mut self) -> Result<Json> {
+        self.inner.snapshot()
+    }
+
+    pub fn delete(&mut self, name: &str) -> Result<()> {
+        self.inner.delete(name)
+    }
+
+    pub fn list(&mut self) -> Result<Vec<(String, String, String)>> {
+        self.inner.list()
+    }
+
+    pub fn enqueue(&mut self, name: &str, item: u64) -> Result<()> {
+        // Handles validate kind on lookup; the shim preserves the old
+        // behaviour of letting the server say "wrong kind", so it
+        // builds handles without the lookup roundtrip.
+        QueueHandle { core: Arc::clone(&self.inner.core), name: name.into() }.enqueue(item)
+    }
+
+    pub fn dequeue(&mut self, name: &str) -> Result<Option<u64>> {
+        QueueHandle { core: Arc::clone(&self.inner.core), name: name.into() }.dequeue()
+    }
+
+    pub fn take_on(&mut self, name: &str, count: u64, priority: bool) -> Result<u64> {
+        let h = CounterHandle { core: Arc::clone(&self.inner.core), name: name.into() };
+        if priority {
+            h.take_priority(count)
+        } else {
+            h.take(count)
+        }
+    }
+
+    pub fn take(&mut self, count: u64, priority: bool) -> Result<u64> {
+        self.take_on(DEFAULT_OBJECT, count, priority)
+    }
+
+    pub fn read_on(&mut self, name: &str) -> Result<u64> {
+        CounterHandle { core: Arc::clone(&self.inner.core), name: name.into() }.read()
+    }
+
+    pub fn read(&mut self) -> Result<u64> {
+        self.read_on(DEFAULT_OBJECT)
+    }
+
+    pub fn stats_on(&mut self, name: &str) -> Result<Json> {
+        self.inner.object_stats(name)
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.stats_on(DEFAULT_OBJECT)
+    }
+
+    pub fn cluster_stats(&mut self) -> Result<Json> {
+        self.inner.cluster_stats()
+    }
+
+    pub fn resize_on(&mut self, name: &str, width: u64) -> Result<u64> {
+        resize(&self.inner.core, name, width)
+    }
+
+    pub fn resize(&mut self, width: u64) -> Result<u64> {
+        self.resize_on(DEFAULT_OBJECT, width)
+    }
+
+    pub fn set_policy_on(&mut self, name: &str, policy: &str) -> Result<String> {
+        set_policy(&self.inner.core, name, policy)
+    }
+
+    pub fn set_policy(&mut self, policy: &str) -> Result<String> {
+        self.set_policy_on(DEFAULT_OBJECT, policy)
+    }
+}

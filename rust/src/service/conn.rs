@@ -1,0 +1,711 @@
+//! The event-driven connection layer: many sockets, few threads.
+//!
+//! The legacy design (kept behind [`ConnMode::Threads`]) spawns one
+//! handler thread per connection and leases that thread a funnel tid
+//! for the connection's lifetime — so a shard can serve at most
+//! `workers` clients at once, the opposite of the many-client regime
+//! aggregating funnels are built for. This module removes the
+//! ceiling: a small pool of I/O threads polls many non-blocking
+//! sockets (via the `sync`-layer [`PollSet`] wrapper over `poll(2)` —
+//! no tokio/mio), decodes complete request lines into per-connection
+//! pending batches, and a fixed set of **funnel executors** — the
+//! only tid holders, executor `e` owns tid `1 + e` — drains those
+//! batches through the ordinary `handle_request` path. Funnel thread
+//! tables stay sized for `workers + FOREIGN_TIDS + 1` tids no matter
+//! how many thousands of sockets are open, and the more connections
+//! are active, the more ops each executor sweep carries into the
+//! funnels per wake-up — exactly the batch-size regime the paper's
+//! one-FAA-per-batch amortization wants.
+//!
+//! Flow control is bounded end to end: at most `max_conns` open
+//! connections per shard (excess connects get a clean `at_capacity`
+//! error reply, not a silent drop) and at most `max_pending` decoded
+//! requests in flight per shard (beyond it the I/O threads stop
+//! reading, pushing back through TCP instead of buffering without
+//! bound).
+//!
+//! Shutdown drains: on stop, each I/O thread performs one final read
+//! pass (catching requests already in kernel buffers), the executors
+//! finish every queued batch, and the I/O threads flush the remaining
+//! responses before closing — so a graceful shutdown (or even a
+//! `crash()` in tests) never swallows an accepted request. The
+//! persist flusher is unaffected: executors journal at the same
+//! combining points as the old per-connection handlers, so WAL batch
+//! boundaries still track funnel group commits, not socket lifetimes.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::sync::poll::PollSet;
+use crate::util::json::Json;
+
+use super::error::{error_json, service_err, ErrorCode};
+use super::ServerState;
+
+/// Which connection core a server runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnMode {
+    /// The multiplexed event-driven core (the default).
+    Event,
+    /// The legacy thread-per-connection core with per-connection tid
+    /// leases (one release's worth of compatibility escape hatch).
+    Threads,
+}
+
+impl ConnMode {
+    pub fn parse(s: &str) -> Option<ConnMode> {
+        match s {
+            "event" => Some(ConnMode::Event),
+            "threads" => Some(ConnMode::Threads),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ConnMode::Event => "event",
+            ConnMode::Threads => "threads",
+        }
+    }
+}
+
+/// Connection-layer configuration (per shard).
+#[derive(Clone, Debug)]
+pub struct ConnOpts {
+    pub mode: ConnMode,
+    /// I/O poller threads per shard (event mode only). Thread 0 also
+    /// owns the shard's listener.
+    pub io_threads: usize,
+    /// Open-connection ceiling per shard (event mode only); excess
+    /// connects are rejected with an `at_capacity` error reply.
+    pub max_conns: usize,
+    /// Decoded-but-unexecuted request ceiling per shard (event mode
+    /// only); beyond it the I/O threads stop reading and TCP
+    /// backpressure reaches the clients.
+    pub max_pending: usize,
+}
+
+impl Default for ConnOpts {
+    fn default() -> Self {
+        ConnOpts { mode: ConnMode::Event, io_threads: 1, max_conns: 1024, max_pending: 4096 }
+    }
+}
+
+impl ConnOpts {
+    /// The event-driven default.
+    pub fn event() -> Self {
+        Self::default()
+    }
+
+    /// The legacy thread-per-connection core.
+    pub fn threads() -> Self {
+        ConnOpts { mode: ConnMode::Threads, ..Self::default() }
+    }
+}
+
+/// Longest accepted request line (1 MiB). A line beyond it is a
+/// protocol error and closes the connection — without a bound one
+/// newline-less client would grow a buffer forever.
+const MAX_LINE: usize = 1 << 20;
+/// Read chunk size and per-connection read rounds per poll wake-up
+/// (bounded so one firehose connection cannot starve its siblings).
+const READ_CHUNK: usize = 4096;
+const READ_ROUNDS: usize = 16;
+/// Connections one executor sweep drains per wake-up; the sweep is
+/// the batch whose occupancy `exec_drained_ops / exec_drains`
+/// reports.
+const SWEEP: usize = 64;
+
+/// Per-shard state shared between the I/O threads and the executors.
+pub(super) struct EventQueue {
+    /// Connections with decoded requests awaiting an executor.
+    run: Mutex<VecDeque<Arc<ConnShared>>>,
+    cv: Condvar,
+    /// Decoded-but-unexecuted requests across the shard (the
+    /// backpressure gauge).
+    pending_ops: AtomicUsize,
+    /// Open connections across the shard's I/O threads.
+    conn_count: AtomicUsize,
+    /// I/O threads that have not yet finished their shutdown read
+    /// pass; executors only exit once it reaches zero with an empty
+    /// run queue, so nothing decoded is ever dropped.
+    io_live: AtomicUsize,
+    next_id: AtomicU64,
+}
+
+impl EventQueue {
+    pub(super) fn new(io_threads: usize) -> Self {
+        EventQueue {
+            run: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            pending_ops: AtomicUsize::new(0),
+            conn_count: AtomicUsize::new(0),
+            io_live: AtomicUsize::new(io_threads.max(1)),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Decoded requests currently awaiting execution (a gauge, not a
+    /// counter — surfaces in per-shard cluster stats).
+    pub(super) fn pending_ops(&self) -> usize {
+        self.pending_ops.load(Ordering::Relaxed)
+    }
+
+    /// Currently open connections on this shard.
+    pub(super) fn open_conns(&self) -> usize {
+        self.conn_count.load(Ordering::Relaxed)
+    }
+}
+
+/// The half of a connection both sides touch: executors append
+/// responses and re-schedule; I/O threads enqueue decoded requests
+/// and flush output. The `scheduled` flag guarantees a connection
+/// sits in the run queue at most once, which also serializes
+/// execution per connection — responses keep request order.
+struct ConnShared {
+    writer: TcpStream,
+    wake: Arc<WakePing>,
+    /// Bytes written by executors but not yet accepted by the socket.
+    out: Mutex<Vec<u8>>,
+    /// Decoded request lines awaiting execution.
+    requests: Mutex<VecDeque<String>>,
+    scheduled: AtomicBool,
+    /// Peer finished sending (EOF/read error); drain, then reap.
+    read_closed: AtomicBool,
+    /// Write side failed; nothing further can be delivered.
+    dead: AtomicBool,
+}
+
+impl ConnShared {
+    /// Queue `bytes` for this connection and push them as far as the
+    /// socket will take them right now; leftovers wait for POLLOUT
+    /// (the wake tells the owning I/O thread to start watching).
+    fn send(&self, bytes: &[u8]) {
+        if self.dead.load(Ordering::Acquire) {
+            return;
+        }
+        self.out.lock().unwrap().extend_from_slice(bytes);
+        self.flush();
+        if !self.out.lock().unwrap().is_empty() {
+            self.wake.wake();
+        }
+    }
+
+    /// Write as much buffered output as the non-blocking socket
+    /// accepts. Called by executors (opportunistically, right after a
+    /// batch) and by I/O threads (on POLLOUT); the `out` lock makes
+    /// the writes atomic with respect to each other.
+    fn flush(&self) {
+        let mut out = self.out.lock().unwrap();
+        let mut written = 0;
+        while written < out.len() {
+            match (&self.writer).write(&out[written..]) {
+                Ok(0) => {
+                    self.dead.store(true, Ordering::Release);
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead.store(true, Ordering::Release);
+                    break;
+                }
+            }
+        }
+        if self.dead.load(Ordering::Acquire) {
+            out.clear();
+        } else {
+            out.drain(..written);
+        }
+    }
+
+    /// Fully drained and idle (or beyond saving)?
+    fn quiesced(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+            || (!self.scheduled.load(Ordering::Acquire)
+                && self.requests.lock().unwrap().is_empty()
+                && self.out.lock().unwrap().is_empty())
+    }
+}
+
+/// Put a connection on the run queue unless it is already there.
+fn schedule(evq: &EventQueue, conn: &Arc<ConnShared>) {
+    if !conn.scheduled.swap(true, Ordering::AcqRel) {
+        evq.run.lock().unwrap().push_back(Arc::clone(conn));
+        evq.cv.notify_one();
+    }
+}
+
+/// A self-wake channel: a loopback TCP pair (std-only — no pipe FFI)
+/// whose read end sits in the I/O thread's poll set. Anyone holding
+/// the write end can interrupt a `poll(2)` sleep.
+struct WakePing {
+    tx: TcpStream,
+}
+
+impl WakePing {
+    fn wake(&self) {
+        // One byte is enough; WouldBlock means wakes are already
+        // pending, which serves the same purpose.
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+fn wake_pair() -> std::io::Result<(WakePing, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let tx = TcpStream::connect(listener.local_addr()?)?;
+    let (rx, _) = listener.accept()?;
+    tx.set_nonblocking(true)?;
+    tx.set_nodelay(true).ok();
+    rx.set_nonblocking(true)?;
+    Ok((WakePing { tx }, rx))
+}
+
+/// Spawn one shard's event core: `io_threads` pollers (thread 0 owns
+/// the listener) plus `workers` funnel executors. All threads exit on
+/// the server stop flag after the drain protocol described in the
+/// module docs.
+pub(super) fn spawn_event_core(
+    state: &Arc<ServerState>,
+    shard: usize,
+    listener: TcpListener,
+    opts: &ConnOpts,
+    workers: usize,
+) -> std::io::Result<Vec<std::thread::JoinHandle<()>>> {
+    let evq = Arc::clone(
+        state.shards[shard].evq.as_ref().expect("event core needs the shard's EventQueue"),
+    );
+    let io_n = opts.io_threads.max(1);
+    let mut wakes = Vec::with_capacity(io_n);
+    let mut rxs = Vec::with_capacity(io_n);
+    let mut inboxes: Vec<Inbox> = Vec::with_capacity(io_n);
+    for _ in 0..io_n {
+        let (tx, rx) = wake_pair()?;
+        wakes.push(Arc::new(tx));
+        rxs.push(rx);
+        inboxes.push(Arc::new(Mutex::new(Vec::new())));
+    }
+    let mut threads = Vec::with_capacity(io_n + workers);
+    let mut listener = Some(listener);
+    for (t, rx) in rxs.into_iter().enumerate() {
+        let io = IoThread {
+            state: Arc::clone(state),
+            shard,
+            evq: Arc::clone(&evq),
+            listener: if t == 0 { listener.take() } else { None },
+            wake_rx: rx,
+            wake: Arc::clone(&wakes[t]),
+            inbox: Arc::clone(&inboxes[t]),
+            inboxes: inboxes.clone(),
+            wakes: wakes.clone(),
+            opts: opts.clone(),
+            conns: Vec::new(),
+        };
+        threads.push(std::thread::spawn(move || io.run()));
+    }
+    for e in 0..workers.max(1) {
+        let state = Arc::clone(state);
+        let evq = Arc::clone(&evq);
+        // Executors are the shard's only funnel tid holders:
+        // executor `e` owns tid `1 + e` outright (tid 0 stays
+        // reserved for in-process callers, the foreign pool above
+        // `workers` still serves forwarded ops).
+        let tid = 1 + e;
+        threads.push(std::thread::spawn(move || executor_loop(&state, shard, tid, &evq)));
+    }
+    Ok(threads)
+}
+
+type Inbox = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+
+/// A connection owned by one I/O thread.
+struct IoConn {
+    stream: TcpStream,
+    /// Bytes read but not yet terminated by a newline.
+    buf: Vec<u8>,
+    shared: Arc<ConnShared>,
+}
+
+struct IoThread {
+    state: Arc<ServerState>,
+    shard: usize,
+    evq: Arc<EventQueue>,
+    /// Thread 0 owns the shard listener; the rest only poll conns.
+    listener: Option<TcpListener>,
+    wake_rx: TcpStream,
+    wake: Arc<WakePing>,
+    inbox: Inbox,
+    inboxes: Vec<Inbox>,
+    wakes: Vec<Arc<WakePing>>,
+    opts: ConnOpts,
+    conns: Vec<IoConn>,
+}
+
+impl IoThread {
+    fn run(mut self) {
+        let mut set = PollSet::new();
+        while !self.state.stopping() {
+            set.clear();
+            let listener_slot = self.listener.as_ref().map(|l| set.push(l, true, false));
+            let wake_slot = set.push(&self.wake_rx, true, false);
+            // Backpressure: past `max_pending` decoded requests, stop
+            // reading everywhere on this shard; TCP receive windows
+            // fill and the clients feel it. Output still flushes, so
+            // the executors drain the backlog and reads resume.
+            let stalled = self.evq.pending_ops() >= self.opts.max_pending.max(1);
+            if stalled {
+                self.state.shards[self.shard].metrics.incr("backpressure_stalls");
+            }
+            let mut conn_slots = Vec::with_capacity(self.conns.len());
+            for c in &self.conns {
+                let read = !stalled
+                    && !c.shared.read_closed.load(Ordering::Acquire)
+                    && !c.shared.dead.load(Ordering::Acquire);
+                let write = !c.shared.out.lock().unwrap().is_empty();
+                conn_slots.push(set.push(&c.stream, read, write));
+            }
+            let _ = set.poll(50);
+            if self.state.stopping() {
+                break;
+            }
+            if set.readable(wake_slot) {
+                self.drain_wake();
+            }
+            for (i, slot) in conn_slots.into_iter().enumerate() {
+                if set.readable(slot) {
+                    self.read_conn(i);
+                }
+                if set.writable(slot) {
+                    self.conns[i].shared.flush();
+                }
+            }
+            if let Some(slot) = listener_slot {
+                if set.readable(slot) {
+                    self.accept_round();
+                }
+            }
+            self.adopt_inbox();
+            self.reap();
+        }
+        self.drain_and_close();
+    }
+
+    fn drain_wake(&self) {
+        let mut sink = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock: drained
+            }
+        }
+    }
+
+    /// Accept everything the listener has ready, admitting up to
+    /// `max_conns` per shard and rejecting the rest with a clean
+    /// `at_capacity` reply (never a silent drop).
+    fn accept_round(&mut self) {
+        let Some(listener) = &self.listener else { return };
+        loop {
+            let conn = match listener.accept() {
+                Ok((conn, _)) => conn,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock or transient: next poll retries
+            };
+            let metrics = &self.state.shards[self.shard].metrics;
+            metrics.incr("connections");
+            if self.evq.open_conns() >= self.opts.max_conns.max(1) {
+                metrics.incr("rejected");
+                reject_at_capacity(&self.state, self.shard, conn, self.opts.max_conns.max(1));
+                continue;
+            }
+            self.evq.conn_count.fetch_add(1, Ordering::AcqRel);
+            metrics.incr("conn_open");
+            let id = self.evq.next_id.fetch_add(1, Ordering::Relaxed);
+            let t = (id as usize) % self.inboxes.len();
+            self.inboxes[t].lock().unwrap().push((id, conn));
+            if t != 0 {
+                self.wakes[t].wake();
+            }
+        }
+    }
+
+    /// Take ownership of connections the acceptor routed here.
+    fn adopt_inbox(&mut self) {
+        let adopted: Vec<(u64, TcpStream)> = self.inbox.lock().unwrap().drain(..).collect();
+        for (_, stream) in adopted {
+            if stream.set_nonblocking(true).is_err() {
+                self.evq.conn_count.fetch_sub(1, Ordering::AcqRel);
+                self.state.shards[self.shard].metrics.incr("conn_closed");
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            let writer = match stream.try_clone() {
+                Ok(w) => w,
+                Err(_) => {
+                    self.evq.conn_count.fetch_sub(1, Ordering::AcqRel);
+                    self.state.shards[self.shard].metrics.incr("conn_closed");
+                    continue;
+                }
+            };
+            let shared = Arc::new(ConnShared {
+                writer,
+                wake: Arc::clone(&self.wake),
+                out: Mutex::new(Vec::new()),
+                requests: Mutex::new(VecDeque::new()),
+                scheduled: AtomicBool::new(false),
+                read_closed: AtomicBool::new(false),
+                dead: AtomicBool::new(false),
+            });
+            // Sharded servers greet on connect (same wire contract as
+            // the legacy core); single-shard servers stay silent.
+            if self.state.shards.len() > 1 {
+                let mut greeting =
+                    self.state.shardmap_json(self.shard, true).to_string().into_bytes();
+                greeting.push(b'\n');
+                shared.send(&greeting);
+            }
+            self.conns.push(IoConn { stream, buf: Vec::new(), shared });
+        }
+    }
+
+    /// Non-blocking read rounds for one connection: pull what the
+    /// kernel has, split complete lines into the request queue, and
+    /// schedule the connection for an executor.
+    fn read_conn(&mut self, i: usize) {
+        let c = &mut self.conns[i];
+        if c.shared.read_closed.load(Ordering::Acquire) || c.shared.dead.load(Ordering::Acquire)
+        {
+            return;
+        }
+        let mut chunk = [0u8; READ_CHUNK];
+        for _ in 0..READ_ROUNDS {
+            match (&c.stream).read(&mut chunk) {
+                Ok(0) => {
+                    c.shared.read_closed.store(true, Ordering::Release);
+                    break;
+                }
+                Ok(n) => {
+                    c.buf.extend_from_slice(&chunk[..n]);
+                    if n < READ_CHUNK {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    c.shared.read_closed.store(true, Ordering::Release);
+                    break;
+                }
+            }
+        }
+        let mut pushed = 0usize;
+        while let Some(pos) = c.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = c.buf.drain(..=pos).collect();
+            if line.len() > MAX_LINE {
+                Self::overlong_line(&c.shared);
+                break;
+            }
+            let text = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+            if text.trim().is_empty() {
+                continue;
+            }
+            c.shared.requests.lock().unwrap().push_back(text);
+            pushed += 1;
+        }
+        if c.buf.len() > MAX_LINE {
+            Self::overlong_line(&c.shared);
+            c.buf.clear();
+        }
+        if pushed > 0 {
+            self.evq.pending_ops.fetch_add(pushed, Ordering::AcqRel);
+            schedule(&self.evq, &c.shared);
+        }
+    }
+
+    /// A request line beyond [`MAX_LINE`]: answer with a protocol
+    /// error and stop reading this connection (queued work and the
+    /// error reply still drain before the reap).
+    fn overlong_line(shared: &Arc<ConnShared>) {
+        let err = service_err(
+            ErrorCode::Protocol,
+            format!("request line exceeds {MAX_LINE} bytes"),
+        );
+        let mut reply = error_json(&err).to_string().into_bytes();
+        reply.push(b'\n');
+        shared.send(&reply);
+        shared.read_closed.store(true, Ordering::Release);
+    }
+
+    /// Drop connections that are gone and fully drained.
+    fn reap(&mut self) {
+        let evq = &self.evq;
+        let metrics = &self.state.shards[self.shard].metrics;
+        self.conns.retain(|c| {
+            let gone = c.shared.dead.load(Ordering::Acquire)
+                || (c.shared.read_closed.load(Ordering::Acquire) && c.shared.quiesced());
+            if gone {
+                evq.conn_count.fetch_sub(1, Ordering::AcqRel);
+                metrics.incr("conn_closed");
+            }
+            !gone
+        });
+    }
+
+    /// Shutdown: one final read pass catches requests already sitting
+    /// in kernel buffers, then executors are released (`io_live`),
+    /// then responses flush until every connection is quiet (bounded
+    /// by a deadline so a stuck peer cannot hang `shutdown()`).
+    fn drain_and_close(mut self) {
+        for i in 0..self.conns.len() {
+            self.read_conn(i);
+        }
+        self.evq.io_live.fetch_sub(1, Ordering::AcqRel);
+        self.evq.cv.notify_all();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while Instant::now() < deadline {
+            for c in &self.conns {
+                c.shared.flush();
+            }
+            if self.conns.iter().all(|c| c.shared.quiesced()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// One funnel executor: sweep up to [`SWEEP`] scheduled connections
+/// per wake-up and run their queued requests on this executor's tid.
+/// The sweep is the drain the occupancy metrics describe — under many
+/// active connections each wake-up carries many ops into the funnels.
+fn executor_loop(state: &Arc<ServerState>, shard: usize, tid: usize, evq: &EventQueue) {
+    loop {
+        let mut batch: Vec<Arc<ConnShared>> = Vec::new();
+        {
+            let mut q = evq.run.lock().unwrap();
+            loop {
+                while batch.len() < SWEEP {
+                    match q.pop_front() {
+                        Some(c) => batch.push(c),
+                        None => break,
+                    }
+                }
+                if !batch.is_empty() {
+                    break;
+                }
+                if state.stopping() && evq.io_live.load(Ordering::Acquire) == 0 {
+                    return;
+                }
+                let (guard, _) = evq.cv.wait_timeout(q, Duration::from_millis(25)).unwrap();
+                q = guard;
+            }
+        }
+        let mut ops = 0usize;
+        for conn in batch {
+            let lines: Vec<String> = conn.requests.lock().unwrap().drain(..).collect();
+            if !lines.is_empty() {
+                let mut out = Vec::new();
+                for line in &lines {
+                    let resp = match super::handle_request(state, shard, tid, line) {
+                        Ok(json) => json,
+                        Err(e) => error_json(&e),
+                    };
+                    out.extend_from_slice(resp.to_string().as_bytes());
+                    out.push(b'\n');
+                }
+                evq.pending_ops.fetch_sub(lines.len(), Ordering::AcqRel);
+                ops += lines.len();
+                conn.send(&out);
+            }
+            // Re-arm: clear the scheduled flag, then re-check — a
+            // producer that pushed between the drain and the clear
+            // skipped its own schedule (the flag was still set), so
+            // the re-check re-queues; the swap keeps it single-entry.
+            conn.scheduled.store(false, Ordering::Release);
+            let more = !conn.requests.lock().unwrap().is_empty();
+            if more && !conn.scheduled.swap(true, Ordering::AcqRel) {
+                evq.run.lock().unwrap().push_back(Arc::clone(&conn));
+                evq.cv.notify_one();
+            }
+        }
+        if ops > 0 {
+            let metrics = &state.shards[shard].metrics;
+            metrics.incr("exec_drains");
+            metrics.add("exec_drained_ops", ops as u64);
+        }
+    }
+}
+
+/// Tell an over-`max_conns` client why it is being turned away: an
+/// `at_capacity` error reply with the structured `rejected` marker
+/// and `code`, then a clean close (FIN first, short receive drain so
+/// pipelined bytes cannot turn the close into an RST that destroys
+/// the reply).
+fn reject_at_capacity(state: &ServerState, shard: usize, mut conn: TcpStream, max_conns: usize) {
+    let _ = conn.set_nonblocking(false);
+    if state.shards.len() > 1 {
+        let _ = conn.write_all(state.shardmap_json(shard, true).to_string().as_bytes());
+        let _ = conn.write_all(b"\n");
+    }
+    let error = if state.shards.len() > 1 {
+        format!("shard {shard} at capacity ({max_conns} connections)")
+    } else {
+        format!("server at capacity ({max_conns} connections)")
+    };
+    let resp = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("rejected", Json::Bool(true)),
+        ("code", Json::str(ErrorCode::AtCapacity.as_str())),
+        ("error", Json::str(error)),
+    ]);
+    let _ = conn.write_all(resp.to_string().as_bytes());
+    let _ = conn.write_all(b"\n");
+    let _ = conn.shutdown(std::net::Shutdown::Write);
+    conn.set_read_timeout(Some(Duration::from_millis(20))).ok();
+    let mut sink = [0u8; 256];
+    for _ in 0..4 {
+        match conn.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conn_mode_parses_and_labels() {
+        assert_eq!(ConnMode::parse("event"), Some(ConnMode::Event));
+        assert_eq!(ConnMode::parse("threads"), Some(ConnMode::Threads));
+        assert_eq!(ConnMode::parse("fibers"), None);
+        assert_eq!(ConnMode::Event.label(), "event");
+        assert_eq!(ConnMode::Threads.label(), "threads");
+    }
+
+    #[test]
+    fn wake_pair_interrupts_a_poll() {
+        let (tx, rx) = wake_pair().unwrap();
+        let mut set = PollSet::new();
+        let slot = set.push(&rx, true, false);
+        tx.wake();
+        assert!(set.poll(1000).unwrap() >= 1);
+        assert!(set.readable(slot));
+    }
+
+    #[test]
+    fn event_queue_gauges_start_empty() {
+        let evq = EventQueue::new(2);
+        assert_eq!(evq.pending_ops(), 0);
+        assert_eq!(evq.open_conns(), 0);
+        assert_eq!(evq.io_live.load(Ordering::Relaxed), 2);
+    }
+}

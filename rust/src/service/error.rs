@@ -1,0 +1,151 @@
+//! Typed service errors with machine-readable wire codes.
+//!
+//! Every error reply the server writes carries a `code` field next to
+//! the human-readable `error` message (`{"ok":false,"error":...,
+//! "code":"no_such_object"}`). Message text is unchanged from earlier
+//! releases so old clients that substring-match keep working, while
+//! new clients key decisions (retry on capacity, evict on I/O death)
+//! off the enum instead of prose.
+
+use std::fmt;
+
+/// The machine-readable error classes the wire protocol exposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// The named object does not exist on this shard.
+    NoSuchObject,
+    /// The object exists but is the wrong kind for the op (counter vs queue).
+    WrongKind,
+    /// The server (or one shard) has no room: connection slots or
+    /// funnel capacity are exhausted. Retryable.
+    AtCapacity,
+    /// An enqueue item is outside the encodable range or reserved.
+    ItemTooLarge,
+    /// A direct-quota or durable-range budget was exhausted.
+    QuotaExceeded,
+    /// Malformed request, unknown op, or invalid argument.
+    Protocol,
+    /// A transport-level failure (client-side only; never sent on the wire).
+    Io,
+}
+
+impl ErrorCode {
+    /// The wire spelling carried in the reply's `code` field.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::NoSuchObject => "no_such_object",
+            ErrorCode::WrongKind => "wrong_kind",
+            ErrorCode::AtCapacity => "at_capacity",
+            ErrorCode::ItemTooLarge => "item_too_large",
+            ErrorCode::QuotaExceeded => "quota_exceeded",
+            ErrorCode::Protocol => "protocol",
+            ErrorCode::Io => "io",
+        }
+    }
+
+    /// Parse a wire `code` field; unknown spellings map to `Protocol`
+    /// so newer servers stay usable from this client.
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "no_such_object" => ErrorCode::NoSuchObject,
+            "wrong_kind" => ErrorCode::WrongKind,
+            "at_capacity" => ErrorCode::AtCapacity,
+            "item_too_large" => ErrorCode::ItemTooLarge,
+            "quota_exceeded" => ErrorCode::QuotaExceeded,
+            "io" => ErrorCode::Io,
+            _ => ErrorCode::Protocol,
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A service error: a code plus the human-readable message that goes
+/// in (or came from) the wire reply's `error` field.
+#[derive(Debug, Clone)]
+pub struct ServiceError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ServiceError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        ServiceError { code, message: message.into() }
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Display is the wire message only: server reply text must not
+        // change when an error is wrapped/unwrapped through anyhow.
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Build an `anyhow::Error` carrying a typed [`ServiceError`].
+pub fn service_err(code: ErrorCode, message: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(ServiceError::new(code, message))
+}
+
+/// The code attached to an error chain, defaulting to `Protocol` for
+/// untyped errors (every pre-existing `anyhow!` site). This is how
+/// callers key retry/evict decisions off a `Result` from the client
+/// API without string-matching.
+pub fn code_of(err: &anyhow::Error) -> ErrorCode {
+    match err.downcast_ref::<ServiceError>() {
+        Some(se) => se.code,
+        None => ErrorCode::Protocol,
+    }
+}
+
+/// The wire shape of an error reply: the unchanged human-readable
+/// `error` text plus the machine-readable `code`.
+pub(crate) fn error_json(err: &anyhow::Error) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(err.to_string())),
+        ("code", Json::str(code_of(err).as_str())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip_through_wire_spelling() {
+        for code in [
+            ErrorCode::NoSuchObject,
+            ErrorCode::WrongKind,
+            ErrorCode::AtCapacity,
+            ErrorCode::ItemTooLarge,
+            ErrorCode::QuotaExceeded,
+            ErrorCode::Protocol,
+            ErrorCode::Io,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), code);
+        }
+        // Unknown spellings from a future server degrade to Protocol.
+        assert_eq!(ErrorCode::parse("heat_death"), ErrorCode::Protocol);
+    }
+
+    #[test]
+    fn display_is_the_bare_message() {
+        let err = service_err(ErrorCode::NoSuchObject, "no object named \"x\"");
+        assert_eq!(err.to_string(), "no object named \"x\"");
+        assert_eq!(code_of(&err), ErrorCode::NoSuchObject);
+    }
+
+    #[test]
+    fn untyped_errors_default_to_protocol() {
+        let err = anyhow::anyhow!("some legacy failure");
+        assert_eq!(code_of(&err), ErrorCode::Protocol);
+    }
+}

@@ -21,14 +21,23 @@
 //! greeting and stay line-for-line wire-compatible with the pre-shard
 //! protocol; un-named ops still route to the boot counter `tickets`.
 //!
-//! Each accepted connection leases a funnel thread id from its
-//! shard's pool for its lifetime; when all `workers` slots are
-//! leased, further connections on that shard are rejected with an
-//! error line instead of breaching the funnels' thread bounds.
+//! Connections are served by the event-driven core ([`conn`]): a
+//! small pool of I/O threads polls many non-blocking sockets and a
+//! fixed set of funnel-executor threads — the only tid holders —
+//! drains the decoded request batches, so the number of concurrent
+//! clients is bounded by `max_conns` (default 1024 per shard), not by
+//! `workers`. The legacy thread-per-connection core, which leases a
+//! funnel tid per connection and rejects connects beyond `workers`,
+//! remains available behind [`ConnMode::Threads`] for one release.
 //! Requests flagged `priority` use `Fetch&AddDirect` (§4.4) subject
 //! to the object's configurable direct-thread quota `d`: at most `d`
 //! priority callers ride `Main` concurrently, the rest are demoted to
 //! the funnel.
+//!
+//! Error replies carry a machine-readable `code` field next to the
+//! unchanged human-readable `error` text (see [`ErrorCode`]), so
+//! clients branch on codes — retry `at_capacity`, surface
+//! `no_such_object` — instead of grepping messages.
 //!
 //! Wire protocol: one JSON object per line. `name` defaults to the
 //! boot counter `"tickets"`; items must be integers below 2⁵³ (JSON
@@ -59,14 +68,16 @@
 //! recovers the full object set with monotonic counters and exact
 //! queue multisets before the listeners open.
 
+pub mod client;
+pub mod conn;
+pub mod error;
 pub mod metrics;
 pub mod persist;
 pub mod registry;
 pub mod shard;
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -75,6 +86,11 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::ObjectManifest;
 use crate::faa::{BatchStats, WidthPolicy};
 use crate::util::json::Json;
+pub use client::{CounterHandle, CreateSpec, QueueHandle, RegistryClient};
+#[allow(deprecated)]
+pub use client::TicketClient;
+pub use conn::{ConnMode, ConnOpts};
+pub use error::{code_of, ErrorCode, ServiceError};
 pub use persist::{PersistOpts, RecoveryReport, ShardLog};
 pub use registry::{CreateOpts, ObjectEntry, Registry, DEFAULT_OBJECT};
 pub use shard::{fnv1a64, fnv1a64_bytes, shard_of, Shard, FOREIGN_TIDS, SHARD_HASH_SCHEME};
@@ -201,10 +217,15 @@ pub struct ServeOpts {
     /// Number of independent registry shards (1 = the pre-shard wire
     /// protocol, no greeting).
     pub shards: usize,
-    /// Maximum concurrent client connections *per shard* (each
-    /// shard's tid lease pool); connections beyond it are rejected
-    /// with an error line.
+    /// Funnel executor threads per shard — the shard's funnel tid
+    /// pool. Under the event core this bounds *concurrent executing
+    /// requests*, not clients (`conn.max_conns` bounds those); under
+    /// the legacy threads core it is the per-shard connection ceiling.
     pub workers: usize,
+    /// Connection-layer configuration: the event-driven core (default)
+    /// or the legacy thread-per-connection core, plus I/O thread
+    /// count and backpressure bounds.
+    pub conn: ConnOpts,
     /// Initial active width per sign for the default counter.
     pub aggregators: usize,
     /// Width policy of the default counter.
@@ -232,6 +253,12 @@ impl Default for ServeOpts {
             addr: s.addr,
             shards: s.shards,
             workers: s.workers,
+            conn: ConnOpts {
+                mode: ConnMode::parse(&s.conn_mode).unwrap_or(ConnMode::Event),
+                io_threads: s.io_threads,
+                max_conns: s.max_conns,
+                max_pending: s.max_pending,
+            },
             aggregators: s.aggregators,
             policy: WidthPolicy::parse(&s.width_policy)
                 .unwrap_or(WidthPolicy::Fixed(s.aggregators)),
@@ -251,6 +278,7 @@ impl ServeOpts {
             addr: addr.into(),
             shards: 1,
             workers,
+            conn: ConnOpts::default(),
             aggregators,
             policy: WidthPolicy::Fixed(aggregators),
             max_aggregators: aggregators.max(1),
@@ -322,6 +350,9 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
             );
             shard.registry.set_log(Arc::clone(&log));
             shard.log = Some(log);
+        }
+        if opts.conn.mode == ConnMode::Event {
+            shard.evq = Some(Arc::new(conn::EventQueue::new(opts.conn.io_threads)));
         }
         shards.push(shard);
     }
@@ -431,12 +462,21 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
         }
     }
     for (i, listener) in listeners.into_iter().enumerate() {
-        threads.push(shard::spawn_accept_loop(
-            Arc::clone(&state),
-            i,
-            listener,
-            Arc::clone(&conns),
-        ));
+        match opts.conn.mode {
+            ConnMode::Event => {
+                let core = conn::spawn_event_core(&state, i, listener, &opts.conn, workers)
+                    .with_context(|| format!("starting shard {i} event core"))?;
+                threads.extend(core);
+            }
+            ConnMode::Threads => {
+                threads.push(shard::spawn_accept_loop(
+                    Arc::clone(&state),
+                    i,
+                    listener,
+                    Arc::clone(&conns),
+                ));
+            }
+        }
     }
     let ports = state.shards.iter().map(|s| s.port).collect();
     Ok(ServerHandle { addr, ports, state, threads, conns })
@@ -708,6 +748,25 @@ fn cluster_stats(state: &ServerState) -> Json {
         sj.insert("shard".to_string(), Json::num(shard.index as f64));
         sj.insert("port".to_string(), Json::num(shard.port as f64));
         sj.insert("objects".to_string(), Json::num(entries.len() as f64));
+        // Connection-layer health: live gauges from the event core
+        // plus the executor drain occupancy (ops per sweep — the
+        // batch-size lever the funnels feed on; > 1 means wake-ups
+        // are carrying multi-op batches).
+        if let Some(evq) = &shard.evq {
+            sj.insert("conn_mode".to_string(), Json::str(ConnMode::Event.label()));
+            sj.insert("pending_ops".to_string(), Json::num(evq.pending_ops() as f64));
+            sj.insert("open_conns".to_string(), Json::num(evq.open_conns() as f64));
+            let drains = shard.metrics.get("exec_drains");
+            if drains > 0 {
+                let ops = shard.metrics.get("exec_drained_ops");
+                sj.insert(
+                    "drain_occupancy".to_string(),
+                    Json::num(ops as f64 / drains as f64),
+                );
+            }
+        } else {
+            sj.insert("conn_mode".to_string(), Json::str(ConnMode::Threads.label()));
+        }
         if let Some(log) = &shard.log {
             // Recovery-aware stats: the durability counters ride the
             // per-shard entry (`wal_replayed`/`recovered_objects`
@@ -743,414 +802,18 @@ fn cluster_stats(state: &ServerState) -> Json {
 /// inexact range (and is far beyond any sane ticket batch anyway).
 pub const MAX_TAKE_COUNT: u64 = 1 << 32;
 
-/// Client-side retry policy for capacity rejections: a rejected
-/// connection never executed anything (the server writes the
-/// rejection and closes without reading), so redialing is
-/// idempotency-safe; the bound keeps a genuinely full shard from
-/// hanging the caller.
-const CAPACITY_RETRIES: u32 = 40;
-const CAPACITY_RETRY_DELAY: std::time::Duration = std::time::Duration::from_millis(5);
-
-/// True when a response is a lease-pool capacity rejection — the
-/// structured `rejected` marker, with a message-text fallback.
-fn is_capacity_rejection(resp: &Json) -> bool {
-    resp.get("rejected").and_then(Json::as_bool) == Some(true)
-        || resp
-            .get("error")
-            .and_then(Json::as_str)
-            .is_some_and(|e| e.contains("at capacity"))
-}
-
-/// One connection to one shard.
-struct ClientConn {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl ClientConn {
-    fn open(addr: &str) -> Result<ClientConn> {
-        let conn = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        conn.set_nodelay(true).ok();
-        let writer = conn.try_clone()?;
-        Ok(ClientConn { reader: BufReader::new(conn), writer })
-    }
-
-    /// Write one request and read the matching response, skipping any
-    /// pushed `greeting` lines (a sharded server greets every new
-    /// connection with the shard map).
-    fn roundtrip_raw(&mut self, req: &Json) -> Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        loop {
-            let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
-                return Err(anyhow!("server closed the connection"));
-            }
-            let resp = Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))?;
-            if resp.get("greeting").and_then(Json::as_bool) == Some(true) {
-                continue;
-            }
-            return Ok(resp);
-        }
-    }
-}
-
-/// Minimal blocking client for the registry service, shard-aware: on
-/// connect it asks the server for the shard map and from then on
-/// routes every named request to the owning shard's port over a
-/// lazily-opened per-shard connection — the hot path never bounces
-/// through a proxy shard. Un-named methods address the boot counter
-/// ([`DEFAULT_OBJECT`]); `*_on` methods and the queue ops are
-/// namespaced. Pre-shard (PR 3) servers are detected by their
-/// "unknown op" reply to the handshake and served over the single
-/// original connection.
-pub struct TicketClient {
-    host: String,
-    ports: Vec<u16>,
-    conns: Vec<Option<ClientConn>>,
-}
-
-impl TicketClient {
-    pub fn connect(addr: &str) -> Result<TicketClient> {
-        let (host, _) = split_host_port(addr)?;
-        // Bounded retry on capacity rejections, mirroring
-        // `roundtrip_on`: the handshake races lease releases of
-        // just-closed connections, and a rejected connection never
-        // executed anything, so redialing is safe.
-        let mut attempts = 0u32;
-        loop {
-            let mut conn = ClientConn::open(addr)?;
-            let resp =
-                conn.roundtrip_raw(&Json::obj(vec![("op", Json::str("shardmap"))]))?;
-            if resp.get("ok").and_then(Json::as_bool) == Some(true)
-                && resp.get("shardmap").and_then(Json::as_bool) == Some(true)
-            {
-                let ports: Vec<u16> = resp
-                    .get("ports")
-                    .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("shardmap missing ports"))?
-                    .iter()
-                    .filter_map(Json::as_u64)
-                    .map(|p| p as u16)
-                    .collect();
-                if ports.is_empty() {
-                    return Err(anyhow!("shardmap with no ports"));
-                }
-                let mut conns: Vec<Option<ClientConn>> =
-                    (0..ports.len()).map(|_| None).collect();
-                if ports.len() == 1 {
-                    // Single shard: keep the handshake connection,
-                    // it is the only one we will ever need.
-                    conns[0] = Some(conn);
-                } else {
-                    // Sharded: drop the handshake connection instead
-                    // of caching it. Caching would pin one of the
-                    // dialed shard's tid leases for this client's
-                    // whole lifetime even if none of its objects
-                    // live there — capping total clients at one
-                    // shard's `workers` pool and defeating per-shard
-                    // admission independence. Per-shard connections
-                    // open lazily on first use.
-                    drop(conn);
-                }
-                return Ok(TicketClient { host, ports, conns });
-            }
-            let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
-            if err.contains("unknown op") {
-                // A pre-shard server: one implicit shard on the
-                // connected port, and the handshake error consumed
-                // above keeps the line stream in sync.
-                let port = conn.writer.peer_addr()?.port();
-                return Ok(TicketClient {
-                    host,
-                    ports: vec![port],
-                    conns: vec![Some(conn)],
-                });
-            }
-            if is_capacity_rejection(&resp) {
-                attempts += 1;
-                if attempts < CAPACITY_RETRIES {
-                    drop(conn);
-                    std::thread::sleep(CAPACITY_RETRY_DELAY);
-                    continue;
-                }
-            }
-            return Err(anyhow!("server error: {}", if err.is_empty() { "?" } else { err }));
-        }
-    }
-
-    /// Number of shards in the connected server's map.
-    pub fn shards(&self) -> usize {
-        self.ports.len()
-    }
-
-    /// The advertised per-shard port layout.
-    pub fn shard_ports(&self) -> &[u16] {
-        &self.ports
-    }
-
-    /// The shard index `name` routes to.
-    pub fn shard_for(&self, name: &str) -> usize {
-        shard_of(name, self.ports.len())
-    }
-
-    fn conn_for(&mut self, shard: usize) -> Result<&mut ClientConn> {
-        debug_assert!(shard < self.ports.len());
-        if self.conns[shard].is_none() {
-            let addr = format!("{}:{}", self.host, self.ports[shard]);
-            self.conns[shard] = Some(ClientConn::open(&addr)?);
-        }
-        Ok(self.conns[shard].as_mut().unwrap())
-    }
-
-    fn roundtrip_on(&mut self, shard: usize, req: Json) -> Result<Json> {
-        // Capacity rejections can be transient: a just-closed
-        // connection's lease is only released once its handler
-        // observes the EOF, so a freshly-dialed connection can race
-        // the release. Retry them within the shared policy bound.
-        let mut attempts = 0u32;
-        loop {
-            let resp = match self.conn_for(shard)?.roundtrip_raw(&req) {
-                Ok(resp) => resp,
-                Err(e) => {
-                    // Transport failure (closed socket, bad line):
-                    // drop the cached connection so the next request
-                    // to this shard reconnects instead of reusing a
-                    // dead socket. Not retried here — the request may
-                    // already have executed server-side.
-                    self.conns[shard] = None;
-                    return Err(e);
-                }
-            };
-            if resp.get("ok").and_then(Json::as_bool) != Some(true) {
-                if is_capacity_rejection(&resp) {
-                    // The server closes after a capacity rejection;
-                    // evict the dead cached connection either way.
-                    self.conns[shard] = None;
-                    attempts += 1;
-                    if attempts < CAPACITY_RETRIES {
-                        std::thread::sleep(CAPACITY_RETRY_DELAY);
-                        continue;
-                    }
-                }
-                return Err(anyhow!(
-                    "server error: {}",
-                    resp.get("error").and_then(Json::as_str).unwrap_or("?")
-                ));
-            }
-            return Ok(resp);
-        }
-    }
-
-    /// Route a named request to its owning shard.
-    fn roundtrip(&mut self, name: &str, req: Json) -> Result<Json> {
-        self.roundtrip_on(self.shard_for(name), req)
-    }
-
-    /// Create a named object (`kind`: `counter` | `queue`; `backend`:
-    /// the spec grammar, empty for the kind's default).
-    pub fn create(&mut self, name: &str, kind: &str, backend: &str) -> Result<()> {
-        self.create_with(name, kind, backend, None, None, true)
-    }
-
-    /// `create` with the optional per-object overrides: elastic slot
-    /// capacity, the §4.4 direct-thread quota (counters only), and
-    /// the durability opt-out (`persist = false` keeps the object
-    /// ephemeral on a persistent server).
-    pub fn create_with(
-        &mut self,
-        name: &str,
-        kind: &str,
-        backend: &str,
-        max_width: Option<u64>,
-        direct_quota: Option<u64>,
-        persist: bool,
-    ) -> Result<()> {
-        let mut pairs = vec![
-            ("op", Json::str("create")),
-            ("name", Json::str(name)),
-            ("kind", Json::str(kind)),
-        ];
-        if !backend.is_empty() {
-            pairs.push(("backend", Json::str(backend)));
-        }
-        if let Some(w) = max_width {
-            pairs.push(("max_width", Json::num(w as f64)));
-        }
-        if let Some(d) = direct_quota {
-            pairs.push(("direct_quota", Json::num(d as f64)));
-        }
-        if !persist {
-            pairs.push(("persist", Json::Bool(false)));
-        }
-        self.roundtrip(name, Json::obj(pairs)).map(drop)
-    }
-
-    /// Force a snapshot on every persistent shard: the pending
-    /// journal windows are flushed, each shard's snapshot is
-    /// rewritten, and the WAL it absorbs is truncated. Errors when
-    /// the server runs without a `data_dir`.
-    pub fn snapshot(&mut self) -> Result<Json> {
-        self.roundtrip_on(0, Json::obj(vec![("op", Json::str("snapshot"))]))
-    }
-
-    /// Delete a named object.
-    pub fn delete(&mut self, name: &str) -> Result<()> {
-        self.roundtrip(
-            name,
-            Json::obj(vec![("op", Json::str("delete")), ("name", Json::str(name))]),
-        )
-        .map(drop)
-    }
-
-    /// List registered objects across all shards, sorted by name, as
-    /// `(name, kind, backend)` triples.
-    pub fn list(&mut self) -> Result<Vec<(String, String, String)>> {
-        let resp = self.roundtrip_on(0, Json::obj(vec![("op", Json::str("list"))]))?;
-        let objects = resp
-            .get("objects")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing objects"))?;
-        objects
-            .iter()
-            .map(|o| {
-                let field = |k: &str| {
-                    o.get(k)
-                        .and_then(Json::as_str)
-                        .map(str::to_string)
-                        .ok_or_else(|| anyhow!("object missing {k}"))
-                };
-                Ok((field("name")?, field("kind")?, field("backend")?))
-            })
-            .collect()
-    }
-
-    /// Enqueue `item` on a named queue.
-    pub fn enqueue(&mut self, name: &str, item: u64) -> Result<()> {
-        self.roundtrip(
-            name,
-            Json::obj(vec![
-                ("op", Json::str("enqueue")),
-                ("name", Json::str(name)),
-                ("item", Json::num(item as f64)),
-            ]),
-        )
-        .map(drop)
-    }
-
-    /// Dequeue from a named queue (`None` when empty).
-    pub fn dequeue(&mut self, name: &str) -> Result<Option<u64>> {
-        let resp = self.roundtrip(
-            name,
-            Json::obj(vec![("op", Json::str("dequeue")), ("name", Json::str(name))]),
-        )?;
-        if resp.get("empty").and_then(Json::as_bool) == Some(true) {
-            return Ok(None);
-        }
-        resp.get("item")
-            .and_then(Json::as_u64)
-            .map(Some)
-            .ok_or_else(|| anyhow!("missing item"))
-    }
-
-    /// Take a contiguous range of `count` values from a named counter.
-    pub fn take_on(&mut self, name: &str, count: u64, priority: bool) -> Result<u64> {
-        let mut pairs = vec![
-            ("op", Json::str("take")),
-            ("name", Json::str(name)),
-            ("count", Json::num(count as f64)),
-        ];
-        if priority {
-            pairs.push(("priority", Json::Bool(true)));
-        }
-        let resp = self.roundtrip(name, Json::obj(pairs))?;
-        resp.get("start").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing start"))
-    }
-
-    /// Take from the default counter; returns the range start.
-    pub fn take(&mut self, count: u64, priority: bool) -> Result<u64> {
-        self.take_on(DEFAULT_OBJECT, count, priority)
-    }
-
-    /// Read a named counter.
-    pub fn read_on(&mut self, name: &str) -> Result<u64> {
-        let resp = self.roundtrip(
-            name,
-            Json::obj(vec![("op", Json::str("read")), ("name", Json::str(name))]),
-        )?;
-        resp.get("value").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing value"))
-    }
-
-    pub fn read(&mut self) -> Result<u64> {
-        self.read_on(DEFAULT_OBJECT)
-    }
-
-    /// Per-object stats for a named object.
-    pub fn stats_on(&mut self, name: &str) -> Result<Json> {
-        self.roundtrip(
-            name,
-            Json::obj(vec![("op", Json::str("stats")), ("name", Json::str(name))]),
-        )
-    }
-
-    pub fn stats(&mut self) -> Result<Json> {
-        self.stats_on(DEFAULT_OBJECT)
-    }
-
-    /// The cluster aggregate (`stats` with `name = "*"`): objects,
-    /// funnel batch totals and traffic merged over every shard.
-    pub fn cluster_stats(&mut self) -> Result<Json> {
-        self.roundtrip_on(
-            0,
-            Json::obj(vec![("op", Json::str("stats")), ("name", Json::str("*"))]),
-        )
-    }
-
-    /// Set a named object's active width; returns the width in force.
-    pub fn resize_on(&mut self, name: &str, width: u64) -> Result<u64> {
-        let resp = self.roundtrip(
-            name,
-            Json::obj(vec![
-                ("op", Json::str("resize")),
-                ("name", Json::str(name)),
-                ("width", Json::num(width as f64)),
-            ]),
-        )?;
-        resp.get("width").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing width"))
-    }
-
-    pub fn resize(&mut self, width: u64) -> Result<u64> {
-        self.resize_on(DEFAULT_OBJECT, width)
-    }
-
-    /// Swap a named object's width policy (`fixed:<m>`, `sqrtp`,
-    /// `aimd`).
-    pub fn set_policy_on(&mut self, name: &str, policy: &str) -> Result<String> {
-        let resp = self.roundtrip(
-            name,
-            Json::obj(vec![
-                ("op", Json::str("policy")),
-                ("name", Json::str(name)),
-                ("policy", Json::str(policy)),
-            ]),
-        )?;
-        resp.get("policy")
-            .and_then(Json::as_str)
-            .map(str::to_string)
-            .ok_or_else(|| anyhow!("missing policy"))
-    }
-
-    pub fn set_policy(&mut self, policy: &str) -> Result<String> {
-        self.set_policy_on(DEFAULT_OBJECT, policy)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
 
     fn start() -> ServerHandle {
         serve(&ServeOpts::fixed("127.0.0.1:0", 3, 2)).unwrap()
+    }
+
+    fn code_of_err(err: &anyhow::Error) -> ErrorCode {
+        err.downcast_ref::<ServiceError>().map(|se| se.code).unwrap_or(ErrorCode::Protocol)
     }
 
     #[test]
@@ -1161,11 +824,16 @@ mod tests {
             .map(|_| {
                 let addr = addr.clone();
                 std::thread::spawn(move || {
-                    let mut c = TicketClient::connect(&addr).unwrap();
+                    let c = RegistryClient::connect(&addr).unwrap();
+                    let tickets = c.counter(DEFAULT_OBJECT).unwrap();
                     let mut ranges = Vec::new();
                     for i in 0..50u64 {
                         let count = 1 + i % 4;
-                        let start = c.take(count, i % 7 == 0).unwrap();
+                        let start = if i % 7 == 0 {
+                            tickets.take_priority(count).unwrap()
+                        } else {
+                            tickets.take(count).unwrap()
+                        };
                         ranges.push((start, count));
                     }
                     ranges
@@ -1187,10 +855,11 @@ mod tests {
     #[test]
     fn read_and_stats_work() {
         let server = start();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        assert_eq!(c.take(5, false).unwrap(), 0);
-        assert_eq!(c.read().unwrap(), 5);
-        let stats = c.stats().unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+        assert_eq!(tickets.take(5).unwrap(), 0);
+        assert_eq!(tickets.read().unwrap(), 5);
+        let stats = tickets.stats().unwrap();
         assert!(stats.get("take").and_then(Json::as_u64).unwrap_or(0) >= 1);
         assert_eq!(stats.get("name").and_then(Json::as_str), Some(DEFAULT_OBJECT));
         assert_eq!(stats.get("registry_objects").and_then(Json::as_u64), Some(1));
@@ -1198,14 +867,30 @@ mod tests {
     }
 
     #[test]
+    fn typed_handles_enforce_kind_and_existence() {
+        let server = start();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        c.create_queue("jobs", &CreateSpec::default()).unwrap();
+        // Kind mismatch is a WrongKind at lookup, not a server trip.
+        let err = c.counter("jobs").unwrap_err();
+        assert_eq!(code_of_err(&err), ErrorCode::WrongKind, "{err}");
+        let err = c.queue(DEFAULT_OBJECT).unwrap_err();
+        assert_eq!(code_of_err(&err), ErrorCode::WrongKind, "{err}");
+        // Unknown names carry the server's no_such_object code.
+        let err = c.queue("ghost").unwrap_err();
+        assert_eq!(code_of_err(&err), ErrorCode::NoSuchObject, "{err}");
+        assert!(err.to_string().contains("no object"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
     fn single_shard_shardmap_op_and_no_greeting() {
-        use std::io::{BufRead, Write};
         let server = start();
         // Raw socket: a single-shard server must not greet (that is
         // the PR 3 wire contract), but must answer the shardmap op.
-        let conn = std::net::TcpStream::connect(server.addr).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
         let mut writer = conn.try_clone().unwrap();
-        let mut reader = std::io::BufReader::new(conn);
+        let mut reader = BufReader::new(conn);
         writer.write_all(b"{\"op\":\"take\",\"count\":1}\n").unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
@@ -1231,16 +916,17 @@ mod tests {
     fn sharded_server_greets_and_routes() {
         let server = serve(&ServeOpts::sharded("127.0.0.1:0", 3, 2, 2)).unwrap();
         assert_eq!(server.shard_ports().len(), 3);
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
         assert_eq!(c.shards(), 3);
         assert_eq!(c.shard_ports(), server.shard_ports());
         // The default counter works regardless of which shard owns it.
-        assert_eq!(c.take(2, false).unwrap(), 0);
-        assert_eq!(c.read().unwrap(), 2);
+        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+        assert_eq!(tickets.take(2).unwrap(), 0);
+        assert_eq!(tickets.read().unwrap(), 2);
         // Named objects land on their hash shard and round-trip.
         for name in ["a", "b", "c", "d", "e"] {
-            c.create(name, "counter", "elastic:fixed:1").unwrap();
-            assert_eq!(c.take_on(name, 1, false).unwrap(), 0);
+            let h = c.create_counter(name, &CreateSpec::backend("elastic:fixed:1")).unwrap();
+            assert_eq!(h.take(1).unwrap(), 0);
         }
         let listed = c.list().unwrap();
         let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
@@ -1258,17 +944,16 @@ mod tests {
 
     #[test]
     fn legacy_connection_to_sharded_server_is_forwarded() {
-        use std::io::{BufRead, Write};
         let server = serve(&ServeOpts::sharded("127.0.0.1:0", 2, 2, 2)).unwrap();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.create("roam", "counter", "elastic:fixed:1").unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let roam = c.create_counter("roam", &CreateSpec::backend("elastic:fixed:1")).unwrap();
         // A client that ignores the shard map and sends everything to
         // one port must still be served correctly (in-process
         // forwarding), for every shard's port.
         for port in server.shard_ports() {
-            let conn = std::net::TcpStream::connect(("127.0.0.1", *port)).unwrap();
+            let conn = TcpStream::connect(("127.0.0.1", *port)).unwrap();
             let mut writer = conn.try_clone().unwrap();
-            let mut reader = std::io::BufReader::new(conn);
+            let mut reader = BufReader::new(conn);
             let mut line = String::new();
             reader.read_line(&mut line).unwrap(); // greeting
             assert_eq!(
@@ -1281,7 +966,7 @@ mod tests {
             let resp = Json::parse(&line).unwrap();
             assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{line}");
         }
-        assert_eq!(c.read_on("roam").unwrap(), 2, "both forwarded takes counted");
+        assert_eq!(roam.read().unwrap(), 2, "both forwarded takes counted");
         server.shutdown();
     }
 
@@ -1293,32 +978,34 @@ mod tests {
             ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
         })
         .unwrap();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        assert_eq!(c.resize(5).unwrap(), 5);
-        assert_eq!(c.resize(100).unwrap(), 8, "clamped to capacity");
-        let stats = c.stats().unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+        assert_eq!(tickets.resize(5).unwrap(), 5);
+        assert_eq!(tickets.resize(100).unwrap(), 8, "clamped to capacity");
+        let stats = tickets.stats().unwrap();
         assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(8));
         assert_eq!(stats.get("max_width").and_then(Json::as_u64), Some(8));
         assert!(stats.get("resizes").and_then(Json::as_u64).unwrap_or(0) >= 2);
         // Policy swap applies immediately (fixed:3 forces the width).
-        assert_eq!(c.set_policy("fixed:3").unwrap(), "fixed-3");
-        let stats = c.stats().unwrap();
+        assert_eq!(tickets.set_policy("fixed:3").unwrap(), "fixed-3");
+        let stats = tickets.stats().unwrap();
         assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(3));
-        assert!(c.set_policy("bogus").is_err());
+        assert!(tickets.set_policy("bogus").is_err());
         // Tickets still flow after reconfiguration.
-        assert_eq!(c.take(2, false).unwrap(), 0);
-        assert_eq!(c.read().unwrap(), 2);
+        assert_eq!(tickets.take(2).unwrap(), 0);
+        assert_eq!(tickets.read().unwrap(), 2);
         server.shutdown();
     }
 
     #[test]
     fn stats_expose_contention_counters() {
         let server = start();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
         for _ in 0..20 {
-            c.take(1, false).unwrap();
+            tickets.take(1).unwrap();
         }
-        let stats = c.stats().unwrap();
+        let stats = tickets.stats().unwrap();
         let ops = stats.get("batched_ops").and_then(Json::as_u64).unwrap();
         let faas = stats.get("main_faas").and_then(Json::as_u64).unwrap();
         assert!(ops >= 20);
@@ -1331,10 +1018,12 @@ mod tests {
     #[test]
     fn direct_quota_over_the_wire() {
         let server = start();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.create_with("vip", "counter", "elastic:fixed:2", None, Some(0), true).unwrap();
-        assert_eq!(c.take_on("vip", 4, true).unwrap(), 0);
-        let stats = c.stats_on("vip").unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let vip = c
+            .create_counter("vip", &CreateSpec::backend("elastic:fixed:2").direct_quota(0))
+            .unwrap();
+        assert_eq!(vip.take_priority(4).unwrap(), 0);
+        let stats = vip.stats().unwrap();
         assert_eq!(stats.get("direct_quota").and_then(Json::as_u64), Some(0));
         assert_eq!(
             stats.get("take_priority_demoted").and_then(Json::as_u64),
@@ -1346,33 +1035,43 @@ mod tests {
     }
 
     #[test]
-    fn bad_requests_get_errors() {
-        use std::io::{BufRead, Write};
+    fn bad_requests_get_errors_with_codes() {
         let server = start();
-        let conn = std::net::TcpStream::connect(server.addr).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
         let mut writer = conn.try_clone().unwrap();
-        let mut reader = std::io::BufReader::new(conn);
+        let mut reader = BufReader::new(conn);
         writer.write_all(b"{\"op\":\"nope\"}\n").unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(&line).unwrap();
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            resp.get("code").and_then(Json::as_str),
+            Some("protocol"),
+            "error replies carry a machine-readable code: {line}"
+        );
         // Connection stays usable.
         writer.write_all(b"{\"op\":\"take\",\"count\":1}\n").unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(&line).unwrap();
         assert_eq!(resp.get("start").and_then(Json::as_u64), Some(0));
+        // Unknown objects answer with no_such_object on the wire.
+        writer.write_all(b"{\"op\":\"take\",\"name\":\"ghost\",\"count\":1}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("code").and_then(Json::as_str), Some("no_such_object"), "{line}");
         server.shutdown();
     }
 
     #[test]
     fn registry_ops_over_the_wire() {
         let server = start();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.create("jobs", "queue", "lcrq+elastic:fixed:2").unwrap();
-        c.create("orders", "counter", "").unwrap(); // kind default backend
-        assert!(c.create("jobs", "queue", "").is_err(), "duplicate name");
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let jobs = c.create_queue("jobs", &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
+        let orders = c.create_counter("orders", &CreateSpec::default()).unwrap();
+        assert!(c.create("jobs", "queue", &CreateSpec::default()).is_err(), "duplicate name");
         let listed = c.list().unwrap();
         let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
         assert_eq!(names, vec!["jobs", "orders", DEFAULT_OBJECT]);
@@ -1380,31 +1079,27 @@ mod tests {
         assert_eq!(listed[0].2, "lcrq+elastic:fixed:2");
 
         // Queue traffic, independent of the default counter.
-        assert_eq!(c.dequeue("jobs").unwrap(), None);
-        c.enqueue("jobs", 41).unwrap();
-        c.enqueue("jobs", 42).unwrap();
-        assert_eq!(c.dequeue("jobs").unwrap(), Some(41));
+        assert_eq!(jobs.dequeue().unwrap(), None);
+        jobs.enqueue(41).unwrap();
+        jobs.enqueue(42).unwrap();
+        assert_eq!(jobs.dequeue().unwrap(), Some(41));
         // Named counter traffic.
-        assert_eq!(c.take_on("orders", 3, false).unwrap(), 0);
-        assert_eq!(c.read_on("orders").unwrap(), 3);
-        assert_eq!(c.read().unwrap(), 0, "default counter untouched");
-
-        // Kind mismatches and unknown names are clean errors.
-        assert!(c.take_on("jobs", 1, false).is_err());
-        assert!(c.enqueue(DEFAULT_OBJECT, 1).is_err());
-        assert!(c.dequeue("ghost").is_err());
+        assert_eq!(orders.take(3).unwrap(), 0);
+        assert_eq!(orders.read().unwrap(), 3);
+        assert_eq!(c.counter(DEFAULT_OBJECT).unwrap().read().unwrap(), 0, "default untouched");
 
         // Per-object stats are independent.
-        let jobs = c.stats_on("jobs").unwrap();
-        assert_eq!(jobs.get("kind").and_then(Json::as_str), Some("queue"));
-        assert_eq!(jobs.get("enqueue").and_then(Json::as_u64), Some(2));
-        assert_eq!(jobs.get("active_width").and_then(Json::as_u64), Some(2));
-        let orders = c.stats_on("orders").unwrap();
-        assert_eq!(orders.get("take").and_then(Json::as_u64), Some(1));
-        assert!(orders.get("enqueue").is_none());
+        let jstats = jobs.stats().unwrap();
+        assert_eq!(jstats.get("kind").and_then(Json::as_str), Some("queue"));
+        assert_eq!(jstats.get("enqueue").and_then(Json::as_u64), Some(2));
+        assert_eq!(jstats.get("active_width").and_then(Json::as_u64), Some(2));
+        let ostats = orders.stats().unwrap();
+        assert_eq!(ostats.get("take").and_then(Json::as_u64), Some(1));
+        assert!(ostats.get("enqueue").is_none());
 
         c.delete("jobs").unwrap();
-        assert!(c.delete("jobs").is_err());
+        let err = c.delete("jobs").unwrap_err();
+        assert_eq!(code_of_err(&err), ErrorCode::NoSuchObject, "{err}");
         assert_eq!(c.list().unwrap().len(), 2);
         server.shutdown();
     }
@@ -1412,25 +1107,31 @@ mod tests {
     #[test]
     fn queue_width_ops_ride_the_index_factory() {
         let server = start();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.create("q", "queue", "lcrq+elastic:fixed:2").unwrap();
-        assert_eq!(c.resize_on("q", 4).unwrap(), 4);
-        assert_eq!(c.set_policy_on("q", "fixed:1").unwrap(), "fixed-1");
-        let stats = c.stats_on("q").unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let q = c.create_queue("q", &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
+        assert_eq!(q.resize(4).unwrap(), 4);
+        assert_eq!(q.set_policy("fixed:1").unwrap(), "fixed-1");
+        let stats = q.stats().unwrap();
         assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(1));
         // Non-elastic indices have no width controls.
-        c.create("q2", "queue", "lcrq+hw").unwrap();
-        assert!(c.resize_on("q2", 4).is_err());
+        let q2 = c.create_queue("q2", &CreateSpec::backend("lcrq+hw")).unwrap();
+        assert!(q2.resize(4).is_err());
         server.shutdown();
     }
 
     #[test]
-    fn connections_beyond_lease_pool_rejected() {
-        let server = serve(&ServeOpts::fixed("127.0.0.1:0", 1, 2)).unwrap();
+    fn threads_mode_connections_beyond_lease_pool_rejected() {
+        // The legacy core's `workers` ceiling, pinned via ConnMode.
+        let server = serve(&ServeOpts {
+            conn: ConnOpts::threads(),
+            ..ServeOpts::fixed("127.0.0.1:0", 1, 2)
+        })
+        .unwrap();
         let addr = server.addr.to_string();
-        let mut first = TicketClient::connect(&addr).unwrap();
+        let c = RegistryClient::connect(&addr).unwrap();
+        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
         // Completing a request proves the only lease is held.
-        assert_eq!(first.take(1, false).unwrap(), 0);
+        assert_eq!(tickets.take(1).unwrap(), 0);
         // Read the rejection line without writing first (a write could
         // race the server-side close into an RST that drops the line).
         let second = TcpStream::connect(&addr).unwrap();
@@ -1438,10 +1139,36 @@ mod tests {
         BufReader::new(second).read_line(&mut line).unwrap();
         let resp = Json::parse(&line).unwrap();
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(resp.get("code").and_then(Json::as_str), Some("at_capacity"), "{line}");
         let err = resp.get("error").and_then(Json::as_str).unwrap();
         assert!(err.contains("capacity"), "unexpected rejection: {err}");
         // The leased connection keeps working.
-        assert_eq!(first.take(1, false).unwrap(), 1);
+        assert_eq!(tickets.take(1).unwrap(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn event_core_rejects_beyond_max_conns() {
+        // The event core's ceiling is max_conns, not workers: a
+        // 1-connection server still rejects cleanly with the code.
+        let server = serve(&ServeOpts {
+            conn: ConnOpts { max_conns: 1, ..ConnOpts::default() },
+            ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+        })
+        .unwrap();
+        let addr = server.addr.to_string();
+        let c = RegistryClient::connect(&addr).unwrap();
+        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+        assert_eq!(tickets.take(1).unwrap(), 0);
+        let second = TcpStream::connect(&addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(second).read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(resp.get("code").and_then(Json::as_str), Some("at_capacity"), "{line}");
+        assert_eq!(resp.get("rejected").and_then(Json::as_bool), Some(true));
+        // The admitted connection keeps working.
+        assert_eq!(tickets.take(1).unwrap(), 1);
         server.shutdown();
     }
 
@@ -1455,11 +1182,12 @@ mod tests {
             ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
         })
         .unwrap();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
         assert_eq!(c.list().unwrap().len(), 3);
-        c.enqueue("jobs", 9).unwrap();
-        assert_eq!(c.dequeue("jobs").unwrap(), Some(9));
-        assert_eq!(c.take_on("orders", 2, false).unwrap(), 0);
+        let jobs = c.queue("jobs").unwrap();
+        jobs.enqueue(9).unwrap();
+        assert_eq!(jobs.dequeue().unwrap(), Some(9));
+        assert_eq!(c.counter("orders").unwrap().take(2).unwrap(), 0);
         server.shutdown();
         // A manifest colliding with the boot counter fails loudly.
         let err = serve(&ServeOpts {
@@ -1472,7 +1200,7 @@ mod tests {
     #[test]
     fn snapshot_op_requires_persistence() {
         let server = start();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
         let err = c.snapshot().unwrap_err();
         assert!(err.to_string().contains("persistence"), "{err}");
         server.shutdown();
@@ -1492,8 +1220,8 @@ mod tests {
             ..ServeOpts::fixed("127.0.0.1:0", 3, 2)
         })
         .unwrap();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.take(7, false).unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        c.counter(DEFAULT_OBJECT).unwrap().take(7).unwrap();
         let resp = c.snapshot().unwrap();
         assert_eq!(resp.get("persist").and_then(Json::as_bool), Some(true));
         let snaps = resp.get("snapshots").and_then(Json::as_arr).unwrap();
@@ -1502,7 +1230,7 @@ mod tests {
             snaps[0].get("wal_records_absorbed").and_then(Json::as_u64).unwrap() >= 1,
             "the pending counter window must be flushed into the snapshot"
         );
-        let stats = c.stats().unwrap();
+        let stats = c.object_stats(DEFAULT_OBJECT).unwrap();
         assert_eq!(stats.get("persist").and_then(Json::as_bool), Some(true));
         // Even a crash after the forced snapshot keeps the state.
         server.crash();
@@ -1511,30 +1239,32 @@ mod tests {
             ..ServeOpts::fixed("127.0.0.1:0", 3, 2)
         })
         .unwrap();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        assert_eq!(c.read().unwrap(), 7, "forced snapshot survived the crash");
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(
+            c.counter(DEFAULT_OBJECT).unwrap().read().unwrap(),
+            7,
+            "forced snapshot survived the crash"
+        );
         server.shutdown();
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn forwarded_ops_beyond_foreign_pool_complete() {
-        use std::io::{BufRead, Write};
         // More concurrent mis-routed clients than FOREIGN_TIDS: the
         // per-op foreign leases must serialize them, not break them.
         let server = serve(&ServeOpts::sharded("127.0.0.1:0", 2, 8, 2)).unwrap();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.create("roam", "counter", "elastic:fixed:1").unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let roam = c.create_counter("roam", &CreateSpec::backend("elastic:fixed:1")).unwrap();
         let wrong_port = server.shard_ports()[1 - c.shard_for("roam")];
         let clients = FOREIGN_TIDS + 3;
         let per_client = 40u64;
         let handles: Vec<_> = (0..clients)
             .map(|_| {
                 std::thread::spawn(move || {
-                    let conn =
-                        std::net::TcpStream::connect(("127.0.0.1", wrong_port)).unwrap();
+                    let conn = TcpStream::connect(("127.0.0.1", wrong_port)).unwrap();
                     let mut writer = conn.try_clone().unwrap();
-                    let mut reader = std::io::BufReader::new(conn);
+                    let mut reader = BufReader::new(conn);
                     let mut line = String::new();
                     reader.read_line(&mut line).unwrap(); // greeting
                     for _ in 0..per_client {
@@ -1557,7 +1287,7 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(
-            c.read_on("roam").unwrap(),
+            roam.read().unwrap(),
             clients as u64 * per_client,
             "every forwarded take must land exactly once"
         );
@@ -1574,10 +1304,38 @@ mod tests {
             ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
         })
         .unwrap();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        let stats = c.stats_on("vip").unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let stats = c.object_stats("vip").unwrap();
         assert_eq!(stats.get("direct_quota").and_then(Json::as_u64), Some(1));
         assert_eq!(stats.get("backend").and_then(Json::as_str), Some("elastic:fixed:2:d1"));
+        server.shutdown();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn ticket_client_shim_still_works() {
+        // The deprecated flat client must keep its whole old surface
+        // green over the new core for one release.
+        let server = start();
+        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(c.shards(), 1);
+        assert_eq!(c.take(5, false).unwrap(), 0);
+        assert_eq!(c.take(1, true).unwrap(), 5);
+        assert_eq!(c.read().unwrap(), 6);
+        c.create("jobs", "queue", "lcrq+elastic:fixed:2").unwrap();
+        c.enqueue("jobs", 11).unwrap();
+        assert_eq!(c.dequeue("jobs").unwrap(), Some(11));
+        c.create_with("vip", "counter", "elastic:fixed:2", None, Some(0), true).unwrap();
+        assert_eq!(c.take_on("vip", 2, false).unwrap(), 0);
+        assert_eq!(c.read_on("vip").unwrap(), 2);
+        assert_eq!(c.resize_on("jobs", 1).unwrap(), 1);
+        assert_eq!(c.set_policy_on("jobs", "fixed:2").unwrap(), "fixed-2");
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("name").and_then(Json::as_str), Some(DEFAULT_OBJECT));
+        assert_eq!(c.list().unwrap().len(), 3);
+        let agg = c.cluster_stats().unwrap();
+        assert_eq!(agg.get("objects").and_then(Json::as_u64), Some(3));
+        c.delete("vip").unwrap();
         server.shutdown();
     }
 }

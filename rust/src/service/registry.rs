@@ -29,6 +29,8 @@ use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
 
+use super::error::{service_err, ErrorCode};
+
 use super::metrics::Metrics;
 use super::persist::{Journal, Record, ShardLog};
 use crate::config::ObjectManifest;
@@ -120,18 +122,20 @@ impl ObjectEntry {
     fn as_counter(&self, op: &str) -> Result<&ElasticAggFunnel> {
         match &self.body {
             ObjectBody::Counter(f) => Ok(f),
-            ObjectBody::Queue { .. } => {
-                Err(anyhow!("object {:?} is a queue; {op} needs a counter", self.name))
-            }
+            ObjectBody::Queue { .. } => Err(service_err(
+                ErrorCode::WrongKind,
+                format!("object {:?} is a queue; {op} needs a counter", self.name),
+            )),
         }
     }
 
     fn as_queue(&self, op: &str) -> Result<&Arc<dyn ConcurrentQueue>> {
         match &self.body {
             ObjectBody::Queue { queue, .. } => Ok(queue),
-            ObjectBody::Counter(_) => {
-                Err(anyhow!("object {:?} is a counter; {op} needs a queue", self.name))
-            }
+            ObjectBody::Counter(_) => Err(service_err(
+                ErrorCode::WrongKind,
+                format!("object {:?} is a counter; {op} needs a queue", self.name),
+            )),
         }
     }
 
@@ -179,9 +183,9 @@ impl ObjectEntry {
                 .filter(|e| *e <= super::persist::MAX_DURABLE_ITEM);
             let Some(end) = end else {
                 self.metrics.incr("take_beyond_durable");
-                return Err(anyhow!(
-                    "counter {:?} exhausted its durable range (2^53)",
-                    self.name
+                return Err(service_err(
+                    ErrorCode::QuotaExceeded,
+                    format!("counter {:?} exhausted its durable range (2^53)", self.name),
                 ));
             };
             journal.record_counter(end);
@@ -204,17 +208,19 @@ impl ObjectEntry {
     /// Queue op: enqueue one item.
     pub fn enqueue(&self, tid: usize, item: u64) -> Result<()> {
         if item >= EMPTY_ITEM {
-            return Err(anyhow!("item {item} is reserved"));
+            return Err(service_err(ErrorCode::ItemTooLarge, format!("item {item} is reserved")));
         }
         let queue = self.as_queue("enqueue")?;
         if item > self.item_max {
             // PRQ packs values into 48 bits; reject cleanly instead
             // of letting the queue's debug assertion kill the
             // connection handler.
-            return Err(anyhow!(
-                "item {item} exceeds queue {:?}'s item bound {}",
-                self.name,
-                self.item_max
+            return Err(service_err(
+                ErrorCode::ItemTooLarge,
+                format!(
+                    "item {item} exceeds queue {:?}'s item bound {}",
+                    self.name, self.item_max
+                ),
             ));
         }
         self.metrics.incr("enqueue");
@@ -610,14 +616,18 @@ impl Registry {
             .unwrap()
             .get(name)
             .cloned()
-            .ok_or_else(|| anyhow!("no object named {name:?}"))
+            .ok_or_else(|| {
+                service_err(ErrorCode::NoSuchObject, format!("no object named {name:?}"))
+            })
     }
 
     /// Delete an object. In-flight data-plane ops on other
     /// connections hold their own `Arc` and finish normally.
     pub fn remove(&self, name: &str) -> Result<()> {
         let mut map = self.map.write().unwrap();
-        let entry = map.remove(name).ok_or_else(|| anyhow!("no object named {name:?}"))?;
+        let entry = map.remove(name).ok_or_else(|| {
+            service_err(ErrorCode::NoSuchObject, format!("no object named {name:?}"))
+        })?;
         if let Some(journal) = &entry.journal {
             // Retire before journaling the delete: a data-plane op
             // still running on a held Arc keeps working in memory but

@@ -116,6 +116,9 @@ pub struct Shard {
     /// This shard's durability log (WAL + snapshots), when the
     /// service runs with a `data_dir`.
     pub log: Option<std::sync::Arc<super::persist::ShardLog>>,
+    /// The event core's shared run queue + gauges (None under the
+    /// legacy thread-per-connection mode).
+    pub(super) evq: Option<std::sync::Arc<super::conn::EventQueue>>,
     pub(super) tids: TidLease,
     /// Small pool of tids for forwarded operations (see
     /// [`FOREIGN_TIDS`]); leased per op, not per connection.
@@ -130,6 +133,7 @@ impl Shard {
             registry,
             metrics: Metrics::new(),
             log: None,
+            evq: None,
             tids: TidLease::new(workers),
             foreign: TidLease::with_range(workers + 1, FOREIGN_TIDS),
         }
@@ -286,6 +290,7 @@ fn reject_conn(state: &ServerState, shard: usize, mut conn: TcpStream) -> std::i
     let resp = Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("rejected", Json::Bool(true)),
+        ("code", Json::str(super::error::ErrorCode::AtCapacity.as_str())),
         ("error", Json::str(error)),
     ]);
     conn.write_all(resp.to_string().as_bytes())?;
@@ -347,10 +352,7 @@ fn handle_conn(state: &ServerState, shard: usize, tid: usize, conn: TcpStream) -
         if !line.trim().is_empty() {
             let response = match super::handle_request(state, shard, tid, &line) {
                 Ok(json) => json,
-                Err(e) => Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::str(e.to_string())),
-                ]),
+                Err(e) => super::error::error_json(&e),
             };
             writer.write_all(response.to_string().as_bytes())?;
             writer.write_all(b"\n")?;

@@ -1,13 +1,16 @@
 //! Low-level synchronization substrate: cache-line padding, exponential
-//! backoff, a 128-bit atomic (the CAS2 LCRQ needs), and a tiny
-//! spinlock used by fallback paths and tests.
+//! backoff, a 128-bit atomic (the CAS2 LCRQ needs), a tiny spinlock
+//! used by fallback paths and tests, and a thin `poll(2)` wrapper for
+//! the service's event-driven connection layer.
 
 pub mod atomic128;
 pub mod backoff;
 pub mod padded;
+pub mod poll;
 pub mod spinlock;
 
 pub use atomic128::AtomicU128;
 pub use backoff::Backoff;
 pub use padded::CachePadded;
+pub use poll::{PollSet, PollSource};
 pub use spinlock::SpinLock;

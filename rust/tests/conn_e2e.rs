@@ -1,0 +1,264 @@
+//! End-to-end tests for the multiplexed connection layer: many more
+//! simultaneous connections than funnel executors, connection churn,
+//! pipelined multi-op batches, capacity rejection semantics, and
+//! shutdown under load.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+use aggfunnels::service::{
+    code_of, serve, ConnOpts, ErrorCode, RegistryClient, ServeOpts, ServerHandle, DEFAULT_OBJECT,
+};
+use aggfunnels::util::json::Json;
+
+const WORKERS: usize = 4;
+
+fn start_event(workers: usize) -> ServerHandle {
+    serve(&ServeOpts::fixed("127.0.0.1:0", workers, 2)).unwrap()
+}
+
+/// The single shard's stats entry from a cluster aggregate.
+fn shard0(agg: &Json) -> &Json {
+    &agg.get("per_shard").and_then(Json::as_arr).unwrap()[0]
+}
+
+#[test]
+fn event_core_serves_eight_times_the_workers_simultaneously() {
+    // The acceptance bar: one shard, `workers` executors, and
+    // 8 × workers clients all holding their sockets open at once.
+    // Under the legacy thread-per-connection core this would exhaust
+    // the tid lease pool; the event core multiplexes them.
+    let server = start_event(WORKERS);
+    let addr = Arc::new(server.addr.to_string());
+    const CONNS: usize = 8 * WORKERS;
+
+    let connected = Arc::new(Barrier::new(CONNS + 1));
+    let release = Arc::new(Barrier::new(CONNS + 1));
+    let workers: Vec<_> = (0..CONNS)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            let connected = Arc::clone(&connected);
+            let release = Arc::clone(&release);
+            std::thread::spawn(move || {
+                let c = RegistryClient::connect(&addr).unwrap();
+                let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+                connected.wait(); // hold the socket open for the census
+                release.wait();
+                let start = tickets.take(3).unwrap();
+                (start, 3u64)
+            })
+        })
+        .collect();
+
+    // All 32 sockets are open (plus the observer's own): the gauge
+    // must show the full census, far past the executor count.
+    connected.wait();
+    let observer = RegistryClient::connect(&addr).unwrap();
+    let agg = observer.cluster_stats().unwrap();
+    let shard = shard0(&agg);
+    assert_eq!(shard.get("conn_mode").and_then(Json::as_str), Some("event"));
+    let open = shard.get("open_conns").and_then(Json::as_u64).unwrap();
+    assert!(
+        open >= (CONNS + 1) as u64,
+        "open_conns {open} must count all {CONNS} held sockets (workers = {WORKERS})"
+    );
+
+    // Release the burst: every op lands, grants stay disjoint.
+    release.wait();
+    let mut ranges: Vec<(u64, u64)> =
+        workers.into_iter().map(|w| w.join().unwrap()).collect();
+    ranges.sort_unstable();
+    for pair in ranges.windows(2) {
+        assert!(pair[0].0 + pair[0].1 <= pair[1].0, "overlapping grants {pair:?}");
+    }
+    let total: u64 = ranges.iter().map(|(_, c)| c).sum();
+    assert_eq!(total, (CONNS as u64) * 3);
+    assert_eq!(observer.counter(DEFAULT_OBJECT).unwrap().read().unwrap(), total);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_requests_drain_as_multi_op_batches() {
+    // A client that writes a burst of requests before reading any
+    // response exercises the batch path end to end: the I/O thread
+    // decodes the whole chunk, the executor drains it in one sweep,
+    // and the aggregate drain occupancy rises above one op per sweep
+    // — the lever the funnels feed on.
+    let server = start_event(WORKERS);
+    let addr = server.addr.to_string();
+    const BURST: usize = 24;
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let burst = "{\"op\":\"take\",\"count\":1}\n".repeat(BURST);
+    stream.write_all(burst.as_bytes()).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut starts = Vec::new();
+    for _ in 0..BURST {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "bad reply {line}");
+        starts.push(resp.get("start").and_then(Json::as_u64).unwrap());
+    }
+    // The burst is this server's only counter traffic: single-unit
+    // takes must cover 0..BURST exactly (in some executor order).
+    starts.sort_unstable();
+    assert_eq!(starts, (0..BURST as u64).collect::<Vec<_>>());
+
+    let observer = RegistryClient::connect(&addr).unwrap();
+    let agg = observer.cluster_stats().unwrap();
+    let occupancy = shard0(&agg).get("drain_occupancy").and_then(Json::as_f64).unwrap();
+    assert!(
+        occupancy > 1.0,
+        "drain occupancy {occupancy} must show multi-op batches from the pipelined burst"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn connection_churn_lands_every_op() {
+    // Hundreds of short-lived sockets against a handful of executors:
+    // every connect is admitted, every op acked, and the event core
+    // reaps closed sockets instead of leaking slots.
+    let server = start_event(WORKERS);
+    let addr = Arc::new(server.addr.to_string());
+    const THREADS: usize = 6;
+    const CONNECTS_PER_THREAD: usize = 50;
+
+    let churners: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                for _ in 0..CONNECTS_PER_THREAD {
+                    // Connect, one op, drop — the whole lifecycle.
+                    let c = RegistryClient::connect(&addr).unwrap();
+                    c.counter(DEFAULT_OBJECT).unwrap().take(1).unwrap();
+                }
+            })
+        })
+        .collect();
+    for t in churners {
+        t.join().unwrap();
+    }
+
+    let total = (THREADS * CONNECTS_PER_THREAD) as u64;
+    let observer = RegistryClient::connect(&addr).unwrap();
+    assert_eq!(
+        observer.counter(DEFAULT_OBJECT).unwrap().read().unwrap(),
+        total,
+        "every op from every short-lived connection must land"
+    );
+
+    // The reaper runs on poll wake-ups, so give the gauge a moment to
+    // settle back down to just the observer's own socket.
+    let mut open = u64::MAX;
+    for _ in 0..200 {
+        let agg = observer.cluster_stats().unwrap();
+        let shard = shard0(&agg);
+        open = shard.get("open_conns").and_then(Json::as_u64).unwrap();
+        if open <= 1 {
+            // Lifecycle counters: every admitted socket was opened
+            // (and all but the observer's closed again).
+            let opened = shard.get("conn_open").and_then(Json::as_u64).unwrap();
+            let closed = shard.get("conn_closed").and_then(Json::as_u64).unwrap();
+            assert!(opened >= total, "conn_open {opened} must count all {total} churned sockets");
+            assert_eq!(opened - closed, open, "open/closed counters must reconcile to the gauge");
+            server.shutdown();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    panic!("churned connections never reaped: open_conns stuck at {open}");
+}
+
+#[test]
+fn shutdown_under_load_answers_every_decoded_request() {
+    // A client with a pipelined backlog keeps its acked work: graceful
+    // shutdown drains the run queue and flushes every response before
+    // the socket closes (EOF only after the last reply).
+    let server = start_event(2);
+    let addr = server.addr.to_string();
+    const BACKLOG: usize = 20;
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let burst = "{\"op\":\"take\",\"count\":1}\n".repeat(BACKLOG);
+    stream.write_all(burst.as_bytes()).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let read_reply = |reader: &mut BufReader<TcpStream>| -> u64 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "bad reply {line}");
+        resp.get("start").and_then(Json::as_u64).unwrap()
+    };
+
+    // One reply proves the burst reached the server; then shut down
+    // with 19 requests still in flight.
+    let mut starts = vec![read_reply(&mut reader)];
+    server.shutdown();
+
+    for _ in 1..BACKLOG {
+        starts.push(read_reply(&mut reader));
+    }
+    starts.sort_unstable();
+    assert_eq!(starts, (0..BACKLOG as u64).collect::<Vec<_>>(), "every decoded request answered");
+    // …and only then EOF.
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no trailing bytes after the last reply");
+}
+
+#[test]
+fn capacity_rejection_is_typed_and_distinct_from_transport_errors() {
+    // Regression for the eviction split: a connect past `max_conns`
+    // comes back as a clean `AtCapacity` (retryable — the rejected
+    // connection never executed anything), while a dead socket is
+    // `Io` (never retried — the request may have executed).
+    let server = serve(&ServeOpts {
+        conn: ConnOpts { max_conns: 1, ..ConnOpts::default() },
+        ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+    })
+    .unwrap();
+    let addr = server.addr.to_string();
+
+    // The slot holder.
+    let holder = RegistryClient::connect(&addr).unwrap();
+    let tickets = holder.counter(DEFAULT_OBJECT).unwrap();
+    tickets.take(1).unwrap();
+
+    // Over capacity: the internal retry budget exhausts against a
+    // full shard and surfaces the typed code, not a transport error.
+    let err = RegistryClient::connect(&addr).unwrap_err();
+    assert_eq!(code_of(&err), ErrorCode::AtCapacity, "rejection must be typed: {err:#}");
+    assert!(err.to_string().contains("at capacity"), "human text preserved: {err}");
+
+    // Capacity is transient: a second attempt that overlaps the slot
+    // being released succeeds via the client's bounded retry.
+    let addr2 = addr.clone();
+    let waiter = std::thread::spawn(move || {
+        let c = RegistryClient::connect(&addr2)?;
+        c.counter(DEFAULT_OBJECT)?.take(1)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(40));
+    drop(tickets);
+    drop(holder); // frees the only slot while the waiter is retrying
+    let start = waiter.join().unwrap().expect("retry must win once the slot frees");
+    assert_eq!(start, 1, "the waiter's grant follows the holder's");
+
+    // Transport death is the other class: crash the server under a
+    // connected client and the next op is `Io`, not `AtCapacity`.
+    let victim = RegistryClient::connect(&addr).unwrap();
+    let vtickets = victim.counter(DEFAULT_OBJECT).unwrap();
+    server.crash();
+    let err = vtickets.take(1).unwrap_err();
+    assert_eq!(code_of(&err), ErrorCode::Io, "dead socket must be Io: {err:#}");
+}

@@ -7,7 +7,9 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use aggfunnels::config::ObjectManifest;
-use aggfunnels::service::{serve, PersistOpts, ServeOpts, TicketClient};
+use aggfunnels::service::{
+    serve, CreateSpec, PersistOpts, RegistryClient, ServeOpts, DEFAULT_OBJECT,
+};
 use aggfunnels::util::json::Json;
 
 /// Unique scratch `data_dir` for one test.
@@ -35,19 +37,23 @@ fn crash_recovery_restores_counters_and_queues_exactly() {
     let mut acked_end = 0u64;
     let mut dequeued = 0usize;
     {
-        let mut c = TicketClient::connect(&addr).unwrap();
-        c.create("jobs", "queue", "lcrq+elastic:fixed:2").unwrap();
-        c.create("orders", "counter", "elastic:aimd:d1").unwrap();
+        let c = RegistryClient::connect(&addr).unwrap();
+        let jobs = c.create_queue("jobs", &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
+        let orders = c.create_counter("orders", &CreateSpec::backend("elastic:aimd:d1")).unwrap();
         for k in 0..200u64 {
             let count = 1 + k % 4;
-            let start = c.take_on("orders", count, k % 9 == 0).unwrap();
+            let start = if k % 9 == 0 {
+                orders.take_priority(count).unwrap()
+            } else {
+                orders.take(count).unwrap()
+            };
             acked_end = acked_end.max(start + count);
-            c.enqueue("jobs", 1000 + k).unwrap();
+            jobs.enqueue(1000 + k).unwrap();
             if k % 3 == 0 {
                 // The queue is never empty here (this iteration's
                 // enqueue precedes it), so FIFO hands out the oldest
                 // surviving item.
-                assert_eq!(c.dequeue("jobs").unwrap(), Some(1000 + dequeued as u64));
+                assert_eq!(jobs.dequeue().unwrap(), Some(1000 + dequeued as u64));
                 dequeued += 1;
             }
         }
@@ -62,25 +68,27 @@ fn crash_recovery_restores_counters_and_queues_exactly() {
     // Restart on the same data_dir.
     let server = serve(&serve_opts(&dir)).unwrap();
     let addr = server.addr.to_string();
-    let mut c = TicketClient::connect(&addr).unwrap();
+    let c = RegistryClient::connect(&addr).unwrap();
 
     // Same object set, same backends.
     let listed = c.list().unwrap();
     let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
     assert_eq!(names, vec!["jobs", "orders", "tickets"]);
-    let orders = listed.iter().find(|(n, _, _)| n == "orders").unwrap();
-    assert_eq!(orders.2, "elastic:aimd:d1", "backend (and its direct quota) survives");
+    let orders_row = listed.iter().find(|(n, _, _)| n == "orders").unwrap();
+    assert_eq!(orders_row.2, "elastic:aimd:d1", "backend (and its direct quota) survives");
 
     // Counter: resumes exactly at the last acked value; fresh takes
     // never re-issue an acked ticket.
-    assert_eq!(c.read_on("orders").unwrap(), acked_end, "counter must resume at last ack");
-    let fresh = c.take_on("orders", 1, false).unwrap();
+    let orders = c.counter("orders").unwrap();
+    assert_eq!(orders.read().unwrap(), acked_end, "counter must resume at last ack");
+    let fresh = orders.take(1).unwrap();
     assert_eq!(fresh, acked_end, "no gap, no duplicate grant");
 
     // Queue: exact multiset of acked enqueues minus acked dequeues,
     // in FIFO order.
+    let jobs = c.queue("jobs").unwrap();
     let mut drained = Vec::new();
-    while let Some(item) = c.dequeue("jobs").unwrap() {
+    while let Some(item) = jobs.dequeue().unwrap() {
         drained.push(item);
     }
     assert_eq!(drained, expected, "queue multiset (and order) must survive the crash");
@@ -102,7 +110,7 @@ fn crash_recovery_restores_counters_and_queues_exactly() {
     assert!(replayed > 0, "the WAL tail must have been replayed");
     assert_eq!(recovered, 3, "all three objects recovered");
     // Per-object stats advertise durability.
-    let stats = c.stats_on("orders").unwrap();
+    let stats = orders.stats().unwrap();
     assert_eq!(stats.get("persist").and_then(Json::as_bool), Some(true));
 
     server.shutdown();
@@ -125,9 +133,10 @@ fn crash_mid_workload_never_duplicates_grants() {
             let addr = Arc::clone(&addr);
             std::thread::spawn(move || {
                 let mut acked: Vec<(u64, u64)> = Vec::new();
-                let Ok(mut c) = TicketClient::connect(&addr) else { return acked };
+                let Ok(c) = RegistryClient::connect(&addr) else { return acked };
+                let Ok(tickets) = c.counter(DEFAULT_OBJECT) else { return acked };
                 loop {
-                    match c.take(2, false) {
+                    match tickets.take(2) {
                         Ok(start) => acked.push((start, 2)),
                         Err(_) => return acked, // server crashed mid-flight
                     }
@@ -153,13 +162,16 @@ fn crash_mid_workload_never_duplicates_grants() {
     // before its response is lost to the crash — durability errs
     // toward never re-issuing a value.)
     let server = serve(&serve_opts(&dir)).unwrap();
-    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-    let recovered = c.read().unwrap();
+    let tickets = RegistryClient::connect(&server.addr.to_string())
+        .unwrap()
+        .counter(DEFAULT_OBJECT)
+        .unwrap();
+    let recovered = tickets.read().unwrap();
     assert!(
         recovered >= max_acked_end,
         "recovered value {recovered} below acked end {max_acked_end}: duplicate grants possible"
     );
-    let fresh = c.take(1, false).unwrap();
+    let fresh = tickets.take(1).unwrap();
     assert!(fresh >= max_acked_end, "fresh grant {fresh} collides with an acked range");
     server.shutdown();
     std::fs::remove_dir_all(&dir).unwrap();
@@ -188,7 +200,7 @@ fn sharded_server_restarts_with_same_namespace_and_values() {
     let mut expected_items: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
     let server = serve(&serve_opts(&dir)).unwrap();
     {
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
         assert_eq!(c.shards(), 2);
         let spread: std::collections::BTreeSet<usize> = counters
             .iter()
@@ -197,22 +209,22 @@ fn sharded_server_restarts_with_same_namespace_and_values() {
             .collect();
         assert_eq!(spread.len(), 2, "objects must land on both shards");
         for name in counters {
-            c.create(name, "counter", "elastic:fixed:2").unwrap();
+            c.create_counter(name, &CreateSpec::backend("elastic:fixed:2")).unwrap();
         }
         for name in queues {
-            c.create(name, "queue", "lcrq+elastic:fixed:2").unwrap();
+            c.create_queue(name, &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
         }
         for k in 0..120u64 {
-            let counter = counters[(k % 2) as usize];
-            let queue = queues[(k % 2) as usize];
+            let counter = c.counter(counters[(k % 2) as usize]).unwrap();
+            let queue = c.queue(queues[(k % 2) as usize]).unwrap();
             let count = 1 + k % 3;
-            c.take_on(counter, count, false).unwrap();
-            *final_counts.entry(counter).or_insert(0) += count;
-            c.enqueue(queue, 5000 + k).unwrap();
-            expected_items.entry(queue).or_default().push(5000 + k);
+            counter.take(count).unwrap();
+            *final_counts.entry(counters[(k % 2) as usize]).or_insert(0) += count;
+            queue.enqueue(5000 + k).unwrap();
+            expected_items.entry(queues[(k % 2) as usize]).or_default().push(5000 + k);
             if k % 4 == 0 {
-                let item = c.dequeue(queue).unwrap().unwrap();
-                let items = expected_items.get_mut(queue).unwrap();
+                let item = queue.dequeue().unwrap().unwrap();
+                let items = expected_items.get_mut(queues[(k % 2) as usize]).unwrap();
                 let pos = items.iter().position(|x| *x == item).unwrap();
                 items.remove(pos);
             }
@@ -223,7 +235,7 @@ fn sharded_server_restarts_with_same_namespace_and_values() {
     server.shutdown();
 
     let server = serve(&serve_opts(&dir)).unwrap();
-    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
     assert_eq!(c.shards(), 2, "restart keeps the shard layout");
 
     // Same object set across both shards.
@@ -233,14 +245,16 @@ fn sharded_server_restarts_with_same_namespace_and_values() {
 
     // Counters: exact values, and still monotonic under new traffic.
     for name in counters {
-        let value = c.read_on(name).unwrap();
+        let h = c.counter(name).unwrap();
+        let value = h.read().unwrap();
         assert_eq!(value, final_counts[name], "{name}: counter value after restart");
-        assert_eq!(c.take_on(name, 1, false).unwrap(), value, "{name}: no duplicate grants");
+        assert_eq!(h.take(1).unwrap(), value, "{name}: no duplicate grants");
     }
     // Queues: exact multisets.
     for name in queues {
+        let q = c.queue(name).unwrap();
         let mut drained = Vec::new();
-        while let Some(item) = c.dequeue(name).unwrap() {
+        while let Some(item) = q.dequeue().unwrap() {
             drained.push(item);
         }
         drained.sort_unstable();
@@ -273,24 +287,29 @@ fn persist_opt_outs_do_not_survive_restart() {
     };
     let server = serve(&serve_opts(&dir)).unwrap();
     {
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
         // Wire-created ephemeral object + traffic into the manifest one.
-        c.create_with("cache", "counter", "elastic:aimd", None, None, false).unwrap();
-        c.take_on("cache", 50, false).unwrap();
-        c.enqueue("scratchq", 9).unwrap();
-        let stats = c.stats_on("cache").unwrap();
+        let cache =
+            c.create_counter("cache", &CreateSpec::backend("elastic:aimd").ephemeral()).unwrap();
+        cache.take(50).unwrap();
+        c.queue("scratchq").unwrap().enqueue(9).unwrap();
+        let stats = cache.stats().unwrap();
         assert_eq!(stats.get("persist").and_then(Json::as_bool), Some(false));
     }
     server.crash();
 
     let server = serve(&serve_opts(&dir)).unwrap();
-    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
     let listed = c.list().unwrap();
     let names: Vec<&str> = listed.iter().map(|(n, _, _)| n.as_str()).collect();
     // The wire-created ephemeral object is gone; the manifest one is
     // re-created fresh from the manifest (empty again).
     assert_eq!(names, vec!["scratchq", "tickets"]);
-    assert_eq!(c.dequeue("scratchq").unwrap(), None, "opt-out queue restarts empty");
+    assert_eq!(
+        c.queue("scratchq").unwrap().dequeue().unwrap(),
+        None,
+        "opt-out queue restarts empty"
+    );
     server.shutdown();
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -337,20 +356,25 @@ fn recovered_state_outranks_boot_manifest() {
     };
     let server = serve(&serve_opts(&dir)).unwrap();
     {
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        c.take_on("orders", 33, false).unwrap();
-        c.take(4, false).unwrap(); // the default boot counter persists too
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        c.counter("orders").unwrap().take(33).unwrap();
+        // The default boot counter persists too.
+        c.counter(DEFAULT_OBJECT).unwrap().take(4).unwrap();
     }
     server.shutdown();
 
     let server = serve(&serve_opts(&dir)).unwrap();
-    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
     assert_eq!(
-        c.read_on("orders").unwrap(),
+        c.counter("orders").unwrap().read().unwrap(),
         33,
         "manifest must not reset the recovered counter"
     );
-    assert_eq!(c.read().unwrap(), 4, "default counter value survives restarts");
+    assert_eq!(
+        c.counter(DEFAULT_OBJECT).unwrap().read().unwrap(),
+        4,
+        "default counter value survives restarts"
+    );
     server.shutdown();
     std::fs::remove_dir_all(&dir).unwrap();
 }

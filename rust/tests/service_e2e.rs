@@ -5,27 +5,39 @@
 use std::sync::Arc;
 
 use aggfunnels::config::ObjectManifest;
-use aggfunnels::service::{serve, ServeOpts, TicketClient};
+use aggfunnels::service::{
+    serve, CreateSpec, ErrorCode, RegistryClient, ServeOpts, ServiceError, DEFAULT_OBJECT,
+};
 use aggfunnels::util::json::Json;
 
 fn start(workers: usize) -> aggfunnels::service::ServerHandle {
     serve(&ServeOpts::fixed("127.0.0.1:0", workers, 2)).unwrap()
 }
 
+fn code_of(err: &anyhow::Error) -> Option<ErrorCode> {
+    err.downcast_ref::<ServiceError>().map(|se| se.code)
+}
+
 #[test]
 fn many_clients_disjoint_coverage() {
-    // 7 connection slots: 6 concurrent clients plus the final reader.
-    let server = start(7);
+    // 6 concurrent clients; the event core multiplexes them over the
+    // executor pool regardless of the worker count.
+    let server = start(4);
     let addr = Arc::new(server.addr.to_string());
     let handles: Vec<_> = (0..6)
         .map(|i| {
             let addr = Arc::clone(&addr);
             std::thread::spawn(move || {
-                let mut c = TicketClient::connect(&addr).unwrap();
+                let tickets =
+                    RegistryClient::connect(&addr).unwrap().counter(DEFAULT_OBJECT).unwrap();
                 let mut out = Vec::new();
                 for k in 0..200u64 {
                     let count = 1 + (i as u64 + k) % 5;
-                    let start = c.take(count, k % 10 == 0).unwrap();
+                    let start = if k % 10 == 0 {
+                        tickets.take_priority(count).unwrap()
+                    } else {
+                        tickets.take(count).unwrap()
+                    };
                     out.push((start, count));
                 }
                 out
@@ -39,21 +51,22 @@ fn many_clients_disjoint_coverage() {
         assert_eq!(s, expect, "gap or overlap in dispensed tickets");
         expect = s + c;
     }
-    let mut c = TicketClient::connect(&addr).unwrap();
-    assert_eq!(c.read().unwrap(), expect);
+    let c = RegistryClient::connect(&addr).unwrap();
+    assert_eq!(c.counter(DEFAULT_OBJECT).unwrap().read().unwrap(), expect);
     server.shutdown();
 }
 
 #[test]
 fn stats_reflect_traffic() {
     let server = start(2);
-    let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
+    let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+    let tickets = c.counter(DEFAULT_OBJECT).unwrap();
     for _ in 0..5 {
-        c.take(1, false).unwrap();
+        tickets.take(1).unwrap();
     }
-    c.take(1, true).unwrap();
-    c.read().unwrap();
-    let stats = c.stats().unwrap();
+    tickets.take_priority(1).unwrap();
+    tickets.read().unwrap();
+    let stats = tickets.stats().unwrap();
     assert!(stats.get("take").and_then(Json::as_u64).unwrap() >= 5);
     assert_eq!(stats.get("take_priority").and_then(Json::as_u64), Some(1));
     assert!(stats.get("read").and_then(Json::as_u64).unwrap() >= 1);
@@ -68,9 +81,7 @@ fn adaptive_service_survives_burst_and_reports_width() {
         policy: aggfunnels::faa::WidthPolicy::Aimd(Default::default()),
         max_aggregators: 8,
         resize_interval_ms: 5,
-        // One spare slot: the post-burst stats probe may connect
-        // before the burst clients' leases are released.
-        ..ServeOpts::fixed("127.0.0.1:0", 5, 2)
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
     })
     .unwrap();
     let addr = Arc::new(server.addr.to_string());
@@ -78,10 +89,11 @@ fn adaptive_service_survives_burst_and_reports_width() {
         .map(|_| {
             let addr = Arc::clone(&addr);
             std::thread::spawn(move || {
-                let mut c = TicketClient::connect(&addr).unwrap();
+                let tickets =
+                    RegistryClient::connect(&addr).unwrap().counter(DEFAULT_OBJECT).unwrap();
                 let mut out = Vec::new();
                 for _ in 0..300u64 {
-                    out.push((c.take(1, false).unwrap(), 1u64));
+                    out.push((tickets.take(1).unwrap(), 1u64));
                 }
                 out
             })
@@ -95,8 +107,8 @@ fn adaptive_service_survives_burst_and_reports_width() {
         assert_eq!(s, expect, "gap or overlap while resizing");
         expect = s + c;
     }
-    let mut c = TicketClient::connect(&addr).unwrap();
-    let stats = c.stats().unwrap();
+    let c = RegistryClient::connect(&addr).unwrap();
+    let stats = c.object_stats(DEFAULT_OBJECT).unwrap();
     let width = stats.get("active_width").and_then(Json::as_u64).unwrap();
     assert!((1..=8).contains(&width), "width {width} out of range");
     assert_eq!(stats.get("width_policy").and_then(Json::as_str), Some("aimd"));
@@ -124,13 +136,21 @@ fn two_objects_served_concurrently_with_independent_stats() {
         .map(|i| {
             let addr = Arc::clone(&addr);
             std::thread::spawn(move || {
-                let mut c = TicketClient::connect(&addr).unwrap();
+                let c = RegistryClient::connect(&addr).unwrap();
+                let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+                let jobs = c.queue("jobs").unwrap();
                 let mut ranges = Vec::new();
                 let mut got = Vec::new();
                 for k in 0..per_client {
-                    ranges.push((c.take(1 + k % 3, k % 9 == 0).unwrap(), 1 + k % 3));
-                    c.enqueue("jobs", (i << 32) | k).unwrap();
-                    if let Some(item) = c.dequeue("jobs").unwrap() {
+                    let count = 1 + k % 3;
+                    let start = if k % 9 == 0 {
+                        tickets.take_priority(count).unwrap()
+                    } else {
+                        tickets.take(count).unwrap()
+                    };
+                    ranges.push((start, count));
+                    jobs.enqueue((i << 32) | k).unwrap();
+                    if let Some(item) = jobs.dequeue().unwrap() {
                         got.push(item);
                     }
                 }
@@ -153,8 +173,9 @@ fn two_objects_served_concurrently_with_independent_stats() {
         expect = s + c;
     }
     // Queue: drain the stragglers, then the multiset must be exact.
-    let mut c = TicketClient::connect(&addr).unwrap();
-    while let Some(item) = c.dequeue("jobs").unwrap() {
+    let c = RegistryClient::connect(&addr).unwrap();
+    let jobs = c.queue("jobs").unwrap();
+    while let Some(item) = jobs.dequeue().unwrap() {
         consumed.push(item);
     }
     consumed.sort_unstable();
@@ -165,8 +186,8 @@ fn two_objects_served_concurrently_with_independent_stats() {
     assert_eq!(consumed, expected, "queue lost or duplicated items");
 
     // Independent per-object stats.
-    let tickets = c.stats().unwrap();
-    let jobs = c.stats_on("jobs").unwrap();
+    let tickets = c.object_stats(DEFAULT_OBJECT).unwrap();
+    let jobs = c.object_stats("jobs").unwrap();
     assert_eq!(tickets.get("kind").and_then(Json::as_str), Some("counter"));
     assert_eq!(jobs.get("kind").and_then(Json::as_str), Some("queue"));
     let takes = tickets.get("take").and_then(Json::as_u64).unwrap()
@@ -214,13 +235,13 @@ fn four_shards_serve_independent_objects_with_global_view() {
     // Create the namespace through a routing client; the objects land
     // on their hash shards.
     {
-        let mut c = TicketClient::connect(&addr).unwrap();
+        let c = RegistryClient::connect(&addr).unwrap();
         assert_eq!(c.shards(), shards, "client learned the shard map");
         for name in counters {
-            c.create(name, "counter", "elastic:fixed:2").unwrap();
+            c.create_counter(name, &CreateSpec::backend("elastic:fixed:2")).unwrap();
         }
         for name in queues {
-            c.create(name, "queue", "lcrq+elastic:fixed:2").unwrap();
+            c.create_queue(name, &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
         }
         let shard_spread: std::collections::BTreeSet<usize> = counters
             .iter()
@@ -234,15 +255,21 @@ fn four_shards_serve_independent_objects_with_global_view() {
         .map(|i| {
             let addr = Arc::clone(&addr);
             std::thread::spawn(move || {
-                let mut c = TicketClient::connect(&addr).unwrap();
-                let counter = ["orders", "users"][(i % 2) as usize];
-                let queue = ["jobs", "mail"][(i % 2) as usize];
+                let c = RegistryClient::connect(&addr).unwrap();
+                let counter = c.counter(["orders", "users"][(i % 2) as usize]).unwrap();
+                let queue = c.queue(["jobs", "mail"][(i % 2) as usize]).unwrap();
                 let mut ranges = Vec::new();
                 let mut got = Vec::new();
                 for k in 0..per_client {
-                    ranges.push((c.take_on(counter, 1 + k % 3, k % 9 == 0).unwrap(), 1 + k % 3));
-                    c.enqueue(queue, (i << 32) | k).unwrap();
-                    if let Some(item) = c.dequeue(queue).unwrap() {
+                    let count = 1 + k % 3;
+                    let start = if k % 9 == 0 {
+                        counter.take_priority(count).unwrap()
+                    } else {
+                        counter.take(count).unwrap()
+                    };
+                    ranges.push((start, count));
+                    queue.enqueue((i << 32) | k).unwrap();
+                    if let Some(item) = queue.dequeue().unwrap() {
                         got.push(item);
                     }
                 }
@@ -265,7 +292,7 @@ fn four_shards_serve_independent_objects_with_global_view() {
             .or_default()
             .extend((0..per_client).map(|k| (i << 32) | k));
     }
-    let mut c = TicketClient::connect(&addr).unwrap();
+    let c = RegistryClient::connect(&addr).unwrap();
     // Counters: each object's ranges tile [0, its own total) densely —
     // objects on different shards never bleed into each other.
     for (name, mut ranges) in ranges_by_counter {
@@ -275,11 +302,16 @@ fn four_shards_serve_independent_objects_with_global_view() {
             assert_eq!(s, expect, "{name}: gap or overlap in counter ranges");
             expect = s + n;
         }
-        assert_eq!(c.read_on(name).unwrap(), expect, "{name}: final counter value");
+        assert_eq!(
+            c.counter(name).unwrap().read().unwrap(),
+            expect,
+            "{name}: final counter value"
+        );
     }
     // Queues: drain stragglers, then each multiset must be exact.
     for (name, consumed) in &mut consumed_by_queue {
-        while let Some(item) = c.dequeue(name).unwrap() {
+        let q = c.queue(name).unwrap();
+        while let Some(item) = q.dequeue().unwrap() {
             consumed.push(item);
         }
         consumed.sort_unstable();
@@ -308,7 +340,7 @@ fn four_shards_serve_independent_objects_with_global_view() {
             .unwrap_or(0);
     assert_eq!(takes, clients as u64 * per_client, "aggregate sees all counter traffic");
     // Per-object stats still resolve through the owning shard.
-    let orders = c.stats_on("orders").unwrap();
+    let orders = c.object_stats("orders").unwrap();
     assert_eq!(orders.get("kind").and_then(Json::as_str), Some("counter"));
     assert!(orders.get("shard").and_then(Json::as_u64).is_some());
     server.shutdown();
@@ -343,11 +375,11 @@ fn concurrent_create_delete_over_the_wire() {
         .map(|t| {
             let addr = Arc::clone(&addr);
             std::thread::spawn(move || {
-                let mut c = TicketClient::connect(&addr).unwrap();
+                let c = RegistryClient::connect(&addr).unwrap();
                 let mut ok = 0u64;
                 for i in 0..100 {
                     let r = if (t + i) % 2 == 0 {
-                        c.create("contested", "counter", "elastic:fixed:1")
+                        c.create("contested", "counter", &CreateSpec::backend("elastic:fixed:1"))
                     } else {
                         c.delete("contested")
                     };
@@ -361,8 +393,12 @@ fn concurrent_create_delete_over_the_wire() {
         .collect();
     let wins: u64 = spinners.into_iter().map(|s| s.join().unwrap()).sum();
     assert!(wins > 0, "at least some ops must win the race");
-    let mut c = TicketClient::connect(&addr).unwrap();
-    assert_eq!(c.take(1, false).unwrap(), 0, "server survived the churn");
+    let c = RegistryClient::connect(&addr).unwrap();
+    assert_eq!(
+        c.counter(DEFAULT_OBJECT).unwrap().take(1).unwrap(),
+        0,
+        "server survived the churn"
+    );
     server.shutdown();
 }
 
@@ -370,29 +406,33 @@ fn concurrent_create_delete_over_the_wire() {
 fn delete_during_enqueue_storm_is_clean() {
     // One connection hammers enqueues while another deletes the
     // queue. The enqueuer must see only clean responses (ok until the
-    // delete lands, "no object" errors after) and the server must
-    // keep serving both connections.
+    // delete lands, typed no_such_object errors after) and the server
+    // must keep serving both connections.
     let server = start(3);
     let addr = server.addr.to_string();
-    let mut victim = TicketClient::connect(&addr).unwrap();
-    victim.create("doomed", "queue", "lcrq+elastic:fixed:2").unwrap();
+    let victim = RegistryClient::connect(&addr).unwrap();
+    let doomed = victim.create_queue("doomed", &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
+    // Resolve the storm connection's handle before the delete can
+    // land, so the lookup itself never races the removal.
+    let storm_q = RegistryClient::connect(&addr).unwrap().queue("doomed").unwrap();
     let writer = {
-        let addr = addr.clone();
         std::thread::spawn(move || {
-            let mut c = TicketClient::connect(&addr).unwrap();
+            let q = storm_q;
             let mut sent = 0u64;
             let mut refused = 0u64;
             for i in 0..2000u64 {
-                match c.enqueue("doomed", i) {
+                match q.enqueue(i) {
                     Ok(()) => {
                         assert_eq!(refused, 0, "enqueue succeeded after a 'no object' error");
                         sent += 1;
                     }
                     Err(e) => {
-                        assert!(
-                            e.to_string().contains("no object"),
+                        assert_eq!(
+                            code_of(&e),
+                            Some(ErrorCode::NoSuchObject),
                             "unexpected error mid-storm: {e}"
                         );
+                        assert!(e.to_string().contains("no object"), "message text kept: {e}");
                         refused += 1;
                     }
                 }
@@ -405,17 +445,17 @@ fn delete_during_enqueue_storm_is_clean() {
     victim.delete("doomed").unwrap();
     let (sent, refused) = writer.join().unwrap();
     assert_eq!(sent + refused, 2000, "every request got a response");
-    assert!(victim.dequeue("doomed").is_err(), "object is gone");
-    // Both connections still work.
-    assert_eq!(victim.take(1, false).unwrap(), 0);
+    assert!(doomed.dequeue().is_err(), "object is gone");
+    // The victim's connection still works.
+    assert_eq!(victim.counter(DEFAULT_OBJECT).unwrap().take(1).unwrap(), 0);
     server.shutdown();
 }
 
 #[test]
 fn shutdown_is_prompt_under_concurrent_connects() {
     // The old nudge-based shutdown could hang if its wake-up
-    // connection was consumed as a client; the polling accept loop
-    // must shut down promptly even while new clients keep arriving.
+    // connection was consumed as a client; the polling cores must shut
+    // down promptly even while new clients keep arriving.
     for _ in 0..5 {
         let server = start(2);
         let addr = server.addr.to_string();
@@ -453,6 +493,11 @@ fn malformed_requests_do_not_kill_connection() {
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(&line).unwrap();
         assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+        assert_eq!(
+            resp.get("code").and_then(Json::as_str),
+            Some("protocol"),
+            "malformed requests carry the protocol code: {bad}"
+        );
     }
     // Still serviceable afterwards.
     writer.write_all(b"{\"op\":\"take\",\"count\":2}\n").unwrap();
