@@ -1,0 +1,650 @@
+//! The `adv-*` scenarios: adversarial workloads against a real
+//! server, one series per CAS retry policy where the policy is the
+//! variable under test.
+//!
+//! Where `service-mix` measures the friendly steady state, these
+//! sweeps deliberately concentrate contention the way production
+//! traffic does when it misbehaves:
+//!
+//! * `adv-skew`: Zipfian key skew over a bank of counters — most
+//!   requests hammer one hot object — with one series per
+//!   [`RetryPolicy`] spelled as a `:b<policy>` backend suffix. The
+//!   headline A/B: adaptive pacing must not lose to naive retry on
+//!   any point.
+//! * `adv-churn`: connect/disconnect churn — every burst rides a
+//!   fresh TCP connection — against a `stable` persistent-connection
+//!   baseline.
+//! * `adv-read`: reader-heavy flood, sweeping the read fraction on
+//!   one hot counter (linearizable reads ride the funnel too).
+//! * `adv-fair`: multi-tenant fairness — every client is a tenant on
+//!   one shared counter; reports min/max ops ratio per policy, with
+//!   the policy applied through the service-wide `cas_policy`
+//!   default rather than a spec suffix.
+//! * `adv-lat`: closed- vs open-loop `take` latency percentiles
+//!   (p50/p99/p999 µs) next to throughput.
+//!
+//! Every point is *gated*: after the measured window a fresh
+//! connection reads the objects back and the dense-range invariant
+//! (final counter value = client-side op count — every `take` landed
+//! exactly once) must hold, or the sweep fails instead of reporting a
+//! number for a broken run. The deeper oracle checks (batch history
+//! vs the linearization oracle, per-producer FIFO) live in
+//! `tests/adversarial_e2e.rs`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::Row;
+use crate::config::ObjectManifest;
+use crate::service::{serve, RegistryClient, ServeOpts, ServerHandle, DEFAULT_OBJECT};
+use crate::sync::RetryPolicy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::mops;
+
+/// Counters in the `adv-skew` bank (Zipf support).
+pub const ADV_SKEW_COUNTERS: usize = 8;
+
+/// Zipf exponent for the skewed scenarios (s > 1: the hottest key
+/// takes roughly half the traffic at n = 8).
+pub const ADV_SKEW_EXPONENT: f64 = 1.2;
+
+/// Options shared by every `adv-*` scenario.
+#[derive(Clone, Debug)]
+pub struct AdversarialOpts {
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for AdversarialOpts {
+    fn default() -> Self {
+        Self { clients: vec![2, 4, 8], duration: Duration::from_millis(300) }
+    }
+}
+
+impl AdversarialOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self { clients: vec![2], duration: Duration::from_millis(60) }
+    }
+}
+
+/// A deterministic Zipf(s) sampler over `{0, .., n-1}` (rank 0 is the
+/// hottest key), driven by the crate [`Rng`] so adversarial runs
+/// replay exactly.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let n = n.max(1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in cdf.iter_mut() {
+            *c /= acc;
+        }
+        Self { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// One client's whole run: `(requests issued, takes issued)`. The
+/// second component feeds the dense-range gate (counters must end at
+/// exactly the take count).
+type ClientBody = Arc<dyn Fn(usize, &AtomicBool) -> Result<(u64, u64)> + Send + Sync>;
+
+/// Run `clients` native client threads against a served address for
+/// `duration`, joining every worker before propagating any error.
+/// Returns per-client `(ops, takes)` outcomes plus the elapsed time.
+fn drive_clients(
+    clients: usize,
+    duration: Duration,
+    body: ClientBody,
+) -> Result<(Vec<(u64, u64)>, f64)> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..clients)
+        .map(|i| {
+            let body = Arc::clone(&body);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || body(i, &stop))
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    let mut outcomes = Vec::with_capacity(clients);
+    let mut err: Option<anyhow::Error> = None;
+    for w in workers {
+        match w.join() {
+            Ok(Ok(pair)) => outcomes.push(pair),
+            Ok(Err(e)) => err = err.or(Some(e)),
+            Err(_) => err = err.or_else(|| Some(anyhow!("client thread panicked"))),
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    match err {
+        Some(e) => Err(e),
+        None => Ok((outcomes, elapsed)),
+    }
+}
+
+/// Drive one point and run its gate/probe on a fresh connection; the
+/// server is shut down on every path. Returns
+/// `(total ops, total takes, elapsed, probe result)`.
+fn measure_adv_point(
+    server: ServerHandle,
+    clients: usize,
+    duration: Duration,
+    body: ClientBody,
+    probe: impl FnOnce(&RegistryClient, u64, u64) -> Result<Json>,
+) -> Result<(u64, u64, f64, Json)> {
+    let addr = server.addr.to_string();
+    let driven = drive_clients(clients, duration, body);
+    let (outcomes, elapsed) = match driven {
+        Ok(v) => v,
+        Err(e) => {
+            server.shutdown();
+            return Err(e);
+        }
+    };
+    let ops: u64 = outcomes.iter().map(|(o, _)| o).sum();
+    let takes: u64 = outcomes.iter().map(|(_, t)| t).sum();
+    let probed = RegistryClient::connect(&addr).and_then(|c| probe(&c, ops, takes));
+    server.shutdown();
+    Ok((ops, takes, elapsed, probed?))
+}
+
+/// The dense-range gate: `name`'s final value must equal the number
+/// of successful single-ticket takes the clients issued — every take
+/// landed exactly once, none double-counted, none lost.
+fn gate_counter_dense(c: &RegistryClient, name: &str, takes: u64) -> Result<()> {
+    let value = c.counter(name)?.read()?;
+    if value != takes {
+        return Err(anyhow!(
+            "dense-range gate failed on {name:?}: counter ended at {value}, \
+             clients issued {takes} takes"
+        ));
+    }
+    Ok(())
+}
+
+/// `adv-skew`: Zipf-skewed takes over [`ADV_SKEW_COUNTERS`] counters,
+/// one series per CAS retry policy (spelled `:b<policy>` on every
+/// counter's backend spec). Emits `as1` (Mops/s) and `as2` (funnel
+/// CAS failures observed, summed over the bank). Each point is gated
+/// on every counter's dense range.
+pub fn run_adv_skew(opts: &AdversarialOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for policy in RetryPolicy::ALL {
+        let label = policy.label();
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let objects: Vec<ObjectManifest> = (0..ADV_SKEW_COUNTERS)
+                .map(|k| {
+                    ObjectManifest::new(
+                        format!("c{k}"),
+                        "counter",
+                        format!("elastic:fixed:2:b{label}"),
+                    )
+                })
+                .collect();
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                objects,
+                // One spare lease for the post-run gate probe.
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving adv-skew/{label} for {clients} clients"))?;
+            let addr = Arc::new(server.addr.to_string());
+            let body: ClientBody = Arc::new(move |i, stop| {
+                let c = RegistryClient::connect(&addr)?;
+                let bank = (0..ADV_SKEW_COUNTERS)
+                    .map(|k| c.counter(&format!("c{k}")))
+                    .collect::<Result<Vec<_>>>()?;
+                let zipf = Zipf::new(ADV_SKEW_COUNTERS, ADV_SKEW_EXPONENT);
+                let mut rng = Rng::new(0xADF0_5EED ^ (i as u64).wrapping_mul(7919));
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    bank[zipf.sample(&mut rng)].take(1)?;
+                    ops += 1;
+                }
+                Ok((ops, ops))
+            });
+            let probe = |c: &RegistryClient, _ops: u64, _takes: u64| -> Result<Json> {
+                let mut total = 0u64;
+                let mut cas_failures = 0u64;
+                for k in 0..ADV_SKEW_COUNTERS {
+                    let stats = c.object_stats(&format!("c{k}"))?;
+                    total += c.counter(&format!("c{k}"))?.read()?;
+                    cas_failures += stats.get("cas_failures").and_then(Json::as_u64).unwrap_or(0);
+                }
+                Ok(Json::obj(vec![
+                    ("total", Json::num(total as f64)),
+                    ("cas_failures", Json::num(cas_failures as f64)),
+                ]))
+            };
+            let (ops, takes, elapsed, probed) =
+                measure_adv_point(server, clients, opts.duration, body, probe)
+                    .with_context(|| format!("adv-skew/{label} with {clients} clients"))?;
+            // The dense-range gate across the whole bank: the bank's
+            // summed final value must equal the summed takes.
+            let total = probed.get("total").and_then(Json::as_u64).unwrap_or(0);
+            if total != takes {
+                return Err(anyhow!(
+                    "adv-skew/{label}: counter bank ended at {total}, clients issued {takes}"
+                ));
+            }
+            let cas_failures =
+                probed.get("cas_failures").and_then(Json::as_u64).unwrap_or(0);
+            rows.push(Row {
+                figure: "as1",
+                series: label.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: mops(ops, elapsed),
+            });
+            rows.push(Row {
+                figure: "as2",
+                series: label.to_string(),
+                threads: clients,
+                metric: "cas_failures",
+                value: cas_failures as f64,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// The connection regimes `adv-churn` compares.
+pub const ADV_CHURN_MODES: [&str; 2] = ["stable", "churn"];
+
+/// `adv-churn`: the mixed counter+queue workload with every burst on
+/// a fresh TCP connection (`churn`) against persistent connections
+/// (`stable`). Emits `ac1` (Mops/s); gated on the ticket counter's
+/// dense range (connection churn must never double-land or lose a
+/// take).
+pub fn run_adv_churn(opts: &AdversarialOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for mode in ADV_CHURN_MODES {
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving adv-churn/{mode} for {clients} clients"))?;
+            let addr = Arc::new(server.addr.to_string());
+            let churn = mode == "churn";
+            let body: ClientBody = Arc::new(move |i, stop| {
+                let mut rng = Rng::new(0xC0_4A17 ^ (i as u64).wrapping_mul(6271));
+                let mut ops = 0u64;
+                let mut takes = 0u64;
+                let mut seq = (i as u64) << 32;
+                let mut conn: Option<RegistryClient> = None;
+                while !stop.load(Ordering::Relaxed) {
+                    // Churn: drop and re-dial before every burst; the
+                    // stable baseline dials once and keeps it.
+                    if churn {
+                        conn = None;
+                    }
+                    if conn.is_none() {
+                        conn = Some(RegistryClient::connect(&addr)?);
+                    }
+                    let c = conn.as_ref().unwrap();
+                    let tickets = c.counter(DEFAULT_OBJECT)?;
+                    let jobs = c.queue("jobs")?;
+                    let burst = rng.range_inclusive(1, 8);
+                    for _ in 0..burst {
+                        tickets.take(1)?;
+                        takes += 1;
+                        if rng.chance(0.5) {
+                            jobs.enqueue(seq)?;
+                            seq += 1;
+                        } else {
+                            jobs.dequeue()?;
+                        }
+                        ops += 2;
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                }
+                Ok((ops, takes))
+            });
+            let probe = |c: &RegistryClient, _ops: u64, takes: u64| -> Result<Json> {
+                gate_counter_dense(c, DEFAULT_OBJECT, takes)?;
+                Ok(Json::Null)
+            };
+            let (ops, _takes, elapsed, _) =
+                measure_adv_point(server, clients, opts.duration, body, probe)
+                    .with_context(|| format!("adv-churn/{mode} with {clients} clients"))?;
+            rows.push(Row {
+                figure: "ac1",
+                series: mode.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: mops(ops, elapsed),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// The read fractions `adv-read` sweeps (series `r50`, `r90`).
+pub const ADV_READ_FRACTIONS: [(&str, f64); 2] = [("r50", 0.5), ("r90", 0.9)];
+
+/// `adv-read`: reader-heavy flood on one hot counter — linearizable
+/// reads ride the funnel too, so a read flood is still a contention
+/// storm. Emits `ar1` (Mops/s) per read fraction; gated on the
+/// counter's dense range over the non-read ops.
+pub fn run_adv_read(opts: &AdversarialOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (series, fraction) in ADV_READ_FRACTIONS {
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving adv-read/{series} for {clients} clients"))?;
+            let addr = Arc::new(server.addr.to_string());
+            let body: ClientBody = Arc::new(move |i, stop| {
+                let c = RegistryClient::connect(&addr)?;
+                let tickets = c.counter(DEFAULT_OBJECT)?;
+                let mut rng = Rng::new(0x4EAD ^ (i as u64).wrapping_mul(4099));
+                let mut ops = 0u64;
+                let mut takes = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if rng.chance(fraction) {
+                        tickets.read()?;
+                    } else {
+                        tickets.take(1)?;
+                        takes += 1;
+                    }
+                    ops += 1;
+                }
+                Ok((ops, takes))
+            });
+            let probe = |c: &RegistryClient, _ops: u64, takes: u64| -> Result<Json> {
+                gate_counter_dense(c, DEFAULT_OBJECT, takes)?;
+                Ok(Json::Null)
+            };
+            let (ops, _takes, elapsed, _) =
+                measure_adv_point(server, clients, opts.duration, body, probe)
+                    .with_context(|| format!("adv-read/{series} with {clients} clients"))?;
+            rows.push(Row {
+                figure: "ar1",
+                series: series.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: mops(ops, elapsed),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// `adv-fair`: every client is a tenant hammering one shared counter;
+/// the CAS retry policy is applied through the *service-wide*
+/// `cas_policy` default (exercising the config path rather than the
+/// spec suffix). Emits `af1` (Mops/s) and `af2` (min/max per-tenant
+/// ops — 1.0 is perfectly fair); gated on the dense range.
+pub fn run_adv_fair(opts: &AdversarialOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for policy in RetryPolicy::ALL {
+        let label = policy.label();
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                cas_policy: policy,
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving adv-fair/{label} for {clients} clients"))?;
+            let addr = Arc::new(server.addr.to_string());
+            let per_client: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+            let sink = Arc::clone(&per_client);
+            let body: ClientBody = Arc::new(move |_i, stop| {
+                let c = RegistryClient::connect(&addr)?;
+                let tickets = c.counter(DEFAULT_OBJECT)?;
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    tickets.take(1)?;
+                    ops += 1;
+                }
+                sink.lock().unwrap().push(ops);
+                Ok((ops, ops))
+            });
+            let probe = |c: &RegistryClient, _ops: u64, takes: u64| -> Result<Json> {
+                gate_counter_dense(c, DEFAULT_OBJECT, takes)?;
+                Ok(Json::Null)
+            };
+            let (ops, _takes, elapsed, _) =
+                measure_adv_point(server, clients, opts.duration, body, probe)
+                    .with_context(|| format!("adv-fair/{label} with {clients} clients"))?;
+            let tenants = per_client.lock().unwrap();
+            let fairness = match (tenants.iter().min(), tenants.iter().max()) {
+                (Some(&min), Some(&max)) if max > 0 => min as f64 / max as f64,
+                _ => 0.0,
+            };
+            rows.push(Row {
+                figure: "af1",
+                series: label.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: mops(ops, elapsed),
+            });
+            rows.push(Row {
+                figure: "af2",
+                series: label.to_string(),
+                threads: clients,
+                metric: "fairness",
+                value: fairness,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// The arrival regimes `adv-lat` compares: a closed loop (next
+/// request the instant the last returns) and an open-ish loop (a
+/// fixed think time between requests, so arrival rate is bounded by
+/// the client, not the server).
+pub const ADV_LAT_MODES: [(&str, u64); 2] = [("closed", 0), ("open", 200)];
+
+/// Latency percentile over sorted microsecond samples.
+fn percentile_us(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)] as f64
+}
+
+/// `adv-lat`: per-request `take` latency under closed- and open-loop
+/// arrivals. Emits `al1` (Mops/s) and `al2` (p50/p99/p999 µs rows);
+/// gated on the dense range.
+pub fn run_adv_lat(opts: &AdversarialOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (mode, think_us) in ADV_LAT_MODES {
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving adv-lat/{mode} for {clients} clients"))?;
+            let addr = Arc::new(server.addr.to_string());
+            let samples: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+            let sink = Arc::clone(&samples);
+            let body: ClientBody = Arc::new(move |_i, stop| {
+                let c = RegistryClient::connect(&addr)?;
+                let tickets = c.counter(DEFAULT_OBJECT)?;
+                let mut ops = 0u64;
+                let mut local = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let t0 = Instant::now();
+                    tickets.take(1)?;
+                    local.push(t0.elapsed().as_micros() as u64);
+                    ops += 1;
+                    if think_us > 0 {
+                        std::thread::sleep(Duration::from_micros(think_us));
+                    }
+                }
+                sink.lock().unwrap().extend_from_slice(&local);
+                Ok((ops, ops))
+            });
+            let probe = |c: &RegistryClient, _ops: u64, takes: u64| -> Result<Json> {
+                gate_counter_dense(c, DEFAULT_OBJECT, takes)?;
+                Ok(Json::Null)
+            };
+            let (ops, _takes, elapsed, _) =
+                measure_adv_point(server, clients, opts.duration, body, probe)
+                    .with_context(|| format!("adv-lat/{mode} with {clients} clients"))?;
+            let mut lats = samples.lock().unwrap().clone();
+            lats.sort_unstable();
+            rows.push(Row {
+                figure: "al1",
+                series: mode.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: mops(ops, elapsed),
+            });
+            for (metric, q) in
+                [("p50_us", 0.50), ("p99_us", 0.99), ("p999_us", 0.999)]
+            {
+                rows.push(Row {
+                    figure: "al2",
+                    series: mode.to_string(),
+                    threads: clients,
+                    metric,
+                    value: percentile_us(&lats, q),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> AdversarialOpts {
+        AdversarialOpts { clients: vec![2], duration: Duration::from_millis(40) }
+    }
+
+    #[test]
+    fn zipf_is_deterministic_and_skewed() {
+        let zipf = Zipf::new(8, ADV_SKEW_EXPONENT);
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let xs: Vec<usize> = (0..2000).map(|_| zipf.sample(&mut a)).collect();
+        let ys: Vec<usize> = (0..2000).map(|_| zipf.sample(&mut b)).collect();
+        assert_eq!(xs, ys, "same seed, same sequence");
+        assert!(xs.iter().all(|&k| k < 8), "support is {{0..n}}");
+        let mut counts = [0usize; 8];
+        for &k in &xs {
+            counts[k] += 1;
+        }
+        assert!(
+            counts[0] > counts[7] * 3,
+            "rank 0 must dominate rank 7 under s={ADV_SKEW_EXPONENT}: {counts:?}"
+        );
+        assert!(counts.iter().all(|&c| c > 0), "tail keys still sampled: {counts:?}");
+    }
+
+    #[test]
+    fn percentiles_are_monotone() {
+        let sorted: Vec<u64> = (0..1000).collect();
+        let p50 = percentile_us(&sorted, 0.50);
+        let p99 = percentile_us(&sorted, 0.99);
+        let p999 = percentile_us(&sorted, 0.999);
+        assert!(p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+        assert_eq!(percentile_us(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn skew_sweep_covers_every_policy_and_gates() {
+        let rows = run_adv_skew(&quick()).unwrap();
+        for policy in RetryPolicy::ALL {
+            let label = policy.label();
+            let as1 = rows
+                .iter()
+                .find(|r| r.figure == "as1" && r.series == label)
+                .unwrap_or_else(|| panic!("missing as1/{label}"));
+            assert!(as1.value > 0.0, "{label}: zero wire throughput");
+            assert!(rows.iter().any(|r| r.figure == "as2" && r.series == label));
+        }
+        assert_eq!(rows.len(), 2 * RetryPolicy::ALL.len());
+    }
+
+    #[test]
+    fn churn_sweep_survives_reconnect_storms() {
+        let rows = run_adv_churn(&quick()).unwrap();
+        for mode in ADV_CHURN_MODES {
+            let ac1 = rows
+                .iter()
+                .find(|r| r.figure == "ac1" && r.series == mode)
+                .unwrap_or_else(|| panic!("missing ac1/{mode}"));
+            assert!(ac1.value > 0.0, "{mode}: zero wire throughput");
+        }
+        assert_eq!(rows.len(), ADV_CHURN_MODES.len());
+    }
+
+    #[test]
+    fn read_flood_and_latency_sweeps_run() {
+        let rows = run_adv_read(&quick()).unwrap();
+        assert_eq!(rows.len(), ADV_READ_FRACTIONS.len());
+        assert!(rows.iter().all(|r| r.value > 0.0));
+
+        let rows = run_adv_lat(&quick()).unwrap();
+        // One mops row + three percentile rows per mode.
+        assert_eq!(rows.len(), 4 * ADV_LAT_MODES.len());
+        for (mode, _) in ADV_LAT_MODES {
+            let p = |metric: &str| {
+                rows.iter()
+                    .find(|r| r.series == mode && r.metric == metric)
+                    .unwrap_or_else(|| panic!("missing {metric}/{mode}"))
+                    .value
+            };
+            assert!(p("mops") > 0.0, "{mode}: zero wire throughput");
+            assert!(p("p50_us") <= p("p99_us"), "{mode}: percentiles inverted");
+            assert!(p("p99_us") <= p("p999_us"), "{mode}: percentiles inverted");
+            assert!(p("p999_us") > 0.0, "{mode}: no latency samples");
+        }
+    }
+
+    #[test]
+    fn fairness_sweep_reports_sane_ratios() {
+        let rows = run_adv_fair(&quick()).unwrap();
+        assert_eq!(rows.len(), 2 * RetryPolicy::ALL.len());
+        for policy in RetryPolicy::ALL {
+            let label = policy.label();
+            let af2 = rows
+                .iter()
+                .find(|r| r.figure == "af2" && r.series == label)
+                .unwrap_or_else(|| panic!("missing af2/{label}"));
+            assert!(
+                af2.value > 0.0 && af2.value <= 1.0,
+                "{label}: fairness {} outside (0, 1]",
+                af2.value
+            );
+        }
+    }
+}

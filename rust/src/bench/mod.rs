@@ -7,7 +7,12 @@
 //! * [`native`] — real-thread throughput runs of the native library
 //!   (this-testbed numbers; on a 1-core container these measure hot
 //!   path cost, not contention scaling — the simulator covers that).
+//! * [`adversarial`] — the `adv-*` hostile-workload sweeps (Zipfian
+//!   skew, connection churn, reader floods, multi-tenant fairness,
+//!   latency percentiles) against a live served instance, gated on
+//!   dense-range correctness checks.
 
+pub mod adversarial;
 pub mod figures;
 pub mod native;
 pub mod service_mix;

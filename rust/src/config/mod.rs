@@ -164,6 +164,10 @@ pub struct ServiceSettings {
     /// Controller poll period for adaptive policies, in milliseconds
     /// (0 disables the resize controller thread).
     pub resize_interval_ms: u64,
+    /// Default CAS retry policy for hot-loop contention management:
+    /// `none`, `const`, `exp`, or `adaptive`. Objects created with a
+    /// `:b<policy>` backend-spec suffix override it per object.
+    pub cas_policy: String,
     /// Durability root: each shard persists a WAL + snapshots under
     /// `<data_dir>/shard-<i>` and recovers from them at boot. Empty
     /// (the default) disables persistence entirely.
@@ -205,6 +209,7 @@ impl Default for ServiceSettings {
             width_policy: "aimd".into(),
             max_aggregators: 12,
             resize_interval_ms: 25,
+            cas_policy: "adaptive".into(),
             data_dir: String::new(),
             persist: true,
             fsync_interval_ms: 5,
@@ -270,6 +275,13 @@ impl AppConfig {
             doc.int_or("service.max_aggregators", sv.max_aggregators as i64).max(1) as usize;
         sv.resize_interval_ms =
             doc.int_or("service.resize_interval_ms", sv.resize_interval_ms as i64).max(0) as u64;
+        sv.cas_policy = doc.str_or("service.cas_policy", &sv.cas_policy);
+        if crate::sync::RetryPolicy::parse(&sv.cas_policy).is_none() {
+            return Err(anyhow!(
+                "service.cas_policy must be none | const | exp | adaptive, got {:?}",
+                sv.cas_policy
+            ));
+        }
         sv.data_dir = doc.str_or("service.data_dir", &sv.data_dir);
         sv.persist = doc.bool_or("service.persist", sv.persist);
         sv.fsync_interval_ms =
@@ -462,6 +474,22 @@ mod tests {
         let jobs = c.service.objects.iter().find(|o| o.name == "jobs").unwrap();
         assert_eq!(jobs.kind, "counter");
         assert_eq!(jobs.backend, "");
+    }
+
+    #[test]
+    fn cas_policy_setting_applies_and_validates() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.service.cas_policy, "adaptive", "adaptive pacing is the default");
+        let doc = TomlDoc::parse("[service]\ncas_policy = \"exp\"").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.cas_policy, "exp");
+        for ok in ["none", "const", "adaptive"] {
+            let doc = TomlDoc::parse(&format!("service.cas_policy = \"{ok}\"")).unwrap();
+            c.apply_doc(&doc).unwrap();
+            assert_eq!(c.service.cas_policy, ok);
+        }
+        let doc = TomlDoc::parse("service.cas_policy = \"polite\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "unknown retry policy rejected");
     }
 
     #[test]

@@ -31,7 +31,7 @@ use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 use super::choose::Choose;
 use super::{delta_to_u64, BatchStats, FetchAddObject};
 use crate::ebr;
-use crate::sync::{Backoff, CachePadded};
+use crate::sync::{Backoff, CachePadded, CasCtl, RetryPolicy};
 use crate::util::rng::Rng;
 
 /// `final` field value meaning "Aggregator still in use" (the paper's ∞).
@@ -178,6 +178,10 @@ pub struct AggFunnelConfig {
     /// so [`AggFunnel::extract_history`] can reconstruct the full
     /// batch history after the run. Costs memory ∝ history length.
     pub record: bool,
+    /// Retry policy pacing the overflow-restart loop (line 21 re-reads
+    /// after an Aggregator retirement). Swappable at runtime through
+    /// [`FetchAddObject::set_cas_policy`].
+    pub cas_policy: RetryPolicy,
 }
 
 impl AggFunnelConfig {
@@ -192,6 +196,7 @@ impl AggFunnelConfig {
             direct_threads: 0,
             seed: 0x5EED_A66F,
             record: false,
+            cas_policy: RetryPolicy::default(),
         }
     }
 
@@ -212,6 +217,11 @@ impl AggFunnelConfig {
 
     pub fn with_direct_threads(mut self, d: usize) -> Self {
         self.direct_threads = d;
+        self
+    }
+
+    pub fn with_cas_policy(mut self, p: RetryPolicy) -> Self {
+        self.cas_policy = p;
         self
     }
 
@@ -255,6 +265,8 @@ pub struct AggFunnel<M: MainCell = AtomicMain> {
     /// `Agg[0..m)` for positive deltas, `Agg[m..2m)` for negative.
     agg: Vec<CachePadded<AtomicPtr<Aggregator>>>,
     cfg: AggFunnelConfig,
+    /// Paces the overflow-restart loop in `fetch_add_funnel`.
+    cas: CasCtl,
     ebr: ebr::Domain,
     scratch: Vec<CachePadded<std::cell::UnsafeCell<ThreadScratch>>>,
 }
@@ -294,7 +306,8 @@ impl<M: MainCell> AggFunnel<M> {
             })
             .collect();
         let ebr = ebr::Domain::new(cfg.max_threads);
-        Self { main, agg, cfg, ebr, scratch }
+        let cas = CasCtl::new(cfg.cas_policy);
+        Self { main, agg, cfg, cas, ebr, scratch }
     }
 
     pub fn config(&self) -> &AggFunnelConfig {
@@ -332,6 +345,7 @@ impl<M: MainCell> AggFunnel<M> {
         let index = self.choose_index(tid, positive);
         let slot = &self.agg[index];
         let guard = self.ebr.pin(tid);
+        let mut retry = self.cas.retry(tid as u64);
 
         // "go to line 21" (overflow restart) re-reads Agg[index].
         loop {
@@ -348,10 +362,14 @@ impl<M: MainCell> AggFunnel<M> {
             if last_ptr.is_null() {
                 // Aggregator overflowed; Agg[index] already holds a
                 // fresh Aggregator (the delegate replaced it *before*
-                // setting `final`). Restart there with the full delta.
+                // setting `final`). Restart there with the full delta,
+                // paced like a failed CAS — restarts cluster exactly
+                // when a retirement storm is in progress.
+                retry.on_fail();
                 continue;
             }
             let batch = unsafe { &*last_ptr };
+            retry.on_success();
 
             return if batch.after == a_before {
                 // Lines 26–33: I am the delegate of the next batch.
@@ -517,6 +535,14 @@ impl<M: MainCell> FetchAddObject for AggFunnel<M> {
             stats.ops += s.ops;
         }
         stats
+    }
+
+    fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.cas.set(policy);
+    }
+
+    fn cas_policy(&self) -> Option<RetryPolicy> {
+        Some(self.cas.get())
     }
 }
 
@@ -860,6 +886,46 @@ mod tests {
         let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..(p as u64 * 2_000)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn overflow_path_correct_under_every_retry_policy() {
+        // The retirement storm (tiny threshold) is the loop the retry
+        // policies pace; every policy must leave a dense ticket range.
+        for policy in RetryPolicy::ALL {
+            let p = 4;
+            let per_thread = 500usize;
+            let f = Arc::new(AggFunnel::with_config(
+                AggFunnelConfig::new(p)
+                    .with_aggregators(1)
+                    .with_threshold(32)
+                    .with_cas_policy(policy),
+            ));
+            assert_eq!(f.cas_policy(), Some(policy));
+            let handles: Vec<_> = (0..p)
+                .map(|tid| {
+                    let f = Arc::clone(&f);
+                    std::thread::spawn(move || {
+                        (0..per_thread).map(|_| f.fetch_add(tid, 1)).collect::<Vec<u64>>()
+                    })
+                })
+                .collect();
+            let mut all: Vec<u64> =
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            all.sort_unstable();
+            let n = (p * per_thread) as u64;
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "policy {policy:?}");
+        }
+    }
+
+    #[test]
+    fn cas_policy_swaps_live() {
+        let f = AggFunnel::new(2);
+        assert_eq!(f.cas_policy(), Some(RetryPolicy::default()));
+        f.set_cas_policy(RetryPolicy::None);
+        assert_eq!(f.cas_policy(), Some(RetryPolicy::None));
+        f.fetch_add(0, 1); // still functional after the swap
+        assert_eq!(f.read(1), 1);
     }
 
     #[test]

@@ -30,6 +30,16 @@
 //! variant (threads `tid < d` bypass the funnel on plain
 //! `fetch_add`) is a separate mechanism, configured via
 //! [`AggFunnelConfig::with_direct_threads`].
+//!
+//! Funnelled specs also accept a trailing `:b<policy>` segment — the
+//! **CAS retry policy** ([`RetryPolicy`]: `none` / `const` / `exp` /
+//! `adaptive`) governing every hot CAS loop inside the object (funnel
+//! restart arbitration, the permit gate's CAS loop, and — through the
+//! queue grammar — CRQ ring retries). `elastic:aimd:bexp` and
+//! `aggfunnel:4:d2:badaptive` parse; canonical order is `:d` before
+//! `:b`. `hw`/`combfunnel` reject the suffix like they reject `:d`.
+//! Without the segment the object runs under the caller's default
+//! (the service's `[service] cas_policy`, itself `adaptive`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -40,6 +50,7 @@ use super::elastic::{ElasticAggFunnel, ElasticConfig};
 use super::hardware::HardwareFaa;
 use super::width::WidthPolicy;
 use super::{BatchStats, FetchAddObject};
+use crate::sync::{CasCtl, RetryPolicy};
 
 /// Default Aggregator count (the paper's `m = 6`).
 pub const DEFAULT_AGGREGATORS: usize = 6;
@@ -51,47 +62,65 @@ pub const DEFAULT_MAX_WIDTH: usize = 12;
 pub enum BackendSpec {
     /// Hardware F&A (one atomic word).
     Hw,
-    /// Static Aggregating Funnel with `m` Aggregators per sign and an
-    /// optional §4.4 direct-thread quota (`None` = unlimited).
-    Agg { m: usize, direct: Option<usize> },
+    /// Static Aggregating Funnel with `m` Aggregators per sign, an
+    /// optional §4.4 direct-thread quota (`None` = unlimited) and an
+    /// optional CAS retry policy (`None` = caller's default).
+    Agg { m: usize, direct: Option<usize>, cas: Option<RetryPolicy> },
     /// Combining Funnels baseline.
     Comb,
     /// Elastic Aggregating Funnel under a width policy, with an
-    /// optional §4.4 direct-thread quota (`None` = unlimited).
-    Elastic { policy: WidthPolicy, max_width: usize, direct: Option<usize> },
+    /// optional §4.4 direct-thread quota (`None` = unlimited) and an
+    /// optional CAS retry policy (`None` = caller's default).
+    Elastic {
+        policy: WidthPolicy,
+        max_width: usize,
+        direct: Option<usize>,
+        cas: Option<RetryPolicy>,
+    },
 }
 
 impl BackendSpec {
     /// Parse a backend-spec string; `None` on unknown spellings.
     pub fn parse(s: &str) -> Option<BackendSpec> {
-        let (s, direct) = split_direct_quota(s.trim());
+        // Suffix order mirrors the canonical label: `...:d<k>:b<policy>`,
+        // so `:b` is stripped first.
+        let (s, cas) = split_cas_policy(s.trim());
+        let (s, direct) = split_direct_quota(s);
         let (head, param) = match s.split_once(':') {
             Some((h, p)) => (h, Some(p)),
             None => (s, None),
         };
         let spec = match (head, param) {
             ("hw", None) => Some(BackendSpec::Hw),
-            ("aggfunnel", None) => Some(BackendSpec::Agg { m: DEFAULT_AGGREGATORS, direct }),
-            ("aggfunnel", Some(m)) => {
-                m.trim().parse().ok().map(|m: usize| BackendSpec::Agg { m: m.max(1), direct })
+            ("aggfunnel", None) => {
+                Some(BackendSpec::Agg { m: DEFAULT_AGGREGATORS, direct, cas })
             }
+            ("aggfunnel", Some(m)) => m
+                .trim()
+                .parse()
+                .ok()
+                .map(|m: usize| BackendSpec::Agg { m: m.max(1), direct, cas }),
             ("combfunnel", None) => Some(BackendSpec::Comb),
             ("elastic", None) => Some(BackendSpec::Elastic {
                 policy: WidthPolicy::Aimd(Default::default()),
                 max_width: DEFAULT_MAX_WIDTH,
                 direct,
+                cas,
             }),
             ("elastic", Some(p)) => WidthPolicy::parse(p).map(|policy| BackendSpec::Elastic {
                 policy,
                 max_width: DEFAULT_MAX_WIDTH,
                 direct,
+                cas,
             }),
             _ => None,
         };
-        // `:d<k>` on a quota-less backend is a parse error, not a
-        // silently dropped parameter.
+        // `:d<k>` / `:b<policy>` on a backend with no funnel is a
+        // parse error, not a silently dropped parameter.
         match spec {
-            Some(BackendSpec::Hw | BackendSpec::Comb) if direct.is_some() => None,
+            Some(BackendSpec::Hw | BackendSpec::Comb) if direct.is_some() || cas.is_some() => {
+                None
+            }
             other => other,
         }
     }
@@ -125,6 +154,27 @@ impl BackendSpec {
         }
     }
 
+    /// Set the CAS retry policy (no-op for `hw`/`combfunnel`, which
+    /// have no guarded CAS loops).
+    pub fn with_cas_policy(mut self, p: RetryPolicy) -> Self {
+        match &mut self {
+            BackendSpec::Agg { cas, .. } | BackendSpec::Elastic { cas, .. } => {
+                *cas = Some(p);
+            }
+            BackendSpec::Hw | BackendSpec::Comb => {}
+        }
+        self
+    }
+
+    /// The CAS retry policy: `Some(p)` when the spec pins one,
+    /// `None` for "use the caller's default".
+    pub fn cas_policy(&self) -> Option<RetryPolicy> {
+        match self {
+            BackendSpec::Agg { cas, .. } | BackendSpec::Elastic { cas, .. } => *cas,
+            BackendSpec::Hw | BackendSpec::Comb => None,
+        }
+    }
+
     /// Canonical spelling, usable as a series label and re-parseable.
     pub fn label(&self) -> String {
         let mut label = match self {
@@ -139,6 +189,9 @@ impl BackendSpec {
         };
         if let Some(d) = self.direct_quota() {
             label.push_str(&format!(":d{d}"));
+        }
+        if let Some(p) = self.cas_policy() {
+            label.push_str(&format!(":b{}", p.label()));
         }
         label
     }
@@ -159,20 +212,33 @@ impl BackendSpec {
     pub fn build(&self, max_threads: usize) -> Arc<dyn FetchAddObject> {
         match self {
             BackendSpec::Hw => Arc::new(HardwareFaa::new(max_threads)),
-            BackendSpec::Agg { m, direct } => {
-                let funnel = AggFunnel::with_config(
-                    AggFunnelConfig::new(max_threads).with_aggregators(*m),
-                );
+            BackendSpec::Agg { m, direct, cas } => {
+                let mut cfg = AggFunnelConfig::new(max_threads).with_aggregators(*m);
+                if let Some(p) = cas {
+                    cfg = cfg.with_cas_policy(*p);
+                }
+                let funnel = AggFunnel::with_config(cfg);
                 match direct {
-                    Some(d) => Arc::new(DirectQuota::new(funnel, *d)),
+                    Some(d) => Arc::new(DirectQuota::with_policy(
+                        funnel,
+                        *d,
+                        cas.unwrap_or_default(),
+                    )),
                     None => Arc::new(funnel),
                 }
             }
             BackendSpec::Comb => Arc::new(CombiningFunnel::new(max_threads)),
-            BackendSpec::Elastic { policy, max_width, direct } => {
+            BackendSpec::Elastic { policy, max_width, direct, cas } => {
                 let funnel = self::build_elastic(max_threads, *policy, *max_width);
+                if let Some(p) = cas {
+                    funnel.set_cas_policy(*p);
+                }
                 match direct {
-                    Some(d) => Arc::new(DirectQuota::new(funnel, *d)),
+                    Some(d) => Arc::new(DirectQuota::with_policy(
+                        funnel,
+                        *d,
+                        cas.unwrap_or_default(),
+                    )),
                     None => Arc::new(funnel),
                 }
             }
@@ -205,19 +271,40 @@ fn split_direct_quota(s: &str) -> (&str, Option<usize>) {
     (s, None)
 }
 
+/// Split a trailing `:b<policy>` CAS-retry-policy segment off a spec
+/// string. Only a tail that is exactly a [`RetryPolicy`] spelling is
+/// consumed, so `elastic:fixed:3` (no `:b`) and malformed tails pass
+/// through untouched for the main grammar to reject.
+fn split_cas_policy(s: &str) -> (&str, Option<RetryPolicy>) {
+    if let Some((head, tail)) = s.rsplit_once(":b") {
+        if let Some(p) = RetryPolicy::parse(tail) {
+            return (head, Some(p));
+        }
+    }
+    (s, None)
+}
+
 /// Permit counter for §4.4 direct access: at most `quota` concurrent
 /// holders. Acquisition is a CAS loop on one word — callers that
 /// lose the race are expected to fall back to the funnelled path,
-/// they never spin. Shared by [`DirectQuota`] and the registry
-/// service's per-object gate so the protocol exists exactly once.
+/// they never spin on a full gate, but concurrent acquirers *do*
+/// collide on the permit word, so the loop is paced by a
+/// [`CasCtl`]. Shared by [`DirectQuota`] and the registry service's
+/// per-object gate so the protocol exists exactly once.
 pub struct DirectPermits {
     quota: usize,
     in_flight: AtomicUsize,
+    cas: CasCtl,
 }
 
 impl DirectPermits {
     pub fn new(quota: usize) -> Self {
-        Self { quota, in_flight: AtomicUsize::new(0) }
+        Self::with_policy(quota, RetryPolicy::default())
+    }
+
+    /// A gate whose permit-word CAS loop runs under `policy`.
+    pub fn with_policy(quota: usize, policy: RetryPolicy) -> Self {
+        Self { quota, in_flight: AtomicUsize::new(0), cas: CasCtl::new(policy) }
     }
 
     /// The configured quota `d`.
@@ -225,9 +312,20 @@ impl DirectPermits {
         self.quota
     }
 
+    /// Swap the retry policy pacing the permit-word CAS loop.
+    pub fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.cas.set(policy);
+    }
+
+    /// The retry policy currently pacing the permit-word CAS loop.
+    pub fn cas_policy(&self) -> RetryPolicy {
+        self.cas.get()
+    }
+
     /// Try to claim one of the `quota` direct slots.
     pub fn try_acquire(&self) -> bool {
         let mut cur = self.in_flight.load(Ordering::Relaxed);
+        let mut retry = self.cas.retry(cur as u64);
         loop {
             if cur >= self.quota {
                 return false;
@@ -238,8 +336,14 @@ impl DirectPermits {
                 Ordering::Acquire,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return true,
-                Err(now) => cur = now,
+                Ok(_) => {
+                    retry.on_success();
+                    return true;
+                }
+                Err(now) => {
+                    cur = now;
+                    retry.on_fail();
+                }
             }
         }
     }
@@ -263,6 +367,12 @@ pub struct DirectQuota<T: FetchAddObject> {
 impl<T: FetchAddObject> DirectQuota<T> {
     pub fn new(inner: T, quota: usize) -> Self {
         Self { inner, permits: DirectPermits::new(quota) }
+    }
+
+    /// A gated object whose permit CAS loop runs under `policy` (the
+    /// inner object keeps whatever policy it was built with).
+    pub fn with_policy(inner: T, quota: usize, policy: RetryPolicy) -> Self {
+        Self { inner, permits: DirectPermits::with_policy(quota, policy) }
     }
 }
 
@@ -305,6 +415,15 @@ impl<T: FetchAddObject> FetchAddObject for DirectQuota<T> {
     fn batch_stats(&self) -> BatchStats {
         self.inner.batch_stats()
     }
+
+    fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.permits.set_cas_policy(policy);
+        self.inner.set_cas_policy(policy);
+    }
+
+    fn cas_policy(&self) -> Option<RetryPolicy> {
+        self.inner.cas_policy().or(Some(self.permits.cas_policy()))
+    }
 }
 
 /// Build an elastic funnel with an explicit policy and capacity.
@@ -327,11 +446,11 @@ mod tests {
         assert_eq!(BackendSpec::parse("hw"), Some(BackendSpec::Hw));
         assert_eq!(
             BackendSpec::parse("aggfunnel"),
-            Some(BackendSpec::Agg { m: 6, direct: None })
+            Some(BackendSpec::Agg { m: 6, direct: None, cas: None })
         );
         assert_eq!(
             BackendSpec::parse("aggfunnel:4"),
-            Some(BackendSpec::Agg { m: 4, direct: None })
+            Some(BackendSpec::Agg { m: 4, direct: None, cas: None })
         );
         assert_eq!(BackendSpec::parse("combfunnel"), Some(BackendSpec::Comb));
         assert!(matches!(
@@ -339,7 +458,8 @@ mod tests {
             Some(BackendSpec::Elastic {
                 policy: WidthPolicy::Aimd(_),
                 max_width: 12,
-                direct: None
+                direct: None,
+                cas: None,
             })
         ));
         assert_eq!(
@@ -347,7 +467,8 @@ mod tests {
             Some(BackendSpec::Elastic {
                 policy: WidthPolicy::Fixed(4),
                 max_width: 12,
-                direct: None
+                direct: None,
+                cas: None,
             })
         );
         assert_eq!(
@@ -355,7 +476,8 @@ mod tests {
             Some(BackendSpec::Elastic {
                 policy: WidthPolicy::SqrtP,
                 max_width: 12,
-                direct: None
+                direct: None,
+                cas: None,
             })
         );
         assert_eq!(BackendSpec::parse("nope"), None);
@@ -367,18 +489,19 @@ mod tests {
     fn parse_direct_quota_segment() {
         assert_eq!(
             BackendSpec::parse("aggfunnel:4:d2"),
-            Some(BackendSpec::Agg { m: 4, direct: Some(2) })
+            Some(BackendSpec::Agg { m: 4, direct: Some(2), cas: None })
         );
         assert_eq!(
             BackendSpec::parse("aggfunnel:d1"),
-            Some(BackendSpec::Agg { m: 6, direct: Some(1) })
+            Some(BackendSpec::Agg { m: 6, direct: Some(1), cas: None })
         );
         assert_eq!(
             BackendSpec::parse("elastic:sqrtp:d0"),
             Some(BackendSpec::Elastic {
                 policy: WidthPolicy::SqrtP,
                 max_width: 12,
-                direct: Some(0)
+                direct: Some(0),
+                cas: None,
             })
         );
         assert_eq!(
@@ -386,7 +509,8 @@ mod tests {
             Some(BackendSpec::Elastic {
                 policy: WidthPolicy::Fixed(3),
                 max_width: 12,
-                direct: Some(2)
+                direct: Some(2),
+                cas: None,
             })
         );
         assert!(matches!(
@@ -402,20 +526,89 @@ mod tests {
     }
 
     #[test]
+    fn parse_cas_policy_segment() {
+        assert_eq!(
+            BackendSpec::parse("aggfunnel:4:bexp"),
+            Some(BackendSpec::Agg { m: 4, direct: None, cas: Some(RetryPolicy::Exp) })
+        );
+        assert_eq!(
+            BackendSpec::parse("aggfunnel:4:d2:badaptive"),
+            Some(BackendSpec::Agg {
+                m: 4,
+                direct: Some(2),
+                cas: Some(RetryPolicy::Adaptive),
+            })
+        );
+        assert_eq!(
+            BackendSpec::parse("elastic:fixed:3:bnone"),
+            Some(BackendSpec::Elastic {
+                policy: WidthPolicy::Fixed(3),
+                max_width: 12,
+                direct: None,
+                cas: Some(RetryPolicy::None),
+            })
+        );
+        assert!(matches!(
+            BackendSpec::parse("elastic:bconst"),
+            Some(BackendSpec::Elastic { cas: Some(RetryPolicy::Constant), direct: None, .. })
+        ));
+        // No guarded loops → no policy parameter (ISSUE: hw must reject).
+        assert_eq!(BackendSpec::parse("hw:bexp"), None);
+        assert_eq!(BackendSpec::parse("combfunnel:badaptive"), None);
+        // Malformed policies fail the whole spec.
+        assert_eq!(BackendSpec::parse("aggfunnel:4:b"), None);
+        assert_eq!(BackendSpec::parse("aggfunnel:4:bzzz"), None);
+        // `:b` must come after `:d` (canonical order only).
+        assert_eq!(BackendSpec::parse("aggfunnel:4:bexp:d2"), None);
+    }
+
+    #[test]
     fn labels_reparse() {
         for spec in [
             BackendSpec::Hw,
-            BackendSpec::Agg { m: 4, direct: None },
-            BackendSpec::Agg { m: 4, direct: Some(2) },
+            BackendSpec::Agg { m: 4, direct: None, cas: None },
+            BackendSpec::Agg { m: 4, direct: Some(2), cas: None },
+            BackendSpec::Agg { m: 4, direct: Some(2), cas: Some(RetryPolicy::Exp) },
+            BackendSpec::Agg { m: 4, direct: None, cas: Some(RetryPolicy::None) },
             BackendSpec::Comb,
-            BackendSpec::Elastic { policy: WidthPolicy::SqrtP, max_width: 12, direct: None },
+            BackendSpec::Elastic {
+                policy: WidthPolicy::SqrtP,
+                max_width: 12,
+                direct: None,
+                cas: None,
+            },
             BackendSpec::Elastic {
                 policy: WidthPolicy::Fixed(3),
                 max_width: 12,
                 direct: Some(1),
+                cas: Some(RetryPolicy::Adaptive),
+            },
+            BackendSpec::Elastic {
+                policy: WidthPolicy::SqrtP,
+                max_width: 12,
+                direct: None,
+                cas: Some(RetryPolicy::Constant),
             },
         ] {
             assert_eq!(BackendSpec::parse(&spec.label()), Some(spec), "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn cas_policy_accessors_and_build() {
+        let spec = BackendSpec::parse("elastic:aimd").unwrap().with_cas_policy(RetryPolicy::Exp);
+        assert_eq!(spec.cas_policy(), Some(RetryPolicy::Exp));
+        assert_eq!(spec.label(), "elastic:aimd:bexp");
+        assert_eq!(BackendSpec::Hw.with_cas_policy(RetryPolicy::Exp).cas_policy(), None);
+        // The built object carries the policy and stays live-swappable.
+        for raw in ["elastic:fixed:2:bnone", "aggfunnel:2:bconst", "elastic:aimd:d1:bexp"] {
+            let spec = BackendSpec::parse(raw).unwrap();
+            let f = spec.build(2);
+            assert_eq!(f.cas_policy(), spec.cas_policy(), "{raw}");
+            assert_eq!(f.fetch_add(0, 5), 0, "{raw}");
+            assert_eq!(f.read(1), 5, "{raw}");
+            f.set_cas_policy(RetryPolicy::Adaptive);
+            assert_eq!(f.cas_policy(), Some(RetryPolicy::Adaptive), "{raw}");
         }
     }
 
@@ -495,6 +688,19 @@ mod tests {
         assert_eq!(policy, WidthPolicy::SqrtP);
         assert_eq!(w, 12);
         assert_eq!(BackendSpec::Hw.counter_policy(), None);
+    }
+
+    #[test]
+    fn direct_permits_policy_knob() {
+        let permits = DirectPermits::with_policy(1, RetryPolicy::None);
+        assert_eq!(permits.cas_policy(), RetryPolicy::None);
+        assert!(permits.try_acquire());
+        assert!(!permits.try_acquire(), "quota 1 admits one holder");
+        permits.release();
+        permits.set_cas_policy(RetryPolicy::Exp);
+        assert_eq!(permits.cas_policy(), RetryPolicy::Exp);
+        assert!(permits.try_acquire(), "policy swap must not leak permits");
+        permits.release();
     }
 
     #[test]

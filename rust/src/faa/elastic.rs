@@ -45,7 +45,7 @@ use super::choose::Choose;
 use super::width::{ContentionMonitor, ContentionSnapshot, WidthPolicy};
 use super::{BatchStats, FetchAddObject};
 use crate::ebr;
-use crate::sync::{CachePadded, SpinLock};
+use crate::sync::{CachePadded, CasCtl, RetryPolicy, SpinLock};
 use crate::util::rng::Rng;
 
 /// Construction parameters for an [`ElasticAggFunnel`].
@@ -69,6 +69,10 @@ pub struct ElasticConfig {
     /// Batch chain and retired Aggregator alive so
     /// [`ElasticAggFunnel::extract_history`] can reconstruct the run.
     pub record: bool,
+    /// Retry policy pacing the restart loop (overflow *and*
+    /// width-epoch deactivation drains go through it). Swappable at
+    /// runtime through [`FetchAddObject::set_cas_policy`].
+    pub cas_policy: RetryPolicy,
 }
 
 impl ElasticConfig {
@@ -83,6 +87,7 @@ impl ElasticConfig {
             choose: Choose::StaticEven,
             seed: 0xE1A5_71C5,
             record: false,
+            cas_policy: RetryPolicy::default(),
         }
     }
 
@@ -103,6 +108,11 @@ impl ElasticConfig {
 
     pub fn with_choose(mut self, c: Choose) -> Self {
         self.choose = c;
+        self
+    }
+
+    pub fn with_cas_policy(mut self, p: RetryPolicy) -> Self {
+        self.cas_policy = p;
         self
     }
 
@@ -174,6 +184,8 @@ pub struct ElasticAggFunnel {
     active: CachePadded<AtomicUsize>,
     resizes: AtomicU64,
     cfg: ElasticConfig,
+    /// Paces the restart loop (overflow + deactivation drains).
+    cas: CasCtl,
     monitor: ContentionMonitor,
     ebr: ebr::Domain,
     scratch: Vec<CachePadded<std::cell::UnsafeCell<ElasticScratch>>>,
@@ -214,6 +226,7 @@ impl ElasticAggFunnel {
             agg,
             active: CachePadded::new(AtomicUsize::new(initial)),
             resizes: AtomicU64::new(0),
+            cas: CasCtl::new(cfg.cas_policy),
             cfg,
             monitor,
             ebr,
@@ -308,6 +321,7 @@ impl ElasticAggFunnel {
         let positive = delta > 0;
         let magnitude = delta.unsigned_abs();
         let guard = self.ebr.pin(tid);
+        let mut retry = self.cas.retry(tid as u64);
 
         loop {
             // Re-read the active width on every attempt so restarts
@@ -333,10 +347,14 @@ impl ElasticAggFunnel {
             if last_ptr.is_null() {
                 // Aggregator was retired (overflow or deactivation);
                 // restart with the full delta, re-choosing the slot.
+                // Pace the retry: restarts cluster exactly when a
+                // retirement storm or a width-epoch drain is underway.
                 self.monitor.record_restart(tid);
+                retry.on_fail();
                 continue;
             }
             let batch = unsafe { &*last_ptr };
+            retry.on_success();
 
             let result = if batch.after == a_before {
                 // Lines 26–33: I am the delegate of the next batch.
@@ -557,6 +575,14 @@ impl FetchAddObject for ElasticAggFunnel {
         self.monitor.fold_into(&mut stats);
         stats
     }
+
+    fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.cas.set(policy);
+    }
+
+    fn cas_policy(&self) -> Option<RetryPolicy> {
+        Some(self.cas.get())
+    }
 }
 
 impl Drop for ElasticAggFunnel {
@@ -706,6 +732,45 @@ mod tests {
         assert_eq!(all, (0..n as u64).collect::<Vec<_>>());
         let (retired, _freed) = f.debug_ebr_stats();
         assert!(retired > 0, "batches/aggregators must flow through EBR");
+    }
+
+    #[test]
+    fn width_epoch_drain_correct_under_every_retry_policy() {
+        // Deactivation-driven restarts are the loop the retry policies
+        // pace here; shrink mid-run under each policy and demand a
+        // dense ticket range.
+        for policy in RetryPolicy::ALL {
+            let p = 4;
+            let per_thread = 800usize;
+            let f = Arc::new(ElasticAggFunnel::with_config(
+                ElasticConfig::new(p)
+                    .with_max_width(4)
+                    .with_policy(WidthPolicy::Fixed(4))
+                    .with_threshold(64)
+                    .with_cas_policy(policy),
+            ));
+            assert_eq!(f.cas_policy(), Some(policy));
+            let handles: Vec<_> = (0..p)
+                .map(|tid| {
+                    let f = Arc::clone(&f);
+                    std::thread::spawn(move || {
+                        let mut out = Vec::with_capacity(per_thread);
+                        for i in 0..per_thread {
+                            if tid == 0 && i % 200 == 0 {
+                                f.resize(1 + (i / 200) % 4);
+                            }
+                            out.push(f.fetch_add(tid, 1));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            let mut all: Vec<u64> =
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            all.sort_unstable();
+            let n = (p * per_thread) as u64;
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "policy {policy:?}");
+        }
     }
 
     #[test]

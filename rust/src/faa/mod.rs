@@ -97,6 +97,17 @@ pub trait FetchAddObject: Send + Sync {
     fn batch_stats(&self) -> BatchStats {
         BatchStats::default()
     }
+
+    /// Swap the [`crate::sync::RetryPolicy`] pacing this object's
+    /// contended CAS loops (funnel restart arbitration, permit gates).
+    /// Default no-op for implementations with no guarded loops.
+    fn set_cas_policy(&self, _policy: crate::sync::RetryPolicy) {}
+
+    /// The CAS retry policy in force, `None` for implementations with
+    /// no guarded loops.
+    fn cas_policy(&self) -> Option<crate::sync::RetryPolicy> {
+        None
+    }
 }
 
 /// Counters backing the paper's "average batch size" metric, plus the

@@ -17,6 +17,9 @@
 
 use std::time::Duration;
 
+use aggfunnels::bench::adversarial::{
+    run_adv_churn, run_adv_fair, run_adv_lat, run_adv_read, run_adv_skew, AdversarialOpts,
+};
 use aggfunnels::bench::figures::{run_group, SweepOpts, FIGURE_GROUPS};
 use aggfunnels::bench::native::{
     make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
@@ -34,6 +37,7 @@ use aggfunnels::service::{
     serve, ConnMode, ConnOpts, CreateSpec, PersistOpts, RegistryClient, ServeOpts,
 };
 use aggfunnels::sim::algos::AlgoSpec;
+use aggfunnels::sync::RetryPolicy;
 use aggfunnels::sim::workloads::{run_faa_point, FaaWorkload};
 use aggfunnels::util::cli::{Cli, Parsed};
 use aggfunnels::util::parse_int_list;
@@ -80,13 +84,13 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|mix|service-mix|service-shard|persist|conn|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|service-shard|persist|conn|adv-skew|adv-churn|adv-read|adv-fair|adv-lat|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
          verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
-         serve [--addr A] [--shards S] [--workers W] [--conn-mode event|threads] [--io-threads N] [--max-conns N] [--max-pending N] [--m M] [--policy P] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
+         serve [--addr A] [--shards S] [--workers W] [--conn-mode event|threads] [--io-threads N] [--max-conns N] [--max-pending N] [--m M] [--policy P] [--cas-policy C] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
          take [--addr A] [--name O] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n  \
          obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B] [--direct-quota D] [--max-width W] [--no-persist]\n  \
          enqueue --name O --item N [--addr A]\n  \
@@ -94,7 +98,7 @@ fn print_usage() {
          snapshot [--addr A]\n\n\
          FAA algos:  {FAA_ALGOS:?}\n\
          Queues:     {QUEUE_ALGOS:?}\n\
-         Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy], each with an optional :d<k> direct quota; queues compose as lcrq+<backend>\n\
+         Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy], each with optional :d<k> (direct quota) and :b<policy> (CAS retry: none|const|exp|adaptive) suffixes; queues compose as lcrq+<backend>\n\
          Global: --config FILE applies configs/*.toml settings."
     );
 }
@@ -138,8 +142,9 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
     }
 
     // `all` covers the simulated groups; `service-mix`,
-    // `service-shard`, `persist` and `conn` start real servers, so
-    // they only run when named explicitly.
+    // `service-shard`, `persist`, `conn` and the `adv-*` adversarial
+    // sweeps start real servers, so they only run when named
+    // explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -188,6 +193,28 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
                 sweep.clients = opts.grid.clone();
             }
             ("conn".to_string(), run_service_conn(&sweep)?)
+        } else if g.starts_with("adv-") {
+            let mut adv = if p.has_flag("quick") {
+                AdversarialOpts::quick()
+            } else {
+                AdversarialOpts::default()
+            };
+            if p.get("grid").is_some() {
+                adv.clients = opts.grid.clone();
+            }
+            let rows = match g.as_str() {
+                "adv-skew" => run_adv_skew(&adv)?,
+                "adv-churn" => run_adv_churn(&adv)?,
+                "adv-read" => run_adv_read(&adv)?,
+                "adv-fair" => run_adv_fair(&adv)?,
+                "adv-lat" => run_adv_lat(&adv)?,
+                other => bail!(
+                    "unknown adversarial group {other:?} \
+                     (adv-skew | adv-churn | adv-read | adv-fair | adv-lat)"
+                ),
+            };
+            // Dash → underscore so artifacts land as BENCH_adv_skew.json.
+            (g.replace('-', "_"), rows)
         } else {
             let rows =
                 run_group(&g, &opts).ok_or_else(|| anyhow!("unknown figure group {g:?}"))?;
@@ -405,6 +432,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("max-pending", None, "undrained-request backpressure ceiling (event mode)")
         .opt("m", None, "initial aggregators per sign (default counter)")
         .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
+        .opt("cas-policy", None, "default CAS retry policy: none | const | exp | adaptive")
         .opt("max-m", None, "aggregator slot capacity per sign")
         .opt("resize-ms", None, "resize controller period (0 disables)")
         .opt("data-dir", None, "durability root (per-shard WAL + snapshots; recovers at boot)")
@@ -415,6 +443,9 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let policy_spec = p.get_or("policy", &cfg.service.width_policy).to_string();
     let policy = WidthPolicy::parse(&policy_spec)
         .ok_or_else(|| anyhow!("unknown width policy {policy_spec:?}"))?;
+    let cas_spec = p.get_or("cas-policy", &cfg.service.cas_policy).to_string();
+    let cas_policy = RetryPolicy::parse(&cas_spec)
+        .ok_or_else(|| anyhow!("unknown CAS retry policy {cas_spec:?}"))?;
     let data_dir = p.get_or("data-dir", &cfg.service.data_dir).to_string();
     let persist = if !data_dir.is_empty() && cfg.service.persist {
         Some(PersistOpts {
@@ -442,6 +473,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         policy,
         max_aggregators: p.parse_or("max-m", cfg.service.max_aggregators),
         resize_interval_ms: p.parse_or("resize-ms", cfg.service.resize_interval_ms),
+        cas_policy,
         objects: cfg.service.objects.clone(),
         persist,
     };
@@ -468,11 +500,12 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     };
     println!(
         "registry service on {} ({} shard(s) on ports {:?}, {capacity}, \
-         policy {}, {} boot object(s), {durability}); Ctrl-C to stop",
+         policy {}, cas {}, {} boot object(s), {durability}); Ctrl-C to stop",
         handle.addr,
         handle.shard_ports().len(),
         handle.shard_ports(),
         opts.policy.label(),
+        opts.cas_policy.label(),
         opts.objects.len() + 1,
     );
     loop {

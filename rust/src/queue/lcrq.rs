@@ -27,7 +27,7 @@ use crate::faa::combfunnel::{CombiningFunnel, CombiningFunnelConfig};
 use crate::faa::elastic::ElasticAggFunnel;
 use crate::faa::width::WidthPolicy;
 use crate::faa::{BatchStats, FetchAddObject};
-use crate::sync::{atomic128, AtomicU128, Backoff, CachePadded, SpinLock};
+use crate::sync::{atomic128, AtomicU128, CachePadded, CasCtl, RetryPolicy, SpinLock};
 
 /// Closed bit in `Tail` (bit 63).
 const CLOSED: u64 = 1 << 63;
@@ -438,6 +438,9 @@ struct Crq<F: IndexFactory> {
     next: CachePadded<AtomicPtr<Crq<F>>>,
     ring: Vec<AtomicU128>,
     order: u32, // log2(ring size)
+    /// Shared with the owning [`Lcrq`] (one control word per queue,
+    /// so a live policy swap reaches every linked ring at once).
+    cas: Arc<CasCtl>,
 }
 
 unsafe impl<F: IndexFactory> Send for Crq<F> {}
@@ -446,7 +449,7 @@ unsafe impl<F: IndexFactory> Sync for Crq<F> {}
 impl<F: IndexFactory> Crq<F> {
     /// Fresh ring; `first` optionally pre-enqueues one item at slot 0
     /// (used when linking a new ring during enqueue).
-    fn new(factory: &F, order: u32, first: Option<u64>) -> Box<Self> {
+    fn new(factory: &F, order: u32, first: Option<u64>, cas: &Arc<CasCtl>) -> Box<Self> {
         let size = 1usize << order;
         let ring: Vec<AtomicU128> = (0..size)
             .map(|i| AtomicU128::new(cell(SAFE | i as u64, EMPTY_ITEM)))
@@ -464,6 +467,7 @@ impl<F: IndexFactory> Crq<F> {
             next: CachePadded::new(AtomicPtr::new(std::ptr::null_mut())),
             ring,
             order,
+            cas: Arc::clone(cas),
         })
     }
 
@@ -482,6 +486,7 @@ impl<F: IndexFactory> Crq<F> {
     fn enqueue(&self, tid: usize, item: u64) -> Result<(), ()> {
         debug_assert_ne!(item, EMPTY_ITEM);
         let mut attempts = 0u32;
+        let mut retry = self.cas.retry(tid as u64);
         loop {
             let t_raw = self.tail.faa(tid, 1);
             if t_raw & CLOSED != 0 {
@@ -498,6 +503,7 @@ impl<F: IndexFactory> Crq<F> {
                 && (safe || self.head.load(tid) <= t)
                 && slot.compare_exchange(cell(safe_idx, EMPTY_ITEM), cell(SAFE | t, item)).is_ok()
             {
+                retry.on_success();
                 return Ok(());
             }
             // Failed: ring full or we're starving → close it.
@@ -507,15 +513,16 @@ impl<F: IndexFactory> Crq<F> {
                 self.tail.fetch_or(tid, CLOSED);
                 return Err(());
             }
+            retry.on_fail();
         }
     }
 
     /// Attempt to dequeue. `Err(())` means empty (possibly closed).
     fn dequeue(&self, tid: usize) -> Result<u64, ()> {
+        let mut retry = self.cas.retry(tid as u64);
         loop {
             let h = self.head.faa(tid, 1);
             let slot = &self.ring[(h & self.mask()) as usize];
-            let mut backoff = Backoff::new();
             loop {
                 let cur = slot.load();
                 let (safe_idx, val) = atomic128::unpack(cur);
@@ -534,6 +541,7 @@ impl<F: IndexFactory> Crq<F> {
                             )
                             .is_ok()
                         {
+                            retry.on_success();
                             return Ok(val);
                         }
                     } else {
@@ -553,7 +561,8 @@ impl<F: IndexFactory> Crq<F> {
                         break;
                     }
                 }
-                backoff.spin();
+                // A CAS on the slot just failed under us.
+                retry.on_fail();
             }
             // Empty check (paper: if Tail ≤ h + 1, the queue is empty).
             let t = self.tail.load(tid) & !CLOSED;
@@ -567,6 +576,7 @@ impl<F: IndexFactory> Crq<F> {
     /// fixState(): if dequeuers overtook the tail, push Tail up to
     /// Head so future enqueues use fresh slots.
     fn fix_state(&self, tid: usize) {
+        let mut retry = self.cas.retry(tid as u64);
         loop {
             let t_raw = self.tail.load(tid);
             let h = self.head.load(tid);
@@ -575,8 +585,10 @@ impl<F: IndexFactory> Crq<F> {
             }
             let new = (t_raw & CLOSED) | h;
             if self.tail.cas(tid, t_raw, new) == t_raw {
+                retry.on_success();
                 return;
             }
+            retry.on_fail();
         }
     }
 
@@ -599,6 +611,9 @@ pub struct Lcrq<F: IndexFactory> {
     factory: F,
     ring_order: u32,
     max_threads: usize,
+    /// One retry-control word for the whole queue, shared by every
+    /// linked ring (so a live policy swap reaches existing rings too).
+    cas: Arc<CasCtl>,
     ebr: ebr::Domain,
 }
 
@@ -611,13 +626,15 @@ impl<F: IndexFactory> Lcrq<F> {
     }
 
     pub fn with_ring_order(max_threads: usize, factory: F, ring_order: u32) -> Self {
-        let first = Box::into_raw(Crq::new(&factory, ring_order, None));
+        let cas = Arc::new(CasCtl::new(RetryPolicy::default()));
+        let first = Box::into_raw(Crq::new(&factory, ring_order, None, &cas));
         Self {
             head: CachePadded::new(AtomicPtr::new(first)),
             tail: CachePadded::new(AtomicPtr::new(first)),
             factory,
             ring_order,
             max_threads: max_threads.max(1),
+            cas,
             ebr: ebr::Domain::new(max_threads.max(1)),
         }
     }
@@ -655,7 +672,8 @@ impl<F: IndexFactory> ConcurrentQueue for Lcrq<F> {
                 return;
             }
             // Ring closed: link a fresh ring carrying our item.
-            let fresh = Box::into_raw(Crq::new(&self.factory, self.ring_order, Some(item)));
+            let fresh =
+                Box::into_raw(Crq::new(&self.factory, self.ring_order, Some(item), &self.cas));
             match crq.next.compare_exchange(
                 std::ptr::null_mut(),
                 fresh,
@@ -714,6 +732,14 @@ impl<F: IndexFactory> ConcurrentQueue for Lcrq<F> {
 
     fn batch_stats(&self) -> BatchStats {
         self.factory.batch_stats()
+    }
+
+    fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.cas.set(policy);
+    }
+
+    fn cas_policy(&self) -> Option<RetryPolicy> {
+        Some(self.cas.get())
     }
 }
 
@@ -884,6 +910,37 @@ mod tests {
         let after = handle.batch_stats();
         assert!(after.ops >= before.ops, "retired-cell stats lost");
         assert_eq!(handle.active_width(), 0, "no live cells");
+    }
+
+    #[test]
+    fn concurrent_under_every_retry_policy() {
+        // Tiny rings maximize slot-CAS contention and fixState churn —
+        // the loops the retry policies pace. FIFO + exact multiset
+        // must hold under each shipped policy.
+        for policy in RetryPolicy::ALL {
+            let q = Arc::new(Lcrq::with_ring_order(8, HwIndexFactory, 3));
+            q.set_cas_policy(policy);
+            assert_eq!(q.cas_policy(), Some(policy));
+            check_concurrent(q, 4, 4, 1_500);
+        }
+    }
+
+    #[test]
+    fn policy_swap_reaches_linked_rings() {
+        // Rings created before AND after the swap share the queue's
+        // control word, so the swap is queue-wide.
+        let q = Lcrq::with_ring_order(1, HwIndexFactory, 1); // 2-slot rings
+        for x in 0..8 {
+            q.enqueue(0, x);
+        }
+        q.set_cas_policy(RetryPolicy::Constant);
+        for x in 8..16 {
+            q.enqueue(0, x);
+        }
+        for x in 0..16 {
+            assert_eq!(q.dequeue(0), Some(x));
+        }
+        assert_eq!(q.cas_policy(), Some(RetryPolicy::Constant));
     }
 
     #[test]

@@ -55,6 +55,17 @@ pub trait ConcurrentQueue: Send + Sync {
     fn batch_stats(&self) -> BatchStats {
         BatchStats::default()
     }
+
+    /// Swap the [`crate::sync::RetryPolicy`] pacing the queue's CAS
+    /// retry loops (ring-slot installs, `fixState`). Default no-op for
+    /// queues with no guarded loops.
+    fn set_cas_policy(&self, _policy: crate::sync::RetryPolicy) {}
+
+    /// The CAS retry policy in force, `None` for queues with no
+    /// guarded loops.
+    fn cas_policy(&self) -> Option<crate::sync::RetryPolicy> {
+        None
+    }
 }
 
 /// Build a queue from a spec string: a family (`lcrq`, `prq`/`lprq`,
@@ -105,8 +116,11 @@ pub fn make_queue_with_handle(
             if let Some(w) = max_width {
                 index_spec = index_spec.with_max_width(w);
             }
+            // A `:b<policy>` suffix on the index spec paces the ring's
+            // slot/fixState CAS loops too (applied below, after build).
+            let cas = index_spec.cas_policy();
             let lcrq = family == "lcrq";
-            match index_spec {
+            let queue = match index_spec {
                 BackendSpec::Hw => ring_queue(lcrq, max_threads, HwIndexFactory),
                 BackendSpec::Agg { m, .. } => ring_queue(
                     lcrq,
@@ -121,7 +135,11 @@ pub fn make_queue_with_handle(
                     handle = Some(factory.clone());
                     ring_queue(lcrq, max_threads, factory)
                 }
+            };
+            if let Some(p) = cas {
+                queue.set_cas_policy(p);
             }
+            queue
         }
         _ => return None,
     };
@@ -275,6 +293,33 @@ mod tests {
         assert!(make_queue("lcrq+elastic:aimd:d2", 2).is_none());
         assert!(make_queue("lcrq+aggfunnel:4:d1", 2).is_none());
         assert!(make_queue("prq+elastic:aimd:d2", 2).is_none());
+    }
+
+    #[test]
+    fn cas_policy_suffix_reaches_the_rings() {
+        use crate::sync::RetryPolicy;
+        for (spec, want) in [
+            ("lcrq+aggfunnel:4:bexp", RetryPolicy::Exp),
+            ("lcrq+elastic:aimd:bnone", RetryPolicy::None),
+            ("prq+aggfunnel:2:bconst", RetryPolicy::Constant),
+            ("prq+elastic:sqrtp:badaptive", RetryPolicy::Adaptive),
+        ] {
+            let q = make_queue(spec, 2).unwrap_or_else(|| panic!("{spec} not built"));
+            assert_eq!(q.cas_policy(), Some(want), "{spec}");
+            q.enqueue(0, 7);
+            assert_eq!(q.dequeue(1), Some(7), "{spec}");
+        }
+        // Bare ring queues run the default policy; msq has no guarded
+        // loops and reports None.
+        let q = make_queue("lcrq", 2).unwrap();
+        assert_eq!(q.cas_policy(), Some(RetryPolicy::default()));
+        q.set_cas_policy(RetryPolicy::Exp);
+        assert_eq!(q.cas_policy(), Some(RetryPolicy::Exp));
+        assert_eq!(make_queue("msq", 2).unwrap().cas_policy(), None);
+        // `hw` rejects the suffix, exactly like `:d`.
+        assert!(make_queue("lcrq+hw:bexp", 2).is_none());
+        // Non-canonical order does not parse.
+        assert!(make_queue("lcrq+elastic:aimd:bexp:d2", 2).is_none());
     }
 
     #[test]

@@ -19,12 +19,13 @@
 //!   unsafe `(0, c', v)` so its lagging dequeuer must exist.
 
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use super::lcrq::{IndexCell, IndexFactory};
 use super::ConcurrentQueue;
 use crate::ebr;
 use crate::faa::BatchStats;
-use crate::sync::{Backoff, CachePadded};
+use crate::sync::{CachePadded, CasCtl, RetryPolicy};
 
 const CLOSED: u64 = 1 << 63;
 
@@ -62,13 +63,16 @@ struct Ring<F: IndexFactory> {
     next: CachePadded<AtomicPtr<Ring<F>>>,
     cells: Vec<CachePadded<AtomicU64>>,
     order: u32,
+    /// Shared with the owning [`Prq`] (one control word per queue,
+    /// so a live policy swap reaches every linked ring at once).
+    cas: Arc<CasCtl>,
 }
 
 unsafe impl<F: IndexFactory> Send for Ring<F> {}
 unsafe impl<F: IndexFactory> Sync for Ring<F> {}
 
 impl<F: IndexFactory> Ring<F> {
-    fn new(factory: &F, order: u32, first: Option<u64>) -> Box<Self> {
+    fn new(factory: &F, order: u32, first: Option<u64>, cas: &Arc<CasCtl>) -> Box<Self> {
         let size = 1usize << order;
         let cells: Vec<CachePadded<AtomicU64>> =
             (0..size).map(|_| CachePadded::new(AtomicU64::new(mk(true, 0, BOT)))).collect();
@@ -85,6 +89,7 @@ impl<F: IndexFactory> Ring<F> {
             next: CachePadded::new(AtomicPtr::new(std::ptr::null_mut())),
             cells,
             order,
+            cas: Arc::clone(cas),
         })
     }
 
@@ -95,6 +100,7 @@ impl<F: IndexFactory> Ring<F> {
 
     fn enqueue(&self, tid: usize, item: u64) -> Result<(), ()> {
         let mut attempts = 0u32;
+        let mut retry = self.cas.retry(tid as u64);
         loop {
             let t_raw = self.tail.faa(tid, 1);
             if t_raw & CLOSED != 0 {
@@ -112,6 +118,7 @@ impl<F: IndexFactory> Ring<F> {
                     .compare_exchange(cur, mk(true, c, item), Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
             {
+                retry.on_success();
                 return Ok(());
             }
             attempts += 1;
@@ -120,15 +127,16 @@ impl<F: IndexFactory> Ring<F> {
                 self.tail.fetch_or(tid, CLOSED);
                 return Err(());
             }
+            retry.on_fail();
         }
     }
 
     fn dequeue(&self, tid: usize) -> Result<u64, ()> {
+        let mut retry = self.cas.retry(tid as u64);
         loop {
             let h = self.head.faa(tid, 1);
             let c = (h >> self.order) & CYCLE_MASK;
             let slot = &*self.cells[(h & (self.size() - 1)) as usize];
-            let mut backoff = Backoff::new();
             loop {
                 let cur = slot.load(Ordering::Acquire);
                 let (safe, cyc, val) = parts(cur);
@@ -147,6 +155,7 @@ impl<F: IndexFactory> Ring<F> {
                             )
                             .is_ok()
                         {
+                            retry.on_success();
                             return Ok(val);
                         }
                     } else {
@@ -179,7 +188,8 @@ impl<F: IndexFactory> Ring<F> {
                         break;
                     }
                 }
-                backoff.spin();
+                // A CAS on the slot just failed under us.
+                retry.on_fail();
             }
             let t = self.tail.load(tid) & !CLOSED;
             if t <= h + 1 {
@@ -190,6 +200,7 @@ impl<F: IndexFactory> Ring<F> {
     }
 
     fn fix_state(&self, tid: usize) {
+        let mut retry = self.cas.retry(tid as u64);
         loop {
             let t_raw = self.tail.load(tid);
             let h = self.head.load(tid);
@@ -198,8 +209,10 @@ impl<F: IndexFactory> Ring<F> {
             }
             let new = (t_raw & CLOSED) | h;
             if self.tail.cas(tid, t_raw, new) == t_raw {
+                retry.on_success();
                 return;
             }
+            retry.on_fail();
         }
     }
 }
@@ -211,6 +224,9 @@ pub struct Prq<F: IndexFactory> {
     factory: F,
     ring_order: u32,
     max_threads: usize,
+    /// One retry-control word for the whole queue, shared by every
+    /// linked ring (so a live policy swap reaches existing rings too).
+    cas: Arc<CasCtl>,
     ebr: ebr::Domain,
 }
 
@@ -223,13 +239,15 @@ impl<F: IndexFactory> Prq<F> {
     }
 
     pub fn with_ring_order(max_threads: usize, factory: F, ring_order: u32) -> Self {
-        let first = Box::into_raw(Ring::new(&factory, ring_order, None));
+        let cas = Arc::new(CasCtl::new(RetryPolicy::default()));
+        let first = Box::into_raw(Ring::new(&factory, ring_order, None, &cas));
         Self {
             head: CachePadded::new(AtomicPtr::new(first)),
             tail: CachePadded::new(AtomicPtr::new(first)),
             factory,
             ring_order,
             max_threads: max_threads.max(1),
+            cas,
             ebr: ebr::Domain::new(max_threads.max(1)),
         }
     }
@@ -266,7 +284,8 @@ impl<F: IndexFactory> ConcurrentQueue for Prq<F> {
             if ring.enqueue(tid, item).is_ok() {
                 return;
             }
-            let fresh = Box::into_raw(Ring::new(&self.factory, self.ring_order, Some(item)));
+            let fresh =
+                Box::into_raw(Ring::new(&self.factory, self.ring_order, Some(item), &self.cas));
             match ring.next.compare_exchange(
                 std::ptr::null_mut(),
                 fresh,
@@ -322,6 +341,14 @@ impl<F: IndexFactory> ConcurrentQueue for Prq<F> {
         // factory's accumulator (see `ElasticIndex::drop`), so
         // per-queue totals survive ring transitions like LCRQ's.
         self.factory.batch_stats()
+    }
+
+    fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.cas.set(policy);
+    }
+
+    fn cas_policy(&self) -> Option<RetryPolicy> {
+        Some(self.cas.get())
     }
 }
 
@@ -387,6 +414,19 @@ mod tests {
     fn rejects_oversized_items() {
         let q = Prq::new(1, HwIndexFactory);
         q.enqueue(0, 1 << 50);
+    }
+
+    #[test]
+    fn concurrent_under_every_retry_policy() {
+        // Tiny rings maximize slot-CAS contention — the loops the
+        // retry policies pace. FIFO + exact multiset must hold under
+        // each shipped policy.
+        for policy in RetryPolicy::ALL {
+            let q = Arc::new(Prq::with_ring_order(8, HwIndexFactory, 3));
+            q.set_cas_policy(policy);
+            assert_eq!(q.cas_policy(), Some(policy));
+            check_concurrent(q, 4, 4, 1_500);
+        }
     }
 
     #[test]

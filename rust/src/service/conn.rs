@@ -171,13 +171,29 @@ struct ConnShared {
     wake: Arc<WakePing>,
     /// Bytes written by executors but not yet accepted by the socket.
     out: Mutex<Vec<u8>>,
-    /// Decoded request lines awaiting execution.
-    requests: Mutex<VecDeque<String>>,
+    /// Decoded requests awaiting execution, in arrival order.
+    requests: Mutex<VecDeque<Request>>,
     scheduled: AtomicBool,
     /// Peer finished sending (EOF/read error); drain, then reap.
     read_closed: AtomicBool,
     /// Write side failed; nothing further can be delivered.
     dead: AtomicBool,
+}
+
+/// One decoded unit of a connection's request stream. Keeping
+/// malformed lines *in the queue* — instead of replying to them from
+/// the I/O thread — preserves the pipelining contract: every request
+/// gets exactly one reply, in the order the requests were sent, even
+/// when some of them are garbage.
+enum Request {
+    /// A complete request line, ready for `handle_request`.
+    Line(String),
+    /// A line that exceeded [`MAX_LINE`] (bytes seen so far, for the
+    /// error reply). The line is dropped through its newline —
+    /// immediately if it arrived terminated, via the connection's
+    /// discard mode otherwise — so framing stays intact and the
+    /// connection lives on.
+    Overlong(usize),
 }
 
 impl ConnShared {
@@ -328,6 +344,10 @@ struct IoConn {
     stream: TcpStream,
     /// Bytes read but not yet terminated by a newline.
     buf: Vec<u8>,
+    /// Mid-discard of an overlong line: swallow bytes (unbuffered)
+    /// until the next newline restores framing. The error reply was
+    /// already queued when the cap tripped.
+    discarding: bool,
     shared: Arc<ConnShared>,
 }
 
@@ -471,7 +491,7 @@ impl IoThread {
                 greeting.push(b'\n');
                 shared.send(&greeting);
             }
-            self.conns.push(IoConn { stream, buf: Vec::new(), shared });
+            self.conns.push(IoConn { stream, buf: Vec::new(), discarding: false, shared });
         }
     }
 
@@ -506,41 +526,57 @@ impl IoThread {
             }
         }
         let mut pushed = 0usize;
-        while let Some(pos) = c.buf.iter().position(|&b| b == b'\n') {
+        loop {
+            if c.discarding {
+                // The head of the buffer is the tail of an overlong
+                // line (already answered); swallow through its newline.
+                match c.buf.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        c.buf.drain(..=pos);
+                        c.discarding = false;
+                    }
+                    None => {
+                        c.buf.clear();
+                        break;
+                    }
+                }
+            }
+            let Some(pos) = c.buf.iter().position(|&b| b == b'\n') else {
+                if c.buf.len() > MAX_LINE {
+                    // Cap tripped mid-line: queue the error *in
+                    // position* and discard until the next newline —
+                    // requests pipelined behind the oversized line
+                    // still get answered, in order.
+                    c.shared
+                        .requests
+                        .lock()
+                        .unwrap()
+                        .push_back(Request::Overlong(c.buf.len()));
+                    pushed += 1;
+                    c.buf.clear();
+                    c.discarding = true;
+                }
+                break;
+            };
             let line: Vec<u8> = c.buf.drain(..=pos).collect();
             if line.len() > MAX_LINE {
-                Self::overlong_line(&c.shared);
-                break;
+                // Oversized but newline-terminated within this read:
+                // same in-position error, framing already intact.
+                c.shared.requests.lock().unwrap().push_back(Request::Overlong(line.len() - 1));
+                pushed += 1;
+                continue;
             }
             let text = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
             if text.trim().is_empty() {
                 continue;
             }
-            c.shared.requests.lock().unwrap().push_back(text);
+            c.shared.requests.lock().unwrap().push_back(Request::Line(text));
             pushed += 1;
-        }
-        if c.buf.len() > MAX_LINE {
-            Self::overlong_line(&c.shared);
-            c.buf.clear();
         }
         if pushed > 0 {
             self.evq.pending_ops.fetch_add(pushed, Ordering::AcqRel);
             schedule(&self.evq, &c.shared);
         }
-    }
-
-    /// A request line beyond [`MAX_LINE`]: answer with a protocol
-    /// error and stop reading this connection (queued work and the
-    /// error reply still drain before the reap).
-    fn overlong_line(shared: &Arc<ConnShared>) {
-        let err = service_err(
-            ErrorCode::Protocol,
-            format!("request line exceeds {MAX_LINE} bytes"),
-        );
-        let mut reply = error_json(&err).to_string().into_bytes();
-        reply.push(b'\n');
-        shared.send(&reply);
-        shared.read_closed.store(true, Ordering::Release);
     }
 
     /// Drop connections that are gone and fully drained.
@@ -609,13 +645,26 @@ fn executor_loop(state: &Arc<ServerState>, shard: usize, tid: usize, evq: &Event
         }
         let mut ops = 0usize;
         for conn in batch {
-            let lines: Vec<String> = conn.requests.lock().unwrap().drain(..).collect();
+            let lines: Vec<Request> = conn.requests.lock().unwrap().drain(..).collect();
             if !lines.is_empty() {
                 let mut out = Vec::new();
-                for line in &lines {
-                    let resp = match super::handle_request(state, shard, tid, line) {
-                        Ok(json) => json,
-                        Err(e) => error_json(&e),
+                for req in &lines {
+                    // Every queued request — valid, failing, or
+                    // malformed — produces exactly one reply here, in
+                    // arrival order; a bad op in the middle of a
+                    // pipelined batch never shifts or aborts the
+                    // replies behind it.
+                    let resp = match req {
+                        Request::Line(line) => {
+                            match super::handle_request(state, shard, tid, line) {
+                                Ok(json) => json,
+                                Err(e) => error_json(&e),
+                            }
+                        }
+                        Request::Overlong(len) => error_json(&service_err(
+                            ErrorCode::Protocol,
+                            format!("request line exceeds {MAX_LINE} bytes ({len} received)"),
+                        )),
                     };
                     out.extend_from_slice(resp.to_string().as_bytes());
                     out.push(b'\n');

@@ -57,6 +57,7 @@
 //! → {"op":"stats","name":"*"}                  ← {"ok":true,"scope":"cluster",...}       (all shards, merged)
 //! → {"op":"resize","width":4}                  ← {"ok":true,"width":4,"previous":6}
 //! → {"op":"policy","policy":"aimd"}            ← {"ok":true,"policy":"aimd","width":1}
+//! → {"op":"policy","policy":"exp"}             ← {"ok":true,"policy":"exp","cas_policy":"exp"}  (CAS retry policy)
 //! → {"op":"snapshot"}                          ← {"ok":true,"persist":true,"snapshots":[...]}  (persistent servers)
 //! → {"op":"delete","name":"jobs"}              ← {"ok":true,"deleted":"jobs"}
 //! ```
@@ -85,6 +86,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::ObjectManifest;
 use crate::faa::{BatchStats, WidthPolicy};
+use crate::sync::RetryPolicy;
 use crate::util::json::Json;
 pub use client::{CounterHandle, CreateSpec, QueueHandle, RegistryClient};
 #[allow(deprecated)]
@@ -237,6 +239,10 @@ pub struct ServeOpts {
     /// per-shard controller threads; `resize`/`policy` ops still
     /// work).
     pub resize_interval_ms: u64,
+    /// Default CAS retry policy for objects created without a
+    /// `:b<policy>` spec suffix (hot-loop contention management; see
+    /// [`RetryPolicy`]). Swappable per object with the `policy` op.
+    pub cas_policy: RetryPolicy,
     /// Objects pre-created at boot besides the default counter, each
     /// assigned to its owning shard by name hash.
     pub objects: Vec<ObjectManifest>,
@@ -264,6 +270,7 @@ impl Default for ServeOpts {
                 .unwrap_or(WidthPolicy::Fixed(s.aggregators)),
             max_aggregators: s.max_aggregators,
             resize_interval_ms: s.resize_interval_ms,
+            cas_policy: RetryPolicy::parse(&s.cas_policy).unwrap_or_default(),
             objects: s.objects,
             persist: None,
         }
@@ -283,6 +290,7 @@ impl ServeOpts {
             policy: WidthPolicy::Fixed(aggregators),
             max_aggregators: aggregators.max(1),
             resize_interval_ms: 0,
+            cas_policy: RetryPolicy::default(),
             objects: Vec::new(),
             persist: None,
         }
@@ -342,6 +350,7 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
             Registry::new(max_threads),
             workers,
         );
+        shard.registry.set_default_cas_policy(opts.cas_policy);
         if let Some(p) = &opts.persist {
             let dir = std::path::Path::new(&p.data_dir).join(format!("shard-{i}"));
             let log = Arc::new(
@@ -409,6 +418,7 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
             opts.policy,
             opts.max_aggregators.max(opts.aggregators),
             Some(opts.aggregators),
+            None,
             None,
             true,
         )?;
@@ -641,14 +651,27 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
                         .get("policy")
                         .and_then(Json::as_str)
                         .ok_or_else(|| anyhow!("policy needs a policy string"))?;
-                    let policy = WidthPolicy::parse(spec)
-                        .ok_or_else(|| anyhow!("unknown width policy {spec:?}"))?;
-                    let width = entry.set_policy(policy)?;
-                    Ok(Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("policy", Json::str(policy.label())),
-                        ("width", Json::num(width as f64)),
-                    ]))
+                    // The op serves both knobs: width policies
+                    // (fixed/sqrtp/aimd) and CAS retry policies
+                    // (none/const/exp/adaptive). The spellings are
+                    // disjoint, so try width first and fall back.
+                    if let Some(policy) = WidthPolicy::parse(spec) {
+                        let width = entry.set_policy(policy)?;
+                        Ok(Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("policy", Json::str(policy.label())),
+                            ("width", Json::num(width as f64)),
+                        ]))
+                    } else if let Some(policy) = RetryPolicy::parse(spec) {
+                        entry.set_cas_policy(policy);
+                        Ok(Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("policy", Json::str(policy.label())),
+                            ("cas_policy", Json::str(policy.label())),
+                        ]))
+                    } else {
+                        Err(anyhow!("unknown width or CAS retry policy {spec:?}"))
+                    }
                 }
                 other => Err(anyhow!("unknown op {other:?}")),
             }
@@ -994,6 +1017,37 @@ mod tests {
         // Tickets still flow after reconfiguration.
         assert_eq!(tickets.take(2).unwrap(), 0);
         assert_eq!(tickets.read().unwrap(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn cas_policy_over_the_wire() {
+        // Boot default lands on every created object; the `policy` op
+        // accepts CAS retry spellings next to width spellings.
+        let server = serve(&ServeOpts {
+            cas_policy: RetryPolicy::Exp,
+            ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+        })
+        .unwrap();
+        let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+        let stats = tickets.stats().unwrap();
+        assert_eq!(stats.get("cas_policy").and_then(Json::as_str), Some("exp"));
+        // A spec suffix wins over the boot default.
+        let vip = c.create_counter("vip", &CreateSpec::backend("elastic:fixed:2:bconst")).unwrap();
+        let stats = vip.stats().unwrap();
+        assert_eq!(stats.get("cas_policy").and_then(Json::as_str), Some("const"));
+        assert_eq!(stats.get("backend").and_then(Json::as_str), Some("elastic:fixed:2:bconst"));
+        // Live swap through the shared `policy` op; width policies
+        // still parse on the same op.
+        assert_eq!(tickets.set_policy("adaptive").unwrap(), "adaptive");
+        let stats = tickets.stats().unwrap();
+        assert_eq!(stats.get("cas_policy").and_then(Json::as_str), Some("adaptive"));
+        assert_eq!(tickets.set_policy("fixed:1").unwrap(), "fixed-1");
+        assert!(tickets.set_policy("bogus").is_err());
+        // Traffic still flows under the swapped policy.
+        assert_eq!(tickets.take(3).unwrap(), 0);
+        assert_eq!(tickets.read().unwrap(), 3);
         server.shutdown();
     }
 

@@ -39,6 +39,7 @@ use crate::faa::{backend, BackendSpec, BatchStats, ElasticAggFunnel, FetchAddObj
 use crate::queue::{
     make_queue_with_handle, ConcurrentQueue, ElasticIndexFactory, EMPTY_ITEM, PRQ_MAX_ITEM,
 };
+use crate::sync::{CasCtl, RetryPolicy};
 use crate::util::json::Json;
 
 /// The object un-named requests route to (the pre-registry protocol's
@@ -310,6 +311,28 @@ impl ObjectEntry {
         }
     }
 
+    /// Swap the CAS retry policy at runtime: the counter funnel's (or
+    /// queue's) hot-loop pacing plus the §4.4 direct-quota gate's.
+    pub fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.metrics.incr("cas_policy");
+        match &self.body {
+            ObjectBody::Counter(f) => f.set_cas_policy(policy),
+            ObjectBody::Queue { queue, .. } => queue.set_cas_policy(policy),
+        }
+        if let Some(gate) = &self.direct {
+            gate.set_cas_policy(policy);
+        }
+    }
+
+    /// The CAS retry policy in force (`None` for backends with no
+    /// paced CAS loop, e.g. `msq` or `lcrq+hw` queues).
+    pub fn cas_policy(&self) -> Option<RetryPolicy> {
+        match &self.body {
+            ObjectBody::Counter(f) => f.cas_policy(),
+            ObjectBody::Queue { queue, .. } => queue.cas_policy(),
+        }
+    }
+
     /// Swap the width policy at runtime; applies once immediately.
     /// Returns the active width now in force.
     pub fn set_policy(&self, policy: WidthPolicy) -> Result<usize> {
@@ -382,6 +405,9 @@ impl ObjectEntry {
             obj.insert(k.to_string(), Json::num(v as f64));
         }
         obj.insert("avg_batch".to_string(), Json::num(stats.avg_batch_size()));
+        if let Some(p) = self.cas_policy() {
+            obj.insert("cas_policy".to_string(), Json::str(p.label()));
+        }
         match &self.body {
             ObjectBody::Counter(f) => {
                 obj.insert("active_width".to_string(), Json::num(f.active_width() as f64));
@@ -414,6 +440,9 @@ pub struct Registry {
     /// The shard's durability log; set once before the first create
     /// when the service runs with a `data_dir`.
     log: OnceLock<Arc<ShardLog>>,
+    /// Service-wide default CAS retry policy: applied to every new
+    /// object whose backend spec carries no `:b<policy>` suffix.
+    default_cas: CasCtl,
 }
 
 impl Registry {
@@ -422,7 +451,20 @@ impl Registry {
             map: RwLock::new(BTreeMap::new()),
             max_threads: max_threads.max(1),
             log: OnceLock::new(),
+            default_cas: CasCtl::new(RetryPolicy::default()),
         }
+    }
+
+    /// Set the default CAS retry policy new objects are built with.
+    /// Spec-level `:b<policy>` suffixes win over this; already-created
+    /// objects are untouched (swap those with the `policy` wire op).
+    pub fn set_default_cas_policy(&self, policy: RetryPolicy) {
+        self.default_cas.set(policy);
+    }
+
+    /// The default CAS retry policy for new objects.
+    pub fn default_cas_policy(&self) -> RetryPolicy {
+        self.default_cas.get()
     }
 
     /// Attach the shard's durability log. Must happen before any
@@ -462,17 +504,28 @@ impl Registry {
         max_width: usize,
         initial: Option<usize>,
         direct_quota: Option<usize>,
+        cas: Option<RetryPolicy>,
         persist: bool,
     ) -> Result<Arc<ObjectEntry>> {
         let mut spec = BackendSpec::Elastic {
             policy,
             max_width: max_width.max(1),
             direct: None,
+            cas: None,
         };
         if let Some(d) = direct_quota {
             spec = spec.with_direct_quota(d);
         }
+        if let Some(p) = cas {
+            spec = spec.with_cas_policy(p);
+        }
+        // An explicit `:b<policy>` stays visible in the canonical
+        // label (so recovery re-creates it exactly); the service-wide
+        // default applies silently and tracks later default changes
+        // only for objects created after the change.
+        let effective_cas = cas.unwrap_or_else(|| self.default_cas.get());
         let funnel = backend::build_elastic(self.max_threads, policy, max_width.max(1));
+        funnel.set_cas_policy(effective_cas);
         if let Some(w) = initial {
             funnel.resize(w);
         }
@@ -483,7 +536,7 @@ impl Registry {
             backend: spec.label(),
             metrics: Metrics::new(),
             policy: Mutex::new(policy),
-            direct: direct_quota.map(DirectPermits::new),
+            direct: direct_quota.map(|d| DirectPermits::with_policy(d, effective_cas)),
             // The backend label does not carry the elastic capacity,
             // so journal the effective one: recovery re-creates the
             // counter with exactly this ceiling.
@@ -527,7 +580,15 @@ impl Registry {
                          use aggfunnel:<m> or elastic:<policy>"
                     )
                 })?;
-                self.create_counter(name, policy, width, None, spec.direct_quota(), opts.persist)
+                self.create_counter(
+                    name,
+                    policy,
+                    width,
+                    None,
+                    spec.direct_quota(),
+                    spec.cas_policy(),
+                    opts.persist,
+                )
             }
             "queue" => {
                 if opts.direct_quota.is_some() {
@@ -553,6 +614,17 @@ impl Registry {
                 let (queue, elastic) =
                     make_queue_with_handle(backend_spec, self.max_threads, opts.max_width)
                         .ok_or_else(|| anyhow!("unknown queue backend {backend_spec:?}"))?;
+                // `make_queue_with_handle` already applied any spec
+                // `:b<policy>` suffix; without one the service-wide
+                // default takes over (a no-op for queue families with
+                // no paced CAS loop).
+                if index_spec
+                    .and_then(BackendSpec::parse)
+                    .and_then(|s| s.cas_policy())
+                    .is_none()
+                {
+                    queue.set_cas_policy(self.default_cas.get());
+                }
                 let policy = match index_spec.and_then(BackendSpec::parse) {
                     Some(BackendSpec::Elastic { policy, .. }) => policy,
                     _ => WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS),
@@ -782,6 +854,44 @@ mod tests {
         assert_eq!(e3.direct_quota(), None);
         e3.take(0, 1, true).unwrap();
         assert!(e3.stats_json().get("direct_quota").is_none());
+    }
+
+    #[test]
+    fn cas_policy_threads_through_create_and_stats() {
+        let r = Registry::new(2);
+        // A spec `:b<policy>` suffix wins and survives in the label.
+        let e = r.create("c", "counter", "elastic:fixed:2:d1:bexp", plain()).unwrap();
+        assert_eq!(e.backend, "elastic:fixed:2:d1:bexp");
+        assert_eq!(e.cas_policy(), Some(RetryPolicy::Exp));
+        assert_eq!(e.stats_json().get("cas_policy").and_then(Json::as_str), Some("exp"));
+        assert_eq!(e.take(0, 2, true).unwrap(), 0, "paced direct gate still admits");
+
+        // Without a suffix the service default applies — silently, so
+        // the label (and thus the journaled spec) stays unchanged.
+        r.set_default_cas_policy(RetryPolicy::Constant);
+        let d = r.create("d", "counter", "elastic:aimd", plain()).unwrap();
+        assert_eq!(d.backend, "elastic:aimd");
+        assert_eq!(d.cas_policy(), Some(RetryPolicy::Constant));
+
+        // Queue index specs: suffix reaches the rings, the default
+        // covers bare specs, non-paced families expose nothing.
+        let q = r.create("q", "queue", "lcrq+elastic:aimd:bnone", plain()).unwrap();
+        assert_eq!(q.cas_policy(), Some(RetryPolicy::None));
+        let q2 = r.create("q2", "queue", "prq", plain()).unwrap();
+        assert_eq!(q2.cas_policy(), Some(RetryPolicy::Constant));
+        let hwq = r.create("hwq", "queue", "msq", plain()).unwrap();
+        assert_eq!(hwq.cas_policy(), None);
+        assert!(hwq.stats_json().get("cas_policy").is_none());
+
+        // Live swap through the entry; the object keeps working.
+        q.set_cas_policy(RetryPolicy::Adaptive);
+        assert_eq!(q.cas_policy(), Some(RetryPolicy::Adaptive));
+        q.enqueue(0, 1).unwrap();
+        assert_eq!(q.dequeue(1).unwrap(), Some(1));
+        e.set_cas_policy(RetryPolicy::None);
+        assert_eq!(e.cas_policy(), Some(RetryPolicy::None));
+        assert_eq!(e.take(1, 1, false).unwrap(), 2);
+        assert_eq!(e.stats_json().get("cas_policy").and_then(Json::as_str), Some("none"));
     }
 
     #[test]

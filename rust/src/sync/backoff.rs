@@ -1,11 +1,38 @@
-//! Exponential backoff for contended retry loops and wait loops.
+//! Backoff and contention management for contended retry loops.
 //!
-//! Two phases: spin (pause instructions, doubling) then yield to the
-//! OS scheduler. Yielding matters doubly here: the CI host may have
-//! fewer cores than benchmark threads, so a waiter that never yields
-//! can prevent the delegate that would release it from running at all.
+//! Two layers live here:
+//!
+//! * [`Backoff`] — the classic two-phase helper (spin with doubling
+//!   pause counts, then yield to the OS scheduler) used by *wait*
+//!   loops: a waiter that never yields can prevent the delegate that
+//!   would release it from running at all on an oversubscribed host.
+//! * [`RetryPolicy`] / [`CasCtl`] — composable contention management
+//!   for *CAS retry* loops (funnel cell installation, CRQ `Head`/
+//!   `Tail` and slot CAS retries, the `DirectQuota` permit gate),
+//!   after "Lightweight Contention Management for Efficient
+//!   Compare-and-Swap Operations" (Dice, Hendler, Mirsky). Unlike a
+//!   wait loop, a failed CAS proves *someone else* made progress, so
+//!   the right response is to get out of the way proportionally to
+//!   how crowded the site is — not to wait for a specific event.
+//!
+//! The four policies:
+//!
+//! | Policy | Scheme |
+//! |--------|--------|
+//! | `none` | naive retry (the pre-existing behaviour; the A/B baseline) |
+//! | `const` | a fixed pause per failure |
+//! | `exp` | exponential backoff with a hard cap, decorrelated by a seeded per-thread LCG (jitter-free: the same seed always produces the same schedule) |
+//! | `adaptive` | per-site arbitration: pause budget keyed on the *site's* observed failure streak, so a thread arriving at a hot site backs off immediately while a cold site costs nothing |
+//!
+//! The adaptive policy keys on failure **streaks** rather than failure
+//! totals because a streak is a live congestion signal: it rises only
+//! while CASes are actively failing and decays geometrically on every
+//! success, so the pause budget tracks the *current* crowd at the
+//! site, not its history.
 
-use std::sync::atomic::{compiler_fence, Ordering};
+use std::sync::atomic::{compiler_fence, AtomicU32, AtomicU8, Ordering};
+
+use super::padded::CachePadded;
 
 /// Exponential backoff helper.
 #[derive(Debug)]
@@ -68,6 +95,285 @@ impl Backoff {
     }
 }
 
+// ---------------------------------------------------------------------
+// CAS retry policies
+// ---------------------------------------------------------------------
+
+/// Fixed pause count of the `const` policy.
+const CONST_PAUSES: u32 = 32;
+/// Base pause count of the `exp` policy (doubles per failure).
+const EXP_BASE: u32 = 4;
+/// Exponent clamp for the `exp` policy: `EXP_BASE << EXP_CAP_SHIFT`
+/// equals `MAX_PAUSES`, so larger shifts would only overflow.
+const EXP_CAP_SHIFT: u32 = 8;
+/// Hard cap on any computed pause budget (bounded max backoff).
+pub const MAX_PAUSES: u32 = 1 << 10;
+/// Failure-streak saturation point for the `adaptive` policy.
+const STREAK_SATURATION: u32 = 32;
+/// Consecutive failures after which a retry loop also yields the OS
+/// thread — on an oversubscribed host, pure spinning can deschedule
+/// the very thread whose progress would unblock the site.
+const YIELD_AFTER: u32 = 16;
+
+/// A contention-management policy for CAS retry loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetryPolicy {
+    /// Naive retry: no pause at all (the A/B baseline).
+    None,
+    /// A fixed pause per failure.
+    Constant,
+    /// Exponential backoff with cap, decorrelated by a seeded LCG.
+    Exp,
+    /// Per-site arbitration keyed on the observed failure streak.
+    Adaptive,
+}
+
+impl RetryPolicy {
+    /// Every shipped policy, in A/B sweep order.
+    pub const ALL: [RetryPolicy; 4] =
+        [RetryPolicy::None, RetryPolicy::Constant, RetryPolicy::Exp, RetryPolicy::Adaptive];
+
+    /// Parse a wire/spec spelling; `None` on unknown spellings.
+    pub fn parse(s: &str) -> Option<RetryPolicy> {
+        match s.trim() {
+            "none" => Some(RetryPolicy::None),
+            "const" => Some(RetryPolicy::Constant),
+            "exp" => Some(RetryPolicy::Exp),
+            "adaptive" => Some(RetryPolicy::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling, usable as a series label and re-parseable.
+    pub fn label(self) -> &'static str {
+        match self {
+            RetryPolicy::None => "none",
+            RetryPolicy::Constant => "const",
+            RetryPolicy::Exp => "exp",
+            RetryPolicy::Adaptive => "adaptive",
+        }
+    }
+
+    fn from_u8(v: u8) -> RetryPolicy {
+        match v {
+            0 => RetryPolicy::None,
+            1 => RetryPolicy::Constant,
+            2 => RetryPolicy::Exp,
+            _ => RetryPolicy::Adaptive,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            RetryPolicy::None => 0,
+            RetryPolicy::Constant => 1,
+            RetryPolicy::Exp => 2,
+            RetryPolicy::Adaptive => 3,
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    /// The service default (`[service] cas_policy = "adaptive"`).
+    fn default() -> Self {
+        RetryPolicy::Adaptive
+    }
+}
+
+/// A seeded linear congruential generator for decorrelated backoff.
+///
+/// Deliberately *jitter-free*: the same seed always yields the same
+/// pause schedule, so benchmark runs are reproducible and two threads
+/// seeded differently (by tid) decorrelate without shared state.
+#[derive(Clone, Debug)]
+pub struct Lcg {
+    state: u64,
+}
+
+impl Lcg {
+    /// Knuth's MMIX multiplier/increment.
+    const MUL: u64 = 6364136223846793005;
+    const INC: u64 = 1442695040888963407;
+
+    pub fn new(seed: u64) -> Self {
+        // One warm-up step so adjacent seeds diverge immediately.
+        let mut lcg = Self { state: seed ^ 0x9E37_79B9_7F4A_7C15 };
+        lcg.next();
+        lcg
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(Self::MUL).wrapping_add(Self::INC);
+        // High bits are the strong ones in an LCG.
+        self.state >> 16
+    }
+}
+
+/// Pause budget (spin-loop iterations) policy `p` prescribes after
+/// `fails` consecutive failures by this caller at a site whose
+/// observed failure streak is `streak`. Pure — the testable core of
+/// the retry layer. Bounded by [`MAX_PAUSES`] for every input.
+#[inline]
+pub fn pause_budget(policy: RetryPolicy, fails: u32, streak: u32, lcg: &mut Lcg) -> u32 {
+    match policy {
+        RetryPolicy::None => 0,
+        RetryPolicy::Constant => CONST_PAUSES,
+        RetryPolicy::Exp => {
+            // EXP_BASE · 2^fails, capped (the exponent is clamped so
+            // the shift cannot overflow past MAX_PAUSES); decorrelate
+            // into the upper half of the window so concurrent losers
+            // don't re-collide in lockstep.
+            let cap = (EXP_BASE << fails.min(EXP_CAP_SHIFT)).min(MAX_PAUSES);
+            let half = cap / 2;
+            half + (lcg.next() % (half as u64 + 1)) as u32
+        }
+        RetryPolicy::Adaptive => {
+            // Arbitration keyed on the *site's* live congestion: a
+            // quadratic ramp in the failure streak, capped. Cold site
+            // (streak 0) costs nothing.
+            let s = streak.min(STREAK_SATURATION);
+            (s * s).min(MAX_PAUSES)
+        }
+    }
+}
+
+/// Per-site failure-streak statistics (one cache line). The streak
+/// rises by one per failed CAS (saturating) and decays geometrically
+/// (halving) per successful CAS, so it tracks the *current* crowd at
+/// the site.
+pub struct CasSite {
+    streak: CachePadded<AtomicU32>,
+}
+
+impl Default for CasSite {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CasSite {
+    pub fn new() -> Self {
+        Self { streak: CachePadded::new(AtomicU32::new(0)) }
+    }
+
+    /// Record a failed CAS; returns the updated streak.
+    #[inline]
+    pub fn note_fail(&self) -> u32 {
+        // Saturating relaxed increment; precision does not matter, the
+        // value only sizes a pause budget.
+        let prev = self.streak.fetch_add(1, Ordering::Relaxed);
+        if prev >= u32::MAX - 1024 {
+            self.streak.store(STREAK_SATURATION, Ordering::Relaxed);
+            return STREAK_SATURATION;
+        }
+        prev + 1
+    }
+
+    /// Record a successful CAS: the streak halves (monotone decay).
+    /// Write-free when the site is already cold, keeping the
+    /// uncontended fast path read-only.
+    #[inline]
+    pub fn note_ok(&self) {
+        let cur = self.streak.load(Ordering::Relaxed);
+        if cur != 0 {
+            self.streak.store(cur / 2, Ordering::Relaxed);
+        }
+    }
+
+    /// The current failure streak.
+    #[inline]
+    pub fn streak(&self) -> u32 {
+        self.streak.load(Ordering::Relaxed)
+    }
+}
+
+/// Contention control for one hot CAS location: a live-swappable
+/// [`RetryPolicy`] plus the site's [`CasSite`] statistics. Shared by
+/// every thread retrying at the site; create one per object (or per
+/// object family — CRQ rings share their queue's) and start each
+/// loop execution with [`CasCtl::retry`].
+pub struct CasCtl {
+    policy: AtomicU8,
+    site: CasSite,
+}
+
+impl Default for CasCtl {
+    fn default() -> Self {
+        Self::new(RetryPolicy::default())
+    }
+}
+
+impl CasCtl {
+    pub fn new(policy: RetryPolicy) -> Self {
+        Self { policy: AtomicU8::new(policy.as_u8()), site: CasSite::new() }
+    }
+
+    /// Swap the live policy; in-flight loops pick it up on their next
+    /// [`CasCtl::retry`] call.
+    pub fn set(&self, policy: RetryPolicy) {
+        self.policy.store(policy.as_u8(), Ordering::Relaxed);
+    }
+
+    /// The policy currently in force.
+    pub fn get(&self) -> RetryPolicy {
+        RetryPolicy::from_u8(self.policy.load(Ordering::Relaxed))
+    }
+
+    /// The site's current failure streak (observability).
+    pub fn site_streak(&self) -> u32 {
+        self.site.streak()
+    }
+
+    /// Begin one execution of the guarded CAS loop. `seed` decorrelates
+    /// the exp policy's schedule between callers — pass the tid.
+    #[inline]
+    pub fn retry(&self, seed: u64) -> Retry<'_> {
+        Retry { ctl: self, policy: self.get(), fails: 0, lcg: Lcg::new(seed) }
+    }
+}
+
+/// One execution of a policy-guarded CAS loop: call
+/// [`Retry::on_fail`] after each failed attempt and
+/// [`Retry::on_success`] once on the way out.
+pub struct Retry<'a> {
+    ctl: &'a CasCtl,
+    policy: RetryPolicy,
+    fails: u32,
+    lcg: Lcg,
+}
+
+impl Retry<'_> {
+    /// A CAS attempt failed: record it on the site and pause for the
+    /// policy's budget before the caller retries.
+    #[inline]
+    pub fn on_fail(&mut self) {
+        self.fails += 1;
+        let streak = self.ctl.site.note_fail();
+        let budget = pause_budget(self.policy, self.fails, streak, &mut self.lcg);
+        for _ in 0..budget {
+            std::hint::spin_loop();
+        }
+        if self.policy != RetryPolicy::None && self.fails > YIELD_AFTER {
+            // Long streaks on an oversubscribed host: get off the core
+            // so whoever owns the cache line can run.
+            std::thread::yield_now();
+        }
+    }
+
+    /// The loop's CAS succeeded (or the loop exited): decay the site
+    /// streak. Free when the site is cold and no failure happened.
+    #[inline]
+    pub fn on_success(&mut self) {
+        self.ctl.site.note_ok();
+    }
+
+    /// Failures recorded on this execution (tests/observability).
+    pub fn fails(&self) -> u32 {
+        self.fails
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +395,144 @@ mod tests {
         let mut b = Backoff::new();
         for _ in 0..100 {
             b.spin();
+        }
+    }
+
+    #[test]
+    fn policy_labels_roundtrip() {
+        for p in RetryPolicy::ALL {
+            assert_eq!(RetryPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(RetryPolicy::parse("bogus"), None);
+        assert_eq!(RetryPolicy::parse(""), None);
+        assert_eq!(RetryPolicy::parse(" exp "), Some(RetryPolicy::Exp));
+        assert_eq!(RetryPolicy::default(), RetryPolicy::Adaptive);
+    }
+
+    #[test]
+    fn pause_budget_is_bounded_for_every_input() {
+        // Bounded max backoff: no policy, failure count or streak may
+        // prescribe more than MAX_PAUSES iterations.
+        for p in RetryPolicy::ALL {
+            for fails in [0u32, 1, 2, 7, 16, 31, 64, 1_000, u32::MAX] {
+                for streak in [0u32, 1, 5, STREAK_SATURATION, 10 * STREAK_SATURATION, u32::MAX] {
+                    let mut lcg = Lcg::new(42);
+                    let b = pause_budget(p, fails, streak, &mut lcg);
+                    assert!(b <= MAX_PAUSES, "{p:?} fails={fails} streak={streak} -> {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn none_never_pauses_and_exp_grows() {
+        let mut lcg = Lcg::new(7);
+        for fails in 0..40 {
+            assert_eq!(pause_budget(RetryPolicy::None, fails, 99, &mut lcg), 0);
+            assert_eq!(pause_budget(RetryPolicy::Constant, fails, 99, &mut lcg), CONST_PAUSES);
+        }
+        // Exp budgets stay within [cap/2, cap] and the cap doubles.
+        for fails in 0..20 {
+            let cap = (EXP_BASE << fails.min(EXP_CAP_SHIFT)).min(MAX_PAUSES);
+            let b = pause_budget(RetryPolicy::Exp, fails, 0, &mut lcg);
+            assert!(b >= cap / 2 && b <= cap, "fails={fails}: {b} not in [{}, {cap}]", cap / 2);
+        }
+    }
+
+    #[test]
+    fn adaptive_keys_on_site_streak() {
+        let mut lcg = Lcg::new(1);
+        // Cold site: free regardless of this caller's failures.
+        assert_eq!(pause_budget(RetryPolicy::Adaptive, 50, 0, &mut lcg), 0);
+        // Budget is monotone in the streak and saturates.
+        let mut last = 0;
+        for streak in 0..(2 * STREAK_SATURATION) {
+            let b = pause_budget(RetryPolicy::Adaptive, 1, streak, &mut lcg);
+            assert!(b >= last, "streak={streak}: budget regressed {last} -> {b}");
+            last = b;
+        }
+        assert_eq!(last, (STREAK_SATURATION * STREAK_SATURATION).min(MAX_PAUSES));
+    }
+
+    #[test]
+    fn lcg_is_deterministic_per_seed() {
+        let mut a = Lcg::new(0xDEAD);
+        let mut b = Lcg::new(0xDEAD);
+        let mut c = Lcg::new(0xBEEF);
+        let seq_a: Vec<u64> = (0..32).map(|_| a.next()).collect();
+        let seq_b: Vec<u64> = (0..32).map(|_| b.next()).collect();
+        let seq_c: Vec<u64> = (0..32).map(|_| c.next()).collect();
+        assert_eq!(seq_a, seq_b, "same seed must give the same schedule");
+        assert_ne!(seq_a, seq_c, "different seeds must decorrelate");
+        // And so must the exp schedule built on it.
+        let mut la = Lcg::new(3);
+        let mut lb = Lcg::new(3);
+        for fails in 0..16 {
+            assert_eq!(
+                pause_budget(RetryPolicy::Exp, fails, 0, &mut la),
+                pause_budget(RetryPolicy::Exp, fails, 0, &mut lb),
+            );
+        }
+    }
+
+    #[test]
+    fn streak_decay_is_monotone() {
+        let site = CasSite::new();
+        for _ in 0..100 {
+            site.note_fail();
+        }
+        let mut prev = site.streak();
+        assert!(prev > 0);
+        // Each success halves; the sequence is strictly decreasing to 0
+        // and never rebounds.
+        loop {
+            site.note_ok();
+            let cur = site.streak();
+            assert!(cur <= prev, "decay must be monotone: {prev} -> {cur}");
+            if cur == 0 {
+                break;
+            }
+            assert!(cur < prev, "nonzero streak must strictly decay");
+            prev = cur;
+        }
+        site.note_ok();
+        assert_eq!(site.streak(), 0, "cold site stays cold");
+    }
+
+    #[test]
+    fn streak_saturates_instead_of_wrapping() {
+        let site = CasSite::new();
+        site.streak.store(u32::MAX - 1, Ordering::Relaxed);
+        let s = site.note_fail();
+        assert_eq!(s, STREAK_SATURATION);
+        assert_eq!(site.streak(), STREAK_SATURATION);
+    }
+
+    #[test]
+    fn ctl_policy_is_live_swappable() {
+        let ctl = CasCtl::new(RetryPolicy::None);
+        assert_eq!(ctl.get(), RetryPolicy::None);
+        ctl.set(RetryPolicy::Adaptive);
+        assert_eq!(ctl.get(), RetryPolicy::Adaptive);
+        // A loop started after the swap runs under the new policy.
+        let mut retry = ctl.retry(0);
+        retry.on_fail();
+        retry.on_fail();
+        assert_eq!(retry.fails(), 2);
+        retry.on_success();
+        assert!(ctl.site_streak() <= 1, "success decays the streak");
+    }
+
+    #[test]
+    fn retry_smoke_every_policy() {
+        for p in RetryPolicy::ALL {
+            let ctl = CasCtl::new(p);
+            let mut retry = ctl.retry(9);
+            for _ in 0..20 {
+                retry.on_fail();
+            }
+            retry.on_success();
+            assert_eq!(ctl.get(), p);
         }
     }
 }

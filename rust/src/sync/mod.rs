@@ -1,5 +1,6 @@
 //! Low-level synchronization substrate: cache-line padding, exponential
-//! backoff, a 128-bit atomic (the CAS2 LCRQ needs), a tiny spinlock
+//! backoff plus composable CAS retry policies ([`RetryPolicy`] /
+//! [`CasCtl`]), a 128-bit atomic (the CAS2 LCRQ needs), a tiny spinlock
 //! used by fallback paths and tests, and a thin `poll(2)` wrapper for
 //! the service's event-driven connection layer.
 
@@ -10,7 +11,7 @@ pub mod poll;
 pub mod spinlock;
 
 pub use atomic128::AtomicU128;
-pub use backoff::Backoff;
+pub use backoff::{Backoff, CasCtl, CasSite, Lcg, Retry, RetryPolicy};
 pub use padded::CachePadded;
 pub use poll::{PollSet, PollSource};
 pub use spinlock::SpinLock;

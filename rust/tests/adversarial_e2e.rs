@@ -1,0 +1,252 @@
+//! Adversarial end-to-end tests: hostile traffic shapes driven
+//! through the real TCP service and the native funnels, checked
+//! against exact oracles rather than throughput expectations —
+//! Zipfian key skew, connection churn, reader floods, and recorded
+//! runs validated against the linearization oracle under every
+//! shipped CAS retry policy.
+
+use std::sync::Arc;
+
+use aggfunnels::bench::adversarial::Zipf;
+use aggfunnels::config::ObjectManifest;
+use aggfunnels::faa::{AggFunnel, AggFunnelConfig, FetchAddObject};
+use aggfunnels::service::{serve, RegistryClient, ServeOpts, DEFAULT_OBJECT};
+use aggfunnels::sync::RetryPolicy;
+use aggfunnels::util::rng::Rng;
+use aggfunnels::verify::{encode_item, verify_history_against, FifoChecker, OracleBackend};
+
+const BANK: usize = 8;
+
+#[test]
+fn zipfian_skew_is_exact_under_every_policy() {
+    // Zipf-skewed single-ticket takes over a bank of counters, each
+    // counter carrying an explicit `:b<policy>` suffix. The oracle is
+    // dense-range exactness per key: every counter must end at
+    // precisely the number of takes aimed at it — under the hottest
+    // key taking roughly half the traffic, for all four policies.
+    const THREADS: usize = 4;
+    const OPS: usize = 250;
+    for policy in RetryPolicy::ALL {
+        let label = policy.label();
+        let objects: Vec<ObjectManifest> = (0..BANK)
+            .map(|k| {
+                ObjectManifest::new(
+                    format!("c{k}"),
+                    "counter",
+                    format!("elastic:fixed:2:b{label}"),
+                )
+            })
+            .collect();
+        let server =
+            serve(&ServeOpts { objects, ..ServeOpts::fixed("127.0.0.1:0", THREADS + 1, 2) })
+                .unwrap();
+        let addr = Arc::new(server.addr.to_string());
+
+        let workers: Vec<_> = (0..THREADS)
+            .map(|tid| {
+                let addr = Arc::clone(&addr);
+                std::thread::spawn(move || {
+                    let c = RegistryClient::connect(&addr).unwrap();
+                    let bank: Vec<_> =
+                        (0..BANK).map(|k| c.counter(&format!("c{k}")).unwrap()).collect();
+                    let zipf = Zipf::new(BANK, 1.2);
+                    let mut rng = Rng::new(0x5EED ^ (tid as u64).wrapping_mul(0x9E37_79B9));
+                    let mut tally = [0u64; BANK];
+                    for _ in 0..OPS {
+                        let k = zipf.sample(&mut rng);
+                        bank[k].take(1).unwrap();
+                        tally[k] += 1;
+                    }
+                    tally
+                })
+            })
+            .collect();
+        let mut expect = [0u64; BANK];
+        for w in workers {
+            for (k, n) in w.join().unwrap().into_iter().enumerate() {
+                expect[k] += n;
+            }
+        }
+
+        let observer = RegistryClient::connect(&addr).unwrap();
+        let mut total = 0u64;
+        for (k, &want) in expect.iter().enumerate() {
+            let got = observer.counter(&format!("c{k}")).unwrap().read().unwrap();
+            assert_eq!(got, want, "policy {label}: counter c{k} lost or duplicated takes");
+            total += got;
+        }
+        assert_eq!(total, (THREADS * OPS) as u64, "policy {label}: total take count drifted");
+        // The skew actually concentrated: the hottest key dominates.
+        assert!(
+            expect[0] > expect[BANK - 1] * 2,
+            "policy {label}: workload was not skewed ({expect:?})"
+        );
+        server.shutdown();
+    }
+}
+
+#[test]
+fn churn_and_reader_flood_preserve_exact_multisets() {
+    // Connection churn (every burst on a fresh socket) plus a
+    // reader-heavy flood, mixing counter takes/reads with queue
+    // traffic. The oracles are exact: the counter's dense range over
+    // all takes, and the queue's item multiset with per-producer FIFO
+    // order across everything consumed.
+    const THREADS: usize = 4;
+    const BURSTS: usize = 25;
+    const ENQ_PER_BURST: u64 = 2;
+    let server = serve(&ServeOpts {
+        objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+        ..ServeOpts::fixed("127.0.0.1:0", THREADS + 1, 2)
+    })
+    .unwrap();
+    let addr = Arc::new(server.addr.to_string());
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|tid| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xC0FF_EE ^ (tid as u64).wrapping_mul(6271));
+                let mut takes = 0u64;
+                let mut seq = 0u64;
+                let mut consumed = Vec::new();
+                for _ in 0..BURSTS {
+                    // Churn: a fresh connection per burst.
+                    let c = RegistryClient::connect(&addr).unwrap();
+                    let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+                    let jobs = c.queue("jobs").unwrap();
+                    for _ in 0..ENQ_PER_BURST {
+                        jobs.enqueue(encode_item(tid, seq)).unwrap();
+                        seq += 1;
+                    }
+                    // Reader flood: most counter ops are reads.
+                    for _ in 0..8 {
+                        if rng.chance(0.75) {
+                            tickets.read().unwrap();
+                        } else {
+                            tickets.take(1).unwrap();
+                            takes += 1;
+                        }
+                    }
+                    if let Some(item) = jobs.dequeue().unwrap() {
+                        consumed.push(item);
+                    }
+                }
+                (takes, consumed)
+            })
+        })
+        .collect();
+
+    let mut checker = FifoChecker::new();
+    let mut total_takes = 0u64;
+    for w in workers {
+        let (takes, consumed) = w.join().unwrap();
+        total_takes += takes;
+        checker.add_stream(consumed);
+    }
+
+    // Drain whatever the churny consumers left behind, then demand
+    // the exact multiset: every enqueued item exactly once, FIFO per
+    // producer within each consumer stream.
+    let observer = RegistryClient::connect(&addr).unwrap();
+    let jobs = observer.queue("jobs").unwrap();
+    let mut leftovers = Vec::new();
+    while let Some(item) = jobs.dequeue().unwrap() {
+        leftovers.push(item);
+    }
+    checker.add_stream(leftovers);
+    checker.check(THREADS, BURSTS as u64 * ENQ_PER_BURST).unwrap();
+
+    assert_eq!(
+        observer.counter(DEFAULT_OBJECT).unwrap().read().unwrap(),
+        total_takes,
+        "reader flood must not perturb the take count"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn live_policy_swaps_mid_storm_stay_exact() {
+    // Swapping the CAS retry policy over the wire *while* clients
+    // hammer the object must never lose, duplicate, or reorder a
+    // grant — the swap is a pacing change, not a correctness event.
+    const THREADS: usize = 4;
+    const OPS: usize = 200;
+    let server = serve(&ServeOpts::fixed("127.0.0.1:0", THREADS + 2, 2)).unwrap();
+    let addr = Arc::new(server.addr.to_string());
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let tickets =
+                    RegistryClient::connect(&addr).unwrap().counter(DEFAULT_OBJECT).unwrap();
+                let mut got = Vec::with_capacity(OPS);
+                for _ in 0..OPS {
+                    got.push(tickets.take(1).unwrap());
+                }
+                got
+            })
+        })
+        .collect();
+
+    // Sweep through every policy mid-storm.
+    let admin = RegistryClient::connect(&addr).unwrap();
+    let tickets = admin.counter(DEFAULT_OBJECT).unwrap();
+    for policy in RetryPolicy::ALL.iter().cycle().take(12) {
+        assert_eq!(tickets.set_policy(policy.label()).unwrap(), policy.label());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+
+    let mut grants: Vec<u64> = workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    grants.sort_unstable();
+    let expect: Vec<u64> = (0..(THREADS * OPS) as u64).collect();
+    assert_eq!(grants, expect, "grants must stay dense across live policy swaps");
+    server.shutdown();
+}
+
+#[test]
+fn oracle_validates_recorded_runs_under_every_policy() {
+    // The deepest check: a recording funnel under each CAS retry
+    // policy, every recorded return value replayed against the
+    // linearization oracle (Lemma 3.4), plus sum conservation
+    // (Invariant 3.3). Pacing decisions must be invisible to the
+    // linearized history.
+    const THREADS: usize = 4;
+    const OPS: usize = 1_500;
+    for policy in RetryPolicy::ALL {
+        let cfg = AggFunnelConfig::new(THREADS).with_aggregators(3).with_recording();
+        let funnel = Arc::new(AggFunnel::with_config(cfg));
+        funnel.set_cas_policy(policy);
+        assert_eq!(funnel.cas_policy(), Some(policy));
+
+        let handles: Vec<_> = (0..THREADS)
+            .map(|tid| {
+                let f = Arc::clone(&funnel);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(0xFEED ^ (tid as u64).wrapping_mul(0x9E37_79B9));
+                    let mut sum = 0i64;
+                    for _ in 0..OPS {
+                        let mag = rng.range_inclusive(1, 100) as i64;
+                        let delta = if rng.chance(0.5) { mag } else { -mag };
+                        f.fetch_add(tid, delta);
+                        sum += delta;
+                    }
+                    sum
+                })
+            })
+            .collect();
+        let expected_total: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+        assert_eq!(
+            funnel.read(0),
+            expected_total as u64,
+            "policy {}: sum conservation violated",
+            policy.label()
+        );
+        let (history, recorded) = funnel.extract_history();
+        assert_eq!(history.ops(), THREADS * OPS, "policy {}: ops lost", policy.label());
+        verify_history_against(&history, &recorded, &OracleBackend::Cpu)
+            .unwrap_or_else(|e| panic!("policy {}: oracle mismatch: {e:#}", policy.label()));
+    }
+}

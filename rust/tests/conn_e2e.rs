@@ -218,6 +218,139 @@ fn shutdown_under_load_answers_every_decoded_request() {
 }
 
 #[test]
+fn pipelined_batch_surfaces_errors_in_position() {
+    // Regression: a bad op in the middle of a pipelined burst must be
+    // answered with an error *in its position* — the requests behind
+    // it still execute and their replies never shift or vanish.
+    let server = start_event(2);
+    let addr = server.addr.to_string();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    let burst = concat!(
+        "{\"op\":\"take\",\"count\":1}\n",
+        "{\"op\":\"no-such-op\"}\n",
+        "{\"op\":\"take\",\"count\":1}\n",
+        "this is not json\n",
+        "{\"op\":\"take\",\"count\":1}\n",
+    );
+    stream.write_all(burst.as_bytes()).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut replies = Vec::new();
+    for _ in 0..5 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        replies.push(Json::parse(line.trim()).unwrap());
+    }
+    let ok = |r: &Json| r.get("ok").and_then(Json::as_bool) == Some(true);
+    let oks: Vec<bool> = replies.iter().map(ok).collect();
+    assert_eq!(
+        oks,
+        [true, false, true, false, true],
+        "reply polarity must follow request order: {replies:?}"
+    );
+    // The valid takes landed in order around the failures; nothing
+    // was double-executed or skipped.
+    let starts: Vec<u64> =
+        [0usize, 2, 4].iter().map(|&i| replies[i].get("start").and_then(Json::as_u64).unwrap()).collect();
+    assert_eq!(starts, [0, 1, 2], "grants stay dense around in-batch errors");
+
+    // The connection outlives the bad ops: a follow-up on the same
+    // socket still works.
+    stream.write_all(b"{\"op\":\"take\",\"count\":1}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("start").and_then(Json::as_u64), Some(3));
+    server.shutdown();
+}
+
+#[test]
+fn overlong_line_is_answered_in_position_and_framing_recovers() {
+    // Regression: a newline-terminated line past the 1 MiB cap used to
+    // be answered immediately from the I/O thread (jumping the queue)
+    // and killed the read side, dropping every request pipelined
+    // behind it. It must instead produce a protocol error in its
+    // position while the rest of the burst executes normally.
+    let server = start_event(2);
+    let addr = server.addr.to_string();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    // Matches MAX_LINE in service/conn.rs.
+    const CAP: usize = 1 << 20;
+    let mut burst = Vec::new();
+    burst.extend_from_slice(b"{\"op\":\"take\",\"count\":1}\n");
+    burst.extend_from_slice(&vec![b'x'; CAP + 16]);
+    burst.push(b'\n');
+    burst.extend_from_slice(b"{\"op\":\"take\",\"count\":1}\n");
+    stream.write_all(&burst).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut read_json = || {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+    let first = read_json();
+    assert_eq!(first.get("start").and_then(Json::as_u64), Some(0));
+    let err = read_json();
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(
+        err.get("code").and_then(Json::as_str),
+        Some("protocol"),
+        "overlong line must be a typed protocol error: {err:?}"
+    );
+    let third = read_json();
+    assert_eq!(
+        third.get("start").and_then(Json::as_u64),
+        Some(1),
+        "the request behind the overlong line must still execute: {third:?}"
+    );
+    // The newline restored framing, so the connection stays usable.
+    stream.write_all(b"{\"op\":\"take\",\"count\":1}\n").unwrap();
+    assert_eq!(read_json().get("start").and_then(Json::as_u64), Some(2));
+    server.shutdown();
+}
+
+#[test]
+fn overlong_line_discard_mode_recovers_at_next_newline() {
+    // Past the cap with no newline yet: the error reply arrives while
+    // the line is still streaming in, the excess is discarded without
+    // buffering, and the *next* newline restores framing — the same
+    // socket then serves normal requests again.
+    let server = start_event(2);
+    let addr = server.addr.to_string();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    // Matches MAX_LINE in service/conn.rs.
+    const CAP: usize = 1 << 20;
+    stream.write_all(&vec![b'y'; CAP + 1]).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut read_json = || {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+    let err = read_json();
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("protocol"));
+
+    // Terminate the monster line; the request behind it executes.
+    stream.write_all(b"\n{\"op\":\"take\",\"count\":1}\n").unwrap();
+    let resp = read_json();
+    assert_eq!(
+        resp.get("start").and_then(Json::as_u64),
+        Some(0),
+        "framing must recover after the discarded line: {resp:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
 fn capacity_rejection_is_typed_and_distinct_from_transport_errors() {
     // Regression for the eviction split: a connect past `max_conns`
     // comes back as a clean `AtCapacity` (retryable — the rejected
