@@ -11,11 +11,15 @@
 //!   skew, connection churn, reader floods, multi-tenant fairness,
 //!   latency percentiles) against a live served instance, gated on
 //!   dense-range correctness checks.
+//! * [`wire`] — the JSON-vs-binary wire-format sweep: the same
+//!   pipelined batch workload over both framings, measuring
+//!   throughput and bytes per op.
 
 pub mod adversarial;
 pub mod figures;
 pub mod native;
 pub mod service_mix;
+pub mod wire;
 
 use crate::util::json::Json;
 

@@ -1,0 +1,258 @@
+//! The `wire` scenario: JSON line grammar vs. binary framing on the
+//! same pipelined workload.
+//!
+//! Every point starts a real server and drives it with client threads
+//! issuing identical [`RegistryClient::call_many`] batches — takes on
+//! the default counter, byte-payload enqueues and batched dequeues on
+//! a `jobs` queue — so the only variable between the two series is
+//! the wire format the client negotiated. Two figures come out:
+//!
+//! * `w1` (`mops`): end-to-end request throughput. Pipelining is
+//!   identical on both sides, so the gap is decode/encode cost.
+//! * `w2` (`bytes_per_op`): total bytes crossing the socket (both
+//!   directions, from the server's own `bytes_in`/`bytes_out`
+//!   counters) per request — where hex-doubled byte payloads and
+//!   JSON key repetition show up against length-prefixed frames.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::Row;
+use crate::config::ObjectManifest;
+use crate::service::{
+    serve, BinRequest, BinResponse, ConnOpts, Item, RegistryClient, ServeOpts, ServerHandle,
+    DEFAULT_OBJECT,
+};
+use crate::util::json::Json;
+use crate::util::stats::mops;
+
+/// The two wire formats the sweep compares (series labels).
+pub const WIRE_SERIES: [&str; 2] = ["json", "binary"];
+
+/// Bytes per enqueued payload — large enough that hex doubling on the
+/// JSON wire is visible in `bytes_per_op`, small enough to stay a
+/// realistic queue message.
+const PAYLOAD_BYTES: usize = 64;
+
+/// Options for [`run_wire_sweep`].
+#[derive(Clone, Debug)]
+pub struct WireOpts {
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    /// Pipelined requests per `call_many` batch.
+    pub batch: usize,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for WireOpts {
+    fn default() -> Self {
+        Self { clients: vec![1, 2, 4, 8], batch: 16, duration: Duration::from_millis(300) }
+    }
+}
+
+impl WireOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self { clients: vec![2], batch: 8, duration: Duration::from_millis(60) }
+    }
+}
+
+/// One pipelined batch: alternating counter takes and byte-payload
+/// enqueues, with a batched dequeue every fourth slot sized to keep
+/// the queue near-empty (dequeue capacity ≥ enqueues per batch).
+fn build_batch(batch: usize, seq: &mut u64) -> Vec<BinRequest> {
+    let mut reqs = Vec::with_capacity(batch);
+    for k in 0..batch {
+        if k % 4 == 3 {
+            reqs.push(BinRequest::Dequeue { name: "jobs".to_string(), count: 2 });
+        } else if k % 2 == 0 {
+            reqs.push(BinRequest::Take {
+                name: DEFAULT_OBJECT.to_string(),
+                count: 1,
+                priority: false,
+            });
+        } else {
+            let mut payload = Vec::with_capacity(PAYLOAD_BYTES);
+            while payload.len() < PAYLOAD_BYTES {
+                payload.extend_from_slice(&seq.to_le_bytes());
+            }
+            *seq += 1;
+            reqs.push(BinRequest::Enqueue {
+                name: "jobs".to_string(),
+                items: vec![Item::Bytes(payload)],
+            });
+        }
+    }
+    reqs
+}
+
+/// Drive one (protocol, clients) point: identical client threads, a
+/// fresh server, and the server's own byte counters as the traffic
+/// meter. Returns `(mops, bytes_per_op)`. The post-run stats probe
+/// rides the JSON wire and adds a constant few hundred bytes — noise
+/// at any measured op count.
+fn measure_wire(
+    server: ServerHandle,
+    binary: bool,
+    clients: usize,
+    batch: usize,
+    duration: Duration,
+) -> Result<(f64, f64)> {
+    let addr = Arc::new(server.addr.to_string());
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..clients)
+        .map(|i| {
+            let addr = Arc::clone(&addr);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || -> Result<u64> {
+                let c = if binary {
+                    RegistryClient::connect_binary(&addr)?
+                } else {
+                    RegistryClient::connect(&addr)?
+                };
+                let mut ops = 0u64;
+                let mut seq = (i as u64) << 32;
+                while !stop.load(Ordering::Relaxed) {
+                    let reqs = build_batch(batch, &mut seq);
+                    for resp in c.call_many(&reqs)? {
+                        if let BinResponse::Err { code, msg } = resp {
+                            return Err(anyhow!("batched op failed ({code}): {msg}"));
+                        }
+                    }
+                    ops += reqs.len() as u64;
+                }
+                Ok(ops)
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    let mut client_err: Option<anyhow::Error> = None;
+    for w in workers {
+        match w.join() {
+            Ok(Ok(ops)) => total += ops,
+            Ok(Err(e)) => client_err = client_err.or(Some(e)),
+            Err(_) => {
+                client_err =
+                    client_err.or_else(|| Some(anyhow::anyhow!("client thread panicked")));
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    if let Some(e) = client_err {
+        server.shutdown();
+        return Err(e);
+    }
+    let probed = RegistryClient::connect(&addr).and_then(|p| p.cluster_stats());
+    server.shutdown();
+    let cluster = probed?;
+    let bytes: f64 = cluster
+        .get("per_shard")
+        .and_then(Json::as_arr)
+        .map(|shards| {
+            shards
+                .iter()
+                .map(|s| {
+                    s.get("bytes_in").and_then(Json::as_f64).unwrap_or(0.0)
+                        + s.get("bytes_out").and_then(Json::as_f64).unwrap_or(0.0)
+                })
+                .sum()
+        })
+        .unwrap_or(0.0);
+    let bytes_per_op = if total > 0 { bytes / total as f64 } else { 0.0 };
+    Ok((mops(total, elapsed), bytes_per_op))
+}
+
+/// Run the `wire` scenario: the same pipelined batch workload over
+/// the JSON line grammar and the binary framing, one series each.
+/// Emits `w1` (Mops/s) and `w2` (bytes per op, both directions).
+pub fn run_wire_sweep(opts: &WireOpts) -> Result<Vec<Row>> {
+    let batch = opts.batch.max(4);
+    let mut rows = Vec::new();
+    for series in WIRE_SERIES {
+        let binary = series == "binary";
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+                conn: ConnOpts { max_conns: clients + 8, ..ConnOpts::default() },
+                ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+            })
+            .with_context(|| format!("serving the {series} wire for {clients} clients"))?;
+            let (throughput, bytes_per_op) =
+                measure_wire(server, binary, clients, batch, opts.duration)
+                    .with_context(|| format!("{series} wire with {clients} clients"))?;
+            rows.push(Row {
+                figure: "w1",
+                series: series.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: throughput,
+            });
+            rows.push(Row {
+                figure: "w2",
+                series: series.to_string(),
+                threads: clients,
+                metric: "bytes_per_op",
+                value: bytes_per_op,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_wire_series_run_end_to_end() {
+        let opts =
+            WireOpts { clients: vec![2], batch: 8, duration: Duration::from_millis(40) };
+        let rows = run_wire_sweep(&opts).unwrap();
+        for series in WIRE_SERIES {
+            let w1 = rows
+                .iter()
+                .find(|r| r.figure == "w1" && r.series == series)
+                .unwrap_or_else(|| panic!("missing w1/{series}"));
+            assert!(w1.value > 0.0, "{series}: zero wire throughput");
+            let w2 = rows
+                .iter()
+                .find(|r| r.figure == "w2" && r.series == series)
+                .unwrap_or_else(|| panic!("missing w2/{series}"));
+            assert!(w2.value > 0.0, "{series}: no bytes metered");
+        }
+        assert_eq!(rows.len(), 2 * WIRE_SERIES.len());
+    }
+
+    #[test]
+    fn batches_keep_the_queue_bounded() {
+        // Dequeue capacity per batch must cover the enqueues, or a
+        // long sweep grows the queue (and its item table) without
+        // bound. Count both in one built batch.
+        let mut seq = 0u64;
+        let reqs = build_batch(16, &mut seq);
+        let enqueued: usize = reqs
+            .iter()
+            .map(|r| match r {
+                BinRequest::Enqueue { items, .. } => items.len(),
+                _ => 0,
+            })
+            .sum();
+        let dequeue_cap: usize = reqs
+            .iter()
+            .map(|r| match r {
+                BinRequest::Dequeue { count, .. } => *count as usize,
+                _ => 0,
+            })
+            .sum();
+        assert!(enqueued > 0 && dequeue_cap >= enqueued, "{enqueued} vs {dequeue_cap}");
+    }
+}

@@ -182,15 +182,11 @@ pub struct ServiceSettings {
     /// Snapshot rewrite period in milliseconds (`0` = only at boot,
     /// graceful shutdown, and the `snapshot` wire op).
     pub snapshot_interval_ms: u64,
-    /// Connection core: `"event"` (multiplexed poll loop + funnel
-    /// executors, the default) or `"threads"` (legacy
-    /// thread-per-connection with `workers` as the connection cap).
-    pub conn_mode: String,
-    /// Poll-loop threads per shard in event mode (connections are
-    /// distributed across them round-robin).
+    /// Poll-loop threads per shard (accepted connections fan out to
+    /// the least-loaded poller).
     pub io_threads: usize,
-    /// Maximum open connections per shard in event mode; over-limit
-    /// connects get an `at_capacity` reply and a clean close.
+    /// Maximum open connections per shard; over-limit connects get an
+    /// `at_capacity` reply and a clean close.
     pub max_conns: usize,
     /// Backpressure ceiling: decoded-but-undrained requests per shard
     /// before the poll loop stops reading sockets (TCP pushback).
@@ -214,7 +210,6 @@ impl Default for ServiceSettings {
             persist: true,
             fsync_interval_ms: 5,
             snapshot_interval_ms: 60_000,
-            conn_mode: "event".into(),
             io_threads: 1,
             max_conns: 1024,
             max_pending: 4096,
@@ -289,11 +284,9 @@ impl AppConfig {
         sv.snapshot_interval_ms = doc
             .int_or("service.snapshot_interval_ms", sv.snapshot_interval_ms as i64)
             .max(0) as u64;
-        sv.conn_mode = doc.str_or("service.conn_mode", &sv.conn_mode);
-        if sv.conn_mode != "event" && sv.conn_mode != "threads" {
+        if doc.get("service.conn_mode").is_some() {
             return Err(anyhow!(
-                "service.conn_mode must be \"event\" or \"threads\", got {:?}",
-                sv.conn_mode
+                "service.conn_mode was removed: the event core is the only connection core"
             ));
         }
         sv.io_threads = doc.int_or("service.io_threads", sv.io_threads as i64).max(1) as usize;
@@ -560,14 +553,12 @@ mod tests {
     #[test]
     fn connection_settings_apply() {
         let mut c = AppConfig::default();
-        assert_eq!(c.service.conn_mode, "event", "event core is the default");
         assert_eq!(c.service.io_threads, 1);
         assert_eq!(c.service.max_conns, 1024);
         assert_eq!(c.service.max_pending, 4096);
         let doc = TomlDoc::parse(
             r#"
             [service]
-            conn_mode = "threads"
             io_threads = 4
             max_conns = 64
             max_pending = 256
@@ -575,15 +566,14 @@ mod tests {
         )
         .unwrap();
         c.apply_doc(&doc).unwrap();
-        assert_eq!(c.service.conn_mode, "threads");
         assert_eq!(c.service.io_threads, 4);
         assert_eq!(c.service.max_conns, 64);
         assert_eq!(c.service.max_pending, 256);
         let doc = TomlDoc::parse("service.io_threads = 0").unwrap();
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.service.io_threads, 1, "clamped to at least one poll thread");
-        let doc = TomlDoc::parse("service.conn_mode = \"fibers\"").unwrap();
-        assert!(c.apply_doc(&doc).is_err(), "unknown conn_mode rejected");
+        let doc = TomlDoc::parse("service.conn_mode = \"event\"").unwrap();
+        assert!(c.apply_doc(&doc).is_err(), "removed conn_mode key fails fast, not silently");
     }
 
     #[test]

@@ -28,14 +28,13 @@ use aggfunnels::bench::service_mix::{
     run_service_conn, run_service_mix, run_service_persist, run_service_shard, ServiceConnOpts,
     ServiceMixOpts, ServicePersistOpts, ServiceShardOpts,
 };
+use aggfunnels::bench::wire::{run_wire_sweep, WireOpts};
 use aggfunnels::bench::{rows_to_json, rows_to_table, rows_to_tsv};
 use aggfunnels::config::AppConfig;
 use aggfunnels::faa::choose::sqrt_p_aggregators;
 use aggfunnels::faa::WidthPolicy;
 use aggfunnels::runtime::{ContentionRuntime, OracleRuntime};
-use aggfunnels::service::{
-    serve, ConnMode, ConnOpts, CreateSpec, PersistOpts, RegistryClient, ServeOpts,
-};
+use aggfunnels::service::{serve, ConnOpts, CreateSpec, PersistOpts, RegistryClient, ServeOpts};
 use aggfunnels::sim::algos::AlgoSpec;
 use aggfunnels::sync::RetryPolicy;
 use aggfunnels::sim::workloads::{run_faa_point, FaaWorkload};
@@ -84,16 +83,16 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|mix|service-mix|service-shard|persist|conn|adv-skew|adv-churn|adv-read|adv-fair|adv-lat|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|service-shard|persist|conn|wire|adv-skew|adv-churn|adv-read|adv-fair|adv-lat|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
          verify [--threads P] [--m M] [--ops N] [--seed S] [--cpu-oracle]\n  \
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
-         serve [--addr A] [--shards S] [--workers W] [--conn-mode event|threads] [--io-threads N] [--max-conns N] [--max-pending N] [--m M] [--policy P] [--cas-policy C] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
+         serve [--addr A] [--shards S] [--workers W] [--io-threads N] [--max-conns N] [--max-pending N] [--m M] [--policy P] [--cas-policy C] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
          take [--addr A] [--name O] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n  \
          obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B] [--direct-quota D] [--max-width W] [--no-persist]\n  \
-         enqueue --name O --item N [--addr A]\n  \
+         enqueue --name O (--item N | --data HEX) [--addr A]\n  \
          dequeue --name O [--addr A]\n  \
          snapshot [--addr A]\n\n\
          FAA algos:  {FAA_ALGOS:?}\n\
@@ -142,9 +141,9 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
     }
 
     // `all` covers the simulated groups; `service-mix`,
-    // `service-shard`, `persist`, `conn` and the `adv-*` adversarial
-    // sweeps start real servers, so they only run when named
-    // explicitly.
+    // `service-shard`, `persist`, `conn`, `wire` and the `adv-*`
+    // adversarial sweeps start real servers, so they only run when
+    // named explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -193,6 +192,13 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
                 sweep.clients = opts.grid.clone();
             }
             ("conn".to_string(), run_service_conn(&sweep)?)
+        } else if g == "wire" {
+            let mut sweep =
+                if p.has_flag("quick") { WireOpts::quick() } else { WireOpts::default() };
+            if p.get("grid").is_some() {
+                sweep.clients = opts.grid.clone();
+            }
+            ("wire".to_string(), run_wire_sweep(&sweep)?)
         } else if g.starts_with("adv-") {
             let mut adv = if p.has_flag("quick") {
                 AdversarialOpts::quick()
@@ -425,11 +431,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("config", None, "TOML config file ([objects] pre-creates named objects)")
         .opt("addr", None, "listen address (shard i binds port + i)")
         .opt("shards", None, "independent registry shards (name-hash routed)")
-        .opt("workers", None, "funnel executor threads per shard (threads mode: connection cap)")
-        .opt("conn-mode", None, "connection core: event (default) | threads")
-        .opt("io-threads", None, "poll-loop threads per shard (event mode)")
-        .opt("max-conns", None, "max open connections per shard (event mode)")
-        .opt("max-pending", None, "undrained-request backpressure ceiling (event mode)")
+        .opt("workers", None, "funnel executor threads per shard")
+        .opt("io-threads", None, "poll-loop threads per shard")
+        .opt("max-conns", None, "max open connections per shard")
+        .opt("max-pending", None, "undrained-request backpressure ceiling")
         .opt("m", None, "initial aggregators per sign (default counter)")
         .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
         .opt("cas-policy", None, "default CAS retry policy: none | const | exp | adaptive")
@@ -456,10 +461,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     } else {
         None
     };
-    let mode_spec = p.get_or("conn-mode", &cfg.service.conn_mode).to_string();
     let conn = ConnOpts {
-        mode: ConnMode::parse(&mode_spec)
-            .ok_or_else(|| anyhow!("unknown conn mode {mode_spec:?} (event | threads)"))?,
         io_threads: p.parse_or::<usize>("io-threads", cfg.service.io_threads).max(1),
         max_conns: p.parse_or::<usize>("max-conns", cfg.service.max_conns).max(1),
         max_pending: p.parse_or::<usize>("max-pending", cfg.service.max_pending).max(1),
@@ -486,18 +488,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         ),
         None => "in-memory only".to_string(),
     };
-    let capacity = match opts.conn.mode {
-        ConnMode::Event => format!(
-            "{} core, {} executors + {} io thread(s), {} connections each",
-            opts.conn.mode.label(),
-            opts.workers,
-            opts.conn.io_threads,
-            opts.conn.max_conns,
-        ),
-        ConnMode::Threads => {
-            format!("{} core, {} connection slots each", opts.conn.mode.label(), opts.workers)
-        }
-    };
+    let capacity = format!(
+        "event core, {} executors + {} io thread(s), {} connections each",
+        opts.workers, opts.conn.io_threads, opts.conn.max_conns,
+    );
     println!(
         "registry service on {} ({} shard(s) on ports {:?}, {capacity}, \
          policy {}, cas {}, {} boot object(s), {durability}); Ctrl-C to stop",
@@ -608,14 +602,24 @@ fn cmd_enqueue(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("aggfunnels enqueue", "enqueue an item on a served queue")
         .opt("addr", Some("127.0.0.1:7471"), "service address")
         .opt("name", None, "queue object name")
-        .opt("item", None, "item to enqueue (integer < 2^53)");
+        .opt("item", None, "item to enqueue (integer < 2^53)")
+        .opt("data", None, "byte-string item to enqueue, hex-encoded");
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let name = p.get("name").ok_or_else(|| anyhow!("enqueue needs --name"))?;
-    let item: u64 =
-        p.parse_as("item").ok_or_else(|| anyhow!("enqueue needs an integer --item"))?;
     let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
-    client.queue(name)?.enqueue(item)?;
-    println!("{name}: enqueued {item}");
+    match (p.get("data"), p.parse_as::<u64>("item")) {
+        (Some(hex), None) => {
+            let bytes = aggfunnels::service::frame::from_hex(hex)
+                .ok_or_else(|| anyhow!("--data must be an even-length hex string"))?;
+            client.queue(name)?.enqueue_bytes(&bytes)?;
+            println!("{name}: enqueued {} byte(s)", bytes.len());
+        }
+        (None, Some(item)) => {
+            client.queue(name)?.enqueue(item)?;
+            println!("{name}: enqueued {item}");
+        }
+        _ => return Err(anyhow!("enqueue needs exactly one of --item N or --data HEX")),
+    }
     Ok(())
 }
 
@@ -626,8 +630,14 @@ fn cmd_dequeue(args: Vec<String>) -> Result<()> {
     let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
     let name = p.get("name").ok_or_else(|| anyhow!("dequeue needs --name"))?;
     let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
-    match client.queue(name)?.dequeue()? {
-        Some(item) => println!("{name}: dequeued {item}"),
+    match client.queue(name)?.dequeue_item()? {
+        Some(aggfunnels::service::frame::Item::Int(item)) => {
+            println!("{name}: dequeued {item}")
+        }
+        Some(aggfunnels::service::frame::Item::Bytes(bytes)) => {
+            let hex = aggfunnels::service::frame::to_hex(&bytes);
+            println!("{name}: dequeued {} byte(s): {hex}", bytes.len())
+        }
         None => println!("{name}: empty"),
     }
     Ok(())

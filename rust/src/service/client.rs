@@ -29,8 +29,12 @@
 //! `ErrorCode::Io` and evict the cached connection without retrying,
 //! because the request may already have executed server-side.
 //!
-//! The legacy [`TicketClient`] survives as a deprecated shim over
-//! this API for one release.
+//! [`RegistryClient::connect_binary`] negotiates the length-prefixed
+//! binary framing on every connection it opens; the handle APIs are
+//! identical in either mode, and [`RegistryClient::call_many`]
+//! pipelines a slice of [`BinRequest`] values — all requests written
+//! before any response is read — over whichever wire the client
+//! speaks (binary frames, or the JSON line grammar as fallback).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -38,8 +42,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::error::{service_err, ErrorCode};
-use super::registry::DEFAULT_OBJECT;
+use super::error::{code_of, service_err, ErrorCode};
+use super::frame::{self, BinRequest, BinResponse, Item};
 use super::shard::shard_of;
 use super::split_host_port;
 use crate::util::json::Json;
@@ -76,26 +80,102 @@ fn server_error(resp: &Json) -> anyhow::Error {
     service_err(code, msg)
 }
 
-/// One connection to one shard.
+/// One connection to one shard, speaking either the JSON line
+/// grammar or (after negotiation at open) the binary framing.
 struct ClientConn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// True once the binary hello handshake has completed.
+    binary: bool,
+    /// Undecoded bytes ahead of the next binary frame boundary.
+    inbuf: Vec<u8>,
 }
 
 impl ClientConn {
-    fn open(addr: &str) -> Result<ClientConn> {
+    fn open(addr: &str, binary: bool) -> Result<ClientConn> {
         let conn = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         conn.set_nodelay(true).ok();
         let writer = conn.try_clone()?;
-        Ok(ClientConn { reader: BufReader::new(conn), writer })
+        let mut conn =
+            ClientConn { reader: BufReader::new(conn), writer, binary, inbuf: Vec::new() };
+        if binary {
+            conn.negotiate_binary()?;
+        }
+        Ok(conn)
     }
 
-    /// Write one request and read the matching response, skipping any
-    /// pushed `greeting` lines (a sharded server greets every new
-    /// connection with the shard map).
-    fn roundtrip_raw(&mut self, req: &Json) -> Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
-        self.writer.write_all(b"\n")?;
+    /// Send the magic preamble and consume the server's hello frame.
+    /// A sharded server pushes its JSON greeting line (and a full
+    /// server its rejection line) *before* negotiation resolves, so a
+    /// leading `{` byte is read as a pushed line — never the hello,
+    /// whose first byte is its frame's length prefix (well under
+    /// `{` = 0x7B).
+    fn negotiate_binary(&mut self) -> Result<()> {
+        self.writer.write_all(&frame::WIRE_MAGIC)?;
+        loop {
+            let buf = self.reader.fill_buf()?;
+            if buf.is_empty() {
+                return Err(anyhow!("server closed the connection during negotiation"));
+            }
+            if buf[0] != b'{' {
+                break;
+            }
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            let doc = Json::parse(&line).map_err(|e| anyhow!("bad negotiation line: {e}"))?;
+            if doc.get("greeting").and_then(Json::as_bool) == Some(true) {
+                continue;
+            }
+            // A pre-negotiation rejection (connection slots full):
+            // typed so the caller's bounded capacity retry applies.
+            return Err(server_error(&doc));
+        }
+        match self.read_response()? {
+            BinResponse::Json(doc)
+                if Json::parse(&doc)
+                    .ok()
+                    .and_then(|j| j.get("binary").and_then(Json::as_bool))
+                    == Some(true) =>
+            {
+                Ok(())
+            }
+            other => Err(anyhow!("unexpected hello {other:?} from binary negotiation")),
+        }
+    }
+
+    /// Read one complete binary frame payload, buffering through the
+    /// same incremental [`frame::decode_wire_frame`] the server uses.
+    fn read_frame(&mut self) -> Result<Vec<u8>> {
+        loop {
+            match frame::decode_wire_frame(&self.inbuf) {
+                frame::WireDecode::Frame { payload, consumed } => {
+                    self.inbuf.drain(..consumed);
+                    return Ok(payload);
+                }
+                frame::WireDecode::Partial => {
+                    let chunk = self.reader.fill_buf()?;
+                    if chunk.is_empty() {
+                        return Err(anyhow!("server closed the connection"));
+                    }
+                    let n = chunk.len();
+                    self.inbuf.extend_from_slice(chunk);
+                    self.reader.consume(n);
+                }
+                frame::WireDecode::Bad(msg) => return Err(anyhow!("bad frame: {msg}")),
+            }
+        }
+    }
+
+    /// Read and decode one binary response frame.
+    fn read_response(&mut self) -> Result<BinResponse> {
+        let payload = self.read_frame()?;
+        frame::decode_response(&payload).map_err(|e| anyhow!("bad response frame: {e}"))
+    }
+
+    /// Read one JSON response line, skipping pushed `greeting` lines
+    /// (a sharded server greets every new connection with the shard
+    /// map).
+    fn read_json_line(&mut self) -> Result<Json> {
         loop {
             let mut line = String::new();
             if self.reader.read_line(&mut line)? == 0 {
@@ -108,6 +188,135 @@ impl ClientConn {
             return Ok(resp);
         }
     }
+
+    /// Write one JSON request and read the matching response. On a
+    /// binary connection the document travels wrapped in a JSON frame
+    /// and typed error frames fold back into the `{"ok":false,...}`
+    /// shape, so callers never see the difference.
+    fn roundtrip_raw(&mut self, req: &Json) -> Result<Json> {
+        if self.binary {
+            let mut framed = Vec::new();
+            encode_framed(&BinRequest::Json(req.to_string()), &mut framed);
+            self.writer.write_all(&framed)?;
+            return match self.read_response()? {
+                BinResponse::Json(doc) => {
+                    Json::parse(&doc).map_err(|e| anyhow!("bad response: {e}"))
+                }
+                BinResponse::Err { code, msg } => Ok(Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(msg)),
+                    ("code", Json::str(code.as_str())),
+                ])),
+                other => Err(anyhow!("unexpected response {other:?} to a json frame")),
+            };
+        }
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.read_json_line()
+    }
+
+    /// Pipeline a batch: write every request back-to-back, then read
+    /// the responses in order. One syscall's worth of writes and no
+    /// per-request round-trip wait — this is the client half of the
+    /// batching story, feeding the server enough concurrent ops to
+    /// fill funnel batches.
+    fn pipeline(&mut self, reqs: &[&BinRequest]) -> Result<Vec<BinResponse>> {
+        if self.binary {
+            let mut framed = Vec::new();
+            for req in reqs {
+                encode_framed(req, &mut framed);
+            }
+            self.writer.write_all(&framed)?;
+            return reqs.iter().map(|_| self.read_response()).collect();
+        }
+        let mut lines = String::new();
+        for req in reqs {
+            lines.push_str(&req_to_line(req));
+            lines.push('\n');
+        }
+        self.writer.write_all(lines.as_bytes())?;
+        reqs.iter().map(|req| Ok(json_to_resp(req, &self.read_json_line()?))).collect()
+    }
+}
+
+/// Serialize one request as a checksummed wire frame.
+fn encode_framed(req: &BinRequest, out: &mut Vec<u8>) {
+    let mut payload = Vec::new();
+    frame::encode_request(req, &mut payload);
+    frame::encode_frame(&payload, out);
+}
+
+/// The JSON line grammar spelling of a binary request — the fallback
+/// wire for [`RegistryClient::call_many`] on a non-binary client.
+fn req_to_line(req: &BinRequest) -> String {
+    match req {
+        BinRequest::Json(doc) => doc.clone(),
+        BinRequest::Take { name, count, priority } => {
+            let mut pairs = vec![
+                ("op", Json::str("take")),
+                ("name", Json::str(name.clone())),
+                ("count", Json::num(*count as f64)),
+            ];
+            if *priority {
+                pairs.push(("priority", Json::Bool(true)));
+            }
+            Json::obj(pairs).to_string()
+        }
+        BinRequest::Read { name } => {
+            Json::obj(vec![("op", Json::str("read")), ("name", Json::str(name.clone()))])
+                .to_string()
+        }
+        BinRequest::Enqueue { name, items } => Json::obj(vec![
+            ("op", Json::str("enqueue")),
+            ("name", Json::str(name.clone())),
+            ("items", Json::arr(items.iter().map(Item::to_json))),
+        ])
+        .to_string(),
+        BinRequest::Dequeue { name, count } => Json::obj(vec![
+            ("op", Json::str("dequeue")),
+            ("name", Json::str(name.clone())),
+            ("count", Json::num(*count as f64)),
+        ])
+        .to_string(),
+    }
+}
+
+/// Fold a JSON line reply back into the typed response the matching
+/// request would have produced on the binary wire.
+fn json_to_resp(req: &BinRequest, resp: &Json) -> BinResponse {
+    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+        let err = server_error(resp);
+        return BinResponse::Err { code: code_of(&err), msg: err.to_string() };
+    }
+    let missing = |field: &str| BinResponse::Err {
+        code: ErrorCode::Protocol,
+        msg: format!("response missing {field}"),
+    };
+    match req {
+        BinRequest::Json(_) => BinResponse::Json(resp.to_string()),
+        BinRequest::Take { .. } => match resp.get("start").and_then(Json::as_u64) {
+            Some(start) => BinResponse::Start(start),
+            None => missing("start"),
+        },
+        BinRequest::Read { .. } => match resp.get("value").and_then(Json::as_u64) {
+            Some(value) => BinResponse::Value(value),
+            None => missing("value"),
+        },
+        BinRequest::Enqueue { .. } => match resp.get("count").and_then(Json::as_u64) {
+            Some(count) => BinResponse::Enqueued(count as u32),
+            None => missing("count"),
+        },
+        BinRequest::Dequeue { .. } => match resp.get("items").and_then(Json::as_arr) {
+            Some(arr) => {
+                let items: Option<Vec<Item>> = arr.iter().map(Item::from_json).collect();
+                match items {
+                    Some(items) => BinResponse::Items(items),
+                    None => missing("parseable items"),
+                }
+            }
+            None => missing("items"),
+        },
+    }
 }
 
 /// The shared connection core: the shard map plus lazily-opened
@@ -118,16 +327,33 @@ struct ClientCore {
     host: String,
     ports: Vec<u16>,
     conns: Vec<Option<ClientConn>>,
+    /// Negotiate binary framing on every connection this core opens.
+    binary: bool,
 }
 
 impl ClientCore {
-    fn connect(addr: &str) -> Result<ClientCore> {
+    fn connect(addr: &str, binary: bool) -> Result<ClientCore> {
         let (host, _) = split_host_port(addr)?;
         // Bounded retry on capacity rejections, mirroring
         // `roundtrip_on`.
         let mut attempts = 0u32;
         loop {
-            let mut conn = ClientConn::open(addr)?;
+            let mut conn = match ClientConn::open(addr, binary) {
+                Ok(conn) => conn,
+                Err(e) => {
+                    // Pre-negotiation rejections surface as open
+                    // errors on a binary client; retry those within
+                    // the same bound.
+                    if code_of(&e) == ErrorCode::AtCapacity {
+                        attempts += 1;
+                        if attempts < CAPACITY_RETRIES {
+                            std::thread::sleep(CAPACITY_RETRY_DELAY);
+                            continue;
+                        }
+                    }
+                    return Err(e);
+                }
+            };
             let resp = conn.roundtrip_raw(&Json::obj(vec![("op", Json::str("shardmap"))]))?;
             if resp.get("ok").and_then(Json::as_bool) == Some(true)
                 && resp.get("shardmap").and_then(Json::as_bool) == Some(true)
@@ -156,7 +382,7 @@ impl ClientCore {
                     // Per-shard connections open lazily on first use.
                     drop(conn);
                 }
-                return Ok(ClientCore { host, ports, conns });
+                return Ok(ClientCore { host, ports, conns, binary });
             }
             let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
             if err.contains("unknown op") {
@@ -164,7 +390,12 @@ impl ClientCore {
                 // connected port, and the handshake error consumed
                 // above keeps the line stream in sync.
                 let port = conn.writer.peer_addr()?.port();
-                return Ok(ClientCore { host, ports: vec![port], conns: vec![Some(conn)] });
+                return Ok(ClientCore {
+                    host,
+                    ports: vec![port],
+                    conns: vec![Some(conn)],
+                    binary,
+                });
             }
             if is_capacity_rejection(&resp) {
                 attempts += 1;
@@ -186,7 +417,7 @@ impl ClientCore {
         debug_assert!(shard < self.ports.len());
         if self.conns[shard].is_none() {
             let addr = format!("{}:{}", self.host, self.ports[shard]);
-            self.conns[shard] = Some(ClientConn::open(&addr)?);
+            self.conns[shard] = Some(ClientConn::open(&addr, self.binary)?);
         }
         Ok(self.conns[shard].as_mut().unwrap())
     }
@@ -198,7 +429,20 @@ impl ClientCore {
         // already have executed server-side.
         let mut attempts = 0u32;
         loop {
-            let resp = match self.conn_for(shard)?.roundtrip_raw(&req) {
+            let conn = match self.conn_for(shard) {
+                Ok(conn) => conn,
+                Err(e) => {
+                    if code_of(&e) == ErrorCode::AtCapacity {
+                        attempts += 1;
+                        if attempts < CAPACITY_RETRIES {
+                            std::thread::sleep(CAPACITY_RETRY_DELAY);
+                            continue;
+                        }
+                    }
+                    return Err(e);
+                }
+            };
+            let resp = match conn.roundtrip_raw(&req) {
                 Ok(resp) => resp,
                 Err(e) => {
                     // Transport failure (closed socket, bad line):
@@ -231,6 +475,64 @@ impl ClientCore {
     /// Route a named request to its owning shard.
     fn roundtrip(&mut self, name: &str, req: Json) -> Result<Json> {
         self.roundtrip_on(self.shard_for(name), req)
+    }
+
+    /// Pipeline a batch of requests on one shard's connection.
+    /// Per-request failures come back as [`BinResponse::Err`] values;
+    /// the `Result` layer is reserved for transport death (which
+    /// evicts the connection, same policy as `roundtrip_on`).
+    fn pipeline_on(&mut self, shard: usize, reqs: &[&BinRequest]) -> Result<Vec<BinResponse>> {
+        let mut attempts = 0u32;
+        loop {
+            let conn = match self.conn_for(shard) {
+                Ok(conn) => conn,
+                Err(e) => {
+                    if code_of(&e) == ErrorCode::AtCapacity {
+                        attempts += 1;
+                        if attempts < CAPACITY_RETRIES {
+                            std::thread::sleep(CAPACITY_RETRY_DELAY);
+                            continue;
+                        }
+                    }
+                    return Err(e);
+                }
+            };
+            return match conn.pipeline(reqs) {
+                Ok(resps) => Ok(resps),
+                Err(e) => {
+                    self.conns[shard] = None;
+                    Err(service_err(ErrorCode::Io, e.to_string()))
+                }
+            };
+        }
+    }
+
+    /// One data-plane request through the pipeline path, with the
+    /// same bounded capacity retry as `roundtrip_on` (the server
+    /// closes after a capacity rejection, so the connection is
+    /// evicted before redialing).
+    fn call(&mut self, name: &str, req: BinRequest) -> Result<BinResponse> {
+        let shard = self.shard_for(name);
+        let mut attempts = 0u32;
+        loop {
+            let resp = self
+                .pipeline_on(shard, &[&req])?
+                .pop()
+                .expect("pipeline returns one response per request");
+            match resp {
+                BinResponse::Err { code: ErrorCode::AtCapacity, msg } => {
+                    self.conns[shard] = None;
+                    attempts += 1;
+                    if attempts < CAPACITY_RETRIES {
+                        std::thread::sleep(CAPACITY_RETRY_DELAY);
+                        continue;
+                    }
+                    return Err(service_err(ErrorCode::AtCapacity, msg));
+                }
+                BinResponse::Err { code, msg } => return Err(service_err(code, msg)),
+                other => return Ok(other),
+            }
+        }
     }
 }
 
@@ -289,9 +591,51 @@ pub struct RegistryClient {
 
 impl RegistryClient {
     /// Connect and perform the `shardmap` handshake (pre-shard
-    /// servers are detected and served over the dialed port).
+    /// servers are detected and served over the dialed port). Every
+    /// connection speaks the JSON line grammar.
     pub fn connect(addr: &str) -> Result<RegistryClient> {
-        Ok(RegistryClient { core: Arc::new(Mutex::new(ClientCore::connect(addr)?)) })
+        Ok(RegistryClient { core: Arc::new(Mutex::new(ClientCore::connect(addr, false)?)) })
+    }
+
+    /// Connect with binary framing negotiated on every connection
+    /// this client opens. The API is identical to a JSON client;
+    /// data-plane ops travel as typed frames and control-plane JSON
+    /// documents ride inside `OP_JSON` frames.
+    pub fn connect_binary(addr: &str) -> Result<RegistryClient> {
+        Ok(RegistryClient { core: Arc::new(Mutex::new(ClientCore::connect(addr, true)?)) })
+    }
+
+    /// Whether this client negotiated binary framing at connect time.
+    pub fn is_binary(&self) -> bool {
+        self.core.lock().unwrap().binary
+    }
+
+    /// Pipeline a batch of requests: group by owning shard, write
+    /// every request before reading any response, and return the
+    /// responses in request order. Per-request failures come back as
+    /// [`BinResponse::Err`] values so one bad op does not discard its
+    /// batchmates' results; `Err` at the `Result` layer means the
+    /// transport died. Wrapped [`BinRequest::Json`] documents route
+    /// to shard 0 (the control-plane convention).
+    pub fn call_many(&self, reqs: &[BinRequest]) -> Result<Vec<BinResponse>> {
+        let mut core = self.core.lock().unwrap();
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); core.ports.len()];
+        for (i, req) in reqs.iter().enumerate() {
+            let shard = req.name().map_or(0, |name| core.shard_for(name));
+            by_shard[shard].push(i);
+        }
+        let mut out: Vec<Option<BinResponse>> = reqs.iter().map(|_| None).collect();
+        for (shard, idxs) in by_shard.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let batch: Vec<&BinRequest> = idxs.iter().map(|&i| &reqs[i]).collect();
+            let resps = core.pipeline_on(shard, &batch)?;
+            for (&i, resp) in idxs.iter().zip(resps) {
+                out[i] = Some(resp);
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("every request answered")).collect())
     }
 
     /// Number of shards in the connected server's map.
@@ -462,25 +806,42 @@ impl CounterHandle {
     }
 
     fn take_req(&self, count: u64, priority: bool) -> Result<u64> {
-        let mut pairs = vec![
-            ("op", Json::str("take")),
-            ("name", Json::str(self.name.clone())),
-            ("count", Json::num(count as f64)),
-        ];
-        if priority {
-            pairs.push(("priority", Json::Bool(true)));
+        let req = BinRequest::Take { name: self.name.clone(), count, priority };
+        match self.core.lock().unwrap().call(&self.name, req)? {
+            BinResponse::Start(start) => Ok(start),
+            other => Err(anyhow!("unexpected take response {other:?}")),
         }
-        let resp = self.core.lock().unwrap().roundtrip(&self.name, Json::obj(pairs))?;
-        resp.get("start").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing start"))
+    }
+
+    /// Take several ranges in one pipelined batch: one wire write,
+    /// responses read in order, each entry the start of its range.
+    /// The batch lands on the server close enough together to share
+    /// funnel batches instead of paying a round-trip per range.
+    pub fn take_batch(&self, counts: &[u64]) -> Result<Vec<u64>> {
+        let reqs: Vec<BinRequest> = counts
+            .iter()
+            .map(|&count| BinRequest::Take { name: self.name.clone(), count, priority: false })
+            .collect();
+        let refs: Vec<&BinRequest> = reqs.iter().collect();
+        let mut core = self.core.lock().unwrap();
+        let shard = core.shard_for(&self.name);
+        core.pipeline_on(shard, &refs)?
+            .into_iter()
+            .map(|resp| match resp {
+                BinResponse::Start(start) => Ok(start),
+                BinResponse::Err { code, msg } => Err(service_err(code, msg)),
+                other => Err(anyhow!("unexpected take response {other:?}")),
+            })
+            .collect()
     }
 
     /// Read the counter's current value.
     pub fn read(&self) -> Result<u64> {
-        let resp = self.core.lock().unwrap().roundtrip(
-            &self.name,
-            Json::obj(vec![("op", Json::str("read")), ("name", Json::str(self.name.clone()))]),
-        )?;
-        resp.get("value").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing value"))
+        let req = BinRequest::Read { name: self.name.clone() };
+        match self.core.lock().unwrap().call(&self.name, req)? {
+            BinResponse::Value(value) => Ok(value),
+            other => Err(anyhow!("unexpected read response {other:?}")),
+        }
     }
 
     pub fn stats(&self) -> Result<Json> {
@@ -512,36 +873,55 @@ impl QueueHandle {
 
     /// Enqueue `item` (an integer below 2⁵³).
     pub fn enqueue(&self, item: u64) -> Result<()> {
-        self.core
-            .lock()
-            .unwrap()
-            .roundtrip(
-                &self.name,
-                Json::obj(vec![
-                    ("op", Json::str("enqueue")),
-                    ("name", Json::str(self.name.clone())),
-                    ("item", Json::num(item as f64)),
-                ]),
-            )
-            .map(drop)
+        self.enqueue_batch(vec![Item::Int(item)]).map(drop)
     }
 
-    /// Dequeue one item (`None` when empty).
-    pub fn dequeue(&self) -> Result<Option<u64>> {
-        let resp = self.core.lock().unwrap().roundtrip(
-            &self.name,
-            Json::obj(vec![
-                ("op", Json::str("dequeue")),
-                ("name", Json::str(self.name.clone())),
-            ]),
-        )?;
-        if resp.get("empty").and_then(Json::as_bool) == Some(true) {
-            return Ok(None);
+    /// Enqueue a byte-string payload (at most
+    /// [`frame::MAX_ITEM_BYTES`] bytes).
+    pub fn enqueue_bytes(&self, data: &[u8]) -> Result<()> {
+        self.enqueue_batch(vec![Item::Bytes(data.to_vec())]).map(drop)
+    }
+
+    /// Enqueue a batch of items as one wire frame, mapped onto funnel
+    /// batches server-side. Returns the number enqueued (always the
+    /// full batch on success — enqueue is all-or-error per item, and
+    /// the server stops at the first failure).
+    pub fn enqueue_batch(&self, items: Vec<Item>) -> Result<u32> {
+        let req = BinRequest::Enqueue { name: self.name.clone(), items };
+        match self.core.lock().unwrap().call(&self.name, req)? {
+            BinResponse::Enqueued(count) => Ok(count),
+            other => Err(anyhow!("unexpected enqueue response {other:?}")),
         }
-        resp.get("item")
-            .and_then(Json::as_u64)
-            .map(Some)
-            .ok_or_else(|| anyhow!("missing item"))
+    }
+
+    /// Dequeue one integer item (`None` when empty). Fails with a
+    /// typed `Protocol` error when the head of the queue is a
+    /// byte-string payload — use [`dequeue_item`](Self::dequeue_item)
+    /// for mixed-type queues. The item IS consumed in that case.
+    pub fn dequeue(&self) -> Result<Option<u64>> {
+        match self.dequeue_item()? {
+            None => Ok(None),
+            Some(Item::Int(v)) => Ok(Some(v)),
+            Some(Item::Bytes(_)) => Err(service_err(
+                ErrorCode::Protocol,
+                "dequeued a byte-string item; use dequeue_item for byte payloads",
+            )),
+        }
+    }
+
+    /// Dequeue one item of either type (`None` when empty).
+    pub fn dequeue_item(&self) -> Result<Option<Item>> {
+        Ok(self.dequeue_batch(1)?.into_iter().next())
+    }
+
+    /// Dequeue up to `count` items in one wire frame. Returns fewer
+    /// (possibly zero) when the queue drains first.
+    pub fn dequeue_batch(&self, count: u32) -> Result<Vec<Item>> {
+        let req = BinRequest::Dequeue { name: self.name.clone(), count };
+        match self.core.lock().unwrap().call(&self.name, req)? {
+            BinResponse::Items(items) => Ok(items),
+            other => Err(anyhow!("unexpected dequeue response {other:?}")),
+        }
     }
 
     pub fn stats(&self) -> Result<Json> {
@@ -594,124 +974,3 @@ fn set_policy(core: &Arc<Mutex<ClientCore>>, name: &str, policy: &str) -> Result
         .ok_or_else(|| anyhow!("missing policy"))
 }
 
-/// The pre-redesign flat client: every op as a method, `*_on`
-/// duplicates included. A thin shim over [`RegistryClient`], kept for
-/// one release so downstream callers can migrate at leisure.
-#[deprecated(note = "use RegistryClient with CounterHandle/QueueHandle instead")]
-pub struct TicketClient {
-    inner: RegistryClient,
-}
-
-#[allow(deprecated)]
-impl TicketClient {
-    pub fn connect(addr: &str) -> Result<TicketClient> {
-        Ok(TicketClient { inner: RegistryClient::connect(addr)? })
-    }
-
-    pub fn shards(&self) -> usize {
-        self.inner.shards()
-    }
-
-    pub fn shard_ports(&self) -> Vec<u16> {
-        self.inner.shard_ports()
-    }
-
-    pub fn shard_for(&self, name: &str) -> usize {
-        self.inner.shard_for(name)
-    }
-
-    pub fn create(&mut self, name: &str, kind: &str, backend: &str) -> Result<()> {
-        self.inner.create(name, kind, &CreateSpec::backend(backend))
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn create_with(
-        &mut self,
-        name: &str,
-        kind: &str,
-        backend: &str,
-        max_width: Option<u64>,
-        direct_quota: Option<u64>,
-        persist: bool,
-    ) -> Result<()> {
-        let spec = CreateSpec {
-            backend: backend.into(),
-            max_width,
-            direct_quota,
-            persist,
-        };
-        self.inner.create(name, kind, &spec)
-    }
-
-    pub fn snapshot(&mut self) -> Result<Json> {
-        self.inner.snapshot()
-    }
-
-    pub fn delete(&mut self, name: &str) -> Result<()> {
-        self.inner.delete(name)
-    }
-
-    pub fn list(&mut self) -> Result<Vec<(String, String, String)>> {
-        self.inner.list()
-    }
-
-    pub fn enqueue(&mut self, name: &str, item: u64) -> Result<()> {
-        // Handles validate kind on lookup; the shim preserves the old
-        // behaviour of letting the server say "wrong kind", so it
-        // builds handles without the lookup roundtrip.
-        QueueHandle { core: Arc::clone(&self.inner.core), name: name.into() }.enqueue(item)
-    }
-
-    pub fn dequeue(&mut self, name: &str) -> Result<Option<u64>> {
-        QueueHandle { core: Arc::clone(&self.inner.core), name: name.into() }.dequeue()
-    }
-
-    pub fn take_on(&mut self, name: &str, count: u64, priority: bool) -> Result<u64> {
-        let h = CounterHandle { core: Arc::clone(&self.inner.core), name: name.into() };
-        if priority {
-            h.take_priority(count)
-        } else {
-            h.take(count)
-        }
-    }
-
-    pub fn take(&mut self, count: u64, priority: bool) -> Result<u64> {
-        self.take_on(DEFAULT_OBJECT, count, priority)
-    }
-
-    pub fn read_on(&mut self, name: &str) -> Result<u64> {
-        CounterHandle { core: Arc::clone(&self.inner.core), name: name.into() }.read()
-    }
-
-    pub fn read(&mut self) -> Result<u64> {
-        self.read_on(DEFAULT_OBJECT)
-    }
-
-    pub fn stats_on(&mut self, name: &str) -> Result<Json> {
-        self.inner.object_stats(name)
-    }
-
-    pub fn stats(&mut self) -> Result<Json> {
-        self.stats_on(DEFAULT_OBJECT)
-    }
-
-    pub fn cluster_stats(&mut self) -> Result<Json> {
-        self.inner.cluster_stats()
-    }
-
-    pub fn resize_on(&mut self, name: &str, width: u64) -> Result<u64> {
-        resize(&self.inner.core, name, width)
-    }
-
-    pub fn resize(&mut self, width: u64) -> Result<u64> {
-        self.resize_on(DEFAULT_OBJECT, width)
-    }
-
-    pub fn set_policy_on(&mut self, name: &str, policy: &str) -> Result<String> {
-        set_policy(&self.inner.core, name, policy)
-    }
-
-    pub fn set_policy(&mut self, policy: &str) -> Result<String> {
-        self.set_policy_on(DEFAULT_OBJECT, policy)
-    }
-}

@@ -1,21 +1,35 @@
 //! The event-driven connection layer: many sockets, few threads.
 //!
-//! The legacy design (kept behind [`ConnMode::Threads`]) spawns one
-//! handler thread per connection and leases that thread a funnel tid
-//! for the connection's lifetime — so a shard can serve at most
-//! `workers` clients at once, the opposite of the many-client regime
-//! aggregating funnels are built for. This module removes the
-//! ceiling: a small pool of I/O threads polls many non-blocking
-//! sockets (via the `sync`-layer [`PollSet`] wrapper over `poll(2)` —
-//! no tokio/mio), decodes complete request lines into per-connection
-//! pending batches, and a fixed set of **funnel executors** — the
-//! only tid holders, executor `e` owns tid `1 + e` — drains those
-//! batches through the ordinary `handle_request` path. Funnel thread
-//! tables stay sized for `workers + FOREIGN_TIDS + 1` tids no matter
-//! how many thousands of sockets are open, and the more connections
-//! are active, the more ops each executor sweep carries into the
-//! funnels per wake-up — exactly the batch-size regime the paper's
+//! A small pool of I/O threads polls many non-blocking sockets (via
+//! the `sync`-layer [`PollSet`] wrapper over `poll(2)` — no
+//! tokio/mio), decodes complete requests into per-connection pending
+//! batches, and a fixed set of **funnel executors** — the only tid
+//! holders, executor `e` owns tid `1 + e` — drains those batches
+//! through the ordinary request handlers. Funnel thread tables stay
+//! sized for `workers + FOREIGN_TIDS + 1` tids no matter how many
+//! thousands of sockets are open, and the more connections are
+//! active, the more ops each executor sweep carries into the funnels
+//! per wake-up — exactly the batch-size regime the paper's
 //! one-FAA-per-batch amortization wants.
+//!
+//! **Two wire formats per connection, decided by the first bytes.** A
+//! connection that opens with the 8-byte [`frame::WIRE_MAGIC`]
+//! preamble switches to the length-prefixed, checksummed binary
+//! framing ([`frame::decode_wire_frame`]); the server acks with a
+//! `hello` frame advertising `max_frame`, and every later frame maps
+//! one request to one response, pipelined in order. Any other first
+//! byte pins the JSON line protocol forever — byte-for-byte the
+//! pre-binary wire format, since the magic's lead byte `0xA6` can
+//! never begin a JSON request. A corrupt or oversized binary frame
+//! gets one typed `protocol` error frame and a close: once the length
+//! prefix is untrusted the framing cannot resynchronize, unlike a
+//! JSON line stream, which self-heals at the next newline.
+//!
+//! **Accept fan-out.** Thread 0 owns the listener and hands each
+//! accepted socket to the least-loaded I/O thread — fewest pending
+//! decoded ops, then fewest owned connections — so one firehose
+//! client saturates a single poller while quiet connections keep
+//! another thread's full attention.
 //!
 //! Flow control is bounded end to end: at most `max_conns` open
 //! connections per shard (excess connects get a clean `at_capacity`
@@ -44,73 +58,37 @@ use crate::sync::poll::PollSet;
 use crate::util::json::Json;
 
 use super::error::{error_json, service_err, ErrorCode};
+use super::frame;
 use super::ServerState;
-
-/// Which connection core a server runs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ConnMode {
-    /// The multiplexed event-driven core (the default).
-    Event,
-    /// The legacy thread-per-connection core with per-connection tid
-    /// leases (one release's worth of compatibility escape hatch).
-    Threads,
-}
-
-impl ConnMode {
-    pub fn parse(s: &str) -> Option<ConnMode> {
-        match s {
-            "event" => Some(ConnMode::Event),
-            "threads" => Some(ConnMode::Threads),
-            _ => None,
-        }
-    }
-
-    pub fn label(self) -> &'static str {
-        match self {
-            ConnMode::Event => "event",
-            ConnMode::Threads => "threads",
-        }
-    }
-}
 
 /// Connection-layer configuration (per shard).
 #[derive(Clone, Debug)]
 pub struct ConnOpts {
-    pub mode: ConnMode,
-    /// I/O poller threads per shard (event mode only). Thread 0 also
-    /// owns the shard's listener.
+    /// I/O poller threads per shard. Thread 0 also owns the shard's
+    /// listener and fans accepted sockets out by load.
     pub io_threads: usize,
-    /// Open-connection ceiling per shard (event mode only); excess
-    /// connects are rejected with an `at_capacity` error reply.
+    /// Open-connection ceiling per shard; excess connects are
+    /// rejected with an `at_capacity` error reply.
     pub max_conns: usize,
-    /// Decoded-but-unexecuted request ceiling per shard (event mode
-    /// only); beyond it the I/O threads stop reading and TCP
-    /// backpressure reaches the clients.
+    /// Decoded-but-unexecuted request ceiling per shard; beyond it
+    /// the I/O threads stop reading and TCP backpressure reaches the
+    /// clients.
     pub max_pending: usize,
 }
 
 impl Default for ConnOpts {
     fn default() -> Self {
-        ConnOpts { mode: ConnMode::Event, io_threads: 1, max_conns: 1024, max_pending: 4096 }
+        ConnOpts { io_threads: 1, max_conns: 1024, max_pending: 4096 }
     }
 }
 
-impl ConnOpts {
-    /// The event-driven default.
-    pub fn event() -> Self {
-        Self::default()
-    }
-
-    /// The legacy thread-per-connection core.
-    pub fn threads() -> Self {
-        ConnOpts { mode: ConnMode::Threads, ..Self::default() }
-    }
-}
-
-/// Longest accepted request line (1 MiB). A line beyond it is a
-/// protocol error and closes the connection — without a bound one
-/// newline-less client would grow a buffer forever.
-const MAX_LINE: usize = 1 << 20;
+/// Longest accepted JSON request line (1 MiB). A line beyond it is a
+/// protocol error — without a bound one newline-less client would
+/// grow a buffer forever. The binary framing enforces the same bound
+/// per frame ([`frame::MAX_WIRE_FRAME`]; equality is pinned by a
+/// frame test), so switching protocols never changes what a hostile
+/// peer can make the server buffer.
+pub(crate) const MAX_LINE: usize = 1 << 20;
 /// Read chunk size and per-connection read rounds per poll wake-up
 /// (bounded so one firehose connection cannot starve its siblings).
 const READ_CHUNK: usize = 4096;
@@ -135,6 +113,12 @@ pub(super) struct EventQueue {
     /// run queue, so nothing decoded is ever dropped.
     io_live: AtomicUsize,
     next_id: AtomicU64,
+    /// Wire traffic counters (both protocols): request bytes read off
+    /// sockets, and response/greeting/hello bytes queued for write.
+    /// `bytes / ops` is the per-op wire cost the `figures wire` bench
+    /// compares across protocols.
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
 }
 
 impl EventQueue {
@@ -146,6 +130,8 @@ impl EventQueue {
             conn_count: AtomicUsize::new(0),
             io_live: AtomicUsize::new(io_threads.max(1)),
             next_id: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
         }
     }
 
@@ -159,6 +145,50 @@ impl EventQueue {
     pub(super) fn open_conns(&self) -> usize {
         self.conn_count.load(Ordering::Relaxed)
     }
+
+    /// Total request bytes read off this shard's sockets.
+    pub(super) fn bytes_in(&self) -> u64 {
+        self.bytes_in.load(Ordering::Relaxed)
+    }
+
+    /// Total response bytes queued to this shard's sockets.
+    pub(super) fn bytes_out(&self) -> u64 {
+        self.bytes_out.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-I/O-thread load cell, read by the acceptor's fan-out and
+/// updated on the owning thread's hot paths with relaxed atomics.
+pub(super) struct IoLoad {
+    /// Connections owned by (or already routed to) the thread.
+    conns: AtomicUsize,
+    /// Decoded requests from the thread's connections still awaiting
+    /// an executor.
+    pending: AtomicUsize,
+}
+
+impl IoLoad {
+    fn new() -> Self {
+        IoLoad { conns: AtomicUsize::new(0), pending: AtomicUsize::new(0) }
+    }
+}
+
+/// The fan-out decision: the thread with the fewest pending decoded
+/// ops, connection count breaking ties (then the lowest index, which
+/// keeps a single-threaded shard on thread 0). Pending ops lead
+/// because they measure *work in flight* — a thread may own many
+/// quiet connections and still be the right home for the next socket.
+fn least_loaded(loads: &[Arc<IoLoad>]) -> usize {
+    let mut pick = 0usize;
+    let mut best = (usize::MAX, usize::MAX);
+    for (i, load) in loads.iter().enumerate() {
+        let key = (load.pending.load(Ordering::Relaxed), load.conns.load(Ordering::Relaxed));
+        if key < best {
+            best = key;
+            pick = i;
+        }
+    }
+    pick
 }
 
 /// The half of a connection both sides touch: executors append
@@ -169,6 +199,9 @@ impl EventQueue {
 struct ConnShared {
     writer: TcpStream,
     wake: Arc<WakePing>,
+    /// The owning I/O thread's load cell, so executors can retire
+    /// this connection's share of the fan-out pending count.
+    io_load: Arc<IoLoad>,
     /// Bytes written by executors but not yet accepted by the socket.
     out: Mutex<Vec<u8>>,
     /// Decoded requests awaiting execution, in arrival order.
@@ -186,7 +219,7 @@ struct ConnShared {
 /// gets exactly one reply, in the order the requests were sent, even
 /// when some of them are garbage.
 enum Request {
-    /// A complete request line, ready for `handle_request`.
+    /// A complete JSON request line, ready for `handle_request`.
     Line(String),
     /// A line that exceeded [`MAX_LINE`] (bytes seen so far, for the
     /// error reply). The line is dropped through its newline —
@@ -194,6 +227,14 @@ enum Request {
     /// discard mode otherwise — so framing stays intact and the
     /// connection lives on.
     Overlong(usize),
+    /// A complete binary frame payload, ready for `handle_binary`.
+    Frame(Vec<u8>),
+    /// A binary framing violation (bad checksum, oversized length
+    /// prefix, bad negotiation magic). Queued *in position* so every
+    /// pipelined request before it still gets its reply; the reader
+    /// has already stopped, so the typed error frame is the
+    /// connection's last word.
+    BadFrame(String),
 }
 
 impl ConnShared {
@@ -300,11 +341,13 @@ pub(super) fn spawn_event_core(
     let mut wakes = Vec::with_capacity(io_n);
     let mut rxs = Vec::with_capacity(io_n);
     let mut inboxes: Vec<Inbox> = Vec::with_capacity(io_n);
+    let mut loads: Vec<Arc<IoLoad>> = Vec::with_capacity(io_n);
     for _ in 0..io_n {
         let (tx, rx) = wake_pair()?;
         wakes.push(Arc::new(tx));
         rxs.push(rx);
         inboxes.push(Arc::new(Mutex::new(Vec::new())));
+        loads.push(Arc::new(IoLoad::new()));
     }
     let mut threads = Vec::with_capacity(io_n + workers);
     let mut listener = Some(listener);
@@ -319,6 +362,8 @@ pub(super) fn spawn_event_core(
             inbox: Arc::clone(&inboxes[t]),
             inboxes: inboxes.clone(),
             wakes: wakes.clone(),
+            load: Arc::clone(&loads[t]),
+            loads: loads.clone(),
             opts: opts.clone(),
             conns: Vec::new(),
         };
@@ -339,15 +384,27 @@ pub(super) fn spawn_event_core(
 
 type Inbox = Arc<Mutex<Vec<(u64, TcpStream)>>>;
 
+/// The protocol a connection speaks, decided once by its first bytes
+/// and never renegotiated.
+enum Wire {
+    /// No bytes seen yet (or only a proper prefix of the magic).
+    Undecided,
+    /// Newline-framed JSON — any first byte other than the magic's.
+    Json,
+    /// Length-prefixed checksummed frames, after a full magic match.
+    Binary,
+}
+
 /// A connection owned by one I/O thread.
 struct IoConn {
     stream: TcpStream,
-    /// Bytes read but not yet terminated by a newline.
+    /// Bytes read but not yet decoded into a full line or frame.
     buf: Vec<u8>,
-    /// Mid-discard of an overlong line: swallow bytes (unbuffered)
-    /// until the next newline restores framing. The error reply was
-    /// already queued when the cap tripped.
+    /// Mid-discard of an overlong JSON line: swallow bytes
+    /// (unbuffered) until the next newline restores framing. The
+    /// error reply was already queued when the cap tripped.
     discarding: bool,
+    wire: Wire,
     shared: Arc<ConnShared>,
 }
 
@@ -362,6 +419,10 @@ struct IoThread {
     inbox: Inbox,
     inboxes: Vec<Inbox>,
     wakes: Vec<Arc<WakePing>>,
+    /// This thread's load cell (same Arc as `loads[self index]`).
+    load: Arc<IoLoad>,
+    /// Every thread's load cell, for the acceptor's fan-out pick.
+    loads: Vec<Arc<IoLoad>>,
     opts: ConnOpts,
     conns: Vec<IoConn>,
 }
@@ -448,7 +509,11 @@ impl IoThread {
             self.evq.conn_count.fetch_add(1, Ordering::AcqRel);
             metrics.incr("conn_open");
             let id = self.evq.next_id.fetch_add(1, Ordering::Relaxed);
-            let t = (id as usize) % self.inboxes.len();
+            // Fan out by load, and count the routed socket against
+            // its new owner immediately so a burst accepted in one
+            // round spreads instead of piling onto a single pick.
+            let t = least_loaded(&self.loads);
+            self.loads[t].conns.fetch_add(1, Ordering::Relaxed);
             self.inboxes[t].lock().unwrap().push((id, conn));
             if t != 0 {
                 self.wakes[t].wake();
@@ -462,6 +527,7 @@ impl IoThread {
         for (_, stream) in adopted {
             if stream.set_nonblocking(true).is_err() {
                 self.evq.conn_count.fetch_sub(1, Ordering::AcqRel);
+                self.load.conns.fetch_sub(1, Ordering::Relaxed);
                 self.state.shards[self.shard].metrics.incr("conn_closed");
                 continue;
             }
@@ -470,6 +536,7 @@ impl IoThread {
                 Ok(w) => w,
                 Err(_) => {
                     self.evq.conn_count.fetch_sub(1, Ordering::AcqRel);
+                    self.load.conns.fetch_sub(1, Ordering::Relaxed);
                     self.state.shards[self.shard].metrics.incr("conn_closed");
                     continue;
                 }
@@ -477,27 +544,37 @@ impl IoThread {
             let shared = Arc::new(ConnShared {
                 writer,
                 wake: Arc::clone(&self.wake),
+                io_load: Arc::clone(&self.load),
                 out: Mutex::new(Vec::new()),
                 requests: Mutex::new(VecDeque::new()),
                 scheduled: AtomicBool::new(false),
                 read_closed: AtomicBool::new(false),
                 dead: AtomicBool::new(false),
             });
-            // Sharded servers greet on connect (same wire contract as
-            // the legacy core); single-shard servers stay silent.
+            // Sharded servers greet on connect — the one JSON line a
+            // binary-negotiating client must skip before its hello
+            // frame; single-shard servers stay silent.
             if self.state.shards.len() > 1 {
                 let mut greeting =
                     self.state.shardmap_json(self.shard, true).to_string().into_bytes();
                 greeting.push(b'\n');
+                self.evq.bytes_out.fetch_add(greeting.len() as u64, Ordering::Relaxed);
                 shared.send(&greeting);
             }
-            self.conns.push(IoConn { stream, buf: Vec::new(), discarding: false, shared });
+            self.conns.push(IoConn {
+                stream,
+                buf: Vec::new(),
+                discarding: false,
+                wire: Wire::Undecided,
+                shared,
+            });
         }
     }
 
     /// Non-blocking read rounds for one connection: pull what the
-    /// kernel has, split complete lines into the request queue, and
-    /// schedule the connection for an executor.
+    /// kernel has, decode complete requests — JSON lines or binary
+    /// frames, per the connection's negotiated wire — into the
+    /// request queue, and schedule the connection for an executor.
     fn read_conn(&mut self, i: usize) {
         let c = &mut self.conns[i];
         if c.shared.read_closed.load(Ordering::Acquire) || c.shared.dead.load(Ordering::Acquire)
@@ -505,6 +582,7 @@ impl IoThread {
             return;
         }
         let mut chunk = [0u8; READ_CHUNK];
+        let mut got = 0usize;
         for _ in 0..READ_ROUNDS {
             match (&c.stream).read(&mut chunk) {
                 Ok(0) => {
@@ -513,6 +591,7 @@ impl IoThread {
                 }
                 Ok(n) => {
                     c.buf.extend_from_slice(&chunk[..n]);
+                    got += n;
                     if n < READ_CHUNK {
                         break;
                     }
@@ -525,56 +604,143 @@ impl IoThread {
                 }
             }
         }
+        if got > 0 {
+            self.evq.bytes_in.fetch_add(got as u64, Ordering::Relaxed);
+        }
         let mut pushed = 0usize;
         loop {
-            if c.discarding {
-                // The head of the buffer is the tail of an overlong
-                // line (already answered); swallow through its newline.
-                match c.buf.iter().position(|&b| b == b'\n') {
-                    Some(pos) => {
-                        c.buf.drain(..=pos);
-                        c.discarding = false;
+            match c.wire {
+                Wire::Undecided => {
+                    let Some(&first) = c.buf.first() else { break };
+                    if first != frame::WIRE_MAGIC[0] {
+                        // Not the magic's lead byte: this connection
+                        // speaks JSON lines forever. `0xA6` can never
+                        // begin a JSON request, so old clients are
+                        // never misdetected.
+                        c.wire = Wire::Json;
+                        continue;
                     }
-                    None => {
-                        c.buf.clear();
-                        break;
+                    if c.buf.len() < frame::WIRE_MAGIC.len()
+                        && frame::WIRE_MAGIC.starts_with(&c.buf)
+                    {
+                        break; // a proper magic prefix: wait for the rest
                     }
-                }
-            }
-            let Some(pos) = c.buf.iter().position(|&b| b == b'\n') else {
-                if c.buf.len() > MAX_LINE {
-                    // Cap tripped mid-line: queue the error *in
-                    // position* and discard until the next newline —
-                    // requests pipelined behind the oversized line
-                    // still get answered, in order.
+                    if c.buf.starts_with(&frame::WIRE_MAGIC) {
+                        c.buf.drain(..frame::WIRE_MAGIC.len());
+                        c.wire = Wire::Binary;
+                        self.state.shards[self.shard].metrics.incr("conn_binary");
+                        // Ack the switch with a hello frame so the
+                        // client can pipeline knowing the frame cap.
+                        let hello = Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("binary", Json::Bool(true)),
+                            ("max_frame", Json::num(frame::MAX_WIRE_FRAME as f64)),
+                        ]);
+                        let mut payload = Vec::new();
+                        frame::encode_response(
+                            &frame::BinResponse::Json(hello.to_string()),
+                            &mut payload,
+                        );
+                        let mut ack = Vec::new();
+                        frame::encode_frame(&payload, &mut ack);
+                        self.evq.bytes_out.fetch_add(ack.len() as u64, Ordering::Relaxed);
+                        c.shared.send(&ack);
+                        continue;
+                    }
+                    // Lead byte matched the magic but the rest
+                    // diverged: a broken binary client, not a JSON
+                    // one. One typed error, then close.
+                    let seen = &c.buf[..c.buf.len().min(frame::WIRE_MAGIC.len())];
                     c.shared
                         .requests
                         .lock()
                         .unwrap()
-                        .push_back(Request::Overlong(c.buf.len()));
+                        .push_back(Request::BadFrame(format!(
+                            "bad negotiation magic {seen:02x?}"
+                        )));
                     pushed += 1;
                     c.buf.clear();
-                    c.discarding = true;
+                    c.shared.read_closed.store(true, Ordering::Release);
+                    break;
                 }
-                break;
-            };
-            let line: Vec<u8> = c.buf.drain(..=pos).collect();
-            if line.len() > MAX_LINE {
-                // Oversized but newline-terminated within this read:
-                // same in-position error, framing already intact.
-                c.shared.requests.lock().unwrap().push_back(Request::Overlong(line.len() - 1));
-                pushed += 1;
-                continue;
+                Wire::Json => {
+                    if c.discarding {
+                        // The head of the buffer is the tail of an
+                        // overlong line (already answered); swallow
+                        // through its newline.
+                        match c.buf.iter().position(|&b| b == b'\n') {
+                            Some(pos) => {
+                                c.buf.drain(..=pos);
+                                c.discarding = false;
+                                continue;
+                            }
+                            None => {
+                                c.buf.clear();
+                                break;
+                            }
+                        }
+                    }
+                    let Some(pos) = c.buf.iter().position(|&b| b == b'\n') else {
+                        if c.buf.len() > MAX_LINE {
+                            // Cap tripped mid-line: queue the error
+                            // *in position* and discard until the
+                            // next newline — requests pipelined
+                            // behind the oversized line still get
+                            // answered, in order.
+                            c.shared
+                                .requests
+                                .lock()
+                                .unwrap()
+                                .push_back(Request::Overlong(c.buf.len()));
+                            pushed += 1;
+                            c.buf.clear();
+                            c.discarding = true;
+                        }
+                        break;
+                    };
+                    let line: Vec<u8> = c.buf.drain(..=pos).collect();
+                    if line.len() > MAX_LINE {
+                        // Oversized but newline-terminated within
+                        // this read: same in-position error, framing
+                        // already intact.
+                        c.shared
+                            .requests
+                            .lock()
+                            .unwrap()
+                            .push_back(Request::Overlong(line.len() - 1));
+                        pushed += 1;
+                        continue;
+                    }
+                    let text = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+                    if text.trim().is_empty() {
+                        continue;
+                    }
+                    c.shared.requests.lock().unwrap().push_back(Request::Line(text));
+                    pushed += 1;
+                }
+                Wire::Binary => match frame::decode_wire_frame(&c.buf) {
+                    frame::WireDecode::Frame { payload, consumed } => {
+                        c.buf.drain(..consumed);
+                        c.shared.requests.lock().unwrap().push_back(Request::Frame(payload));
+                        pushed += 1;
+                    }
+                    frame::WireDecode::Partial => break,
+                    frame::WireDecode::Bad(msg) => {
+                        // Corrupt length prefix or checksum: the
+                        // stream cannot be re-framed. Stop reading;
+                        // the queued error is the final reply.
+                        c.shared.requests.lock().unwrap().push_back(Request::BadFrame(msg));
+                        pushed += 1;
+                        c.buf.clear();
+                        c.shared.read_closed.store(true, Ordering::Release);
+                        break;
+                    }
+                },
             }
-            let text = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
-            if text.trim().is_empty() {
-                continue;
-            }
-            c.shared.requests.lock().unwrap().push_back(Request::Line(text));
-            pushed += 1;
         }
         if pushed > 0 {
             self.evq.pending_ops.fetch_add(pushed, Ordering::AcqRel);
+            self.load.pending.fetch_add(pushed, Ordering::Relaxed);
             schedule(&self.evq, &c.shared);
         }
     }
@@ -588,6 +754,7 @@ impl IoThread {
                 || (c.shared.read_closed.load(Ordering::Acquire) && c.shared.quiesced());
             if gone {
                 evq.conn_count.fetch_sub(1, Ordering::AcqRel);
+                c.shared.io_load.conns.fetch_sub(1, Ordering::Relaxed);
                 metrics.incr("conn_closed");
             }
             !gone
@@ -654,22 +821,45 @@ fn executor_loop(state: &Arc<ServerState>, shard: usize, tid: usize, evq: &Event
                     // arrival order; a bad op in the middle of a
                     // pipelined batch never shifts or aborts the
                     // replies behind it.
-                    let resp = match req {
+                    match req {
                         Request::Line(line) => {
-                            match super::handle_request(state, shard, tid, line) {
+                            let resp = match super::handle_request(state, shard, tid, line) {
                                 Ok(json) => json,
                                 Err(e) => error_json(&e),
-                            }
+                            };
+                            out.extend_from_slice(resp.to_string().as_bytes());
+                            out.push(b'\n');
                         }
-                        Request::Overlong(len) => error_json(&service_err(
-                            ErrorCode::Protocol,
-                            format!("request line exceeds {MAX_LINE} bytes ({len} received)"),
-                        )),
-                    };
-                    out.extend_from_slice(resp.to_string().as_bytes());
-                    out.push(b'\n');
+                        Request::Overlong(len) => {
+                            let resp = error_json(&service_err(
+                                ErrorCode::Protocol,
+                                format!(
+                                    "request line exceeds {MAX_LINE} bytes ({len} received)"
+                                ),
+                            ));
+                            out.extend_from_slice(resp.to_string().as_bytes());
+                            out.push(b'\n');
+                        }
+                        Request::Frame(payload) => {
+                            let resp = super::handle_binary(state, shard, tid, payload);
+                            frame::encode_frame(&resp, &mut out);
+                        }
+                        Request::BadFrame(msg) => {
+                            let mut payload = Vec::new();
+                            frame::encode_response(
+                                &frame::BinResponse::Err {
+                                    code: ErrorCode::Protocol,
+                                    msg: msg.clone(),
+                                },
+                                &mut payload,
+                            );
+                            frame::encode_frame(&payload, &mut out);
+                        }
+                    }
                 }
                 evq.pending_ops.fetch_sub(lines.len(), Ordering::AcqRel);
+                conn.io_load.pending.fetch_sub(lines.len(), Ordering::Relaxed);
+                evq.bytes_out.fetch_add(out.len() as u64, Ordering::Relaxed);
                 ops += lines.len();
                 conn.send(&out);
             }
@@ -732,12 +922,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn conn_mode_parses_and_labels() {
-        assert_eq!(ConnMode::parse("event"), Some(ConnMode::Event));
-        assert_eq!(ConnMode::parse("threads"), Some(ConnMode::Threads));
-        assert_eq!(ConnMode::parse("fibers"), None);
-        assert_eq!(ConnMode::Event.label(), "event");
-        assert_eq!(ConnMode::Threads.label(), "threads");
+    fn least_loaded_prefers_pending_then_conns_then_index() {
+        let loads: Vec<Arc<IoLoad>> = (0..3).map(|_| Arc::new(IoLoad::new())).collect();
+        // All idle: lowest index wins (a 1-thread shard stays on 0).
+        assert_eq!(least_loaded(&loads), 0);
+        // Pending ops dominate: thread 0 busy decoding, 1 has a pile
+        // of quiet conns, 2 has one conn and nothing pending.
+        loads[0].pending.store(5, Ordering::Relaxed);
+        loads[1].conns.store(10, Ordering::Relaxed);
+        loads[2].conns.store(1, Ordering::Relaxed);
+        assert_eq!(least_loaded(&loads), 2);
+        // Conns break pending ties.
+        loads[2].pending.store(5, Ordering::Relaxed);
+        loads[0].conns.store(2, Ordering::Relaxed);
+        loads[1].pending.store(5, Ordering::Relaxed);
+        assert_eq!(least_loaded(&loads), 2, "ties on pending fall to fewest conns");
     }
 
     #[test]

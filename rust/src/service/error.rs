@@ -6,6 +6,10 @@
 //! releases so old clients that substring-match keep working, while
 //! new clients key decisions (retry on capacity, evict on I/O death)
 //! off the enum instead of prose.
+//!
+//! The binary protocol carries the same enum as a one-byte response
+//! status ([`super::frame::code_to_byte`]) followed by the identical
+//! message text, so an error is the same typed value on either wire.
 
 use std::fmt;
 

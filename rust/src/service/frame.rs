@@ -1,0 +1,882 @@
+//! The length-prefixed, checksummed frame codec shared by the binary
+//! wire protocol and the on-disk WAL, plus the binary request/response
+//! encoding itself.
+//!
+//! One frame is `len (u32 LE) ‖ fnv1a64(payload) (u64 LE) ‖ payload` —
+//! a 12-byte header followed by `len` payload bytes. The WAL has
+//! framed its records this way since durability landed; this module
+//! hoists that codec out of `persist` so the wire speaks the
+//! exact same format, and layers the binary protocol's payload
+//! grammar on top:
+//!
+//! * **Negotiation.** A connection starts in JSON line mode. A client
+//!   whose *first bytes* are [`WIRE_MAGIC`] switches the connection to
+//!   binary framing; the server answers with one hello frame (a
+//!   [`BinResponse::Json`] carrying `{"binary":true,...}`) and every
+//!   subsequent byte in either direction is frames. The magic leads
+//!   with `0xA6` — not printable ASCII, never the first byte of a JSON
+//!   request — so a JSON client can never trip the switch and sees
+//!   byte-for-byte the protocol it always had.
+//! * **Requests** ([`BinRequest`]): one op per frame, correlated with
+//!   responses strictly by order, so clients pipeline freely. The
+//!   batch ops — take `k`, enqueue `[items…]`, dequeue `k` — put a
+//!   whole batch in one frame, which the funnel executors then feed
+//!   into single aggregated passes.
+//! * **Responses** ([`BinResponse`]): a status byte (`0` ok, else the
+//!   [`ErrorCode`] wire byte), an op echo, then op-specific fields.
+//! * **Byte-string items** ([`Item`]): queue payloads are either
+//!   integers (the historical format) or arbitrary byte strings up to
+//!   [`MAX_ITEM_BYTES`]; on the JSON protocol and in WAL records the
+//!   byte form travels as a hex string.
+//!
+//! Decode-time caps make a hostile frame a typed `protocol` error
+//! instead of an allocation: payloads over [`MAX_WIRE_FRAME`] are
+//! rejected from the length prefix alone, batches over
+//! [`MAX_BATCH_ITEMS`] and items over [`MAX_ITEM_BYTES`] are rejected
+//! before any item is materialized.
+
+use super::error::ErrorCode;
+use super::shard::fnv1a64_bytes;
+use crate::util::json::Json;
+
+/// Frame header size: `len (u32 LE) ‖ checksum (u64 LE)`.
+pub const FRAME_HEADER: usize = 12;
+
+/// Maximum accepted WAL frame payload length; a length prefix beyond
+/// this is treated as a torn/corrupt tail, not an allocation request.
+pub const MAX_FRAME_LEN: usize = 1 << 28;
+
+/// Maximum accepted *wire* frame payload length — the binary
+/// equivalent of the JSON protocol's `MAX_LINE` request cap (and
+/// pinned equal to it by a test).
+pub const MAX_WIRE_FRAME: usize = 1 << 20;
+
+/// Most items one batched op may carry (enqueue batch, dequeue
+/// count); larger batches are a typed `protocol` error at decode time.
+pub const MAX_BATCH_ITEMS: usize = 1 << 16;
+
+/// Largest byte-string queue payload, in bytes.
+pub const MAX_ITEM_BYTES: usize = 1 << 16;
+
+/// The 8-byte preamble a binary client sends as its very first bytes.
+/// `0xA6` is not printable ASCII (no JSON request starts with it),
+/// `b'1'` versions the protocol, and the `\r\n` + NUL tail catches
+/// line-ending translation the way PNG's signature does.
+pub const WIRE_MAGIC: [u8; 8] = [0xA6, b'A', b'G', b'F', b'1', b'\r', b'\n', 0x00];
+
+/// Frame checksum: FNV-1a over the payload (the same hash the shard
+/// router uses, so the whole service has one hash function).
+pub fn checksum(payload: &[u8]) -> u64 {
+    fnv1a64_bytes(payload)
+}
+
+/// Append one length-prefixed, checksummed frame to `out`.
+pub fn encode_frame(payload: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a64_bytes(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Decode every complete, checksum-valid frame from the front of
+/// `buf`. Returns the payload slices, the byte length of the valid
+/// prefix, and whether a torn/corrupt tail was cut off. This is the
+/// WAL's batch decoder: it stops at the first bad boundary instead of
+/// erroring, because a torn tail is expected after a crash.
+pub fn decode_frames(buf: &[u8]) -> (Vec<&[u8]>, usize, bool) {
+    let mut payloads = Vec::new();
+    let mut pos = 0usize;
+    while buf.len() - pos >= FRAME_HEADER {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap());
+        if len > MAX_FRAME_LEN || buf.len() - pos - FRAME_HEADER < len {
+            break; // torn tail: length runs past EOF (or is garbage)
+        }
+        let payload = &buf[pos + FRAME_HEADER..pos + FRAME_HEADER + len];
+        if fnv1a64_bytes(payload) != sum {
+            break; // corrupt frame: stop at the last valid boundary
+        }
+        payloads.push(payload);
+        pos += FRAME_HEADER + len;
+    }
+    let torn = pos != buf.len();
+    (payloads, pos, torn)
+}
+
+/// One step of incremental wire-side frame decoding.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WireDecode {
+    /// A complete frame: its payload, plus the total bytes (header
+    /// included) to drain from the buffer.
+    Frame { payload: Vec<u8>, consumed: usize },
+    /// Not enough buffered bytes yet — read more.
+    Partial,
+    /// Framing violation (oversized length prefix or checksum
+    /// mismatch). Unlike the WAL's torn tail, a live peer producing
+    /// this is broken or hostile; there is no resync point, so the
+    /// connection must answer a typed `protocol` error and close.
+    Bad(String),
+}
+
+/// Try to decode one frame from the front of a connection's read
+/// buffer, enforcing the [`MAX_WIRE_FRAME`] cap from the length
+/// prefix alone (a hostile header never causes an allocation).
+pub fn decode_wire_frame(buf: &[u8]) -> WireDecode {
+    if buf.len() < FRAME_HEADER {
+        return WireDecode::Partial;
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len > MAX_WIRE_FRAME {
+        return WireDecode::Bad(format!(
+            "frame of {len} bytes exceeds the {MAX_WIRE_FRAME}-byte limit"
+        ));
+    }
+    if buf.len() - FRAME_HEADER < len {
+        return WireDecode::Partial;
+    }
+    let sum = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let payload = &buf[FRAME_HEADER..FRAME_HEADER + len];
+    if fnv1a64_bytes(payload) != sum {
+        return WireDecode::Bad("frame checksum mismatch".to_string());
+    }
+    WireDecode::Frame { payload: payload.to_vec(), consumed: FRAME_HEADER + len }
+}
+
+// ---------------------------------------------------------------------
+// Queue items
+// ---------------------------------------------------------------------
+
+/// A queue payload: the historical small-integer form, or an
+/// arbitrary byte string (stored behind a per-object item table so
+/// the lock-free rings keep trading in small integers). In JSON —
+/// wire responses and WAL records alike — an `Int` is a number and
+/// `Bytes` is a hex string, which is unambiguous because items were
+/// numbers-only before byte payloads existed.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Item {
+    /// An integer item (subject to the backend's item-range limits).
+    Int(u64),
+    /// A byte-string payload, at most [`MAX_ITEM_BYTES`] long.
+    Bytes(Vec<u8>),
+}
+
+impl Item {
+    /// The integer value, if this is an `Int` item.
+    pub fn as_int(&self) -> Option<u64> {
+        match self {
+            Item::Int(v) => Some(*v),
+            Item::Bytes(_) => None,
+        }
+    }
+
+    /// JSON form: `Int` → number, `Bytes` → hex string.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Item::Int(v) => Json::num(*v as f64),
+            Item::Bytes(b) => Json::str(to_hex(b)),
+        }
+    }
+
+    /// Parse the JSON form back ([`Item::to_json`]'s inverse).
+    pub fn from_json(v: &Json) -> Option<Item> {
+        if let Some(n) = v.as_u64() {
+            return Some(Item::Int(n));
+        }
+        v.as_str().and_then(from_hex).map(Item::Bytes)
+    }
+}
+
+impl From<u64> for Item {
+    fn from(v: u64) -> Item {
+        Item::Int(v)
+    }
+}
+
+/// Lower-case hex encoding of `bytes`.
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xF) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Decode a hex string ([`to_hex`]'s inverse); `None` on odd length
+/// or non-hex characters.
+pub fn from_hex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let digits = s.as_bytes();
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in digits.chunks(2) {
+        let hi = (pair[0] as char).to_digit(16)?;
+        let lo = (pair[1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------
+// Binary requests
+// ---------------------------------------------------------------------
+
+/// Request opcode: the rest of the payload is a JSON document (the
+/// control-plane escape hatch — create/delete/list/stats/… reuse the
+/// JSON grammar inside one frame).
+pub const OP_JSON: u8 = 0x00;
+/// Request opcode: take `count` tickets from a counter.
+pub const OP_TAKE: u8 = 0x01;
+/// Request opcode: read a counter without advancing it.
+pub const OP_READ: u8 = 0x02;
+/// Request opcode: enqueue a batch of items onto a queue.
+pub const OP_ENQUEUE: u8 = 0x03;
+/// Request opcode: dequeue up to `count` items from a queue.
+pub const OP_DEQUEUE: u8 = 0x04;
+
+/// Item tag inside enqueue/dequeue payloads: a `u64 LE` integer.
+pub const TAG_INT: u8 = 0;
+/// Item tag inside enqueue/dequeue payloads: `u32 LE` length + bytes.
+pub const TAG_BYTES: u8 = 1;
+
+/// One decoded binary request (one frame payload).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BinRequest {
+    /// A JSON control-plane document, verbatim.
+    Json(String),
+    /// `take`: `count` tickets from counter `name`; `priority` uses
+    /// the Fetch&AddDirect fast path.
+    Take {
+        /// Counter object name.
+        name: String,
+        /// Tickets to take.
+        count: u64,
+        /// Use the direct (funnel-bypassing) path.
+        priority: bool,
+    },
+    /// `read`: the counter's current value, without advancing it.
+    Read {
+        /// Counter object name.
+        name: String,
+    },
+    /// `enqueue`: push `items` onto queue `name`, in order, as one
+    /// funnel-batched frame.
+    Enqueue {
+        /// Queue object name.
+        name: String,
+        /// Items, oldest-enqueued first.
+        items: Vec<Item>,
+    },
+    /// `dequeue`: pop up to `count` items from queue `name`.
+    Dequeue {
+        /// Queue object name.
+        name: String,
+        /// Maximum items to pop (the response may carry fewer).
+        count: u32,
+    },
+}
+
+impl BinRequest {
+    fn op(&self) -> u8 {
+        match self {
+            BinRequest::Json(_) => OP_JSON,
+            BinRequest::Take { .. } => OP_TAKE,
+            BinRequest::Read { .. } => OP_READ,
+            BinRequest::Enqueue { .. } => OP_ENQUEUE,
+            BinRequest::Dequeue { .. } => OP_DEQUEUE,
+        }
+    }
+
+    /// The object name a data-plane request routes by (`None` for
+    /// wrapped JSON documents, which carry their name inside the
+    /// document and are routed by the caller).
+    pub fn name(&self) -> Option<&str> {
+        match self {
+            BinRequest::Json(_) => None,
+            BinRequest::Take { name, .. }
+            | BinRequest::Read { name }
+            | BinRequest::Enqueue { name, .. }
+            | BinRequest::Dequeue { name, .. } => Some(name),
+        }
+    }
+}
+
+fn put_name(name: &str, out: &mut Vec<u8>) {
+    debug_assert!(name.len() <= u8::MAX as usize, "names are validated to 64 chars");
+    out.push(name.len() as u8);
+    out.extend_from_slice(name.as_bytes());
+}
+
+fn put_item(item: &Item, out: &mut Vec<u8>) {
+    match item {
+        Item::Int(v) => {
+            out.push(TAG_INT);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        Item::Bytes(b) => {
+            out.push(TAG_BYTES);
+            out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            out.extend_from_slice(b);
+        }
+    }
+}
+
+/// Serialize a request into a frame *payload* (no header; wrap with
+/// [`encode_frame`] before writing to a socket).
+pub fn encode_request(req: &BinRequest, out: &mut Vec<u8>) {
+    out.push(req.op());
+    match req {
+        BinRequest::Json(doc) => out.extend_from_slice(doc.as_bytes()),
+        BinRequest::Take { name, count, priority } => {
+            put_name(name, out);
+            out.extend_from_slice(&count.to_le_bytes());
+            out.push(u8::from(*priority));
+        }
+        BinRequest::Read { name } => put_name(name, out),
+        BinRequest::Enqueue { name, items } => {
+            put_name(name, out);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for item in items {
+                put_item(item, out);
+            }
+        }
+        BinRequest::Dequeue { name, count } => {
+            put_name(name, out);
+            out.extend_from_slice(&count.to_le_bytes());
+        }
+    }
+}
+
+/// A bounds-checked cursor over one frame payload; every read that
+/// runs past the end becomes a protocol error message, never a panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!("truncated frame: {what} needs {n} more byte(s)"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.bytes(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
+    }
+
+    fn name(&mut self) -> Result<String, String> {
+        let len = self.u8("name length")? as usize;
+        let raw = self.bytes(len, "object name")?;
+        String::from_utf8(raw.to_vec()).map_err(|_| "object name is not UTF-8".to_string())
+    }
+
+    fn item(&mut self) -> Result<Item, String> {
+        match self.u8("item tag")? {
+            TAG_INT => Ok(Item::Int(self.u64("integer item")?)),
+            TAG_BYTES => {
+                let len = self.u32("byte-item length")? as usize;
+                if len > MAX_ITEM_BYTES {
+                    return Err(format!(
+                        "byte item of {len} bytes exceeds the {MAX_ITEM_BYTES}-byte limit"
+                    ));
+                }
+                Ok(Item::Bytes(self.bytes(len, "byte item")?.to_vec()))
+            }
+            tag => Err(format!("unknown item tag {tag:#04x}")),
+        }
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!("{} trailing byte(s) after the request", self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+/// Parse one frame payload into a request, enforcing every batch cap
+/// at decode time: take counts above [`super::MAX_TAKE_COUNT`],
+/// batches above [`MAX_BATCH_ITEMS`], and items above
+/// [`MAX_ITEM_BYTES`] all fail here with a protocol-error message,
+/// before any allocation sized by attacker-controlled fields.
+pub fn decode_request(payload: &[u8]) -> Result<BinRequest, String> {
+    let mut cur = Cursor::new(payload);
+    let req = match cur.u8("opcode")? {
+        OP_JSON => {
+            let rest = &payload[cur.pos..];
+            let doc = std::str::from_utf8(rest)
+                .map_err(|_| "JSON request is not UTF-8".to_string())?
+                .to_string();
+            return Ok(BinRequest::Json(doc));
+        }
+        OP_TAKE => {
+            let name = cur.name()?;
+            let count = cur.u64("take count")?;
+            if count > super::MAX_TAKE_COUNT {
+                return Err(format!(
+                    "count {count} exceeds the per-request limit {}",
+                    super::MAX_TAKE_COUNT
+                ));
+            }
+            let priority = cur.u8("take flags")? & 1 != 0;
+            BinRequest::Take { name, count, priority }
+        }
+        OP_READ => BinRequest::Read { name: cur.name()? },
+        OP_ENQUEUE => {
+            let name = cur.name()?;
+            let n = cur.u32("enqueue batch size")? as usize;
+            if n > MAX_BATCH_ITEMS {
+                return Err(format!(
+                    "enqueue batch of {n} items exceeds the {MAX_BATCH_ITEMS}-item limit"
+                ));
+            }
+            let mut items = Vec::new();
+            for _ in 0..n {
+                items.push(cur.item()?);
+            }
+            BinRequest::Enqueue { name, items }
+        }
+        OP_DEQUEUE => {
+            let name = cur.name()?;
+            let count = cur.u32("dequeue count")?;
+            if count == 0 {
+                return Err("dequeue count must be positive".to_string());
+            }
+            if count as usize > MAX_BATCH_ITEMS {
+                return Err(format!(
+                    "dequeue count {count} exceeds the {MAX_BATCH_ITEMS}-item limit"
+                ));
+            }
+            BinRequest::Dequeue { name, count }
+        }
+        op => return Err(format!("unknown opcode {op:#04x}")),
+    };
+    cur.finish()?;
+    Ok(req)
+}
+
+// ---------------------------------------------------------------------
+// Binary responses
+// ---------------------------------------------------------------------
+
+/// Response status byte for success; any other value is an
+/// [`ErrorCode`] wire byte (see [`code_to_byte`]).
+pub const STATUS_OK: u8 = 0;
+
+/// [`ErrorCode`] → response status byte (never [`STATUS_OK`]).
+pub fn code_to_byte(code: ErrorCode) -> u8 {
+    match code {
+        ErrorCode::NoSuchObject => 1,
+        ErrorCode::WrongKind => 2,
+        ErrorCode::AtCapacity => 3,
+        ErrorCode::ItemTooLarge => 4,
+        ErrorCode::QuotaExceeded => 5,
+        ErrorCode::Protocol => 6,
+        ErrorCode::Io => 7,
+    }
+}
+
+/// Response status byte → [`ErrorCode`] ([`code_to_byte`]'s inverse).
+pub fn byte_to_code(b: u8) -> Option<ErrorCode> {
+    Some(match b {
+        1 => ErrorCode::NoSuchObject,
+        2 => ErrorCode::WrongKind,
+        3 => ErrorCode::AtCapacity,
+        4 => ErrorCode::ItemTooLarge,
+        5 => ErrorCode::QuotaExceeded,
+        6 => ErrorCode::Protocol,
+        7 => ErrorCode::Io,
+        _ => return None,
+    })
+}
+
+/// One binary response (one frame payload): `status ‖ op ‖ fields`
+/// on success, `status ‖ message` on error. Responses answer requests
+/// strictly in order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BinResponse {
+    /// A typed error: the code that would appear in the JSON
+    /// protocol's `"code"` field, plus the human-readable message.
+    Err {
+        /// The typed error code.
+        code: ErrorCode,
+        /// The error message (the JSON protocol's `"error"` field).
+        msg: String,
+    },
+    /// A JSON control-plane response document, verbatim.
+    Json(String),
+    /// `take` succeeded: the start of the dispensed ticket range.
+    Start(u64),
+    /// `read` succeeded: the counter's current value.
+    Value(u64),
+    /// `enqueue` succeeded: how many items were enqueued.
+    Enqueued(u32),
+    /// `dequeue` succeeded: the popped items (fewer than requested —
+    /// possibly none — when the queue ran empty).
+    Items(Vec<Item>),
+}
+
+/// Serialize a response into a frame *payload* (no header).
+pub fn encode_response(resp: &BinResponse, out: &mut Vec<u8>) {
+    match resp {
+        BinResponse::Err { code, msg } => {
+            out.push(code_to_byte(*code));
+            out.extend_from_slice(msg.as_bytes());
+        }
+        BinResponse::Json(doc) => {
+            out.push(STATUS_OK);
+            out.push(OP_JSON);
+            out.extend_from_slice(doc.as_bytes());
+        }
+        BinResponse::Start(start) => {
+            out.push(STATUS_OK);
+            out.push(OP_TAKE);
+            out.extend_from_slice(&start.to_le_bytes());
+        }
+        BinResponse::Value(value) => {
+            out.push(STATUS_OK);
+            out.push(OP_READ);
+            out.extend_from_slice(&value.to_le_bytes());
+        }
+        BinResponse::Enqueued(n) => {
+            out.push(STATUS_OK);
+            out.push(OP_ENQUEUE);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        BinResponse::Items(items) => {
+            out.push(STATUS_OK);
+            out.push(OP_DEQUEUE);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for item in items {
+                put_item(item, out);
+            }
+        }
+    }
+}
+
+/// Parse one frame payload into a response ([`encode_response`]'s
+/// inverse).
+pub fn decode_response(payload: &[u8]) -> Result<BinResponse, String> {
+    let mut cur = Cursor::new(payload);
+    let status = cur.u8("status")?;
+    if status != STATUS_OK {
+        let code = byte_to_code(status)
+            .ok_or_else(|| format!("unknown response status {status:#04x}"))?;
+        let msg = std::str::from_utf8(&payload[cur.pos..])
+            .map_err(|_| "error message is not UTF-8".to_string())?
+            .to_string();
+        return Ok(BinResponse::Err { code, msg });
+    }
+    let resp = match cur.u8("response op")? {
+        OP_JSON => {
+            let doc = std::str::from_utf8(&payload[cur.pos..])
+                .map_err(|_| "JSON response is not UTF-8".to_string())?
+                .to_string();
+            return Ok(BinResponse::Json(doc));
+        }
+        OP_TAKE => BinResponse::Start(cur.u64("take start")?),
+        OP_READ => BinResponse::Value(cur.u64("read value")?),
+        OP_ENQUEUE => BinResponse::Enqueued(cur.u32("enqueued count")?),
+        OP_DEQUEUE => {
+            let n = cur.u32("item count")? as usize;
+            if n > MAX_BATCH_ITEMS {
+                return Err(format!(
+                    "response batch of {n} items exceeds the {MAX_BATCH_ITEMS}-item limit"
+                ));
+            }
+            let mut items = Vec::new();
+            for _ in 0..n {
+                items.push(cur.item()?);
+            }
+            BinResponse::Items(items)
+        }
+        op => return Err(format!("unknown response op {op:#04x}")),
+    };
+    cur.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn wire_frame_cap_matches_the_json_line_cap() {
+        // The binary frame limit is the MAX_LINE-equivalent by design;
+        // a drift between them would give one protocol a different
+        // request ceiling than the other.
+        assert_eq!(MAX_WIRE_FRAME, super::super::conn::MAX_LINE);
+    }
+
+    #[test]
+    fn magic_cannot_prefix_a_json_request() {
+        assert!(!WIRE_MAGIC[0].is_ascii(), "first magic byte must be outside ASCII");
+        assert_eq!(WIRE_MAGIC.len(), 8);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        assert_eq!(to_hex(&[]), "");
+        assert_eq!(to_hex(&[0x00, 0xAB, 0xFF]), "00abff");
+        assert_eq!(from_hex("00abff"), Some(vec![0x00, 0xAB, 0xFF]));
+        assert_eq!(from_hex("0"), None, "odd length");
+        assert_eq!(from_hex("zz"), None, "non-hex digits");
+        prop::check("hex roundtrip", |case| {
+            let bytes: Vec<u8> = case.vec_of(|r| r.below(256) as u8);
+            crate::prop_assert_eq!(from_hex(&to_hex(&bytes)), Some(bytes));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn item_json_roundtrip() {
+        use crate::util::json::Json;
+        let items = vec![Item::Int(0), Item::Int(1 << 50), Item::Bytes(b"hello \xff".to_vec())];
+        for item in items {
+            let j = item.to_json();
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(Item::from_json(&reparsed), Some(item));
+        }
+        assert_eq!(Item::from_json(&Json::Bool(true)), None);
+    }
+
+    fn rand_item(r: &mut Rng) -> Item {
+        if r.below(2) == 0 {
+            Item::Int(r.below(1 << 50))
+        } else {
+            Item::Bytes((0..r.below(48)).map(|_| r.below(256) as u8).collect())
+        }
+    }
+
+    fn rand_request(r: &mut Rng) -> BinRequest {
+        match r.below(5) {
+            0 => BinRequest::Json("{\"op\":\"list\"}".to_string()),
+            1 => BinRequest::Take {
+                name: "tickets".into(),
+                count: r.below(1 << 30),
+                priority: r.below(2) == 0,
+            },
+            2 => BinRequest::Read { name: "tickets".into() },
+            3 => {
+                let items = (0..r.below(6)).map(|_| rand_item(r)).collect();
+                BinRequest::Enqueue { name: "jobs".into(), items }
+            }
+            _ => BinRequest::Dequeue { name: "jobs".into(), count: 1 + r.below(64) as u32 },
+        }
+    }
+
+    fn rand_response(r: &mut Rng) -> BinResponse {
+        match r.below(6) {
+            0 => BinResponse::Err {
+                code: super::super::error::ErrorCode::NoSuchObject,
+                msg: "no object named \"x\"".into(),
+            },
+            1 => BinResponse::Json("{\"ok\":true}".to_string()),
+            2 => BinResponse::Start(r.below(1 << 50)),
+            3 => BinResponse::Value(r.below(1 << 50)),
+            4 => BinResponse::Enqueued(r.below(1 << 16) as u32),
+            _ => BinResponse::Items((0..r.below(6)).map(|_| rand_item(r)).collect()),
+        }
+    }
+
+    #[test]
+    fn request_codec_roundtrip_property() {
+        prop::check("request roundtrip", |case| {
+            let req = rand_request(case.rng);
+            let mut payload = Vec::new();
+            encode_request(&req, &mut payload);
+            let back = decode_request(&payload).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(req, back);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn response_codec_roundtrip_property() {
+        prop::check("response roundtrip", |case| {
+            let resp = rand_response(case.rng);
+            let mut payload = Vec::new();
+            encode_response(&resp, &mut payload);
+            let back = decode_response(&payload).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(resp, back);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_code_bytes_roundtrip_and_never_collide_with_ok() {
+        use super::super::error::ErrorCode::*;
+        for code in [NoSuchObject, WrongKind, AtCapacity, ItemTooLarge, QuotaExceeded, Protocol, Io]
+        {
+            let b = code_to_byte(code);
+            assert_ne!(b, STATUS_OK, "{code:?} must not encode as OK");
+            assert_eq!(byte_to_code(b), Some(code));
+        }
+        assert_eq!(byte_to_code(0), None);
+        assert_eq!(byte_to_code(0xFF), None);
+    }
+
+    #[test]
+    fn decode_request_enforces_caps() {
+        // Oversized take count.
+        let mut payload = Vec::new();
+        encode_request(
+            &BinRequest::Take { name: "t".into(), count: u64::MAX, priority: false },
+            &mut payload,
+        );
+        assert!(decode_request(&payload).unwrap_err().contains("per-request limit"));
+
+        // Oversized declared enqueue batch: rejected from the count
+        // field alone, before any item decodes.
+        let mut payload = Vec::new();
+        payload.push(OP_ENQUEUE);
+        payload.push(1);
+        payload.push(b'q');
+        payload.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_request(&payload).unwrap_err().contains("item limit"));
+
+        // Oversized declared byte item: rejected from its length field.
+        let mut payload = Vec::new();
+        payload.push(OP_ENQUEUE);
+        payload.push(1);
+        payload.push(b'q');
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.push(TAG_BYTES);
+        payload.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_request(&payload).unwrap_err().contains("byte item"));
+
+        // Zero and oversized dequeue counts.
+        let mut payload = Vec::new();
+        encode_request(&BinRequest::Dequeue { name: "q".into(), count: 0 }, &mut payload);
+        assert!(decode_request(&payload).unwrap_err().contains("positive"));
+
+        // Truncated take: field reads past the payload end.
+        let mut payload = Vec::new();
+        encode_request(
+            &BinRequest::Take { name: "t".into(), count: 3, priority: false },
+            &mut payload,
+        );
+        payload.truncate(payload.len() - 4);
+        assert!(decode_request(&payload).unwrap_err().contains("truncated"));
+
+        // Trailing garbage after a well-formed request.
+        let mut payload = Vec::new();
+        encode_request(&BinRequest::Read { name: "t".into() }, &mut payload);
+        payload.push(0xEE);
+        assert!(decode_request(&payload).unwrap_err().contains("trailing"));
+
+        // Unknown opcode.
+        assert!(decode_request(&[0x7F]).unwrap_err().contains("unknown opcode"));
+    }
+
+    #[test]
+    fn wire_decoder_handles_partials_corruption_and_oversize() {
+        let mut frame = Vec::new();
+        encode_frame(b"payload-bytes", &mut frame);
+
+        // Every strict prefix is Partial, never an error.
+        for cut in 0..frame.len() {
+            assert_eq!(
+                decode_wire_frame(&frame[..cut]),
+                WireDecode::Partial,
+                "prefix of {cut} bytes"
+            );
+        }
+        match decode_wire_frame(&frame) {
+            WireDecode::Frame { payload, consumed } => {
+                assert_eq!(payload, b"payload-bytes");
+                assert_eq!(consumed, frame.len());
+            }
+            other => panic!("expected a frame, got {other:?}"),
+        }
+
+        // An oversized length prefix is rejected without buffering.
+        let mut huge = ((MAX_WIRE_FRAME + 1) as u32).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(decode_wire_frame(&huge), WireDecode::Bad(_)));
+
+        // A flipped payload bit fails the checksum.
+        let mut corrupt = frame.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x01;
+        assert!(matches!(decode_wire_frame(&corrupt), WireDecode::Bad(_)));
+    }
+
+    #[test]
+    fn wire_and_wal_codecs_agree_property() {
+        // The tentpole claim: one frame format. Frames produced by the
+        // shared encoder decode identically through the WAL's batch
+        // decoder and the wire's incremental decoder, and corruption
+        // is caught by both.
+        prop::check("wire/WAL codec agreement", |case| {
+            let payloads: Vec<Vec<u8>> =
+                case.vec_of(|r| (0..r.below(40)).map(|_| r.below(256) as u8).collect());
+            let mut stream = Vec::new();
+            for p in &payloads {
+                encode_frame(p, &mut stream);
+            }
+            // WAL batch decode sees every payload.
+            let (wal, consumed, torn) = decode_frames(&stream);
+            crate::prop_assert_eq!(wal.len(), payloads.len());
+            crate::prop_assert_eq!(consumed, stream.len());
+            crate::prop_assert!(!torn, "clean stream reported torn");
+            // Incremental wire decode sees the same payloads.
+            let mut pos = 0usize;
+            let mut wire: Vec<Vec<u8>> = Vec::new();
+            loop {
+                match decode_wire_frame(&stream[pos..]) {
+                    WireDecode::Frame { payload, consumed } => {
+                        wire.push(payload);
+                        pos += consumed;
+                    }
+                    WireDecode::Partial => break,
+                    WireDecode::Bad(e) => return Err(format!("wire decoder rejected: {e}")),
+                }
+            }
+            crate::prop_assert_eq!(pos, stream.len());
+            crate::prop_assert_eq!(wire, payloads);
+            // Corrupting any single byte of a non-empty stream makes
+            // both decoders stop short of consuming it all.
+            if !stream.is_empty() {
+                let victim = case.rng.below(stream.len() as u64) as usize;
+                let mut bad = stream.clone();
+                bad[victim] ^= 0x40;
+                let (_, wal_len, wal_torn) = decode_frames(&bad);
+                let wire_clean = {
+                    let mut pos = 0usize;
+                    loop {
+                        match decode_wire_frame(&bad[pos..]) {
+                            WireDecode::Frame { consumed, .. } => pos += consumed,
+                            WireDecode::Partial => break pos == bad.len(),
+                            WireDecode::Bad(_) => break false,
+                        }
+                    }
+                };
+                crate::prop_assert!(
+                    wal_torn || wal_len < bad.len(),
+                    "WAL decoder consumed a corrupted stream"
+                );
+                crate::prop_assert!(!wire_clean, "wire decoder consumed a corrupted stream");
+            }
+            Ok(())
+        });
+    }
+}

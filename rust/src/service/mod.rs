@@ -26,9 +26,12 @@
 //! fixed set of funnel-executor threads — the only tid holders —
 //! drains the decoded request batches, so the number of concurrent
 //! clients is bounded by `max_conns` (default 1024 per shard), not by
-//! `workers`. The legacy thread-per-connection core, which leases a
-//! funnel tid per connection and rejects connects beyond `workers`,
-//! remains available behind [`ConnMode::Threads`] for one release.
+//! `workers`. Accepted sockets fan out to the least-loaded I/O
+//! thread, and each connection speaks either the JSON line protocol
+//! (the default — byte-for-byte the pre-binary wire format) or, after
+//! an 8-byte magic preamble, the length-prefixed binary framing
+//! defined in [`frame`]: batched ops that map one frame onto one
+//! funnel batch, byte-string queue payloads, and typed error status.
 //! Requests flagged `priority` use `Fetch&AddDirect` (§4.4) subject
 //! to the object's configurable direct-thread quota `d`: at most `d`
 //! priority callers ride `Main` concurrently, the rest are demoted to
@@ -39,9 +42,10 @@
 //! clients branch on codes — retry `at_capacity`, surface
 //! `no_such_object` — instead of grepping messages.
 //!
-//! Wire protocol: one JSON object per line. `name` defaults to the
-//! boot counter `"tickets"`; items must be integers below 2⁵³ (JSON
-//! numbers are doubles).
+//! JSON wire protocol: one JSON object per line. `name` defaults to
+//! the boot counter `"tickets"`; integer items must stay below 2⁵³
+//! (JSON numbers are doubles), byte-string items travel hex-encoded
+//! in `data` (single) or as strings inside `items` (batch).
 //!
 //! ```text
 //! → {"op":"take","count":3}                    ← {"ok":true,"start":17,"count":3}
@@ -51,7 +55,10 @@
 //! → {"op":"create","name":"jobs","kind":"queue","backend":"lcrq+elastic"}
 //! → {"op":"create","name":"vip","kind":"counter","direct_quota":2}
 //! → {"op":"enqueue","name":"jobs","item":7}    ← {"ok":true}
+//! → {"op":"enqueue","name":"jobs","data":"00ff"}  ← {"ok":true}                            (byte payload, hex)
+//! → {"op":"enqueue","name":"jobs","items":[7,"ff"]} ← {"count":2,"ok":true}                (batch)
 //! → {"op":"dequeue","name":"jobs"}             ← {"ok":true,"item":7}
+//! → {"op":"dequeue","name":"jobs","count":8}   ← {"count":3,"items":["00ff",7,"ff"],...}   (batch, ≤ 8 items)
 //! → {"op":"list"}                              ← {"ok":true,"count":2,"objects":[...]}   (all shards, sorted)
 //! → {"op":"stats","name":"jobs"}               ← {"ok":true,...counters...}
 //! → {"op":"stats","name":"*"}                  ← {"ok":true,"scope":"cluster",...}       (all shards, merged)
@@ -72,6 +79,7 @@
 pub mod client;
 pub mod conn;
 pub mod error;
+pub mod frame;
 pub mod metrics;
 pub mod persist;
 pub mod registry;
@@ -80,7 +88,7 @@ pub mod shard;
 use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -89,10 +97,9 @@ use crate::faa::{BatchStats, WidthPolicy};
 use crate::sync::RetryPolicy;
 use crate::util::json::Json;
 pub use client::{CounterHandle, CreateSpec, QueueHandle, RegistryClient};
-#[allow(deprecated)]
-pub use client::TicketClient;
-pub use conn::{ConnMode, ConnOpts};
+pub use conn::ConnOpts;
 pub use error::{code_of, ErrorCode, ServiceError};
+pub use frame::{BinRequest, BinResponse, Item};
 pub use persist::{PersistOpts, RecoveryReport, ShardLog};
 pub use registry::{CreateOpts, ObjectEntry, Registry, DEFAULT_OBJECT};
 pub use shard::{fnv1a64, fnv1a64_bytes, shard_of, Shard, FOREIGN_TIDS, SHARD_HASH_SCHEME};
@@ -161,7 +168,6 @@ pub struct ServerHandle {
     ports: Vec<u16>,
     state: Arc<ServerState>,
     threads: Vec<std::thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
@@ -200,12 +206,6 @@ impl ServerHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        // The accept loops have exited, so no new connection threads
-        // can appear; drain the ones still running.
-        let conns: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for t in conns {
-            let _ = t.join();
-        }
     }
 }
 
@@ -220,13 +220,12 @@ pub struct ServeOpts {
     /// protocol, no greeting).
     pub shards: usize,
     /// Funnel executor threads per shard — the shard's funnel tid
-    /// pool. Under the event core this bounds *concurrent executing
-    /// requests*, not clients (`conn.max_conns` bounds those); under
-    /// the legacy threads core it is the per-shard connection ceiling.
+    /// pool. This bounds *concurrent executing requests*, not clients
+    /// (`conn.max_conns` bounds those).
     pub workers: usize,
-    /// Connection-layer configuration: the event-driven core (default)
-    /// or the legacy thread-per-connection core, plus I/O thread
-    /// count and backpressure bounds.
+    /// Connection-layer configuration: I/O thread count, connection
+    /// ceiling, and per-connection backpressure bounds for the
+    /// event-driven core.
     pub conn: ConnOpts,
     /// Initial active width per sign for the default counter.
     pub aggregators: usize,
@@ -260,7 +259,6 @@ impl Default for ServeOpts {
             shards: s.shards,
             workers: s.workers,
             conn: ConnOpts {
-                mode: ConnMode::parse(&s.conn_mode).unwrap_or(ConnMode::Event),
                 io_threads: s.io_threads,
                 max_conns: s.max_conns,
                 max_pending: s.max_pending,
@@ -360,9 +358,7 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
             shard.registry.set_log(Arc::clone(&log));
             shard.log = Some(log);
         }
-        if opts.conn.mode == ConnMode::Event {
-            shard.evq = Some(Arc::new(conn::EventQueue::new(opts.conn.io_threads)));
-        }
+        shard.evq = Some(Arc::new(conn::EventQueue::new(opts.conn.io_threads)));
         shards.push(shard);
     }
     let state = Arc::new(ServerState { shards, stop: AtomicBool::new(false) });
@@ -395,7 +391,7 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
             } else {
                 for item in &obj.items {
                     entry
-                        .seed_queue_item(*item)
+                        .seed_queue_item(item.clone())
                         .with_context(|| format!("seeding queue {name:?}"))?;
                 }
             }
@@ -455,7 +451,6 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
         }
     }
 
-    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
     let mut threads = Vec::new();
     if opts.resize_interval_ms > 0 {
         let period = std::time::Duration::from_millis(opts.resize_interval_ms);
@@ -472,24 +467,12 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
         }
     }
     for (i, listener) in listeners.into_iter().enumerate() {
-        match opts.conn.mode {
-            ConnMode::Event => {
-                let core = conn::spawn_event_core(&state, i, listener, &opts.conn, workers)
-                    .with_context(|| format!("starting shard {i} event core"))?;
-                threads.extend(core);
-            }
-            ConnMode::Threads => {
-                threads.push(shard::spawn_accept_loop(
-                    Arc::clone(&state),
-                    i,
-                    listener,
-                    Arc::clone(&conns),
-                ));
-            }
-        }
+        let core = conn::spawn_event_core(&state, i, listener, &opts.conn, workers)
+            .with_context(|| format!("starting shard {i} event core"))?;
+        threads.extend(core);
     }
     let ports = state.shards.iter().map(|s| s.port).collect();
-    Ok(ServerHandle { addr, ports, state, threads, conns })
+    Ok(ServerHandle { addr, ports, state, threads })
 }
 
 /// Split `host:port` (the port may be 0 for ephemeral binding).
@@ -606,22 +589,84 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
                     ("value", Json::num(entry.read(tid)? as f64)),
                 ])),
                 "enqueue" => {
-                    let item = req.get("item").and_then(Json::as_u64).ok_or_else(|| {
-                        anyhow!("enqueue needs an item (non-negative integer)")
-                    })?;
-                    entry.enqueue(tid, item)?;
-                    Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+                    // Three spellings, oldest first so the legacy
+                    // single-integer form stays byte-identical:
+                    // `item` (integer), `data` (hex byte string),
+                    // `items` (mixed batch, one funnel pass).
+                    if let Some(arr) = req.get("items").and_then(Json::as_arr) {
+                        if arr.len() > frame::MAX_BATCH_ITEMS {
+                            return Err(anyhow!(
+                                "enqueue batch of {} exceeds the per-request limit {}",
+                                arr.len(),
+                                frame::MAX_BATCH_ITEMS
+                            ));
+                        }
+                        let items = arr
+                            .iter()
+                            .map(|v| {
+                                Item::from_json(v).ok_or_else(|| {
+                                    anyhow!(
+                                        "unparseable enqueue item (need a non-negative \
+                                         integer or hex string)"
+                                    )
+                                })
+                            })
+                            .collect::<Result<Vec<Item>>>()?;
+                        let count = exec_enqueue_batch(&entry, tid, items)?;
+                        Ok(Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("count", Json::num(count as f64)),
+                        ]))
+                    } else if let Some(hex) = req.get("data").and_then(Json::as_str) {
+                        let bytes = frame::from_hex(hex).ok_or_else(|| {
+                            anyhow!("enqueue data must be an even-length hex string")
+                        })?;
+                        entry.enqueue_item(tid, Item::Bytes(bytes))?;
+                        Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+                    } else {
+                        let item = req.get("item").and_then(Json::as_u64).ok_or_else(|| {
+                            anyhow!("enqueue needs an item (non-negative integer)")
+                        })?;
+                        entry.enqueue(tid, item)?;
+                        Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+                    }
                 }
-                "dequeue" => Ok(match entry.dequeue(tid)? {
-                    Some(item) => Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("item", Json::num(item as f64)),
-                    ]),
-                    None => Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("empty", Json::Bool(true)),
-                    ]),
-                }),
+                "dequeue" => {
+                    if let Some(count) = req.get("count").and_then(Json::as_u64) {
+                        if count == 0 {
+                            return Err(anyhow!("dequeue count must be positive"));
+                        }
+                        if count > frame::MAX_BATCH_ITEMS as u64 {
+                            return Err(anyhow!(
+                                "dequeue count {count} exceeds the per-request limit {}",
+                                frame::MAX_BATCH_ITEMS
+                            ));
+                        }
+                        let items = exec_dequeue_batch(&entry, tid, count as u32)?;
+                        Ok(Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("count", Json::num(items.len() as f64)),
+                            ("items", Json::arr(items.iter().map(Item::to_json))),
+                        ]))
+                    } else {
+                        // Legacy single-item form: integers keep the
+                        // `item` field, byte payloads answer in `data`.
+                        Ok(match entry.dequeue_item(tid)? {
+                            Some(Item::Int(item)) => Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("item", Json::num(item as f64)),
+                            ]),
+                            Some(Item::Bytes(b)) => Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("data", Json::str(frame::to_hex(&b))),
+                            ]),
+                            None => Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("empty", Json::Bool(true)),
+                            ]),
+                        })
+                    }
+                }
                 "stats" => {
                     entry.metrics.incr("stats");
                     let mut json = entry.stats_json();
@@ -677,6 +722,105 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
             }
         }
     }
+}
+
+/// Enqueue a decoded batch in order on one funnel tid — the whole
+/// batch rides one executor pass, so its items land in one funnel
+/// window together. Items journal and intern one at a time; an item
+/// rejected mid-batch (integer out of range, oversized bytes) aborts
+/// the remainder and the already-enqueued prefix stays — the decode
+/// caps make that reachable only through per-item value checks, not
+/// sizes.
+fn exec_enqueue_batch(entry: &ObjectEntry, tid: usize, items: Vec<Item>) -> Result<u32> {
+    let count = items.len() as u32;
+    for item in items {
+        entry.enqueue_item(tid, item)?;
+    }
+    Ok(count)
+}
+
+/// Pop up to `count` items on one funnel tid, stopping early when the
+/// queue drains. A short (possibly empty) vector is the answer, not
+/// an error — "empty" is just a zero-length batch.
+fn exec_dequeue_batch(entry: &ObjectEntry, tid: usize, count: u32) -> Result<Vec<Item>> {
+    let mut items = Vec::with_capacity((count as usize).min(64));
+    for _ in 0..count {
+        match entry.dequeue_item(tid)? {
+            Some(item) => items.push(item),
+            None => break,
+        }
+    }
+    Ok(items)
+}
+
+/// Route one decoded binary frame *payload* received on shard `via`
+/// and return the response payload (the caller wraps it back into a
+/// checksummed frame). Errors never tear the connection here: they
+/// become a one-byte status + message frame, mirroring the JSON
+/// `{"ok":false,...}` replies — only transport-level corruption
+/// (handled in [`conn`]) closes a binary connection.
+pub(crate) fn handle_binary(state: &ServerState, via: usize, tid: usize, payload: &[u8]) -> Vec<u8> {
+    let result: Result<BinResponse> = match frame::decode_request(payload) {
+        Err(msg) => {
+            state.shards[via].metrics.incr("requests");
+            Err(error::service_err(ErrorCode::Protocol, msg))
+        }
+        // Control-plane frames carry a verbatim JSON document through
+        // the ordinary handler (which counts the request itself).
+        Ok(BinRequest::Json(line)) => handle_request(state, via, tid, &line)
+            .map(|json| BinResponse::Json(json.to_string())),
+        Ok(req) => {
+            state.shards[via].metrics.incr("requests");
+            binary_data_op(state, via, tid, req)
+        }
+    };
+    let resp = result
+        .unwrap_or_else(|e| BinResponse::Err { code: code_of(&e), msg: e.to_string() });
+    let mut out = Vec::new();
+    frame::encode_response(&resp, &mut out);
+    out
+}
+
+/// Execute a binary data-plane op. Routing and foreign-tid leasing
+/// mirror the JSON data plane; all four binary ops enter a funnel, so
+/// a mis-routed frame always leases from the owner's foreign pool.
+fn binary_data_op(
+    state: &ServerState,
+    via: usize,
+    tid: usize,
+    req: BinRequest,
+) -> Result<BinResponse> {
+    let name = match &req {
+        BinRequest::Take { name, .. }
+        | BinRequest::Read { name }
+        | BinRequest::Enqueue { name, .. }
+        | BinRequest::Dequeue { name, .. } => name.clone(),
+        BinRequest::Json(_) => return Err(anyhow!("json frames never reach the data plane")),
+    };
+    let owner = state.route(via, &name);
+    let entry = owner.registry.get(&name)?;
+    let foreign;
+    let tid = if owner.index == via {
+        tid
+    } else {
+        foreign = owner.lease_foreign();
+        foreign.tid
+    };
+    Ok(match req {
+        BinRequest::Json(_) => unreachable!("filtered above"),
+        BinRequest::Take { count, priority, .. } => {
+            // `decode_request` already bounded `count` by
+            // [`MAX_TAKE_COUNT`]; zero behaves like the JSON default.
+            BinResponse::Start(entry.take(tid, count.max(1), priority)?)
+        }
+        BinRequest::Read { .. } => BinResponse::Value(entry.read(tid)?),
+        BinRequest::Enqueue { items, .. } => {
+            BinResponse::Enqueued(exec_enqueue_batch(&entry, tid, items)?)
+        }
+        BinRequest::Dequeue { count, .. } => {
+            BinResponse::Items(exec_dequeue_batch(&entry, tid, count)?)
+        }
+    })
 }
 
 /// `list`: fan out over every shard and merge, sorted by name (map
@@ -776,9 +920,11 @@ fn cluster_stats(state: &ServerState) -> Json {
         // batch-size lever the funnels feed on; > 1 means wake-ups
         // are carrying multi-op batches).
         if let Some(evq) = &shard.evq {
-            sj.insert("conn_mode".to_string(), Json::str(ConnMode::Event.label()));
+            sj.insert("conn_mode".to_string(), Json::str("event"));
             sj.insert("pending_ops".to_string(), Json::num(evq.pending_ops() as f64));
             sj.insert("open_conns".to_string(), Json::num(evq.open_conns() as f64));
+            sj.insert("bytes_in".to_string(), Json::num(evq.bytes_in() as f64));
+            sj.insert("bytes_out".to_string(), Json::num(evq.bytes_out() as f64));
             let drains = shard.metrics.get("exec_drains");
             if drains > 0 {
                 let ops = shard.metrics.get("exec_drained_ops");
@@ -787,8 +933,6 @@ fn cluster_stats(state: &ServerState) -> Json {
                     Json::num(ops as f64 / drains as f64),
                 );
             }
-        } else {
-            sj.insert("conn_mode".to_string(), Json::str(ConnMode::Threads.label()));
         }
         if let Some(log) = &shard.log {
             // Recovery-aware stats: the durability counters ride the
@@ -1174,34 +1318,6 @@ mod tests {
     }
 
     #[test]
-    fn threads_mode_connections_beyond_lease_pool_rejected() {
-        // The legacy core's `workers` ceiling, pinned via ConnMode.
-        let server = serve(&ServeOpts {
-            conn: ConnOpts::threads(),
-            ..ServeOpts::fixed("127.0.0.1:0", 1, 2)
-        })
-        .unwrap();
-        let addr = server.addr.to_string();
-        let c = RegistryClient::connect(&addr).unwrap();
-        let tickets = c.counter(DEFAULT_OBJECT).unwrap();
-        // Completing a request proves the only lease is held.
-        assert_eq!(tickets.take(1).unwrap(), 0);
-        // Read the rejection line without writing first (a write could
-        // race the server-side close into an RST that drops the line).
-        let second = TcpStream::connect(&addr).unwrap();
-        let mut line = String::new();
-        BufReader::new(second).read_line(&mut line).unwrap();
-        let resp = Json::parse(&line).unwrap();
-        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
-        assert_eq!(resp.get("code").and_then(Json::as_str), Some("at_capacity"), "{line}");
-        let err = resp.get("error").and_then(Json::as_str).unwrap();
-        assert!(err.contains("capacity"), "unexpected rejection: {err}");
-        // The leased connection keeps working.
-        assert_eq!(tickets.take(1).unwrap(), 1);
-        server.shutdown();
-    }
-
-    #[test]
     fn event_core_rejects_beyond_max_conns() {
         // The event core's ceiling is max_conns, not workers: a
         // 1-connection server still rejects cleanly with the code.
@@ -1366,30 +1482,56 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn ticket_client_shim_still_works() {
-        // The deprecated flat client must keep its whole old surface
-        // green over the new core for one release.
+    fn json_byte_payloads_and_batches_over_the_wire() {
+        // The additive JSON grammar: `data` (hex), `items` (mixed
+        // batch), `dequeue count` — all without touching the binary
+        // framing, so debug clients keep full coverage.
         let server = start();
-        let mut c = TicketClient::connect(&server.addr.to_string()).unwrap();
-        assert_eq!(c.shards(), 1);
-        assert_eq!(c.take(5, false).unwrap(), 0);
-        assert_eq!(c.take(1, true).unwrap(), 5);
-        assert_eq!(c.read().unwrap(), 6);
-        c.create("jobs", "queue", "lcrq+elastic:fixed:2").unwrap();
-        c.enqueue("jobs", 11).unwrap();
-        assert_eq!(c.dequeue("jobs").unwrap(), Some(11));
-        c.create_with("vip", "counter", "elastic:fixed:2", None, Some(0), true).unwrap();
-        assert_eq!(c.take_on("vip", 2, false).unwrap(), 0);
-        assert_eq!(c.read_on("vip").unwrap(), 2);
-        assert_eq!(c.resize_on("jobs", 1).unwrap(), 1);
-        assert_eq!(c.set_policy_on("jobs", "fixed:2").unwrap(), "fixed-2");
-        let stats = c.stats().unwrap();
-        assert_eq!(stats.get("name").and_then(Json::as_str), Some(DEFAULT_OBJECT));
-        assert_eq!(c.list().unwrap().len(), 3);
-        let agg = c.cluster_stats().unwrap();
-        assert_eq!(agg.get("objects").and_then(Json::as_u64), Some(3));
-        c.delete("vip").unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let ask = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            writer.write_all(req.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap()
+        };
+        let resp = ask(
+            &mut writer,
+            &mut reader,
+            r#"{"op":"create","name":"jobs","kind":"queue","backend":"lcrq+elastic:fixed:2"}"#,
+        );
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let resp =
+            ask(&mut writer, &mut reader, r#"{"op":"enqueue","name":"jobs","data":"00ff10"}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let resp = ask(
+            &mut writer,
+            &mut reader,
+            r#"{"op":"enqueue","name":"jobs","items":[7,"beef"]}"#,
+        );
+        assert_eq!(resp.get("count").and_then(Json::as_u64), Some(2));
+        // Single-item dequeue: byte payloads answer in `data`.
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"dequeue","name":"jobs"}"#);
+        assert_eq!(resp.get("data").and_then(Json::as_str), Some("00ff10"));
+        // Batch dequeue drains the rest and reports the short count.
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"dequeue","name":"jobs","count":8}"#);
+        assert_eq!(resp.get("count").and_then(Json::as_u64), Some(2), "{resp:?}");
+        let items = resp.get("items").and_then(Json::as_arr).unwrap();
+        assert_eq!(items[0].as_u64(), Some(7));
+        assert_eq!(items[1].as_str(), Some("beef"));
+        // Caps answer with a typed protocol error, connection intact.
+        let resp = ask(
+            &mut writer,
+            &mut reader,
+            r#"{"op":"dequeue","name":"jobs","count":9999999}"#,
+        );
+        assert_eq!(resp.get("code").and_then(Json::as_str), Some("protocol"));
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"enqueue","name":"jobs","data":"xz"}"#);
+        assert_eq!(resp.get("code").and_then(Json::as_str), Some("protocol"));
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"dequeue","name":"jobs"}"#);
+        assert_eq!(resp.get("empty").and_then(Json::as_bool), Some(true));
         server.shutdown();
     }
 }

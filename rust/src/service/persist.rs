@@ -16,13 +16,16 @@
 //!
 //! * **Logical records, not funnel internals.** A counter record is
 //!   the *post-batch counter value* (`max` on replay), never the
-//!   per-thread funnel state; a queue record is an item list delta.
+//!   per-thread funnel state; a queue record is an item list delta
+//!   (integers or byte strings — see [`super::frame::Item`]).
 //!   Replay therefore never needs to reconstruct Aggregator or ring
 //!   state — it re-creates objects from their backend spec and seeds
 //!   them, exactly as a fresh `create` would.
 //! * **Append-then-publish.** Records are framed
-//!   (`len ‖ fnv1a64 checksum ‖ payload`) and appended before they
-//!   count; snapshots are written to `snapshot.json.tmp`, fsynced,
+//!   (`len ‖ fnv1a64 checksum ‖ payload` — the [`super::frame`] codec
+//!   the binary wire protocol also speaks, so disk and wire share one
+//!   format) and appended before they count; snapshots are written to
+//!   `snapshot.json.tmp`, fsynced,
 //!   and `rename`d into place, so a reader never observes a partially
 //!   written snapshot (the atomic-state-update discipline of
 //!   `atomic-try-update`). A torn WAL tail is detected by the frame
@@ -53,14 +56,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::shard::fnv1a64_bytes;
+use super::frame::{decode_frames, encode_frame, Item};
 use super::ServerState;
 use crate::sync::SpinLock;
 use crate::util::json::Json;
-
-/// Maximum accepted frame payload length; a length prefix beyond this
-/// is treated as a torn/corrupt tail, not an allocation request.
-const MAX_FRAME_LEN: usize = 1 << 28;
 
 /// Largest value the durable layer represents exactly: WAL records
 /// and snapshots go through the JSON model (`f64`-backed), which is
@@ -132,8 +131,8 @@ pub enum Record {
     /// Absolute counter value after an acked take (idempotent: replay
     /// keeps the maximum seen).
     Counter { name: String, value: u64 },
-    Enqueue { name: String, items: Vec<u64> },
-    Dequeue { name: String, items: Vec<u64> },
+    Enqueue { name: String, items: Vec<Item> },
+    Dequeue { name: String, items: Vec<Item> },
 }
 
 impl Record {
@@ -163,12 +162,12 @@ impl Record {
             Record::Enqueue { name, items } => {
                 pairs.push(("t", Json::str("enq")));
                 pairs.push(("n", Json::str(name.clone())));
-                pairs.push(("i", Json::arr(items.iter().map(|i| Json::num(*i as f64)))));
+                pairs.push(("i", Json::arr(items.iter().map(Item::to_json))));
             }
             Record::Dequeue { name, items } => {
                 pairs.push(("t", Json::str("deq")));
                 pairs.push(("n", Json::str(name.clone())));
-                pairs.push(("i", Json::arr(items.iter().map(|i| Json::num(*i as f64)))));
+                pairs.push(("i", Json::arr(items.iter().map(Item::to_json))));
             }
         }
         Json::obj(pairs)
@@ -184,12 +183,12 @@ impl Record {
                 .ok_or_else(|| anyhow!("record missing name"))?
                 .to_string())
         };
-        let items = || -> Result<Vec<u64>> {
+        let items = || -> Result<Vec<Item>> {
             j.get("i")
                 .and_then(Json::as_arr)
                 .ok_or_else(|| anyhow!("record missing items"))?
                 .iter()
-                .map(|v| v.as_u64().ok_or_else(|| anyhow!("non-integer item")))
+                .map(|v| Item::from_json(v).ok_or_else(|| anyhow!("unparseable record item")))
                 .collect()
         };
         let rec = match t {
@@ -224,40 +223,6 @@ impl Record {
 }
 
 // ---------------------------------------------------------------------
-// Frame codec
-// ---------------------------------------------------------------------
-
-/// Append one length-prefixed, checksummed frame to `out`.
-pub(crate) fn encode_frame(payload: &[u8], out: &mut Vec<u8>) {
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&fnv1a64_bytes(payload).to_le_bytes());
-    out.extend_from_slice(payload);
-}
-
-/// Decode every complete, checksum-valid frame from the front of
-/// `buf`. Returns the payload slices, the byte length of the valid
-/// prefix, and whether a torn/corrupt tail was cut off.
-pub(crate) fn decode_frames(buf: &[u8]) -> (Vec<&[u8]>, usize, bool) {
-    let mut payloads = Vec::new();
-    let mut pos = 0usize;
-    while buf.len() - pos >= 12 {
-        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
-        let sum = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap());
-        if len > MAX_FRAME_LEN || buf.len() - pos - 12 < len {
-            break; // torn tail: length runs past EOF (or is garbage)
-        }
-        let payload = &buf[pos + 12..pos + 12 + len];
-        if fnv1a64_bytes(payload) != sum {
-            break; // corrupt frame: stop at the last valid boundary
-        }
-        payloads.push(payload);
-        pos += 12 + len;
-    }
-    let torn = pos != buf.len();
-    (payloads, pos, torn)
-}
-
-// ---------------------------------------------------------------------
 // Recovery model
 // ---------------------------------------------------------------------
 
@@ -275,7 +240,7 @@ pub struct ObjectState {
     /// Counter value (counters only).
     pub counter: u64,
     /// Queue contents, oldest first (queues only).
-    pub items: VecDeque<u64>,
+    pub items: VecDeque<Item>,
 }
 
 /// The materialized state a snapshot stores and the WAL replays into:
@@ -318,7 +283,7 @@ impl RecoveryModel {
             }
             Record::Enqueue { name, items } => {
                 if let Some(o) = self.objects.get_mut(name) {
-                    o.items.extend(items.iter().copied());
+                    o.items.extend(items.iter().cloned());
                 }
             }
             Record::Dequeue { name, items } => {
@@ -343,7 +308,7 @@ impl RecoveryModel {
                     ("kind", Json::str(o.kind.clone())),
                     ("backend", Json::str(o.backend.clone())),
                     ("counter", Json::num(o.counter as f64)),
-                    ("items", Json::arr(o.items.iter().map(|i| Json::num(*i as f64)))),
+                    ("items", Json::arr(o.items.iter().map(Item::to_json))),
                 ];
                 if let Some(w) = o.max_width {
                     pairs.push(("max_width", Json::num(w as f64)));
@@ -374,12 +339,14 @@ impl RecoveryModel {
                         .ok_or_else(|| anyhow!("snapshot object {name:?} missing {k}"))?
                         .to_string())
                 };
-                let items: VecDeque<u64> = o
+                let items: VecDeque<Item> = o
                     .get("items")
                     .and_then(Json::as_arr)
                     .unwrap_or(&[])
                     .iter()
-                    .map(|v| v.as_u64().ok_or_else(|| anyhow!("non-integer snapshot item")))
+                    .map(|v| {
+                        Item::from_json(v).ok_or_else(|| anyhow!("unparseable snapshot item"))
+                    })
                     .collect::<Result<_>>()?;
                 objects.insert(
                     name.clone(),
@@ -736,8 +703,8 @@ enum JournalState {
         flushed: AtomicU64,
     },
     Queue {
-        enq: SpinLock<Vec<u64>>,
-        deq: SpinLock<Vec<u64>>,
+        enq: SpinLock<Vec<Item>>,
+        deq: SpinLock<Vec<Item>>,
     },
 }
 
@@ -814,7 +781,7 @@ impl Journal {
     }
 
     /// Record one acked enqueue.
-    pub fn record_enqueue(&self, item: u64) {
+    pub fn record_enqueue(&self, item: Item) {
         if self.is_retired() {
             return;
         }
@@ -830,7 +797,7 @@ impl Journal {
     }
 
     /// Record one acked dequeue.
-    pub fn record_dequeue(&self, item: u64) {
+    pub fn record_dequeue(&self, item: Item) {
         if self.is_retired() {
             return;
         }
@@ -978,6 +945,10 @@ mod tests {
         Record::Counter { name: name.into(), value }
     }
 
+    fn ints(vals: &[u64]) -> Vec<Item> {
+        vals.iter().copied().map(Item::Int).collect()
+    }
+
     fn create_rec(name: &str) -> Record {
         Record::Create {
             name: name.into(),
@@ -999,8 +970,11 @@ mod tests {
             create_rec("orders"),
             Record::Delete { name: "jobs".into() },
             ctr("orders", 41),
-            Record::Enqueue { name: "jobs".into(), items: vec![1, 2, 3] },
-            Record::Dequeue { name: "jobs".into(), items: vec![2] },
+            Record::Enqueue {
+                name: "jobs".into(),
+                items: vec![Item::Int(1), Item::Bytes(b"opaque \x00\xFF bytes".to_vec())],
+            },
+            Record::Dequeue { name: "jobs".into(), items: ints(&[2]) },
         ];
         for (i, rec) in records.iter().enumerate() {
             let json = rec.to_json(i as u64 + 1);
@@ -1063,17 +1037,17 @@ mod tests {
         );
         m.apply(3, &ctr("c", 10));
         m.apply(4, &ctr("c", 7)); // stale value: max wins
-        m.apply(5, &Record::Enqueue { name: "q".into(), items: vec![5, 6, 7] });
-        m.apply(6, &Record::Dequeue { name: "q".into(), items: vec![6] });
+        m.apply(5, &Record::Enqueue { name: "q".into(), items: ints(&[5, 6, 7]) });
+        m.apply(6, &Record::Dequeue { name: "q".into(), items: ints(&[6]) });
         assert_eq!(m.objects["c"].counter, 10);
-        assert_eq!(m.objects["q"].items, VecDeque::from(vec![5, 7]));
+        assert_eq!(m.objects["q"].items, VecDeque::from(ints(&[5, 7])));
         // Re-create of a live object keeps its state.
         m.apply(7, &create_rec("c"));
         assert_eq!(m.objects["c"].counter, 10);
         // Records at or below the applied seq are skipped (replay
         // idempotence across the snapshot boundary).
-        m.apply(5, &Record::Enqueue { name: "q".into(), items: vec![5, 6, 7] });
-        assert_eq!(m.objects["q"].items, VecDeque::from(vec![5, 7]));
+        m.apply(5, &Record::Enqueue { name: "q".into(), items: ints(&[5, 6, 7]) });
+        assert_eq!(m.objects["q"].items, VecDeque::from(ints(&[5, 7])));
         // Records for unknown objects are ignored, not errors.
         m.apply(8, &ctr("ghost", 3));
         m.apply(9, &Record::Delete { name: "c".into() });
@@ -1091,8 +1065,16 @@ mod tests {
                     continue;
                 }
                 let queue = case.rng.below(2) == 0;
-                let items: VecDeque<u64> =
-                    case.vec_of(|r| r.below(1 << 50)).into_iter().collect();
+                let items: VecDeque<Item> = case
+                    .vec_of(|r| {
+                        if r.below(4) == 0 {
+                            Item::Bytes((0..r.below(16)).map(|_| r.below(256) as u8).collect())
+                        } else {
+                            Item::Int(r.below(1 << 50))
+                        }
+                    })
+                    .into_iter()
+                    .collect();
                 m.objects.insert(
                     name.to_string(),
                     ObjectState {
@@ -1195,7 +1177,10 @@ mod tests {
                     backend: "lcrq+elastic".into(),
                     max_width: None,
                 },
-                Record::Enqueue { name: "q".into(), items: vec![1, 2] },
+                Record::Enqueue {
+                    name: "q".into(),
+                    items: vec![Item::Int(1), Item::Bytes(b"two".to_vec())],
+                },
             ])
             .unwrap();
         }
@@ -1212,7 +1197,11 @@ mod tests {
             // the sequence check keeps the enqueue from doubling.
             let log = ShardLog::open(&dir, true).unwrap();
             let items = &log.recovered_objects()[0].1.items;
-            assert_eq!(*items, VecDeque::from(vec![1, 2]), "enqueue double-applied");
+            assert_eq!(
+                *items,
+                VecDeque::from(vec![Item::Int(1), Item::Bytes(b"two".to_vec())]),
+                "enqueue double-applied"
+            );
         }
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1236,15 +1225,18 @@ mod tests {
         assert!(out.is_empty());
 
         let q = Journal::queue(Arc::clone(&log), "q");
-        q.record_enqueue(1);
-        q.record_enqueue(2);
-        q.record_dequeue(1);
+        q.record_enqueue(Item::Int(1));
+        q.record_enqueue(Item::Bytes(b"payload".to_vec()));
+        q.record_dequeue(Item::Int(1));
         q.drain_into(&mut out);
         assert_eq!(
             out,
             vec![
-                Record::Enqueue { name: "q".into(), items: vec![1, 2] },
-                Record::Dequeue { name: "q".into(), items: vec![1] },
+                Record::Enqueue {
+                    name: "q".into(),
+                    items: vec![Item::Int(1), Item::Bytes(b"payload".to_vec())],
+                },
+                Record::Dequeue { name: "q".into(), items: ints(&[1]) },
             ]
         );
         std::fs::remove_dir_all(&dir).unwrap();

@@ -15,6 +15,14 @@
 //! (`take`, `enqueue`, …) then run lock-free on the object itself.
 //! `create`/`delete` are control-plane and take the write lock.
 //!
+//! **Byte payloads.** Queue payloads are [`Item`]s — integers or byte
+//! strings — but the lock-free rings keep trading in small integers:
+//! every enqueue interns its payload into the entry's [`ItemTable`]
+//! and enqueues the table index; dequeue pops the index and takes the
+//! payload back out. The indirection costs one striped-lock hop per
+//! op far off the rings' CAS hot path, and leaves the ring/funnel
+//! layer's word-sized item representation untouched.
+//!
 //! **Journaling hook.** When the service runs with a `data_dir`, the
 //! registry is handed its shard's [`ShardLog`] before any object is
 //! created. From then on every persisted entry carries a [`Journal`]
@@ -24,13 +32,15 @@
 //! records are appended while the registry write lock is held, so the
 //! WAL's control-plane order always matches the map's.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
 
 use super::error::{service_err, ErrorCode};
 
+use super::frame::{Item, MAX_ITEM_BYTES};
 use super::metrics::Metrics;
 use super::persist::{Journal, Record, ShardLog};
 use crate::config::ObjectManifest;
@@ -39,7 +49,7 @@ use crate::faa::{backend, BackendSpec, BatchStats, ElasticAggFunnel, FetchAddObj
 use crate::queue::{
     make_queue_with_handle, ConcurrentQueue, ElasticIndexFactory, EMPTY_ITEM, PRQ_MAX_ITEM,
 };
-use crate::sync::{CasCtl, RetryPolicy};
+use crate::sync::{CasCtl, RetryPolicy, SpinLock};
 use crate::util::json::Json;
 
 /// The object un-named requests route to (the pre-registry protocol's
@@ -76,6 +86,42 @@ impl CreateOpts {
     }
 }
 
+/// Stripes in an [`ItemTable`]; indices hash by `idx % STRIPES`, so
+/// consecutive enqueues land on different locks.
+const TABLE_STRIPES: usize = 8;
+
+/// The payload table behind a queue: rings enqueue/dequeue small
+/// sequential indices while the [`Item`]s themselves live here. The
+/// counter never recycles, so an index uniquely names one payload for
+/// the object's lifetime (2⁶⁴ enqueues outlives any deployment, and
+/// stays far below both the ring sentinel and PRQ's 48-bit bound for
+/// any reachable table size).
+struct ItemTable {
+    next: AtomicU64,
+    stripes: [SpinLock<HashMap<u64, Item>>; TABLE_STRIPES],
+}
+
+impl ItemTable {
+    fn new() -> ItemTable {
+        ItemTable {
+            next: AtomicU64::new(0),
+            stripes: std::array::from_fn(|_| SpinLock::new(HashMap::new())),
+        }
+    }
+
+    /// Store `item` and return the ring index that names it.
+    fn intern(&self, item: Item) -> u64 {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed);
+        self.stripes[(idx as usize) % TABLE_STRIPES].lock().insert(idx, item);
+        idx
+    }
+
+    /// Remove and return the payload a dequeued ring index names.
+    fn take(&self, idx: u64) -> Option<Item> {
+        self.stripes[(idx as usize) % TABLE_STRIPES].lock().remove(&idx)
+    }
+}
+
 /// A served object's body.
 pub enum ObjectBody {
     Counter(ElasticAggFunnel),
@@ -104,9 +150,13 @@ pub struct ObjectEntry {
     /// can re-create the object exactly (the backend label does not
     /// carry it).
     max_width_override: Option<usize>,
-    /// Largest enqueuable item (queues; PRQ packs values into 48
-    /// bits, every other family takes anything below the sentinel).
+    /// Largest enqueuable *integer* item (queues). The ring itself now
+    /// carries table indices, but the integer-payload bound keeps the
+    /// wire contract each family always had: PRQ rejects beyond 48
+    /// bits, persisted queues reject beyond the JSON-exact range.
     item_max: u64,
+    /// Payload table (queues): ring indices in, [`Item`]s out.
+    table: ItemTable,
     /// Durability hook; present iff this entry persists.
     journal: Option<Journal>,
     body: ObjectBody,
@@ -206,24 +256,54 @@ impl ObjectEntry {
         Ok(funnel.read(tid))
     }
 
-    /// Queue op: enqueue one item.
-    pub fn enqueue(&self, tid: usize, item: u64) -> Result<()> {
-        if item >= EMPTY_ITEM {
-            return Err(service_err(ErrorCode::ItemTooLarge, format!("item {item} is reserved")));
+    /// Validate a payload against this queue's bounds. Integer items
+    /// keep the bound their family always had (PRQ's 48 bits, the
+    /// durable 2⁵³ range, the ring sentinel); byte items are bounded
+    /// by [`MAX_ITEM_BYTES`].
+    fn validate_item(&self, item: &Item) -> Result<()> {
+        match item {
+            Item::Int(v) => {
+                if *v >= EMPTY_ITEM {
+                    return Err(service_err(
+                        ErrorCode::ItemTooLarge,
+                        format!("item {v} is reserved"),
+                    ));
+                }
+                if *v > self.item_max {
+                    // PRQ packs values into 48 bits; reject cleanly
+                    // instead of letting the queue's debug assertion
+                    // kill the connection handler.
+                    return Err(service_err(
+                        ErrorCode::ItemTooLarge,
+                        format!(
+                            "item {v} exceeds queue {:?}'s item bound {}",
+                            self.name, self.item_max
+                        ),
+                    ));
+                }
+            }
+            Item::Bytes(b) => {
+                if b.len() > MAX_ITEM_BYTES {
+                    return Err(service_err(
+                        ErrorCode::ItemTooLarge,
+                        format!(
+                            "byte item of {} bytes exceeds queue {:?}'s limit {MAX_ITEM_BYTES}",
+                            b.len(),
+                            self.name
+                        ),
+                    ));
+                }
+            }
         }
+        Ok(())
+    }
+
+    /// Queue op: enqueue one payload (integer or byte string). The
+    /// payload is interned in the item table and the ring carries its
+    /// index.
+    pub fn enqueue_item(&self, tid: usize, item: Item) -> Result<()> {
         let queue = self.as_queue("enqueue")?;
-        if item > self.item_max {
-            // PRQ packs values into 48 bits; reject cleanly instead
-            // of letting the queue's debug assertion kill the
-            // connection handler.
-            return Err(service_err(
-                ErrorCode::ItemTooLarge,
-                format!(
-                    "item {item} exceeds queue {:?}'s item bound {}",
-                    self.name, self.item_max
-                ),
-            ));
-        }
+        self.validate_item(&item)?;
         self.metrics.incr("enqueue");
         // Journal write-ahead: the Enq record must be ordered before
         // any Deq record for this item, and a dequeuer can only see
@@ -233,26 +313,39 @@ impl ObjectEntry {
         // leaves an unacked item in the durable state: at-least-once,
         // never lost.)
         if let Some(journal) = &self.journal {
-            journal.record_enqueue(item);
+            journal.record_enqueue(item.clone());
         }
-        queue.enqueue(tid, item);
+        let idx = self.table.intern(item);
+        queue.enqueue(tid, idx);
         Ok(())
     }
 
-    /// Queue op: dequeue the oldest item (`None` on empty).
-    pub fn dequeue(&self, tid: usize) -> Result<Option<u64>> {
+    /// Queue op: enqueue one integer item (the historical API).
+    pub fn enqueue(&self, tid: usize, item: u64) -> Result<()> {
+        self.enqueue_item(tid, Item::Int(item))
+    }
+
+    /// Queue op: dequeue the oldest payload (`None` on empty).
+    pub fn dequeue_item(&self, tid: usize) -> Result<Option<Item>> {
         let queue = self.as_queue("dequeue")?;
         self.metrics.incr("dequeue");
-        let got = queue.dequeue(tid);
-        match got {
-            Some(item) => {
+        match queue.dequeue(tid) {
+            Some(idx) => {
+                // Every ring value was interned by enqueue/seed, so
+                // the table always holds the index; fall back to the
+                // raw index rather than poisoning an executor if that
+                // invariant ever breaks.
+                let item = self.table.take(idx).unwrap_or(Item::Int(idx));
                 if let Some(journal) = &self.journal {
-                    journal.record_dequeue(item);
+                    journal.record_dequeue(item.clone());
                 }
+                Ok(Some(item))
             }
-            None => self.metrics.incr("dequeue_empty"),
+            None => {
+                self.metrics.incr("dequeue_empty");
+                Ok(None)
+            }
         }
-        Ok(got)
     }
 
     /// Recovery-only: raise a counter to its recovered value without
@@ -274,10 +367,12 @@ impl ObjectEntry {
         Ok(())
     }
 
-    /// Recovery-only: re-enqueue a recovered item without journaling.
-    pub(super) fn seed_queue_item(&self, item: u64) -> Result<()> {
+    /// Recovery-only: re-enqueue a recovered payload without
+    /// journaling (it is already in the recovered model).
+    pub(super) fn seed_queue_item(&self, item: Item) -> Result<()> {
         let queue = self.as_queue("seed")?;
-        queue.enqueue(0, item);
+        let idx = self.table.intern(item);
+        queue.enqueue(0, idx);
         Ok(())
     }
 
@@ -542,6 +637,7 @@ impl Registry {
             // counter with exactly this ceiling.
             max_width_override: Some(max_width.max(1)),
             item_max: EMPTY_ITEM - 1,
+            table: ItemTable::new(),
             journal,
             body: ObjectBody::Counter(funnel),
         })
@@ -651,6 +747,7 @@ impl Registry {
                     direct: None,
                     max_width_override: opts.max_width,
                     item_max,
+                    table: ItemTable::new(),
                     journal,
                     body: ObjectBody::Queue { queue, elastic },
                 })
@@ -753,7 +850,7 @@ mod tests {
         let q = r.create("q", "queue", "", plain()).unwrap();
         assert_eq!(q.backend, "lcrq+elastic");
         q.enqueue(0, 1).unwrap();
-        assert_eq!(q.dequeue(1).unwrap(), Some(1));
+        assert_eq!(q.dequeue_item(1).unwrap(), Some(Item::Int(1)));
         assert!(r.create("x", "stack", "", plain()).is_err(), "kind still validated");
     }
 
@@ -811,7 +908,7 @@ mod tests {
         assert_eq!(e.take(1, 1, true).unwrap(), 5);
         assert_eq!(e.read(0).unwrap(), 6);
         assert!(e.enqueue(0, 1).is_err(), "counters reject queue ops");
-        assert!(e.dequeue(0).is_err());
+        assert!(e.dequeue_item(0).is_err());
         let (width, previous) = e.resize(4).unwrap();
         assert_eq!((width, previous), (4, 2));
         assert_eq!(e.resize(100).unwrap().0, 6, "clamped to the max_width override");
@@ -887,7 +984,7 @@ mod tests {
         q.set_cas_policy(RetryPolicy::Adaptive);
         assert_eq!(q.cas_policy(), Some(RetryPolicy::Adaptive));
         q.enqueue(0, 1).unwrap();
-        assert_eq!(q.dequeue(1).unwrap(), Some(1));
+        assert_eq!(q.dequeue_item(1).unwrap(), Some(Item::Int(1)));
         e.set_cas_policy(RetryPolicy::None);
         assert_eq!(e.cas_policy(), Some(RetryPolicy::None));
         assert_eq!(e.take(1, 1, false).unwrap(), 2);
@@ -960,7 +1057,7 @@ mod tests {
         assert_eq!(sent, 500, "enqueues on a held Arc survive the delete");
         assert!(r.get("doomed").is_err(), "name is gone from the registry");
         let mut drained = 0u64;
-        while entry.dequeue(0).unwrap().is_some() {
+        while entry.dequeue_item(0).unwrap().is_some() {
             drained += 1;
         }
         assert_eq!(drained, sent, "no items lost to the race");
@@ -970,10 +1067,10 @@ mod tests {
     fn queue_entry_ops() {
         let r = Registry::new(2);
         let e = r.create("q", "queue", "lcrq+elastic:fixed:2", plain()).unwrap();
-        assert_eq!(e.dequeue(0).unwrap(), None);
+        assert_eq!(e.dequeue_item(0).unwrap(), None);
         e.enqueue(0, 7).unwrap();
         e.enqueue(1, 8).unwrap();
-        assert_eq!(e.dequeue(1).unwrap(), Some(7));
+        assert_eq!(e.dequeue_item(1).unwrap(), Some(Item::Int(7)));
         assert!(e.take(0, 1, false).is_err(), "queues reject counter ops");
         assert!(e.read(0).is_err());
         assert!(e.enqueue(0, EMPTY_ITEM).is_err(), "sentinel rejected");
@@ -1029,7 +1126,7 @@ mod tests {
         let r = Registry::new(2);
         let e = r.create("q", "queue", "prq+elastic:fixed:2", plain()).unwrap();
         e.enqueue(0, 7).unwrap();
-        assert_eq!(e.dequeue(1).unwrap(), Some(7));
+        assert_eq!(e.dequeue_item(1).unwrap(), Some(Item::Int(7)));
         let (width, previous) = e.resize(3).unwrap();
         assert_eq!((width, previous), (3, 2));
         assert_eq!(e.set_policy(WidthPolicy::Fixed(1)).unwrap(), 1);
@@ -1046,14 +1143,35 @@ mod tests {
         let r = Registry::new(2);
         let e = r.create("q", "queue", "prq", plain()).unwrap();
         e.enqueue(0, 7).unwrap();
-        assert_eq!(e.dequeue(1).unwrap(), Some(7));
-        // PRQ values are 48-bit: a bigger item is a clean error, not a
-        // handler-killing panic.
+        assert_eq!(e.dequeue_item(1).unwrap(), Some(Item::Int(7)));
+        // PRQ integer values are 48-bit on the wire: a bigger item is
+        // a clean error, not a handler-killing panic. (The ring now
+        // carries table indices, but the integer contract holds.)
         assert!(e.enqueue(0, 1 << 50).is_err());
         // LCRQ-family queues take anything below the sentinel.
         let wide = r.create("w", "queue", "lcrq+hw", plain()).unwrap();
         wide.enqueue(0, 1 << 50).unwrap();
-        assert_eq!(wide.dequeue(1).unwrap(), Some(1 << 50));
+        assert_eq!(wide.dequeue_item(1).unwrap(), Some(Item::Int(1 << 50)));
+    }
+
+    #[test]
+    fn byte_payloads_roundtrip_through_any_queue_family() {
+        let r = Registry::new(2);
+        // Byte payloads ride the item table, so even the 48-bit PRQ
+        // family carries them untruncated.
+        for (name, spec) in [("a", "prq"), ("b", "lcrq+elastic:fixed:2"), ("c", "msq")] {
+            let e = r.create(name, "queue", spec, plain()).unwrap();
+            let blob = Item::Bytes(vec![0xA5; 1000]);
+            e.enqueue_item(0, blob.clone()).unwrap();
+            e.enqueue_item(1, Item::Int(9)).unwrap();
+            assert_eq!(e.dequeue_item(1).unwrap(), Some(blob), "{spec}: FIFO order");
+            assert_eq!(e.dequeue_item(0).unwrap(), Some(Item::Int(9)));
+            assert_eq!(e.dequeue_item(0).unwrap(), None);
+            // Oversized byte payloads are a typed error.
+            let big = Item::Bytes(vec![0; MAX_ITEM_BYTES + 1]);
+            let err = e.enqueue_item(0, big).unwrap_err();
+            assert_eq!(super::super::error::code_of(&err), ErrorCode::ItemTooLarge);
+        }
     }
 
     fn scratch_dir(tag: &str) -> std::path::PathBuf {
@@ -1073,7 +1191,8 @@ mod tests {
             let q = r.create("q", "queue", "lcrq+elastic", plain()).unwrap();
             q.enqueue(1, 41).unwrap();
             q.enqueue(2, 42).unwrap();
-            assert_eq!(q.dequeue(1).unwrap(), Some(41));
+            q.enqueue_item(1, Item::Bytes(b"blob".to_vec())).unwrap();
+            assert_eq!(q.dequeue_item(1).unwrap(), Some(Item::Int(41)));
             // Durable items must be exactly representable in the JSON
             // WAL/snapshot model: above 2^53 is a clean error here
             // (a non-persisted lcrq queue would accept it).
@@ -1088,7 +1207,13 @@ mod tests {
         assert_eq!(objects.len(), 2, "deleted object must not be recovered");
         assert_eq!(objects["c"].counter, 8, "max of the acked post-take values");
         assert_eq!(objects["c"].backend, "elastic:fixed:2");
-        assert_eq!(objects["q"].items, std::collections::VecDeque::from(vec![42]));
+        assert_eq!(
+            objects["q"].items,
+            std::collections::VecDeque::from(vec![
+                Item::Int(42),
+                Item::Bytes(b"blob".to_vec()),
+            ])
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -2,12 +2,12 @@
 //!
 //! The paper's thesis is that one hot memory word cannot absorb every
 //! thread's fetch&adds; PR 3's registry recreated the same bottleneck
-//! one level up — every object behind one accept loop, one lease
-//! pool, one resize controller. A [`Shard`] is the unit that breaks
-//! that up: it owns its *own* [`Registry`], listener port, `workers`-
-//! sized tid lease pool, [`Metrics`], and resize-controller thread,
-//! so unrelated objects never share an accept loop, a lock domain, or
-//! a controller walk (the shard-per-contention-domain design of
+//! one level up — every object behind one listener, one tid space,
+//! one resize controller. A [`Shard`] is the unit that breaks that
+//! up: it owns its *own* [`Registry`], listener port, event core,
+//! foreign-tid pool, [`Metrics`], and resize-controller thread, so
+//! unrelated objects never share a listener, a lock domain, or a
+//! controller walk (the shard-per-contention-domain design of
 //! *Sharded Elimination and Combining*, PAPERS.md).
 //!
 //! Names route to shards by **FNV-1a 64** hash ([`shard_of`]); the
@@ -16,16 +16,11 @@
 //! `shardmap` line talk to the owning shard's port directly — the hot
 //! path never crosses a shard boundary.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
-
-use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::registry::Registry;
 use super::ServerState;
-use crate::util::json::Json;
 
 /// The hash scheme advertised in the `shardmap` line. Clients must
 /// use the same function or they will knock on the wrong door (the
@@ -61,18 +56,19 @@ pub fn shard_of(name: &str, shards: usize) -> usize {
 /// How many funnel thread ids each shard reserves for *foreign*
 /// operations — requests accepted on another shard but owned here
 /// (legacy or mis-routed clients, forwarded in-process). Every object
-/// is built for `workers + FOREIGN_TIDS + 1` tids: the shard's own
-/// connection leases, this foreign pool, and the reserved in-process
+/// is built for `workers + FOREIGN_TIDS + 1` tids: the event core's
+/// executor tids, this foreign pool, and the reserved in-process
 /// tid 0 — independent of the shard count, so funnel per-thread
 /// tables no longer scale with `shards × workers`.
 pub const FOREIGN_TIDS: usize = 2;
 
 /// A funnel thread-id lease pool handing out ids from a fixed range
-/// `start..start + capacity`. Each shard has two: the connection pool
-/// (`1..=workers`, one id per concurrent connection for its lifetime)
-/// and the foreign pool (`workers+1..=workers+FOREIGN_TIDS`, leased
-/// per forwarded operation). Tid 0 is reserved for in-process callers
-/// — boot, recovery seeding, benchmarks embedding the server.
+/// `start..start + capacity`. Executor tids (`1..=workers`) are owned
+/// statically by the event core's executor threads; the pool a shard
+/// actually leases from at runtime is the foreign pool
+/// (`workers+1..=workers+FOREIGN_TIDS`, leased per forwarded
+/// operation). Tid 0 is reserved for in-process callers — boot,
+/// recovery seeding, benchmarks embedding the server.
 pub(super) struct TidLease {
     free: Mutex<Vec<usize>>,
     pub(super) start: usize,
@@ -116,10 +112,9 @@ pub struct Shard {
     /// This shard's durability log (WAL + snapshots), when the
     /// service runs with a `data_dir`.
     pub log: Option<std::sync::Arc<super::persist::ShardLog>>,
-    /// The event core's shared run queue + gauges (None under the
-    /// legacy thread-per-connection mode).
+    /// The event core's shared run queue + gauges (`None` only during
+    /// construction; `serve` installs it before the listeners open).
     pub(super) evq: Option<std::sync::Arc<super::conn::EventQueue>>,
-    pub(super) tids: TidLease,
     /// Small pool of tids for forwarded operations (see
     /// [`FOREIGN_TIDS`]); leased per op, not per connection.
     pub(super) foreign: TidLease,
@@ -134,7 +129,6 @@ impl Shard {
             metrics: Metrics::new(),
             log: None,
             evq: None,
-            tids: TidLease::new(workers),
             foreign: TidLease::with_range(workers + 1, FOREIGN_TIDS),
         }
     }
@@ -172,21 +166,6 @@ impl Drop for ForeignLease<'_> {
     }
 }
 
-/// Returns a leased tid to its shard's pool when dropped — including
-/// when the connection handler panics, so a crashed handler cannot
-/// permanently shrink the shard's connection capacity.
-struct LeaseGuard {
-    state: Arc<ServerState>,
-    shard: usize,
-    lease: usize,
-}
-
-impl Drop for LeaseGuard {
-    fn drop(&mut self) {
-        self.state.shards[self.shard].tids.release(self.lease);
-    }
-}
-
 /// Spawn this shard's resize-controller thread: walk the shard's own
 /// registry and apply each object's policy to its contention window
 /// every poll period. Sleeps in short slices so shutdown never waits
@@ -214,158 +193,6 @@ pub(super) fn spawn_controller(
             entry.poll();
         }
     })
-}
-
-/// Spawn this shard's accept loop: non-blocking polls bounded by the
-/// stop flag (the explicit accept deadline that replaces the old
-/// wake-up-by-connecting shutdown nudge).
-pub(super) fn spawn_accept_loop(
-    state: Arc<ServerState>,
-    shard: usize,
-    listener: TcpListener,
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
-) -> std::thread::JoinHandle<()> {
-    std::thread::spawn(move || loop {
-        if state.stopping() {
-            return;
-        }
-        let conn = match listener.accept() {
-            Ok((conn, _)) => conn,
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
-                continue;
-            }
-            Err(_) => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
-                continue;
-            }
-        };
-        state.shards[shard].metrics.incr("connections");
-        let Some(lease) = state.shards[shard].tids.lease() else {
-            // All of this shard's funnel tids are leased: reject
-            // instead of running a connection on an out-of-range
-            // thread id.
-            state.shards[shard].metrics.incr("rejected");
-            let _ = reject_conn(&state, shard, conn);
-            continue;
-        };
-        let handler = {
-            let state = Arc::clone(&state);
-            std::thread::spawn(move || {
-                let _guard = LeaseGuard { state: Arc::clone(&state), shard, lease };
-                // The lease IS the shard-local funnel tid; forwarded
-                // ops on other shards lease from the owner's foreign
-                // pool instead of reusing this id (see
-                // `handle_request`).
-                let _ = handle_conn(&state, shard, lease, conn);
-            })
-        };
-        let mut held = conns.lock().unwrap();
-        held.retain(|h| !h.is_finished());
-        held.push(handler);
-    })
-}
-
-/// Tell an over-capacity client why it is being dropped.
-fn reject_conn(state: &ServerState, shard: usize, mut conn: TcpStream) -> std::io::Result<()> {
-    // Accepted sockets do not inherit the listener's non-blocking
-    // mode on Linux, but make it explicit for portability.
-    conn.set_nonblocking(false)?;
-    if state.shards.len() > 1 {
-        // Sharded servers greet before rejecting, so a routing client
-        // still learns the map and can retry on a less loaded shard.
-        conn.write_all(state.shardmap_json(shard, true).to_string().as_bytes())?;
-        conn.write_all(b"\n")?;
-    }
-    let capacity = state.shards[shard].tids.capacity;
-    // Single-shard servers keep the pre-shard rejection wording
-    // (wire compatibility); sharded servers name the full shard so
-    // a routing client can tell which door was shut. `rejected` is
-    // the structured marker clients key their retry policy on.
-    let error = if state.shards.len() > 1 {
-        format!("shard {shard} at capacity ({capacity} connection slots)")
-    } else {
-        format!("server at capacity ({capacity} connection slots)")
-    };
-    let resp = Json::obj(vec![
-        ("ok", Json::Bool(false)),
-        ("rejected", Json::Bool(true)),
-        ("code", Json::str(super::error::ErrorCode::AtCapacity.as_str())),
-        ("error", Json::str(error)),
-    ]);
-    conn.write_all(resp.to_string().as_bytes())?;
-    conn.write_all(b"\n")?;
-    // A client may have pipelined a request before we rejected; if
-    // those bytes are still unread when the socket drops, the close
-    // can become an RST that destroys the rejection line before the
-    // client reads it. Send our FIN, then briefly drain the receive
-    // side so the close is clean. Bounded: a few short reads, so a
-    // rejection cannot stall the accept loop for long.
-    let _ = conn.shutdown(std::net::Shutdown::Write);
-    conn.set_read_timeout(Some(std::time::Duration::from_millis(20))).ok();
-    let mut sink = [0u8; 256];
-    for _ in 0..4 {
-        match std::io::Read::read(&mut conn, &mut sink) {
-            Ok(0) | Err(_) => break, // client closed, or drain window over
-            Ok(_) => {}
-        }
-    }
-    Ok(())
-}
-
-fn handle_conn(state: &ServerState, shard: usize, tid: usize, conn: TcpStream) -> Result<()> {
-    conn.set_nonblocking(false).ok();
-    conn.set_nodelay(true).ok();
-    // Bounded reads so a handler parked on an idle connection still
-    // notices shutdown (otherwise `shutdown()` would hang on join).
-    conn.set_read_timeout(Some(std::time::Duration::from_millis(200))).ok();
-    let mut writer = conn.try_clone()?;
-    let mut reader = BufReader::new(conn);
-    // Sharded servers push the shard map on connect so clients can
-    // route follow-up requests straight to the owning shard's port.
-    // Single-shard servers stay line-for-line wire-compatible with
-    // the pre-shard protocol: no greeting.
-    if state.shards.len() > 1 {
-        writer.write_all(state.shardmap_json(shard, true).to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-    }
-    // One buffer across iterations: a read timeout mid-line leaves the
-    // bytes read so far in `line` (read_until semantics), so a slow
-    // writer's request is completed by later reads instead of being
-    // dropped and desyncing the line stream.
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if state.stopping() {
-                    return Ok(());
-                }
-                continue;
-            }
-            Err(e) => return Err(e.into()),
-        }
-        if !line.trim().is_empty() {
-            let response = match super::handle_request(state, shard, tid, &line) {
-                Ok(json) => json,
-                Err(e) => super::error::error_json(&e),
-            };
-            writer.write_all(response.to_string().as_bytes())?;
-            writer.write_all(b"\n")?;
-        }
-        // Also honour shutdown between requests: a client that keeps
-        // the pipe full never lets the read above time out, and a
-        // stopping server must not be held open by a busy connection
-        // (its in-flight request was still answered).
-        if state.stopping() {
-            return Ok(());
-        }
-        line.clear();
-    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,333 @@
+//! End-to-end tests for the binary wire protocol: negotiation and
+//! interop with JSON clients on one server, byte-identical behaviour
+//! for clients that never negotiate, typed rejection of corrupt or
+//! oversized frames, decode-time batch caps, and crash recovery of
+//! byte-string payloads through the unified WAL framing.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use aggfunnels::config::ObjectManifest;
+use aggfunnels::service::frame::{self, BinRequest, BinResponse, Item, WireDecode};
+use aggfunnels::service::{serve, ErrorCode, PersistOpts, RegistryClient, ServeOpts};
+
+/// Incremental frame reader over a raw test socket, buffering through
+/// the same decoder the server and client use.
+struct FrameReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    fn new(stream: TcpStream) -> Self {
+        Self { stream, buf: Vec::new() }
+    }
+
+    /// The next frame payload, or `None` once the server closes.
+    fn next(&mut self) -> Option<Vec<u8>> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match frame::decode_wire_frame(&self.buf) {
+                WireDecode::Frame { payload, consumed } => {
+                    self.buf.drain(..consumed);
+                    return Some(payload);
+                }
+                WireDecode::Partial => {
+                    let n = self.stream.read(&mut chunk).unwrap();
+                    if n == 0 {
+                        return None;
+                    }
+                    self.buf.extend_from_slice(&chunk[..n]);
+                }
+                WireDecode::Bad(msg) => panic!("server sent a bad frame: {msg}"),
+            }
+        }
+    }
+
+    fn next_response(&mut self) -> Option<BinResponse> {
+        self.next().map(|p| frame::decode_response(&p).unwrap())
+    }
+}
+
+/// Connect raw, send the magic, and consume the hello frame.
+fn negotiate_raw(addr: &str) -> FrameReader {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(&frame::WIRE_MAGIC).unwrap();
+    let mut r = FrameReader::new(stream);
+    match r.next_response().expect("hello frame") {
+        BinResponse::Json(doc) => assert!(doc.contains("\"binary\":true"), "hello: {doc}"),
+        other => panic!("unexpected hello {other:?}"),
+    }
+    r
+}
+
+fn send_frame(r: &mut FrameReader, req: &BinRequest) {
+    let mut payload = Vec::new();
+    frame::encode_request(req, &mut payload);
+    let mut framed = Vec::new();
+    frame::encode_frame(&payload, &mut framed);
+    r.stream.write_all(&framed).unwrap();
+}
+
+#[test]
+fn binary_and_json_clients_interoperate_on_one_server() {
+    // Two shards so the binary handshake also has to skip the pushed
+    // greeting line before the hello frame.
+    let server = serve(&ServeOpts {
+        objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+        ..ServeOpts::sharded("127.0.0.1:0", 2, 4, 2)
+    })
+    .unwrap();
+    let addr = server.addr.to_string();
+
+    let bin = RegistryClient::connect_binary(&addr).unwrap();
+    let json = RegistryClient::connect(&addr).unwrap();
+    assert!(bin.is_binary() && !json.is_binary());
+
+    // Items enqueued on the binary wire come back, typed, on the JSON
+    // wire — same object, same item table.
+    let bjobs = bin.queue("jobs").unwrap();
+    let jjobs = json.queue("jobs").unwrap();
+    assert_eq!(
+        bjobs
+            .enqueue_batch(vec![Item::Int(1), Item::Bytes(b"hello".to_vec()), Item::Int(2)])
+            .unwrap(),
+        3
+    );
+    assert_eq!(jjobs.dequeue_item().unwrap(), Some(Item::Int(1)));
+    assert_eq!(jjobs.dequeue_item().unwrap(), Some(Item::Bytes(b"hello".to_vec())));
+    assert_eq!(jjobs.dequeue().unwrap(), Some(2));
+
+    // And the reverse direction.
+    jjobs.enqueue_bytes(&[0x00, 0xff]).unwrap();
+    assert_eq!(bjobs.dequeue_item().unwrap(), Some(Item::Bytes(vec![0x00, 0xff])));
+    assert_eq!(bjobs.dequeue_item().unwrap(), None);
+
+    // Counter grants stay disjoint across protocols.
+    let btickets = bin.counter("tickets").unwrap();
+    let jtickets = json.counter("tickets").unwrap();
+    let b0 = btickets.take(5).unwrap();
+    let j0 = jtickets.take(5).unwrap();
+    assert!(b0 + 5 <= j0 || j0 + 5 <= b0, "overlapping grants {b0}/{j0}");
+    assert_eq!(btickets.read().unwrap(), 10);
+    assert_eq!(jtickets.read().unwrap(), 10);
+
+    // The same pipelined batch produces the same typed responses on
+    // either wire.
+    for client in [&bin, &json] {
+        let resps = client
+            .call_many(&[
+                BinRequest::Enqueue {
+                    name: "jobs".to_string(),
+                    items: vec![Item::Bytes(b"batch".to_vec())],
+                },
+                BinRequest::Dequeue { name: "jobs".to_string(), count: 4 },
+                BinRequest::Take { name: "tickets".to_string(), count: 2, priority: false },
+            ])
+            .unwrap();
+        assert_eq!(resps[0], BinResponse::Enqueued(1));
+        assert_eq!(resps[1], BinResponse::Items(vec![Item::Bytes(b"batch".to_vec())]));
+        assert!(matches!(resps[2], BinResponse::Start(_)), "got {:?}", resps[2]);
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn non_negotiated_json_clients_see_byte_identical_responses() {
+    // The compatibility pin: a plain JSON client (no magic preamble)
+    // gets exactly the pre-binary wire, byte for byte.
+    let server = serve(&ServeOpts {
+        objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    })
+    .unwrap();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |line: &str| {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    };
+    assert_eq!(
+        ask(r#"{"op":"take","name":"tickets","count":1}"#),
+        "{\"count\":1,\"ok\":true,\"start\":0}\n"
+    );
+    assert_eq!(
+        ask(r#"{"op":"read","name":"tickets"}"#),
+        "{\"ok\":true,\"value\":1}\n"
+    );
+    assert_eq!(ask(r#"{"op":"enqueue","name":"jobs","item":7}"#), "{\"ok\":true}\n");
+    assert_eq!(
+        ask(r#"{"op":"dequeue","name":"jobs"}"#),
+        "{\"item\":7,\"ok\":true}\n"
+    );
+    assert_eq!(
+        ask(r#"{"op":"dequeue","name":"jobs"}"#),
+        "{\"empty\":true,\"ok\":true}\n"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn corrupt_frames_get_a_typed_error_then_a_close() {
+    let server = serve(&ServeOpts::fixed("127.0.0.1:0", 4, 2)).unwrap();
+    let addr = server.addr.to_string();
+
+    // A checksum-corrupted frame after a healthy request: the healthy
+    // one is answered, the corrupt one draws a typed protocol error,
+    // and the connection closes (no resync guessing on a binary
+    // stream).
+    let mut r = negotiate_raw(&addr);
+    let take = BinRequest::Take { name: "tickets".to_string(), count: 1, priority: false };
+    send_frame(&mut r, &take);
+    assert_eq!(r.next_response(), Some(BinResponse::Start(0)));
+    let mut payload = Vec::new();
+    frame::encode_request(&take, &mut payload);
+    let mut framed = Vec::new();
+    frame::encode_frame(&payload, &mut framed);
+    let last = framed.len() - 1;
+    framed[last] ^= 0x01;
+    r.stream.write_all(&framed).unwrap();
+    match r.next_response() {
+        Some(BinResponse::Err { code: ErrorCode::Protocol, msg }) => {
+            assert!(msg.contains("checksum"), "{msg}");
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert_eq!(r.next(), None, "connection must close after a framing violation");
+
+    // An oversized length prefix is rejected before any allocation.
+    let mut r = negotiate_raw(&addr);
+    let mut huge = ((frame::MAX_WIRE_FRAME + 1) as u32).to_le_bytes().to_vec();
+    huge.extend_from_slice(&[0u8; 8]);
+    r.stream.write_all(&huge).unwrap();
+    match r.next_response() {
+        Some(BinResponse::Err { code: ErrorCode::Protocol, msg }) => {
+            assert!(msg.contains("exceeds"), "{msg}");
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert_eq!(r.next(), None);
+
+    // A magic lead byte with a divergent tail is neither wire: typed
+    // error, then close.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(&[0xA6, b'X', b'X', b'X', b'X', b'X', b'X', b'X']).unwrap();
+    let mut r = FrameReader::new(stream);
+    match r.next_response() {
+        Some(BinResponse::Err { code: ErrorCode::Protocol, msg }) => {
+            assert!(msg.contains("magic"), "{msg}");
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert_eq!(r.next(), None);
+
+    server.shutdown();
+}
+
+#[test]
+fn batch_caps_reject_at_decode_time_without_desyncing_the_pipeline() {
+    let server = serve(&ServeOpts {
+        objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    })
+    .unwrap();
+    let bin = RegistryClient::connect_binary(&server.addr.to_string()).unwrap();
+
+    // A pipelined batch with a cap-violating op in the middle: its
+    // neighbours still execute and the error frame lands in position.
+    let resps = bin
+        .call_many(&[
+            BinRequest::Take { name: "tickets".to_string(), count: 1, priority: false },
+            BinRequest::Dequeue {
+                name: "jobs".to_string(),
+                count: (frame::MAX_BATCH_ITEMS + 1) as u32,
+            },
+            BinRequest::Take { name: "tickets".to_string(), count: 1, priority: false },
+        ])
+        .unwrap();
+    assert_eq!(resps[0], BinResponse::Start(0));
+    match &resps[1] {
+        BinResponse::Err { code: ErrorCode::Protocol, msg } => {
+            assert!(msg.contains("exceeds"), "{msg}");
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert_eq!(resps[2], BinResponse::Start(1));
+
+    // Oversized single item: rejected at decode, before any enqueue.
+    let resps = bin
+        .call_many(&[BinRequest::Enqueue {
+            name: "jobs".to_string(),
+            items: vec![Item::Bytes(vec![0u8; frame::MAX_ITEM_BYTES + 1])],
+        }])
+        .unwrap();
+    match &resps[0] {
+        BinResponse::Err { code: ErrorCode::Protocol, .. } => {}
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert_eq!(bin.queue("jobs").unwrap().dequeue_item().unwrap(), None);
+
+    server.shutdown();
+}
+
+#[test]
+fn byte_payloads_survive_crash_recovery_exactly() {
+    let dir = aggfunnels::util::scratch_dir("e2e-wire-crash");
+    let dir_str = dir.to_string_lossy().into_owned();
+    let serve_opts = |dir: &str| ServeOpts {
+        persist: Some(PersistOpts::sync(dir.to_string())),
+        objects: vec![ObjectManifest::new("jobs", "queue", "lcrq+elastic")],
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    };
+    let server = serve(&serve_opts(&dir_str)).unwrap();
+    let addr = server.addr.to_string();
+
+    // Interleave byte payloads (length-varied, including empty-ish
+    // single bytes) with integers, all acked synchronously.
+    let bin = RegistryClient::connect_binary(&addr).unwrap();
+    let jobs = bin.queue("jobs").unwrap();
+    let mut expected: Vec<Item> = Vec::new();
+    for k in 0..40u8 {
+        let payload = vec![k; (k % 7 + 1) as usize];
+        expected.push(Item::Bytes(payload.clone()));
+        expected.push(Item::Int(1000 + k as u64));
+        assert_eq!(
+            jobs.enqueue_batch(vec![
+                Item::Bytes(payload),
+                Item::Int(1000 + k as u64),
+            ])
+            .unwrap(),
+            2
+        );
+    }
+    // Consume a prefix so recovery also replays dequeues.
+    let taken = jobs.dequeue_batch(10).unwrap();
+    assert_eq!(taken, expected[..10].to_vec());
+
+    server.crash();
+
+    let server = serve(&serve_opts(&dir_str)).unwrap();
+    let bin = RegistryClient::connect_binary(&server.addr.to_string()).unwrap();
+    let jobs = bin.queue("jobs").unwrap();
+    let mut recovered = Vec::new();
+    loop {
+        let batch = jobs.dequeue_batch(16).unwrap();
+        if batch.is_empty() {
+            break;
+        }
+        recovered.extend(batch);
+    }
+    assert_eq!(
+        recovered,
+        expected[10..].to_vec(),
+        "recovered queue must be the exact un-dequeued FIFO remainder"
+    );
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
