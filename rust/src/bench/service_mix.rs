@@ -22,6 +22,12 @@
 //!   (group commit must stay well below one record per op: one
 //!   journal record per aggregated batch, mirroring the paper's
 //!   one-hardware-F&A-per-batch amortization).
+//! * `journal`: the lock-free journal's ack-path cost — counter,
+//!   queue, *and* stack traffic with the WAL off, group-committed,
+//!   and synchronous, reporting the claim-stack drain batch size and
+//!   CAS retry rate next to wire throughput. Group commit must sit
+//!   within a hair of `wal-off`: the durable ack path is one lock-free
+//!   claim-stack push, never an fsync wait.
 //! * `conn`: the event core's client-scaling headline — ticket
 //!   traffic from far more concurrent connections than funnel
 //!   executors (the legacy core's hard ceiling), with the executors'
@@ -37,7 +43,7 @@ use super::Row;
 use crate::config::ObjectManifest;
 use crate::service::{
     serve, ConnOpts, CounterHandle, PersistOpts, QueueHandle, RegistryClient, ServeOpts,
-    ServerHandle, DEFAULT_OBJECT,
+    ServerHandle, StackHandle, DEFAULT_OBJECT,
 };
 use crate::util::json::Json;
 use crate::util::stats::mops;
@@ -72,6 +78,7 @@ impl ServiceMixOpts {
 struct WireHandles {
     counters: Vec<CounterHandle>,
     queues: Vec<QueueHandle>,
+    stacks: Vec<StackHandle>,
 }
 
 /// One client's unit of work in a wire-path scenario: issue a fixed
@@ -93,6 +100,7 @@ fn measure_wire_point(
     duration: Duration,
     counters: &'static [&'static str],
     queues: &'static [&'static str],
+    stacks: &'static [&'static str],
     step: WireStep,
     probe: fn(&RegistryClient) -> Result<Json>,
 ) -> Result<(f64, Json)> {
@@ -110,6 +118,7 @@ fn measure_wire_point(
                         .map(|n| c.counter(n))
                         .collect::<Result<Vec<_>>>()?,
                     queues: queues.iter().map(|n| c.queue(n)).collect::<Result<Vec<_>>>()?,
+                    stacks: stacks.iter().map(|n| c.stack(n)).collect::<Result<Vec<_>>>()?,
                 };
                 let mut ops = 0u64;
                 let mut seq = (i as u64) << 32;
@@ -178,6 +187,7 @@ pub fn run_service_mix(opts: &ServiceMixOpts) -> Result<Vec<Row>> {
                 opts.duration,
                 &[DEFAULT_OBJECT],
                 &["jobs"],
+                &[],
                 step,
                 probe,
             )
@@ -291,6 +301,7 @@ pub fn run_service_shard(opts: &ServiceShardOpts) -> Result<Vec<Row>> {
                 opts.duration,
                 &SHARD_MIX_COUNTERS,
                 &SHARD_MIX_QUEUES,
+                &[],
                 step,
                 probe,
             )
@@ -400,6 +411,7 @@ pub fn run_service_persist(opts: &ServicePersistOpts) -> Result<Vec<Row>> {
                 opts.duration,
                 &[DEFAULT_OBJECT],
                 &["jobs"],
+                &[],
                 step,
                 probe,
             )
@@ -431,6 +443,127 @@ pub fn run_service_persist(opts: &ServicePersistOpts) -> Result<Vec<Row>> {
                 threads: clients,
                 metric: "wal_records_per_request",
                 value: wal_records as f64 / requests as f64,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Options for [`run_service_journal`].
+#[derive(Clone, Debug)]
+pub struct ServiceJournalOpts {
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for ServiceJournalOpts {
+    fn default() -> Self {
+        Self { clients: vec![1, 2, 4, 8], duration: Duration::from_millis(300) }
+    }
+}
+
+impl ServiceJournalOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self { clients: vec![2, 4], duration: Duration::from_millis(60) }
+    }
+}
+
+/// Run the `journal` scenario: counter + queue + stack traffic under
+/// the three durability modes, surfacing the lock-free journal's own
+/// counters. Emits `j1` (Mops/s over the wire — `wal-group` must sit
+/// within a hair of `wal-off`, because a durable ack is one
+/// claim-stack push and never an fsync wait), `j2` (items the flusher
+/// claims per drain — the amortization measure; sync mode pins it
+/// near 1, group commit grows it with contention), and `j3` (journal
+/// CAS retries per push — the claim stack's contention tax, identically
+/// 0 with the WAL off).
+pub fn run_service_journal(opts: &ServiceJournalOpts) -> Result<Vec<Row>> {
+    fn step(_i: u64, h: &WireHandles, seq: &mut u64) -> Result<u64> {
+        h.counters[0].take(1)?;
+        h.queues[0].enqueue(*seq)?;
+        h.stacks[0].push(*seq)?;
+        *seq += 1;
+        h.queues[0].dequeue()?;
+        h.stacks[0].pop()?;
+        Ok(5)
+    }
+    fn probe(p: &RegistryClient) -> Result<Json> {
+        p.cluster_stats()
+    }
+    let mut rows = Vec::new();
+    for mode in SERVICE_PERSIST_MODES {
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let data_dir = scratch_data_dir(&format!("journal-{mode}"));
+            let persist = match mode {
+                "wal-off" => None,
+                "wal-group" => Some(PersistOpts {
+                    data_dir: data_dir.to_string_lossy().into_owned(),
+                    fsync_interval_ms: 5,
+                    snapshot_interval_ms: 0,
+                }),
+                _ => Some(PersistOpts::sync(data_dir.to_string_lossy().into_owned())),
+            };
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                objects: vec![
+                    ObjectManifest::new("jobs", "queue", "lcrq+elastic"),
+                    ObjectManifest::new("undo", "stack", "stack+elastic"),
+                ],
+                persist,
+                // One spare lease for the post-run stats probe.
+                ..ServeOpts::fixed("127.0.0.1:0", clients + 1, 2)
+            })
+            .with_context(|| format!("serving {mode} journal sweep for {clients} clients"))?;
+            let (throughput, cluster) = measure_wire_point(
+                server,
+                clients,
+                opts.duration,
+                &[DEFAULT_OBJECT],
+                &["jobs"],
+                &["undo"],
+                step,
+                probe,
+            )
+            .with_context(|| format!("journal {mode} with {clients} clients"))?;
+            let per_shard = cluster.get("per_shard").and_then(Json::as_arr);
+            let sum = |key: &str| -> u64 {
+                per_shard
+                    .map(|shards| {
+                        shards
+                            .iter()
+                            .filter_map(|s| s.get(key).and_then(Json::as_u64))
+                            .sum::<u64>()
+                    })
+                    .unwrap_or(0)
+            };
+            let pushes = sum("journal_pushes");
+            let drains = sum("journal_drains");
+            let retries = sum("journal_cas_retries");
+            let _ = std::fs::remove_dir_all(&data_dir);
+            rows.push(Row {
+                figure: "j1",
+                series: mode.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: throughput,
+            });
+            rows.push(Row {
+                figure: "j2",
+                series: mode.to_string(),
+                threads: clients,
+                metric: "journal_batch_avg",
+                value: pushes as f64 / drains.max(1) as f64,
+            });
+            rows.push(Row {
+                figure: "j3",
+                series: mode.to_string(),
+                threads: clients,
+                metric: "journal_cas_retries_per_push",
+                value: retries as f64 / pushes.max(1) as f64,
             });
         }
     }
@@ -494,6 +627,7 @@ pub fn run_service_conn(opts: &ServiceConnOpts) -> Result<Vec<Row>> {
             clients,
             opts.duration,
             &[DEFAULT_OBJECT],
+            &[],
             &[],
             step,
             probe,
@@ -602,6 +736,33 @@ mod tests {
             p1("wal-group"),
             p1("wal-off")
         );
+    }
+
+    #[test]
+    fn journal_sweep_surfaces_claim_stack_counters() {
+        let opts = ServiceJournalOpts { clients: vec![2], duration: Duration::from_millis(50) };
+        let rows = run_service_journal(&opts).unwrap();
+        assert_eq!(rows.len(), 3 * SERVICE_PERSIST_MODES.len());
+        let row = |fig: &str, mode: &str| {
+            rows.iter()
+                .find(|r| r.figure == fig && r.series == mode)
+                .unwrap_or_else(|| panic!("missing {fig}/{mode}"))
+                .value
+        };
+        for mode in SERVICE_PERSIST_MODES {
+            assert!(row("j1", mode) > 0.0, "{mode}: zero wire throughput");
+        }
+        assert_eq!(row("j2", "wal-off"), 0.0, "no WAL, no journal drains");
+        assert_eq!(row("j3", "wal-off"), 0.0, "no WAL, no journal pushes");
+        // Every journaled mode must have pushed and drained records
+        // (batch avg >= 1 whenever any drain happened).
+        for mode in ["wal-group", "wal-sync"] {
+            assert!(
+                row("j2", mode) >= 1.0,
+                "{mode}: flusher claimed nothing (batch avg {})",
+                row("j2", mode)
+            );
+        }
     }
 
     #[test]

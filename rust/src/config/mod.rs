@@ -137,6 +137,7 @@ impl ObjectManifest {
         match kind {
             "counter" => Some("elastic:aimd"),
             "queue" => Some("lcrq+elastic"),
+            "stack" => Some("stack+elastic"),
             _ => None,
         }
     }
@@ -345,7 +346,7 @@ impl AppConfig {
             // cannot strand the earlier kind's default backend.
             if ObjectManifest::default_backend(&o.kind).is_none() {
                 return Err(anyhow!(
-                    "object {:?}: unknown kind {:?} (counter | queue)",
+                    "object {:?}: unknown kind {:?} (counter | queue | stack)",
                     o.name,
                     o.kind
                 ));
@@ -601,8 +602,10 @@ mod tests {
     #[test]
     fn objects_manifest_rejects_bad_entries() {
         let mut c = AppConfig::default();
-        let doc = TomlDoc::parse("[objects.x]\nkind = \"stack\"").unwrap();
+        let doc = TomlDoc::parse("[objects.x]\nkind = \"heap\"").unwrap();
         assert!(c.apply_doc(&doc).is_err(), "unknown kind");
+        let doc = TomlDoc::parse("[objects.x]\nkind = \"stack\"").unwrap();
+        assert!(c.apply_doc(&doc).is_ok(), "stacks are a manifest kind now");
         let doc = TomlDoc::parse("[objects.x]\ncolour = \"red\"").unwrap();
         assert!(c.apply_doc(&doc).is_err(), "unknown field");
         let doc = TomlDoc::parse("objects.x = \"flat\"").unwrap();

@@ -12,8 +12,9 @@
 //!   CPU reference with `--cpu-oracle`).
 //! * `predict` — evaluate the AOT analytic contention model.
 //! * `serve` / `take` — the registry service and a demo client.
-//! * `obj` / `enqueue` / `dequeue` — registry management and queue
-//!   traffic against a running service.
+//! * `obj` / `enqueue` / `dequeue` / `push` / `pop` — registry
+//!   management plus queue and stack traffic against a running
+//!   service.
 
 use std::time::Duration;
 
@@ -25,8 +26,9 @@ use aggfunnels::bench::native::{
     make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
 };
 use aggfunnels::bench::service_mix::{
-    run_service_conn, run_service_mix, run_service_persist, run_service_shard, ServiceConnOpts,
-    ServiceMixOpts, ServicePersistOpts, ServiceShardOpts,
+    run_service_conn, run_service_journal, run_service_mix, run_service_persist,
+    run_service_shard, ServiceConnOpts, ServiceJournalOpts, ServiceMixOpts, ServicePersistOpts,
+    ServiceShardOpts,
 };
 use aggfunnels::bench::wire::{run_wire_sweep, WireOpts};
 use aggfunnels::bench::{rows_to_json, rows_to_table, rows_to_tsv};
@@ -64,6 +66,8 @@ fn main() {
         "obj" => cmd_obj(rest),
         "enqueue" => cmd_enqueue(rest),
         "dequeue" => cmd_dequeue(rest),
+        "push" => cmd_push(rest),
+        "pop" => cmd_pop(rest),
         "snapshot" => cmd_snapshot(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -83,7 +87,7 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|mix|service-mix|service-shard|persist|conn|wire|adv-skew|adv-churn|adv-read|adv-fair|adv-lat|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|service-shard|persist|journal|conn|wire|adv-skew|adv-churn|adv-read|adv-fair|adv-lat|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
@@ -91,13 +95,15 @@ fn print_usage() {
          predict [--grid L] [--work W] [--faa-ratio R] [--m M]\n  \
          serve [--addr A] [--shards S] [--workers W] [--io-threads N] [--max-conns N] [--max-pending N] [--m M] [--policy P] [--cas-policy C] [--max-m M] [--resize-ms T] [--data-dir D] [--fsync-ms T] [--snapshot-ms T]\n  \
          take [--addr A] [--name O] [--count N] [--priority] [--stats] [--resize W] [--set-policy P]\n  \
-         obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue] [--backend B] [--direct-quota D] [--max-width W] [--no-persist]\n  \
+         obj <list | create | delete> [--addr A] [--name O] [--kind counter|queue|stack] [--backend B] [--direct-quota D] [--max-width W] [--no-persist]\n  \
          enqueue --name O (--item N | --data HEX) [--addr A]\n  \
          dequeue --name O [--addr A]\n  \
+         push --name O (--item N | --data HEX) [--addr A]\n  \
+         pop --name O [--addr A]\n  \
          snapshot [--addr A]\n\n\
          FAA algos:  {FAA_ALGOS:?}\n\
          Queues:     {QUEUE_ALGOS:?}\n\
-         Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy], each with optional :d<k> (direct quota) and :b<policy> (CAS retry: none|const|exp|adaptive) suffixes; queues compose as lcrq+<backend>\n\
+         Backends:   hw | aggfunnel[:m] | combfunnel | elastic[:policy], each with optional :d<k> (direct quota) and :b<policy> (CAS retry: none|const|exp|adaptive) suffixes; queues compose as lcrq+<backend>, stacks as stack+<backend> (elimination-backed, no :d quotas)\n\
          Global: --config FILE applies configs/*.toml settings."
     );
 }
@@ -141,9 +147,9 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
     }
 
     // `all` covers the simulated groups; `service-mix`,
-    // `service-shard`, `persist`, `conn`, `wire` and the `adv-*`
-    // adversarial sweeps start real servers, so they only run when
-    // named explicitly.
+    // `service-shard`, `persist`, `journal`, `conn`, `wire` and the
+    // `adv-*` adversarial sweeps start real servers, so they only run
+    // when named explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -172,6 +178,16 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
                 sweep.clients = opts.grid.clone();
             }
             ("persist".to_string(), run_service_persist(&sweep)?)
+        } else if g == "journal" {
+            let mut sweep = if p.has_flag("quick") {
+                ServiceJournalOpts::quick()
+            } else {
+                ServiceJournalOpts::default()
+            };
+            if p.get("grid").is_some() {
+                sweep.clients = opts.grid.clone();
+            }
+            ("journal".to_string(), run_service_journal(&sweep)?)
         } else if g == "service-shard" {
             let mut sweep = if p.has_flag("quick") {
                 ServiceShardOpts::quick()
@@ -560,7 +576,7 @@ fn cmd_obj(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("aggfunnels obj", "manage a running service's object registry")
         .opt("addr", Some("127.0.0.1:7471"), "service address")
         .opt("name", None, "object name (create/delete)")
-        .opt("kind", Some("counter"), "counter | queue")
+        .opt("kind", Some("counter"), "counter | queue | stack")
         .opt("backend", None, "backend spec (defaults per kind)")
         .opt("max-width", None, "elastic slot capacity override")
         .opt("direct-quota", None, "§4.4 d: max concurrent Fetch&AddDirect (counters)")
@@ -637,6 +653,51 @@ fn cmd_dequeue(args: Vec<String>) -> Result<()> {
         Some(aggfunnels::service::frame::Item::Bytes(bytes)) => {
             let hex = aggfunnels::service::frame::to_hex(&bytes);
             println!("{name}: dequeued {} byte(s): {hex}", bytes.len())
+        }
+        None => println!("{name}: empty"),
+    }
+    Ok(())
+}
+
+fn cmd_push(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels push", "push an item onto a served stack")
+        .opt("addr", Some("127.0.0.1:7471"), "service address")
+        .opt("name", None, "stack object name")
+        .opt("item", None, "item to push (integer < 2^53)")
+        .opt("data", None, "byte-string item to push, hex-encoded");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let name = p.get("name").ok_or_else(|| anyhow!("push needs --name"))?;
+    let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    match (p.get("data"), p.parse_as::<u64>("item")) {
+        (Some(hex), None) => {
+            let bytes = aggfunnels::service::frame::from_hex(hex)
+                .ok_or_else(|| anyhow!("--data must be an even-length hex string"))?;
+            client.stack(name)?.push_bytes(&bytes)?;
+            println!("{name}: pushed {} byte(s)", bytes.len());
+        }
+        (None, Some(item)) => {
+            client.stack(name)?.push(item)?;
+            println!("{name}: pushed {item}");
+        }
+        _ => return Err(anyhow!("push needs exactly one of --item N or --data HEX")),
+    }
+    Ok(())
+}
+
+fn cmd_pop(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("aggfunnels pop", "pop the top item from a served stack")
+        .opt("addr", Some("127.0.0.1:7471"), "service address")
+        .opt("name", None, "stack object name");
+    let p = cli.parse(args.iter().map(String::as_str)).map_err(|e| anyhow!("{e}"))?;
+    let name = p.get("name").ok_or_else(|| anyhow!("pop needs --name"))?;
+    let client = RegistryClient::connect(p.get_or("addr", "127.0.0.1:7471"))?;
+    match client.stack(name)?.pop_item()? {
+        Some(aggfunnels::service::frame::Item::Int(item)) => {
+            println!("{name}: popped {item}")
+        }
+        Some(aggfunnels::service::frame::Item::Bytes(bytes)) => {
+            let hex = aggfunnels::service::frame::to_hex(&bytes);
+            println!("{name}: popped {} byte(s): {hex}", bytes.len())
         }
         None => println!("{name}: empty"),
     }

@@ -13,6 +13,10 @@
 //!   same [`IndexFactory`] as LCRQ, so `prq+elastic:<policy>` rides
 //!   resizable funnel ring indices too.
 //! * [`msq`] — Michael–Scott queue, the classic CAS-based baseline.
+//! * [`stack`] — not a queue: the elimination-backed concurrent LIFO
+//!   ([`ConcurrentStack`]), which pairs concurrent push/pop in a
+//!   rendezvous array before touching shared state, the way the
+//!   funnel pairs enqueue/dequeue indices.
 //!
 //! All queues implement [`ConcurrentQueue`] over `u64` items
 //! (`item != u64::MAX`; the all-ones value is the internal ⊥). Boxed
@@ -21,6 +25,7 @@
 pub mod lcrq;
 pub mod msq;
 pub mod prq;
+pub mod stack;
 
 pub use lcrq::{
     AggIndexFactory, CombIndexFactory, ElasticIndex, ElasticIndexFactory, HwIndexFactory,
@@ -28,6 +33,7 @@ pub use lcrq::{
 };
 pub use msq::MsQueue;
 pub use prq::{Prq, PRQ_MAX_ITEM};
+pub use stack::{make_stack, ConcurrentStack, EliminationStack, EMPTY_STACK_ITEM};
 
 use std::sync::Arc;
 

@@ -1,0 +1,505 @@
+//! Concurrent LIFO stack with an elimination layer — the registry's
+//! third object family.
+//!
+//! The central stack is the EBR-reclaimed, tag-versioned
+//! [`TreiberStack`] from [`crate::sync::claim`]. On top of it sits an
+//! **elimination array**: when the central head CAS fails (the
+//! contention signal), a pusher parks its item in a slot and a popper
+//! scanning the array takes it directly — the pair exchanges *without
+//! touching shared state at all*, exactly the way the paper's funnel
+//! pairs enqueue and dequeue indices before paying a hardware F&A.
+//! Under a balanced push/pop mix the central stack sees a fraction of
+//! the operations; [`BatchStats`] reports the win the same way funnel
+//! batching does (`ops` transferred vs `main_faas` central touches).
+//!
+//! The active width of the elimination array reuses the
+//! [`BackendSpec`] grammar (`stack`, `stack+hw`, `stack+aggfunnel:4`,
+//! `stack+combfunnel`, `stack+elastic:fixed:2`, …): `hw` means no
+//! elimination (bare Treiber), funnel specs pin a fixed width, and
+//! `elastic` makes the width resizable at runtime through the
+//! registry's `resize` op. Shrinking is always safe: a pusher parks
+//! for a bounded spin and withdraws with a CAS, so an item can never
+//! be stranded in a slot that poppers no longer scan.
+//!
+//! Each parked slot packs `(item, tag ‖ waiting-bit)` in one
+//! [`AtomicU128`]; the tag bumps on every transition, so a popper's
+//! take and the owner's withdraw race on one CAS and exactly one
+//! wins.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::faa::{BackendSpec, BatchStats};
+use crate::sync::atomic128::{pack, unpack};
+use crate::sync::{AtomicU128, RetryPolicy, TreiberStack};
+
+/// Reserved sentinel: stacks cannot carry this value (same ⊥ as
+/// [`super::EMPTY_ITEM`]).
+pub const EMPTY_STACK_ITEM: u64 = u64::MAX;
+
+/// Failed central head CASes before an operation detours to the
+/// elimination array.
+const CENTRAL_ATTEMPTS: u32 = 1;
+
+/// How long a parked pusher waits for a partner before withdrawing.
+const ELIM_SPINS: u32 = 128;
+
+/// Waiting bit of a slot's state word (`hi = tag << 1 | WAITING`).
+const WAITING: u64 = 1;
+
+/// A multi-producer multi-consumer LIFO stack of `u64` items.
+///
+/// `tid` contract is the same as [`crate::faa::FetchAddObject`]: ids
+/// in `0..max_threads`, one OS thread per id at a time.
+pub trait ConcurrentStack: Send + Sync {
+    /// Push `item` (must not equal [`EMPTY_STACK_ITEM`]).
+    fn push(&self, tid: usize, item: u64);
+
+    /// Pop the most recently pushed item, or `None` if the stack is
+    /// empty at some point during the call (linearizable emptiness).
+    fn pop(&self, tid: usize) -> Option<u64>;
+
+    fn max_threads(&self) -> usize;
+
+    /// Transfer statistics in funnel terms: `ops` completed transfers
+    /// vs `main_faas` central-stack touches (eliminated pairs never
+    /// touch the center, so `ops > main_faas` iff elimination paid).
+    fn batch_stats(&self) -> BatchStats {
+        BatchStats::default()
+    }
+
+    /// Swap the [`RetryPolicy`] pacing the central head CAS loops.
+    fn set_cas_policy(&self, _policy: RetryPolicy) {}
+
+    /// The CAS retry policy in force, `None` for stacks with no
+    /// guarded loops.
+    fn cas_policy(&self) -> Option<RetryPolicy> {
+        None
+    }
+
+    /// Resize the elimination layer to `width` active slots (elastic
+    /// stacks only; fixed-width stacks ignore the request). Returns
+    /// the width now in force.
+    fn resize_elimination(&self, _width: usize) -> usize {
+        0
+    }
+
+    /// Active elimination slots (0 = elimination disabled).
+    fn elimination_width(&self) -> usize {
+        0
+    }
+}
+
+/// The elimination-backed stack every spec builds (width 0 degrades
+/// to the bare central [`TreiberStack`]).
+pub struct EliminationStack {
+    central: TreiberStack,
+    /// Rendezvous slots: `lo` = parked item, `hi` = `tag << 1 |
+    /// waiting`. Tags version every transition so take and withdraw
+    /// race on one CAS.
+    slots: Vec<AtomicU128>,
+    /// Slots currently in play (`0..=slots.len()`), the resize knob.
+    active: AtomicUsize,
+    resizable: bool,
+    /// Completed transfers (pushes + successful pops).
+    ops: AtomicU64,
+    /// Pairs exchanged through the array (each saves two central ops).
+    eliminated: AtomicU64,
+    /// Central head CASes that lost and detoured to the array.
+    central_fails: AtomicU64,
+}
+
+impl EliminationStack {
+    /// A stack for `max_threads` threads with `capacity` elimination
+    /// slots, `width` of them initially active. `resizable` gates
+    /// [`ConcurrentStack::resize_elimination`].
+    pub fn new(
+        max_threads: usize,
+        capacity: usize,
+        width: usize,
+        resizable: bool,
+    ) -> EliminationStack {
+        EliminationStack {
+            central: TreiberStack::new(max_threads),
+            slots: (0..capacity).map(|_| AtomicU128::new_pair(0, 0)).collect(),
+            active: AtomicUsize::new(width.min(capacity)),
+            resizable,
+            ops: AtomicU64::new(0),
+            eliminated: AtomicU64::new(0),
+            central_fails: AtomicU64::new(0),
+        }
+    }
+
+    /// Pairs exchanged through the elimination array so far.
+    pub fn eliminated_pairs(&self) -> u64 {
+        self.eliminated.load(Ordering::Relaxed)
+    }
+
+    fn width(&self) -> usize {
+        self.active.load(Ordering::Relaxed).min(self.slots.len())
+    }
+
+    /// Park `item` in a slot and wait briefly for a popper. `true` ⇒
+    /// a popper took it (the pair is done); `false` ⇒ withdrawn (or
+    /// no free slot), the caller retries the central stack.
+    fn try_eliminate_push(&self, tid: usize, item: u64, width: usize, round: u64) -> bool {
+        let slot = &self.slots[((tid as u64).wrapping_add(round) % width as u64) as usize];
+        let cur = slot.load();
+        let (_, st) = unpack(cur);
+        if st & WAITING != 0 {
+            return false; // occupied by another pusher
+        }
+        let parked = pack(item, (((st >> 1) + 1) << 1) | WAITING);
+        if slot.compare_exchange(cur, parked).is_err() {
+            return false;
+        }
+        for _ in 0..ELIM_SPINS {
+            std::hint::spin_loop();
+            if slot.load() != parked {
+                // The only transition out of our parked state another
+                // thread can make is a popper's take.
+                return true;
+            }
+        }
+        // Withdraw: one CAS decides against a late popper.
+        let empty = pack(0, ((st >> 1) + 2) << 1);
+        slot.compare_exchange(parked, empty).is_err()
+    }
+
+    /// Scan the active slots for a waiting pusher; taking one
+    /// linearizes its push immediately followed by this pop.
+    fn try_eliminate_pop(&self, tid: usize, width: usize) -> Option<u64> {
+        for i in 0..width {
+            let slot = &self.slots[(tid + i) % width];
+            let cur = slot.load();
+            let (val, st) = unpack(cur);
+            if st & WAITING == 0 {
+                continue;
+            }
+            let empty = pack(0, (((st >> 1) + 1) << 1));
+            if slot.compare_exchange(cur, empty).is_ok() {
+                self.eliminated.fetch_add(1, Ordering::Relaxed);
+                return Some(val);
+            }
+        }
+        None
+    }
+}
+
+impl ConcurrentStack for EliminationStack {
+    fn push(&self, tid: usize, item: u64) {
+        assert_ne!(item, EMPTY_STACK_ITEM, "EMPTY_STACK_ITEM is reserved");
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        let mut pending = item;
+        let mut round = 0u64;
+        loop {
+            match self.central.push_bounded(tid, pending, CENTRAL_ATTEMPTS) {
+                Ok(()) => return,
+                Err(it) => {
+                    self.central_fails.fetch_add(CENTRAL_ATTEMPTS as u64, Ordering::Relaxed);
+                    pending = it;
+                }
+            }
+            let width = self.width();
+            if width > 0 {
+                round = round.wrapping_add(1);
+                if self.try_eliminate_push(tid, pending, width, round) {
+                    return;
+                }
+            }
+        }
+    }
+
+    fn pop(&self, tid: usize) -> Option<u64> {
+        loop {
+            match self.central.pop_bounded(tid, CENTRAL_ATTEMPTS) {
+                Ok(Some(v)) => {
+                    self.ops.fetch_add(1, Ordering::Relaxed);
+                    return Some(v);
+                }
+                Ok(None) => {
+                    // Central is empty; a parked pusher is not yet
+                    // linearized, but taking it linearizes the pair
+                    // back to back — better than reporting empty.
+                    let width = self.width();
+                    if width > 0 {
+                        if let Some(v) = self.try_eliminate_pop(tid, width) {
+                            self.ops.fetch_add(1, Ordering::Relaxed);
+                            return Some(v);
+                        }
+                    }
+                    return None;
+                }
+                Err(()) => {
+                    self.central_fails.fetch_add(CENTRAL_ATTEMPTS as u64, Ordering::Relaxed);
+                    let width = self.width();
+                    if width > 0 {
+                        if let Some(v) = self.try_eliminate_pop(tid, width) {
+                            self.ops.fetch_add(1, Ordering::Relaxed);
+                            return Some(v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn max_threads(&self) -> usize {
+        self.central.max_threads()
+    }
+
+    fn batch_stats(&self) -> BatchStats {
+        BatchStats {
+            main_faas: self.central.central_op_count(),
+            ops: self.ops.load(Ordering::Relaxed),
+            single_op_batches: 0,
+            cas_failures: self.central_fails.load(Ordering::Relaxed),
+        }
+    }
+
+    fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.central.set_cas_policy(policy);
+    }
+
+    fn cas_policy(&self) -> Option<RetryPolicy> {
+        Some(self.central.cas_policy())
+    }
+
+    fn resize_elimination(&self, width: usize) -> usize {
+        if self.resizable {
+            let w = width.min(self.slots.len());
+            self.active.store(w, Ordering::Relaxed);
+            return w;
+        }
+        self.elimination_width()
+    }
+
+    fn elimination_width(&self) -> usize {
+        self.width()
+    }
+}
+
+/// Build a stack from a spec string: the `stack` family, optionally
+/// composed with an elimination width from the [`BackendSpec`]
+/// grammar — `stack` / `stack+hw` (no elimination), `stack+aggfunnel`
+/// / `stack+aggfunnel:4` / `stack+combfunnel` (fixed width),
+/// `stack+elastic:aimd` / `stack+elastic:fixed:2` (resizable; the
+/// policy seeds the initial width, runtime changes go through the
+/// `resize` op). `max_width` overrides the elastic slot capacity. A
+/// `:b<policy>` suffix paces the central head CAS; `:d<k>` direct
+/// quotas are rejected (stacks have no priority path), exactly like
+/// ring-queue index specs.
+pub fn make_stack(
+    spec: &str,
+    max_threads: usize,
+    max_width: Option<usize>,
+) -> Option<Arc<dyn ConcurrentStack>> {
+    let spec = spec.trim();
+    let (family, layer) = match spec.split_once('+') {
+        Some((f, l)) => (f, Some(l)),
+        None => (spec, None),
+    };
+    if family != "stack" {
+        return None;
+    }
+    let mut layer_spec = BackendSpec::parse(layer.unwrap_or("hw"))?;
+    if layer_spec.direct_quota().is_some() {
+        return None;
+    }
+    if let Some(w) = max_width {
+        layer_spec = layer_spec.with_max_width(w);
+    }
+    let cas = layer_spec.cas_policy();
+    let stack = match layer_spec {
+        BackendSpec::Hw => EliminationStack::new(max_threads, 0, 0, false),
+        BackendSpec::Agg { m, .. } => EliminationStack::new(max_threads, m, m, false),
+        BackendSpec::Comb => {
+            let w = max_threads.div_ceil(2).max(1);
+            EliminationStack::new(max_threads, w, w, false)
+        }
+        BackendSpec::Elastic { policy, max_width, .. } => {
+            let initial = policy.initial_width(max_threads, max_width).max(1);
+            EliminationStack::new(max_threads, max_width, initial, true)
+        }
+    };
+    let stack: Arc<dyn ConcurrentStack> = Arc::new(stack);
+    if let Some(p) = cas {
+        stack.set_cas_policy(p);
+    }
+    Some(stack)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_lifo_against_a_vec_model() {
+        let s = EliminationStack::new(1, 4, 4, true);
+        assert_eq!(s.pop(0), None);
+        let mut model = Vec::new();
+        let mut x = 1u64;
+        for phase in 0..4 {
+            for _ in 0..(50 + phase * 37) {
+                s.push(0, x);
+                model.push(x);
+                x += 1;
+            }
+            for _ in 0..(30 + phase * 29) {
+                assert_eq!(s.pop(0), model.pop());
+            }
+        }
+        while let Some(v) = model.pop() {
+            assert_eq!(s.pop(0), Some(v));
+        }
+        assert_eq!(s.pop(0), None);
+        let stats = s.batch_stats();
+        assert_eq!(stats.ops, 2 * (x - 1), "every transfer counted twice (push + pop)");
+    }
+
+    #[test]
+    fn make_stack_spec_grammar() {
+        for spec in [
+            "stack",
+            "stack+hw",
+            "stack+aggfunnel",
+            "stack+aggfunnel:4",
+            "stack+combfunnel",
+            "stack+elastic",
+            "stack+elastic:aimd",
+            "stack+elastic:sqrtp",
+            "stack+elastic:fixed:2",
+        ] {
+            let s = make_stack(spec, 2, None).unwrap_or_else(|| panic!("{spec} not built"));
+            s.push(0, 7);
+            assert_eq!(s.pop(1), Some(7), "{spec}");
+        }
+        assert!(make_stack("nope", 2, None).is_none());
+        assert!(make_stack("stack+nope", 2, None).is_none());
+        assert!(make_stack("lcrq", 2, None).is_none(), "queue families are not stacks");
+        // No priority path ⇒ `:d` quotas are invalid, not inert.
+        assert!(make_stack("stack+elastic:aimd:d2", 2, None).is_none());
+        assert!(make_stack("stack+aggfunnel:4:d1", 2, None).is_none());
+    }
+
+    #[test]
+    fn spec_widths_and_resizability() {
+        let s = make_stack("stack+hw", 4, None).unwrap();
+        assert_eq!(s.elimination_width(), 0, "hw = bare Treiber");
+        assert_eq!(s.resize_elimination(8), 0, "hw is not resizable");
+
+        let s = make_stack("stack+aggfunnel:3", 4, None).unwrap();
+        assert_eq!(s.elimination_width(), 3);
+        assert_eq!(s.resize_elimination(1), 3, "fixed width ignores resize");
+
+        let s = make_stack("stack+combfunnel", 4, None).unwrap();
+        assert_eq!(s.elimination_width(), 2, "⌈p/2⌉ slots");
+
+        let s = make_stack("stack+elastic:fixed:2", 8, None).unwrap();
+        assert_eq!(s.elimination_width(), 2);
+        assert_eq!(s.resize_elimination(5), 5);
+        assert_eq!(s.resize_elimination(100), 12, "clamped to capacity");
+        assert_eq!(s.resize_elimination(0), 0, "elimination can be turned off live");
+        s.push(0, 9);
+        assert_eq!(s.pop(1), Some(9), "width 0 still works through the center");
+
+        let s = make_stack("stack+elastic:fixed:2", 8, Some(20)).unwrap();
+        assert_eq!(s.resize_elimination(100), 20, "max_width override widens capacity");
+    }
+
+    #[test]
+    fn cas_policy_suffix_reaches_the_central_stack() {
+        let s = make_stack("stack+elastic:aimd:bexp", 2, None).unwrap();
+        assert_eq!(s.cas_policy(), Some(RetryPolicy::Exp));
+        s.set_cas_policy(RetryPolicy::None);
+        assert_eq!(s.cas_policy(), Some(RetryPolicy::None));
+        // `hw` rejects the suffix, exactly like ring-queue specs.
+        assert!(make_stack("stack+hw:bexp", 2, None).is_none());
+    }
+
+    #[test]
+    fn elimination_pairs_exchange_without_the_center() {
+        // Force the rendezvous deterministically: empty central stack,
+        // one parked pusher, one popper scanning the array.
+        let s = Arc::new(EliminationStack::new(2, 2, 2, true));
+        assert!(!s.try_eliminate_push(0, 42, 2, 0), "no popper yet: the push must withdraw");
+        // Park again and steal it from the popper side.
+        let width = 2;
+        let slot_taken = std::thread::scope(|scope| {
+            let s2 = Arc::clone(&s);
+            let popper = scope.spawn(move || {
+                for _ in 0..100_000 {
+                    if let Some(v) = s2.try_eliminate_pop(1, width) {
+                        return Some(v);
+                    }
+                    std::hint::spin_loop();
+                }
+                None
+            });
+            let mut matched = false;
+            for round in 0..100_000u64 {
+                if s.try_eliminate_push(0, 42, width, round) {
+                    matched = true;
+                    break;
+                }
+            }
+            let got = popper.join().unwrap();
+            matched && got == Some(42)
+        });
+        assert!(slot_taken, "parked item must reach the popper");
+        assert_eq!(s.eliminated_pairs(), 1);
+        assert_eq!(
+            s.central.central_op_count(),
+            0,
+            "the pair exchanged without touching shared state"
+        );
+    }
+
+    #[test]
+    fn concurrent_push_pop_no_loss_no_dup_lifo_per_producer() {
+        use std::sync::atomic::AtomicU64 as Count;
+        const THREADS: usize = 4;
+        const PER: u64 = 2_000;
+        let s: Arc<dyn ConcurrentStack> =
+            make_stack("stack+elastic:fixed:2", 2 * THREADS, None).unwrap();
+        let total = THREADS as u64 * PER;
+        let popped = Arc::new(Count::new(0));
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let s = Arc::clone(&s);
+                scope.spawn(move || {
+                    for seq in 0..PER {
+                        s.push(t, ((t as u64) << 32) | seq);
+                    }
+                });
+            }
+            let streams: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let s = Arc::clone(&s);
+                    let popped = Arc::clone(&popped);
+                    scope.spawn(move || {
+                        let mut got = Vec::new();
+                        while popped.load(Ordering::Acquire) < total {
+                            if let Some(v) = s.pop(THREADS + t) {
+                                got.push(v);
+                                popped.fetch_add(1, Ordering::AcqRel);
+                            } else {
+                                std::thread::yield_now();
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+            let mut all: Vec<u64> =
+                streams.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            assert_eq!(all.len() as u64, total);
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len() as u64, total, "duplicated items");
+        });
+        assert_eq!(s.pop(0), None, "stack drained");
+        let stats = s.batch_stats();
+        assert_eq!(stats.ops, 2 * total, "every item pushed once and popped once");
+    }
+}

@@ -278,6 +278,18 @@ fn req_to_line(req: &BinRequest) -> String {
             ("count", Json::num(*count as f64)),
         ])
         .to_string(),
+        BinRequest::Push { name, items } => Json::obj(vec![
+            ("op", Json::str("push")),
+            ("name", Json::str(name.clone())),
+            ("items", Json::arr(items.iter().map(Item::to_json))),
+        ])
+        .to_string(),
+        BinRequest::Pop { name, count } => Json::obj(vec![
+            ("op", Json::str("pop")),
+            ("name", Json::str(name.clone())),
+            ("count", Json::num(*count as f64)),
+        ])
+        .to_string(),
     }
 }
 
@@ -306,15 +318,22 @@ fn json_to_resp(req: &BinRequest, resp: &Json) -> BinResponse {
             Some(count) => BinResponse::Enqueued(count as u32),
             None => missing("count"),
         },
-        BinRequest::Dequeue { .. } => match resp.get("items").and_then(Json::as_arr) {
-            Some(arr) => {
-                let items: Option<Vec<Item>> = arr.iter().map(Item::from_json).collect();
-                match items {
-                    Some(items) => BinResponse::Items(items),
-                    None => missing("parseable items"),
+        BinRequest::Dequeue { .. } | BinRequest::Pop { .. } => {
+            match resp.get("items").and_then(Json::as_arr) {
+                Some(arr) => {
+                    let items: Option<Vec<Item>> = arr.iter().map(Item::from_json).collect();
+                    match (items, req) {
+                        (Some(items), BinRequest::Pop { .. }) => BinResponse::Popped(items),
+                        (Some(items), _) => BinResponse::Items(items),
+                        (None, _) => missing("parseable items"),
+                    }
                 }
+                None => missing("items"),
             }
-            None => missing("items"),
+        }
+        BinRequest::Push { .. } => match resp.get("count").and_then(Json::as_u64) {
+            Some(count) => BinResponse::Pushed(count as u32),
+            None => missing("count"),
         },
     }
 }
@@ -582,9 +601,10 @@ impl CreateSpec {
 
 /// Shard-aware client for the registry service: the connection
 /// manager and control plane. Data-plane traffic goes through
-/// [`CounterHandle`]/[`QueueHandle`] values from
-/// [`counter`](Self::counter)/[`queue`](Self::queue) (typed lookup)
-/// or the `create_*` constructors.
+/// [`CounterHandle`]/[`QueueHandle`]/[`StackHandle`] values from
+/// [`counter`](Self::counter)/[`queue`](Self::queue)/
+/// [`stack`](Self::stack) (typed lookup) or the `create_*`
+/// constructors.
 pub struct RegistryClient {
     core: Arc<Mutex<ClientCore>>,
 }
@@ -667,6 +687,12 @@ impl RegistryClient {
         Ok(QueueHandle { core: Arc::clone(&self.core), name: name.to_string() })
     }
 
+    /// Typed lookup: a handle to an existing stack.
+    pub fn stack(&self, name: &str) -> Result<StackHandle> {
+        self.expect_kind(name, "stack")?;
+        Ok(StackHandle { core: Arc::clone(&self.core), name: name.to_string() })
+    }
+
     fn expect_kind(&self, name: &str, want: &str) -> Result<()> {
         let stats = self.object_stats(name)?;
         let kind = stats.get("kind").and_then(Json::as_str).unwrap_or("?");
@@ -691,8 +717,14 @@ impl RegistryClient {
         Ok(QueueHandle { core: Arc::clone(&self.core), name: name.to_string() })
     }
 
-    /// Untyped create (`kind`: `counter` | `queue`) — the CLI's
-    /// entry point; prefer the typed constructors in code.
+    /// Create a stack and return its handle.
+    pub fn create_stack(&self, name: &str, spec: &CreateSpec) -> Result<StackHandle> {
+        self.create(name, "stack", spec)?;
+        Ok(StackHandle { core: Arc::clone(&self.core), name: name.to_string() })
+    }
+
+    /// Untyped create (`kind`: `counter` | `queue` | `stack`) — the
+    /// CLI's entry point; prefer the typed constructors in code.
     pub fn create(&self, name: &str, kind: &str, spec: &CreateSpec) -> Result<()> {
         let mut pairs = vec![
             ("op", Json::str("create")),
@@ -938,7 +970,88 @@ impl QueueHandle {
     }
 }
 
-// The width-control and stats requests are identical for both kinds;
+/// A typed handle to one named stack (LIFO; elimination-backed
+/// backends server-side).
+#[derive(Clone)]
+pub struct StackHandle {
+    core: Arc<Mutex<ClientCore>>,
+    name: String,
+}
+
+impl StackHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Push `item` (an integer below 2⁵³).
+    pub fn push(&self, item: u64) -> Result<()> {
+        self.push_batch(vec![Item::Int(item)]).map(drop)
+    }
+
+    /// Push a byte-string payload (at most
+    /// [`frame::MAX_ITEM_BYTES`] bytes).
+    pub fn push_bytes(&self, data: &[u8]) -> Result<()> {
+        self.push_batch(vec![Item::Bytes(data.to_vec())]).map(drop)
+    }
+
+    /// Push a batch of items as one wire frame, applied in order —
+    /// the last item of the batch ends up on top. Returns the number
+    /// pushed (always the full batch on success; the server stops at
+    /// the first failure).
+    pub fn push_batch(&self, items: Vec<Item>) -> Result<u32> {
+        let req = BinRequest::Push { name: self.name.clone(), items };
+        match self.core.lock().unwrap().call(&self.name, req)? {
+            BinResponse::Pushed(count) => Ok(count),
+            other => Err(anyhow!("unexpected push response {other:?}")),
+        }
+    }
+
+    /// Pop one integer item (`None` when empty). Fails with a typed
+    /// `Protocol` error when the top of the stack is a byte-string
+    /// payload — use [`pop_item`](Self::pop_item) for mixed-type
+    /// stacks. The item IS consumed in that case.
+    pub fn pop(&self) -> Result<Option<u64>> {
+        match self.pop_item()? {
+            None => Ok(None),
+            Some(Item::Int(v)) => Ok(Some(v)),
+            Some(Item::Bytes(_)) => Err(service_err(
+                ErrorCode::Protocol,
+                "popped a byte-string item; use pop_item for byte payloads",
+            )),
+        }
+    }
+
+    /// Pop one item of either type (`None` when empty).
+    pub fn pop_item(&self) -> Result<Option<Item>> {
+        Ok(self.pop_batch(1)?.into_iter().next())
+    }
+
+    /// Pop up to `count` items in one wire frame, top first. Returns
+    /// fewer (possibly zero) when the stack drains first.
+    pub fn pop_batch(&self, count: u32) -> Result<Vec<Item>> {
+        let req = BinRequest::Pop { name: self.name.clone(), count };
+        match self.core.lock().unwrap().call(&self.name, req)? {
+            BinResponse::Popped(items) => Ok(items),
+            other => Err(anyhow!("unexpected pop response {other:?}")),
+        }
+    }
+
+    pub fn stats(&self) -> Result<Json> {
+        object_stats(&self.core, &self.name)
+    }
+
+    /// Set the elimination layer's active width (elastic backends
+    /// only).
+    pub fn resize(&self, width: u64) -> Result<u64> {
+        resize(&self.core, &self.name, width)
+    }
+
+    pub fn set_policy(&self, policy: &str) -> Result<String> {
+        set_policy(&self.core, &self.name, policy)
+    }
+}
+
+// The width-control and stats requests are identical across kinds;
 // shared here so the handles stay one method per wire op.
 fn object_stats(core: &Arc<Mutex<ClientCore>>, name: &str) -> Result<Json> {
     core.lock().unwrap().roundtrip(

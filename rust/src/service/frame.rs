@@ -19,9 +19,9 @@
 //!   byte-for-byte the protocol it always had.
 //! * **Requests** ([`BinRequest`]): one op per frame, correlated with
 //!   responses strictly by order, so clients pipeline freely. The
-//!   batch ops — take `k`, enqueue `[items…]`, dequeue `k` — put a
-//!   whole batch in one frame, which the funnel executors then feed
-//!   into single aggregated passes.
+//!   batch ops — take `k`, enqueue `[items…]`, dequeue `k`, push
+//!   `[items…]`, pop `k` — put a whole batch in one frame, which the
+//!   funnel executors then feed into single aggregated passes.
 //! * **Responses** ([`BinResponse`]): a status byte (`0` ok, else the
 //!   [`ErrorCode`] wire byte), an op echo, then op-specific fields.
 //! * **Byte-string items** ([`Item`]): queue payloads are either
@@ -233,6 +233,10 @@ pub const OP_READ: u8 = 0x02;
 pub const OP_ENQUEUE: u8 = 0x03;
 /// Request opcode: dequeue up to `count` items from a queue.
 pub const OP_DEQUEUE: u8 = 0x04;
+/// Request opcode: push a batch of items onto a stack.
+pub const OP_PUSH: u8 = 0x05;
+/// Request opcode: pop up to `count` items from a stack.
+pub const OP_POP: u8 = 0x06;
 
 /// Item tag inside enqueue/dequeue payloads: a `u64 LE` integer.
 pub const TAG_INT: u8 = 0;
@@ -274,6 +278,21 @@ pub enum BinRequest {
         /// Maximum items to pop (the response may carry fewer).
         count: u32,
     },
+    /// `push`: push `items` onto stack `name`, in order (the last
+    /// item ends up on top).
+    Push {
+        /// Stack object name.
+        name: String,
+        /// Items, bottom-most first.
+        items: Vec<Item>,
+    },
+    /// `pop`: pop up to `count` items from stack `name`.
+    Pop {
+        /// Stack object name.
+        name: String,
+        /// Maximum items to pop (the response may carry fewer).
+        count: u32,
+    },
 }
 
 impl BinRequest {
@@ -284,6 +303,8 @@ impl BinRequest {
             BinRequest::Read { .. } => OP_READ,
             BinRequest::Enqueue { .. } => OP_ENQUEUE,
             BinRequest::Dequeue { .. } => OP_DEQUEUE,
+            BinRequest::Push { .. } => OP_PUSH,
+            BinRequest::Pop { .. } => OP_POP,
         }
     }
 
@@ -296,7 +317,9 @@ impl BinRequest {
             BinRequest::Take { name, .. }
             | BinRequest::Read { name }
             | BinRequest::Enqueue { name, .. }
-            | BinRequest::Dequeue { name, .. } => Some(name),
+            | BinRequest::Dequeue { name, .. }
+            | BinRequest::Push { name, .. }
+            | BinRequest::Pop { name, .. } => Some(name),
         }
     }
 }
@@ -340,9 +363,16 @@ pub fn encode_request(req: &BinRequest, out: &mut Vec<u8>) {
                 put_item(item, out);
             }
         }
-        BinRequest::Dequeue { name, count } => {
+        BinRequest::Dequeue { name, count } | BinRequest::Pop { name, count } => {
             put_name(name, out);
             out.extend_from_slice(&count.to_le_bytes());
+        }
+        BinRequest::Push { name, items } => {
+            put_name(name, out);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for item in items {
+                put_item(item, out);
+            }
         }
     }
 }
@@ -465,6 +495,31 @@ pub fn decode_request(payload: &[u8]) -> Result<BinRequest, String> {
             }
             BinRequest::Dequeue { name, count }
         }
+        OP_PUSH => {
+            let name = cur.name()?;
+            let n = cur.u32("push batch size")? as usize;
+            if n > MAX_BATCH_ITEMS {
+                return Err(format!(
+                    "push batch of {n} items exceeds the {MAX_BATCH_ITEMS}-item limit"
+                ));
+            }
+            let mut items = Vec::new();
+            for _ in 0..n {
+                items.push(cur.item()?);
+            }
+            BinRequest::Push { name, items }
+        }
+        OP_POP => {
+            let name = cur.name()?;
+            let count = cur.u32("pop count")?;
+            if count == 0 {
+                return Err("pop count must be positive".to_string());
+            }
+            if count as usize > MAX_BATCH_ITEMS {
+                return Err(format!("pop count {count} exceeds the {MAX_BATCH_ITEMS}-item limit"));
+            }
+            BinRequest::Pop { name, count }
+        }
         op => return Err(format!("unknown opcode {op:#04x}")),
     };
     cur.finish()?;
@@ -530,6 +585,11 @@ pub enum BinResponse {
     /// `dequeue` succeeded: the popped items (fewer than requested —
     /// possibly none — when the queue ran empty).
     Items(Vec<Item>),
+    /// `push` succeeded: how many items were pushed.
+    Pushed(u32),
+    /// `pop` succeeded: the popped items, top-most first (fewer than
+    /// requested — possibly none — when the stack ran empty).
+    Popped(Vec<Item>),
 }
 
 /// Serialize a response into a frame *payload* (no header).
@@ -567,6 +627,19 @@ pub fn encode_response(resp: &BinResponse, out: &mut Vec<u8>) {
                 put_item(item, out);
             }
         }
+        BinResponse::Pushed(n) => {
+            out.push(STATUS_OK);
+            out.push(OP_PUSH);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        BinResponse::Popped(items) => {
+            out.push(STATUS_OK);
+            out.push(OP_POP);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for item in items {
+                put_item(item, out);
+            }
+        }
     }
 }
 
@@ -593,7 +666,7 @@ pub fn decode_response(payload: &[u8]) -> Result<BinResponse, String> {
         OP_TAKE => BinResponse::Start(cur.u64("take start")?),
         OP_READ => BinResponse::Value(cur.u64("read value")?),
         OP_ENQUEUE => BinResponse::Enqueued(cur.u32("enqueued count")?),
-        OP_DEQUEUE => {
+        op @ (OP_DEQUEUE | OP_POP) => {
             let n = cur.u32("item count")? as usize;
             if n > MAX_BATCH_ITEMS {
                 return Err(format!(
@@ -604,8 +677,13 @@ pub fn decode_response(payload: &[u8]) -> Result<BinResponse, String> {
             for _ in 0..n {
                 items.push(cur.item()?);
             }
-            BinResponse::Items(items)
+            if op == OP_POP {
+                BinResponse::Popped(items)
+            } else {
+                BinResponse::Items(items)
+            }
         }
+        OP_PUSH => BinResponse::Pushed(cur.u32("pushed count")?),
         op => return Err(format!("unknown response op {op:#04x}")),
     };
     cur.finish()?;
@@ -667,7 +745,7 @@ mod tests {
     }
 
     fn rand_request(r: &mut Rng) -> BinRequest {
-        match r.below(5) {
+        match r.below(7) {
             0 => BinRequest::Json("{\"op\":\"list\"}".to_string()),
             1 => BinRequest::Take {
                 name: "tickets".into(),
@@ -679,12 +757,17 @@ mod tests {
                 let items = (0..r.below(6)).map(|_| rand_item(r)).collect();
                 BinRequest::Enqueue { name: "jobs".into(), items }
             }
-            _ => BinRequest::Dequeue { name: "jobs".into(), count: 1 + r.below(64) as u32 },
+            4 => BinRequest::Dequeue { name: "jobs".into(), count: 1 + r.below(64) as u32 },
+            5 => {
+                let items = (0..r.below(6)).map(|_| rand_item(r)).collect();
+                BinRequest::Push { name: "undo".into(), items }
+            }
+            _ => BinRequest::Pop { name: "undo".into(), count: 1 + r.below(64) as u32 },
         }
     }
 
     fn rand_response(r: &mut Rng) -> BinResponse {
-        match r.below(6) {
+        match r.below(8) {
             0 => BinResponse::Err {
                 code: super::super::error::ErrorCode::NoSuchObject,
                 msg: "no object named \"x\"".into(),
@@ -693,6 +776,8 @@ mod tests {
             2 => BinResponse::Start(r.below(1 << 50)),
             3 => BinResponse::Value(r.below(1 << 50)),
             4 => BinResponse::Enqueued(r.below(1 << 16) as u32),
+            5 => BinResponse::Pushed(r.below(1 << 16) as u32),
+            6 => BinResponse::Popped((0..r.below(6)).map(|_| rand_item(r)).collect()),
             _ => BinResponse::Items((0..r.below(6)).map(|_| rand_item(r)).collect()),
         }
     }

@@ -2,9 +2,11 @@
 //!
 //! A TCP server holding **named objects** — elastic-funnel counters
 //! (monotonic ticket/sequence dispensers, the classic fetch-and-add
-//! application) and funnel-backed FIFO queues (LCRQ/PRQ/MSQ, with
-//! `lcrq+elastic` queues riding resizable funnel ring indices) —
-//! spread across `S` independent [`Shard`]s. Each shard owns its own
+//! application), funnel-backed FIFO queues (LCRQ/PRQ/MSQ, with
+//! `lcrq+elastic` queues riding resizable funnel ring indices), and
+//! elimination-backed LIFO stacks (`stack+elastic` stacks resize
+//! their elimination array live) — spread across `S` independent
+//! [`Shard`]s. Each shard owns its own
 //! [`Registry`], listener port, `workers`-sized tid-lease pool,
 //! metrics, and resize-controller thread; object names route to
 //! shards by FNV-1a hash ([`shard_of`]), so unrelated objects never
@@ -59,6 +61,9 @@
 //! → {"op":"enqueue","name":"jobs","items":[7,"ff"]} ← {"count":2,"ok":true}                (batch)
 //! → {"op":"dequeue","name":"jobs"}             ← {"ok":true,"item":7}
 //! → {"op":"dequeue","name":"jobs","count":8}   ← {"count":3,"items":["00ff",7,"ff"],...}   (batch, ≤ 8 items)
+//! → {"op":"create","name":"undo","kind":"stack"}
+//! → {"op":"push","name":"undo","item":7}       ← {"ok":true}
+//! → {"op":"pop","name":"undo"}                 ← {"ok":true,"item":7}                      (LIFO; batch via "count")
 //! → {"op":"list"}                              ← {"ok":true,"count":2,"objects":[...]}   (all shards, sorted)
 //! → {"op":"stats","name":"jobs"}               ← {"ok":true,...counters...}
 //! → {"op":"stats","name":"*"}                  ← {"ok":true,"scope":"cluster",...}       (all shards, merged)
@@ -96,7 +101,7 @@ use crate::config::ObjectManifest;
 use crate::faa::{BatchStats, WidthPolicy};
 use crate::sync::RetryPolicy;
 use crate::util::json::Json;
-pub use client::{CounterHandle, CreateSpec, QueueHandle, RegistryClient};
+pub use client::{CounterHandle, CreateSpec, QueueHandle, RegistryClient, StackHandle};
 pub use conn::ConnOpts;
 pub use error::{code_of, ErrorCode, ServiceError};
 pub use frame::{BinRequest, BinResponse, Item};
@@ -384,15 +389,25 @@ pub fn serve(opts: &ServeOpts) -> Result<ServerHandle> {
                     },
                 )
                 .with_context(|| format!("recovering object {name:?}"))?;
-            if obj.kind == "counter" {
-                entry
+            match obj.kind.as_str() {
+                "counter" => entry
                     .seed_counter(obj.counter)
-                    .with_context(|| format!("seeding counter {name:?}"))?;
-            } else {
-                for item in &obj.items {
-                    entry
-                        .seed_queue_item(item.clone())
-                        .with_context(|| format!("seeding queue {name:?}"))?;
+                    .with_context(|| format!("seeding counter {name:?}"))?,
+                "stack" => {
+                    // Bottom-to-top: pushing in model order rebuilds
+                    // the same stack.
+                    for item in &obj.items {
+                        entry
+                            .seed_stack_item(item.clone())
+                            .with_context(|| format!("seeding stack {name:?}"))?;
+                    }
+                }
+                _ => {
+                    for item in &obj.items {
+                        entry
+                            .seed_queue_item(item.clone())
+                            .with_context(|| format!("seeding queue {name:?}"))?;
+                    }
                 }
             }
             shard.metrics.incr("recovered_objects");
@@ -553,7 +568,7 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
             // only for the ops that actually enter a funnel
             // (`stats`/`resize`/`policy` never touch per-thread
             // state, so they must not occupy the small pool).
-            let needs_tid = matches!(op, "take" | "read" | "enqueue" | "dequeue");
+            let needs_tid = matches!(op, "take" | "read" | "enqueue" | "dequeue" | "push" | "pop");
             let foreign;
             let tid = if owner.index == via || !needs_tid {
                 tid
@@ -667,6 +682,82 @@ fn handle_request(state: &ServerState, via: usize, tid: usize, line: &str) -> Re
                         })
                     }
                 }
+                "push" => {
+                    // Same three spellings as enqueue: `item`
+                    // (integer), `data` (hex byte string), `items`
+                    // (mixed batch, bottom-most first).
+                    if let Some(arr) = req.get("items").and_then(Json::as_arr) {
+                        if arr.len() > frame::MAX_BATCH_ITEMS {
+                            return Err(anyhow!(
+                                "push batch of {} exceeds the per-request limit {}",
+                                arr.len(),
+                                frame::MAX_BATCH_ITEMS
+                            ));
+                        }
+                        let items = arr
+                            .iter()
+                            .map(|v| {
+                                Item::from_json(v).ok_or_else(|| {
+                                    anyhow!(
+                                        "unparseable push item (need a non-negative \
+                                         integer or hex string)"
+                                    )
+                                })
+                            })
+                            .collect::<Result<Vec<Item>>>()?;
+                        let count = exec_push_batch(&entry, tid, items)?;
+                        Ok(Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("count", Json::num(count as f64)),
+                        ]))
+                    } else if let Some(hex) = req.get("data").and_then(Json::as_str) {
+                        let bytes = frame::from_hex(hex).ok_or_else(|| {
+                            anyhow!("push data must be an even-length hex string")
+                        })?;
+                        entry.push_item(tid, Item::Bytes(bytes))?;
+                        Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+                    } else {
+                        let item = req.get("item").and_then(Json::as_u64).ok_or_else(|| {
+                            anyhow!("push needs an item (non-negative integer)")
+                        })?;
+                        entry.push(tid, item)?;
+                        Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+                    }
+                }
+                "pop" => {
+                    if let Some(count) = req.get("count").and_then(Json::as_u64) {
+                        if count == 0 {
+                            return Err(anyhow!("pop count must be positive"));
+                        }
+                        if count > frame::MAX_BATCH_ITEMS as u64 {
+                            return Err(anyhow!(
+                                "pop count {count} exceeds the per-request limit {}",
+                                frame::MAX_BATCH_ITEMS
+                            ));
+                        }
+                        let items = exec_pop_batch(&entry, tid, count as u32)?;
+                        Ok(Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("count", Json::num(items.len() as f64)),
+                            ("items", Json::arr(items.iter().map(Item::to_json))),
+                        ]))
+                    } else {
+                        Ok(match entry.pop_item(tid)? {
+                            Some(Item::Int(item)) => Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("item", Json::num(item as f64)),
+                            ]),
+                            Some(Item::Bytes(b)) => Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("data", Json::str(frame::to_hex(&b))),
+                            ]),
+                            None => Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("empty", Json::Bool(true)),
+                            ]),
+                        })
+                    }
+                }
                 "stats" => {
                     entry.metrics.incr("stats");
                     let mut json = entry.stats_json();
@@ -753,6 +844,31 @@ fn exec_dequeue_batch(entry: &ObjectEntry, tid: usize, count: u32) -> Result<Vec
     Ok(items)
 }
 
+/// Push a decoded batch in order on one funnel tid (the stack twin of
+/// [`exec_enqueue_batch`]): the last item of the batch ends up on
+/// top. The same mid-batch abort semantics apply — a rejected item
+/// keeps the already-pushed prefix.
+fn exec_push_batch(entry: &ObjectEntry, tid: usize, items: Vec<Item>) -> Result<u32> {
+    let count = items.len() as u32;
+    for item in items {
+        entry.push_item(tid, item)?;
+    }
+    Ok(count)
+}
+
+/// Pop up to `count` items on one funnel tid, top-most first,
+/// stopping early when the stack drains.
+fn exec_pop_batch(entry: &ObjectEntry, tid: usize, count: u32) -> Result<Vec<Item>> {
+    let mut items = Vec::with_capacity((count as usize).min(64));
+    for _ in 0..count {
+        match entry.pop_item(tid)? {
+            Some(item) => items.push(item),
+            None => break,
+        }
+    }
+    Ok(items)
+}
+
 /// Route one decoded binary frame *payload* received on shard `via`
 /// and return the response payload (the caller wraps it back into a
 /// checksummed frame). Errors never tear the connection here: they
@@ -782,8 +898,9 @@ pub(crate) fn handle_binary(state: &ServerState, via: usize, tid: usize, payload
 }
 
 /// Execute a binary data-plane op. Routing and foreign-tid leasing
-/// mirror the JSON data plane; all four binary ops enter a funnel, so
-/// a mis-routed frame always leases from the owner's foreign pool.
+/// mirror the JSON data plane; every binary data op enters a funnel
+/// (or the stack's elimination layer), so a mis-routed frame always
+/// leases from the owner's foreign pool.
 fn binary_data_op(
     state: &ServerState,
     via: usize,
@@ -794,7 +911,9 @@ fn binary_data_op(
         BinRequest::Take { name, .. }
         | BinRequest::Read { name }
         | BinRequest::Enqueue { name, .. }
-        | BinRequest::Dequeue { name, .. } => name.clone(),
+        | BinRequest::Dequeue { name, .. }
+        | BinRequest::Push { name, .. }
+        | BinRequest::Pop { name, .. } => name.clone(),
         BinRequest::Json(_) => return Err(anyhow!("json frames never reach the data plane")),
     };
     let owner = state.route(via, &name);
@@ -820,6 +939,10 @@ fn binary_data_op(
         BinRequest::Dequeue { count, .. } => {
             BinResponse::Items(exec_dequeue_batch(&entry, tid, count)?)
         }
+        BinRequest::Push { items, .. } => {
+            BinResponse::Pushed(exec_push_batch(&entry, tid, items)?)
+        }
+        BinRequest::Pop { count, .. } => BinResponse::Popped(exec_pop_batch(&entry, tid, count)?),
     })
 }
 
@@ -943,6 +1066,20 @@ fn cluster_stats(state: &ServerState) -> Json {
             sj.insert("wal_flushes".to_string(), Json::num(log.wal_flush_count() as f64));
             sj.insert("wal_errors".to_string(), Json::num(log.wal_error_count() as f64));
             sj.insert("snapshots".to_string(), Json::num(log.snapshot_count() as f64));
+            // Claim-stack journal health: lock-free record pushes and
+            // the flusher's batch-claim behaviour (how many drains,
+            // how big the claimed windows run).
+            sj.insert("journal_pushes".to_string(), Json::num(log.journal_push_count() as f64));
+            sj.insert(
+                "journal_cas_retries".to_string(),
+                Json::num(log.journal_cas_retry_count() as f64),
+            );
+            sj.insert("journal_drains".to_string(), Json::num(log.journal_drain_count() as f64));
+            sj.insert(
+                "journal_batch_max".to_string(),
+                Json::num(log.journal_batch_max() as f64),
+            );
+            sj.insert("journal_batch_avg".to_string(), Json::num(log.journal_batch_avg()));
         } else {
             sj.insert("persist".to_string(), Json::Bool(false));
         }
@@ -1532,6 +1669,53 @@ mod tests {
         assert_eq!(resp.get("code").and_then(Json::as_str), Some("protocol"));
         let resp = ask(&mut writer, &mut reader, r#"{"op":"dequeue","name":"jobs"}"#);
         assert_eq!(resp.get("empty").and_then(Json::as_bool), Some(true));
+        server.shutdown();
+    }
+
+    #[test]
+    fn stack_ops_over_the_json_wire() {
+        let server = start();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let ask = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            writer.write_all(req.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap()
+        };
+        let resp = ask(
+            &mut writer,
+            &mut reader,
+            r#"{"op":"create","name":"undo","kind":"stack","backend":"stack+elastic:fixed:2"}"#,
+        );
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("stack"), "{resp:?}");
+        // Single pushes, a hex push, then a batch push.
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"push","name":"undo","item":1}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"push","name":"undo","data":"beef"}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let resp =
+            ask(&mut writer, &mut reader, r#"{"op":"push","name":"undo","items":[2,3]}"#);
+        assert_eq!(resp.get("count").and_then(Json::as_u64), Some(2));
+        // Single pop answers the top of the stack.
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"pop","name":"undo"}"#);
+        assert_eq!(resp.get("item").and_then(Json::as_u64), Some(3), "LIFO top first");
+        // Batch pop drains the rest in LIFO order.
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"pop","name":"undo","count":8}"#);
+        assert_eq!(resp.get("count").and_then(Json::as_u64), Some(3), "{resp:?}");
+        let items = resp.get("items").and_then(Json::as_arr).unwrap();
+        assert_eq!(items[0].as_u64(), Some(2));
+        assert_eq!(items[1].as_str(), Some("beef"));
+        assert_eq!(items[2].as_u64(), Some(1));
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"pop","name":"undo"}"#);
+        assert_eq!(resp.get("empty").and_then(Json::as_bool), Some(true));
+        // Kind mismatches stay typed errors.
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"push","name":"tickets","item":1}"#);
+        assert_eq!(resp.get("code").and_then(Json::as_str), Some("wrong_kind"), "{resp:?}");
+        let resp = ask(&mut writer, &mut reader, r#"{"op":"enqueue","name":"undo","item":1}"#);
+        assert_eq!(resp.get("code").and_then(Json::as_str), Some("wrong_kind"), "{resp:?}");
         server.shutdown();
     }
 }

@@ -39,13 +39,19 @@
 //! Group commit mirrors the paper's batching argument: with
 //! `fsync_interval_ms > 0` the mutation hot path only bumps a
 //! per-object high-water mark (counters, one lock-free `fetch_max`)
-//! or pushes onto a spinlocked item buffer (queues); a flusher thread
-//! coalesces each interval into **one record per object per
-//! interval** — one WAL append per aggregated batch of operations,
-//! not one per op, just as the funnel pays one hardware F&A per
-//! batch. `fsync_interval_ms = 0` selects synchronous mode: every
-//! mutation appends (and syncs) its record before the response is
-//! acked, which is what the crash-recovery tests run under.
+//! or pushes onto a lock-free [`ClaimStack`] (queues and stacks) —
+//! no mutex, no spinlock, anywhere on the ack path. A flusher thread
+//! **claims** each journal's pending window (one 128-bit CAS swaps
+//! the whole batch out, exactly once, in push order) and coalesces it
+//! into **one record per object per interval** — one WAL append per
+//! aggregated batch of operations, not one per op, just as the funnel
+//! pays one hardware F&A per batch. Deleting an object *closes* its
+//! claim stacks (same CAS word), so a late op on a held handle is
+//! rejected atomically instead of leaking into a re-created object —
+//! the claim epoch replaces the lock ordering the old spinlocked
+//! buffer needed. `fsync_interval_ms = 0` selects synchronous mode:
+//! every mutation appends (and syncs) its record before the response
+//! is acked, which is what the crash-recovery tests run under.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fs::{File, OpenOptions};
@@ -58,7 +64,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::frame::{decode_frames, encode_frame, Item};
 use super::ServerState;
-use crate::sync::SpinLock;
+use crate::sync::ClaimStack;
 use crate::util::json::Json;
 
 /// Largest value the durable layer represents exactly: WAL records
@@ -121,9 +127,10 @@ impl PersistOpts {
 // ---------------------------------------------------------------------
 
 /// One logical WAL record. Counter values are absolute post-batch
-/// values (replay takes the max), queue records are item-multiset
-/// deltas; the §4.4 direct quota travels inside the canonical backend
-/// label (`:d<k>`), so `Create` needs no extra field for it.
+/// values (replay takes the max), queue and stack records are
+/// item-multiset deltas; the §4.4 direct quota travels inside the
+/// canonical backend label (`:d<k>`), so `Create` needs no extra
+/// field for it.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Record {
     Create { name: String, kind: String, backend: String, max_width: Option<usize> },
@@ -133,6 +140,11 @@ pub enum Record {
     Counter { name: String, value: u64 },
     Enqueue { name: String, items: Vec<Item> },
     Dequeue { name: String, items: Vec<Item> },
+    /// Stack deltas: `Push` extends the top end, `Pop` removes the
+    /// **latest** matching item (LIFO), where `Dequeue` removes the
+    /// earliest.
+    Push { name: String, items: Vec<Item> },
+    Pop { name: String, items: Vec<Item> },
 }
 
 impl Record {
@@ -166,6 +178,16 @@ impl Record {
             }
             Record::Dequeue { name, items } => {
                 pairs.push(("t", Json::str("deq")));
+                pairs.push(("n", Json::str(name.clone())));
+                pairs.push(("i", Json::arr(items.iter().map(Item::to_json))));
+            }
+            Record::Push { name, items } => {
+                pairs.push(("t", Json::str("psh")));
+                pairs.push(("n", Json::str(name.clone())));
+                pairs.push(("i", Json::arr(items.iter().map(Item::to_json))));
+            }
+            Record::Pop { name, items } => {
+                pairs.push(("t", Json::str("pop")));
                 pairs.push(("n", Json::str(name.clone())));
                 pairs.push(("i", Json::arr(items.iter().map(Item::to_json))));
             }
@@ -216,6 +238,8 @@ impl Record {
             },
             "enq" => Record::Enqueue { name: name()?, items: items()? },
             "deq" => Record::Dequeue { name: name()?, items: items()? },
+            "psh" => Record::Push { name: name()?, items: items()? },
+            "pop" => Record::Pop { name: name()?, items: items()? },
             other => return Err(anyhow!("unknown record type {other:?}")),
         };
         Ok((seq, rec))
@@ -230,7 +254,7 @@ impl Record {
 /// backend-spec path and seed its contents.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ObjectState {
-    /// `"counter"` or `"queue"`.
+    /// `"counter"`, `"queue"`, or `"stack"`.
     pub kind: String,
     /// Canonical backend spec (carries the `:d<k>` direct quota).
     pub backend: String,
@@ -239,7 +263,7 @@ pub struct ObjectState {
     pub max_width: Option<usize>,
     /// Counter value (counters only).
     pub counter: u64,
-    /// Queue contents, oldest first (queues only).
+    /// Item contents (queues: oldest first; stacks: bottom to top).
     pub items: VecDeque<Item>,
 }
 
@@ -290,6 +314,22 @@ impl RecoveryModel {
                 if let Some(o) = self.objects.get_mut(name) {
                     for item in items {
                         if let Some(i) = o.items.iter().position(|x| x == item) {
+                            o.items.remove(i);
+                        }
+                    }
+                }
+            }
+            Record::Push { name, items } => {
+                if let Some(o) = self.objects.get_mut(name) {
+                    o.items.extend(items.iter().cloned());
+                }
+            }
+            Record::Pop { name, items } => {
+                // LIFO removal: a pop takes the *latest* matching item
+                // so duplicate values resolve toward the stack's top.
+                if let Some(o) = self.objects.get_mut(name) {
+                    for item in items {
+                        if let Some(i) = o.items.iter().rposition(|x| x == item) {
                             o.items.remove(i);
                         }
                     }
@@ -450,6 +490,15 @@ pub struct ShardLog {
     wal_flushes: AtomicU64,
     wal_errors: AtomicU64,
     snapshots: AtomicU64,
+    /// Claimed-stack journal telemetry (group-commit mode): lock-free
+    /// pushes accepted, CAS failures those pushes burned, non-empty
+    /// windows drained, and the drained-batch size tail (max + total
+    /// items, total/drains = average batch).
+    journal_pushes: AtomicU64,
+    journal_cas_retries: AtomicU64,
+    journal_drains: AtomicU64,
+    journal_batch_items_max: AtomicU64,
+    journal_batch_items_total: AtomicU64,
 }
 
 struct LogInner {
@@ -521,6 +570,11 @@ impl ShardLog {
             wal_flushes: AtomicU64::new(0),
             wal_errors: AtomicU64::new(0),
             snapshots: AtomicU64::new(0),
+            journal_pushes: AtomicU64::new(0),
+            journal_cas_retries: AtomicU64::new(0),
+            journal_drains: AtomicU64::new(0),
+            journal_batch_items_max: AtomicU64::new(0),
+            journal_batch_items_total: AtomicU64::new(0),
         })
     }
 
@@ -688,6 +742,36 @@ impl ShardLog {
     pub fn snapshot_count(&self) -> u64 {
         self.snapshots.load(Ordering::Relaxed)
     }
+
+    /// Lock-free journal pushes accepted since open (group-commit
+    /// mode buffered records).
+    pub fn journal_push_count(&self) -> u64 {
+        self.journal_pushes.load(Ordering::Relaxed)
+    }
+
+    /// Head-CAS failures burned by journal pushes (contention gauge).
+    pub fn journal_cas_retry_count(&self) -> u64 {
+        self.journal_cas_retries.load(Ordering::Relaxed)
+    }
+
+    /// Non-empty journal windows drained by the flusher since open.
+    pub fn journal_drain_count(&self) -> u64 {
+        self.journal_drains.load(Ordering::Relaxed)
+    }
+
+    /// Largest single drained window, in buffered records.
+    pub fn journal_batch_max(&self) -> u64 {
+        self.journal_batch_items_max.load(Ordering::Relaxed)
+    }
+
+    /// Mean drained-window size, in buffered records per drain.
+    pub fn journal_batch_avg(&self) -> f64 {
+        let drains = self.journal_drains.load(Ordering::Relaxed);
+        if drains == 0 {
+            return 0.0;
+        }
+        self.journal_batch_items_total.load(Ordering::Relaxed) as f64 / drains as f64
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -702,25 +786,36 @@ enum JournalState {
         /// costs zero records.
         flushed: AtomicU64,
     },
-    Queue {
-        enq: SpinLock<Vec<Item>>,
-        deq: SpinLock<Vec<Item>>,
+    /// Queue and stack journals: two lock-free claimed stacks, one per
+    /// direction. `lifo` selects the record family (`Enqueue`/`Dequeue`
+    /// vs `Push`/`Pop`) so replay applies the right removal order.
+    Items {
+        adds: ClaimStack<Item>,
+        removes: ClaimStack<Item>,
+        lifo: bool,
     },
 }
 
 /// The journaling hook a persisted [`super::ObjectEntry`] carries.
 /// In group-commit mode the record hooks are a single `fetch_max`
-/// (counters) or a spinlocked push (queues); the flusher drains each
-/// interval into one record per object. In sync mode each hook
-/// appends (and syncs) its record before returning, so a response is
-/// never acked before its record is durable.
+/// (counters) or a lock-free [`ClaimStack`] push (queues and stacks)
+/// — the ack path acquires no mutex or spinlock; the flusher claims
+/// each journal's whole window (one CAS) and coalesces it into one
+/// record per object. In sync mode each hook appends (and syncs) its
+/// record before returning, so a response is never acked before its
+/// record is durable.
 pub struct Journal {
     log: Arc<ShardLog>,
     name: String,
     /// Set when the object is deleted: a data-plane op still running
     /// on a held `Arc` must not journal into a *re-created* object of
-    /// the same name.
+    /// the same name. [`Journal::retire`] also *closes* the claim
+    /// stacks, so a push that raced the flag check still fails on the
+    /// closed bit — the claim epoch, not lock ordering, is what makes
+    /// retire-under-delete airtight.
     retired: std::sync::atomic::AtomicBool,
+    /// Jitter seed source for the claim-stack CAS pacing.
+    seed: AtomicU64,
     state: JournalState,
 }
 
@@ -730,6 +825,7 @@ impl Journal {
             log,
             name: name.into(),
             retired: std::sync::atomic::AtomicBool::new(false),
+            seed: AtomicU64::new(0),
             state: JournalState::Counter {
                 hwm: AtomicU64::new(0),
                 flushed: AtomicU64::new(0),
@@ -737,16 +833,26 @@ impl Journal {
         }
     }
 
-    pub fn queue(log: Arc<ShardLog>, name: impl Into<String>) -> Journal {
+    fn items(log: Arc<ShardLog>, name: String, lifo: bool) -> Journal {
         Journal {
             log,
-            name: name.into(),
+            name,
             retired: std::sync::atomic::AtomicBool::new(false),
-            state: JournalState::Queue {
-                enq: SpinLock::new(Vec::new()),
-                deq: SpinLock::new(Vec::new()),
+            seed: AtomicU64::new(0),
+            state: JournalState::Items {
+                adds: ClaimStack::new(),
+                removes: ClaimStack::new(),
+                lifo,
             },
         }
+    }
+
+    pub fn queue(log: Arc<ShardLog>, name: impl Into<String>) -> Journal {
+        Journal::items(log, name.into(), false)
+    }
+
+    pub fn stack(log: Arc<ShardLog>, name: impl Into<String>) -> Journal {
+        Journal::items(log, name.into(), true)
     }
 
     /// The shard log this journal appends to.
@@ -756,12 +862,53 @@ impl Journal {
 
     /// Stop recording (called when the object is deleted); late ops
     /// on a held handle are applied in memory but no longer journaled.
+    /// Closing the claim stacks discards the unflushed window (delete
+    /// supersedes it in the WAL) and atomically rejects any push that
+    /// already passed the `retired` check.
     pub fn retire(&self) {
         self.retired.store(true, Ordering::Release);
+        if let JournalState::Items { adds, removes, .. } = &self.state {
+            drop(adds.close());
+            drop(removes.close());
+        }
     }
 
     fn is_retired(&self) -> bool {
         self.retired.load(Ordering::Acquire)
+    }
+
+    /// The add-direction record for this journal's kind.
+    fn add_record(&self, items: Vec<Item>) -> Record {
+        match &self.state {
+            JournalState::Items { lifo: true, .. } => {
+                Record::Push { name: self.name.clone(), items }
+            }
+            _ => Record::Enqueue { name: self.name.clone(), items },
+        }
+    }
+
+    /// The remove-direction record for this journal's kind.
+    fn remove_record(&self, items: Vec<Item>) -> Record {
+        match &self.state {
+            JournalState::Items { lifo: true, .. } => {
+                Record::Pop { name: self.name.clone(), items }
+            }
+            _ => Record::Dequeue { name: self.name.clone(), items },
+        }
+    }
+
+    /// The lock-free buffered-record path: push onto a claim stack and
+    /// account for it. A push rejected by the closed bit lost the race
+    /// with [`Journal::retire`] — dropping it is exactly the retire
+    /// semantics (the delete record supersedes the window).
+    fn buffered_push(&self, stack: &ClaimStack<Item>, item: Item) {
+        let seed = self.seed.fetch_add(1, Ordering::Relaxed);
+        if let Ok(fails) = stack.push(item, seed) {
+            self.log.journal_pushes.fetch_add(1, Ordering::Relaxed);
+            if fails > 0 {
+                self.log.journal_cas_retries.fetch_add(fails as u64, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Record the post-take counter value (`start + count`).
@@ -782,68 +929,91 @@ impl Journal {
 
     /// Record one acked enqueue.
     pub fn record_enqueue(&self, item: Item) {
-        if self.is_retired() {
-            return;
-        }
-        let JournalState::Queue { enq, .. } = &self.state else { return };
-        if self.log.sync {
-            self.log.append_infallible(&[Record::Enqueue {
-                name: self.name.clone(),
-                items: vec![item],
-            }]);
-        } else {
-            enq.lock().push(item);
-        }
+        self.record_add(item);
     }
 
     /// Record one acked dequeue.
     pub fn record_dequeue(&self, item: Item) {
+        self.record_remove(item);
+    }
+
+    /// Record one acked push (stack journals).
+    pub fn record_push(&self, item: Item) {
+        self.record_add(item);
+    }
+
+    /// Record one acked pop (stack journals).
+    pub fn record_pop(&self, item: Item) {
+        self.record_remove(item);
+    }
+
+    fn record_add(&self, item: Item) {
         if self.is_retired() {
             return;
         }
-        let JournalState::Queue { deq, .. } = &self.state else { return };
+        let JournalState::Items { adds, .. } = &self.state else { return };
         if self.log.sync {
-            self.log.append_infallible(&[Record::Dequeue {
-                name: self.name.clone(),
-                items: vec![item],
-            }]);
+            let rec = self.add_record(vec![item]);
+            self.log.append_infallible(&[rec]);
         } else {
-            deq.lock().push(item);
+            self.buffered_push(adds, item);
+        }
+    }
+
+    fn record_remove(&self, item: Item) {
+        if self.is_retired() {
+            return;
+        }
+        let JournalState::Items { removes, .. } = &self.state else { return };
+        if self.log.sync {
+            let rec = self.remove_record(vec![item]);
+            self.log.append_infallible(&[rec]);
+        } else {
+            self.buffered_push(removes, item);
         }
     }
 
     /// Drain the pending window into records (group-commit mode; a
     /// no-op in sync mode, where nothing buffers). At most one
-    /// counter record and one enqueue + one dequeue record per call,
+    /// counter record and one add + one remove record per call,
     /// however many operations the window absorbed.
     pub fn drain_into(&self, out: &mut Vec<Record>) {
+        let mut drained_items = 0u64;
         match &self.state {
             JournalState::Counter { hwm, flushed } => {
                 let v = hwm.load(Ordering::Acquire);
                 if v > flushed.load(Ordering::Relaxed) {
                     flushed.store(v, Ordering::Relaxed);
                     out.push(Record::Counter { name: self.name.clone(), value: v });
+                    drained_items = 1;
                 }
             }
-            JournalState::Queue { enq, deq } => {
-                // Take the *dequeue* buffer first. Enqueues are
-                // recorded write-ahead (before the item is visible in
-                // the queue), so any dequeue captured here had its
-                // enqueue recorded strictly earlier — in an already
-                // flushed window or in the enqueue buffer we take
-                // next. Taking enq first would open a window where a
-                // fresh enqueue lands in the *next* drain while its
-                // dequeue lands in this one, putting Deq before Enq
-                // in the WAL and resurrecting the item on replay.
-                let d = std::mem::take(&mut *deq.lock());
-                let e = std::mem::take(&mut *enq.lock());
+            JournalState::Items { adds, removes, .. } => {
+                // Claim the *remove* window first. Adds are recorded
+                // write-ahead (before the item is visible in the
+                // object), so any removal claimed here had its add
+                // recorded strictly earlier — in an already flushed
+                // window or in the add stack we claim next. Claiming
+                // adds first would open a window where a fresh add
+                // lands in the *next* drain while its removal lands in
+                // this one, putting Deq/Pop before Enq/Push in the WAL
+                // and resurrecting the item on replay. Each claim is
+                // one CAS; between them pushers proceed untouched.
+                let d: Vec<Item> = removes.claim().collect();
+                let e: Vec<Item> = adds.claim().collect();
+                drained_items = (d.len() + e.len()) as u64;
                 if !e.is_empty() {
-                    out.push(Record::Enqueue { name: self.name.clone(), items: e });
+                    out.push(self.add_record(e));
                 }
                 if !d.is_empty() {
-                    out.push(Record::Dequeue { name: self.name.clone(), items: d });
+                    out.push(self.remove_record(d));
                 }
             }
+        }
+        if drained_items > 0 {
+            self.log.journal_drains.fetch_add(1, Ordering::Relaxed);
+            self.log.journal_batch_items_total.fetch_add(drained_items, Ordering::Relaxed);
+            self.log.journal_batch_items_max.fetch_max(drained_items, Ordering::Relaxed);
         }
     }
 }
@@ -975,6 +1145,11 @@ mod tests {
                 items: vec![Item::Int(1), Item::Bytes(b"opaque \x00\xFF bytes".to_vec())],
             },
             Record::Dequeue { name: "jobs".into(), items: ints(&[2]) },
+            Record::Push {
+                name: "undo".into(),
+                items: vec![Item::Int(7), Item::Bytes(b"frame".to_vec())],
+            },
+            Record::Pop { name: "undo".into(), items: ints(&[7]) },
         ];
         for (i, rec) in records.iter().enumerate() {
             let json = rec.to_json(i as u64 + 1);
@@ -1053,6 +1228,30 @@ mod tests {
         m.apply(9, &Record::Delete { name: "c".into() });
         assert!(!m.objects.contains_key("c"));
         assert_eq!(m.seq, 9);
+    }
+
+    #[test]
+    fn model_apply_stack_pops_latest_match() {
+        let mut m = RecoveryModel::default();
+        m.apply(
+            1,
+            &Record::Create {
+                name: "s".into(),
+                kind: "stack".into(),
+                backend: "stack+elastic".into(),
+                max_width: None,
+            },
+        );
+        // Push 5, 6, 5: duplicates must resolve toward the top.
+        m.apply(2, &Record::Push { name: "s".into(), items: ints(&[5, 6, 5]) });
+        m.apply(3, &Record::Pop { name: "s".into(), items: ints(&[5]) });
+        assert_eq!(
+            m.objects["s"].items,
+            VecDeque::from(ints(&[5, 6])),
+            "pop removes the LATEST matching item, not the earliest"
+        );
+        m.apply(4, &Record::Pop { name: "s".into(), items: ints(&[6, 5]) });
+        assert!(m.objects["s"].items.is_empty());
     }
 
     #[test]
@@ -1258,6 +1457,115 @@ mod tests {
         drop(log);
         let log = ShardLog::open(&dir, true).unwrap();
         assert_eq!(log.recovered_objects()[0].1.counter, 9);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_stack_emits_push_pop_records() {
+        let dir = scratch_dir("stackj");
+        let log = Arc::new(ShardLog::open(&dir, false).unwrap());
+        let s = Journal::stack(Arc::clone(&log), "s");
+        s.record_push(Item::Int(10));
+        s.record_push(Item::Int(11));
+        s.record_pop(Item::Int(11));
+        let mut out = Vec::new();
+        s.drain_into(&mut out);
+        assert_eq!(
+            out,
+            vec![
+                Record::Push { name: "s".into(), items: ints(&[10, 11]) },
+                Record::Pop { name: "s".into(), items: ints(&[11]) },
+            ],
+            "stack journals speak psh/pop, adds before removes"
+        );
+        // Journal metrics observed the window.
+        assert_eq!(log.journal_push_count(), 3);
+        assert_eq!(log.journal_drain_count(), 1);
+        assert_eq!(log.journal_batch_max(), 3);
+        assert!((log.journal_batch_avg() - 3.0).abs() < f64::EPSILON);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_retire_discards_window_and_rejects_late_records() {
+        // Retire-under-delete without lock ordering: the close on the
+        // claim stacks both drops the unflushed window (the Delete
+        // record supersedes it) and rejects records that race in after
+        // retire, so nothing can replay into a re-created same-name
+        // object.
+        let dir = scratch_dir("retire");
+        let log = Arc::new(ShardLog::open(&dir, false).unwrap());
+        let q = Journal::queue(Arc::clone(&log), "q");
+        q.record_enqueue(Item::Int(1));
+        q.retire();
+        q.record_enqueue(Item::Int(2)); // late op on a held handle
+        let mut out = Vec::new();
+        q.drain_into(&mut out);
+        assert!(out.is_empty(), "retired journal must drain nothing");
+        // The re-created object gets a fresh journal; the old handle
+        // still contributes nothing even if drained again.
+        let q2 = Journal::queue(Arc::clone(&log), "q");
+        q2.record_enqueue(Item::Int(3));
+        q.drain_into(&mut out);
+        q2.drain_into(&mut out);
+        assert_eq!(out, vec![Record::Enqueue { name: "q".into(), items: ints(&[3]) }]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_concurrent_records_drain_exactly_once() {
+        // The tentpole race: producers journal concurrently (no lock)
+        // while a drainer claims windows; across all windows every
+        // record shows up exactly once and per-producer order holds.
+        let dir = scratch_dir("race");
+        let log = Arc::new(ShardLog::open(&dir, false).unwrap());
+        let j = Arc::new(Journal::queue(Arc::clone(&log), "q"));
+        const PRODUCERS: u64 = 4;
+        const PER: u64 = 1_000;
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let j = Arc::clone(&j);
+                std::thread::spawn(move || {
+                    for seq in 0..PER {
+                        j.record_enqueue(Item::Int((p << 32) | seq));
+                    }
+                })
+            })
+            .collect();
+        let mut drained: Vec<Item> = Vec::new();
+        while drained.len() < (PRODUCERS * PER) as usize {
+            let mut out = Vec::new();
+            j.drain_into(&mut out);
+            for rec in out {
+                let Record::Enqueue { items, .. } = rec else { panic!("unexpected record") };
+                drained.extend(items);
+            }
+            std::thread::yield_now();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut vals: Vec<u64> = drained
+            .iter()
+            .map(|i| match i {
+                Item::Int(v) => *v,
+                _ => unreachable!(),
+            })
+            .collect();
+        // Per-producer order across windows.
+        let mut last = vec![None::<u64>; PRODUCERS as usize];
+        for v in &vals {
+            let (p, seq) = ((v >> 32) as usize, v & 0xFFFF_FFFF);
+            if let Some(prev) = last[p] {
+                assert!(seq > prev, "producer {p} reordered across drains");
+            }
+            last[p] = Some(seq);
+        }
+        vals.sort_unstable();
+        vals.dedup();
+        assert_eq!(vals.len() as u64, PRODUCERS * PER, "lost or duplicated records");
+        assert_eq!(log.journal_push_count(), PRODUCERS * PER);
+        assert!(log.journal_drain_count() >= 1);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,15 +1,17 @@
-//! The object registry: named fetch-and-add counters and funnel-backed
-//! FIFO queues living behind one wire protocol.
+//! The object registry: named fetch-and-add counters, funnel-backed
+//! FIFO queues, and elimination-backed LIFO stacks living behind one
+//! wire protocol.
 //!
-//! A registry maps names to [`ObjectEntry`]s. An entry is either a
+//! A registry maps names to [`ObjectEntry`]s. An entry is a
 //! **counter** — an [`ElasticAggFunnel`] with a per-object
-//! [`WidthPolicy`], today's ticket counter made nameable — or a
+//! [`WidthPolicy`], today's ticket counter made nameable — a
 //! **queue** — any [`crate::queue::make_queue`] spec, with
 //! `lcrq+elastic` queues keeping an [`ElasticIndexFactory`] handle so
 //! the service's resize controller can walk a queue's ring indices
-//! exactly like a counter's Aggregator set. Every entry carries its
-//! own [`Metrics`] so `stats` reports independent per-object traffic
-//! and contention counters.
+//! exactly like a counter's Aggregator set — or a **stack** — any
+//! [`crate::queue::make_stack`] spec, whose elimination width is the
+//! resizable knob. Every entry carries its own [`Metrics`] so `stats`
+//! reports independent per-object traffic and contention counters.
 //!
 //! Lookups take a read lock and clone an `Arc` out; the data-plane ops
 //! (`take`, `enqueue`, …) then run lock-free on the object itself.
@@ -47,7 +49,8 @@ use crate::config::ObjectManifest;
 use crate::faa::backend::DirectPermits;
 use crate::faa::{backend, BackendSpec, BatchStats, ElasticAggFunnel, FetchAddObject, WidthPolicy};
 use crate::queue::{
-    make_queue_with_handle, ConcurrentQueue, ElasticIndexFactory, EMPTY_ITEM, PRQ_MAX_ITEM,
+    make_queue_with_handle, make_stack, ConcurrentQueue, ConcurrentStack, ElasticIndexFactory,
+    EMPTY_ITEM, PRQ_MAX_ITEM,
 };
 use crate::sync::{CasCtl, RetryPolicy, SpinLock};
 use crate::util::json::Json;
@@ -130,6 +133,11 @@ pub enum ObjectBody {
         /// Present iff the index backend is elastic (resizable).
         elastic: Option<ElasticIndexFactory>,
     },
+    Stack {
+        stack: Arc<dyn ConcurrentStack>,
+        /// Whether `resize` may change the elimination width.
+        resizable: bool,
+    },
 }
 
 /// One named object: body + backend label + per-object metrics +
@@ -167,26 +175,35 @@ impl ObjectEntry {
         match self.body {
             ObjectBody::Counter(_) => "counter",
             ObjectBody::Queue { .. } => "queue",
+            ObjectBody::Stack { .. } => "stack",
         }
+    }
+
+    fn wrong_kind(&self, op: &str, wanted: &str) -> anyhow::Error {
+        service_err(
+            ErrorCode::WrongKind,
+            format!("object {:?} is a {}; {op} needs a {wanted}", self.name, self.kind()),
+        )
     }
 
     fn as_counter(&self, op: &str) -> Result<&ElasticAggFunnel> {
         match &self.body {
             ObjectBody::Counter(f) => Ok(f),
-            ObjectBody::Queue { .. } => Err(service_err(
-                ErrorCode::WrongKind,
-                format!("object {:?} is a queue; {op} needs a counter", self.name),
-            )),
+            _ => Err(self.wrong_kind(op, "counter")),
         }
     }
 
     fn as_queue(&self, op: &str) -> Result<&Arc<dyn ConcurrentQueue>> {
         match &self.body {
             ObjectBody::Queue { queue, .. } => Ok(queue),
-            ObjectBody::Counter(_) => Err(service_err(
-                ErrorCode::WrongKind,
-                format!("object {:?} is a counter; {op} needs a queue", self.name),
-            )),
+            _ => Err(self.wrong_kind(op, "queue")),
+        }
+    }
+
+    fn as_stack(&self, op: &str) -> Result<&Arc<dyn ConcurrentStack>> {
+        match &self.body {
+            ObjectBody::Stack { stack, .. } => Ok(stack),
+            _ => Err(self.wrong_kind(op, "stack")),
         }
     }
 
@@ -348,6 +365,48 @@ impl ObjectEntry {
         }
     }
 
+    /// Stack op: push one payload (integer or byte string). Same
+    /// item-table indirection and write-ahead contract as
+    /// [`ObjectEntry::enqueue_item`]: the Psh record lands before the
+    /// item is visible to any popper, so replay never sees a pop of an
+    /// item whose push record is still in flight.
+    pub fn push_item(&self, tid: usize, item: Item) -> Result<()> {
+        let stack = self.as_stack("push")?;
+        self.validate_item(&item)?;
+        self.metrics.incr("push");
+        if let Some(journal) = &self.journal {
+            journal.record_push(item.clone());
+        }
+        let idx = self.table.intern(item);
+        stack.push(tid, idx);
+        Ok(())
+    }
+
+    /// Stack op: push one integer item.
+    pub fn push(&self, tid: usize, item: u64) -> Result<()> {
+        self.push_item(tid, Item::Int(item))
+    }
+
+    /// Stack op: pop the most recently pushed payload (`None` on
+    /// empty).
+    pub fn pop_item(&self, tid: usize) -> Result<Option<Item>> {
+        let stack = self.as_stack("pop")?;
+        self.metrics.incr("pop");
+        match stack.pop(tid) {
+            Some(idx) => {
+                let item = self.table.take(idx).unwrap_or(Item::Int(idx));
+                if let Some(journal) = &self.journal {
+                    journal.record_pop(item.clone());
+                }
+                Ok(Some(item))
+            }
+            None => {
+                self.metrics.incr("pop_empty");
+                Ok(None)
+            }
+        }
+    }
+
     /// Recovery-only: raise a counter to its recovered value without
     /// journaling (the value is already in the recovered model). Uses
     /// the reserved in-process tid 0 — boot is single-threaded.
@@ -376,6 +435,16 @@ impl ObjectEntry {
         Ok(())
     }
 
+    /// Recovery-only: re-push a recovered payload without journaling.
+    /// The recovered item list is bottom-to-top, so seeding in order
+    /// rebuilds the same stack.
+    pub(super) fn seed_stack_item(&self, item: Item) -> Result<()> {
+        let stack = self.as_stack("seed")?;
+        let idx = self.table.intern(item);
+        stack.push(0, idx);
+        Ok(())
+    }
+
     /// The durability journal, when this entry persists.
     pub(crate) fn journal(&self) -> Option<&Journal> {
         self.journal.as_ref()
@@ -387,7 +456,8 @@ impl ObjectEntry {
     }
 
     /// Set the active funnel width: the Aggregator prefix for a
-    /// counter, every live ring index for an elastic-index queue.
+    /// counter, every live ring index for an elastic-index queue, the
+    /// elimination-array width for an elastic stack.
     /// Returns `(new_width, previous_width)`.
     pub fn resize(&self, width: usize) -> Result<(usize, usize)> {
         self.metrics.incr("resize");
@@ -403,6 +473,15 @@ impl ObjectEntry {
             ObjectBody::Queue { .. } => {
                 Err(anyhow!("queue {:?} has a non-resizable {:?} index", self.name, self.backend))
             }
+            ObjectBody::Stack { stack, resizable: true } => {
+                let previous = stack.elimination_width();
+                Ok((stack.resize_elimination(width), previous))
+            }
+            ObjectBody::Stack { .. } => Err(anyhow!(
+                "stack {:?} has a non-resizable {:?} elimination layer",
+                self.name,
+                self.backend
+            )),
         }
     }
 
@@ -413,6 +492,7 @@ impl ObjectEntry {
         match &self.body {
             ObjectBody::Counter(f) => f.set_cas_policy(policy),
             ObjectBody::Queue { queue, .. } => queue.set_cas_policy(policy),
+            ObjectBody::Stack { stack, .. } => stack.set_cas_policy(policy),
         }
         if let Some(gate) = &self.direct {
             gate.set_cas_policy(policy);
@@ -425,6 +505,7 @@ impl ObjectEntry {
         match &self.body {
             ObjectBody::Counter(f) => f.cas_policy(),
             ObjectBody::Queue { queue, .. } => queue.cas_policy(),
+            ObjectBody::Stack { stack, .. } => stack.cas_policy(),
         }
     }
 
@@ -446,6 +527,19 @@ impl ObjectEntry {
             ObjectBody::Queue { .. } => {
                 Err(anyhow!("queue {:?} has a non-resizable {:?} index", self.name, self.backend))
             }
+            ObjectBody::Stack { stack, resizable: true } => {
+                *self.policy.lock().unwrap() = policy;
+                // Stacks have no contention window yet, so a policy
+                // swap applies its initial width once; the controller
+                // tick (`poll`) leaves stacks alone.
+                let w = policy.initial_width(stack.max_threads(), usize::MAX).max(1);
+                Ok(stack.resize_elimination(w))
+            }
+            ObjectBody::Stack { .. } => Err(anyhow!(
+                "stack {:?} has a non-resizable {:?} elimination layer",
+                self.name,
+                self.backend
+            )),
         }
     }
 
@@ -465,7 +559,7 @@ impl ObjectEntry {
             ObjectBody::Queue { elastic: Some(factory), .. } => {
                 factory.poll_policy(&policy);
             }
-            ObjectBody::Queue { .. } => {}
+            ObjectBody::Queue { .. } | ObjectBody::Stack { .. } => {}
         }
     }
 
@@ -475,6 +569,7 @@ impl ObjectEntry {
         match &self.body {
             ObjectBody::Counter(f) => f.batch_stats(),
             ObjectBody::Queue { queue, .. } => queue.batch_stats(),
+            ObjectBody::Stack { stack, .. } => stack.batch_stats(),
         }
     }
 
@@ -520,6 +615,14 @@ impl ObjectEntry {
                 obj.insert("width_policy".to_string(), Json::str(self.policy().label()));
             }
             ObjectBody::Queue { .. } => {}
+            ObjectBody::Stack { stack, resizable } => {
+                if stack.elimination_width() > 0 || *resizable {
+                    obj.insert(
+                        "active_width".to_string(),
+                        Json::num(stack.elimination_width() as f64),
+                    );
+                }
+            }
         }
         Json::Obj(obj)
     }
@@ -575,15 +678,15 @@ impl Registry {
 
     /// Build the journal a new entry should carry (`None` when the
     /// registry has no log or the object opted out).
-    fn journal_for(&self, name: &str, counter: bool, persist: bool) -> Option<Journal> {
+    fn journal_for(&self, name: &str, kind: &str, persist: bool) -> Option<Journal> {
         if !persist {
             return None;
         }
         let log = self.log.get()?;
-        Some(if counter {
-            Journal::counter(Arc::clone(log), name)
-        } else {
-            Journal::queue(Arc::clone(log), name)
+        Some(match kind {
+            "counter" => Journal::counter(Arc::clone(log), name),
+            "stack" => Journal::stack(Arc::clone(log), name),
+            _ => Journal::queue(Arc::clone(log), name),
         })
     }
 
@@ -625,7 +728,7 @@ impl Registry {
             funnel.resize(w);
         }
         let name = validated_name(name)?;
-        let journal = self.journal_for(&name, true, persist);
+        let journal = self.journal_for(&name, "counter", persist);
         self.insert(ObjectEntry {
             name,
             backend: spec.label(),
@@ -732,7 +835,7 @@ impl Registry {
                     EMPTY_ITEM - 1
                 };
                 let name = validated_name(name)?;
-                let journal = self.journal_for(&name, false, opts.persist);
+                let journal = self.journal_for(&name, "queue", opts.persist);
                 if journal.is_some() {
                     // Durable items ride the JSON snapshot/WAL model:
                     // cap at the largest exactly-representable value
@@ -752,7 +855,46 @@ impl Registry {
                     body: ObjectBody::Queue { queue, elastic },
                 })
             }
-            other => Err(anyhow!("unknown object kind {other:?} (counter | queue)")),
+            "stack" => {
+                if opts.direct_quota.is_some() {
+                    return Err(anyhow!(
+                        "direct_quota applies to counters; stack {name:?} has no priority path"
+                    ));
+                }
+                // `make_stack` already rejects `:d<k>` layer segments
+                // (stacks have no priority path), so a bad spec falls
+                // through to the unknown-backend error below.
+                let stack = make_stack(backend_spec, self.max_threads, opts.max_width)
+                    .ok_or_else(|| anyhow!("unknown stack backend {backend_spec:?}"))?;
+                let layer_spec = backend_spec.split_once('+').map(|(_, layer)| layer);
+                let parsed_layer = layer_spec.and_then(BackendSpec::parse);
+                if parsed_layer.as_ref().and_then(|s| s.cas_policy()).is_none() {
+                    stack.set_cas_policy(self.default_cas.get());
+                }
+                let (policy, resizable) = match parsed_layer {
+                    Some(BackendSpec::Elastic { policy, .. }) => (policy, true),
+                    _ => (WidthPolicy::Fixed(backend::DEFAULT_AGGREGATORS), false),
+                };
+                let name = validated_name(name)?;
+                let journal = self.journal_for(&name, "stack", opts.persist);
+                let mut item_max = EMPTY_ITEM - 1;
+                if journal.is_some() {
+                    item_max = item_max.min(super::persist::MAX_DURABLE_ITEM);
+                }
+                self.insert(ObjectEntry {
+                    name,
+                    backend: backend_spec.trim().to_string(),
+                    metrics: Metrics::new(),
+                    policy: Mutex::new(policy),
+                    direct: None,
+                    max_width_override: opts.max_width,
+                    item_max,
+                    table: ItemTable::new(),
+                    journal,
+                    body: ObjectBody::Stack { stack, resizable },
+                })
+            }
+            other => Err(anyhow!("unknown object kind {other:?} (counter | queue | stack)")),
         }
     }
 
@@ -851,7 +993,11 @@ mod tests {
         assert_eq!(q.backend, "lcrq+elastic");
         q.enqueue(0, 1).unwrap();
         assert_eq!(q.dequeue_item(1).unwrap(), Some(Item::Int(1)));
-        assert!(r.create("x", "stack", "", plain()).is_err(), "kind still validated");
+        let s = r.create("s", "stack", "", plain()).unwrap();
+        assert_eq!(s.backend, "stack+elastic");
+        s.push(0, 2).unwrap();
+        assert_eq!(s.pop_item(1).unwrap(), Some(Item::Int(2)));
+        assert!(r.create("x", "heap", "", plain()).is_err(), "kind still validated");
     }
 
     #[test]
@@ -898,6 +1044,10 @@ mod tests {
         assert!(r.create("x", "queue", "lcrq+elastic", opts).is_err());
         assert!(r.create("x", "queue", "lcrq+elastic:aimd:d2", plain()).is_err());
         assert!(r.create("x", "queue", "lcrq+aggfunnel:4:d1", plain()).is_err());
+        // Stacks: same no-priority-path rules as queues.
+        assert!(r.create("x", "stack", "stack+elastic:aimd:d2", plain()).is_err());
+        let opts = CreateOpts { direct_quota: Some(1), ..CreateOpts::default() };
+        assert!(r.create("x", "stack", "stack+elastic", opts).is_err());
     }
 
     #[test]
@@ -1174,8 +1324,100 @@ mod tests {
         }
     }
 
+    #[test]
+    fn stack_entry_ops() {
+        let r = Registry::new(2);
+        let e = r.create("s", "stack", "stack+elastic:fixed:2", plain()).unwrap();
+        assert_eq!(e.kind(), "stack");
+        assert_eq!(e.pop_item(0).unwrap(), None);
+        e.push(0, 7).unwrap();
+        e.push(1, 8).unwrap();
+        e.push_item(0, Item::Bytes(b"top".to_vec())).unwrap();
+        assert_eq!(e.pop_item(1).unwrap(), Some(Item::Bytes(b"top".to_vec())));
+        assert_eq!(e.pop_item(0).unwrap(), Some(Item::Int(8)), "LIFO order");
+        assert!(e.take(0, 1, false).is_err(), "stacks reject counter ops");
+        assert!(e.enqueue(0, 1).is_err(), "stacks reject queue ops");
+        assert!(e.dequeue_item(0).is_err());
+        assert!(e.push(0, EMPTY_ITEM).is_err(), "sentinel rejected");
+        let (width, previous) = e.resize(5).unwrap();
+        assert_eq!((width, previous), (5, 2));
+        e.poll(); // controller tick leaves stacks alone
+        let stats = e.stats_json();
+        assert_eq!(stats.get("kind").and_then(Json::as_str), Some("stack"));
+        assert_eq!(stats.get("push").and_then(Json::as_u64), Some(3));
+        assert_eq!(stats.get("pop").and_then(Json::as_u64), Some(3));
+        assert_eq!(stats.get("pop_empty").and_then(Json::as_u64), Some(1));
+        assert_eq!(stats.get("active_width").and_then(Json::as_u64), Some(5));
+        assert!(stats.get("batched_ops").and_then(Json::as_u64).unwrap() >= 6);
+    }
+
+    #[test]
+    fn non_elastic_stack_has_no_width_controls() {
+        let r = Registry::new(2);
+        let e = r.create("s", "stack", "stack+hw", plain()).unwrap();
+        e.push(0, 1).unwrap();
+        assert!(e.resize(2).is_err());
+        assert!(e.set_policy(WidthPolicy::SqrtP).is_err());
+        e.poll();
+        let stats = e.stats_json();
+        assert!(stats.get("active_width").is_none());
+        assert_eq!(stats.get("backend").and_then(Json::as_str), Some("stack+hw"));
+        // A fixed funnel width shows up but stays pinned.
+        let f = r.create("f", "stack", "stack+aggfunnel:3", plain()).unwrap();
+        assert!(f.resize(1).is_err());
+        assert_eq!(f.stats_json().get("active_width").and_then(Json::as_u64), Some(3));
+    }
+
+    #[test]
+    fn stack_cas_policy_threads_through_create_and_swap() {
+        let r = Registry::new(2);
+        r.set_default_cas_policy(RetryPolicy::Constant);
+        let e = r.create("s", "stack", "stack+elastic:aimd:bexp", plain()).unwrap();
+        assert_eq!(e.cas_policy(), Some(RetryPolicy::Exp), "spec suffix wins");
+        let d = r.create("d", "stack", "stack+elastic", plain()).unwrap();
+        assert_eq!(d.cas_policy(), Some(RetryPolicy::Constant), "default fills in");
+        d.set_cas_policy(RetryPolicy::Adaptive);
+        assert_eq!(d.cas_policy(), Some(RetryPolicy::Adaptive));
+        d.push(0, 1).unwrap();
+        assert_eq!(d.pop_item(1).unwrap(), Some(Item::Int(1)));
+    }
+
     fn scratch_dir(tag: &str) -> std::path::PathBuf {
         crate::util::scratch_dir(&format!("registry-{tag}"))
+    }
+
+    #[test]
+    fn journaled_stack_recovers_lifo_order_through_the_log() {
+        let dir = scratch_dir("stack-journal");
+        {
+            let r = Registry::new(4);
+            r.set_log(Arc::new(ShardLog::open(&dir, true).unwrap()));
+            let s = r.create("s", "stack", "stack+elastic:fixed:2", plain()).unwrap();
+            assert!(s.persisted());
+            s.push(1, 10).unwrap();
+            s.push(2, 20).unwrap();
+            s.push_item(1, Item::Bytes(b"blob".to_vec())).unwrap();
+            s.push(2, 30).unwrap();
+            assert_eq!(s.pop_item(1).unwrap(), Some(Item::Int(30)));
+            // Durable integer items keep the JSON-exact bound.
+            assert!(s.push(1, 1 << 60).is_err(), "item would round in the WAL");
+            // Dropped without a snapshot: the WAL alone must carry it.
+        }
+        let log = ShardLog::open(&dir, true).unwrap();
+        let objects: BTreeMap<String, super::super::persist::ObjectState> =
+            log.recovered_objects().into_iter().collect();
+        assert_eq!(objects["s"].kind, "stack");
+        assert_eq!(objects["s"].backend, "stack+elastic:fixed:2");
+        assert_eq!(
+            objects["s"].items,
+            std::collections::VecDeque::from(vec![
+                Item::Int(10),
+                Item::Int(20),
+                Item::Bytes(b"blob".to_vec()),
+            ]),
+            "bottom-to-top, with the popped top removed"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,673 @@
+//! Atomic-try-update claimed stacks: lock-free concurrent `push`
+//! paired with an exactly-once, order-preserving **claim**-and-drain.
+//!
+//! Two structures live here, sharing the 128-bit tagged-head idiom of
+//! [`super::atomic128`]:
+//!
+//! * [`ClaimStack`] — a multi-producer buffer whose consumer takes
+//!   the *entire* pending batch with one successful CAS (the
+//!   **claim**). The head word packs `(top pointer, claim state)`
+//!   where the state is a claim epoch plus a closed bit, so a single
+//!   double-width CAS linearizes "everything pushed so far is now
+//!   mine" against every concurrent push, and `close` linearizes
+//!   "nothing will ever be accepted again" the same way. This is the
+//!   journal's append buffer: durable enqueue/dequeue acks push
+//!   without taking any lock, and the flusher claims whole
+//!   fsync-window batches.
+//! * [`TreiberStack`] — a shared LIFO with concurrent `push` *and*
+//!   `pop`, the central stack under the elimination layer in
+//!   [`crate::queue::stack`]. Poppers dereference nodes they do not
+//!   own, so reclamation goes through [`crate::ebr::Domain`]; the
+//!   version tag in the head word rules ABA out independently.
+//!
+//! Why the claimed stack needs **no** EBR: producers only *write*
+//! their own fresh node and CAS the head — they never follow another
+//! thread's pointer — and a successful claim transfers exclusive
+//! ownership of the whole chain to the claimer, which may therefore
+//! free nodes directly. The claim epoch in the same 128-bit word
+//! prevents the one residual hazard: a stalled producer whose CAS
+//! expectation names a node address that was claimed, freed, and
+//! reallocated cannot succeed, because every claim bumps the epoch.
+//!
+//! Both CAS loops are paced by [`super::backoff::CasCtl`], and
+//! [`ClaimStack::push`] reports the failures it burned so callers
+//! (the journal) can surface a `journal_cas_retries` counter.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::atomic128::{pack, unpack, AtomicU128};
+use super::backoff::{CasCtl, RetryPolicy};
+use crate::ebr;
+
+/// Closed bit of the claim-state word (`hi = epoch << 1 | CLOSED`).
+const CLOSED: u64 = 1;
+
+struct Node<T> {
+    item: T,
+    next: *mut Node<T>,
+}
+
+/// A lock-free multi-producer batch buffer: concurrent [`push`],
+/// exactly-once in-push-order drain via [`claim`], and a terminal
+/// [`close`] that atomically rejects all future pushes.
+///
+/// [`push`]: ClaimStack::push
+/// [`claim`]: ClaimStack::claim
+/// [`close`]: ClaimStack::close
+///
+/// Any thread may claim — the swap hands each node to exactly one
+/// claimer — but *order across claims* is only meaningful when drains
+/// are serialized (the journal's flusher holds the shard's drain gate
+/// for exactly that reason).
+pub struct ClaimStack<T> {
+    /// `lo` = top node address (0 = empty), `hi` = claim state
+    /// (`epoch << 1 | closed`). One word, so push, claim, and close
+    /// all linearize on the same CAS.
+    head: AtomicU128,
+    ctl: CasCtl,
+    _own: PhantomData<Box<T>>,
+}
+
+unsafe impl<T: Send> Send for ClaimStack<T> {}
+unsafe impl<T: Send> Sync for ClaimStack<T> {}
+
+impl<T> Default for ClaimStack<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ClaimStack<T> {
+    pub fn new() -> Self {
+        Self {
+            head: AtomicU128::new_pair(0, 0),
+            ctl: CasCtl::default(),
+            _own: PhantomData,
+        }
+    }
+
+    /// Push `item`. Lock-free: one allocation plus a paced CAS loop,
+    /// never a mutex or spinlock. Returns `Ok(cas_failures)` — the
+    /// contention this call burned, for the caller's retry metrics —
+    /// or `Err(item)` if the stack was [`close`](ClaimStack::close)d,
+    /// handing the item back untouched.
+    pub fn push(&self, item: T, seed: u64) -> Result<u32, T> {
+        let node = Box::into_raw(Box::new(Node { item, next: std::ptr::null_mut() }));
+        let mut retry = self.ctl.retry(seed);
+        let mut cur = self.head.load();
+        loop {
+            let (top, state) = unpack(cur);
+            if state & CLOSED != 0 {
+                // Closed before we linearized: withdraw the node.
+                let node = unsafe { Box::from_raw(node) };
+                return Err(node.item);
+            }
+            unsafe { (*node).next = top as *mut Node<T> };
+            match self.head.compare_exchange(cur, pack(node as u64, state)) {
+                Ok(_) => {
+                    let fails = retry.fails();
+                    retry.on_success();
+                    return Ok(fails);
+                }
+                Err(actual) => {
+                    retry.on_fail();
+                    cur = actual;
+                }
+            }
+        }
+    }
+
+    /// Claim everything pushed so far: one CAS swaps the chain out
+    /// and bumps the claim epoch, transferring exclusive ownership to
+    /// the returned drain, which yields items **in push order**. An
+    /// empty stack returns an empty drain without bumping the epoch.
+    pub fn claim(&self) -> Claimed<T> {
+        let mut cur = self.head.load();
+        loop {
+            let (top, state) = unpack(cur);
+            if top == 0 {
+                return Claimed::empty();
+            }
+            match self.head.compare_exchange(cur, pack(0, state + 2)) {
+                Ok(_) => return Claimed::reversed(top as *mut Node<T>),
+                // Only pushers race us here and each failure means one
+                // made progress; re-read and go again, unpaced (claims
+                // are per-fsync-window rare).
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Close the stack: atomically set the closed bit (all future
+    /// pushes fail with `Err(item)`), bump the epoch, and claim any
+    /// residue. Idempotent — a second close returns an empty drain.
+    /// This is the journal's retire-under-delete primitive: the same
+    /// CAS that stops new records also fences the epoch, so there is
+    /// no window where a racing push lands after the close.
+    pub fn close(&self) -> Claimed<T> {
+        let mut cur = self.head.load();
+        loop {
+            let (top, state) = unpack(cur);
+            if state & CLOSED != 0 {
+                return Claimed::empty();
+            }
+            match self.head.compare_exchange(cur, pack(0, (state + 2) | CLOSED)) {
+                Ok(_) => return Claimed::reversed(top as *mut Node<T>),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// True once [`close`](ClaimStack::close) has linearized.
+    pub fn is_closed(&self) -> bool {
+        let (_, state) = unpack(self.head.load());
+        state & CLOSED != 0
+    }
+
+    /// True when nothing is currently pending.
+    pub fn is_empty(&self) -> bool {
+        let (top, _) = unpack(self.head.load());
+        top == 0
+    }
+
+    /// The claim epoch: how many claims (including the close) have
+    /// taken a non-empty or closing swap.
+    pub fn epoch(&self) -> u64 {
+        let (_, state) = unpack(self.head.load());
+        state >> 1
+    }
+
+    /// Swap the [`RetryPolicy`] pacing the push CAS loop.
+    pub fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.ctl.set(policy);
+    }
+
+    /// The retry policy currently pacing the push CAS loop.
+    pub fn cas_policy(&self) -> RetryPolicy {
+        self.ctl.get()
+    }
+}
+
+impl<T> Drop for ClaimStack<T> {
+    fn drop(&mut self) {
+        // `&mut self`: no concurrent pushers; free the residue.
+        drop(Claimed::reversed({
+            let (top, _) = unpack(self.head.load());
+            top as *mut Node<T>
+        }));
+    }
+}
+
+/// An exactly-once drain of one claim: owns the claimed chain and
+/// yields its items oldest-push-first. Dropping it frees any
+/// unconsumed remainder.
+pub struct Claimed<T> {
+    /// Oldest-first after reversal.
+    head: *mut Node<T>,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for Claimed<T> {}
+
+impl<T> Claimed<T> {
+    fn empty() -> Self {
+        Self { head: std::ptr::null_mut(), len: 0 }
+    }
+
+    /// Take ownership of a LIFO chain and reverse it in place so
+    /// iteration runs in push order.
+    fn reversed(mut node: *mut Node<T>) -> Self {
+        let mut prev: *mut Node<T> = std::ptr::null_mut();
+        let mut len = 0;
+        while !node.is_null() {
+            let next = unsafe { (*node).next };
+            unsafe { (*node).next = prev };
+            prev = node;
+            node = next;
+            len += 1;
+        }
+        Self { head: prev, len }
+    }
+}
+
+impl<T> Iterator for Claimed<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        if self.head.is_null() {
+            return None;
+        }
+        // Exclusive ownership since the claim: plain Box round-trip.
+        let node = unsafe { Box::from_raw(self.head) };
+        self.head = node.next;
+        self.len -= 1;
+        Some(node.item)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.len, Some(self.len))
+    }
+}
+
+impl<T> ExactSizeIterator for Claimed<T> {}
+
+impl<T> Drop for Claimed<T> {
+    fn drop(&mut self) {
+        while self.next().is_some() {}
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared LIFO (concurrent pop side)
+// ---------------------------------------------------------------------
+
+/// Internal node of the shared stack. `next` is stored as an address
+/// so the node is plain `u64` data (`Send` for EBR retirement).
+struct SNode {
+    item: u64,
+    next: u64,
+}
+
+/// A Treiber stack of `u64` items with concurrent `push` and `pop`,
+/// tag-versioned against ABA and EBR-reclaimed (a popper dereferences
+/// the top node's `next` while other poppers race to free it, so
+/// unlike [`ClaimStack`] direct freeing would be a use-after-free).
+///
+/// `tid` contract matches [`crate::faa::FetchAddObject`]: ids in
+/// `0..max_threads`, one OS thread per id at a time, and callers must
+/// not already hold a pin on this stack's domain.
+pub struct TreiberStack {
+    /// `lo` = top node address, `hi` = version tag bumped by every
+    /// successful head CAS (push or pop).
+    head: AtomicU128,
+    domain: ebr::Domain,
+    ctl: CasCtl,
+    max_threads: usize,
+    /// Successful head CASes (central shared-state touches) and items
+    /// currently on the stack, for stats.
+    central_ops: AtomicU64,
+    len: AtomicUsize,
+}
+
+impl TreiberStack {
+    pub fn new(max_threads: usize) -> Self {
+        Self {
+            head: AtomicU128::new_pair(0, 0),
+            domain: ebr::Domain::new(max_threads),
+            ctl: CasCtl::default(),
+            max_threads,
+            central_ops: AtomicU64::new(0),
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn max_threads(&self) -> usize {
+        self.max_threads
+    }
+
+    /// Push `item` onto the stack.
+    pub fn push(&self, tid: usize, item: u64) {
+        let _ = self.push_bounded(tid, item, u32::MAX);
+    }
+
+    /// [`TreiberStack::push`] giving up after `attempts` failed head
+    /// CASes, handing the item back so the caller can try an
+    /// elimination rendezvous before coming back to the central stack.
+    pub fn push_bounded(&self, tid: usize, item: u64, attempts: u32) -> Result<(), u64> {
+        let node = Box::into_raw(Box::new(SNode { item, next: 0 }));
+        let mut retry = self.ctl.retry(tid as u64);
+        let mut cur = self.head.load();
+        loop {
+            let (top, tag) = unpack(cur);
+            unsafe { (*node).next = top };
+            match self.head.compare_exchange(cur, pack(node as u64, tag.wrapping_add(1))) {
+                Ok(_) => {
+                    retry.on_success();
+                    self.central_ops.fetch_add(1, Ordering::Relaxed);
+                    self.len.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(actual) => {
+                    retry.on_fail();
+                    if retry.fails() >= attempts {
+                        let node = unsafe { Box::from_raw(node) };
+                        return Err(node.item);
+                    }
+                    cur = actual;
+                }
+            }
+        }
+    }
+
+    /// Pop the most recently pushed item, or `None` if the stack is
+    /// empty at some point during the call.
+    pub fn pop(&self, tid: usize) -> Option<u64> {
+        self.pop_bounded(tid, u32::MAX).unwrap_or(None)
+    }
+
+    /// [`TreiberStack::pop`] giving up after `attempts` failed head
+    /// CASes: `Ok(Some(item))` on success, `Ok(None)` on observed
+    /// emptiness, `Err(())` when contention exhausted the budget (the
+    /// caller may scan the elimination array before retrying).
+    pub fn pop_bounded(&self, tid: usize, attempts: u32) -> Result<Option<u64>, ()> {
+        let _guard = self.domain.pin(tid);
+        let mut retry = self.ctl.retry(tid as u64);
+        let mut cur = self.head.load();
+        loop {
+            let (top, tag) = unpack(cur);
+            if top == 0 {
+                retry.on_success();
+                return Ok(None);
+            }
+            let node = top as *mut SNode;
+            // Safe under the pin: the node cannot be freed while we
+            // are announced, even if another popper unlinks it first
+            // (their CAS win just fails ours via the tag).
+            let (item, next) = unsafe { ((*node).item, (*node).next) };
+            match self.head.compare_exchange(cur, pack(next, tag.wrapping_add(1))) {
+                Ok(_) => {
+                    retry.on_success();
+                    self.central_ops.fetch_add(1, Ordering::Relaxed);
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    // We unlinked it; other pinned poppers may still
+                    // be reading it, so defer the free.
+                    self.domain.retire_box(tid, unsafe { Box::from_raw(node) });
+                    return Ok(Some(item));
+                }
+                Err(actual) => {
+                    retry.on_fail();
+                    if retry.fails() >= attempts {
+                        return Err(());
+                    }
+                    cur = actual;
+                }
+            }
+        }
+    }
+
+    /// Current item count (racy, for stats only).
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Successful head CASes since construction (stats).
+    pub fn central_op_count(&self) -> u64 {
+        self.central_ops.load(Ordering::Relaxed)
+    }
+
+    /// Swap the [`RetryPolicy`] pacing both head CAS loops.
+    pub fn set_cas_policy(&self, policy: RetryPolicy) {
+        self.ctl.set(policy);
+    }
+
+    /// The retry policy currently pacing the head CAS loops.
+    pub fn cas_policy(&self) -> RetryPolicy {
+        self.ctl.get()
+    }
+}
+
+impl Drop for TreiberStack {
+    fn drop(&mut self) {
+        // `&mut self`: no concurrent ops; free the remaining chain.
+        let (mut top, _) = unpack(self.head.load());
+        while top != 0 {
+            let node = unsafe { Box::from_raw(top as *mut SNode) };
+            top = node.next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn claim_drains_in_push_order() {
+        let s = ClaimStack::new();
+        assert!(s.is_empty());
+        assert!(s.claim().next().is_none(), "empty claim yields nothing");
+        assert_eq!(s.epoch(), 0, "empty claims do not burn epochs");
+        for v in 0..10u64 {
+            s.push(v, 0).unwrap();
+        }
+        let drained: Vec<u64> = s.claim().collect();
+        assert_eq!(drained, (0..10).collect::<Vec<_>>(), "push order preserved");
+        assert_eq!(s.epoch(), 1);
+        assert!(s.is_empty());
+        // The next window starts clean.
+        s.push(42, 0).unwrap();
+        assert_eq!(s.claim().collect::<Vec<_>>(), vec![42]);
+        assert_eq!(s.epoch(), 2);
+    }
+
+    #[test]
+    fn close_rejects_pushes_and_returns_residue() {
+        let s = ClaimStack::new();
+        s.push("a", 0).unwrap();
+        s.push("b", 0).unwrap();
+        assert!(!s.is_closed());
+        let residue: Vec<&str> = s.close().collect();
+        assert_eq!(residue, vec!["a", "b"]);
+        assert!(s.is_closed());
+        assert_eq!(s.push("c", 0), Err("c"), "closed stack hands the item back");
+        assert!(s.close().next().is_none(), "second close is an empty no-op");
+        assert!(s.claim().next().is_none());
+        assert!(s.is_closed(), "claim on a closed stack keeps it closed");
+    }
+
+    #[test]
+    fn drop_frees_unconsumed_items() {
+        // Leak check by drop counting.
+        struct D(Arc<std::sync::atomic::AtomicUsize>);
+        impl Drop for D {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let drops = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let s = ClaimStack::new();
+        for _ in 0..4 {
+            s.push(D(Arc::clone(&drops)), 0).unwrap();
+        }
+        let mut claimed = s.claim();
+        let _one = claimed.next().unwrap();
+        drop(claimed); // frees the 3 unconsumed
+        s.push(D(Arc::clone(&drops)), 0).unwrap();
+        drop(s); // frees the 1 pending
+        drop(_one);
+        assert_eq!(drops.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn concurrent_pushes_drain_exactly_once_in_order() {
+        // The tentpole property: multi-producer push, exactly-once
+        // in-order drain by a concurrent claimer.
+        const PRODUCERS: u64 = 4;
+        const PER: u64 = 2_000;
+        let s = Arc::new(ClaimStack::new());
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for seq in 0..PER {
+                        s.push((p << 32) | seq, p).unwrap();
+                    }
+                })
+            })
+            .collect();
+        // Claim concurrently with the pushes, like the flusher does.
+        let mut drained: Vec<u64> = Vec::new();
+        loop {
+            drained.extend(s.claim());
+            if drained.len() as u64 == PRODUCERS * PER {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        assert!(s.claim().next().is_none(), "everything already claimed");
+        // Per-producer order: each producer's pushes linearize in
+        // program order and drains preserve push order, so every
+        // producer's subsequence must be increasing.
+        let mut last = vec![None::<u64>; PRODUCERS as usize];
+        for v in &drained {
+            let (p, seq) = ((v >> 32) as usize, v & 0xFFFF_FFFF);
+            if let Some(prev) = last[p] {
+                assert!(seq > prev, "producer {p} reordered: {prev} then {seq}");
+            }
+            last[p] = Some(seq);
+        }
+        // Exactly once: the sorted multiset is exact.
+        let mut all = drained;
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, PRODUCERS * PER, "lost or duplicated items");
+    }
+
+    #[test]
+    fn pushes_racing_close_never_leak_past_it() {
+        // Retire-under-delete: once close() returns, no later push may
+        // be observed anywhere (that would be a stale-window replay).
+        for _ in 0..50 {
+            let s = Arc::new(ClaimStack::new());
+            let closed = Arc::new(AtomicBool::new(false));
+            let pushers: Vec<_> = (0..3u64)
+                .map(|p| {
+                    let s = Arc::clone(&s);
+                    let closed = Arc::clone(&closed);
+                    std::thread::spawn(move || {
+                        let mut accepted = 0u64;
+                        for seq in 0.. {
+                            let was_closed = closed.load(Ordering::SeqCst);
+                            match s.push((p << 32) | seq, p) {
+                                Ok(_) => {
+                                    assert!(
+                                        !was_closed,
+                                        "push accepted after close was observed complete"
+                                    );
+                                    accepted += 1;
+                                }
+                                Err(_) => return accepted,
+                            }
+                        }
+                        unreachable!()
+                    })
+                })
+                .collect();
+            std::thread::yield_now();
+            let residue = s.close().count() as u64;
+            closed.store(true, Ordering::SeqCst);
+            let accepted: u64 = pushers.into_iter().map(|h| h.join().unwrap()).sum();
+            // Every accepted push is in the residue; pushes that lost
+            // to the close were all handed back.
+            assert!(residue <= accepted, "claimed items that were never accepted");
+            // Drain whatever raced in *before* the close finished.
+            assert_eq!(residue + s.claim().count() as u64, accepted);
+        }
+    }
+
+    #[test]
+    fn claim_epoch_protects_stalled_pushers() {
+        // Epoch arithmetic: claims bump, pushes do not.
+        let s = ClaimStack::new();
+        s.push(1u64, 0).unwrap();
+        s.push(2, 0).unwrap();
+        assert_eq!(s.epoch(), 0);
+        let _ = s.claim().count();
+        assert_eq!(s.epoch(), 1);
+        s.push(3, 0).unwrap();
+        assert_eq!(s.epoch(), 1, "pushes leave the epoch alone");
+        let _ = s.close().count();
+        assert_eq!(s.epoch(), 2, "close bumps like a claim");
+    }
+
+    #[test]
+    fn claim_cas_policy_is_swappable() {
+        let s: ClaimStack<u64> = ClaimStack::new();
+        assert_eq!(s.cas_policy(), RetryPolicy::default());
+        s.set_cas_policy(RetryPolicy::Exp);
+        assert_eq!(s.cas_policy(), RetryPolicy::Exp);
+        assert_eq!(s.push(9, 0), Ok(0), "uncontended push burns no retries");
+    }
+
+    #[test]
+    fn treiber_sequential_lifo() {
+        let s = TreiberStack::new(1);
+        assert_eq!(s.pop(0), None);
+        assert!(s.is_empty());
+        for v in 1..=5u64 {
+            s.push(0, v);
+        }
+        assert_eq!(s.len(), 5);
+        for v in (1..=5u64).rev() {
+            assert_eq!(s.pop(0), Some(v));
+        }
+        assert_eq!(s.pop(0), None);
+        assert!(s.central_op_count() >= 10, "every op touched the head");
+    }
+
+    #[test]
+    fn treiber_concurrent_no_loss_no_dup() {
+        const THREADS: usize = 4;
+        const PER: u64 = 2_000;
+        let s = Arc::new(TreiberStack::new(2 * THREADS));
+        let pushers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for seq in 0..PER {
+                        s.push(t, ((t as u64) << 32) | seq);
+                    }
+                })
+            })
+            .collect();
+        let total = THREADS as u64 * PER;
+        let popped = Arc::new(AtomicU64::new(0));
+        let poppers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                let popped = Arc::clone(&popped);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while popped.load(Ordering::Acquire) < total {
+                        if let Some(v) = s.pop(THREADS + t) {
+                            got.push(v);
+                            popped.fetch_add(1, Ordering::AcqRel);
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in pushers {
+            h.join().unwrap();
+        }
+        let mut all: Vec<u64> =
+            poppers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        assert_eq!(all.len() as u64, total);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total, "duplicated items");
+        assert_eq!(s.pop(0), None, "stack drained");
+    }
+
+    #[test]
+    fn treiber_drop_frees_residue() {
+        let s = TreiberStack::new(1);
+        for v in 0..100 {
+            s.push(0, v);
+        }
+        drop(s); // leak-checked under sanitizers; must not crash
+    }
+}

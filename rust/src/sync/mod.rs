@@ -1,17 +1,22 @@
 //! Low-level synchronization substrate: cache-line padding, exponential
 //! backoff plus composable CAS retry policies ([`RetryPolicy`] /
-//! [`CasCtl`]), a 128-bit atomic (the CAS2 LCRQ needs), a tiny spinlock
-//! used by fallback paths and tests, and a thin `poll(2)` wrapper for
-//! the service's event-driven connection layer.
+//! [`CasCtl`]), a 128-bit atomic (the CAS2 LCRQ needs), the
+//! atomic-try-update claimed stack the journal's lock-free append path
+//! rides on ([`ClaimStack`] / [`TreiberStack`]), a tiny spinlock used
+//! by fallback paths (the 128-bit CAS emulation, item tables) and
+//! tests, and a thin `poll(2)` wrapper for the service's event-driven
+//! connection layer.
 
 pub mod atomic128;
 pub mod backoff;
+pub mod claim;
 pub mod padded;
 pub mod poll;
 pub mod spinlock;
 
 pub use atomic128::AtomicU128;
 pub use backoff::{Backoff, CasCtl, CasSite, Lcg, Retry, RetryPolicy};
+pub use claim::{ClaimStack, Claimed, TreiberStack};
 pub use padded::CachePadded;
 pub use poll::{PollSet, PollSource};
 pub use spinlock::SpinLock;

@@ -14,6 +14,9 @@
 //!   multiset, no duplication, and per-producer order within every
 //!   consumer stream (the observable consequences of FIFO
 //!   linearizability without global timestamps).
+//! * [`LifoChecker`] — the stack analogue for two-phase runs (all
+//!   pushes complete before any pop starts): exact multiset plus
+//!   per-producer *descending* order within every pop stream.
 
 use std::sync::Arc;
 
@@ -200,6 +203,78 @@ impl FifoChecker {
     }
 }
 
+// ---------------------------------------------------------------------
+// Stack LIFO checking
+// ---------------------------------------------------------------------
+
+/// Collects per-popper streams of `(producer, seq)`-encoded items
+/// from a *two-phase* stack run — every push completes before any pop
+/// starts — and checks the observable LIFO properties.
+///
+/// Each producer pushes its sequence numbers in increasing order, so
+/// once the push phase quiesces, a producer's later items sit above
+/// its earlier ones. Any single pop stream must therefore see each
+/// producer's sequences in strictly *decreasing* order, and the union
+/// of all streams must be the exact pushed multiset. (Interleaved
+/// push/pop runs admit more orders — elimination pairs a push with a
+/// concurrent pop — which is why the checker's contract is two-phase.)
+#[derive(Default)]
+pub struct LifoChecker {
+    streams: Vec<Vec<u64>>,
+}
+
+impl LifoChecker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one popper's stream (in pop order). Items use the same
+    /// [`encode_item`] packing as the FIFO checker.
+    pub fn add_stream(&mut self, items: Vec<u64>) {
+        self.streams.push(items);
+    }
+
+    /// Check against `producers × per_producer` expected items.
+    pub fn check(&self, producers: usize, per_producer: u64) -> Result<()> {
+        // Per-popper: each producer's sequence must be decreasing.
+        for (c, stream) in self.streams.iter().enumerate() {
+            let mut last = vec![None::<u64>; producers];
+            for &v in stream {
+                let (p, seq) = ((v >> 32) as usize, v & 0xFFFF_FFFF);
+                if p >= producers {
+                    bail!("popper {c} saw item from unknown producer {p}");
+                }
+                if let Some(prev) = last[p] {
+                    if seq >= prev {
+                        bail!(
+                            "LIFO violation at popper {c}: producer {p} seq {seq} after {prev}"
+                        );
+                    }
+                }
+                last[p] = Some(seq);
+            }
+        }
+        // Global: exact multiset.
+        let mut all: Vec<u64> = self.streams.iter().flatten().copied().collect();
+        let total = producers as u64 * per_producer;
+        if all.len() as u64 != total {
+            bail!("expected {total} items, popped {}", all.len());
+        }
+        all.sort_unstable();
+        all.dedup();
+        if all.len() as u64 != total {
+            bail!("duplicate items popped");
+        }
+        for p in 0..producers as u64 {
+            let count = all.iter().filter(|v| (*v >> 32) == p).count() as u64;
+            if count != per_producer {
+                bail!("producer {p}: {count} items popped, expected {per_producer}");
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,5 +333,97 @@ mod tests {
         let mut c = FifoChecker::new();
         c.add_stream(vec![encode_item(0, 0), encode_item(0, 0)]);
         assert!(c.check(1, 2).is_err(), "dup");
+    }
+
+    #[test]
+    fn lifo_checker_accepts_valid() {
+        let mut c = LifoChecker::new();
+        // Producer 0 pushed 0,1,2; producer 1 pushed 0,1. Poppers see
+        // each producer's sequences descending.
+        c.add_stream(vec![encode_item(0, 2), encode_item(1, 1), encode_item(0, 1)]);
+        c.add_stream(vec![encode_item(1, 0), encode_item(0, 0)]);
+        c.check(2, 2).unwrap_err(); // producer 0 pushed 3 items, not 2
+        let mut c = LifoChecker::new();
+        c.add_stream(vec![encode_item(0, 1), encode_item(1, 1)]);
+        c.add_stream(vec![encode_item(1, 0), encode_item(0, 0)]);
+        c.check(2, 2).unwrap();
+    }
+
+    #[test]
+    fn lifo_checker_rejects_ascending_and_dup() {
+        let mut c = LifoChecker::new();
+        c.add_stream(vec![encode_item(0, 0), encode_item(0, 1)]);
+        assert!(c.check(1, 2).is_err(), "ascending");
+        let mut c = LifoChecker::new();
+        c.add_stream(vec![encode_item(0, 1), encode_item(0, 1)]);
+        assert!(c.check(1, 2).is_err(), "dup");
+        let mut c = LifoChecker::new();
+        c.add_stream(vec![encode_item(0, 1)]);
+        assert!(c.check(1, 2).is_err(), "loss");
+    }
+
+    /// The acceptance run: an elimination-backed stack stays LIFO
+    /// while its elimination layer is resized under it. Two-phase
+    /// (pushes quiesce before pops start), with a resizer thread
+    /// churning the active width through both phases.
+    #[test]
+    fn elimination_stack_lifo_under_concurrent_resize() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        const PRODUCERS: usize = 4;
+        const POPPERS: usize = 4;
+        const PER_PRODUCER: u64 = 2_000;
+
+        let stack = crate::queue::stack::make_stack("stack+elastic", PRODUCERS + POPPERS, None)
+            .expect("stack+elastic spec");
+        let stop = Arc::new(AtomicBool::new(false));
+        let resizer = {
+            let (stack, stop) = (Arc::clone(&stack), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                let mut width = 1usize;
+                while !stop.load(Ordering::Relaxed) {
+                    stack.resize_elimination(width);
+                    width = if width >= 8 { 1 } else { width * 2 };
+                    std::thread::yield_now();
+                }
+            })
+        };
+
+        // Phase 1: concurrent pushes.
+        let pushers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let stack = Arc::clone(&stack);
+                std::thread::spawn(move || {
+                    for seq in 0..PER_PRODUCER {
+                        stack.push(p, encode_item(p, seq));
+                    }
+                })
+            })
+            .collect();
+        pushers.into_iter().for_each(|h| h.join().unwrap());
+
+        // Phase 2: concurrent pops drain it dry.
+        let poppers: Vec<_> = (0..POPPERS)
+            .map(|c| {
+                let stack = Arc::clone(&stack);
+                std::thread::spawn(move || {
+                    let tid = PRODUCERS + c;
+                    let mut stream = Vec::new();
+                    while let Some(v) = stack.pop(tid) {
+                        stream.push(v);
+                    }
+                    stream
+                })
+            })
+            .collect();
+        let mut checker = LifoChecker::new();
+        for h in poppers {
+            checker.add_stream(h.join().unwrap());
+        }
+        stop.store(true, Ordering::Relaxed);
+        resizer.join().unwrap();
+
+        checker.check(PRODUCERS, PER_PRODUCER).unwrap();
+        assert_eq!(stack.pop(0), None, "drained");
     }
 }

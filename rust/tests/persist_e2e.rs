@@ -118,6 +118,81 @@ fn crash_recovery_restores_counters_and_queues_exactly() {
 }
 
 #[test]
+fn crash_recovery_restores_stacks_in_lifo_order() {
+    let dir = scratch_dir("crash-stack");
+    let serve_opts = |dir: &std::path::Path| ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str(dir))),
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    };
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let addr = server.addr.to_string();
+
+    // Push a mixed-type history and pop part of it back, tracking the
+    // model stack the survivor must equal.
+    let mut model: Vec<u64> = Vec::new();
+    {
+        let c = RegistryClient::connect(&addr).unwrap();
+        let undo = c.create_stack("undo", &CreateSpec::backend("stack+elastic:fixed:2")).unwrap();
+        undo.push_bytes(b"marker").unwrap();
+        for k in 0..150u64 {
+            undo.push(7000 + k).unwrap();
+            model.push(7000 + k);
+            if k % 5 == 4 {
+                // Two-phase locally: this pop races nothing, so it
+                // must return the model's top.
+                assert_eq!(undo.pop().unwrap(), model.pop());
+            }
+        }
+
+        // The lock-free journal's own counters surface in the cluster
+        // aggregate: every durable mutation was one claim-stack push,
+        // and the flusher claimed them in batches.
+        let agg = c.cluster_stats().unwrap();
+        let per_shard = agg.get("per_shard").and_then(Json::as_arr).unwrap();
+        let sum = |key: &str| -> u64 {
+            per_shard.iter().filter_map(|s| s.get(key).and_then(Json::as_u64)).sum()
+        };
+        assert!(sum("journal_pushes") > 150, "every push/pop journaled");
+        assert!(sum("journal_drains") >= 1, "the flusher must have claimed batches");
+        assert!(
+            sum("journal_pushes") >= sum("journal_drains"),
+            "a drain claims at least one record"
+        );
+        let batch_max =
+            per_shard.iter().filter_map(|s| s.get("journal_batch_max").and_then(Json::as_u64)).max();
+        assert!(batch_max.unwrap_or(0) >= 1, "per-shard journal_batch_max reported");
+        assert!(
+            per_shard
+                .iter()
+                .any(|s| s.get("journal_batch_avg").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0),
+            "per-shard journal_batch_avg reported"
+        );
+    }
+    server.crash();
+
+    let server = serve(&serve_opts(&dir)).unwrap();
+    let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+    let listed = c.list().unwrap();
+    let undo_row = listed.iter().find(|(n, _, _)| n == "undo").unwrap();
+    assert_eq!(undo_row.1, "stack");
+    assert_eq!(undo_row.2, "stack+elastic:fixed:2", "stack backend survives");
+
+    // The survivor pops in exact LIFO order down to the byte marker.
+    let undo = c.stack("undo").unwrap();
+    while let Some(expected) = model.pop() {
+        assert_eq!(undo.pop().unwrap(), Some(expected), "LIFO order after recovery");
+    }
+    assert_eq!(
+        undo.pop_item().unwrap(),
+        Some(aggfunnels::service::frame::Item::Bytes(b"marker".to_vec())),
+        "bottom byte-string item survives"
+    );
+    assert_eq!(undo.pop_item().unwrap(), None, "stack drained");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn crash_mid_workload_never_duplicates_grants() {
     let dir = scratch_dir("crash-mid");
     let serve_opts = |dir: &std::path::Path| ServeOpts {
