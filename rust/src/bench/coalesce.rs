@@ -1,0 +1,264 @@
+//! The `coalesce` scenario: server-side op coalescing on vs. off on
+//! the workload it was built for — one hot counter, many pipelined
+//! connections.
+//!
+//! Every point starts a real server and drives it with client threads
+//! pipelining batches of `take` ops on the default counter over the
+//! binary wire. The only variable between the two series is
+//! `ConnOpts::coalesce`, so the gap is the executor-sweep merge: with
+//! coalescing on, a run of takes from many connections rides one
+//! funnel `fetch_add` instead of one per request. Two figures:
+//!
+//! * `c1` (`mops`): end-to-end take throughput per client count.
+//! * `c2` (`avg_batch`): the server's own `coalesced_ops /
+//!   coalesce_merges` ratio — how many requests the average merged
+//!   group carried (0 for the off series, which must not merge).
+//!
+//! Every measured point is gated on an exactness oracle: the grants
+//! collected by all clients, sorted by start, must tile a dense,
+//! disjoint range starting at 0 and ending exactly at the counter's
+//! final value — the same per-op guarantee the unmerged path gives.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::Row;
+use crate::service::{
+    serve, BinRequest, BinResponse, ConnOpts, RegistryClient, ServeOpts, ServerHandle,
+    DEFAULT_OBJECT,
+};
+use crate::util::json::Json;
+use crate::util::stats::mops;
+
+/// The two coalescing modes the sweep compares (series labels).
+pub const COALESCE_SERIES: [&str; 2] = ["coalesce", "no-coalesce"];
+
+/// Options for [`run_coalesce_sweep`].
+#[derive(Clone, Debug)]
+pub struct CoalesceOpts {
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    /// Pipelined `take` requests per `call_many` batch.
+    pub batch: usize,
+    /// Measured wall-clock duration per point.
+    pub duration: Duration,
+}
+
+impl Default for CoalesceOpts {
+    fn default() -> Self {
+        Self { clients: vec![1, 2, 4, 8], batch: 16, duration: Duration::from_millis(300) }
+    }
+}
+
+impl CoalesceOpts {
+    /// Reduced sweep for smoke tests and `--quick`.
+    pub fn quick() -> Self {
+        Self { clients: vec![2], batch: 8, duration: Duration::from_millis(60) }
+    }
+}
+
+/// Per-slot take size: a deterministic 1/2/3 mix, so the oracle
+/// exercises variable-width grants, not just unit increments.
+fn take_count(slot: usize) -> u64 {
+    (slot % 3) as u64 + 1
+}
+
+/// Check the exactness oracle on the collected grants: sorted by
+/// start they must tile `[0, expected_end)` densely and disjointly —
+/// every ticket dispensed exactly once, none invented, none lost.
+fn check_grants(grants: &mut Vec<(u64, u64)>, expected_end: u64) -> Result<()> {
+    grants.sort_unstable();
+    let mut at = 0u64;
+    for &(start, count) in grants.iter() {
+        if start != at {
+            bail!("grant oracle: range starting at {start} (expected {at}) — merged takes overlapped or left a gap");
+        }
+        at += count;
+    }
+    if at != expected_end {
+        bail!("grant oracle: grants end at {at} but the counter reads {expected_end}");
+    }
+    Ok(())
+}
+
+/// Drive one (mode, clients) point: identical binary clients
+/// pipelining take batches against one hot counter. Returns
+/// `(mops, avg_merged_batch)` after the oracle gate passes.
+fn measure_coalesce(
+    server: ServerHandle,
+    clients: usize,
+    batch: usize,
+    duration: Duration,
+) -> Result<(f64, f64, u64)> {
+    let addr = Arc::new(server.addr.to_string());
+    let stop = Arc::new(AtomicBool::new(false));
+    let grants = Arc::new(Mutex::new(Vec::<(u64, u64)>::new()));
+    let workers: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            let stop = Arc::clone(&stop);
+            let grants = Arc::clone(&grants);
+            std::thread::spawn(move || -> Result<u64> {
+                let c = RegistryClient::connect_binary(&addr)?;
+                let reqs: Vec<BinRequest> = (0..batch)
+                    .map(|k| BinRequest::Take {
+                        name: DEFAULT_OBJECT.to_string(),
+                        count: take_count(k),
+                        priority: false,
+                    })
+                    .collect();
+                let mut ops = 0u64;
+                let mut mine = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    for (k, resp) in c.call_many(&reqs)?.into_iter().enumerate() {
+                        match resp {
+                            BinResponse::Start(start) => mine.push((start, take_count(k))),
+                            BinResponse::Err { code, msg } => {
+                                return Err(anyhow!("take failed ({code}): {msg}"));
+                            }
+                            other => return Err(anyhow!("unexpected take reply {other:?}")),
+                        }
+                    }
+                    ops += reqs.len() as u64;
+                }
+                grants.lock().unwrap().extend(mine);
+                Ok(ops)
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    let mut client_err: Option<anyhow::Error> = None;
+    for w in workers {
+        match w.join() {
+            Ok(Ok(ops)) => total += ops,
+            Ok(Err(e)) => client_err = client_err.or(Some(e)),
+            Err(_) => {
+                client_err =
+                    client_err.or_else(|| Some(anyhow::anyhow!("client thread panicked")));
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    if let Some(e) = client_err {
+        server.shutdown();
+        return Err(e);
+    }
+    // Probe the final counter value and the server's merge counters
+    // before shutdown, then gate on the oracle.
+    let probed = RegistryClient::connect(&addr).and_then(|p| {
+        let end = p.counter(DEFAULT_OBJECT)?.read()?;
+        let cluster = p.cluster_stats()?;
+        Ok((end, cluster))
+    });
+    server.shutdown();
+    let (end, cluster) = probed?;
+    check_grants(&mut grants.lock().unwrap(), end)?;
+    let (mut merges, mut merged_ops) = (0u64, 0u64);
+    if let Some(shards) = cluster.get("per_shard").and_then(Json::as_arr) {
+        for s in shards {
+            merges += s.get("coalesce_merges").and_then(Json::as_u64).unwrap_or(0);
+            merged_ops += s.get("coalesced_ops").and_then(Json::as_u64).unwrap_or(0);
+        }
+    }
+    let avg_batch = if merges > 0 { merged_ops as f64 / merges as f64 } else { 0.0 };
+    Ok((mops(total, elapsed), avg_batch, merges))
+}
+
+/// Run the `coalesce` scenario: the same hot-counter pipelined take
+/// workload with executor coalescing on and off. Emits `c1` (Mops/s)
+/// and `c2` (average merged-batch size; 0 for the off series).
+pub fn run_coalesce_sweep(opts: &CoalesceOpts) -> Result<Vec<Row>> {
+    let batch = opts.batch.max(2);
+    let mut rows = Vec::new();
+    for series in COALESCE_SERIES {
+        let enabled = series == "coalesce";
+        for &clients in &opts.clients {
+            let clients = clients.max(1);
+            let server = serve(&ServeOpts {
+                resize_interval_ms: 10,
+                conn: ConnOpts {
+                    max_conns: clients + 8,
+                    coalesce: enabled,
+                    ..ConnOpts::default()
+                },
+                ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+            })
+            .with_context(|| format!("serving the {series} mode for {clients} clients"))?;
+            let (throughput, avg_batch, merges) =
+                measure_coalesce(server, clients, batch, opts.duration)
+                    .with_context(|| format!("{series} mode with {clients} clients"))?;
+            if enabled && merges == 0 {
+                bail!(
+                    "coalesce mode with {clients} pipelined clients never merged a batch — \
+                     the executor sweep is not seeing contiguous runs"
+                );
+            }
+            if !enabled && merges > 0 {
+                bail!("no-coalesce mode reported {merges} merges — the off switch leaks");
+            }
+            rows.push(Row {
+                figure: "c1",
+                series: series.to_string(),
+                threads: clients,
+                metric: "mops",
+                value: throughput,
+            });
+            rows.push(Row {
+                figure: "c2",
+                series: series.to_string(),
+                threads: clients,
+                metric: "avg_batch",
+                value: avg_batch,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grant_oracle_accepts_dense_tilings_and_rejects_bad_ones() {
+        let mut ok = vec![(3u64, 2u64), (0, 3), (5, 1)];
+        check_grants(&mut ok, 6).unwrap();
+        let mut gap = vec![(0u64, 2u64), (3, 1)];
+        assert!(check_grants(&mut gap, 4).is_err(), "gaps must fail");
+        let mut overlap = vec![(0u64, 2u64), (1, 2)];
+        assert!(check_grants(&mut overlap, 3).is_err(), "overlaps must fail");
+        let mut short = vec![(0u64, 2u64)];
+        assert!(check_grants(&mut short, 3).is_err(), "lost tickets must fail");
+    }
+
+    #[test]
+    fn both_coalesce_series_run_end_to_end() {
+        let opts =
+            CoalesceOpts { clients: vec![2], batch: 8, duration: Duration::from_millis(40) };
+        let rows = run_coalesce_sweep(&opts).unwrap();
+        for series in COALESCE_SERIES {
+            let c1 = rows
+                .iter()
+                .find(|r| r.figure == "c1" && r.series == series)
+                .unwrap_or_else(|| panic!("missing c1/{series}"));
+            assert!(c1.value > 0.0, "{series}: zero take throughput");
+        }
+        let on = rows
+            .iter()
+            .find(|r| r.figure == "c2" && r.series == "coalesce")
+            .expect("missing c2/coalesce");
+        assert!(on.value > 1.0, "merged batches should average above one op, got {}", on.value);
+        let off = rows
+            .iter()
+            .find(|r| r.figure == "c2" && r.series == "no-coalesce")
+            .expect("missing c2/no-coalesce");
+        assert_eq!(off.value, 0.0, "the off series must not merge");
+        assert_eq!(rows.len(), 2 * COALESCE_SERIES.len());
+    }
+}

@@ -16,6 +16,7 @@
 //!   throughput and bytes per op.
 
 pub mod adversarial;
+pub mod coalesce;
 pub mod figures;
 pub mod native;
 pub mod service_mix;

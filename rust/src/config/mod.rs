@@ -192,6 +192,13 @@ pub struct ServiceSettings {
     /// Backpressure ceiling: decoded-but-undrained requests per shard
     /// before the poll loop stops reading sockets (TCP pushback).
     pub max_pending: usize,
+    /// Merge same-object same-kind request runs inside each executor
+    /// sweep into single funnel batches (`false` = the one-op-at-a-
+    /// time baseline, kept for A/B measurement).
+    pub coalesce: bool,
+    /// Fairness cap: requests one executor sweep drains from a single
+    /// connection before moving on (leftovers re-schedule it).
+    pub max_ops_per_sweep: usize,
     /// Objects pre-created at boot (besides the default counter).
     pub objects: Vec<ObjectManifest>,
 }
@@ -214,6 +221,8 @@ impl Default for ServiceSettings {
             io_threads: 1,
             max_conns: 1024,
             max_pending: 4096,
+            coalesce: true,
+            max_ops_per_sweep: 128,
             objects: Vec::new(),
         }
     }
@@ -294,6 +303,9 @@ impl AppConfig {
         sv.max_conns = doc.int_or("service.max_conns", sv.max_conns as i64).max(1) as usize;
         sv.max_pending =
             doc.int_or("service.max_pending", sv.max_pending as i64).max(1) as usize;
+        sv.coalesce = doc.bool_or("service.coalesce", sv.coalesce);
+        sv.max_ops_per_sweep =
+            doc.int_or("service.max_ops_per_sweep", sv.max_ops_per_sweep as i64).max(1) as usize;
 
         // `[objects.<name>]` manifest sections; later layers override
         // per name, fields merge within a name.
@@ -557,12 +569,16 @@ mod tests {
         assert_eq!(c.service.io_threads, 1);
         assert_eq!(c.service.max_conns, 1024);
         assert_eq!(c.service.max_pending, 4096);
+        assert!(c.service.coalesce, "coalescing defaults on");
+        assert_eq!(c.service.max_ops_per_sweep, 128);
         let doc = TomlDoc::parse(
             r#"
             [service]
             io_threads = 4
             max_conns = 64
             max_pending = 256
+            coalesce = false
+            max_ops_per_sweep = 16
             "#,
         )
         .unwrap();
@@ -570,9 +586,14 @@ mod tests {
         assert_eq!(c.service.io_threads, 4);
         assert_eq!(c.service.max_conns, 64);
         assert_eq!(c.service.max_pending, 256);
+        assert!(!c.service.coalesce);
+        assert_eq!(c.service.max_ops_per_sweep, 16);
         let doc = TomlDoc::parse("service.io_threads = 0").unwrap();
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.service.io_threads, 1, "clamped to at least one poll thread");
+        let doc = TomlDoc::parse("service.max_ops_per_sweep = 0").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.service.max_ops_per_sweep, 1, "sweep cap clamps to at least one op");
         let doc = TomlDoc::parse("service.conn_mode = \"event\"").unwrap();
         assert!(c.apply_doc(&doc).is_err(), "removed conn_mode key fails fast, not silently");
     }

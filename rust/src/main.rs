@@ -21,6 +21,7 @@ use std::time::Duration;
 use aggfunnels::bench::adversarial::{
     run_adv_churn, run_adv_fair, run_adv_lat, run_adv_read, run_adv_skew, AdversarialOpts,
 };
+use aggfunnels::bench::coalesce::{run_coalesce_sweep, CoalesceOpts};
 use aggfunnels::bench::figures::{run_group, SweepOpts, FIGURE_GROUPS};
 use aggfunnels::bench::native::{
     make_faa, make_queue, run_native_faa, run_native_queue, FAA_ALGOS, QUEUE_ALGOS,
@@ -87,7 +88,7 @@ fn print_usage() {
         "aggfunnels — Aggregating Funnels reproduction\n\n\
          Usage: aggfunnels <subcommand> [options]\n\n\
          Subcommands:\n  \
-         figures [group|width|mix|service-mix|service-shard|persist|journal|conn|wire|adv-skew|adv-churn|adv-read|adv-fair|adv-lat|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
+         figures [group|width|mix|service-mix|service-shard|persist|journal|conn|wire|coalesce|adv-skew|adv-churn|adv-read|adv-fair|adv-lat|all] [--quick] [--json] [--grid L] [--horizon N] [--out DIR]\n  \
          sim --algo A --threads L [--faa-ratio R] [--work W] [--m M] [--direct D]\n  \
          bench-faa --algo A --threads L [--ms MS] [--m M] [--faa-ratio R] [--work W]\n  \
          bench-queue --algo Q --threads L [--ms MS] [--work W]\n  \
@@ -147,9 +148,9 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
     }
 
     // `all` covers the simulated groups; `service-mix`,
-    // `service-shard`, `persist`, `journal`, `conn`, `wire` and the
-    // `adv-*` adversarial sweeps start real servers, so they only run
-    // when named explicitly.
+    // `service-shard`, `persist`, `journal`, `conn`, `wire`,
+    // `coalesce` and the `adv-*` adversarial sweeps start real
+    // servers, so they only run when named explicitly.
     let groups: Vec<String> = match p.positional.first().map(String::as_str) {
         None | Some("all") => FIGURE_GROUPS.iter().map(|s| s.to_string()).collect(),
         Some(g) => vec![g.to_string()],
@@ -215,6 +216,16 @@ fn cmd_figures(args: Vec<String>) -> Result<()> {
                 sweep.clients = opts.grid.clone();
             }
             ("wire".to_string(), run_wire_sweep(&sweep)?)
+        } else if g == "coalesce" {
+            let mut sweep = if p.has_flag("quick") {
+                CoalesceOpts::quick()
+            } else {
+                CoalesceOpts::default()
+            };
+            if p.get("grid").is_some() {
+                sweep.clients = opts.grid.clone();
+            }
+            ("coalesce".to_string(), run_coalesce_sweep(&sweep)?)
         } else if g.starts_with("adv-") {
             let mut adv = if p.has_flag("quick") {
                 AdversarialOpts::quick()
@@ -451,6 +462,8 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("io-threads", None, "poll-loop threads per shard")
         .opt("max-conns", None, "max open connections per shard")
         .opt("max-pending", None, "undrained-request backpressure ceiling")
+        .opt("max-ops-per-sweep", None, "per-connection fairness cap per executor sweep")
+        .flag("no-coalesce", "disable cross-connection op coalescing (A/B baseline)")
         .opt("m", None, "initial aggregators per sign (default counter)")
         .opt("policy", None, "width policy: fixed:<m> | sqrtp | aimd")
         .opt("cas-policy", None, "default CAS retry policy: none | const | exp | adaptive")
@@ -481,6 +494,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         io_threads: p.parse_or::<usize>("io-threads", cfg.service.io_threads).max(1),
         max_conns: p.parse_or::<usize>("max-conns", cfg.service.max_conns).max(1),
         max_pending: p.parse_or::<usize>("max-pending", cfg.service.max_pending).max(1),
+        coalesce: !p.has_flag("no-coalesce") && cfg.service.coalesce,
+        max_ops_per_sweep: p
+            .parse_or::<usize>("max-ops-per-sweep", cfg.service.max_ops_per_sweep)
+            .max(1),
     };
     let opts = ServeOpts {
         addr: p.get_or("addr", &cfg.service.addr).to_string(),

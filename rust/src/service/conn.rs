@@ -46,18 +46,33 @@
 //! persist flusher is unaffected: executors journal at the same
 //! combining points as the old per-connection handlers, so WAL batch
 //! boundaries still track funnel group commits, not socket lifetimes.
+//!
+//! **Coalescing and fairness.** Each executor sweep drains at most
+//! `max_ops_per_sweep` requests per connection (leftovers re-schedule
+//! the connection, so a deeply pipelined client shares the executor
+//! with its co-scheduled siblings) and hands the whole plan to
+//! [`super::coalesce`], which merges same-object same-kind runs into
+//! single funnel ops — see that module for the merge rules. The hot
+//! path recycles per-request buffers through a per-shard [`BufPool`]
+//! (decoded JSON lines and binary frame payloads alike), responses
+//! render into per-executor scratch buffers, and [`ConnShared::send`]
+//! pushes the backlog and the new bytes with one vectored write.
+//! Cross-thread poller wakeups ride a [`SelfPipe`] (pipe2 +
+//! O_NONBLOCK), not the old loopback-TCP `WakePing` pair — no port
+//! consumption, no dependence on loopback being up.
 
 use std::collections::VecDeque;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::sync::poll::PollSet;
+use crate::sync::poll::{PollSet, SelfPipe};
 use crate::util::json::Json;
 
-use super::error::{error_json, service_err, ErrorCode};
+use super::coalesce;
+use super::error::ErrorCode;
 use super::frame;
 use super::ServerState;
 
@@ -74,11 +89,27 @@ pub struct ConnOpts {
     /// the I/O threads stop reading and TCP backpressure reaches the
     /// clients.
     pub max_pending: usize,
+    /// Merge same-object same-kind requests drained in one executor
+    /// sweep into single funnel ops (see [`super::coalesce`]). On by
+    /// default; the off position is the measured baseline of the
+    /// `figures coalesce` sweep.
+    pub coalesce: bool,
+    /// Requests one executor sweep drains from a single connection
+    /// before moving on (the fairness cap): a deeply pipelined client
+    /// keeps its leftovers queued and re-scheduled rather than
+    /// monopolizing the sweep. Clamped to at least 1.
+    pub max_ops_per_sweep: usize,
 }
 
 impl Default for ConnOpts {
     fn default() -> Self {
-        ConnOpts { io_threads: 1, max_conns: 1024, max_pending: 4096 }
+        ConnOpts {
+            io_threads: 1,
+            max_conns: 1024,
+            max_pending: 4096,
+            coalesce: true,
+            max_ops_per_sweep: 128,
+        }
     }
 }
 
@@ -97,6 +128,95 @@ const READ_ROUNDS: usize = 16;
 /// the batch whose occupancy `exec_drained_ops / exec_drains`
 /// reports.
 const SWEEP: usize = 64;
+/// Buffers the per-shard pool retains per kind; beyond it a returned
+/// buffer is simply dropped (steady state never gets there).
+const POOL_LIMIT: usize = 4096;
+/// Largest buffer capacity the pool keeps. A one-off huge request
+/// (capped by [`MAX_LINE`]/`MAX_WIRE_FRAME`) must not pin a megabyte
+/// in the pool forever.
+const POOL_MAX_CAP: usize = 64 << 10;
+
+/// A per-shard recycling pool for the hot path's per-request buffers:
+/// decoded JSON line `String`s and binary frame payload `Vec<u8>`s.
+/// I/O threads draw from it while decoding; executors return buffers
+/// after the replies are rendered. Once warm, a steady workload
+/// decodes and answers without allocating per request — the
+/// `pool_hits` / `pool_misses` gauges in `stats "*"` show the warm-up
+/// and the steady state.
+pub(super) struct BufPool {
+    strings: Mutex<Vec<String>>,
+    bufs: Mutex<Vec<Vec<u8>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BufPool {
+    fn new() -> Self {
+        BufPool {
+            strings: Mutex::new(Vec::new()),
+            bufs: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn get_string(&self) -> String {
+        match self.strings.lock().unwrap().pop() {
+            Some(s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                String::new()
+            }
+        }
+    }
+
+    fn put_string(&self, mut s: String) {
+        s.clear();
+        if s.capacity() == 0 || s.capacity() > POOL_MAX_CAP {
+            return;
+        }
+        let mut pool = self.strings.lock().unwrap();
+        if pool.len() < POOL_LIMIT {
+            pool.push(s);
+        }
+    }
+
+    fn get_buf(&self) -> Vec<u8> {
+        match self.bufs.lock().unwrap().pop() {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    fn put_buf(&self, mut b: Vec<u8>) {
+        b.clear();
+        if b.capacity() == 0 || b.capacity() > POOL_MAX_CAP {
+            return;
+        }
+        let mut pool = self.bufs.lock().unwrap();
+        if pool.len() < POOL_LIMIT {
+            pool.push(b);
+        }
+    }
+
+    /// Give a finished request's buffer back to the pool.
+    fn recycle(&self, req: Request) {
+        match req {
+            Request::Line(s) => self.put_string(s),
+            Request::Frame(b) => self.put_buf(b),
+            Request::Overlong(_) | Request::BadFrame(_) => {}
+        }
+    }
+}
 
 /// Per-shard state shared between the I/O threads and the executors.
 pub(super) struct EventQueue {
@@ -119,6 +239,8 @@ pub(super) struct EventQueue {
     /// compares across protocols.
     bytes_in: AtomicU64,
     bytes_out: AtomicU64,
+    /// The shard's request-buffer recycling pool.
+    pool: BufPool,
 }
 
 impl EventQueue {
@@ -132,6 +254,7 @@ impl EventQueue {
             next_id: AtomicU64::new(0),
             bytes_in: AtomicU64::new(0),
             bytes_out: AtomicU64::new(0),
+            pool: BufPool::new(),
         }
     }
 
@@ -154,6 +277,17 @@ impl EventQueue {
     /// Total response bytes queued to this shard's sockets.
     pub(super) fn bytes_out(&self) -> u64 {
         self.bytes_out.load(Ordering::Relaxed)
+    }
+
+    /// Request buffers served from the recycling pool.
+    pub(super) fn pool_hits(&self) -> u64 {
+        self.pool.hits.load(Ordering::Relaxed)
+    }
+
+    /// Request buffers freshly allocated (pool empty — warm-up, or a
+    /// burst beyond the pool's high-water mark).
+    pub(super) fn pool_misses(&self) -> u64 {
+        self.pool.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -198,7 +332,7 @@ fn least_loaded(loads: &[Arc<IoLoad>]) -> usize {
 /// execution per connection — responses keep request order.
 struct ConnShared {
     writer: TcpStream,
-    wake: Arc<WakePing>,
+    wake: Arc<SelfPipe>,
     /// The owning I/O thread's load cell, so executors can retire
     /// this connection's share of the fan-out pending count.
     io_load: Arc<IoLoad>,
@@ -218,7 +352,7 @@ struct ConnShared {
 /// the I/O thread — preserves the pipelining contract: every request
 /// gets exactly one reply, in the order the requests were sent, even
 /// when some of them are garbage.
-enum Request {
+pub(super) enum Request {
     /// A complete JSON request line, ready for `handle_request`.
     Line(String),
     /// A line that exceeded [`MAX_LINE`] (bytes seen so far, for the
@@ -238,16 +372,57 @@ enum Request {
 }
 
 impl ConnShared {
-    /// Queue `bytes` for this connection and push them as far as the
-    /// socket will take them right now; leftovers wait for POLLOUT
-    /// (the wake tells the owning I/O thread to start watching).
+    /// Queue `bytes` for this connection and push them — backlog
+    /// first, then the new bytes, in one vectored write per syscall —
+    /// as far as the socket will take them right now. In the common
+    /// case (no backlog, socket writable) the reply bytes go from the
+    /// executor's scratch buffer straight to the kernel without ever
+    /// being copied into `out`; only the unaccepted remainder is
+    /// buffered, waiting for POLLOUT (the wake tells the owning I/O
+    /// thread to start watching).
     fn send(&self, bytes: &[u8]) {
         if self.dead.load(Ordering::Acquire) {
             return;
         }
-        self.out.lock().unwrap().extend_from_slice(bytes);
-        self.flush();
-        if !self.out.lock().unwrap().is_empty() {
+        let mut out = self.out.lock().unwrap();
+        let mut old = 0usize; // consumed from the backlog
+        let mut new = 0usize; // consumed from `bytes`
+        loop {
+            let res = if out.len() > old {
+                let slices = [IoSlice::new(&out[old..]), IoSlice::new(&bytes[new..])];
+                (&self.writer).write_vectored(&slices)
+            } else if bytes.len() > new {
+                (&self.writer).write(&bytes[new..])
+            } else {
+                break;
+            };
+            match res {
+                Ok(0) => {
+                    self.dead.store(true, Ordering::Release);
+                    break;
+                }
+                Ok(n) => {
+                    let from_old = n.min(out.len() - old);
+                    old += from_old;
+                    new += n - from_old;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead.store(true, Ordering::Release);
+                    break;
+                }
+            }
+        }
+        if self.dead.load(Ordering::Acquire) {
+            out.clear();
+            return;
+        }
+        out.drain(..old);
+        out.extend_from_slice(&bytes[new..]);
+        let wake = !out.is_empty();
+        drop(out);
+        if wake {
             self.wake.wake();
         }
     }
@@ -298,31 +473,6 @@ fn schedule(evq: &EventQueue, conn: &Arc<ConnShared>) {
     }
 }
 
-/// A self-wake channel: a loopback TCP pair (std-only — no pipe FFI)
-/// whose read end sits in the I/O thread's poll set. Anyone holding
-/// the write end can interrupt a `poll(2)` sleep.
-struct WakePing {
-    tx: TcpStream,
-}
-
-impl WakePing {
-    fn wake(&self) {
-        // One byte is enough; WouldBlock means wakes are already
-        // pending, which serves the same purpose.
-        let _ = (&self.tx).write(&[1u8]);
-    }
-}
-
-fn wake_pair() -> std::io::Result<(WakePing, TcpStream)> {
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let tx = TcpStream::connect(listener.local_addr()?)?;
-    let (rx, _) = listener.accept()?;
-    tx.set_nonblocking(true)?;
-    tx.set_nodelay(true).ok();
-    rx.set_nonblocking(true)?;
-    Ok((WakePing { tx }, rx))
-}
-
 /// Spawn one shard's event core: `io_threads` pollers (thread 0 owns
 /// the listener) plus `workers` funnel executors. All threads exit on
 /// the server stop flag after the drain protocol described in the
@@ -338,26 +488,22 @@ pub(super) fn spawn_event_core(
         state.shards[shard].evq.as_ref().expect("event core needs the shard's EventQueue"),
     );
     let io_n = opts.io_threads.max(1);
-    let mut wakes = Vec::with_capacity(io_n);
-    let mut rxs = Vec::with_capacity(io_n);
+    let mut wakes: Vec<Arc<SelfPipe>> = Vec::with_capacity(io_n);
     let mut inboxes: Vec<Inbox> = Vec::with_capacity(io_n);
     let mut loads: Vec<Arc<IoLoad>> = Vec::with_capacity(io_n);
     for _ in 0..io_n {
-        let (tx, rx) = wake_pair()?;
-        wakes.push(Arc::new(tx));
-        rxs.push(rx);
+        wakes.push(Arc::new(SelfPipe::new()?));
         inboxes.push(Arc::new(Mutex::new(Vec::new())));
         loads.push(Arc::new(IoLoad::new()));
     }
     let mut threads = Vec::with_capacity(io_n + workers);
     let mut listener = Some(listener);
-    for (t, rx) in rxs.into_iter().enumerate() {
+    for t in 0..io_n {
         let io = IoThread {
             state: Arc::clone(state),
             shard,
             evq: Arc::clone(&evq),
             listener: if t == 0 { listener.take() } else { None },
-            wake_rx: rx,
             wake: Arc::clone(&wakes[t]),
             inbox: Arc::clone(&inboxes[t]),
             inboxes: inboxes.clone(),
@@ -372,12 +518,14 @@ pub(super) fn spawn_event_core(
     for e in 0..workers.max(1) {
         let state = Arc::clone(state);
         let evq = Arc::clone(&evq);
+        let opts = opts.clone();
         // Executors are the shard's only funnel tid holders:
         // executor `e` owns tid `1 + e` outright (tid 0 stays
         // reserved for in-process callers, the foreign pool above
         // `workers` still serves forwarded ops).
         let tid = 1 + e;
-        threads.push(std::thread::spawn(move || executor_loop(&state, shard, tid, &evq)));
+        threads
+            .push(std::thread::spawn(move || executor_loop(&state, shard, tid, &evq, &opts)));
     }
     Ok(threads)
 }
@@ -414,11 +562,13 @@ struct IoThread {
     evq: Arc<EventQueue>,
     /// Thread 0 owns the shard listener; the rest only poll conns.
     listener: Option<TcpListener>,
-    wake_rx: TcpStream,
-    wake: Arc<WakePing>,
+    /// This thread's self-pipe: the read end sits in the poll set,
+    /// and executors (or the acceptor) write a byte to interrupt the
+    /// `poll(2)` sleep.
+    wake: Arc<SelfPipe>,
     inbox: Inbox,
     inboxes: Vec<Inbox>,
-    wakes: Vec<Arc<WakePing>>,
+    wakes: Vec<Arc<SelfPipe>>,
     /// This thread's load cell (same Arc as `loads[self index]`).
     load: Arc<IoLoad>,
     /// Every thread's load cell, for the acceptor's fan-out pick.
@@ -433,7 +583,7 @@ impl IoThread {
         while !self.state.stopping() {
             set.clear();
             let listener_slot = self.listener.as_ref().map(|l| set.push(l, true, false));
-            let wake_slot = set.push(&self.wake_rx, true, false);
+            let wake_slot = set.push(self.wake.as_ref(), true, false);
             // Backpressure: past `max_pending` decoded requests, stop
             // reading everywhere on this shard; TCP receive windows
             // fill and the clients feel it. Output still flushes, so
@@ -455,7 +605,7 @@ impl IoThread {
                 break;
             }
             if set.readable(wake_slot) {
-                self.drain_wake();
+                self.wake.drain();
             }
             for (i, slot) in conn_slots.into_iter().enumerate() {
                 if set.readable(slot) {
@@ -474,18 +624,6 @@ impl IoThread {
             self.reap();
         }
         self.drain_and_close();
-    }
-
-    fn drain_wake(&self) {
-        let mut sink = [0u8; 64];
-        loop {
-            match (&self.wake_rx).read(&mut sink) {
-                Ok(0) => break,
-                Ok(_) => continue,
-                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                Err(_) => break, // WouldBlock: drained
-            }
-        }
     }
 
     /// Accept everything the listener has ready, admitting up to
@@ -698,44 +836,69 @@ impl IoThread {
                         }
                         break;
                     };
-                    let line: Vec<u8> = c.buf.drain(..=pos).collect();
-                    if line.len() > MAX_LINE {
+                    if pos + 1 > MAX_LINE {
                         // Oversized but newline-terminated within
                         // this read: same in-position error, framing
                         // already intact.
+                        c.buf.drain(..=pos);
                         c.shared
                             .requests
                             .lock()
                             .unwrap()
-                            .push_back(Request::Overlong(line.len() - 1));
+                            .push_back(Request::Overlong(pos));
                         pushed += 1;
                         continue;
                     }
-                    let text = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+                    // Decode into a pooled String: the fast path is a
+                    // UTF-8 check plus a copy into recycled capacity;
+                    // only invalid UTF-8 (which the JSON parser would
+                    // reject anyway) takes the lossy allocation.
+                    let mut text = self.evq.pool.get_string();
+                    match std::str::from_utf8(&c.buf[..pos]) {
+                        Ok(s) => text.push_str(s),
+                        Err(_) => text.push_str(&String::from_utf8_lossy(&c.buf[..pos])),
+                    }
+                    c.buf.drain(..=pos);
                     if text.trim().is_empty() {
+                        self.evq.pool.put_string(text);
                         continue;
                     }
                     c.shared.requests.lock().unwrap().push_back(Request::Line(text));
                     pushed += 1;
                 }
-                Wire::Binary => match frame::decode_wire_frame(&c.buf) {
-                    frame::WireDecode::Frame { payload, consumed } => {
-                        c.buf.drain(..consumed);
-                        c.shared.requests.lock().unwrap().push_back(Request::Frame(payload));
-                        pushed += 1;
+                Wire::Binary => {
+                    let mut payload = self.evq.pool.get_buf();
+                    match frame::decode_wire_frame_into(&c.buf, &mut payload) {
+                        frame::WireDecodeInto::Frame { consumed } => {
+                            c.buf.drain(..consumed);
+                            c.shared
+                                .requests
+                                .lock()
+                                .unwrap()
+                                .push_back(Request::Frame(payload));
+                            pushed += 1;
+                        }
+                        frame::WireDecodeInto::Partial => {
+                            self.evq.pool.put_buf(payload);
+                            break;
+                        }
+                        frame::WireDecodeInto::Bad(msg) => {
+                            // Corrupt length prefix or checksum: the
+                            // stream cannot be re-framed. Stop reading;
+                            // the queued error is the final reply.
+                            self.evq.pool.put_buf(payload);
+                            c.shared
+                                .requests
+                                .lock()
+                                .unwrap()
+                                .push_back(Request::BadFrame(msg));
+                            pushed += 1;
+                            c.buf.clear();
+                            c.shared.read_closed.store(true, Ordering::Release);
+                            break;
+                        }
                     }
-                    frame::WireDecode::Partial => break,
-                    frame::WireDecode::Bad(msg) => {
-                        // Corrupt length prefix or checksum: the
-                        // stream cannot be re-framed. Stop reading;
-                        // the queued error is the final reply.
-                        c.shared.requests.lock().unwrap().push_back(Request::BadFrame(msg));
-                        pushed += 1;
-                        c.buf.clear();
-                        c.shared.read_closed.store(true, Ordering::Release);
-                        break;
-                    }
-                },
+                }
             }
         }
         if pushed > 0 {
@@ -788,7 +951,25 @@ impl IoThread {
 /// per wake-up and run their queued requests on this executor's tid.
 /// The sweep is the drain the occupancy metrics describe — under many
 /// active connections each wake-up carries many ops into the funnels.
-fn executor_loop(state: &Arc<ServerState>, shard: usize, tid: usize, evq: &EventQueue) {
+///
+/// Each sweep gathers at most `max_ops_per_sweep` requests per
+/// connection into one flat plan (leftovers re-queue via the re-arm
+/// below, so a flooding pipeline cannot starve its neighbours), hands
+/// the plan to [`coalesce::execute_sweep`] for cross-connection
+/// merging, then renders and flushes each connection's contiguous
+/// reply span. All scratch — plan, outcomes, reply buffers — lives in
+/// one per-executor [`coalesce::Scratch`] reused across sweeps, and
+/// drained request buffers return to the shard's [`BufPool`].
+fn executor_loop(
+    state: &Arc<ServerState>,
+    shard: usize,
+    tid: usize,
+    evq: &EventQueue,
+    opts: &ConnOpts,
+) {
+    let cap = opts.max_ops_per_sweep.max(1);
+    let mut scratch = coalesce::Scratch::new();
+    let mut spans: Vec<(Arc<ConnShared>, usize, usize)> = Vec::new();
     loop {
         let mut batch: Vec<Arc<ConnShared>> = Vec::new();
         {
@@ -810,58 +991,43 @@ fn executor_loop(state: &Arc<ServerState>, shard: usize, tid: usize, evq: &Event
                 q = guard;
             }
         }
-        let mut ops = 0usize;
+        let metrics = &state.shards[shard].metrics;
+        scratch.begin();
+        spans.clear();
+        let mut truncated = 0u64;
         for conn in batch {
-            let lines: Vec<Request> = conn.requests.lock().unwrap().drain(..).collect();
-            if !lines.is_empty() {
-                let mut out = Vec::new();
-                for req in &lines {
-                    // Every queued request — valid, failing, or
-                    // malformed — produces exactly one reply here, in
-                    // arrival order; a bad op in the middle of a
-                    // pipelined batch never shifts or aborts the
-                    // replies behind it.
-                    match req {
-                        Request::Line(line) => {
-                            let resp = match super::handle_request(state, shard, tid, line) {
-                                Ok(json) => json,
-                                Err(e) => error_json(&e),
-                            };
-                            out.extend_from_slice(resp.to_string().as_bytes());
-                            out.push(b'\n');
-                        }
-                        Request::Overlong(len) => {
-                            let resp = error_json(&service_err(
-                                ErrorCode::Protocol,
-                                format!(
-                                    "request line exceeds {MAX_LINE} bytes ({len} received)"
-                                ),
-                            ));
-                            out.extend_from_slice(resp.to_string().as_bytes());
-                            out.push(b'\n');
-                        }
-                        Request::Frame(payload) => {
-                            let resp = super::handle_binary(state, shard, tid, payload);
-                            frame::encode_frame(&resp, &mut out);
-                        }
-                        Request::BadFrame(msg) => {
-                            let mut payload = Vec::new();
-                            frame::encode_response(
-                                &frame::BinResponse::Err {
-                                    code: ErrorCode::Protocol,
-                                    msg: msg.clone(),
-                                },
-                                &mut payload,
-                            );
-                            frame::encode_frame(&payload, &mut out);
-                        }
-                    }
+            let start = scratch.len();
+            {
+                let mut q = conn.requests.lock().unwrap();
+                let take = q.len().min(cap);
+                if take < q.len() {
+                    truncated += 1;
                 }
-                evq.pending_ops.fetch_sub(lines.len(), Ordering::AcqRel);
-                conn.io_load.pending.fetch_sub(lines.len(), Ordering::Relaxed);
-                evq.bytes_out.fetch_add(out.len() as u64, Ordering::Relaxed);
-                ops += lines.len();
-                conn.send(&out);
+                for _ in 0..take {
+                    scratch.push(q.pop_front().unwrap());
+                }
+            }
+            spans.push((conn, start, scratch.len()));
+        }
+        if truncated > 0 {
+            metrics.add("sweep_truncated", truncated);
+        }
+        let ops = scratch.len();
+        if ops > 0 {
+            // Every queued request — valid, failing, or malformed —
+            // produces exactly one outcome, in arrival order; a bad
+            // op in the middle of a pipelined batch never shifts or
+            // aborts the replies behind it.
+            coalesce::execute_sweep(state, shard, tid, opts.coalesce, &mut scratch);
+        }
+        for (conn, start, end) in spans.drain(..) {
+            let n = end - start;
+            if n > 0 {
+                let bytes = scratch.render_span(start, end);
+                evq.pending_ops.fetch_sub(n, Ordering::AcqRel);
+                conn.io_load.pending.fetch_sub(n, Ordering::Relaxed);
+                evq.bytes_out.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                conn.send(bytes);
             }
             // Re-arm: clear the scheduled flag, then re-check — a
             // producer that pushed between the drain and the clear
@@ -874,8 +1040,10 @@ fn executor_loop(state: &Arc<ServerState>, shard: usize, tid: usize, evq: &Event
                 evq.cv.notify_one();
             }
         }
+        for req in scratch.drain_plan() {
+            evq.pool.recycle(req);
+        }
         if ops > 0 {
-            let metrics = &state.shards[shard].metrics;
             metrics.incr("exec_drains");
             metrics.add("exec_drained_ops", ops as u64);
         }
@@ -940,13 +1108,39 @@ mod tests {
     }
 
     #[test]
-    fn wake_pair_interrupts_a_poll() {
-        let (tx, rx) = wake_pair().unwrap();
-        let mut set = PollSet::new();
-        let slot = set.push(&rx, true, false);
-        tx.wake();
-        assert!(set.poll(1000).unwrap() >= 1);
-        assert!(set.readable(slot));
+    fn buf_pool_recycles_requests_and_tracks_hits() {
+        let pool = BufPool::new();
+        // A miss mints a fresh buffer; recycling a drained request
+        // turns the next acquisition into a hit with capacity kept.
+        let mut s = pool.get_string();
+        s.push_str("{\"op\":\"read\"}");
+        let cap = s.capacity();
+        pool.recycle(Request::Line(s));
+        let s2 = pool.get_string();
+        assert!(s2.is_empty(), "recycled strings come back cleared");
+        assert!(s2.capacity() >= cap, "recycled strings keep their capacity");
+        let mut b = pool.get_buf();
+        b.extend_from_slice(b"payload");
+        pool.recycle(Request::Frame(b));
+        assert!(pool.get_buf().is_empty());
+        assert_eq!(pool.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(pool.misses.load(Ordering::Relaxed), 2);
+        // Non-buffer-carrying requests recycle to nothing, harmlessly.
+        pool.recycle(Request::Overlong(9));
+        pool.recycle(Request::BadFrame("x".into()));
+    }
+
+    #[test]
+    fn buf_pool_drops_oversized_buffers() {
+        let pool = BufPool::new();
+        let mut s = pool.get_string();
+        s.reserve(POOL_MAX_CAP + 1);
+        s.push_str("big");
+        pool.put_string(s);
+        assert!(pool.strings.lock().unwrap().is_empty(), "oversized strings are dropped");
+        let b = pool.get_buf();
+        pool.put_buf(b);
+        assert!(pool.bufs.lock().unwrap().is_empty(), "empty buffers are not pooled");
     }
 
     #[test]

@@ -141,6 +141,45 @@ pub fn decode_wire_frame(buf: &[u8]) -> WireDecode {
     WireDecode::Frame { payload: payload.to_vec(), consumed: FRAME_HEADER + len }
 }
 
+/// One step of pooled-buffer wire-side frame decoding (the payload
+/// lands in a caller-supplied buffer instead of a fresh `Vec`).
+#[derive(Debug, PartialEq, Eq)]
+pub enum WireDecodeInto {
+    /// A complete frame was copied into `out`; drain `consumed` bytes.
+    Frame { consumed: usize },
+    /// Not enough buffered bytes yet — read more.
+    Partial,
+    /// Framing violation; same close-the-connection semantics as
+    /// [`WireDecode::Bad`].
+    Bad(String),
+}
+
+/// [`decode_wire_frame`], but the payload is copied into `out`
+/// (cleared first). With `out` drawn from a buffer pool the binary
+/// read path allocates nothing once the pool is warm.
+pub fn decode_wire_frame_into(buf: &[u8], out: &mut Vec<u8>) -> WireDecodeInto {
+    if buf.len() < FRAME_HEADER {
+        return WireDecodeInto::Partial;
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len > MAX_WIRE_FRAME {
+        return WireDecodeInto::Bad(format!(
+            "frame of {len} bytes exceeds the {MAX_WIRE_FRAME}-byte limit"
+        ));
+    }
+    if buf.len() - FRAME_HEADER < len {
+        return WireDecodeInto::Partial;
+    }
+    let sum = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let payload = &buf[FRAME_HEADER..FRAME_HEADER + len];
+    if fnv1a64_bytes(payload) != sum {
+        return WireDecodeInto::Bad("frame checksum mismatch".to_string());
+    }
+    out.clear();
+    out.extend_from_slice(payload);
+    WireDecodeInto::Frame { consumed: FRAME_HEADER + len }
+}
+
 // ---------------------------------------------------------------------
 // Queue items
 // ---------------------------------------------------------------------

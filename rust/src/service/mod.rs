@@ -82,6 +82,7 @@
 //! queue multisets before the listeners open.
 
 pub mod client;
+mod coalesce;
 pub mod conn;
 pub mod error;
 pub mod frame;
@@ -267,6 +268,8 @@ impl Default for ServeOpts {
                 io_threads: s.io_threads,
                 max_conns: s.max_conns,
                 max_pending: s.max_pending,
+                coalesce: s.coalesce,
+                max_ops_per_sweep: s.max_ops_per_sweep,
             },
             aggregators: s.aggregators,
             policy: WidthPolicy::parse(&s.width_policy)
@@ -1054,6 +1057,21 @@ fn cluster_stats(state: &ServerState) -> Json {
                 sj.insert(
                     "drain_occupancy".to_string(),
                     Json::num(ops as f64 / drains as f64),
+                );
+            }
+            // Hot-path allocation health: request-buffer pool reuse,
+            // and the average merged-batch size when coalescing fires
+            // (`coalesced_ops / coalesce_merges` — > 1 means executor
+            // sweeps are folding cross-connection runs into single
+            // funnel ops).
+            sj.insert("pool_hits".to_string(), Json::num(evq.pool_hits() as f64));
+            sj.insert("pool_misses".to_string(), Json::num(evq.pool_misses() as f64));
+            let merges = shard.metrics.get("coalesce_merges");
+            if merges > 0 {
+                let merged = shard.metrics.get("coalesced_ops");
+                sj.insert(
+                    "coalesce_avg_batch".to_string(),
+                    Json::num(merged as f64 / merges as f64),
                 );
             }
         }

@@ -947,6 +947,43 @@ impl Journal {
         self.record_remove(item);
     }
 
+    /// Record a whole coalesced insert batch: in sync mode this is ONE
+    /// record (and one fsync'd append) where the per-op path would have
+    /// written `items.len()` — the durability win the executor-level
+    /// coalescer banks on. In group-commit mode the items join the same
+    /// claim-stack window the flusher already merges.
+    pub fn record_add_batch(&self, items: Vec<Item>) {
+        if items.is_empty() || self.is_retired() {
+            return;
+        }
+        let JournalState::Items { adds, .. } = &self.state else { return };
+        if self.log.sync {
+            let rec = self.add_record(items);
+            self.log.append_infallible(&[rec]);
+        } else {
+            for item in items {
+                self.buffered_push(adds, item);
+            }
+        }
+    }
+
+    /// Record a whole coalesced remove batch (one record in sync mode;
+    /// see [`Journal::record_add_batch`]).
+    pub fn record_remove_batch(&self, items: Vec<Item>) {
+        if items.is_empty() || self.is_retired() {
+            return;
+        }
+        let JournalState::Items { removes, .. } = &self.state else { return };
+        if self.log.sync {
+            let rec = self.remove_record(items);
+            self.log.append_infallible(&[rec]);
+        } else {
+            for item in items {
+                self.buffered_push(removes, item);
+            }
+        }
+    }
+
     fn record_add(&self, item: Item) {
         if self.is_retired() {
             return;

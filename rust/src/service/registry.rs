@@ -277,7 +277,7 @@ impl ObjectEntry {
     /// keep the bound their family always had (PRQ's 48 bits, the
     /// durable 2⁵³ range, the ring sentinel); byte items are bounded
     /// by [`MAX_ITEM_BYTES`].
-    fn validate_item(&self, item: &Item) -> Result<()> {
+    pub(super) fn validate_item(&self, item: &Item) -> Result<()> {
         match item {
             Item::Int(v) => {
                 if *v >= EMPTY_ITEM {
@@ -405,6 +405,160 @@ impl ObjectEntry {
                 Ok(None)
             }
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Coalesced (merged) entry points — the executor-level coalescer's
+    // batch seam. Each absorbs an entire sweep group in ONE backend
+    // operation (one hardware-FAA-backed funnel op, one journal batch
+    // record) while accounting per-request metrics so `stats` stays
+    // comparable with the unmerged path.
+    // -----------------------------------------------------------------
+
+    /// Coalesced counter op: `reqs` pending takes totalling `total`
+    /// ride one `Fetch&Add(total)`; the caller slices
+    /// `[start, start+total)` back per request (dense, disjoint, in
+    /// pending order). All members share one `priority` flag — the
+    /// coalescer never merges across priority classes, so the §4.4
+    /// gate is acquired once for the whole batch.
+    pub fn take_merged(&self, tid: usize, total: u64, reqs: u64, priority: bool) -> Result<u64> {
+        let funnel = self.as_counter("take")?;
+        let start = if priority {
+            match &self.direct {
+                None => {
+                    self.metrics.add("take_priority", reqs);
+                    funnel.fetch_add_direct(tid, total as i64)
+                }
+                Some(gate) if gate.try_acquire() => {
+                    self.metrics.add("take_priority", reqs);
+                    let v = funnel.fetch_add_direct(tid, total as i64);
+                    gate.release();
+                    v
+                }
+                Some(_) => {
+                    self.metrics.add("take_priority_demoted", reqs);
+                    funnel.fetch_add(tid, total as i64)
+                }
+            }
+        } else {
+            self.metrics.add("take", reqs);
+            funnel.fetch_add(tid, total as i64)
+        };
+        if let Some(journal) = &self.journal {
+            // One durable-range check and one record for the whole
+            // merged grant (same contract as the per-op path: beyond
+            // 2^53 nothing is acked or journaled).
+            let end = start
+                .checked_add(total)
+                .filter(|e| *e <= super::persist::MAX_DURABLE_ITEM);
+            let Some(end) = end else {
+                self.metrics.add("take_beyond_durable", reqs);
+                return Err(service_err(
+                    ErrorCode::QuotaExceeded,
+                    format!("counter {:?} exhausted its durable range (2^53)", self.name),
+                ));
+            };
+            journal.record_counter(end);
+        }
+        Ok(start)
+    }
+
+    /// Coalesced counter read: `reqs` pending reads share one
+    /// linearizable `read` — every member sees the same value, which
+    /// is a legal linearization (all at the same point).
+    pub fn read_merged(&self, tid: usize, reqs: u64) -> Result<u64> {
+        let funnel = self.as_counter("read")?;
+        self.metrics.add("read", reqs);
+        Ok(funnel.read(tid))
+    }
+
+    /// Coalesced queue insert: the concatenated item lists of a whole
+    /// sweep group, journaled write-ahead as ONE batch record, then
+    /// interned and enqueued in order. Items are pre-validated by the
+    /// coalescer (an invalid item makes its request a passthrough so
+    /// its error reply stays byte-identical); re-validating here keeps
+    /// the entry point safe for any caller.
+    pub fn enqueue_merged(&self, tid: usize, items: Vec<Item>) -> Result<()> {
+        let queue = self.as_queue("enqueue")?;
+        for item in &items {
+            self.validate_item(item)?;
+        }
+        self.metrics.add("enqueue", items.len() as u64);
+        if let Some(journal) = &self.journal {
+            journal.record_add_batch(items.clone());
+        }
+        for item in items {
+            let idx = self.table.intern(item);
+            queue.enqueue(tid, idx);
+        }
+        Ok(())
+    }
+
+    /// Coalesced stack insert; mirrors [`ObjectEntry::enqueue_merged`]
+    /// (write-ahead batch record, then push in order — replay of a
+    /// `Psh` record rebuilds bottom-to-top).
+    pub fn push_merged(&self, tid: usize, items: Vec<Item>) -> Result<()> {
+        let stack = self.as_stack("push")?;
+        for item in &items {
+            self.validate_item(item)?;
+        }
+        self.metrics.add("push", items.len() as u64);
+        if let Some(journal) = &self.journal {
+            journal.record_add_batch(items.clone());
+        }
+        for item in items {
+            let idx = self.table.intern(item);
+            stack.push(tid, idx);
+        }
+        Ok(())
+    }
+
+    /// Coalesced queue remove: up to `want` dequeues (a whole sweep
+    /// group's total), stopping at empty, journaled as ONE batch
+    /// record. The caller deals the items back per request in pending
+    /// order — FIFO is preserved because the dequeues happen here, in
+    /// order, under one executor.
+    pub fn dequeue_merged(&self, tid: usize, want: u64) -> Result<Vec<Item>> {
+        let queue = self.as_queue("dequeue")?;
+        let mut out = Vec::with_capacity(want.min(64) as usize);
+        for _ in 0..want {
+            self.metrics.incr("dequeue");
+            match queue.dequeue(tid) {
+                Some(idx) => out.push(self.table.take(idx).unwrap_or(Item::Int(idx))),
+                None => {
+                    self.metrics.incr("dequeue_empty");
+                    break;
+                }
+            }
+        }
+        if !out.is_empty() {
+            if let Some(journal) = &self.journal {
+                journal.record_remove_batch(out.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Coalesced stack remove; mirrors [`ObjectEntry::dequeue_merged`].
+    pub fn pop_merged(&self, tid: usize, want: u64) -> Result<Vec<Item>> {
+        let stack = self.as_stack("pop")?;
+        let mut out = Vec::with_capacity(want.min(64) as usize);
+        for _ in 0..want {
+            self.metrics.incr("pop");
+            match stack.pop(tid) {
+                Some(idx) => out.push(self.table.take(idx).unwrap_or(Item::Int(idx))),
+                None => {
+                    self.metrics.incr("pop_empty");
+                    break;
+                }
+            }
+        }
+        if !out.is_empty() {
+            if let Some(journal) = &self.journal {
+                journal.record_remove_batch(out.clone());
+            }
+        }
+        Ok(out)
     }
 
     /// Recovery-only: raise a counter to its recovered value without

@@ -40,6 +40,79 @@ mod sys {
             nfds: NfdsT,
             timeout: std::os::raw::c_int,
         ) -> std::os::raw::c_int;
+        pub fn read(
+            fd: RawFd,
+            buf: *mut std::os::raw::c_void,
+            count: usize,
+        ) -> isize;
+        pub fn write(
+            fd: RawFd,
+            buf: *const std::os::raw::c_void,
+            count: usize,
+        ) -> isize;
+        pub fn close(fd: RawFd) -> std::os::raw::c_int;
+    }
+
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    pub mod pipe {
+        use std::os::unix::io::RawFd;
+
+        pub const O_NONBLOCK: std::os::raw::c_int = 0x800;
+        pub const O_CLOEXEC: std::os::raw::c_int = 0x80000;
+
+        extern "C" {
+            fn pipe2(fds: *mut RawFd, flags: std::os::raw::c_int) -> std::os::raw::c_int;
+        }
+
+        /// Create a non-blocking close-on-exec pipe; returns (rx, tx).
+        pub fn nonblocking_pair() -> std::io::Result<(RawFd, RawFd)> {
+            let mut fds: [RawFd; 2] = [-1, -1];
+            let rc = unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) };
+            if rc != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok((fds[0], fds[1]))
+        }
+    }
+
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    pub mod pipe {
+        use std::os::unix::io::RawFd;
+
+        const F_SETFL: std::os::raw::c_int = 4;
+        const F_GETFL: std::os::raw::c_int = 3;
+        const O_NONBLOCK: std::os::raw::c_int = 0x4;
+
+        extern "C" {
+            fn pipe(fds: *mut RawFd) -> std::os::raw::c_int;
+            fn fcntl(
+                fd: RawFd,
+                cmd: std::os::raw::c_int,
+                arg: std::os::raw::c_int,
+            ) -> std::os::raw::c_int;
+        }
+
+        /// Create a non-blocking pipe; returns (rx, tx). Portable
+        /// `pipe()` + `fcntl` path for unixes without `pipe2`.
+        pub fn nonblocking_pair() -> std::io::Result<(RawFd, RawFd)> {
+            let mut fds: [RawFd; 2] = [-1, -1];
+            let rc = unsafe { pipe(fds.as_mut_ptr()) };
+            if rc != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            for fd in fds {
+                let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+                if flags < 0 || unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+                    let err = std::io::Error::last_os_error();
+                    unsafe {
+                        super::close(fds[0]);
+                        super::close(fds[1]);
+                    }
+                    return Err(err);
+                }
+            }
+            Ok((fds[0], fds[1]))
+        }
     }
 }
 
@@ -206,6 +279,94 @@ impl Default for PollSet {
     }
 }
 
+/// A self-pipe cross-thread wakeup: the poller watches the read end
+/// alongside its sockets, and any thread can interrupt the `poll` by
+/// writing one byte to the write end. Replaces the earlier
+/// loopback-TCP `WakePing` — no port consumption, no dependence on the
+/// loopback interface, and a `wake` is one non-blocking `write(2)`.
+///
+/// Both ends are non-blocking: a `wake` against a full pipe is a no-op
+/// (the poller is already pending wakeup), and `drain` reads until the
+/// pipe is empty so level-triggered `poll` quiesces.
+pub struct SelfPipe {
+    #[cfg(unix)]
+    rx: std::os::unix::io::RawFd,
+    #[cfg(unix)]
+    tx: std::os::unix::io::RawFd,
+}
+
+impl SelfPipe {
+    pub fn new() -> io::Result<Self> {
+        #[cfg(unix)]
+        {
+            let (rx, tx) = sys::pipe::nonblocking_pair()?;
+            Ok(SelfPipe { rx, tx })
+        }
+        #[cfg(not(unix))]
+        {
+            // The non-unix PollSet fallback is a short-nap busy poll;
+            // there is nothing to interrupt, so the pipe is a no-op.
+            Ok(SelfPipe {})
+        }
+    }
+
+    /// Interrupt the poller. Safe from any thread; never blocks.
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            let byte = 1u8;
+            // EAGAIN means the pipe already holds unconsumed wakeups —
+            // the poller will see POLLIN regardless. Other errors are
+            // likewise moot: worst case is a missed poke and the
+            // poller's timeout bounds the delay.
+            unsafe {
+                sys::write(self.tx, &byte as *const u8 as *const std::os::raw::c_void, 1);
+            }
+        }
+    }
+
+    /// Consume all pending wakeup bytes so the next `poll` blocks.
+    pub fn drain(&self) {
+        #[cfg(unix)]
+        {
+            let mut buf = [0u8; 64];
+            loop {
+                let n = unsafe {
+                    sys::read(
+                        self.rx,
+                        buf.as_mut_ptr() as *mut std::os::raw::c_void,
+                        buf.len(),
+                    )
+                };
+                if n < buf.len() as isize {
+                    // Short read, EOF, or EAGAIN: nothing left.
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl PollSource for SelfPipe {
+    fn raw_fd(&self) -> std::os::unix::io::RawFd {
+        self.rx
+    }
+}
+
+#[cfg(not(unix))]
+impl PollSource for SelfPipe {}
+
+impl Drop for SelfPipe {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::close(self.rx);
+            sys::close(self.tx);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +418,31 @@ mod tests {
         assert!(ready >= 1);
         assert!(set.readable(slot));
         assert!(listener.accept().is_ok());
+    }
+
+    #[test]
+    fn self_pipe_wakes_a_poll_and_drains_quiet() {
+        let pipe = SelfPipe::new().unwrap();
+        let mut set = PollSet::new();
+        let slot = set.push(&pipe, true, false);
+        // Nothing written yet: poll times out.
+        #[cfg(unix)]
+        assert_eq!(set.poll(10).unwrap(), 0);
+
+        pipe.wake();
+        pipe.wake(); // coalesces; must not block or error
+        set.clear();
+        let slot2 = set.push(&pipe, true, false);
+        assert_eq!(slot, slot2);
+        let ready = set.poll(1000).unwrap();
+        assert!(ready >= 1);
+        assert!(set.readable(slot2));
+
+        pipe.drain();
+        set.clear();
+        set.push(&pipe, true, false);
+        #[cfg(unix)]
+        assert_eq!(set.poll(10).unwrap(), 0);
     }
 
     #[test]

@@ -82,6 +82,13 @@ impl Json {
         out
     }
 
+    /// Serialize compactly into a caller-owned buffer (appends) — the
+    /// allocation-free twin of [`Json::to_string`] for hot paths that
+    /// reuse one scratch `String` across many replies.
+    pub fn write_into(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

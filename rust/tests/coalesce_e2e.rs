@@ -1,0 +1,320 @@
+//! End-to-end tests for executor-level op coalescing: ordering
+//! checkers with merging forced on, the per-connection sweep
+//! fairness cap, and WAL batch records surviving a crash.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aggfunnels::service::{
+    serve, BinRequest, BinResponse, ConnOpts, Item, PersistOpts, RegistryClient, ServeOpts,
+    CreateSpec, DEFAULT_OBJECT,
+};
+use aggfunnels::util::json::Json;
+use aggfunnels::verify::{encode_item, FifoChecker, LifoChecker};
+
+/// Sum a counter across every shard of a cluster-stats aggregate.
+fn shard_sum(agg: &Json, key: &str) -> u64 {
+    agg.get("per_shard")
+        .and_then(Json::as_arr)
+        .map(|shards| shards.iter().filter_map(|s| s.get(key).and_then(Json::as_u64)).sum())
+        .unwrap_or(0)
+}
+
+/// One pipelined batch of single-item enqueues (or pushes) carrying
+/// `(producer, seq)`-encoded items — the shape the executor merges
+/// into one batch insert.
+fn insert_batch(op_push: bool, name: &str, producer: usize, seqs: std::ops::Range<u64>) -> Vec<BinRequest> {
+    seqs.map(|seq| {
+        let items = vec![Item::Int(encode_item(producer, seq))];
+        if op_push {
+            BinRequest::Push { name: name.to_string(), items }
+        } else {
+            BinRequest::Enqueue { name: name.to_string(), items }
+        }
+    })
+    .collect()
+}
+
+#[test]
+fn coalesced_queue_run_preserves_fifo_exactly() {
+    // Many pipelined producers on one queue: every call_many batch is
+    // a contiguous same-object run, so the executor merges it into
+    // batch inserts — and the FIFO contract must hold regardless.
+    let server = serve(&ServeOpts {
+        conn: ConnOpts { coalesce: true, ..ConnOpts::default() },
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    })
+    .unwrap();
+    let addr = Arc::new(server.addr.to_string());
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: u64 = 256;
+    const BATCH: u64 = 32;
+
+    {
+        let c = RegistryClient::connect(&addr).unwrap();
+        c.create_queue("jobs", &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
+    }
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let c = RegistryClient::connect_binary(&addr).unwrap();
+                let mut seq = 0u64;
+                while seq < PER_PRODUCER {
+                    let reqs = insert_batch(false, "jobs", p, seq..seq + BATCH);
+                    for resp in c.call_many(&reqs).unwrap() {
+                        assert!(matches!(resp, BinResponse::Enqueued(1)), "bad reply {resp:?}");
+                    }
+                    seq += BATCH;
+                }
+            })
+        })
+        .collect();
+    for t in producers {
+        t.join().unwrap();
+    }
+
+    // Two consumers drain it dry; each stream must be FIFO-consistent
+    // per producer and the union the exact produced multiset.
+    let consumers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let c = RegistryClient::connect(&addr).unwrap();
+                let jobs = c.queue("jobs").unwrap();
+                let mut stream = Vec::new();
+                loop {
+                    let got = jobs.dequeue_batch(16).unwrap();
+                    if got.is_empty() {
+                        break;
+                    }
+                    for item in got {
+                        match item {
+                            Item::Int(v) => stream.push(v),
+                            other => panic!("unexpected item {other:?}"),
+                        }
+                    }
+                }
+                stream
+            })
+        })
+        .collect();
+    let mut checker = FifoChecker::new();
+    for t in consumers {
+        checker.add_stream(t.join().unwrap());
+    }
+    checker.check(PRODUCERS, PER_PRODUCER).unwrap();
+
+    // The run must actually have exercised the merge path.
+    let c = RegistryClient::connect(&addr).unwrap();
+    let agg = c.cluster_stats().unwrap();
+    assert!(shard_sum(&agg, "coalesce_merges") > 0, "pipelined runs must merge");
+    assert!(
+        shard_sum(&agg, "coalesced_ops") > shard_sum(&agg, "coalesce_merges"),
+        "merged groups must average more than one op"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn coalesced_stack_two_phase_preserves_lifo_exactly() {
+    // Two-phase: all pushes complete (merged into batch inserts),
+    // then pops (merged into batch removes) — the LIFO checker's
+    // contract.
+    let server = serve(&ServeOpts {
+        conn: ConnOpts { coalesce: true, ..ConnOpts::default() },
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    })
+    .unwrap();
+    let addr = Arc::new(server.addr.to_string());
+    const PRODUCERS: usize = 3;
+    const PER_PRODUCER: u64 = 192;
+    const BATCH: u64 = 24;
+
+    {
+        let c = RegistryClient::connect(&addr).unwrap();
+        c.create_stack("undo", &CreateSpec::backend("stack+elastic:fixed:2")).unwrap();
+    }
+    let pushers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let c = RegistryClient::connect_binary(&addr).unwrap();
+                let mut seq = 0u64;
+                while seq < PER_PRODUCER {
+                    let reqs = insert_batch(true, "undo", p, seq..seq + BATCH);
+                    for resp in c.call_many(&reqs).unwrap() {
+                        assert!(matches!(resp, BinResponse::Pushed(1)), "bad reply {resp:?}");
+                    }
+                    seq += BATCH;
+                }
+            })
+        })
+        .collect();
+    for t in pushers {
+        t.join().unwrap();
+    }
+
+    let poppers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = Arc::clone(&addr);
+            std::thread::spawn(move || {
+                let c = RegistryClient::connect(&addr).unwrap();
+                let undo = c.stack("undo").unwrap();
+                let mut stream = Vec::new();
+                loop {
+                    let got = undo.pop_batch(16).unwrap();
+                    if got.is_empty() {
+                        break;
+                    }
+                    for item in got {
+                        match item {
+                            Item::Int(v) => stream.push(v),
+                            other => panic!("unexpected item {other:?}"),
+                        }
+                    }
+                }
+                stream
+            })
+        })
+        .collect();
+    let mut checker = LifoChecker::new();
+    for t in poppers {
+        checker.add_stream(t.join().unwrap());
+    }
+    checker.check(PRODUCERS, PER_PRODUCER).unwrap();
+
+    let c = RegistryClient::connect(&addr).unwrap();
+    let agg = c.cluster_stats().unwrap();
+    assert!(shard_sum(&agg, "coalesce_merges") > 0, "pipelined runs must merge");
+    server.shutdown();
+}
+
+#[test]
+fn sweep_cap_keeps_interactive_latency_bounded_under_flood() {
+    // One client floods deep pipelined take batches; another does
+    // polite one-at-a-time takes. With a small `max_ops_per_sweep`
+    // the flooder's queue is drained in slices, so the interactive
+    // client is never stuck behind a whole megabatch.
+    const CAP: usize = 4;
+    const FLOOD_BATCH: usize = 512;
+    let server = serve(&ServeOpts {
+        conn: ConnOpts { max_ops_per_sweep: CAP, ..ConnOpts::default() },
+        ..ServeOpts::fixed("127.0.0.1:0", 2, 2)
+    })
+    .unwrap();
+    let addr = Arc::new(server.addr.to_string());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let flooder = {
+        let addr = Arc::clone(&addr);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let c = RegistryClient::connect_binary(&addr).unwrap();
+            let reqs: Vec<BinRequest> = (0..FLOOD_BATCH)
+                .map(|_| BinRequest::Take {
+                    name: DEFAULT_OBJECT.to_string(),
+                    count: 1,
+                    priority: false,
+                })
+                .collect();
+            while !stop.load(Ordering::Relaxed) {
+                for resp in c.call_many(&reqs).unwrap() {
+                    assert!(matches!(resp, BinResponse::Start(_)));
+                }
+            }
+        })
+    };
+
+    let c = RegistryClient::connect(&addr).unwrap();
+    let tickets = c.counter(DEFAULT_OBJECT).unwrap();
+    let mut worst = Duration::ZERO;
+    for _ in 0..50 {
+        let t0 = Instant::now();
+        tickets.take(1).unwrap();
+        worst = worst.max(t0.elapsed());
+    }
+    stop.store(true, Ordering::Relaxed);
+    flooder.join().unwrap();
+
+    // Generous bound: without the cap a sweep could hold the executor
+    // for the flooder's whole backlog; with it, each interactive op
+    // waits at most a few slices. A full second of headroom keeps
+    // slow CI machines honest without hiding a real starvation bug.
+    assert!(worst < Duration::from_secs(1), "interactive take stalled {worst:?} behind flood");
+    let agg = c.cluster_stats().unwrap();
+    assert!(
+        shard_sum(&agg, "sweep_truncated") > 0,
+        "the flooding connection must have hit the per-sweep cap"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn merged_batches_journal_one_record_and_recover_exactly() {
+    // Sync-mode WAL + coalescing: a merged insert batch must append
+    // ONE record (not one per op), and a crash must replay that
+    // record back to the exact acked state.
+    let dir = aggfunnels::util::scratch_dir("e2e-coalesce-wal");
+    let dir_str = dir.to_string_lossy().into_owned();
+    let serve_opts = || ServeOpts {
+        persist: Some(PersistOpts::sync(dir_str.clone())),
+        conn: ConnOpts { coalesce: true, ..ConnOpts::default() },
+        ..ServeOpts::fixed("127.0.0.1:0", 4, 2)
+    };
+    let server = serve(&serve_opts()).unwrap();
+    let addr = server.addr.to_string();
+
+    const BATCHES: u64 = 16;
+    const BATCH: u64 = 64;
+    const OPS: u64 = BATCHES * BATCH;
+    {
+        let c = RegistryClient::connect(&addr).unwrap();
+        c.create_queue("jobs", &CreateSpec::backend("lcrq+elastic:fixed:2")).unwrap();
+        let bin = RegistryClient::connect_binary(&addr).unwrap();
+        for b in 0..BATCHES {
+            let reqs: Vec<BinRequest> = (0..BATCH)
+                .map(|k| BinRequest::Enqueue {
+                    name: "jobs".to_string(),
+                    items: vec![Item::Int(b * BATCH + k)],
+                })
+                .collect();
+            for resp in bin.call_many(&reqs).unwrap() {
+                assert!(matches!(resp, BinResponse::Enqueued(1)), "bad reply {resp:?}");
+            }
+        }
+        let agg = c.cluster_stats().unwrap();
+        assert!(shard_sum(&agg, "coalesce_merges") > 0, "enqueue runs must merge");
+        let records = shard_sum(&agg, "wal_records");
+        assert!(records > 0, "sync mode must journal");
+        assert!(
+            records < OPS / 2,
+            "{OPS} acked enqueues produced {records} WAL records — \
+             merged batches should journal far fewer than one record per op"
+        );
+    }
+
+    server.crash();
+
+    let server = serve(&serve_opts()).unwrap();
+    let c = RegistryClient::connect(&server.addr.to_string()).unwrap();
+    let jobs = c.queue("jobs").unwrap();
+    let mut drained = Vec::new();
+    loop {
+        let got = jobs.dequeue_batch(128).unwrap();
+        if got.is_empty() {
+            break;
+        }
+        for item in got {
+            match item {
+                Item::Int(v) => drained.push(v),
+                other => panic!("unexpected item {other:?}"),
+            }
+        }
+    }
+    let expected: Vec<u64> = (0..OPS).collect();
+    assert_eq!(drained, expected, "replayed batch records must restore the exact FIFO state");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
